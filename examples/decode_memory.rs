@@ -1,0 +1,71 @@
+//! Decode memory demo (Table 1's right columns / §3.2): drive the three
+//! decoding regimes side by side in pure Rust and print resident state as
+//! the sequence grows:
+//!
+//! - softmax attention: KV cache, O(T) memory, O(T) time/step
+//! - Mamba-2: one state, O(1) memory
+//! - log-linear Mamba-2: Fenwick states, O(log T) memory
+//!
+//! Run: `cargo run --release --example decode_memory -- --max-t 65536`
+
+use loglinear::attention::softmax::KvCacheDecoder;
+use loglinear::state::{FenwickState, Transition};
+use loglinear::tensor::Mat;
+use loglinear::util::cli::Args;
+use loglinear::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let max_t = args.usize_or("max-t", 65_536);
+    let (dk, dv) = (16, 16);
+    let mut rng = Rng::new(1);
+
+    let mut kv = KvCacheDecoder::new(dk);
+    let mut m2_state = Mat::zeros(dk, dv); // Mamba-2: single matrix
+    let mut fenwick = FenwickState::new(dk, dv);
+    let lambda = vec![1.0f32; 64];
+
+    println!(
+        "{:>9} | {:>14} | {:>10} | {:>22}",
+        "t", "KV cache bytes", "Mamba-2 B", "log-linear (live × B)"
+    );
+    let mut checkpoints: Vec<usize> = (4..=max_t.ilog2()).map(|p| 1usize << p).collect();
+    checkpoints.dedup();
+    let mut next = 0;
+    for t in 0..max_t {
+        let q: Vec<f32> = (0..dk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let k: Vec<f32> = (0..dk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let v: Vec<f32> = (0..dv).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // only run the KV path while it is still cheap
+        if t < 8192 {
+            kv.step(&q, &k, &v);
+        }
+        m2_state.scale_inplace(0.99);
+        loglinear::tensor::outer_acc(&mut m2_state, &k, &v, 1.0);
+        fenwick.step(&q, &k, &v, 1.0, Transition::Decay(0.99), &lambda);
+
+        if next < checkpoints.len() && t + 1 == checkpoints[next] {
+            let kv_bytes = if t < 8192 {
+                format!("{}", kv.state_bytes())
+            } else {
+                format!("~{}", (t + 1) * (dk + dv) * 4)
+            };
+            println!(
+                "{:>9} | {:>14} | {:>10} | {:>4} live × {:>5} = {:>8}",
+                t + 1,
+                kv_bytes,
+                dk * dv * 4,
+                fenwick.live_states(),
+                dk * dv * 4,
+                fenwick.state_bytes()
+            );
+            next += 1;
+        }
+    }
+    println!(
+        "\nat T = {max_t}: KV cache grows linearly, Mamba-2 is constant but\n\
+         forgets, log-linear holds ≤ log2(T)+1 = {} states ({} bytes).",
+        max_t.ilog2() + 1,
+        fenwick.state_bytes()
+    );
+}

@@ -1,0 +1,77 @@
+//! End-to-end driver: train a small LM through the full three-layer
+//! stack — Rust coordinator → PJRT → AOT-compiled JAX model with the
+//! Pallas log-linear kernel inside — on the synthetic corpus, log the
+//! loss curve, then evaluate perplexity and planted-fact recall.
+//!
+//! Run: `make artifacts && cargo run --release --example train_lm`
+//! Options: `--variant loglinear_mamba2 --steps 300 --config tiny`
+//! (use `--config lm` after `make artifacts-lm` for the bigger model).
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use loglinear::config::RunConfig;
+use loglinear::data::corpus::{Corpus, CorpusConfig};
+use loglinear::eval;
+use loglinear::runtime::{ModelHandle, Runtime};
+use loglinear::train::{self, TrainConfig};
+use loglinear::util::cli::Args;
+use loglinear::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = RunConfig::from_args(&args)?;
+    let steps = args.usize_or("steps", 300);
+
+    let rt = Runtime::cpu()?;
+    let mut model = ModelHandle::load(&rt, &cfg.artifacts, &cfg.model_name())?;
+    println!(
+        "model {} | {} params | batch {} | seq {}",
+        cfg.model_name(),
+        model.manifest.param_count,
+        model.manifest.batch,
+        model.manifest.cfg("seq_len")
+    );
+
+    let seq = model.manifest.cfg("seq_len");
+    let corpus = Corpus::new(
+        CorpusConfig {
+            vocab: model.manifest.cfg("vocab"),
+            seq,
+            recall_band: (8, seq * 3 / 4),
+            ..Default::default()
+        },
+        1000,
+    );
+
+    let tc = TrainConfig {
+        steps,
+        lr: cfg.lr,
+        warmup: cfg.warmup,
+        seed: cfg.seed,
+        checkpoint: Some(cfg.artifacts.join(format!("ckpt_{}.bin", cfg.model_name()))),
+        ..Default::default()
+    };
+    let curve = train::train(&rt, &mut model, &corpus, &tc)?;
+
+    // loss curve (coarse console plot)
+    println!("\nloss curve (ema):");
+    let n = curve.len();
+    for frac in [0, n / 8, n / 4, n / 2, 3 * n / 4, n - 1] {
+        let (step, _raw, ema) = curve[frac];
+        let bar = "#".repeat(((ema as f64) * 8.0) as usize);
+        println!("  step {step:>5}: {ema:7.4} {bar}");
+    }
+
+    // held-out evaluation
+    let batch = model.manifest.batch;
+    let mut eval_rng = Rng::new(777_000);
+    let (loss, ppl) =
+        eval::perplexity(&model, || corpus.train_batch(batch, &mut eval_rng), 8)?;
+    let mut rng2 = Rng::new(778_000);
+    let recall = eval::task_accuracy_n(&model, || corpus.eval_batch(batch, &mut rng2), 8)?;
+    println!("\nheld-out: loss {loss:.4}  ppl {ppl:.2}  planted-fact recall {recall:.3}");
+    println!(
+        "(baseline: untrained loss ≈ ln(vocab) = {:.2})",
+        (model.manifest.cfg("vocab") as f64).ln()
+    );
+    Ok(())
+}

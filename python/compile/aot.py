@@ -1,0 +1,295 @@
+"""AOT export: lower the L2 JAX model (with its L1 Pallas kernels inlined)
+to HLO **text** artifacts that the Rust runtime loads via PJRT.
+
+Why HLO text: jax ≥ 0.5 serializes HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Per (config, variant) we export:
+
+- ``eval_<name>.hlo.txt``       (params…, tokens)         -> (loss, per_pos_loss, argmax_preds)
+- ``train_step_<name>.hlo.txt`` (params…, m…, v…, step, tokens, lr)
+                                                          -> (params'…, m'…, v'…, loss)
+- ``decode_step_<name>.hlo.txt``(params…, states…, token, pos) -> (logits, states'…)
+- ``prefill_<name>.hlo.txt``    (params…, tokens, start)  -> (logits, states…)
+- ``manifest_<name>.json``      parameter/state names + shapes (the Rust
+                                marshalling contract)
+- ``params_<name>.bin``         initial parameters, raw little-endian f32
+                                in manifest order
+
+Python runs ONCE (`make artifacts`); nothing here is on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from dataclasses import replace as dataclasses_replace
+
+from . import decode as D
+from . import model as M
+
+# Named configurations. "tiny" is the CI config; "lm" is the e2e
+# language-model config (scaled from the paper's 21-layer/1536-dim models
+# per DESIGN.md §6 substitutions); "mqar*" are the Table-2 models.
+CONFIGS = {
+    "tiny": dict(vocab=256, d_model=64, n_layers=2, n_heads=2, dk=16, dv=16,
+                 d_mlp=128, seq_len=64, chunk=16),
+    "lm": dict(vocab=512, d_model=256, n_layers=4, n_heads=8, dk=32, dv=32,
+               d_mlp=512, seq_len=256, chunk=32),
+    "lm-long": dict(vocab=512, d_model=128, n_layers=4, n_heads=4, dk=32, dv=32,
+                    d_mlp=256, seq_len=1024, chunk=64),
+    "mqar16": dict(vocab=192, d_model=16, n_layers=2, n_heads=1, dk=16, dv=16,
+                   d_mlp=32, seq_len=256, chunk=32),
+    "mqar32": dict(vocab=192, d_model=32, n_layers=2, n_heads=1, dk=16, dv=32,
+                   d_mlp=64, seq_len=256, chunk=32),
+    "mqar64": dict(vocab=192, d_model=64, n_layers=2, n_heads=2, dk=16, dv=32,
+                   d_mlp=128, seq_len=256, chunk=32),
+    # task-pretraining config: trained once at seq 256, evaluated at
+    # {64, 128, 256} via extra eval artifacts (NIAH / retrieval / LongBench)
+    "task": dict(vocab=256, d_model=64, n_layers=2, n_heads=2, dk=16, dv=32,
+                 d_mlp=128, seq_len=256, chunk=32),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned on parse).
+
+    ``print_large_constants=True`` is load-bearing: the default text dump
+    elides big constant arrays as ``{...}``, which the 0.5.1 parser fills
+    with ZEROS — silently corrupting level-index matrices, causal masks,
+    and RoPE tables. (Found the hard way; see EXPERIMENTS.md §Perf log.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def export_variant(cfg: M.ModelConfig, name: str, outdir: str, batch: int,
+                   decode_batches: Sequence[int] = (1, 4, 8), seed: int = 0,
+                   skip_decode: bool = False,
+                   eval_seqs: Sequence[int] = ()) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    params = M.init_params(cfg, seed=seed)
+    flat = M.flatten_with_names(params)
+    pnames = [n for n, _ in flat]
+    pleaves = [p for _, p in flat]
+
+    manifest = {
+        "name": name,
+        "variant": cfg.variant,
+        "config": {k: getattr(cfg, k) for k in (
+            "vocab", "d_model", "n_layers", "n_heads", "dk", "dv",
+            "d_mlp", "seq_len", "chunk")},
+        "num_levels": cfg.num_levels,
+        "params": [{"name": n, "shape": list(p.shape)} for n, p in flat],
+        "param_count": M.param_count(params),
+        "batch": batch,
+        "decode_batches": list(decode_batches),
+        "artifacts": {},
+    }
+
+    tokens_spec = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+
+    # ---- eval: (params…, tokens) -> (loss, per-pos loss, argmax preds) ----
+    def eval_fn(*args):
+        leaves, tokens = args[:-1], args[-1]
+        p = M.unflatten_like(params, leaves)
+        logits = M.forward_logits(cfg, p, tokens)
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = tokens[:, 1:]
+        pp = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jnp.mean(pp), pp, preds
+
+    low = jax.jit(eval_fn).lower(*[_spec(p) for p in pleaves], tokens_spec)
+    path = f"eval_{name}.hlo.txt"
+    with open(os.path.join(outdir, path), "w") as f:
+        f.write(to_hlo_text(low))
+    manifest["artifacts"]["eval"] = {
+        "path": path,
+        "inputs": pnames + ["tokens"],
+        "outputs": ["loss", "per_pos_loss", "preds"],
+    }
+
+    # extra eval artifacts at other sequence lengths, sharing the same
+    # parameter set (cfg.levels pins the λ head size across lengths)
+    for es in eval_seqs:
+        if es == cfg.seq_len:
+            continue
+        assert cfg.num_levels >= __import__("compile.kernels.fenwick", fromlist=["x"]).num_levels(es)
+        ecfg = dataclasses_replace(cfg, seq_len=es, levels=cfg.num_levels)
+        etok = jax.ShapeDtypeStruct((batch, es), jnp.int32)
+
+        def eval_fn_s(*args, _ecfg=ecfg):
+            leaves, tokens = args[:-1], args[-1]
+            p = M.unflatten_like(params, leaves)
+            logits = M.forward_logits(_ecfg, p, tokens)
+            logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+            tgt = tokens[:, 1:]
+            pp = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+            preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return jnp.mean(pp), pp, preds
+
+        low = jax.jit(eval_fn_s).lower(*[_spec(p) for p in pleaves], etok)
+        path = f"eval_{name}_s{es}.hlo.txt"
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(to_hlo_text(low))
+        manifest["artifacts"][f"eval_s{es}"] = {
+            "path": path,
+            "inputs": pnames + ["tokens"],
+            "outputs": ["loss", "per_pos_loss", "preds"],
+            "seq_len": es,
+        }
+
+    # ---- train step ----
+    def train_fn(*args):
+        n = len(pleaves)
+        p = M.unflatten_like(params, args[:n])
+        m_ = M.unflatten_like(params, args[n:2 * n])
+        v_ = M.unflatten_like(params, args[2 * n:3 * n])
+        step, tokens, lr = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        p2, m2, v2, loss = M.adam_train_step(cfg, p, m_, v_, step, tokens, lr)
+        return (
+            tuple(x for _, x in M.flatten_with_names(p2))
+            + tuple(x for _, x in M.flatten_with_names(m2))
+            + tuple(x for _, x in M.flatten_with_names(v2))
+            + (loss,)
+        )
+
+    specs = [_spec(p) for p in pleaves] * 3 + [
+        jax.ShapeDtypeStruct((), jnp.int32),
+        tokens_spec,
+        jax.ShapeDtypeStruct((), jnp.float32),
+    ]
+    low = jax.jit(train_fn).lower(*specs)
+    path = f"train_step_{name}.hlo.txt"
+    with open(os.path.join(outdir, path), "w") as f:
+        f.write(to_hlo_text(low))
+    manifest["artifacts"]["train_step"] = {
+        "path": path,
+        "inputs": (pnames + [f"m.{n}" for n in pnames] + [f"v.{n}" for n in pnames]
+                   + ["step", "tokens", "lr"]),
+        "outputs": (pnames + [f"m.{n}" for n in pnames] + [f"v.{n}" for n in pnames]
+                    + ["loss"]),
+    }
+
+    # ---- decode step + prefill (recurrent variants only) ----
+    if cfg.variant != "transformer" and not skip_decode:
+        state_template = D.init_decode_state(cfg, 1)
+        manifest["state_shapes"] = [list(s.shape[1:]) for s in state_template]
+        for db in decode_batches:
+            states = D.init_decode_state(cfg, db)
+
+            def decode_fn(*args):
+                n = len(pleaves)
+                p = M.unflatten_like(params, args[:n])
+                sts = list(args[n:n + cfg.n_layers])
+                token = args[n + cfg.n_layers]
+                pos = args[n + cfg.n_layers + 1]
+                logits, sts2 = D.decode_step(cfg, p, sts, token, pos)
+                return (logits,) + tuple(sts2)
+
+            specs = ([_spec(p) for p in pleaves] + [_spec(s) for s in states]
+                     + [jax.ShapeDtypeStruct((db,), jnp.int32),
+                        jax.ShapeDtypeStruct((db,), jnp.int32)])
+            low = jax.jit(decode_fn).lower(*specs)
+            path = f"decode_step_{name}_b{db}.hlo.txt"
+            with open(os.path.join(outdir, path), "w") as f:
+                f.write(to_hlo_text(low))
+            manifest["artifacts"][f"decode_step_b{db}"] = {
+                "path": path,
+                "inputs": pnames + [f"state_{i}" for i in range(cfg.n_layers)]
+                + ["token", "pos"],
+                "outputs": ["logits"] + [f"state_{i}" for i in range(cfg.n_layers)],
+            }
+
+    # ---- initial params ----
+    bin_path = os.path.join(outdir, f"params_{name}.bin")
+    with open(bin_path, "wb") as f:
+        for p in pleaves:
+            f.write(np.asarray(p, dtype=np.float32).tobytes())
+    manifest["artifacts"]["params_bin"] = {"path": f"params_{name}.bin"}
+
+    with open(os.path.join(outdir, f"manifest_{name}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] exported {name}: {manifest['param_count']} params -> {outdir}")
+
+
+def export_golden(outdir: str) -> None:
+    """Golden cross-layer fixtures: deterministic kernel inputs + ref
+    outputs, asserted identically by pytest and `cargo test`."""
+    from .kernels import ref
+
+    os.makedirs(outdir, exist_ok=True)
+    T, dk, dv = 32, 8, 8
+    q, k, v, la, beta, lam = ref.make_inputs(T, dk, dv, seed=1234)
+    cases = {
+        "meta": {"T": T, "dk": dk, "dv": dv, "seed": 1234},
+        "q": q.ravel().tolist(),
+        "k": k.ravel().tolist(),
+        "v": v.ravel().tolist(),
+        "log_alpha": la.ravel().tolist(),
+        "beta": beta.ravel().tolist(),
+        "lam": lam.ravel().tolist(),
+        "out": {
+            "mamba2": np.asarray(ref.mamba2_parallel_ref(q, k, v, la)).ravel().tolist(),
+            "loglinear_mamba2": np.asarray(
+                ref.loglinear_mamba2_parallel_ref(q, k, v, la, lam)).ravel().tolist(),
+            "gated_deltanet": np.asarray(
+                ref.gdn_parallel_ref(q, k, v, la, beta)).ravel().tolist(),
+            "loglinear_gdn": np.asarray(
+                ref.loglinear_gdn_parallel_ref(q, k, v, la, beta, lam)).ravel().tolist(),
+        },
+    }
+    with open(os.path.join(outdir, "golden_kernels.json"), "w") as f:
+        json.dump(cases, f)
+    print(f"[aot] golden fixtures -> {outdir}/golden_kernels.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", default="tiny", choices=sorted(CONFIGS.keys()))
+    ap.add_argument("--variants", default="mamba2,loglinear_mamba2,gdn,loglinear_gdn,transformer")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--decode-batches", default="1,4,8")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-decode", action="store_true")
+    ap.add_argument("--skip-golden", action="store_true")
+    ap.add_argument("--eval-seqs", default="",
+                    help="extra eval-artifact sequence lengths, comma separated")
+    args = ap.parse_args()
+    eval_seqs = [int(x) for x in args.eval_seqs.split(",") if x]
+
+    for variant in args.variants.split(","):
+        variant = variant.strip()
+        assert variant in M.VARIANTS, f"unknown variant {variant}"
+        cfg = M.ModelConfig(variant=variant, **CONFIGS[args.config])
+        name = f"{args.config}_{variant}"
+        export_variant(
+            cfg, name, args.out, args.batch,
+            decode_batches=[int(x) for x in args.decode_batches.split(",")],
+            seed=args.seed, skip_decode=args.skip_decode, eval_seqs=eval_seqs,
+        )
+    if not args.skip_golden:
+        export_golden(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""E2 (python side): kernel fwd+bwd wallclock across sequence lengths.
+
+Pallas runs in interpret mode on CPU, so these numbers characterize the
+*lowered computation* (what XLA CPU executes), not TPU performance — the
+TPU estimate lives in DESIGN.md §Hardware-Adaptation (VMEM footprint +
+MXU-aligned block shapes). The Rust twin (`cargo bench --bench
+fig4_throughput`) is the primary Fig. 4 reproduction; this script checks
+that the *jax-side* kernels show the same ordering.
+
+Usage: python -m compile.bench_kernels [--lens 256,512,1024] [--iters 3]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fenwick, ref
+from .kernels.mamba2 import mamba2_chunkwise
+from .kernels.loglinear_mamba2 import hattention_chunkwise
+
+
+def timed(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lens", default="256,512,1024")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--chunk", type=int, default=64)
+    args = ap.parse_args()
+    lens = [int(x) for x in args.lens.split(",")]
+
+    B, H, dk, dv = 1, 2, 64, 64
+    print(f"{'T':>6} {'softmax ms':>12} {'mamba2 ms':>12} {'loglinear ms':>14} {'ll fwd+bwd ms':>14}")
+    for T in lens:
+        rng = np.random.RandomState(T)
+        q = (rng.randn(B, T, H, dk) / 8).astype(np.float32)
+        k = rng.randn(B, T, H, dk).astype(np.float32)
+        v = rng.randn(B, T, H, dv).astype(np.float32)
+        la = np.log(rng.uniform(0.8, 1.0, (B, T, H))).astype(np.float32)
+        lam = rng.uniform(0.1, 1.0, (B, T, H, fenwick.num_levels(T))).astype(np.float32)
+
+        t_soft = timed(jax.jit(ref.softmax_ref_batched), q, k, v, iters=args.iters)
+        t_m2 = timed(
+            lambda *a: mamba2_chunkwise(*a, chunk=args.chunk), q, k, v, la, iters=args.iters
+        )
+        t_ll = timed(
+            lambda *a: hattention_chunkwise(*a, chunk=args.chunk),
+            q, k, v, la, lam, iters=args.iters,
+        )
+
+        grad_fn = jax.jit(
+            jax.grad(
+                lambda q, k, v, la, lam: jnp.sum(
+                    hattention_chunkwise(q, k, v, la, lam, chunk=args.chunk) ** 2
+                ),
+                argnums=(0, 1, 2, 3, 4),
+            )
+        )
+        t_llg = timed(grad_fn, q, k, v, la, lam, iters=args.iters)
+        print(
+            f"{T:>6} {t_soft*1e3:>12.2f} {t_m2*1e3:>12.2f} {t_ll*1e3:>14.2f} {t_llg*1e3:>14.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

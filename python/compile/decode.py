@@ -1,0 +1,131 @@
+"""Layer 2 decode path: single-token recurrent steps with the paper's
+O(log T)-memory Fenwick state scheme (§3.2).
+
+The decode state for a whole model is, per layer:
+
+- ``mamba2`` / ``gdn``:            one matrix  (B, H, dk, dv)
+- ``loglinear_mamba2`` / ``_gdn``: a stack     (B, L, H, dk, dv)
+  of per-level states — at any time only ~popcount(t)+1 of the L slots
+  are non-zero (App. B.4); the Rust state pool exploits that, the HLO
+  artifact keeps the dense stack for fixed shapes.
+
+``decode_step`` is AOT-exported per variant and driven from the Rust
+serving coordinator; ``prefill`` is the same step scanned over a prompt.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fenwick
+from . import model as M
+
+
+def init_decode_state(cfg: M.ModelConfig, batch: int):
+    """Zeroed decode state: list (per layer) of state arrays."""
+    H, dk, dv = cfg.head_dims()
+    states = []
+    for _ in range(cfg.n_layers):
+        if cfg.is_loglinear():
+            states.append(jnp.zeros((batch, cfg.num_levels, H, dk, dv), jnp.float32))
+        else:
+            states.append(jnp.zeros((batch, H, dk, dv), jnp.float32))
+    return states
+
+def _merge_batched(states, pos):
+    """Fenwick merge on (B, L, H, dk, dv) with a *per-sequence* position
+    vector (B,) — sequences in a continuous batch sit at different offsets.
+    Rows with pos == 0 are left untouched."""
+    L = states.shape[1]
+    l = fenwick.lssb_traced(jnp.maximum(pos, 1))          # (B,)
+    idx = jnp.arange(L)
+    le = (idx[None, :] <= l[:, None])[:, :, None, None, None]
+    merged = jnp.sum(jnp.where(le, states, 0.0), axis=1, keepdims=True)
+    out = jnp.where(le, 0.0, states)
+    sel = (idx[None, :] == (l + 1)[:, None])[:, :, None, None, None]
+    out = jnp.where(sel, merged, out)
+    active = (pos > 0)[:, None, None, None, None]
+    return jnp.where(active, out, states)
+
+
+def _mixer_step(cfg: M.ModelConfig, layer, x, state, pos):
+    """One token through one mixer. x: (B, D); returns (o: (B, D), state')."""
+    B, D = x.shape
+    H, dk, dv = cfg.head_dims()
+    q = (x @ layer["wq"]).reshape(B, H, dk)
+    k = (x @ layer["wk"]).reshape(B, H, dk)
+    v = (x @ layer["wv"]).reshape(B, H, dv)
+    if cfg.variant in ("gdn", "loglinear_gdn"):
+        k = k / jnp.maximum(jnp.linalg.norm(k, axis=-1, keepdims=True), 1e-6)
+    la = -jax.nn.softplus(x @ layer["w_alpha"] + layer["b_alpha"])  # (B, H)
+    alpha = jnp.exp(la)
+
+    if cfg.variant == "mamba2":
+        state = alpha[..., None, None] * state + jnp.einsum("bhk,bhd->bhkd", k, v)
+        o = jnp.einsum("bhkd,bhk->bhd", state, q)
+    elif cfg.variant == "gdn":
+        beta = jax.nn.sigmoid(x @ layer["w_beta"] + layer["b_beta"])
+        proj = jnp.einsum("bhk,bhkd->bhd", k, state)
+        state = state - beta[..., None, None] * jnp.einsum("bhk,bhd->bhkd", k, proj)
+        state = alpha[..., None, None] * state + beta[..., None, None] * jnp.einsum(
+            "bhk,bhd->bhkd", k, v
+        )
+        o = jnp.einsum("bhkd,bhk->bhd", state, q)
+    elif cfg.is_loglinear():
+        L = cfg.num_levels
+        lam = jax.nn.softplus(x @ layer["w_lam"] + layer["b_lam"]).reshape(B, H, L)
+        state = _merge_batched(state, pos)
+        if cfg.variant == "loglinear_gdn":
+            beta = jax.nn.sigmoid(x @ layer["w_beta"] + layer["b_beta"])
+            proj = jnp.einsum("bhk,blhkd->blhd", k, state)
+            state = state - beta[:, None, :, None, None] * jnp.einsum(
+                "bhk,blhd->blhkd", k, proj
+            )
+            state = alpha[:, None, :, None, None] * state
+            write = beta[..., None, None] * jnp.einsum("bhk,bhd->bhkd", k, v)
+        else:
+            state = alpha[:, None, :, None, None] * state
+            write = jnp.einsum("bhk,bhd->bhkd", k, v)
+        state = state.at[:, 0].set(write)
+        # o = Σ_l λ^(l) S^(l)T q
+        o = jnp.einsum("blh,blhkd,bhk->bhd", lam.transpose(0, 2, 1), state, q)
+    else:
+        raise ValueError(f"decode unsupported for variant {cfg.variant}")
+    return o.reshape(B, H * dv) @ layer["wo"], state
+
+
+def decode_step(cfg: M.ModelConfig, params, states: List[Any], token, pos):
+    """One decode step. token: (B,) int32; pos: (B,) int32 (0-based index
+    of each sequence's current token — sequences in a continuous batch may
+    sit at different offsets). Returns (logits: (B, vocab), new states)."""
+    x = params["embed"][token]                 # (B, D)
+    new_states = []
+    for i in range(cfg.n_layers):
+        layer = params[f"layer_{i}"]
+        o, st = _mixer_step(cfg, layer, M.rmsnorm(x, layer["norm1"]), states[i], pos)
+        x = x + o
+        x = x + M.swiglu(M.rmsnorm(x, layer["norm2"]), layer)
+        new_states.append(st)
+    x = M.rmsnorm(x, params["norm_f"])
+    return x @ params["head"], new_states
+
+
+def prefill(cfg: M.ModelConfig, params, tokens, start_pos):
+    """Run ``decode_step`` over a prompt (B, Tp) via lax.scan.
+    Returns (last logits (B, vocab), final states)."""
+    B, Tp = tokens.shape
+    states = init_decode_state(cfg, B)
+
+    def step(carry, tok_t):
+        states, pos = carry
+        posv = jnp.full((B,), pos, jnp.int32)
+        logits, states = decode_step(cfg, params, states, tok_t, posv)
+        return (states, pos + 1), logits
+
+    (states, _), logits_seq = jax.lax.scan(
+        step, (states, start_pos), tokens.T  # (Tp, B)
+    )
+    return logits_seq[-1], states

@@ -1,0 +1,90 @@
+"""Fenwick-tree partitioning (paper §3.1) — the Python twin of
+``rust/src/fenwick/mod.rs``. Used by the Pallas kernels (level masks), the
+pure-jnp reference oracles, and the decode step.
+
+All functions are host-side (static shapes) except :func:`lssb_traced`,
+which operates on traced integers inside jitted code.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def lssb(t: int) -> int:
+    """Index of the least significant set bit of ``t > 0``."""
+    assert t > 0
+    return (t & -t).bit_length() - 1
+
+
+def lssb_traced(t):
+    """`lssb` for a traced int32/int64 scalar (t > 0)."""
+    return jnp.int32(jnp.log2((t & -t).astype(jnp.float32)) + 0.5)
+
+
+def ceil_log2(n: int) -> int:
+    assert n >= 1
+    return int(np.ceil(np.log2(n))) if n > 1 else 0
+
+
+def num_levels(seq_len: int) -> int:
+    """Levels ``0 ..= ceil_log2(seq_len)`` — matches the paper's
+    ``num_levels = log2(T) + 1`` for power-of-two T."""
+    return ceil_log2(seq_len) + 1
+
+
+def buckets(t: int) -> list[tuple[int, int, int]]:
+    """Fenwick partition of [0, t] as (level, start, end) triples."""
+    out = [(0, t, t + 1)]
+    b = t
+    while b > 0:
+        l = lssb(b)
+        size = 1 << l
+        out.append((l + 1, b - size, b))
+        b -= size
+    return out
+
+
+def level_of(t: int, s: int) -> int:
+    """Level of the bucket containing source ``s`` for query ``t``."""
+    assert s <= t
+    if s == t:
+        return 0
+    b = t
+    while True:
+        l = lssb(b)
+        size = 1 << l
+        if s >= b - size:
+            return l + 1
+        b -= size
+
+
+def level_mask(level: int, n: int) -> np.ndarray:
+    """Boolean (n, n) mask: entry (i, j) true iff level_of(i, j) == level
+    (zero above the diagonal). The Appendix-C ``level_mask``."""
+    m = np.zeros((n, n), dtype=bool)
+    for i in range(n):
+        for j in range(i + 1):
+            m[i, j] = level_of(i, j) == level
+    return m
+
+
+def level_index_matrix(n: int) -> np.ndarray:
+    """(n, n) int matrix of level_of(i, j) for j <= i, and -1 above the
+    diagonal. One call builds every level mask at once."""
+    m = np.full((n, n), -1, dtype=np.int32)
+    for i in range(n):
+        for j in range(i + 1):
+            m[i, j] = level_of(i, j)
+    return m
+
+
+def segsum(x):
+    """Stable segment-sum (paper Appendix C): out[..., i, j] =
+    sum(x[..., j+1 : i+1]) on the lower triangle, -inf above."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    return jnp.where(mask, out, -jnp.inf)

@@ -1,0 +1,124 @@
+"""Log-Linear Gated DeltaNet chunkwise kernel (paper §3.4, Algorithm 1
+with gated-Householder chunk transitions).
+
+Structure per chunk ``z``:
+
+1. **Fenwick merge** at chunk granularity (the §3.2 recurrence lifted to
+   chunks): levels ``0..lssb(z)`` of the state stack sum into
+   ``lssb(z)+1``.
+2. **Intra-chunk** (bespoke): the local attention matrix
+   ``P = (tril(QK^T) ⊙ Gratio) (I + StrictTril(M))^{-1} diag(β)`` is
+   *materialized* (the λ mask must be applied to P elementwise — the UT
+   solve mixes value rows otherwise) and masked with the local H-mask.
+3. **Inter-chunk reads**: effective queries ``q̂_t = G_t R_t q_t`` where
+   ``R_t = Φ_start···Φ_t`` accumulates via rank-1 updates in a scan; all
+   levels are read from a single stacked einsum (level fusion).
+4. **Transition + write**: carried states transform by the chunk operator
+   ``E_z = G_C R_C^T`` (one (dk,dk) matmul against the stack); the chunk's
+   own state enters at level 0.
+
+Pure jnp; batched over (B, H) by vmap. Shapes as in the other kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fenwick
+from .gdn import _chunk_precompute, unit_lower_inv
+
+
+def _merge(states, z):
+    """Fenwick merge on a (slots, dk, dv) stack for traced chunk index z."""
+    slots = states.shape[0]
+    l = fenwick.lssb_traced(z)
+    idx = jnp.arange(slots)
+    le = (idx <= l)[:, None, None]
+    merged = jnp.sum(jnp.where(le, states, 0.0), axis=0)
+    states = jnp.where(le, 0.0, states)
+    states = jnp.where((idx == l + 1)[:, None, None], merged[None], states)
+    return states
+
+
+def _llgdn_head(q, k, v, la, beta, lam, chunk):
+    T, dk = q.shape
+    dv = v.shape[1]
+    C = chunk
+    Z = T // C
+    lc = int(np.log2(C))
+    L = lam.shape[1]
+
+    qc = q.reshape(Z, C, dk)
+    kc = k.reshape(Z, C, dk)
+    vc = v.reshape(Z, C, dv)
+    lac = la.reshape(Z, C)
+    bc = beta.reshape(Z, C)
+    lamc = lam.reshape(Z, C, L)
+
+    cs, g, sys, qk_tril = _chunk_precompute(qc, kc, lac, bc)
+
+    # ---- intra-chunk: materialized local P, masked by local H-mask ----
+    inv_sys = unit_lower_inv(sys)
+    p_loc = jnp.einsum("zij,zjl->zil", qk_tril, inv_sys) * bc[:, None, :]
+    lvl = jnp.asarray(fenwick.level_index_matrix(C))            # (C, C)
+    lam_local = jnp.take_along_axis(
+        lamc, jnp.broadcast_to(jnp.maximum(lvl, 0)[None], (Z, C, C)), axis=2
+    )                                                            # [z,i,j] = lam[z,i,lvl(i,j)]
+    lam_local = jnp.where((lvl >= 0)[None], lam_local, 0.0)
+    y_diag = jnp.einsum("zij,zjd->zid", p_loc * lam_local, vc)
+
+    # chunk's own outgoing state: Ŵ0 = sys^{-1} diag(β) V, S = Σ (G_C/G_s) k ŵ^T
+    w0 = jnp.einsum("zij,zjd->zid", inv_sys, bc[..., None] * vc)
+    own_state = jnp.einsum("zc,zck,zcd->zkd", jnp.exp(cs[:, -1:] - cs), kc, w0)
+
+    # ---- inter-chunk ----
+    n_slots = max(fenwick.num_levels(Z), 2)  # state stack slots (chunk level)
+    n_inter = fenwick.num_levels(Z) - 1 if Z > 1 else 0
+    lam_inter = (
+        lamc[..., lc + 1: lc + 1 + n_inter]
+        if n_inter > 0
+        else jnp.zeros((Z, C, 0), q.dtype)
+    )
+
+    def rq_step(r, inp):
+        """Accumulate R_t = Φ_start···Φ_t by rank-1 updates; emit R_t q_t."""
+        qt, kt, bt = inp
+        r = r - bt * jnp.outer(r @ kt, kt)            # R ← R (I − β k k^T)
+        return r, r @ qt
+
+    def chunk_step(carry, inp):
+        states, z = carry                              # (slots, dk, dv)
+        qz, kz, gz, bz, lamz, own = inp
+        states = jax.lax.cond(z > 0, lambda s: _merge(s, z), lambda s: s, states)
+        # effective queries for this chunk
+        r_end, rq = jax.lax.scan(rq_step, jnp.eye(dk, dtype=q.dtype), (qz, kz, bz))
+        q_eff = gz[:, None] * rq                       # (C, dk)
+        # fused multi-level read: o_t = Σ_m λ[t, lc+m] q̂_t^T S^(m)
+        y_off = jnp.einsum("cm,ck,mkd->cd", lamz, q_eff, states[1: 1 + n_inter])
+        # transition the whole stack by E_z = G_C R_C^T, then write level 0
+        states = gz[-1] * jnp.einsum("jk,skd->sjd", r_end.T, states)
+        states = states.at[0].set(own)
+        return (states, z + 1), y_off
+
+    init = (jnp.zeros((n_slots, dk, dv), q.dtype), jnp.int32(0))
+    _, y_off = jax.lax.scan(chunk_step, init, (qc, kc, g, bc, lam_inter, own_state))
+
+    return (y_diag + y_off).reshape(T, dv)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def loglinear_gdn_chunkwise(q, k, v, log_alpha, beta, lam, *, chunk: int = 16):
+    """Batched chunkwise Log-Linear Gated DeltaNet."""
+    B, T, H, dk = q.shape
+    C = chunk
+    assert C >= 1 and (C & (C - 1)) == 0, "chunk must be a power of two"
+    assert T % C == 0, f"T={T} must be a multiple of chunk={C}"
+    assert lam.shape[-1] >= fenwick.num_levels(T)
+    f = functools.partial(_llgdn_head, chunk=chunk)
+    inner = jax.vmap(f, in_axes=(1, 1, 1, 1, 1, 1), out_axes=1)
+    outer = jax.vmap(inner, in_axes=(0, 0, 0, 0, 0, 0), out_axes=0)
+    return outer(q, k, v, log_alpha, beta, lam)

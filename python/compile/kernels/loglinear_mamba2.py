@@ -1,0 +1,193 @@
+"""Log-Linear Mamba-2 chunkwise kernel ("hattention", paper §3.3–3.5).
+
+TPU/Pallas adaptation of the paper's H100/Triton kernel (see DESIGN.md
+§Hardware-Adaptation):
+
+- **Intra-chunk stage** (`_intra_chunk_kernel`): one Pallas program per
+  (batch·head, chunk). The (C, C) H-masked score block lives in VMEM; the
+  level-index matrix rides along as a broadcast input; `Q K^T` and `P V`
+  hit the MXU. This is the "bespoke intra-chunk implementation" of §5.
+- **Inter-chunk stage** (fused, jnp in the same jit): all
+  `log2(T/C)` levels are folded into ONE masked chunk-to-chunk transfer
+  einsum (level fusion, §3.5 / App. C) — contrast the paper's naive
+  variant that re-launches a Mamba-2 primitive per level.
+
+The Pallas stage carries a ``custom_vjp`` whose backward is the VJP of the
+jnp twin — mirroring the paper's hand-written Triton backward (§5).
+
+Pallas runs with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; on a real TPU the same BlockSpec schedule compiles
+natively. Correctness is asserted against ``ref.py`` by pytest.
+
+Shapes: ``q, k: (B, T, H, dk)``, ``v: (B, T, H, dv)``,
+``log_alpha: (B, T, H)``, ``lam: (B, T, H, L)`` with
+``L = num_levels(T)``; ``T`` must be a multiple of the chunk size ``C``
+(power of two).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import fenwick
+
+
+def _intra_chunk_kernel(q_ref, k_ref, v_ref, la_ref, lam_ref, lvl_ref, o_ref):
+    """One (batch·head, chunk) program: Y_diag = (QK^T ⊙ M^S ⊙ M^H_local) V."""
+    q = q_ref[0]          # (C, dk)
+    k = k_ref[0]          # (C, dk)
+    v = v_ref[0]          # (C, dv)
+    la = la_ref[0]        # (C,)
+    lam = lam_ref[0]      # (C, L)
+
+    cum = jnp.cumsum(la)  # (C,)
+    lvl = lvl_ref[...]    # (C, C) level-index matrix (same for all chunks)
+    causal = lvl >= 0
+    # gate decay, masked in log-space to avoid inf*0 above the diagonal
+    logdec = jnp.where(causal, cum[:, None] - cum[None, :], -jnp.inf)
+    decay = jnp.exp(logdec)
+    # λ gathered by intra-chunk level (levels 0..log2(C))
+    hm = jnp.where(
+        causal,
+        jnp.take_along_axis(lam, jnp.maximum(lvl, 0), axis=1),
+        0.0,
+    )
+    scores = (q @ k.T) * decay * hm          # MXU matmul + VPU mask
+    o_ref[0] = scores @ v                    # MXU matmul
+
+
+def _intra_jnp(chunk, qf, kf, vf, laf, lamf):
+    """jnp twin of the Pallas intra-chunk stage (backward pass + ablation)."""
+    BH, T, dk = qf.shape
+    dv = vf.shape[-1]
+    L = lamf.shape[-1]
+    C = chunk
+    Z = T // C
+    qc = qf.reshape(BH, Z, C, dk)
+    kc = kf.reshape(BH, Z, C, dk)
+    vc = vf.reshape(BH, Z, C, dv)
+    lac = laf.reshape(BH, Z, C)
+    lamc = lamf.reshape(BH, Z, C, L)
+    cum = jnp.cumsum(lac, axis=-1)
+    lvl = jnp.asarray(fenwick.level_index_matrix(C))
+    causal = lvl >= 0
+    logdec = jnp.where(causal[None, None], cum[..., :, None] - cum[..., None, :], -jnp.inf)
+    hm = jnp.take_along_axis(
+        lamc, jnp.broadcast_to(jnp.maximum(lvl, 0)[None, None], (BH, Z, C, C)), axis=3
+    )
+    hm = jnp.where(causal[None, None], hm, 0.0)
+    scores = jnp.einsum("bzik,bzjk->bzij", qc, kc) * jnp.exp(logdec) * hm
+    return jnp.einsum("bzij,bzjd->bzid", scores, vc).reshape(BH, T, dv)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _intra_op(chunk, interpret, qf, kf, vf, laf, lamf):
+    BH, T, dk = qf.shape
+    dv = vf.shape[-1]
+    L = lamf.shape[-1]
+    C = chunk
+    Z = T // C
+    level_idx = jnp.asarray(fenwick.level_index_matrix(C))
+    return pl.pallas_call(
+        _intra_chunk_kernel,
+        grid=(BH, Z),
+        in_specs=[
+            pl.BlockSpec((1, C, dk), lambda b, z: (b, z, 0)),
+            pl.BlockSpec((1, C, dk), lambda b, z: (b, z, 0)),
+            pl.BlockSpec((1, C, dv), lambda b, z: (b, z, 0)),
+            pl.BlockSpec((1, C), lambda b, z: (b, z)),
+            pl.BlockSpec((1, C, L), lambda b, z: (b, z, 0)),
+            pl.BlockSpec((C, C), lambda b, z: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, dv), lambda b, z: (b, z, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, dv), vf.dtype),
+        interpret=interpret,
+    )(qf, kf, vf, laf, lamf, level_idx)
+
+
+def _intra_op_fwd(chunk, interpret, qf, kf, vf, laf, lamf):
+    return _intra_op(chunk, interpret, qf, kf, vf, laf, lamf), (qf, kf, vf, laf, lamf)
+
+
+def _intra_op_bwd(chunk, interpret, res, g):
+    qf, kf, vf, laf, lamf = res
+    _, vjp = jax.vjp(
+        lambda q, k, v, la, lam: _intra_jnp(chunk, q, k, v, la, lam),
+        qf, kf, vf, laf, lamf,
+    )
+    return vjp(g)
+
+
+_intra_op.defvjp(_intra_op_fwd, _intra_op_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_pallas"))
+def hattention_chunkwise(q, k, v, log_alpha, lam, *, chunk: int = 16,
+                         interpret: bool = True, use_pallas: bool = True):
+    """Chunkwise-parallel log-linear Mamba-2 forward (Algorithm 1)."""
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    C = chunk
+    assert C >= 1 and (C & (C - 1)) == 0, "chunk must be a power of two"
+    assert T % C == 0, f"T={T} must be a multiple of chunk={C}"
+    Z = T // C
+    lc = int(np.log2(C))
+    L = lam.shape[-1]
+    assert L >= fenwick.num_levels(T), f"lam has {L} levels, need {fenwick.num_levels(T)}"
+
+    # Fold batch and head: (BH, T, ...)
+    def fold(x):
+        return jnp.moveaxis(x, 2, 1).reshape((B * H, T) + x.shape[3:])
+
+    qf, kf, vf = fold(q), fold(k), fold(v)
+    laf, lamf = fold(log_alpha), fold(lam)
+
+    # ---- intra-chunk stage (Pallas) ----
+    if use_pallas:
+        y_diag = _intra_op(C, interpret, qf, kf, vf, laf, lamf)
+    else:
+        y_diag = _intra_jnp(C, qf, kf, vf, laf, lamf)
+
+    # ---- inter-chunk stage (level-fused) ----
+    qc = qf.reshape(B * H, Z, C, dk)
+    kc = kf.reshape(B * H, Z, C, dk)
+    vc = vf.reshape(B * H, Z, C, dv)
+    lac = laf.reshape(B * H, Z, C)
+    lamc = lamf.reshape(B * H, Z, C, L)
+
+    a_cs = jnp.cumsum(lac, axis=-1)                    # within-chunk cumsum
+    tot = a_cs[..., -1]                                # (BH, Z) chunk totals
+    # chunk states: S[z] = sum_s exp(tot - a_cs[s]) k_s v_s^T
+    w = jnp.exp(tot[..., None] - a_cs)                 # (BH, Z, C)
+    states = jnp.einsum("bzc,bzck,bzcd->bzkd", w, kc, vc)
+
+    # cross-chunk decay: D[z, c] = exp(sum_{i=c+1}^{z-1} tot_i), c < z
+    ct = jnp.cumsum(tot, axis=-1)                      # inclusive prefix
+    ctz = jnp.concatenate([jnp.zeros_like(ct[:, :1]), ct], axis=1)  # ct0[j] = sum_{i<j}
+    zi = jnp.arange(Z)
+    logd = ctz[:, zi][:, :, None] - ctz[:, zi + 1][:, None, :]   # (BH, Z, Z)
+
+    # level masks at chunk granularity, stacked: (L_inter, Z, Z)
+    n_inter = fenwick.num_levels(Z) - 1 if Z > 1 else 0
+    if n_inter > 0:
+        lvl_z = fenwick.level_index_matrix(Z)          # level_of at chunk granularity
+        masks = np.stack([(lvl_z == m) for m in range(1, n_inter + 1)])
+        masks = jnp.asarray(masks)
+        dmask = jnp.where(masks[None], jnp.exp(logd)[:, None], 0.0)  # (BH, M, Z, Z)
+        # combined[b, m, z] = sum_c dmask * states[b, c]   (level fusion)
+        combined = jnp.einsum("bmzc,bckd->bmzkd", dmask, states)
+        # reads: o[t in chunk z] += sum_m lam[t, lc+m] exp(a_cs[t]) q_t^T combined[m, z]
+        lam_inter = lamc[..., lc + 1: lc + 1 + n_inter]           # (BH, Z, C, M)
+        qw = qc * jnp.exp(a_cs)[..., None]                        # (BH, Z, C, dk)
+        y_off = jnp.einsum("bzcm,bzck,bmzkd->bzcd", lam_inter, qw, combined)
+        y = y_diag + y_off.reshape(B * H, T, dv)
+    else:
+        y = y_diag
+
+    # unfold: (B, T, H, dv)
+    return jnp.moveaxis(y.reshape(B, H, T, dv), 1, 2)

@@ -1,0 +1,137 @@
+"""Mamba-2 / SSD chunkwise kernel (Dao & Gu, 2024) — the O(T) linear-time
+state-passing primitive that Algorithm 1 calls O(log T/C) times, and the
+baseline row of Fig. 4.
+
+Same TPU/Pallas structure as ``loglinear_mamba2.py`` minus the H-mask:
+Pallas intra-chunk program per (batch·head, chunk), sequential
+``lax.scan`` over chunk states for the inter-chunk stage (true O(T)).
+
+The Pallas stage carries a ``custom_vjp``: forward runs the kernel,
+backward is the VJP of the mathematically-identical jnp twin — mirroring
+the paper's hand-written Triton backward (§5) without duplicating the
+derivation here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _intra_chunk_kernel(q_ref, k_ref, v_ref, la_ref, o_ref):
+    """Y_diag = (Q K^T ⊙ M^S_local) V for one (batch·head, chunk)."""
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    la = la_ref[0]
+    C = q.shape[0]
+    cum = jnp.cumsum(la)
+    causal = jnp.tril(jnp.ones((C, C), dtype=bool))
+    logdec = jnp.where(causal, cum[:, None] - cum[None, :], -jnp.inf)
+    scores = (q @ k.T) * jnp.exp(logdec)
+    o_ref[0] = scores @ v
+
+
+def _intra_jnp(chunk, qf, kf, vf, laf):
+    """jnp twin of the Pallas intra-chunk stage (used for the backward
+    pass and the `use_pallas=False` ablation). Inputs are folded (BH, T, ·)."""
+    BH, T, dk = qf.shape
+    dv = vf.shape[-1]
+    C = chunk
+    Z = T // C
+    qc = qf.reshape(BH, Z, C, dk)
+    kc = kf.reshape(BH, Z, C, dk)
+    vc = vf.reshape(BH, Z, C, dv)
+    lac = laf.reshape(BH, Z, C)
+    cum = jnp.cumsum(lac, axis=-1)
+    causal = jnp.tril(jnp.ones((C, C), dtype=bool))
+    logdec = jnp.where(causal[None, None], cum[..., :, None] - cum[..., None, :], -jnp.inf)
+    scores = jnp.einsum("bzik,bzjk->bzij", qc, kc) * jnp.exp(logdec)
+    return jnp.einsum("bzij,bzjd->bzid", scores, vc).reshape(BH, T, dv)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _intra_op(chunk, interpret, qf, kf, vf, laf):
+    BH, T, dk = qf.shape
+    dv = vf.shape[-1]
+    C = chunk
+    Z = T // C
+    return pl.pallas_call(
+        _intra_chunk_kernel,
+        grid=(BH, Z),
+        in_specs=[
+            pl.BlockSpec((1, C, dk), lambda b, z: (b, z, 0)),
+            pl.BlockSpec((1, C, dk), lambda b, z: (b, z, 0)),
+            pl.BlockSpec((1, C, dv), lambda b, z: (b, z, 0)),
+            pl.BlockSpec((1, C), lambda b, z: (b, z)),
+        ],
+        out_specs=pl.BlockSpec((1, C, dv), lambda b, z: (b, z, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, dv), vf.dtype),
+        interpret=interpret,
+    )(qf, kf, vf, laf)
+
+
+def _intra_op_fwd(chunk, interpret, qf, kf, vf, laf):
+    return _intra_op(chunk, interpret, qf, kf, vf, laf), (qf, kf, vf, laf)
+
+
+def _intra_op_bwd(chunk, interpret, res, g):
+    qf, kf, vf, laf = res
+    _, vjp = jax.vjp(lambda q, k, v, la: _intra_jnp(chunk, q, k, v, la), qf, kf, vf, laf)
+    return vjp(g)
+
+
+_intra_op.defvjp(_intra_op_fwd, _intra_op_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_pallas"))
+def mamba2_chunkwise(q, k, v, log_alpha, *, chunk: int = 16,
+                     interpret: bool = True, use_pallas: bool = True):
+    """Chunkwise SSD forward. Shapes as in ``loglinear_mamba2.py``."""
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    C = chunk
+    assert T % C == 0, f"T={T} must be a multiple of chunk={C}"
+    Z = T // C
+
+    def fold(x):
+        return jnp.moveaxis(x, 2, 1).reshape((B * H, T) + x.shape[3:])
+
+    qf, kf, vf, laf = fold(q), fold(k), fold(v), fold(log_alpha)
+
+    if use_pallas:
+        y_diag = _intra_op(C, interpret, qf, kf, vf, laf)
+    else:
+        y_diag = _intra_jnp(C, qf, kf, vf, laf)
+
+    # ---- inter-chunk: sequential state passing, O(T) ----
+    qc = qf.reshape(B * H, Z, C, dk)
+    kc = kf.reshape(B * H, Z, C, dk)
+    vc = vf.reshape(B * H, Z, C, dv)
+    lac = laf.reshape(B * H, Z, C)
+    a_cs = jnp.cumsum(lac, axis=-1)
+    tot = a_cs[..., -1]                                # (BH, Z)
+    w = jnp.exp(tot[..., None] - a_cs)
+    chunk_states = jnp.einsum("bzc,bzck,bzcd->bzkd", w, kc, vc)  # (BH, Z, dk, dv)
+
+    def scan_step(s_in, inp):
+        state_z, tot_z = inp                           # (BH, dk, dv), (BH,)
+        s_out = jnp.exp(tot_z)[:, None, None] * s_in + state_z
+        return s_out, s_in                             # emit state *entering* chunk z
+
+    init = jnp.zeros((B * H, dk, dv), v.dtype)
+    _, s_in = jax.lax.scan(
+        scan_step,
+        init,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(tot, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)                    # (BH, Z, dk, dv)
+
+    qw = qc * jnp.exp(a_cs)[..., None]
+    y_off = jnp.einsum("bzck,bzkd->bzcd", qw, s_in).reshape(B * H, T, dv)
+
+    y = y_diag + y_off
+    return jnp.moveaxis(y.reshape(B, H, T, dv), 1, 2)

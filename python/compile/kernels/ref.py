@@ -1,0 +1,235 @@
+"""Pure-jnp correctness oracles for every kernel (Layer 1's ground truth).
+
+Two independent formulations per model:
+
+- ``*_parallel_ref``: the masked parallel form ``O = (A ⊙ M) V`` with the
+  mask materialized densely from first principles (Eq. 4). O(T^2) but
+  unambiguous; mirrors the Rust oracles bit-for-bit-ish.
+- ``*_recurrent_ref``: ``lax.scan`` recurrences — including the Fenwick
+  O(log T)-state recurrence of §3.2, which the decode step reuses.
+
+Per-head signatures: ``q, k: (T, dk)``, ``v: (T, dv)``,
+``log_alpha, beta: (T,)``, ``lam: (T, num_levels)``. Batched wrappers
+vmap over (B, H) with inputs shaped (B, T, H, ...).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fenwick
+
+
+# ---------------------------------------------------------------------------
+# Mask construction
+# ---------------------------------------------------------------------------
+
+def sss_mask(log_alpha):
+    """1-semiseparable mask M^S[t,s] = exp(sum log_alpha[s+1..t])."""
+    return jnp.exp(fenwick.segsum(log_alpha)).astype(log_alpha.dtype)
+
+
+def hmask(lam, T: int):
+    """M^H[t,s] = lam[t, level_of(t,s)] for s <= t else 0 (Eq. 4)."""
+    lvl = jnp.asarray(fenwick.level_index_matrix(T))  # (T,T), -1 above diag
+    gathered = jnp.take_along_axis(lam, jnp.maximum(lvl, 0), axis=1)
+    return jnp.where(lvl >= 0, gathered, 0.0)
+
+
+def quasi_mask(log_alpha, lam):
+    """M = M^S ⊙ M^H — the quasi-hierarchical mask."""
+    T = log_alpha.shape[0]
+    return sss_mask(log_alpha) * hmask(lam, T)
+
+
+def delta_attn_matrix(q, k, beta):
+    """DeltaNet attention matrix A^δ = tril(QK^T) B^{-1} diag(β) with
+    B = I + StrictTril(diag(β) K K^T) (the paper's T_K(QK^T))."""
+    T = q.shape[0]
+    tril = jnp.tril(jnp.ones((T, T), dtype=bool))
+    stril = jnp.tril(jnp.ones((T, T), dtype=bool), k=-1)
+    b_sys = jnp.eye(T, dtype=q.dtype) + jnp.where(
+        stril, beta[:, None] * (k @ k.T), 0.0
+    )
+    qk = jnp.where(tril, q @ k.T, 0.0)
+    # A B = qk  (per row of A)  =>  B^T A^T = qk^T
+    a_t = jax.scipy.linalg.solve_triangular(b_sys.T, qk.T, lower=False, unit_diagonal=True)
+    return a_t.T * beta[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Parallel (masked) references
+# ---------------------------------------------------------------------------
+
+def linear_parallel_ref(q, k, v):
+    T = q.shape[0]
+    p = jnp.where(jnp.tril(jnp.ones((T, T), dtype=bool)), q @ k.T, 0.0)
+    return p @ v
+
+
+def mamba2_parallel_ref(q, k, v, log_alpha):
+    p = jnp.tril(q @ k.T) * sss_mask(log_alpha)
+    return p @ v
+
+
+def loglinear_mamba2_parallel_ref(q, k, v, log_alpha, lam):
+    p = jnp.tril(q @ k.T) * quasi_mask(log_alpha, lam)
+    return p @ v
+
+
+def gdn_parallel_ref(q, k, v, log_alpha, beta):
+    p = delta_attn_matrix(q, k, beta) * sss_mask(log_alpha)
+    return p @ v
+
+
+def loglinear_gdn_parallel_ref(q, k, v, log_alpha, beta, lam):
+    p = delta_attn_matrix(q, k, beta) * quasi_mask(log_alpha, lam)
+    return p @ v
+
+
+def softmax_attention_ref(q, k, v):
+    T, dk = q.shape
+    scores = (q @ k.T) / jnp.sqrt(jnp.array(dk, dtype=q.dtype))
+    scores = jnp.where(jnp.tril(jnp.ones((T, T), dtype=bool)), scores, -jnp.inf)
+    return jax.nn.softmax(scores, axis=-1) @ v
+
+
+# ---------------------------------------------------------------------------
+# Recurrent references (lax.scan)
+# ---------------------------------------------------------------------------
+
+def mamba2_recurrent_ref(q, k, v, log_alpha):
+    """S_t = α_t S_{t-1} + k_t v_t^T, o_t = S_t^T q_t."""
+    dk, dv = q.shape[1], v.shape[1]
+
+    def step(s, inp):
+        qt, kt, vt, la = inp
+        s = jnp.exp(la) * s + jnp.outer(kt, vt)
+        return s, s.T @ qt
+
+    _, o = jax.lax.scan(step, jnp.zeros((dk, dv), q.dtype), (q, k, v, log_alpha))
+    return o
+
+
+def gdn_recurrent_ref(q, k, v, log_alpha, beta):
+    """S_t = α_t (I − β_t k_t k_t^T) S_{t-1} + β_t k_t v_t^T."""
+    dk, dv = q.shape[1], v.shape[1]
+
+    def step(s, inp):
+        qt, kt, vt, la, bt = inp
+        s = s - bt * jnp.outer(kt, kt @ s)
+        s = jnp.exp(la) * s + bt * jnp.outer(kt, vt)
+        return s, s.T @ qt
+
+    _, o = jax.lax.scan(
+        step, jnp.zeros((dk, dv), q.dtype), (q, k, v, log_alpha, beta)
+    )
+    return o
+
+
+def _fenwick_merge(states, t):
+    """One Fenwick merge step (§3.2) on a (L+1, dk, dv) state stack (L slots) for a
+    traced time index t >= 1: levels 0..lssb(t) sum into level lssb(t)+1."""
+    L = states.shape[0]
+    l = fenwick.lssb_traced(t)
+    idx = jnp.arange(L)
+    le = (idx <= l)[:, None, None]
+    merged = jnp.sum(jnp.where(le, states, 0.0), axis=0)
+    states = jnp.where(le, 0.0, states)
+    states = jnp.where((idx == l + 1)[:, None, None], merged[None], states)
+    return states
+
+
+def loglinear_mamba2_recurrent_ref(q, k, v, log_alpha, lam):
+    """The §3.2 Fenwick recurrence: O(log T) live states."""
+    T, dk = q.shape
+    dv = v.shape[1]
+    L = lam.shape[1]
+
+    def step(carry, inp):
+        states, t = carry
+        qt, kt, vt, la, lt = inp
+        states = jax.lax.cond(t > 0, lambda s: _fenwick_merge(s, t), lambda s: s, states)
+        states = jnp.exp(la) * states
+        states = states.at[0].set(jnp.outer(kt, vt))
+        o = jnp.einsum("l,lkv,k->v", lt, states, qt)
+        return (states, t + 1), o
+
+    init = (jnp.zeros((L, dk, dv), q.dtype), jnp.int32(0))
+    _, o = jax.lax.scan(step, init, (q, k, v, log_alpha, lam))
+    return o
+
+
+def loglinear_gdn_recurrent_ref(q, k, v, log_alpha, beta, lam):
+    """Fenwick recurrence with gated Householder transitions."""
+    T, dk = q.shape
+    dv = v.shape[1]
+    L = lam.shape[1]
+
+    def step(carry, inp):
+        states, t = carry
+        qt, kt, vt, la, bt, lt = inp
+        states = jax.lax.cond(t > 0, lambda s: _fenwick_merge(s, t), lambda s: s, states)
+        # S ← α (I − β k k^T) S for every level
+        proj = jnp.einsum("k,lkv->lv", kt, states)
+        states = states - bt * kt[None, :, None] * proj[:, None, :]
+        states = jnp.exp(la) * states
+        states = states.at[0].set(bt * jnp.outer(kt, vt))
+        o = jnp.einsum("l,lkv,k->v", lt, states, qt)
+        return (states, t + 1), o
+
+    init = (jnp.zeros((L, dk, dv), q.dtype), jnp.int32(0))
+    _, o = jax.lax.scan(step, init, (q, k, v, log_alpha, beta, lam))
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Batched wrappers: (B, T, H, ...) -> (B, T, H, dv)
+# ---------------------------------------------------------------------------
+
+def _batch_heads(fn, *args):
+    """vmap a per-head (T, ...) function over batch (axis 0) and head
+    (axis 2 of the (B, T, H, ...) layout)."""
+    inner = jax.vmap(fn, in_axes=tuple(1 for _ in args), out_axes=1)  # heads
+    outer = jax.vmap(inner, in_axes=tuple(0 for _ in args), out_axes=0)  # batch
+    return outer(*args)
+
+
+def mamba2_ref_batched(q, k, v, log_alpha):
+    return _batch_heads(mamba2_parallel_ref, q, k, v, log_alpha)
+
+
+def loglinear_mamba2_ref_batched(q, k, v, log_alpha, lam):
+    return _batch_heads(loglinear_mamba2_parallel_ref, q, k, v, log_alpha, lam)
+
+
+def gdn_ref_batched(q, k, v, log_alpha, beta):
+    return _batch_heads(gdn_parallel_ref, q, k, v, log_alpha, beta)
+
+
+def loglinear_gdn_ref_batched(q, k, v, log_alpha, beta, lam):
+    return _batch_heads(loglinear_gdn_parallel_ref, q, k, v, log_alpha, beta, lam)
+
+
+def softmax_ref_batched(q, k, v):
+    return _batch_heads(softmax_attention_ref, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic golden-fixture inputs (shared with the Rust tests)
+# ---------------------------------------------------------------------------
+
+def make_inputs(T: int, dk: int, dv: int, seed: int = 0):
+    """Deterministic per-head inputs matching the Rust test conventions:
+    normalized keys, gates in (0.75, 1), betas in (0.1, 1), lam in (0.05, 1)."""
+    rng = np.random.RandomState(seed)
+    q = (rng.randn(T, dk) / np.sqrt(dk)).astype(np.float32)
+    k = rng.randn(T, dk).astype(np.float32)
+    k /= np.maximum(np.linalg.norm(k, axis=1, keepdims=True), 1e-6)
+    v = rng.randn(T, dv).astype(np.float32)
+    alpha = rng.uniform(0.75, 1.0, size=T).astype(np.float32)
+    beta = rng.uniform(0.1, 1.0, size=T).astype(np.float32)
+    lam = rng.uniform(0.05, 1.0, size=(T, fenwick.num_levels(T))).astype(np.float32)
+    return q, k, v, np.log(alpha), beta, lam

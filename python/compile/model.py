@@ -1,0 +1,293 @@
+"""Layer 2: the JAX language model (build-time only; never on the request
+path). A pre-norm transformer skeleton whose token mixer is swappable
+between the paper's architectures:
+
+- ``transformer``       — causal softmax attention + RoPE
+- ``mamba2``            — chunkwise SSD (Pallas kernel)
+- ``loglinear_mamba2``  — chunkwise hattention (Pallas kernel, Alg. 1)
+- ``gdn``               — chunkwise Gated DeltaNet
+- ``loglinear_gdn``     — chunkwise Log-Linear Gated DeltaNet
+
+Log-linear variants add one linear head producing the per-head, per-level
+λ_t^(ℓ) = softplus(W_λ x_t + b) (paper §4.2: "a linear layer on top of the
+hidden states"), initialized so λ ≈ 1 — i.e. the model *starts* as its
+linear counterpart and learns to use the hierarchy.
+
+Everything here is AOT-lowered to HLO text by ``aot.py`` and executed from
+Rust; see DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fenwick, ref
+from .kernels.mamba2 import mamba2_chunkwise
+from .kernels.loglinear_mamba2 import hattention_chunkwise
+from .kernels.gdn import gdn_chunkwise
+from .kernels.loglinear_gdn import loglinear_gdn_chunkwise
+
+VARIANTS = ("transformer", "mamba2", "loglinear_mamba2", "gdn", "loglinear_gdn")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    variant: str = "loglinear_mamba2"
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    dk: int = 32           # per-head key/query (state) dim
+    dv: int = 32           # per-head value (head) dim
+    d_mlp: int = 512
+    seq_len: int = 256
+    chunk: int = 16
+    rope_base: float = 500_000.0
+    # λ level count; 0 = derive from seq_len. Set explicitly to share one
+    # parameter set across eval artifacts of different sequence lengths
+    # (shorter sequences simply never index the top levels).
+    levels: int = 0
+
+    @property
+    def num_levels(self) -> int:
+        return self.levels if self.levels > 0 else fenwick.num_levels(self.seq_len)
+
+    def head_dims(self):
+        return self.n_heads, self.dk, self.dv
+
+    def is_loglinear(self) -> bool:
+        return self.variant.startswith("loglinear")
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    """Initialize the parameter pytree (plain nested dict, stable keys)."""
+    rng = np.random.RandomState(seed)
+    std = 0.02
+    H, dk, dv = cfg.head_dims()
+    D = cfg.d_model
+
+    def mat(m, n, s=std):
+        return jnp.asarray(rng.randn(m, n).astype(np.float32) * s)
+
+    def vec(n, fill=0.0):
+        return jnp.full((n,), fill, dtype=jnp.float32)
+
+    params: Dict[str, Any] = {
+        "embed": mat(cfg.vocab, D),
+        "head": mat(D, cfg.vocab),
+        "norm_f": jnp.ones((D,), jnp.float32),
+    }
+    out_scale = std / np.sqrt(2.0 * cfg.n_layers)
+    for i in range(cfg.n_layers):
+        layer: Dict[str, Any] = {
+            "norm1": jnp.ones((D,), jnp.float32),
+            "norm2": jnp.ones((D,), jnp.float32),
+            "wq": mat(D, H * dk),
+            "wk": mat(D, H * dk),
+            "wv": mat(D, H * dv),
+            "wo": mat(H * dv, D, out_scale),
+            "w_gate": mat(D, cfg.d_mlp),
+            "w_up": mat(D, cfg.d_mlp),
+            "w_down": mat(cfg.d_mlp, D, out_scale),
+        }
+        if cfg.variant in ("mamba2", "loglinear_mamba2", "gdn", "loglinear_gdn"):
+            layer["w_alpha"] = mat(D, H, 0.01)
+            # softplus(b) ≈ 0.05 -> α ≈ 0.95 at init
+            layer["b_alpha"] = vec(H, -2.97)
+        if cfg.variant in ("gdn", "loglinear_gdn"):
+            layer["w_beta"] = mat(D, H, 0.01)
+            layer["b_beta"] = vec(H, 1.0)
+        if cfg.is_loglinear():
+            L = cfg.num_levels
+            layer["w_lam"] = mat(D, H * L, 0.01)
+            # softplus(0.5413) ≈ 1.0 -> starts as the linear variant
+            layer["b_lam"] = vec(H * L, 0.5413)
+        params[f"layer_{i}"] = layer
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, gain, eps=1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def swiglu(x, layer):
+    return (jax.nn.silu(x @ layer["w_gate"]) * (x @ layer["w_up"])) @ layer["w_down"]
+
+
+def rope(x, base: float, offset=0):
+    """Rotary embedding on (B, T, H, d)."""
+    B, T, H, d = x.shape
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(T, dtype=jnp.float32) + offset
+    ang = pos[:, None] * freqs[None, :]                       # (T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    rot1 = x1 * cos[None, :, None, :] - x2 * sin[None, :, None, :]
+    rot2 = x1 * sin[None, :, None, :] + x2 * cos[None, :, None, :]
+    return jnp.concatenate([rot1, rot2], axis=-1)
+
+
+def mixer_projections(cfg: ModelConfig, layer, x):
+    """Shared q/k/v (+gates, +β, +λ) projections. x: (B, T, D)."""
+    B, T, _ = x.shape
+    H, dk, dv = cfg.head_dims()
+    q = (x @ layer["wq"]).reshape(B, T, H, dk)
+    k = (x @ layer["wk"]).reshape(B, T, H, dk)
+    v = (x @ layer["wv"]).reshape(B, T, H, dv)
+    out = {"q": q, "k": k, "v": v}
+    if "w_alpha" in layer:
+        out["log_alpha"] = -jax.nn.softplus(x @ layer["w_alpha"] + layer["b_alpha"])
+    if "w_beta" in layer:
+        out["beta"] = jax.nn.sigmoid(x @ layer["w_beta"] + layer["b_beta"])
+    if "w_lam" in layer:
+        L = cfg.num_levels
+        lam = jax.nn.softplus(x @ layer["w_lam"] + layer["b_lam"])
+        out["lam"] = lam.reshape(B, T, H, L)
+    if cfg.variant in ("gdn", "loglinear_gdn"):
+        # L2-normalized keys keep the Householder transitions contractive.
+        out["k"] = out["k"] / jnp.maximum(
+            jnp.linalg.norm(out["k"], axis=-1, keepdims=True), 1e-6
+        )
+    return out
+
+
+def mixer_forward(cfg: ModelConfig, layer, x, *, interpret=True):
+    """Token mixing. x: (B, T, D) -> (B, T, D)."""
+    B, T, _ = x.shape
+    H, dk, dv = cfg.head_dims()
+    p = mixer_projections(cfg, layer, x)
+    q, k, v = p["q"], p["k"], p["v"]
+    if cfg.variant == "transformer":
+        q = rope(q, cfg.rope_base)
+        k = rope(k, cfg.rope_base)
+        o = ref.softmax_ref_batched(q, k, v)
+    elif cfg.variant == "mamba2":
+        o = mamba2_chunkwise(q, k, v, p["log_alpha"], chunk=cfg.chunk, interpret=interpret)
+    elif cfg.variant == "loglinear_mamba2":
+        o = hattention_chunkwise(
+            q, k, v, p["log_alpha"], p["lam"], chunk=cfg.chunk, interpret=interpret
+        )
+    elif cfg.variant == "gdn":
+        o = gdn_chunkwise(q, k, v, p["log_alpha"], p["beta"], chunk=cfg.chunk)
+    elif cfg.variant == "loglinear_gdn":
+        o = loglinear_gdn_chunkwise(
+            q, k, v, p["log_alpha"], p["beta"], p["lam"], chunk=cfg.chunk
+        )
+    else:
+        raise ValueError(f"unknown variant {cfg.variant}")
+    return o.reshape(B, T, H * dv) @ layer["wo"]
+
+
+def forward_logits(cfg: ModelConfig, params, tokens, *, interpret=True):
+    """tokens: (B, T) int32 -> logits (B, T, vocab)."""
+    x = params["embed"][tokens]
+    for i in range(cfg.n_layers):
+        layer = params[f"layer_{i}"]
+        x = x + mixer_forward(cfg, layer, rmsnorm(x, layer["norm1"]), interpret=interpret)
+        x = x + swiglu(rmsnorm(x, layer["norm2"]), layer)
+    x = rmsnorm(x, params["norm_f"])
+    return x @ params["head"]
+
+
+def per_position_loss(cfg: ModelConfig, params, tokens, *, interpret=True):
+    """Next-token cross-entropy per position: (B, T-1)."""
+    logits = forward_logits(cfg, params, tokens, interpret=interpret)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    return -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, *, interpret=True):
+    return jnp.mean(per_position_loss(cfg, params, tokens, interpret=interpret))
+
+
+# ---------------------------------------------------------------------------
+# Adam train step (the L2 training hot path, exported as one fused HLO)
+# ---------------------------------------------------------------------------
+
+def adam_train_step(cfg: ModelConfig, params, m, v, step, tokens, lr,
+                    b1=0.9, b2=0.95, eps=1e-8, wd=0.01, *, interpret=True):
+    """One fused forward+backward+Adam(W) update. Returns
+    (params', m', v', loss). ``step`` is 1-based for bias correction."""
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, interpret=interpret)
+    )(params)
+    stepf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** stepf
+    bc2 = 1.0 - b2 ** stepf
+
+    def upd(p, g, m_, v_):
+        m2 = b1 * m_ + (1.0 - b1) * g
+        v2 = b2 * v_ + (1.0 - b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+        return p2, m2, v2
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    params2 = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    m2 = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    v2 = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    return params2, m2, v2, loss
+
+
+def zeros_like_tree(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+# ---------------------------------------------------------------------------
+# Flattening (stable order shared with the Rust runtime via the manifest)
+# ---------------------------------------------------------------------------
+
+def flatten_with_names(params):
+    """Flatten the param pytree into (name, leaf) pairs in a stable,
+    manifest-documented order (sorted dict keys, depth-first)."""
+    out = []
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for key in sorted(node.keys()):
+                rec(f"{prefix}.{key}" if prefix else key, node[key])
+        else:
+            out.append((prefix, node))
+
+    rec("", params)
+    return out
+
+
+def unflatten_like(template, leaves):
+    """Inverse of flatten_with_names given a structural template."""
+    leaves = list(leaves)
+
+    def rec(node):
+        if isinstance(node, dict):
+            return {key: rec(node[key]) for key in sorted(node.keys())}
+        return leaves.pop(0)
+
+    result = rec(template)
+    assert not leaves, "leftover leaves"
+    return result

@@ -1,0 +1,96 @@
+"""Fenwick partition invariants (paper §3.1) — Python twin of the Rust
+property tests, plus the chunk-level correspondence Algorithm 1 relies on."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fenwick
+
+
+@given(st.integers(min_value=0, max_value=5000))
+@settings(max_examples=60, deadline=None)
+def test_buckets_partition_prefix(t):
+    bs = sorted(fenwick.buckets(t), key=lambda b: b[1])
+    pos = 0
+    for _, start, end in bs:
+        assert start == pos
+        pos = end
+    assert pos == t + 1
+
+
+@given(st.integers(min_value=0, max_value=5000))
+@settings(max_examples=60, deadline=None)
+def test_bucket_sizes_and_count(t):
+    bs = fenwick.buckets(t)
+    for level, start, end in bs:
+        size = end - start
+        assert size == (1 if level == 0 else 1 << (level - 1))
+    assert len(bs) == bin(t).count("1") + 1
+
+
+@given(st.integers(min_value=0, max_value=400))
+@settings(max_examples=30, deadline=None)
+def test_level_of_matches_buckets(t):
+    bs = fenwick.buckets(t)
+    for s in range(t + 1):
+        l = fenwick.level_of(t, s)
+        assert any(start <= s < end and level == l for level, start, end in bs)
+
+
+def test_num_levels_covers_all_buckets():
+    for T in (1, 8, 64, 256, 1000):
+        nl = fenwick.num_levels(T)
+        for t in range(T):
+            for level, _, _ in fenwick.buckets(t):
+                assert level < nl
+
+
+def test_chunk_level_correspondence():
+    """token level == log2(C) + chunk level for cross-chunk pairs."""
+    C = 8
+    lc = 3
+    for t in range(0, 8 * C):
+        for s in range(0, t + 1):
+            tc, sc = t // C, s // C
+            if tc != sc:
+                assert fenwick.level_of(t, s) == lc + fenwick.level_of(tc, sc)
+
+
+def test_level_masks_partition_lower_triangle():
+    n = 32
+    total = np.zeros((n, n), dtype=int)
+    for level in range(fenwick.num_levels(n)):
+        total += fenwick.level_mask(level, n).astype(int)
+    expect = np.tril(np.ones((n, n), dtype=int))
+    assert (total == expect).all()
+
+
+def test_level_index_matrix_consistent():
+    n = 24
+    m = fenwick.level_index_matrix(n)
+    for i in range(n):
+        for j in range(n):
+            if j > i:
+                assert m[i, j] == -1
+            else:
+                assert m[i, j] == fenwick.level_of(i, j)
+
+
+def test_lssb_traced_matches_host():
+    import jax.numpy as jnp
+
+    for t in range(1, 300):
+        assert int(fenwick.lssb_traced(jnp.int32(t))) == fenwick.lssb(t)
+
+
+def test_segsum_matches_numpy():
+    import jax.numpy as jnp
+
+    x = np.random.RandomState(0).randn(10).astype(np.float32)
+    s = np.asarray(fenwick.segsum(jnp.asarray(x)))
+    for i in range(10):
+        for j in range(10):
+            if j > i:
+                assert s[i, j] == -np.inf
+            else:
+                assert abs(s[i, j] - x[j + 1: i + 1].sum()) < 1e-5

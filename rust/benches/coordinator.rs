@@ -1,0 +1,84 @@
+//! L3 coordinator micro-benches: the serving hot path must not be the
+//! bottleneck (DESIGN.md §9 L3 target). Measures batcher planning, queue
+//! ops, state-pool alloc/release, and the gather/scatter of per-sequence
+//! Fenwick state stacks into batched buffers — everything around the
+//! PJRT execute call.
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use std::time::Duration;
+
+use loglinear::bench::{bench, section};
+use loglinear::coordinator::batcher::{BatchPolicy, RequestQueue};
+use loglinear::state::pool::StatePool;
+use loglinear::util::Rng;
+
+fn main() {
+    section("batcher planning (pure logic)");
+    let policy = BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(2));
+    bench("plan x1000", 0.2, || {
+        for ready in 0..1000usize {
+            std::hint::black_box(policy.plan(ready % 17, Duration::from_millis((ready % 5) as u64)));
+        }
+    });
+
+    section("request queue push/take");
+    bench("queue 1024 push + take", 0.2, || {
+        let mut q = RequestQueue::new();
+        for i in 0..1024u32 {
+            q.push(i);
+        }
+        while !q.is_empty() {
+            std::hint::black_box(q.take(8));
+        }
+    });
+
+    section("state pool alloc/release (dk*dv = 1024 floats)");
+    bench("pool churn x1024", 0.2, || {
+        let mut pool = StatePool::new(1024, 64);
+        let mut live = Vec::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..1024 {
+            if !live.is_empty() && rng.chance(0.5) {
+                let i = rng.below(live.len());
+                let id = live.swap_remove(i);
+                pool.release(id);
+            } else if let Some(id) = pool.alloc() {
+                live.push(id);
+            }
+        }
+        for id in live {
+            pool.release(id);
+        }
+    });
+
+    section("state gather/scatter (8 seqs x 4 layers x (9,2,16,32) stacks)");
+    // mirrors DecodeServer::step's memory movement around the execute call
+    let numel = 9 * 2 * 16 * 32;
+    let layers = 4;
+    let batch = 8;
+    let seq_states: Vec<Vec<Vec<f32>>> = (0..batch)
+        .map(|_| (0..layers).map(|_| vec![1.0f32; numel]).collect())
+        .collect();
+    bench("gather+scatter", 0.3, || {
+        let mut batched: Vec<Vec<f32>> = (0..layers).map(|_| vec![0.0f32; batch * numel]).collect();
+        for (i, seq) in seq_states.iter().enumerate() {
+            for (l, st) in seq.iter().enumerate() {
+                batched[l][i * numel..(i + 1) * numel].copy_from_slice(st);
+            }
+        }
+        std::hint::black_box(&batched);
+        // scatter back
+        let mut out = seq_states.clone();
+        for (i, seq) in out.iter_mut().enumerate() {
+            for (l, st) in seq.iter_mut().enumerate() {
+                st.copy_from_slice(&batched[l][i * numel..(i + 1) * numel]);
+            }
+        }
+        std::hint::black_box(&out);
+    });
+
+    println!(
+        "\n  (for end-to-end step latency incl. PJRT execute, run\n   `loglinear serve-demo` or `cargo run --release --example serve`)"
+    );
+}

@@ -1,0 +1,99 @@
+//! E11 — decode latency/memory growth (the §3.2 claim): per-step decode
+//! time and resident state vs context depth for the three regimes.
+//! KV-cache cost grows linearly, Fenwick stays ~log.
+//!
+//! Run: `cargo bench --bench decode_latency`
+
+use loglinear::attention::softmax::KvCacheDecoder;
+use loglinear::bench::section;
+use loglinear::state::{FenwickState, Transition};
+use loglinear::util::stats::Summary;
+use loglinear::util::Rng;
+
+fn window_mean(samples: &[f64]) -> f64 {
+    Summary::of(samples).p50 * 1e6
+}
+
+fn main() {
+    let (dk, dv) = (32, 32);
+    let depths = [1024usize, 4096, 16_384, 65_536];
+    let max_t = *depths.last().unwrap();
+    let mut rng = Rng::new(3);
+    let n_inputs = 2048;
+    let qs: Vec<Vec<f32>> = (0..n_inputs)
+        .map(|_| (0..dk).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+    let ks = qs.clone();
+    let vs: Vec<Vec<f32>> = (0..n_inputs)
+        .map(|_| (0..dv).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+
+    section("per-step decode time (us) and state bytes vs context depth");
+    println!(
+        "{:>8} | {:>12} {:>12} | {:>10} {:>10} | {:>12} {:>12}",
+        "depth", "kv us/step", "kv bytes", "m2 us", "m2 bytes", "fenwick us", "fenwick bytes"
+    );
+
+    let mut kv = KvCacheDecoder::new(dk);
+    let mut m2 = loglinear::tensor::Mat::zeros(dk, dv);
+    let mut fw = FenwickState::new(dk, dv);
+    let lambda = vec![1.0f32; 24];
+    let mut next = 0usize;
+    let mut kv_t = Vec::new();
+    let mut m2_t = Vec::new();
+    let mut fw_t = Vec::new();
+    let kv_cap = 16_384; // KV path becomes the bottleneck of the bench itself
+
+    for t in 0..max_t {
+        let i = t % n_inputs;
+        if t < kv_cap {
+            let t0 = std::time::Instant::now();
+            kv.step(&qs[i], &ks[i], &vs[i]);
+            kv_t.push(t0.elapsed().as_secs_f64());
+        }
+        let t0 = std::time::Instant::now();
+        m2.scale_inplace(0.999);
+        loglinear::tensor::outer_acc(&mut m2, &ks[i], &vs[i], 1.0);
+        std::hint::black_box(m2.matvec_t(&qs[i]));
+        m2_t.push(t0.elapsed().as_secs_f64());
+
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(fw.step(&qs[i], &ks[i], &vs[i], 1.0, Transition::Decay(0.999), &lambda));
+        fw_t.push(t0.elapsed().as_secs_f64());
+
+        if next < depths.len() && t + 1 == depths[next] {
+            let w = 512.min(t + 1);
+            let kv_us = if t < kv_cap {
+                format!("{:.2}", window_mean(&kv_t[kv_t.len() - w..]))
+            } else {
+                // linear extrapolation from the last measured window
+                format!(
+                    "~{:.2}",
+                    window_mean(&kv_t[kv_t.len() - w..]) * (t + 1) as f64 / kv_cap as f64
+                )
+            };
+            let kv_bytes = if t < kv_cap {
+                kv.state_bytes()
+            } else {
+                (t + 1) * (dk + dv) * 4
+            };
+            println!(
+                "{:>8} | {:>12} {:>12} | {:>10.2} {:>10} | {:>12.2} {:>12}",
+                t + 1,
+                kv_us,
+                kv_bytes,
+                window_mean(&m2_t[m2_t.len() - w..]),
+                dk * dv * 4,
+                window_mean(&fw_t[fw_t.len() - w..]),
+                fw.state_bytes(),
+            );
+            next += 1;
+        }
+    }
+
+    section("growth factors depth 1K -> 64K (paper: KV x64, Fenwick ~x1.6)");
+    println!(
+        "  fenwick live states at 64K: {} (= popcount+1; bound log2(64K)+1 = 17)",
+        fw.live_states()
+    );
+}

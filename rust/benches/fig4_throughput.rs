@@ -1,0 +1,96 @@
+//! E1/E2/E12 — Fig. 4 reproduction: training-form kernel runtime and
+//! throughput across sequence lengths, CPU substrate (DESIGN.md §6:
+//! absolute numbers differ from the paper's H100, the *shape* — scaling
+//! exponents and who-crosses-whom — is the claim under test).
+//!
+//! Series (paper legend → here):
+//! - FlashAttention-2        → softmax attention (O(T^2))
+//! - Mamba-2                 → chunkwise SSD (O(T))
+//! - Log-Linear Mamba-2      → chunkwise Alg. 1, level-fused (O(T log T))
+//! - Log-Linear Mamba-2 (naive) → one masked sweep per level (E12 ablation)
+//!
+//! Run: `cargo bench --bench fig4_throughput`
+
+use loglinear::attention::{self, AttnInputs};
+use loglinear::bench::{bench, section};
+use loglinear::util::stats::scaling_exponent;
+use loglinear::util::Rng;
+
+fn main() {
+    let (dk, dv, c) = (64, 64, 64);
+    let lens: Vec<usize> = std::env::args()
+        .nth(1)
+        .and_then(|s| if s == "--quick" { Some(vec![512, 1024, 2048]) } else { None })
+        .unwrap_or_else(|| vec![512, 1024, 2048, 4096, 8192]);
+
+    section("Fig. 4 (right): kernel runtime, forward pass, head-dim 64, chunk 64");
+    let mut rows: Vec<(String, usize, f64)> = Vec::new();
+    for &t in &lens {
+        let mut rng = Rng::new(t as u64);
+        let x = AttnInputs::random(t, dk, dv, &mut rng);
+        let softmax_cap = 4096; // O(T^2) gets slow; cap like the paper caps FA2 plots
+        if t <= softmax_cap {
+            let r = bench(&format!("softmax/T={t}"), 0.4, || {
+                std::hint::black_box(attention::softmax::softmax_attention(&x.q, &x.k, &x.v));
+            });
+            rows.push(("softmax".into(), t, r.secs.mean));
+        }
+        let r = bench(&format!("mamba2-chunkwise/T={t}"), 0.4, || {
+            std::hint::black_box(attention::mamba2::chunkwise(&x.q, &x.k, &x.v, &x.alpha, c));
+        });
+        rows.push(("mamba2".into(), t, r.secs.mean));
+        let r = bench(&format!("loglinear-mamba2/T={t}"), 0.4, || {
+            std::hint::black_box(attention::loglinear_mamba2::chunkwise(
+                &x.q, &x.k, &x.v, &x.alpha, &x.lambda, c,
+            ));
+        });
+        rows.push(("loglinear_mamba2".into(), t, r.secs.mean));
+        let r = bench(&format!("loglinear-mamba2-naive/T={t}"), 0.4, || {
+            std::hint::black_box(attention::loglinear_mamba2::chunkwise_naive(
+                &x.q, &x.k, &x.v, &x.alpha, &x.lambda, c,
+            ));
+        });
+        rows.push(("loglinear_naive".into(), t, r.secs.mean));
+    }
+
+    section("Fig. 4 (left): training throughput (tokens/s, fwd-pass proxy)");
+    println!("{:<22} {:>8} {:>14}", "series", "T", "tokens/s");
+    for (name, t, secs) in &rows {
+        println!("{name:<22} {t:>8} {:>14.0}", *t as f64 / secs);
+    }
+
+    section("scaling exponents (log-log slope of runtime vs T)");
+    for series in ["softmax", "mamba2", "loglinear_mamba2", "loglinear_naive"] {
+        let pts: Vec<(usize, f64)> = rows
+            .iter()
+            .filter(|(n, _, _)| n == series)
+            .map(|(_, t, s)| (*t, *s))
+            .collect();
+        if pts.len() >= 3 {
+            let p = scaling_exponent(
+                &pts.iter().map(|(t, _)| *t).collect::<Vec<_>>(),
+                &pts.iter().map(|(_, s)| *s).collect::<Vec<_>>(),
+            );
+            println!("  {series:<22} T^{p:.2}");
+        }
+    }
+
+    section("crossovers (paper: log-linear beats FA2 beyond 8K on H100)");
+    for &t in &lens {
+        let get = |name: &str| {
+            rows.iter()
+                .find(|(n, tt, _)| n == name && *tt == t)
+                .map(|(_, _, s)| *s)
+        };
+        if let (Some(sm), Some(ll)) = (get("softmax"), get("loglinear_mamba2")) {
+            println!(
+                "  T={t:>6}: loglinear/softmax runtime ratio = {:.2} {}",
+                ll / sm,
+                if ll < sm { "(log-linear wins)" } else { "" }
+            );
+        }
+        if let (Some(nv), Some(ll)) = (get("loglinear_naive"), get("loglinear_mamba2")) {
+            println!("  T={t:>6}: fused speedup over naive = {:.2}x", nv / ll);
+        }
+    }
+}

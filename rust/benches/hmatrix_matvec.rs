@@ -1,0 +1,78 @@
+//! E10 — structured-matrix substrate bench + App. B.4 ablation:
+//! quasi-hierarchical matvec is O(T log T) vs dense O(T^2), and strong
+//! admissibility costs a constant factor more than weak for marginal
+//! benefit (the paper measured ~4x in Triton and chose weak).
+//!
+//! Run: `cargo bench --bench hmatrix_matvec`
+
+use loglinear::bench::{bench, section};
+use loglinear::fenwick;
+use loglinear::hmatrix::hodlr::{Admissibility, Hodlr};
+use loglinear::hmatrix::QuasiH;
+use loglinear::tensor::Mat;
+use loglinear::util::stats::scaling_exponent;
+use loglinear::util::Rng;
+
+fn main() {
+    section("QuasiH (M^S ⊙ M^H) matvec: fast O(T log T) vs dense O(T^2)");
+    let mut fast_pts = Vec::new();
+    let mut dense_pts = Vec::new();
+    for &t in &[512usize, 1024, 2048, 4096, 8192] {
+        let mut rng = Rng::new(t as u64);
+        let alpha: Vec<f32> = (0..t).map(|_| rng.range_f32(0.85, 1.0)).collect();
+        let lambda = Mat::rand_uniform(t, fenwick::num_levels(t), 0.05, 1.0, &mut rng);
+        let q = QuasiH::new(alpha, lambda);
+        let x: Vec<f32> = (0..t).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let r = bench(&format!("quasi-fast/T={t}"), 0.3, || {
+            std::hint::black_box(q.matvec(&x));
+        });
+        fast_pts.push((t, r.secs.mean));
+        if t <= 4096 {
+            let d = q.dense();
+            let r = bench(&format!("quasi-dense/T={t}"), 0.3, || {
+                std::hint::black_box(d.matvec(&x));
+            });
+            dense_pts.push((t, r.secs.mean));
+        }
+    }
+    let pf = scaling_exponent(
+        &fast_pts.iter().map(|(t, _)| *t).collect::<Vec<_>>(),
+        &fast_pts.iter().map(|(_, s)| *s).collect::<Vec<_>>(),
+    );
+    let pd = scaling_exponent(
+        &dense_pts.iter().map(|(t, _)| *t).collect::<Vec<_>>(),
+        &dense_pts.iter().map(|(_, s)| *s).collect::<Vec<_>>(),
+    );
+    println!("\n  scaling: fast ~ T^{pf:.2} (expect ~1), dense ~ T^{pd:.2} (expect ~2)");
+
+    section("App. B.4 ablation: weak vs strong admissibility (HODLR)");
+    println!(
+        "{:>6} {:>14} {:>14} {:>8} | {:>12} {:>12}",
+        "n", "weak flops", "strong flops", "ratio", "weak us", "strong us"
+    );
+    for &n in &[128usize, 256, 512] {
+        let mut rng = Rng::new(n as u64);
+        let r: Vec<f32> = (0..n).map(|_| rng.range_f32(0.5, 1.5)).collect();
+        let c: Vec<f32> = (0..n).map(|_| rng.range_f32(0.5, 1.5)).collect();
+        let a = Mat::from_fn(n, n, |i, j| r[i] * c[j] + if i == j { 1.0 } else { 0.0 });
+        let hw = Hodlr::from_dense(&a, 16, 2, Admissibility::Weak);
+        let hs = Hodlr::from_dense(&a, 16, 2, Admissibility::Strong);
+        let x: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let tw = bench(&format!("weak/{n}"), 0.2, || {
+            std::hint::black_box(hw.matvec(&x));
+        });
+        let ts = bench(&format!("strong/{n}"), 0.2, || {
+            std::hint::black_box(hs.matvec(&x));
+        });
+        println!(
+            "{:>6} {:>14} {:>14} {:>8.2} | {:>12.2} {:>12.2}",
+            n,
+            hw.matvec_flops(),
+            hs.matvec_flops(),
+            hs.matvec_flops() as f64 / hw.matvec_flops() as f64,
+            tw.secs.mean * 1e6,
+            ts.secs.mean * 1e6,
+        );
+    }
+    println!("\n  paper: strong admissibility was ~4x slower for marginal accuracy — weak chosen.");
+}

@@ -1,0 +1,159 @@
+//! E3 — Table 1 reproduction: empirically fit the training-time and
+//! decoding time/space complexity of every model row and check each
+//! against the paper's claimed asymptotics.
+//!
+//! Method: measure runtime at geometrically spaced T, fit the log-log
+//! slope. Decode: measure per-step time and resident state at step t.
+//!
+//! Run: `cargo bench --bench table1_complexity`
+
+use loglinear::attention::{self, forward, AttnInputs, Form, Model};
+use loglinear::bench::section;
+use loglinear::state::{FenwickState, Transition};
+use loglinear::tensor::Mat;
+use loglinear::util::stats::{sample_times, scaling_exponent, Summary};
+use loglinear::util::Rng;
+
+fn main() {
+    let (dk, dv, c) = (32, 32, 32);
+    let lens = [256usize, 512, 1024, 2048, 4096];
+
+    section("Table 1: training-time scaling (fit of runtime ~ T^p)");
+    println!(
+        "{:<22} {:>10} {:>12} {:>10}",
+        "model (chunkwise)", "fit T^p", "paper", "verdict"
+    );
+    let cases: Vec<(Model, &str, f64)> = vec![
+        (Model::Softmax, "O(T^2)", 2.0),
+        (Model::Linear, "O(T)", 1.0),
+        (Model::Mamba2, "O(T)", 1.0),
+        (Model::GatedDeltaNet, "O(T)", 1.0),
+        (Model::LogLinearMamba2, "O(T log T)", 1.0), // slope ~1.0-1.3
+        (Model::LogLinearGdn, "O(T log T)", 1.0),
+    ];
+    for (model, paper, expect) in cases {
+        let mut ts = Vec::new();
+        let mut times = Vec::new();
+        for &t in &lens {
+            // keep the quadratic baseline affordable
+            if model == Model::Softmax && t > 2048 {
+                continue;
+            }
+            let mut rng = Rng::new(t as u64);
+            let x = AttnInputs::random(t, dk, dv, &mut rng);
+            let form = if model == Model::Softmax { Form::Parallel } else { Form::Chunkwise(c) };
+            let samples = sample_times(1, 3, || {
+                std::hint::black_box(forward(model, form, &x));
+            });
+            ts.push(t);
+            times.push(Summary::of(&samples).p50);
+        }
+        let p = scaling_exponent(&ts, &times);
+        // log-linear shows as slope slightly above 1; quadratic ~2
+        let ok = (p - expect).abs() < 0.45;
+        println!(
+            "{:<22} {:>10.2} {:>12} {:>10}",
+            model.name(),
+            p,
+            paper,
+            if ok { "matches" } else { "CHECK" }
+        );
+    }
+
+    section("Table 1: decoding time per step & state memory at T = 16384");
+    let t_decode = 16_384usize;
+    println!(
+        "{:<22} {:>14} {:>16} {:>12}",
+        "model", "us/step@T", "state bytes", "paper space"
+    );
+    let mut rng = Rng::new(9);
+    let x = AttnInputs::random(1024, dk, dv, &mut rng);
+
+    // softmax: KV-cache decode, measure at a few depths then extrapolate slope
+    {
+        let mut kv = attention::softmax::KvCacheDecoder::new(dk);
+        let mut step_times = Vec::new();
+        for t in 0..8192 {
+            let i = t % 1024;
+            let t0 = std::time::Instant::now();
+            kv.step(x.q.row(i), x.k.row(i), x.v.row(i));
+            if t >= 8000 {
+                step_times.push(t0.elapsed().as_secs_f64());
+            }
+        }
+        let mean = Summary::of(&step_times).p50;
+        // per-step cost is linear in t; extrapolate to 16K
+        println!(
+            "{:<22} {:>14.1} {:>16} {:>12}",
+            "softmax (KV cache)",
+            mean * 1e6 * (t_decode as f64 / 8192.0),
+            t_decode * (dk + dv) * 4,
+            "O(T)"
+        );
+    }
+    // mamba2: constant state
+    {
+        let mut s = Mat::zeros(dk, dv);
+        let times = sample_times(100, 2000, || {
+            s.scale_inplace(0.99);
+            loglinear::tensor::outer_acc(&mut s, x.k.row(0), x.v.row(0), 1.0);
+            std::hint::black_box(s.matvec_t(x.q.row(0)));
+        });
+        println!(
+            "{:<22} {:>14.1} {:>16} {:>12}",
+            "mamba2",
+            Summary::of(&times).p50 * 1e6,
+            dk * dv * 4,
+            "O(1)"
+        );
+    }
+    // log-linear: Fenwick states at depth 16K
+    {
+        let mut st = FenwickState::new(dk, dv);
+        let lambda = vec![1.0f32; 20];
+        let mut step_times = Vec::new();
+        for t in 0..t_decode {
+            let i = t % 1024;
+            let t0 = std::time::Instant::now();
+            st.step(x.q.row(i), x.k.row(i), x.v.row(i), 1.0, Transition::Decay(0.99), &lambda);
+            if t >= t_decode - 2000 {
+                step_times.push(t0.elapsed().as_secs_f64());
+            }
+        }
+        println!(
+            "{:<22} {:>14.1} {:>16} {:>12}",
+            "loglinear_mamba2",
+            Summary::of(&step_times).p50 * 1e6,
+            st.state_bytes(),
+            "O(log T)"
+        );
+    }
+    // log-linear GDN
+    {
+        let mut st = FenwickState::new(dk, dv);
+        let lambda = vec![1.0f32; 20];
+        let mut step_times = Vec::new();
+        for t in 0..t_decode {
+            let i = t % 1024;
+            let t0 = std::time::Instant::now();
+            st.step(
+                x.q.row(i),
+                x.k.row(i),
+                x.v.row(i),
+                0.8,
+                Transition::GatedHouseholder { alpha: 0.99, beta: 0.8, k: x.k.row(i) },
+                &lambda,
+            );
+            if t >= t_decode - 2000 {
+                step_times.push(t0.elapsed().as_secs_f64());
+            }
+        }
+        println!(
+            "{:<22} {:>14.1} {:>16} {:>12}",
+            "loglinear_gdn",
+            Summary::of(&step_times).p50 * 1e6,
+            st.state_bytes(),
+            "O(log T)"
+        );
+    }
+}

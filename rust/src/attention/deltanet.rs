@@ -1,0 +1,200 @@
+//! DeltaNet (Schlag et al., 2021): linear attention whose state update is
+//! the delta rule. Parallelized across sequence length via the WY/UT
+//! representation of Householder products (Yang et al., 2024b) — the
+//! `T_K(QK^T)` of the paper's Table 1.
+//!
+//! Recurrence (state `S: (d_k, d_v)`):
+//! `S_t = (I − β_t k_t k_t^T) S_{t-1} + β_t k_t v_t^T`, `o_t = S_t^T q_t`.
+
+use crate::tensor::{ops, Mat};
+
+/// Recurrent oracle. Each step applies a Householder-like transition
+/// `Φ_t = I − β_t k_t k_t^T` (rank-1 update, O(d_k d_v)).
+pub fn recurrent(q: &Mat, k: &Mat, v: &Mat, beta: &[f32]) -> Mat {
+    let (t, dk, dv) = (q.rows, q.cols, v.cols);
+    assert_eq!(beta.len(), t);
+    let mut s = Mat::zeros(dk, dv);
+    let mut out = Mat::zeros(t, dv);
+    for i in 0..t {
+        apply_householder(&mut s, k.row(i), beta[i]);
+        // S += β k v^T
+        crate::tensor::outer_acc(&mut s, k.row(i), v.row(i), beta[i]);
+        out.row_mut(i).copy_from_slice(&s.matvec_t(q.row(i)));
+    }
+    out
+}
+
+/// `S ← (I − β k k^T) S`, in place: `S -= β k (k^T S)`.
+pub fn apply_householder(s: &mut Mat, k: &[f32], beta: f32) {
+    if beta == 0.0 {
+        return;
+    }
+    let kt_s = s.matvec_t(k); // (dv)
+    let dv = s.cols;
+    for (i, &ki) in k.iter().enumerate() {
+        let scale = beta * ki;
+        if scale == 0.0 {
+            continue;
+        }
+        let row = &mut s.data[i * dv..(i + 1) * dv];
+        for (r, &x) in row.iter_mut().zip(kt_s.iter()) {
+            *r -= scale * x;
+        }
+    }
+}
+
+/// `x ← (I − β k k^T) x` for a vector (used for effective-query chains).
+pub fn apply_householder_vec(x: &mut [f32], k: &[f32], beta: f32) {
+    if beta == 0.0 {
+        return;
+    }
+    let d = crate::tensor::dot(k, x) * beta;
+    for (xi, &ki) in x.iter_mut().zip(k.iter()) {
+        *xi -= d * ki;
+    }
+}
+
+/// The UT-transform system matrix `B = I + StrictTril(diag(β) K K^T)`.
+fn ut_system(k: &Mat, beta: &[f32]) -> Mat {
+    let t = k.rows;
+    let mut b = Mat::zeros(t, t);
+    for i in 0..t {
+        *b.at_mut(i, i) = 1.0;
+        for j in 0..i {
+            *b.at_mut(i, j) = beta[i] * crate::tensor::dot(k.row(i), k.row(j));
+        }
+    }
+    b
+}
+
+/// Parallel (WY) form: solve `(I + StrictTril(diag(β) K K^T)) W = diag(β) V`
+/// for the pseudo-values `W`, then `O = tril(Q K^T) W`.
+pub fn parallel(q: &Mat, k: &Mat, v: &Mat, beta: &[f32]) -> Mat {
+    let t = q.rows;
+    let b = ut_system(k, beta);
+    let mut rhs = v.clone();
+    for i in 0..t {
+        for x in rhs.row_mut(i) {
+            *x *= beta[i];
+        }
+    }
+    let w = ops::solve_unit_lower(&b, &rhs);
+    let mut qk = q.matmul_nt(k);
+    for i in 0..t {
+        for j in i + 1..t {
+            *qk.at_mut(i, j) = 0.0;
+        }
+    }
+    qk.matmul(&w)
+}
+
+/// The explicit DeltaNet attention matrix
+/// `A^δ = tril(Q K^T) (I + StrictTril(diag(β) K K^T))^{-1} diag(β)`
+/// (the paper's `T_K(QK^T)`). Needed when a mask must be applied
+/// *elementwise* on top (Gated DeltaNet's `M^S`, log-linear's `M^H`).
+pub fn attn_matrix(q: &Mat, k: &Mat, beta: &[f32]) -> Mat {
+    let t = q.rows;
+    let b = ut_system(k, beta);
+    let mut qk = q.matmul_nt(k);
+    for i in 0..t {
+        for j in i + 1..t {
+            *qk.at_mut(i, j) = 0.0;
+        }
+    }
+    // A = qk B^{-1} diag(β)  =>  B^T (diag(1/β) A^T)' ... solve on transposes:
+    // B^T Y = qk^T, then A[t][s] = β_s Y[s][t].
+    let y = ops::solve_unit_upper(&b.transpose(), &qk.transpose());
+    Mat::from_fn(t, t, |ti, si| beta[si] * y.at(si, ti))
+}
+
+/// Chunkwise form: the gated chunk primitive with all gates = 1.
+pub fn chunkwise(q: &Mat, k: &Mat, v: &Mat, beta: &[f32], c: usize) -> Mat {
+    let alpha = vec![1.0f32; q.rows];
+    super::gated_deltanet::chunkwise(q, k, v, &alpha, beta, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttnInputs;
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn parallel_equals_recurrent() {
+        let mut rng = Rng::new(1);
+        for &t in &[1usize, 2, 9, 32, 64] {
+            let x = AttnInputs::random(t, 8, 6, &mut rng);
+            assert_close(
+                &parallel(&x.q, &x.k, &x.v, &x.beta),
+                &recurrent(&x.q, &x.k, &x.v, &x.beta),
+                1e-3,
+                1e-3,
+            );
+        }
+    }
+
+    #[test]
+    fn attn_matrix_reproduces_parallel() {
+        let mut rng = Rng::new(2);
+        let x = AttnInputs::random(24, 8, 6, &mut rng);
+        let a = attn_matrix(&x.q, &x.k, &x.beta);
+        assert_close(
+            &a.matmul(&x.v),
+            &parallel(&x.q, &x.k, &x.v, &x.beta),
+            1e-3,
+            1e-3,
+        );
+        // A is lower-triangular.
+        for i in 0..24 {
+            for j in i + 1..24 {
+                assert_eq!(a.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn beta_one_normalized_keys_erase_then_write() {
+        // With β=1 and unit keys, writing (k, v) then querying with q = k
+        // returns exactly v (the delta rule replaces the stored value).
+        let dk = 4;
+        let mut k = Mat::zeros(2, dk);
+        *k.at_mut(0, 0) = 1.0;
+        *k.at_mut(1, 0) = 1.0; // same key twice
+        let mut v = Mat::zeros(2, 2);
+        *v.at_mut(0, 0) = 5.0;
+        *v.at_mut(1, 1) = 7.0; // overwrite with different value
+        let q = k.clone();
+        let o = recurrent(&q, &k, &v, &[1.0, 1.0]);
+        // At t=1 the state for key k must hold v_1, not v_0 + v_1.
+        assert!((o.at(1, 0) - 0.0).abs() < 1e-5);
+        assert!((o.at(1, 1) - 7.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn householder_is_contraction_for_unit_keys() {
+        let mut rng = Rng::new(3);
+        let mut s = Mat::randn(8, 8, 1.0, &mut rng);
+        let norm0 = s.fro_norm();
+        let mut k: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let n = crate::tensor::ops::l2_norm(&k);
+        for x in k.iter_mut() {
+            *x /= n;
+        }
+        apply_householder(&mut s, &k, 0.7);
+        assert!(s.fro_norm() <= norm0 * (1.0 + 1e-5));
+    }
+
+    #[test]
+    fn vec_and_mat_householder_agree() {
+        let mut rng = Rng::new(4);
+        let k: Vec<f32> = (0..6).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut s = Mat::randn(6, 1, 1.0, &mut rng);
+        let mut x: Vec<f32> = (0..6).map(|i| s.at(i, 0)).collect();
+        apply_householder(&mut s, &k, 0.5);
+        apply_householder_vec(&mut x, &k, 0.5);
+        for i in 0..6 {
+            assert!((s.at(i, 0) - x[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Gated DeltaNet (Yang et al., 2024a): the delta rule composed with a
+//! data-dependent scalar decay gate.
+//!
+//! Recurrence: `S_t = α_t (I − β_t k_t k_t^T) S_{t-1} + β_t k_t v_t^T`.
+//!
+//! Because the gates are scalars they commute with the Householder chain,
+//! so the parallel form is exactly the paper's
+//! `O = (T_K(QK^T) ⊙ M^S) V`: the ungated DeltaNet attention matrix
+//! masked elementwise by the 1-semiseparable gate mask.
+//!
+//! The chunkwise form uses the numerically-stable scaled UT transform
+//! (all intermediate ratios `G_t/G_s ≤ 1` for `s < t`): per chunk,
+//! solve `(I + StrictTril(M)) Ŵ = diag(β)(V − diag(G) K S_in)` with
+//! `M[t][s] = β_t (k_t·k_s) G_t/G_s`, then
+//! `O = diag(G) Q S_in + (tril(QK^T) ⊙ Gratio) Ŵ` and
+//! `S_out = G_C S_in + Σ_s (G_C/G_s) k_s ŵ_s^T`.
+
+use crate::hmatrix::sss::SssMask;
+use crate::tensor::{ops, Mat};
+
+use super::deltanet;
+
+/// Recurrent oracle.
+pub fn recurrent(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], beta: &[f32]) -> Mat {
+    let (t, dk, dv) = (q.rows, q.cols, v.cols);
+    assert_eq!(alpha.len(), t);
+    assert_eq!(beta.len(), t);
+    let mut s = Mat::zeros(dk, dv);
+    let mut out = Mat::zeros(t, dv);
+    for i in 0..t {
+        deltanet::apply_householder(&mut s, k.row(i), beta[i]);
+        s.scale_inplace(alpha[i]);
+        crate::tensor::outer_acc(&mut s, k.row(i), v.row(i), beta[i]);
+        out.row_mut(i).copy_from_slice(&s.matvec_t(q.row(i)));
+    }
+    out
+}
+
+/// Parallel form: `O = (A^δ ⊙ M^S) V` with `A^δ` the DeltaNet attention
+/// matrix — scalar gates factor out of the Householder product.
+pub fn parallel(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], beta: &[f32]) -> Mat {
+    let a = deltanet::attn_matrix(q, k, beta);
+    let p = a.hadamard(&SssMask::new(alpha).dense());
+    p.matmul(v)
+}
+
+/// Result of running one chunk: per-position outputs plus outgoing state.
+pub struct ChunkOut {
+    pub o: Mat,
+    pub s_out: Mat,
+}
+
+/// The gated-delta chunk primitive (stable scaled UT transform).
+///
+/// Processes positions `[start, end)` given the state at chunk entry
+/// (covering all transitions through `start-1`). Returns the chunk's
+/// outputs and the state at chunk exit.
+pub fn gdn_chunk(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    alpha: &[f32],
+    beta: &[f32],
+    start: usize,
+    end: usize,
+    s_in: &Mat,
+) -> ChunkOut {
+    let len = end - start;
+    let dv = v.cols;
+    // G[i] = Π_{j=start..start+i} α_j  (decay through position i, local).
+    let mut g = vec![0.0f32; len];
+    let mut acc = 1.0f64;
+    for i in 0..len {
+        acc *= alpha[start + i] as f64;
+        g[i] = acc as f32;
+    }
+
+    // System matrix M (strict lower) with entries β_t (k_t·k_s) G_t/G_s.
+    let mut sys = Mat::zeros(len, len);
+    for i in 0..len {
+        *sys.at_mut(i, i) = 1.0;
+        for j in 0..i {
+            *sys.at_mut(i, j) = beta[start + i]
+                * crate::tensor::dot(k.row(start + i), k.row(start + j))
+                * (g[i] / g[j]);
+        }
+    }
+
+    // RHS = diag(β) (V − diag(G) K S_in)
+    let mut rhs = Mat::zeros(len, dv);
+    for i in 0..len {
+        let ks = s_in.matvec_t(k.row(start + i)); // S_in^T k_i : (dv)
+        for j in 0..dv {
+            *rhs.at_mut(i, j) = beta[start + i] * (v.at(start + i, j) - g[i] * ks[j]);
+        }
+    }
+    let w_hat = ops::solve_unit_lower(&sys, &rhs);
+
+    // Outputs: o_t = G_t (S_in^T q_t) + Σ_{s≤t} (q_t·k_s)(G_t/G_s) ŵ_s
+    let mut o = Mat::zeros(len, dv);
+    for i in 0..len {
+        let qi = q.row(start + i);
+        let base = s_in.matvec_t(qi);
+        let orow = o.row_mut(i);
+        for j in 0..dv {
+            orow[j] = g[i] * base[j];
+        }
+        for s in 0..=i {
+            let w = crate::tensor::dot(qi, k.row(start + s)) * (g[i] / g[s]);
+            for (dst, &x) in orow.iter_mut().zip(w_hat.row(s)) {
+                *dst += w * x;
+            }
+        }
+    }
+
+    // S_out = G_C S_in + Σ_s (G_C/G_s) k_s ŵ_s^T
+    let g_c = g[len - 1];
+    let mut s_out = s_in.scale(g_c);
+    for s in 0..len {
+        let scale = g_c / g[s];
+        let ks = k.row(start + s);
+        for (i, &ki) in ks.iter().enumerate() {
+            let c = scale * ki;
+            if c == 0.0 {
+                continue;
+            }
+            let row = &mut s_out.data[i * dv..(i + 1) * dv];
+            for (r, &w) in row.iter_mut().zip(w_hat.row(s)) {
+                *r += c * w;
+            }
+        }
+    }
+    ChunkOut { o, s_out }
+}
+
+/// Chunkwise Gated DeltaNet.
+pub fn chunkwise(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], beta: &[f32], c: usize) -> Mat {
+    assert!(c >= 1);
+    let (t, dk, dv) = (q.rows, q.cols, v.cols);
+    let mut out = Mat::zeros(t, dv);
+    let mut state = Mat::zeros(dk, dv);
+    let mut start = 0;
+    while start < t {
+        let end = (start + c).min(t);
+        let res = gdn_chunk(q, k, v, alpha, beta, start, end, &state);
+        for i in 0..end - start {
+            out.row_mut(start + i).copy_from_slice(res.o.row(i));
+        }
+        state = res.s_out;
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttnInputs;
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn parallel_equals_recurrent() {
+        let mut rng = Rng::new(1);
+        for &t in &[1usize, 2, 9, 32, 64] {
+            let x = AttnInputs::random(t, 8, 6, &mut rng);
+            assert_close(
+                &parallel(&x.q, &x.k, &x.v, &x.alpha, &x.beta),
+                &recurrent(&x.q, &x.k, &x.v, &x.alpha, &x.beta),
+                1e-3,
+                1e-3,
+            );
+        }
+    }
+
+    #[test]
+    fn chunkwise_equals_recurrent() {
+        let mut rng = Rng::new(2);
+        let x = AttnInputs::random(70, 8, 6, &mut rng);
+        let oracle = recurrent(&x.q, &x.k, &x.v, &x.alpha, &x.beta);
+        for &c in &[1usize, 4, 16, 70, 128] {
+            assert_close(
+                &chunkwise(&x.q, &x.k, &x.v, &x.alpha, &x.beta, c),
+                &oracle,
+                2e-3,
+                2e-3,
+            );
+        }
+    }
+
+    #[test]
+    fn gates_one_reduces_to_deltanet() {
+        let mut rng = Rng::new(3);
+        let t = 40;
+        let x = AttnInputs::random(t, 8, 8, &mut rng);
+        let ones = vec![1.0f32; t];
+        assert_close(
+            &recurrent(&x.q, &x.k, &x.v, &ones, &x.beta),
+            &deltanet::recurrent(&x.q, &x.k, &x.v, &x.beta),
+            1e-5,
+            1e-5,
+        );
+    }
+
+    #[test]
+    fn beta_zero_reduces_to_pure_decay_of_nothing() {
+        // β = 0: nothing is ever written; outputs are zero.
+        let mut rng = Rng::new(4);
+        let t = 16;
+        let x = AttnInputs::random(t, 8, 8, &mut rng);
+        let o = recurrent(&x.q, &x.k, &x.v, &x.alpha, &vec![0.0; t]);
+        assert!(o.fro_norm() < 1e-7);
+    }
+
+    #[test]
+    fn chunk_primitive_composes() {
+        // Running [0,16) as one chunk == running [0,8) then [8,16).
+        let mut rng = Rng::new(5);
+        let x = AttnInputs::random(16, 6, 6, &mut rng);
+        let s0 = Mat::zeros(6, 6);
+        let full = gdn_chunk(&x.q, &x.k, &x.v, &x.alpha, &x.beta, 0, 16, &s0);
+        let first = gdn_chunk(&x.q, &x.k, &x.v, &x.alpha, &x.beta, 0, 8, &s0);
+        let second = gdn_chunk(&x.q, &x.k, &x.v, &x.alpha, &x.beta, 8, 16, &first.s_out);
+        assert_close(&second.s_out, &full.s_out, 1e-3, 1e-3);
+        for i in 0..8 {
+            for j in 0..6 {
+                assert!((full.o.at(i + 8, j) - second.o.at(i, j)).abs() < 1e-3);
+            }
+        }
+    }
+}

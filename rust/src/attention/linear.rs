@@ -1,0 +1,116 @@
+//! Vanilla (ungated) linear attention (Katharopoulos et al., 2020), in the
+//! three algorithmic forms of the paper's §2. No feature map, no
+//! normalizer, matching the paper's working definition (footnote 4).
+
+use crate::tensor::{outer_acc, Mat};
+
+/// Recurrent form: `S_t = S_{t-1} + k_t v_t^T`, `o_t = S_t^T q_t`.
+/// Linear time, constant memory — the oracle.
+pub fn recurrent(q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    let (t, dk, dv) = (q.rows, q.cols, v.cols);
+    let mut s = Mat::zeros(dk, dv);
+    let mut out = Mat::zeros(t, dv);
+    for i in 0..t {
+        outer_acc(&mut s, k.row(i), v.row(i), 1.0);
+        let o = s.matvec_t(q.row(i));
+        out.row_mut(i).copy_from_slice(&o);
+    }
+    out
+}
+
+/// Parallel (masked) form: `O = (Q K^T ⊙ L) V` with the all-ones causal
+/// mask `L`. Quadratic compute; used for training-style parallelism.
+pub fn parallel(q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    let t = q.rows;
+    let mut p = q.matmul_nt(k);
+    for i in 0..t {
+        for j in i + 1..t {
+            *p.at_mut(i, j) = 0.0;
+        }
+    }
+    p.matmul(v)
+}
+
+/// Chunkwise form: intra-chunk quadratic + inter-chunk state passing
+/// (the `O(T)` training algorithm the paper's Alg. 1 generalizes).
+pub fn chunkwise(q: &Mat, k: &Mat, v: &Mat, c: usize) -> Mat {
+    assert!(c >= 1);
+    let (t, dk, dv) = (q.rows, q.cols, v.cols);
+    let mut out = Mat::zeros(t, dv);
+    let mut state = Mat::zeros(dk, dv); // state entering the current chunk
+    let mut chunk_start = 0;
+    while chunk_start < t {
+        let chunk_end = (chunk_start + c).min(t);
+        // Inter-chunk: o_t += state^T q_t  (state frozen at chunk entry).
+        for i in chunk_start..chunk_end {
+            let o = state.matvec_t(q.row(i));
+            out.row_mut(i).copy_from_slice(&o);
+        }
+        // Intra-chunk: (Q_c K_c^T ⊙ L) V_c, dense within the chunk.
+        for i in chunk_start..chunk_end {
+            let oi = {
+                let mut acc = vec![0.0f32; dv];
+                for j in chunk_start..=i {
+                    let w = crate::tensor::dot(q.row(i), k.row(j));
+                    for (a, &vv) in acc.iter_mut().zip(v.row(j)) {
+                        *a += w * vv;
+                    }
+                }
+                acc
+            };
+            for (o, a) in out.row_mut(i).iter_mut().zip(oi) {
+                *o += a;
+            }
+        }
+        // State update: fold this chunk's keys/values in.
+        for i in chunk_start..chunk_end {
+            outer_acc(&mut state, k.row(i), v.row(i), 1.0);
+        }
+        chunk_start = chunk_end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttnInputs;
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn parallel_equals_recurrent() {
+        let mut rng = Rng::new(1);
+        for &t in &[1usize, 2, 17, 64] {
+            let x = AttnInputs::random(t, 8, 6, &mut rng);
+            assert_close(
+                &parallel(&x.q, &x.k, &x.v),
+                &recurrent(&x.q, &x.k, &x.v),
+                1e-4,
+                1e-4,
+            );
+        }
+    }
+
+    #[test]
+    fn chunkwise_equals_recurrent_various_chunks() {
+        let mut rng = Rng::new(2);
+        let x = AttnInputs::random(50, 8, 6, &mut rng);
+        let oracle = recurrent(&x.q, &x.k, &x.v);
+        for &c in &[1usize, 3, 8, 16, 50, 64] {
+            assert_close(&chunkwise(&x.q, &x.k, &x.v, c), &oracle, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn single_token() {
+        let mut rng = Rng::new(3);
+        let x = AttnInputs::random(1, 4, 4, &mut rng);
+        let o = recurrent(&x.q, &x.k, &x.v);
+        // o_0 = (q_0 . k_0) v_0
+        let w = crate::tensor::dot(x.q.row(0), x.k.row(0));
+        for j in 0..4 {
+            assert!((o.at(0, j) - w * x.v.at(0, j)).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Shared machinery for log-linear attention (paper §3):
+//!
+//! - [`parallel_from_a`]: the generic parallel form
+//!   `O = (A ⊙ M^S ⊙ M^H) V` for any interaction matrix `A` (Eq. 4 / §3.4)
+//!   — `M^S ⊙ M^H` *is* [`crate::hmatrix::QuasiH`].
+//! - [`ChunkFenwick`]: the chunk-granularity Fenwick state engine at the
+//!   heart of the chunkwise training algorithm (Alg. 1). It is the §3.2
+//!   recurrence lifted from tokens to chunks: before chunk `z`, buckets
+//!   `0..=lssb(z)` merge one level up; after chunk `z`, all live states
+//!   pass through the chunk's transition and the fresh chunk state enters
+//!   at level 0. Inter-chunk levels map to token levels as
+//!   `token_level = log2(C) + chunk_level`.
+//!
+//! Both log-linear instantiations (Mamba-2 and Gated DeltaNet) drive this
+//! engine with their own transitions (scalar decay vs. gated Householder
+//! chain), which is exactly the paper's claim that any linear-attention
+//! model with an efficient chunkwise primitive can be "lifted".
+
+use crate::fenwick;
+use crate::hmatrix::QuasiH;
+use crate::tensor::Mat;
+
+/// Generic parallel form: `O = (A ⊙ M^S ⊙ M^H) V`.
+///
+/// `a` must be the model's (lower-triangular) interaction matrix:
+/// `Q K^T` for Mamba-2, `T_K(Q K^T)` for Gated DeltaNet.
+pub fn parallel_from_a(a: &Mat, alpha: &[f32], lambda: &Mat, v: &Mat) -> Mat {
+    let quasi = QuasiH::new(alpha.to_vec(), lambda.clone()).dense();
+    a.hadamard(&quasi).matmul(v)
+}
+
+/// Chunk-granularity Fenwick state set. `levels[m]` holds the bucket state
+/// for chunk-level `m >= 1` (a `(d_k, d_v)` matrix summarizing
+/// `2^(m-1)` chunks); `level0` holds the most recent chunk's state.
+#[derive(Debug, Clone)]
+pub struct ChunkFenwick {
+    level0: Option<Mat>,
+    levels: Vec<Option<Mat>>,
+}
+
+impl Default for ChunkFenwick {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ChunkFenwick {
+    pub fn new() -> ChunkFenwick {
+        ChunkFenwick { level0: None, levels: Vec::new() }
+    }
+
+    /// Merge step before processing chunk `z` (no-op for `z = 0`):
+    /// levels `0..=lssb(z)` sum into level `lssb(z)+1`.
+    pub fn advance(&mut self, z: usize) {
+        if z == 0 {
+            return;
+        }
+        let l = fenwick::lssb(z) as usize;
+        let mut merged: Option<Mat> = self.level0.take();
+        for m in 1..=l {
+            if let Some(s) = self.levels.get_mut(m - 1).and_then(|x| x.take()) {
+                match merged {
+                    None => merged = Some(s),
+                    Some(ref mut acc) => acc.axpy(1.0, &s),
+                }
+            }
+        }
+        if let Some(s) = merged {
+            let idx = l; // levels[idx] = chunk-level idx+1 = lssb+1
+            if self.levels.len() <= idx {
+                self.levels.resize(idx + 1, None);
+            }
+            debug_assert!(self.levels[idx].is_none(), "Fenwick invariant violated");
+            self.levels[idx] = Some(s);
+        }
+    }
+
+    /// Active (chunk_level >= 1, state) pairs for the current query chunk.
+    pub fn active(&self) -> impl Iterator<Item = (usize, &Mat)> {
+        self.levels
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|m| (i + 1, m)))
+    }
+
+    /// Number of live states (≈ popcount of the chunk index, App. B.4).
+    pub fn live_states(&self) -> usize {
+        self.levels.iter().filter(|s| s.is_some()).count() + usize::from(self.level0.is_some())
+    }
+
+    /// Apply the current chunk's transition to every live state.
+    pub fn apply_transition(&mut self, mut f: impl FnMut(&mut Mat)) {
+        if let Some(s) = self.level0.as_mut() {
+            f(s);
+        }
+        for s in self.levels.iter_mut().flatten() {
+            f(s);
+        }
+    }
+
+    /// Install the freshly-computed chunk state at level 0.
+    pub fn set_level0(&mut self, s: Mat) {
+        debug_assert!(self.level0.is_none(), "level0 must be merged before rewrite");
+        self.level0 = Some(s);
+    }
+}
+
+/// Intra-chunk λ mask: `Λ[i][j] = lambda[start+i][level_of(i, j)]` for
+/// `j <= i` within a chunk (chunk-local offsets equal absolute levels for
+/// intra-chunk pairs — see `fenwick::tests::intra_chunk_levels_are_local`).
+pub fn local_lambda_mask(lambda: &Mat, start: usize, len: usize) -> Mat {
+    Mat::from_fn(len, len, |i, j| {
+        if j > i {
+            0.0
+        } else {
+            lambda.at(start + i, fenwick::level_of(i, j))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn engine_replays_fenwick_bucket_sums() {
+        // Drive the engine with identity transitions and rank-1 "states"
+        // holding one-hot chunk markers; after advance(z) the active
+        // buckets must match fenwick::buckets(z) exactly.
+        let zmax = 64;
+        let mut eng = ChunkFenwick::new();
+        for z in 0..zmax {
+            eng.advance(z);
+            let bs = crate::fenwick::buckets(z);
+            // every active level-(m>=1) state sums the chunk markers of
+            // its bucket
+            for (m, s) in eng.active() {
+                let b = bs
+                    .iter()
+                    .find(|b| b.level == m)
+                    .unwrap_or_else(|| panic!("z={z}: engine level {m} has no bucket"));
+                // state = sum of one-hots of chunks in bucket
+                for c in 0..zmax {
+                    let expect = if b.contains(c) { 1.0 } else { 0.0 };
+                    assert_eq!(s.at(0, c), expect, "z={z} level={m} chunk={c}");
+                }
+            }
+            // count matches active bucket count (minus sentinel)
+            let nonzero_buckets = bs.len() - 1;
+            assert_eq!(
+                eng.active().count(),
+                nonzero_buckets,
+                "z={z}"
+            );
+            // write marker for chunk z
+            let mut m = Mat::zeros(1, zmax);
+            *m.at_mut(0, z) = 1.0;
+            eng.set_level0(m);
+        }
+    }
+
+    #[test]
+    fn transitions_touch_all_live_states() {
+        let mut eng = ChunkFenwick::new();
+        for z in 0..8 {
+            eng.advance(z);
+            eng.apply_transition(|s| s.scale_inplace(2.0));
+            eng.set_level0(Mat::from_vec(1, 1, vec![1.0]));
+        }
+        // After 8 chunks: states hold sums of powers of two — just check
+        // total equals sum over chunks of 2^(age) where age = 7 - z.
+        eng.advance(8);
+        let total: f32 = eng.active().map(|(_, s)| s.at(0, 0)).sum();
+        let expect: f32 = (0..8).map(|z| 2.0f32.powi(7 - z)).sum();
+        assert!((total - expect).abs() < 1e-4);
+    }
+
+    #[test]
+    fn local_lambda_mask_levels() {
+        let mut rng = Rng::new(1);
+        let lambda = Mat::rand_uniform(32, 6, 0.0, 1.0, &mut rng);
+        let m = local_lambda_mask(&lambda, 16, 8);
+        for i in 0..8 {
+            for j in 0..8 {
+                if j > i {
+                    assert_eq!(m.at(i, j), 0.0);
+                } else {
+                    assert_eq!(m.at(i, j), lambda.at(16 + i, crate::fenwick::level_of(i, j)));
+                }
+            }
+        }
+    }
+}

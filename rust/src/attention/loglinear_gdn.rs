@@ -1,0 +1,261 @@
+//! Log-Linear Gated DeltaNet (paper §3.4): the delta rule + scalar gate,
+//! lifted with the hierarchical mask,
+//! `O = (T_K(QK^T) ⊙ M^S ⊙ M^H) V`.
+//!
+//! The recurrent form maintains `O(log T)` states that *all* evolve under
+//! the same gated Householder transition `α_t (I − β_t k_t k_t^T)` —
+//! transitions distribute over the bucket sum, which is why the Fenwick
+//! merge stays valid for matrix-valued (identity-plus-low-rank)
+//! transitions (App. A's `H`-tensor view).
+//!
+//! The chunkwise form drives the shared [`ChunkFenwick`] engine with the
+//! Householder-chain chunk transition and uses the explicit local
+//! attention matrix for the intra-chunk stage (the paper notes intra-chunk
+//! needs bespoke treatment; masking by `Λ` must happen on the *materialized*
+//! local `P`, since the UT solve mixes value rows otherwise).
+
+use crate::fenwick;
+use crate::tensor::{ops, outer_acc, Mat};
+
+use super::deltanet::{apply_householder, apply_householder_vec, attn_matrix};
+use super::loglinear::{local_lambda_mask, parallel_from_a, ChunkFenwick};
+
+/// Token-granularity Fenwick recurrence (decode form).
+pub fn recurrent(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], beta: &[f32], lambda: &Mat) -> Mat {
+    let (t_len, dk, dv) = (q.rows, q.cols, v.cols);
+    let mut out = Mat::zeros(t_len, dv);
+    let nl = fenwick::num_levels(t_len.max(1));
+    let mut levels: Vec<Option<Mat>> = vec![None; nl + 1];
+    for t in 0..t_len {
+        // merge
+        if t > 0 {
+            let l = fenwick::lssb(t) as usize;
+            let mut merged: Option<Mat> = None;
+            for s in levels.iter_mut().take(l + 1) {
+                if let Some(m) = s.take() {
+                    match merged {
+                        None => merged = Some(m),
+                        Some(ref mut acc) => acc.axpy(1.0, &m),
+                    }
+                }
+            }
+            if let Some(m) = merged {
+                debug_assert!(levels[l + 1].is_none());
+                levels[l + 1] = Some(m);
+            }
+        }
+        // transition all carried states: S ← α_t (I − β_t k_t k_t^T) S
+        for s in levels.iter_mut().flatten() {
+            apply_householder(s, k.row(t), beta[t]);
+            s.scale_inplace(alpha[t]);
+        }
+        // sentinel: β_t k_t v_t^T
+        let mut s0 = Mat::zeros(dk, dv);
+        outer_acc(&mut s0, k.row(t), v.row(t), beta[t]);
+        levels[0] = Some(s0);
+        // read
+        let orow = out.row_mut(t);
+        for (l, s) in levels.iter().enumerate() {
+            if let Some(s) = s {
+                let lam = lambda.at(t, l);
+                if lam == 0.0 {
+                    continue;
+                }
+                for (dst, x) in orow.iter_mut().zip(s.matvec_t(q.row(t))) {
+                    *dst += lam * x;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parallel form: `O = (A^δ ⊙ QuasiH(α, λ)) V`.
+pub fn parallel(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], beta: &[f32], lambda: &Mat) -> Mat {
+    let a = attn_matrix(q, k, beta);
+    parallel_from_a(&a, alpha, lambda, v)
+}
+
+/// Materialized local gated-delta attention matrix for one chunk:
+/// `P = (tril(Q K^T) ⊙ Gratio) (I + StrictTril(M))^{-1} diag(β)` with
+/// `M[i][j] = β_i (k_i·k_j) G_i/G_j`. O(C^3) per chunk — the bespoke
+/// intra-chunk stage.
+fn local_p_matrix(
+    q: &Mat,
+    k: &Mat,
+    alpha: &[f32],
+    beta: &[f32],
+    start: usize,
+    len: usize,
+) -> (Mat, Vec<f32>) {
+    // local decays
+    let mut g = vec![0.0f32; len];
+    let mut acc = 1.0f64;
+    for i in 0..len {
+        acc *= alpha[start + i] as f64;
+        g[i] = acc as f32;
+    }
+    let mut sys = Mat::zeros(len, len);
+    for i in 0..len {
+        *sys.at_mut(i, i) = 1.0;
+        for j in 0..i {
+            *sys.at_mut(i, j) = beta[start + i]
+                * crate::tensor::dot(k.row(start + i), k.row(start + j))
+                * (g[i] / g[j]);
+        }
+    }
+    let mut qk = Mat::zeros(len, len);
+    for i in 0..len {
+        for j in 0..=i {
+            *qk.at_mut(i, j) =
+                crate::tensor::dot(q.row(start + i), k.row(start + j)) * (g[i] / g[j]);
+        }
+    }
+    // P = qk sys^{-1} diag(β): solve sys^T Y = qk^T, P[i][j] = β_j Y[j][i].
+    let y = ops::solve_unit_upper(&sys.transpose(), &qk.transpose());
+    let p = Mat::from_fn(len, len, |i, j| beta[start + j] * y.at(j, i));
+    (p, g)
+}
+
+/// Chunkwise form (Algorithm 1 with Householder-chain transitions).
+pub fn chunkwise(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    alpha: &[f32],
+    beta: &[f32],
+    lambda: &Mat,
+    c: usize,
+) -> Mat {
+    assert!(c >= 1 && c.is_power_of_two(), "chunk size must be a power of two");
+    let (t_len, dk, dv) = (q.rows, q.cols, v.cols);
+    let lc = c.trailing_zeros() as usize;
+    let mut out = Mat::zeros(t_len, dv);
+    let mut eng = ChunkFenwick::new();
+    let mut z = 0usize;
+    let mut start = 0usize;
+    while start < t_len {
+        let end = (start + c).min(t_len);
+        let len = end - start;
+        eng.advance(z);
+
+        // ---- intra-chunk: (P_local ⊙ Λ_local) V_local ----
+        let (p_loc, g) = local_p_matrix(q, k, alpha, beta, start, len);
+        let lam_loc = local_lambda_mask(lambda, start, len);
+        let p_masked = p_loc.hadamard(&lam_loc);
+        for i in 0..len {
+            let mut acc_row = vec![0.0f32; dv];
+            for j in 0..=i {
+                let w = p_masked.at(i, j);
+                if w == 0.0 {
+                    continue;
+                }
+                for (a, &vv) in acc_row.iter_mut().zip(v.row(start + j)) {
+                    *a += w * vv;
+                }
+            }
+            out.row_mut(start + i).copy_from_slice(&acc_row);
+        }
+
+        // ---- inter-chunk reads with effective queries ----
+        // q̂_t = G_t · Φ_start ··· Φ_t q_t (apply Φ from t down to start).
+        for i in 0..len {
+            let mut qe = q.row(start + i).to_vec();
+            for j in (0..=i).rev() {
+                apply_householder_vec(&mut qe, k.row(start + j), beta[start + j]);
+            }
+            for x in qe.iter_mut() {
+                *x *= g[i];
+            }
+            let orow = out.row_mut(start + i);
+            for (m, s) in eng.active() {
+                let lam = lambda.at(start + i, lc + m);
+                if lam == 0.0 {
+                    continue;
+                }
+                for (dst, x) in orow.iter_mut().zip(s.matvec_t(&qe)) {
+                    *dst += lam * x;
+                }
+            }
+        }
+
+        // ---- chunk state write (own contribution, S_in = 0) ----
+        let res = super::gated_deltanet::gdn_chunk(
+            q, k, v, alpha, beta, start, end, &Mat::zeros(dk, dv),
+        );
+
+        // ---- transition carried states through this chunk ----
+        let chunk_decay = g[len - 1];
+        eng.apply_transition(|s| {
+            for j in 0..len {
+                apply_householder(s, k.row(start + j), beta[start + j]);
+            }
+            s.scale_inplace(chunk_decay);
+        });
+        eng.set_level0(res.s_out);
+
+        z += 1;
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttnInputs;
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn parallel_equals_recurrent() {
+        let mut rng = Rng::new(1);
+        for &t in &[1usize, 2, 7, 16, 33, 64] {
+            let x = AttnInputs::random(t, 8, 6, &mut rng);
+            assert_close(
+                &parallel(&x.q, &x.k, &x.v, &x.alpha, &x.beta, &x.lambda),
+                &recurrent(&x.q, &x.k, &x.v, &x.alpha, &x.beta, &x.lambda),
+                1e-3,
+                1e-3,
+            );
+        }
+    }
+
+    #[test]
+    fn chunkwise_equals_recurrent() {
+        let mut rng = Rng::new(2);
+        for &(t, c) in &[(64usize, 8usize), (100, 16), (48, 4), (16, 16), (24, 1)] {
+            let x = AttnInputs::random(t, 8, 6, &mut rng);
+            let oracle = recurrent(&x.q, &x.k, &x.v, &x.alpha, &x.beta, &x.lambda);
+            assert_close(
+                &chunkwise(&x.q, &x.k, &x.v, &x.alpha, &x.beta, &x.lambda, c),
+                &oracle,
+                2e-3,
+                2e-3,
+            );
+        }
+    }
+
+    #[test]
+    fn local_p_matches_global_attn_matrix_first_chunk() {
+        // For the first chunk (no history), the local P must equal the
+        // global gated attention matrix restricted to the chunk.
+        let mut rng = Rng::new(3);
+        let t = 16;
+        let x = AttnInputs::random(t, 6, 6, &mut rng);
+        let (p, _) = local_p_matrix(&x.q, &x.k, &x.alpha, &x.beta, 0, 8);
+        let a = attn_matrix(&x.q, &x.k, &x.beta);
+        let sss = crate::hmatrix::sss::SssMask::new(&x.alpha).dense();
+        for i in 0..8 {
+            for j in 0..=i {
+                let expect = a.at(i, j) * sss.at(i, j);
+                assert!(
+                    (p.at(i, j) - expect).abs() < 1e-4,
+                    "({i},{j}): {} vs {}",
+                    p.at(i, j),
+                    expect
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! Log-Linear Mamba-2 (paper §3.4): Mamba-2's scalar-gated linear
+//! attention lifted with the hierarchical mask,
+//! `O = (Q K^T ⊙ M^S ⊙ M^H) V`.
+//!
+//! Three forms:
+//! - [`recurrent`]: the §3.2 Fenwick recurrence over `O(log T)` states.
+//! - [`parallel`]: dense masked form via [`crate::hmatrix::QuasiH`].
+//! - [`chunkwise`]: Algorithm 1 — intra-chunk dense H-masked attention +
+//!   `O(log(T/C))`-level inter-chunk state passing (fused, one pass).
+//! - [`chunkwise_naive`]: the "Log-Linear Mamba-2 (naive)" baseline of
+//!   Fig. 4 — one full Mamba-2-style masked state-passing sweep *per
+//!   level*, for the E12 level-fusion ablation.
+
+use crate::fenwick;
+use crate::tensor::{outer_acc, Mat};
+
+use super::loglinear::{local_lambda_mask, parallel_from_a, ChunkFenwick};
+
+/// Token-granularity Fenwick recurrence (decode form). `O(log t)` live
+/// states; per step: merge, decay, write sentinel, read with λ.
+pub fn recurrent(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat) -> Mat {
+    let (t_len, dk, dv) = (q.rows, q.cols, v.cols);
+    let mut out = Mat::zeros(t_len, dv);
+    // levels[0] = sentinel state, levels[m>=1] = bucket states.
+    let nl = fenwick::num_levels(t_len.max(1));
+    let mut levels: Vec<Option<Mat>> = vec![None; nl + 1];
+    for t in 0..t_len {
+        // 1) merge: buckets 0..=lssb(t) promote into level lssb(t)+1.
+        if t > 0 {
+            let l = fenwick::lssb(t) as usize;
+            let mut merged: Option<Mat> = None;
+            for s in levels.iter_mut().take(l + 1) {
+                if let Some(m) = s.take() {
+                    match merged {
+                        None => merged = Some(m),
+                        Some(ref mut acc) => acc.axpy(1.0, &m),
+                    }
+                }
+            }
+            if let Some(m) = merged {
+                debug_assert!(levels[l + 1].is_none());
+                levels[l + 1] = Some(m);
+            }
+        }
+        // 2) decay all carried states by α_t.
+        for s in levels.iter_mut().flatten() {
+            s.scale_inplace(alpha[t]);
+        }
+        // 3) sentinel: fresh (k_t, v_t), no decay.
+        let mut s0 = Mat::zeros(dk, dv);
+        outer_acc(&mut s0, k.row(t), v.row(t), 1.0);
+        levels[0] = Some(s0);
+        // 4) read: o_t = Σ_ℓ λ_t^(ℓ) S^(ℓ)T q_t.
+        let orow = out.row_mut(t);
+        for (l, s) in levels.iter().enumerate() {
+            if let Some(s) = s {
+                let lam = lambda.at(t, l);
+                if lam == 0.0 {
+                    continue;
+                }
+                for (dst, x) in orow.iter_mut().zip(s.matvec_t(q.row(t))) {
+                    *dst += lam * x;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parallel form: `O = (Q K^T ⊙ QuasiH(α, λ)) V`.
+pub fn parallel(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat) -> Mat {
+    let mut a = q.matmul_nt(k);
+    let t = q.rows;
+    for i in 0..t {
+        for j in i + 1..t {
+            *a.at_mut(i, j) = 0.0;
+        }
+    }
+    parallel_from_a(&a, alpha, lambda, v)
+}
+
+/// Algorithm 1, fused: one pass over chunks; per chunk the engine exposes
+/// all `O(log(T/C))` level states at once so every level's contribution is
+/// accumulated from a single read of Q (the level-fusion optimization of
+/// §3.5 — contrast [`chunkwise_naive`]).
+pub fn chunkwise(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat, c: usize) -> Mat {
+    assert!(c >= 1 && c.is_power_of_two(), "chunk size must be a power of two");
+    let (t_len, dk, dv) = (q.rows, q.cols, v.cols);
+    let lc = c.trailing_zeros() as usize; // log2(C): token level = lc + chunk level
+    let mut out = Mat::zeros(t_len, dv);
+    let mut eng = ChunkFenwick::new();
+    let mut z = 0usize;
+    let mut start = 0usize;
+    while start < t_len {
+        let end = (start + c).min(t_len);
+        let len = end - start;
+        eng.advance(z);
+
+        // Local cumulative decay through position i.
+        let mut dec_in = vec![0.0f32; len];
+        let mut acc = 1.0f64;
+        for i in 0..len {
+            acc *= alpha[start + i] as f64;
+            dec_in[i] = acc as f32;
+        }
+
+        // Inter-chunk: o_t += Σ_m λ_t^(lc+m) dec_in[t] (S^(m)T q_t).
+        for i in 0..len {
+            let qrow = q.row(start + i);
+            let orow = out.row_mut(start + i);
+            for (m, s) in eng.active() {
+                let lam = lambda.at(start + i, lc + m) * dec_in[i];
+                if lam == 0.0 {
+                    continue;
+                }
+                for (dst, x) in orow.iter_mut().zip(s.matvec_t(qrow)) {
+                    *dst += lam * x;
+                }
+            }
+        }
+
+        // Intra-chunk: dense H-masked local attention
+        // weight(i,j) = (q_i·k_j) · dec_in[i]/dec_in[j] · λ_local(i,j).
+        let lam_loc = local_lambda_mask(lambda, start, len);
+        for i in 0..len {
+            let qi = q.row(start + i);
+            let mut acc_row = vec![0.0f32; dv];
+            for j in 0..=i {
+                let lam = lam_loc.at(i, j);
+                if lam == 0.0 {
+                    continue;
+                }
+                let w = crate::tensor::dot(qi, k.row(start + j)) * (dec_in[i] / dec_in[j]) * lam;
+                for (a, &vv) in acc_row.iter_mut().zip(v.row(start + j)) {
+                    *a += w * vv;
+                }
+            }
+            for (dst, a) in out.row_mut(start + i).iter_mut().zip(acc_row) {
+                *dst += a;
+            }
+        }
+
+        // Chunk state write: W_z = Σ_s (chunk_decay / dec_in[s]) k_s v_s^T.
+        let chunk_decay = dec_in[len - 1];
+        let mut w = Mat::zeros(dk, dv);
+        for j in 0..len {
+            outer_acc(&mut w, k.row(start + j), v.row(start + j), chunk_decay / dec_in[j]);
+        }
+        // Transition carried states, then install the fresh one.
+        eng.apply_transition(|s| s.scale_inplace(chunk_decay));
+        eng.set_level0(w);
+
+        z += 1;
+        start = end;
+    }
+    out
+}
+
+/// The naive multi-level baseline (Fig. 4 "Log-Linear Mamba-2 (naive)"):
+/// one independent Mamba-2-style masked inter-chunk sweep *per level*,
+/// each re-reading Q and the chunk states. Same asymptotics, ~L× the
+/// memory traffic — the target of the §3.5 level-fusion optimization.
+pub fn chunkwise_naive(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat, c: usize) -> Mat {
+    assert!(c >= 1 && c.is_power_of_two());
+    let (t_len, dk, dv) = (q.rows, q.cols, v.cols);
+    let lc = c.trailing_zeros() as usize;
+    let nchunks = t_len.div_ceil(c);
+    let mut out = Mat::zeros(t_len, dv);
+
+    // Per-chunk decays and local cumulative decays.
+    let mut dec_in = vec![0.0f32; t_len];
+    let mut chunk_decay = vec![0.0f32; nchunks];
+    for z in 0..nchunks {
+        let (start, end) = (z * c, ((z + 1) * c).min(t_len));
+        let mut acc = 1.0f64;
+        for i in start..end {
+            acc *= alpha[i] as f64;
+            dec_in[i] = acc as f32;
+        }
+        chunk_decay[z] = acc as f32;
+    }
+
+    // Per-chunk states (own contribution only).
+    let states: Vec<Mat> = (0..nchunks)
+        .map(|z| {
+            let (start, end) = (z * c, ((z + 1) * c).min(t_len));
+            let mut w = Mat::zeros(dk, dv);
+            for j in start..end {
+                outer_acc(&mut w, k.row(j), v.row(j), chunk_decay[z] / dec_in[j]);
+            }
+            w
+        })
+        .collect();
+
+    // Intra-chunk (identical to the fused version).
+    for z in 0..nchunks {
+        let (start, end) = (z * c, ((z + 1) * c).min(t_len));
+        let len = end - start;
+        let lam_loc = local_lambda_mask(lambda, start, len);
+        for i in 0..len {
+            let qi = q.row(start + i);
+            let mut acc_row = vec![0.0f32; dv];
+            for j in 0..=i {
+                let lam = lam_loc.at(i, j);
+                if lam == 0.0 {
+                    continue;
+                }
+                let w = crate::tensor::dot(qi, k.row(start + j)) * (dec_in[start + i] / dec_in[start + j]) * lam;
+                for (a, &vv) in acc_row.iter_mut().zip(v.row(start + j)) {
+                    *a += w * vv;
+                }
+            }
+            for (dst, a) in out.row_mut(start + i).iter_mut().zip(acc_row) {
+                *dst += a;
+            }
+        }
+    }
+
+    // Inter-chunk: one independent masked sweep per level.
+    let max_level = fenwick::num_levels(nchunks.max(1));
+    for m in 1..max_level {
+        // combined[z] = Σ_{c ∈ B_z^(m)} (Π chunk decays between) states[c]
+        for z in 1..nchunks {
+            if (z >> (m - 1)) & 1 != 1 {
+                continue;
+            }
+            let bsize = 1usize << (m - 1);
+            let bend = z & !(bsize - 1); // exclusive end of bucket (chunks)
+            let bstart = bend - bsize;
+            let mut combined = Mat::zeros(dk, dv);
+            for cz in bstart..bend {
+                // decay over full chunks cz+1 .. z-1
+                let mut dec = 1.0f64;
+                for d in chunk_decay.iter().take(z).skip(cz + 1) {
+                    dec *= *d as f64;
+                }
+                combined.axpy(dec as f32, &states[cz]);
+            }
+            let (start, end) = (z * c, ((z + 1) * c).min(t_len));
+            for i in start..end {
+                let lam = lambda.at(i, lc + m) * dec_in[i];
+                if lam == 0.0 {
+                    continue;
+                }
+                let qrow = q.row(i);
+                let contrib = combined.matvec_t(qrow);
+                for (dst, x) in out.row_mut(i).iter_mut().zip(contrib) {
+                    *dst += lam * x;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttnInputs;
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn parallel_equals_recurrent() {
+        let mut rng = Rng::new(1);
+        for &t in &[1usize, 2, 7, 16, 33, 64, 100] {
+            let x = AttnInputs::random(t, 8, 6, &mut rng);
+            assert_close(
+                &parallel(&x.q, &x.k, &x.v, &x.alpha, &x.lambda),
+                &recurrent(&x.q, &x.k, &x.v, &x.alpha, &x.lambda),
+                1e-3,
+                1e-3,
+            );
+        }
+    }
+
+    #[test]
+    fn chunkwise_equals_recurrent() {
+        let mut rng = Rng::new(2);
+        for &(t, c) in &[(64usize, 8usize), (100, 16), (128, 32), (33, 4), (16, 16), (40, 1)] {
+            let x = AttnInputs::random(t, 8, 6, &mut rng);
+            let oracle = recurrent(&x.q, &x.k, &x.v, &x.alpha, &x.lambda);
+            assert_close(
+                &chunkwise(&x.q, &x.k, &x.v, &x.alpha, &x.lambda, c),
+                &oracle,
+                2e-3,
+                2e-3,
+            );
+        }
+    }
+
+    #[test]
+    fn naive_equals_fused() {
+        let mut rng = Rng::new(3);
+        for &(t, c) in &[(64usize, 8usize), (96, 16), (128, 16)] {
+            let x = AttnInputs::random(t, 8, 6, &mut rng);
+            assert_close(
+                &chunkwise_naive(&x.q, &x.k, &x.v, &x.alpha, &x.lambda, c),
+                &chunkwise(&x.q, &x.k, &x.v, &x.alpha, &x.lambda, c),
+                1e-3,
+                1e-3,
+            );
+        }
+    }
+
+    #[test]
+    fn lambda_zero_on_level_removes_its_bucket() {
+        // Zeroing λ^(ℓ) for a given ℓ must remove exactly that bucket's
+        // contribution — checked against a hand-built masked computation.
+        let mut rng = Rng::new(4);
+        let t = 32;
+        let x = AttnInputs::random(t, 6, 6, &mut rng);
+        let mut lam = x.lambda.clone();
+        for i in 0..t {
+            *lam.at_mut(i, 2) = 0.0; // kill level 2 (bucket size 2)
+        }
+        let o = recurrent(&x.q, &x.k, &x.v, &x.alpha, &lam);
+        // direct masked computation
+        let quasi = crate::hmatrix::QuasiH::new(x.alpha.clone(), lam).dense();
+        let mut a = x.q.matmul_nt(&x.k);
+        for i in 0..t {
+            for j in i + 1..t {
+                *a.at_mut(i, j) = 0.0;
+            }
+        }
+        let expect = a.hadamard(&quasi).matmul(&x.v);
+        assert_close(&o, &expect, 1e-3, 1e-3);
+    }
+}

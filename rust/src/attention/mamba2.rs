@@ -1,0 +1,137 @@
+//! Mamba-2 / SSD: linear attention with a data-dependent scalar gate
+//! (Dao & Gu, 2024). Mask `M^S` is 1-semiseparable (paper Eq. 2).
+//!
+//! Recurrence: `S_t = α_t S_{t-1} + k_t v_t^T`, `o_t = S_t^T q_t`.
+//! The chunkwise form here is the standard SSD algorithm — the O(T)
+//! "state-passing primitive" that Algorithm 1 invokes O(log T/C) times.
+
+use crate::hmatrix::sss::SssMask;
+use crate::tensor::{outer_acc, Mat};
+
+/// Recurrent oracle.
+pub fn recurrent(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32]) -> Mat {
+    let (t, dk, dv) = (q.rows, q.cols, v.cols);
+    assert_eq!(alpha.len(), t);
+    let mut s = Mat::zeros(dk, dv);
+    let mut out = Mat::zeros(t, dv);
+    for i in 0..t {
+        s.scale_inplace(alpha[i]);
+        outer_acc(&mut s, k.row(i), v.row(i), 1.0);
+        let o = s.matvec_t(q.row(i));
+        out.row_mut(i).copy_from_slice(&o);
+    }
+    out
+}
+
+/// Parallel (masked) form: `O = (Q K^T ⊙ M^S) V`.
+pub fn parallel(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32]) -> Mat {
+    let p = q.matmul_nt(k).hadamard(&SssMask::new(alpha).dense());
+    p.matmul(v)
+}
+
+/// Chunkwise (SSD) form with chunk size `c`.
+///
+/// Per chunk: (1) intra-chunk dense masked attention, (2) inter-chunk
+/// contribution `o_t += decay(start..t) · q_t^T S_in`, (3) state update
+/// `S_out = decay(chunk) · S_in + Σ_s decay(s..end) k_s v_s^T`.
+pub fn chunkwise(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], c: usize) -> Mat {
+    assert!(c >= 1);
+    let (t, dk, dv) = (q.rows, q.cols, v.cols);
+    assert_eq!(alpha.len(), t);
+    let mut out = Mat::zeros(t, dv);
+    let mut state = Mat::zeros(dk, dv);
+    let mut start = 0;
+    while start < t {
+        let end = (start + c).min(t);
+        let len = end - start;
+        // Local cumulative decay: dec_in[i] = Π_{j=start..start+i} α_j
+        // (decay from chunk entry *through* position i).
+        let mut dec_in = vec![0.0f32; len];
+        let mut acc = 1.0f64;
+        for i in 0..len {
+            acc *= alpha[start + i] as f64;
+            dec_in[i] = acc as f32;
+        }
+        let chunk_decay = dec_in[len - 1];
+
+        // (2) inter-chunk reads.
+        for i in 0..len {
+            let o = state.matvec_t(q.row(start + i));
+            for (dst, val) in out.row_mut(start + i).iter_mut().zip(o) {
+                *dst = dec_in[i] * val;
+            }
+        }
+        // (1) intra-chunk dense: weight(i,j) = (q_i . k_j) Π_{u=j+1..i} α_u
+        //     = (q_i . k_j) * dec_in[i] / dec_in[j].
+        for i in 0..len {
+            let qi = q.row(start + i);
+            let mut acc_row = vec![0.0f32; dv];
+            for j in 0..=i {
+                let w = crate::tensor::dot(qi, k.row(start + j)) * (dec_in[i] / dec_in[j]);
+                for (a, &vv) in acc_row.iter_mut().zip(v.row(start + j)) {
+                    *a += w * vv;
+                }
+            }
+            for (dst, a) in out.row_mut(start + i).iter_mut().zip(acc_row) {
+                *dst += a;
+            }
+        }
+        // (3) state update.
+        state.scale_inplace(chunk_decay);
+        for j in 0..len {
+            // decay from position j+1 .. end-1 = chunk_decay / dec_in[j]
+            outer_acc(&mut state, k.row(start + j), v.row(start + j), chunk_decay / dec_in[j]);
+        }
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttnInputs;
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn parallel_equals_recurrent() {
+        let mut rng = Rng::new(1);
+        for &t in &[1usize, 5, 33, 64] {
+            let x = AttnInputs::random(t, 8, 6, &mut rng);
+            assert_close(
+                &parallel(&x.q, &x.k, &x.v, &x.alpha),
+                &recurrent(&x.q, &x.k, &x.v, &x.alpha),
+                1e-4,
+                1e-4,
+            );
+        }
+    }
+
+    #[test]
+    fn chunkwise_equals_recurrent() {
+        let mut rng = Rng::new(2);
+        let x = AttnInputs::random(70, 8, 6, &mut rng);
+        let oracle = recurrent(&x.q, &x.k, &x.v, &x.alpha);
+        for &c in &[1usize, 4, 16, 70, 128] {
+            assert_close(&chunkwise(&x.q, &x.k, &x.v, &x.alpha, c), &oracle, 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn strong_decay_forgets_distant_past() {
+        // With tiny gates, output at t is dominated by the current token:
+        // o_t ≈ (q_t . k_t) v_t.
+        let mut rng = Rng::new(3);
+        let t = 16;
+        let mut x = AttnInputs::random(t, 8, 8, &mut rng);
+        x.alpha = vec![1e-4; t];
+        let o = recurrent(&x.q, &x.k, &x.v, &x.alpha);
+        for i in 0..t {
+            let w = crate::tensor::dot(x.q.row(i), x.k.row(i));
+            for j in 0..8 {
+                assert!((o.at(i, j) - w * x.v.at(i, j)).abs() < 1e-2);
+            }
+        }
+    }
+}

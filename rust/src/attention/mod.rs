@@ -1,0 +1,269 @@
+//! The attention zoo: pure-Rust reference implementations of every model
+//! row in the paper's Table 1, each in up to three algorithmic forms.
+//!
+//! | model | recurrent | parallel (masked) | chunkwise |
+//! |-------|-----------|-------------------|-----------|
+//! | softmax attention           | (KV-cache decode) | ✓ `O(T^2)` | — |
+//! | linear attention            | ✓ `O(T)` | ✓ | ✓ `O(T)` |
+//! | Mamba-2 (scalar gate)       | ✓ | ✓ | ✓ (SSD) |
+//! | DeltaNet                    | ✓ | ✓ (WY/UT) | ✓ |
+//! | Gated DeltaNet              | ✓ | ✓ | ✓ |
+//! | Log-Linear Mamba-2          | ✓ `O(log T)` state | ✓ | ✓ `O(T log T)` (Alg. 1) |
+//! | Log-Linear Gated DeltaNet   | ✓ `O(log T)` state | ✓ | ✓ |
+//!
+//! The *recurrent* form is always the unambiguous ground truth; property
+//! tests assert `recurrent == parallel == chunkwise` on random inputs.
+//! These implementations serve three roles: correctness oracles for the
+//! Pallas kernels (shared golden fixtures), the CPU substrate for the
+//! Fig. 4 / Table 1 benchmark reproductions, and the decode path of the
+//! Rust-side serving demo.
+//!
+//! Conventions: single head; `q,k: (T, d_k)`, `v: (T, d_v)`; hidden state
+//! `S: (d_k, d_v)` updated as `S ← transition(S) + k_t v_t^T` and read as
+//! `o_t = S^T q_t`. Gates `α_t ∈ (0,1]`, delta strengths `β_t ∈ (0,1]`,
+//! level weights `λ: (T, num_levels)`.
+
+pub mod softmax;
+pub mod linear;
+pub mod mamba2;
+pub mod deltanet;
+pub mod gated_deltanet;
+pub mod loglinear;
+pub mod loglinear_mamba2;
+pub mod loglinear_gdn;
+
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// A bundle of per-head inputs covering the needs of every variant.
+#[derive(Debug, Clone)]
+pub struct AttnInputs {
+    pub q: Mat,
+    pub k: Mat,
+    pub v: Mat,
+    /// decay gates α_t (Mamba-2 / GDN families)
+    pub alpha: Vec<f32>,
+    /// delta-rule strengths β_t (DeltaNet families)
+    pub beta: Vec<f32>,
+    /// level weights λ_t^(ℓ), shape (T, num_levels(T)) (log-linear families)
+    pub lambda: Mat,
+}
+
+impl AttnInputs {
+    /// Random inputs with well-conditioned ranges (gates bounded away from
+    /// 0, unit-ish keys) for property tests and benches.
+    pub fn random(t: usize, dk: usize, dv: usize, rng: &mut Rng) -> AttnInputs {
+        let q = Mat::randn(t, dk, 1.0 / (dk as f32).sqrt(), rng);
+        let mut k = Mat::randn(t, dk, 1.0, rng);
+        // L2-normalize keys: standard for DeltaNet (keeps Householder
+        // transitions contractive) and harmless elsewhere.
+        for i in 0..t {
+            let n = crate::tensor::ops::l2_norm(k.row(i)).max(1e-6);
+            for x in k.row_mut(i) {
+                *x /= n;
+            }
+        }
+        let v = Mat::randn(t, dv, 1.0, rng);
+        let alpha: Vec<f32> = (0..t).map(|_| rng.range_f32(0.75, 1.0)).collect();
+        let beta: Vec<f32> = (0..t).map(|_| rng.range_f32(0.1, 1.0)).collect();
+        let nl = crate::fenwick::num_levels(t);
+        let lambda = Mat::rand_uniform(t, nl, 0.05, 1.0, rng);
+        AttnInputs { q, k, v, alpha, beta, lambda }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.q.rows
+    }
+}
+
+/// Which architecture (Table 1 row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Model {
+    Softmax,
+    Linear,
+    Mamba2,
+    DeltaNet,
+    GatedDeltaNet,
+    LogLinearMamba2,
+    LogLinearGdn,
+}
+
+impl Model {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Model::Softmax => "softmax",
+            Model::Linear => "linear",
+            Model::Mamba2 => "mamba2",
+            Model::DeltaNet => "deltanet",
+            Model::GatedDeltaNet => "gated_deltanet",
+            Model::LogLinearMamba2 => "loglinear_mamba2",
+            Model::LogLinearGdn => "loglinear_gdn",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Model> {
+        Some(match s {
+            "softmax" | "transformer" => Model::Softmax,
+            "linear" => Model::Linear,
+            "mamba2" => Model::Mamba2,
+            "deltanet" => Model::DeltaNet,
+            "gated_deltanet" | "gdn" => Model::GatedDeltaNet,
+            "loglinear_mamba2" | "ll_mamba2" => Model::LogLinearMamba2,
+            "loglinear_gdn" | "ll_gdn" => Model::LogLinearGdn,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> &'static [Model] {
+        &[
+            Model::Softmax,
+            Model::Linear,
+            Model::Mamba2,
+            Model::DeltaNet,
+            Model::GatedDeltaNet,
+            Model::LogLinearMamba2,
+            Model::LogLinearGdn,
+        ]
+    }
+
+    pub fn is_loglinear(&self) -> bool {
+        matches!(self, Model::LogLinearMamba2 | Model::LogLinearGdn)
+    }
+}
+
+/// Which algorithmic form.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Form {
+    Recurrent,
+    Parallel,
+    /// Chunkwise with the given chunk size.
+    Chunkwise(usize),
+}
+
+/// Unified dispatch used by benches and the eval harness. Softmax ignores
+/// `Form` (always the standard parallel algorithm).
+pub fn forward(model: Model, form: Form, x: &AttnInputs) -> Mat {
+    match (model, form) {
+        (Model::Softmax, _) => softmax::softmax_attention(&x.q, &x.k, &x.v),
+        (Model::Linear, Form::Recurrent) => linear::recurrent(&x.q, &x.k, &x.v),
+        (Model::Linear, Form::Parallel) => linear::parallel(&x.q, &x.k, &x.v),
+        (Model::Linear, Form::Chunkwise(c)) => linear::chunkwise(&x.q, &x.k, &x.v, c),
+        (Model::Mamba2, Form::Recurrent) => mamba2::recurrent(&x.q, &x.k, &x.v, &x.alpha),
+        (Model::Mamba2, Form::Parallel) => mamba2::parallel(&x.q, &x.k, &x.v, &x.alpha),
+        (Model::Mamba2, Form::Chunkwise(c)) => mamba2::chunkwise(&x.q, &x.k, &x.v, &x.alpha, c),
+        (Model::DeltaNet, Form::Recurrent) => deltanet::recurrent(&x.q, &x.k, &x.v, &x.beta),
+        (Model::DeltaNet, Form::Parallel) => deltanet::parallel(&x.q, &x.k, &x.v, &x.beta),
+        (Model::DeltaNet, Form::Chunkwise(c)) => deltanet::chunkwise(&x.q, &x.k, &x.v, &x.beta, c),
+        (Model::GatedDeltaNet, Form::Recurrent) => {
+            gated_deltanet::recurrent(&x.q, &x.k, &x.v, &x.alpha, &x.beta)
+        }
+        (Model::GatedDeltaNet, Form::Parallel) => {
+            gated_deltanet::parallel(&x.q, &x.k, &x.v, &x.alpha, &x.beta)
+        }
+        (Model::GatedDeltaNet, Form::Chunkwise(c)) => {
+            gated_deltanet::chunkwise(&x.q, &x.k, &x.v, &x.alpha, &x.beta, c)
+        }
+        (Model::LogLinearMamba2, Form::Recurrent) => {
+            loglinear_mamba2::recurrent(&x.q, &x.k, &x.v, &x.alpha, &x.lambda)
+        }
+        (Model::LogLinearMamba2, Form::Parallel) => {
+            loglinear_mamba2::parallel(&x.q, &x.k, &x.v, &x.alpha, &x.lambda)
+        }
+        (Model::LogLinearMamba2, Form::Chunkwise(c)) => {
+            loglinear_mamba2::chunkwise(&x.q, &x.k, &x.v, &x.alpha, &x.lambda, c)
+        }
+        (Model::LogLinearGdn, Form::Recurrent) => {
+            loglinear_gdn::recurrent(&x.q, &x.k, &x.v, &x.alpha, &x.beta, &x.lambda)
+        }
+        (Model::LogLinearGdn, Form::Parallel) => {
+            loglinear_gdn::parallel(&x.q, &x.k, &x.v, &x.alpha, &x.beta, &x.lambda)
+        }
+        (Model::LogLinearGdn, Form::Chunkwise(c)) => {
+            loglinear_gdn::chunkwise(&x.q, &x.k, &x.v, &x.alpha, &x.beta, &x.lambda, c)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::assert_close;
+
+    /// The headline equivalence suite: for every model, every form agrees
+    /// with the recurrent oracle across several (T, C) combinations,
+    /// including non-power-of-two T and chunk sizes that don't divide T.
+    #[test]
+    fn all_forms_agree_with_recurrent_oracle() {
+        let mut rng = Rng::new(0xA77);
+        for &model in Model::all() {
+            if model == Model::Softmax {
+                continue;
+            }
+            for &(t, c) in &[(8usize, 4usize), (32, 8), (48, 8), (64, 16), (100, 16), (128, 32)] {
+                let x = AttnInputs::random(t, 12, 10, &mut rng);
+                let oracle = forward(model, Form::Recurrent, &x);
+                let par = forward(model, Form::Parallel, &x);
+                if let Err(e) = crate::tensor::allclose(&par, &oracle, 2e-3, 2e-3) {
+                    panic!("{} parallel != recurrent (T={t}): {e}", model.name());
+                }
+                let ck = forward(model, Form::Chunkwise(c), &x);
+                if let Err(e) = crate::tensor::allclose(&ck, &oracle, 2e-3, 2e-3) {
+                    panic!("{} chunkwise(C={c}) != recurrent (T={t}): {e}", model.name());
+                }
+            }
+        }
+    }
+
+    /// Log-linear models collapse to their linear counterparts when all
+    /// λ_t^(ℓ) = 1 (paper §3.1).
+    #[test]
+    fn loglinear_collapses_to_linear_variant() {
+        let mut rng = Rng::new(0xB0B);
+        for &t in &[32usize, 64, 96] {
+            let mut x = AttnInputs::random(t, 8, 8, &mut rng);
+            x.lambda = Mat::from_fn(t, crate::fenwick::num_levels(t), |_, _| 1.0);
+            let llm = forward(Model::LogLinearMamba2, Form::Recurrent, &x);
+            let m2 = forward(Model::Mamba2, Form::Recurrent, &x);
+            assert_close(&llm, &m2, 1e-4, 1e-4);
+            let llg = forward(Model::LogLinearGdn, Form::Recurrent, &x);
+            let gdn = forward(Model::GatedDeltaNet, Form::Recurrent, &x);
+            assert_close(&llg, &gdn, 1e-4, 1e-4);
+        }
+    }
+
+    /// Mamba-2 with all gates = 1 is plain linear attention; DeltaNet with
+    /// β = 0 writes nothing.
+    #[test]
+    fn degenerate_parameter_relations() {
+        let mut rng = Rng::new(0xC4B);
+        let t = 40;
+        let mut x = AttnInputs::random(t, 8, 8, &mut rng);
+        x.alpha = vec![1.0; t];
+        let m2 = forward(Model::Mamba2, Form::Recurrent, &x);
+        let lin = forward(Model::Linear, Form::Recurrent, &x);
+        assert_close(&m2, &lin, 1e-5, 1e-5);
+
+        let mut x2 = AttnInputs::random(t, 8, 8, &mut rng);
+        x2.beta = vec![0.0; t];
+        let dn = forward(Model::DeltaNet, Form::Recurrent, &x2);
+        assert!(dn.fro_norm() < 1e-6);
+    }
+
+    #[test]
+    fn chunk_size_one_and_full_sequence_chunks() {
+        // Degenerate chunk sizes must still be correct: C=1 (pure
+        // inter-chunk) and C=T (pure intra-chunk).
+        let mut rng = Rng::new(0xD11);
+        let t = 32;
+        let x = AttnInputs::random(t, 8, 8, &mut rng);
+        for &model in &[Model::Mamba2, Model::LogLinearMamba2, Model::GatedDeltaNet, Model::LogLinearGdn] {
+            let oracle = forward(model, Form::Recurrent, &x);
+            for &c in &[1usize, t] {
+                let y = forward(model, Form::Chunkwise(c), &x);
+                if let Err(e) = crate::tensor::allclose(&y, &oracle, 2e-3, 2e-3) {
+                    panic!("{} C={c}: {e}", model.name());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Standard causal softmax attention — the quadratic-compute,
+//! linear-memory baseline (Table 1 row 1). Also provides the KV-cache
+//! decoder used by the decode-complexity benches: `O(t)` work and memory
+//! per step, versus the log-linear models' `O(log t)`.
+
+use crate::tensor::{ops, Mat};
+
+/// `O = softmax(Q K^T / sqrt(d) ⊙ causal) V`.
+pub fn softmax_attention(q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    let t = q.rows;
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut scores = q.matmul_nt(k);
+    for i in 0..t {
+        let row = scores.row_mut(i);
+        for (j, s) in row.iter_mut().enumerate() {
+            if j > i {
+                *s = f32::NEG_INFINITY;
+            } else {
+                *s *= scale;
+            }
+        }
+    }
+    ops::softmax_rows(&mut scores);
+    scores.matmul(v)
+}
+
+/// Incremental KV-cache decoder: append one (k, v), produce the output for
+/// the new query. Memory grows linearly with steps — the baseline the
+/// paper's `O(log T)` decoding is compared against.
+pub struct KvCacheDecoder {
+    pub keys: Vec<Vec<f32>>,
+    pub values: Vec<Vec<f32>>,
+    scale: f32,
+}
+
+impl KvCacheDecoder {
+    pub fn new(dk: usize) -> Self {
+        KvCacheDecoder {
+            keys: Vec::new(),
+            values: Vec::new(),
+            scale: 1.0 / (dk as f32).sqrt(),
+        }
+    }
+
+    pub fn step(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        self.keys.push(k.to_vec());
+        self.values.push(v.to_vec());
+        let mut scores: Vec<f32> = self
+            .keys
+            .iter()
+            .map(|kk| crate::tensor::dot(q, kk) * self.scale)
+            .collect();
+        ops::softmax_inplace(&mut scores);
+        let dv = v.len();
+        let mut out = vec![0.0f32; dv];
+        for (w, vv) in scores.iter().zip(self.values.iter()) {
+            for (o, &x) in out.iter_mut().zip(vv.iter()) {
+                *o += w * x;
+            }
+        }
+        out
+    }
+
+    /// Bytes of cache state currently held (the decode-memory metric).
+    pub fn state_bytes(&self) -> usize {
+        let kb: usize = self.keys.iter().map(|k| k.len() * 4).sum();
+        let vb: usize = self.values.iter().map(|v| v.len() * 4).sum();
+        kb + vb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        let mut rng = Rng::new(1);
+        let x = crate::attention::AttnInputs::random(16, 8, 8, &mut rng);
+        // With v >= 0, outputs stay within [min v, max v] per column.
+        let mut v = x.v.clone();
+        for val in v.data.iter_mut() {
+            *val = val.abs();
+        }
+        let o = softmax_attention(&x.q, &x.k, &v);
+        let vmax = v.data.iter().cloned().fold(0.0f32, f32::max);
+        assert!(o.data.iter().all(|&y| y >= 0.0 && y <= vmax + 1e-5));
+    }
+
+    #[test]
+    fn first_row_copies_v0() {
+        let mut rng = Rng::new(2);
+        let x = crate::attention::AttnInputs::random(8, 4, 4, &mut rng);
+        let o = softmax_attention(&x.q, &x.k, &x.v);
+        for j in 0..4 {
+            assert!((o.at(0, j) - x.v.at(0, j)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kv_cache_decoder_matches_parallel() {
+        let mut rng = Rng::new(3);
+        let x = crate::attention::AttnInputs::random(24, 8, 8, &mut rng);
+        let o_par = softmax_attention(&x.q, &x.k, &x.v);
+        let mut dec = KvCacheDecoder::new(8);
+        for t in 0..24 {
+            let o = dec.step(x.q.row(t), x.k.row(t), x.v.row(t));
+            for j in 0..8 {
+                assert!(
+                    (o[j] - o_par.at(t, j)).abs() < 1e-5,
+                    "t={t} j={j}: {} vs {}",
+                    o[j],
+                    o_par.at(t, j)
+                );
+            }
+        }
+        // memory is linear in steps
+        assert_eq!(dec.state_bytes(), 24 * (8 + 8) * 4);
+    }
+
+    #[test]
+    fn causality_future_v_changes_nothing() {
+        let mut rng = Rng::new(4);
+        let x = crate::attention::AttnInputs::random(12, 6, 6, &mut rng);
+        let o1 = softmax_attention(&x.q, &x.k, &x.v);
+        let mut v2 = x.v.clone();
+        for j in 0..6 {
+            *v2.at_mut(11, j) = 999.0;
+        }
+        let o2 = softmax_attention(&x.q, &x.k, &v2);
+        for t in 0..11 {
+            for j in 0..6 {
+                assert_eq!(o1.at(t, j), o2.at(t, j));
+            }
+        }
+    }
+}

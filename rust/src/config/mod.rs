@@ -1,0 +1,128 @@
+//! Run configuration: JSON file + CLI overrides (`--key value` wins over
+//! file values, file wins over defaults). serde is unavailable offline, so
+//! this rides on `util::json` + `util::cli`.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Configuration shared by the experiment commands.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// artifact set name prefix, e.g. "tiny" or "lm"
+    pub config: String,
+    /// model variant, e.g. "loglinear_mamba2"
+    pub variant: String,
+    pub artifacts: PathBuf,
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup: usize,
+    pub seed: u64,
+    pub eval_batches: usize,
+    pub out: Option<PathBuf>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            config: "tiny".into(),
+            variant: "loglinear_mamba2".into(),
+            artifacts: crate::runtime::artifacts_dir(),
+            steps: 200,
+            lr: 3e-3,
+            warmup: 20,
+            seed: 0,
+            eval_batches: 8,
+            out: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// artifact set name, e.g. "tiny_loglinear_mamba2"
+    pub fn model_name(&self) -> String {
+        format!("{}_{}", self.config, self.variant)
+    }
+
+    /// Layer: defaults <- JSON file (`--config-file`) <- CLI options.
+    pub fn from_args(args: &Args) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(path) = args.get("config-file") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config file {path}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            cfg.apply_json(&j);
+        }
+        cfg.config = args.str_or("config", &cfg.config);
+        cfg.variant = args.str_or("variant", &cfg.variant);
+        if let Some(a) = args.get("artifacts") {
+            cfg.artifacts = PathBuf::from(a);
+        }
+        cfg.steps = args.usize_or("steps", cfg.steps);
+        cfg.lr = args.f64_or("lr", cfg.lr);
+        cfg.warmup = args.usize_or("warmup", cfg.warmup);
+        cfg.seed = args.u64_or("seed", cfg.seed);
+        cfg.eval_batches = args.usize_or("eval-batches", cfg.eval_batches);
+        cfg.out = args.get("out").map(PathBuf::from);
+        Ok(cfg)
+    }
+
+    fn apply_json(&mut self, j: &Json) {
+        if let Some(v) = j.get("config").and_then(|v| v.as_str()) {
+            self.config = v.to_string();
+        }
+        if let Some(v) = j.get("variant").and_then(|v| v.as_str()) {
+            self.variant = v.to_string();
+        }
+        if let Some(v) = j.get("artifacts").and_then(|v| v.as_str()) {
+            self.artifacts = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("steps").and_then(|v| v.as_usize()) {
+            self.steps = v;
+        }
+        if let Some(v) = j.get("lr").and_then(|v| v.as_f64()) {
+            self.lr = v;
+        }
+        if let Some(v) = j.get("warmup").and_then(|v| v.as_usize()) {
+            self.warmup = v;
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_usize()) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = j.get("eval_batches").and_then(|v| v.as_usize()) {
+            self.eval_batches = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cli_overrides_defaults() {
+        let args = Args::parse("train --variant gdn --steps 42 --lr 1e-4".split_whitespace());
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.variant, "gdn");
+        assert_eq!(cfg.steps, 42);
+        assert!((cfg.lr - 1e-4).abs() < 1e-12);
+        assert_eq!(cfg.model_name(), "tiny_gdn");
+    }
+
+    #[test]
+    fn file_then_cli_priority() {
+        let dir = std::env::temp_dir().join("loglinear_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"variant": "mamba2", "steps": 7, "lr": 0.5}"#).unwrap();
+        let argline = format!("train --config-file {} --steps 99", path.display());
+        let args = Args::parse(argline.split_whitespace());
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.variant, "mamba2"); // from file
+        assert_eq!(cfg.steps, 99); // CLI wins
+        assert!((cfg.lr - 0.5).abs() < 1e-12); // from file
+    }
+}

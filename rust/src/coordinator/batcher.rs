@@ -1,0 +1,169 @@
+//! Bucketed dynamic batching.
+//!
+//! Decode artifacts are AOT-compiled per batch size (e.g. {1, 4, 8}), so
+//! the batcher's job is: given `ready` runnable sequences, pick the
+//! artifact bucket to run next — the largest bucket that fills, or, after
+//! `max_wait`, the smallest bucket that covers what's waiting (padding
+//! idle rows). Pure logic, property-tested; the server owns the clock.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// available batch sizes, ascending (must be non-empty)
+    pub buckets: Vec<usize>,
+    /// how long to hold out for a fuller bucket
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(mut buckets: Vec<usize>, max_wait: Duration) -> BatchPolicy {
+        assert!(!buckets.is_empty());
+        buckets.sort_unstable();
+        buckets.dedup();
+        BatchPolicy { buckets, max_wait }
+    }
+
+    /// Decide the bucket for `ready` runnable sequences. `waited` is the
+    /// age of the oldest waiting item. Returns None to keep waiting.
+    ///
+    /// Policy: run the largest bucket immediately when it fills; otherwise
+    /// hold out up to `max_wait`, then run the smallest bucket that COVERS
+    /// everything waiting (padding idle rows) so no request is left behind.
+    pub fn plan(&self, ready: usize, waited: Duration) -> Option<usize> {
+        if ready == 0 {
+            return None;
+        }
+        let largest = *self.buckets.last().unwrap();
+        if ready >= largest {
+            return Some(largest);
+        }
+        if waited < self.max_wait {
+            return None;
+        }
+        Some(*self.buckets.iter().find(|&&b| b >= ready).unwrap_or(&largest))
+    }
+}
+
+/// FIFO request queue with arrival timestamps (per-sequence fairness:
+/// strictly in arrival order, never starved).
+#[derive(Debug)]
+pub struct RequestQueue<T> {
+    items: VecDeque<(T, Instant)>,
+}
+
+impl<T> Default for RequestQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> RequestQueue<T> {
+    pub fn new() -> Self {
+        RequestQueue { items: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.items.push_back((item, Instant::now()));
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn oldest_age(&self) -> Duration {
+        self.items
+            .front()
+            .map(|(_, t)| t.elapsed())
+            .unwrap_or(Duration::ZERO)
+    }
+
+    /// Pop up to `n` items in arrival order.
+    pub fn take(&mut self, n: usize) -> Vec<T> {
+        let n = n.min(self.items.len());
+        (0..n).map(|_| self.items.pop_front().unwrap().0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Pair, UsizeIn};
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(2))
+    }
+
+    #[test]
+    fn fills_largest_bucket_immediately() {
+        let p = policy();
+        assert_eq!(p.plan(8, Duration::ZERO), Some(8));
+        assert_eq!(p.plan(12, Duration::ZERO), Some(8));
+    }
+
+    #[test]
+    fn holds_for_fuller_bucket_then_gives_up() {
+        let p = policy();
+        // 5 ready: bucket 4 fills, but largest is 8 -> wait...
+        assert_eq!(p.plan(5, Duration::ZERO), None);
+        // ...until max_wait, then run the smallest covering bucket (8,
+        // padded) so nothing is left behind
+        assert_eq!(p.plan(5, Duration::from_millis(3)), Some(8));
+    }
+
+    #[test]
+    fn small_traffic_runs_padded_after_wait() {
+        let p = policy();
+        assert_eq!(p.plan(1, Duration::ZERO), None);
+        assert_eq!(p.plan(1, Duration::from_millis(3)), Some(1));
+        // 2 ready -> smallest covering bucket is 4 (padded)
+        assert_eq!(p.plan(2, Duration::from_millis(3)), Some(4));
+    }
+
+    #[test]
+    fn zero_ready_never_plans() {
+        let p = policy();
+        assert_eq!(p.plan(0, Duration::from_secs(10)), None);
+    }
+
+    #[test]
+    fn plan_never_exceeds_largest_bucket_property() {
+        let p = policy();
+        check(
+            "bucket bound",
+            300,
+            &Pair(UsizeIn(0, 100), UsizeIn(0, 10)),
+            |&(ready, ms)| {
+                match p.plan(ready, Duration::from_millis(ms as u64)) {
+                    None => true,
+                    Some(b) => p.buckets.contains(&b) && b <= 8,
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn eventually_serves_everything_property() {
+        // with waited >= max_wait and ready > 0, plan is always Some
+        let p = policy();
+        check("no starvation", 300, &UsizeIn(1, 64), |&ready| {
+            p.plan(ready, Duration::from_millis(5)).is_some()
+        });
+    }
+
+    #[test]
+    fn queue_preserves_fifo_order() {
+        let mut q = RequestQueue::new();
+        for i in 0..10 {
+            q.push(i);
+        }
+        assert_eq!(q.take(4), vec![0, 1, 2, 3]);
+        assert_eq!(q.take(100), vec![4, 5, 6, 7, 8, 9]);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,38 @@
+//! Layer-3 serving coordinator.
+//!
+//! The paper's decoding contribution is the O(log T) Fenwick state
+//! recurrence; serving it looks like serving any recurrent LM — except
+//! the per-sequence state is a *set of level states* instead of a KV
+//! cache, so memory scales with `Σ_seq popcount(t_seq)` rather than
+//! `Σ_seq t_seq`. The coordinator mirrors a vLLM-style layout:
+//!
+//! - [`batcher`]: queueing + bucketed dynamic batching (batch sizes are
+//!   bound to AOT-compiled decode artifacts),
+//! - [`server`]: the decode engine — gathers per-sequence states into the
+//!   batched PJRT buffers, steps the compiled `decode_step`, scatters
+//!   states back, samples, and retires finished sequences.
+//!
+//! Rust owns the event loop, queueing, metrics, and memory accounting;
+//! Python never runs at serve time.
+
+pub mod batcher;
+pub mod server;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// wall-clock seconds from submit to completion
+    pub latency: f64,
+    /// decode steps executed for this sequence
+    pub steps: usize,
+}

@@ -1,0 +1,248 @@
+//! The decode engine: continuous batching over the AOT `decode_step`
+//! artifacts with per-sequence Fenwick states.
+//!
+//! Each live sequence owns one flat state buffer per layer (the dense
+//! (L, H, dk, dv) stack the artifact expects — App. B.4's "half the
+//! levels are zero" sparsity is tracked in the memory accounting and
+//! exploited by the pure-Rust `state::pool` path; the HLO path keeps
+//! dense stacks for fixed shapes). A step: take up to `bucket` runnable
+//! sequences (mixed positions — the artifact's per-sequence `pos` vector
+//! makes continuous batching sound), gather states, execute, scatter,
+//! sample greedily, retire finished sequences.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{ModelHandle, Runtime};
+use crate::util::stats::Summary;
+
+use super::batcher::{BatchPolicy, RequestQueue};
+use super::{GenRequest, GenResult};
+
+struct Seq {
+    id: u64,
+    prompt: Vec<i32>,
+    generated: Vec<i32>,
+    /// index of the next token to feed (position of that token)
+    pos: usize,
+    /// per-layer flat state (numel per layer, batch dim excluded)
+    states: Vec<Vec<f32>>,
+    max_new: usize,
+    submitted: Instant,
+    steps: usize,
+}
+
+impl Seq {
+    /// next token to feed: prompt token while prefilling, else last sample
+    fn next_token(&self) -> i32 {
+        if self.pos < self.prompt.len() {
+            self.prompt[self.pos]
+        } else {
+            *self.generated.last().unwrap()
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.generated.len() >= self.max_new
+    }
+}
+
+/// Serving metrics.
+#[derive(Debug, Default, Clone)]
+pub struct ServerStats {
+    pub steps: usize,
+    pub tokens_processed: usize,
+    pub step_seconds: Vec<f64>,
+    pub batch_occupancy: Vec<f64>,
+    pub completed: usize,
+    pub peak_state_bytes: usize,
+}
+
+impl ServerStats {
+    pub fn tokens_per_second(&self) -> f64 {
+        let total: f64 = self.step_seconds.iter().sum();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.tokens_processed as f64 / total
+        }
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        if self.step_seconds.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.step_seconds))
+        }
+    }
+}
+
+/// Synchronous decode server (single engine thread — the testbed has one
+/// core; the queue/batcher interfaces are thread-safe by construction).
+pub struct DecodeServer {
+    model: ModelHandle,
+    policy: BatchPolicy,
+    queue: RequestQueue<GenRequest>,
+    running: Vec<Seq>,
+    finished: Vec<GenResult>,
+    pub stats: ServerStats,
+    state_numels: Vec<usize>,
+    /// memory accounting: live (non-zero) blocks per state stack
+    dense_state_bytes_per_seq: usize,
+}
+
+impl DecodeServer {
+    pub fn new(rt: &Runtime, mut model: ModelHandle, policy: BatchPolicy) -> Result<DecodeServer> {
+        for &b in &policy.buckets {
+            model.ensure_decode(rt, b)?;
+        }
+        let state_numels: Vec<usize> = model
+            .manifest
+            .state_shapes
+            .iter()
+            .map(|s| s.iter().product())
+            .collect();
+        let dense: usize = state_numels.iter().sum::<usize>() * 4;
+        Ok(DecodeServer {
+            model,
+            policy,
+            queue: RequestQueue::new(),
+            running: Vec::new(),
+            finished: Vec::new(),
+            stats: ServerStats::default(),
+            state_numels,
+            dense_state_bytes_per_seq: dense,
+        })
+    }
+
+    pub fn submit(&mut self, req: GenRequest) {
+        self.queue.push(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.running.len()
+    }
+
+    /// Admit queued requests (zero states) up to the largest bucket.
+    fn admit(&mut self) {
+        let cap = *self.policy.buckets.last().unwrap();
+        if self.running.len() >= cap {
+            return;
+        }
+        for req in self.queue.take(cap - self.running.len()) {
+            let states = self
+                .state_numels
+                .iter()
+                .map(|&n| vec![0.0f32; n])
+                .collect();
+            self.running.push(Seq {
+                id: req.id,
+                prompt: req.prompt,
+                generated: Vec::new(),
+                pos: 0,
+                states,
+                max_new: req.max_new,
+                submitted: Instant::now(),
+                steps: 0,
+            });
+        }
+    }
+
+    /// Run one engine iteration; returns how many sequences advanced.
+    pub fn step(&mut self) -> Result<usize> {
+        self.admit();
+        let ready = self.running.len();
+        let bucket = match self.policy.plan(ready, self.queue.oldest_age()) {
+            Some(b) => b,
+            None if ready > 0 => *self.policy.buckets.first().unwrap().max(&1),
+            None => return Ok(0),
+        };
+        let n = ready.min(bucket);
+        let layers = self.state_numels.len();
+
+        // gather
+        let mut tokens = vec![0i32; bucket];
+        let mut pos = vec![0i32; bucket];
+        let mut batched: Vec<Vec<f32>> = self
+            .state_numels
+            .iter()
+            .map(|&numel| vec![0.0f32; bucket * numel])
+            .collect();
+        for (i, seq) in self.running.iter().take(n).enumerate() {
+            tokens[i] = seq.next_token();
+            pos[i] = seq.pos as i32;
+            for (l, st) in seq.states.iter().enumerate() {
+                let numel = self.state_numels[l];
+                batched[l][i * numel..(i + 1) * numel].copy_from_slice(st);
+            }
+        }
+
+        // execute
+        let t0 = Instant::now();
+        let logits = self.model.decode_step(bucket, &mut batched, &tokens, &pos)?;
+        let dt = t0.elapsed().as_secs_f64();
+
+        // scatter + sample
+        let vocab = logits.len() / bucket;
+        let mut retired = Vec::new();
+        for i in 0..n {
+            let seq = &mut self.running[i];
+            for l in 0..layers {
+                let numel = self.state_numels[l];
+                seq.states[l].copy_from_slice(&batched[l][i * numel..(i + 1) * numel]);
+            }
+            seq.pos += 1;
+            seq.steps += 1;
+            // still prefilling? only sample once the prompt is consumed
+            if seq.pos >= seq.prompt.len() {
+                let row = &logits[i * vocab..(i + 1) * vocab];
+                let tok = crate::tensor::ops::argmax(row) as i32;
+                seq.generated.push(tok);
+            }
+            if seq.done() {
+                retired.push(i);
+            }
+        }
+        for &i in retired.iter().rev() {
+            let seq = self.running.swap_remove(i);
+            self.finished.push(GenResult {
+                id: seq.id,
+                tokens: seq.generated,
+                latency: seq.submitted.elapsed().as_secs_f64(),
+                steps: seq.steps,
+            });
+            self.stats.completed += 1;
+        }
+
+        self.stats.steps += 1;
+        self.stats.tokens_processed += n;
+        self.stats.step_seconds.push(dt);
+        self.stats.batch_occupancy.push(n as f64 / bucket as f64);
+        let live_bytes = self.running.len() * self.dense_state_bytes_per_seq;
+        self.stats.peak_state_bytes = self.stats.peak_state_bytes.max(live_bytes);
+        Ok(n)
+    }
+
+    /// Drive until all submitted work completes; returns the results.
+    pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
+        while self.pending() > 0 {
+            self.step()?;
+        }
+        Ok(std::mem::take(&mut self.finished))
+    }
+
+    pub fn take_finished(&mut self) -> Vec<GenResult> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn model(&self) -> &ModelHandle {
+        &self.model
+    }
+
+    /// Results sorted by id (BTreeMap for determinism in demos).
+    pub fn results_by_id(results: Vec<GenResult>) -> BTreeMap<u64, GenResult> {
+        results.into_iter().map(|r| (r.id, r)).collect()
+    }
+}

@@ -1,0 +1,202 @@
+//! LongBench-style task families (paper Table 8) — synthetic analogues
+//! per DESIGN.md §6. Each family keeps the *mechanism* its LongBench
+//! counterparts probe:
+//!
+//! - `QaSingle`  (NarrativeQA/Qasper/MultiFieldQA): one fact, deep in a
+//!   long document, queried at the end.
+//! - `QaMulti`   (HotpotQA/2WikiMulti/Musique): 2-hop composition — facts
+//!   `k→a` and `a→b` planted far apart; query `k` expects `b`.
+//! - `Summarize` (GovReport/QMSum/MultiNews): global aggregation — the
+//!   probe asks for the document's dominant topic token.
+//! - `FewShot`   (TREC/TriviaQA/SamSum): pattern induction from in-context
+//!   examples of an input→label mapping.
+//! - `Code`      (LCC/RepoBench-P): bracket/identifier matching — predict
+//!   the identifier bound to an "opening" token seen long before.
+
+use crate::util::{rng::Zipf, Rng};
+
+use super::{Query, TaskBatch};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LongBenchTask {
+    QaSingle,
+    QaMulti,
+    Summarize,
+    FewShot,
+    Code,
+}
+
+impl LongBenchTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LongBenchTask::QaSingle => "QA-single",
+            LongBenchTask::QaMulti => "QA-multi",
+            LongBenchTask::Summarize => "Summarize",
+            LongBenchTask::FewShot => "FewShot",
+            LongBenchTask::Code => "Code",
+        }
+    }
+
+    pub fn all() -> &'static [LongBenchTask] {
+        &[
+            LongBenchTask::QaSingle,
+            LongBenchTask::QaMulti,
+            LongBenchTask::Summarize,
+            LongBenchTask::FewShot,
+            LongBenchTask::Code,
+        ]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LongBenchConfig {
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+const QUERY_MARK: i32 = 2;
+const BIND_MARK: i32 = 3;
+
+pub fn generate(task: LongBenchTask, cfg: &LongBenchConfig, batch: usize, rng: &mut Rng) -> TaskBatch {
+    let key_lo = cfg.vocab * 3 / 4;
+    let key_n = (cfg.vocab - key_lo) / 2;
+    let val_lo = key_lo + key_n;
+    let val_n = cfg.vocab - val_lo;
+    let filler = Zipf::new(key_lo - 4, 1.1);
+    let seq = cfg.seq;
+
+    let mut tokens = Vec::with_capacity(batch * seq);
+    let mut queries = Vec::new();
+    for b in 0..batch {
+        let mut row: Vec<i32> = (0..seq).map(|_| (4 + filler.sample(rng)) as i32).collect();
+        match task {
+            LongBenchTask::QaSingle => {
+                let key = (key_lo + rng.below(key_n)) as i32;
+                let val = (val_lo + rng.below(val_n)) as i32;
+                let depth = rng.range(seq / 16, seq / 3);
+                row[depth] = BIND_MARK;
+                row[depth + 1] = key;
+                row[depth + 2] = val;
+                row[seq - 3] = QUERY_MARK;
+                row[seq - 2] = key;
+                row[seq - 1] = val;
+                queries.push(Query { batch_idx: b, pos: seq - 2, answer: val });
+            }
+            LongBenchTask::QaMulti => {
+                // k -> a planted early; a -> v planted mid; query k expects v
+                let k = (key_lo + rng.below(key_n)) as i32;
+                let a = (key_lo + rng.below(key_n)) as i32;
+                let v = (val_lo + rng.below(val_n)) as i32;
+                let p1 = rng.range(4, seq / 4);
+                let p2 = rng.range(seq / 2, 3 * seq / 4);
+                row[p1] = BIND_MARK;
+                row[p1 + 1] = k;
+                row[p1 + 2] = a;
+                row[p2] = BIND_MARK;
+                row[p2 + 1] = a;
+                row[p2 + 2] = v;
+                row[seq - 3] = QUERY_MARK;
+                row[seq - 2] = k;
+                row[seq - 1] = v;
+                queries.push(Query { batch_idx: b, pos: seq - 2, answer: v });
+            }
+            LongBenchTask::Summarize => {
+                // a "topic" value token is repeated throughout; the probe
+                // asks for it. Global frequency, not a single position.
+                let topic = (val_lo + rng.below(val_n)) as i32;
+                let reps = seq / 8;
+                for _ in 0..reps {
+                    let p = rng.below(seq - 2);
+                    row[p] = topic;
+                }
+                row[seq - 2] = QUERY_MARK;
+                row[seq - 1] = topic;
+                queries.push(Query { batch_idx: b, pos: seq - 2, answer: topic });
+            }
+            LongBenchTask::FewShot => {
+                // consistent mapping f(key_class) = label shown n times,
+                // then a fresh instance of a seen key must get its label.
+                let n_classes = 4.min(key_n);
+                let classes = rng.sample_indices(key_n, n_classes);
+                let labels: Vec<i32> =
+                    (0..n_classes).map(|_| (val_lo + rng.below(val_n)) as i32).collect();
+                let n_examples = 6;
+                let mut pos = rng.range(2, 6);
+                for _ in 0..n_examples {
+                    if pos + 3 >= seq - 3 {
+                        break;
+                    }
+                    let c = rng.below(n_classes);
+                    row[pos] = BIND_MARK;
+                    row[pos + 1] = (key_lo + classes[c]) as i32;
+                    row[pos + 2] = labels[c];
+                    pos += rng.range(4, (seq / n_examples).max(5));
+                }
+                let c = rng.below(n_classes);
+                row[seq - 3] = QUERY_MARK;
+                row[seq - 2] = (key_lo + classes[c]) as i32;
+                row[seq - 1] = labels[c];
+                queries.push(Query { batch_idx: b, pos: seq - 2, answer: labels[c] });
+            }
+            LongBenchTask::Code => {
+                // "open" binds an identifier; much later the matching
+                // "close" (QUERY) must name it — scope matching.
+                let ident = (val_lo + rng.below(val_n)) as i32;
+                let p = rng.range(2, seq / 4);
+                row[p] = BIND_MARK;
+                row[p + 1] = ident;
+                row[seq - 2] = QUERY_MARK;
+                row[seq - 1] = ident;
+                queries.push(Query { batch_idx: b, pos: seq - 2, answer: ident });
+            }
+        }
+        tokens.extend_from_slice(&row);
+    }
+    TaskBatch { tokens, batch, seq, queries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_families_consistent() {
+        let cfg = LongBenchConfig { seq: 256, vocab: 256 };
+        let mut rng = Rng::new(1);
+        for &task in LongBenchTask::all() {
+            let tb = generate(task, &cfg, 3, &mut rng);
+            assert!(tb.queries_consistent(), "{}", task.name());
+            assert_eq!(tb.queries.len(), 3);
+            assert!(tb.tokens.iter().all(|&t| (t as usize) < cfg.vocab));
+        }
+    }
+
+    #[test]
+    fn qa_multi_requires_both_hops() {
+        // the answer token must NOT directly co-occur with the query key
+        // except at the probe (forcing 2-hop composition).
+        let cfg = LongBenchConfig { seq: 128, vocab: 256 };
+        let mut rng = Rng::new(2);
+        let tb = generate(LongBenchTask::QaMulti, &cfg, 1, &mut rng);
+        let q = tb.queries[0];
+        let key = tb.token(0, q.pos);
+        // find first binding of key: next token is the bridge, not answer
+        for t in 0..q.pos - 1 {
+            if tb.token(0, t) == key && tb.token(0, t - 1) == 3 {
+                assert_ne!(tb.token(0, t + 1), q.answer, "shortcut leak at {t}");
+                return;
+            }
+        }
+        panic!("key binding not found");
+    }
+
+    #[test]
+    fn summarize_topic_is_dominant() {
+        let cfg = LongBenchConfig { seq: 256, vocab: 256 };
+        let mut rng = Rng::new(3);
+        let tb = generate(LongBenchTask::Summarize, &cfg, 1, &mut rng);
+        let topic = tb.queries[0].answer;
+        let count = (0..tb.seq).filter(|&t| tb.token(0, t) == topic).count();
+        assert!(count >= 256 / 8 / 2, "topic appears only {count} times");
+    }
+}

@@ -1,0 +1,144 @@
+//! Multi-Query Associative Recall (Arora et al., 2023) — Table 2 / Fig. 9.
+//!
+//! Layout (paper §4.1 / App. D setup): a 256-token sequence opens with
+//! `n_pairs` key–value bindings `k_i v_i`, followed by filler and the
+//! queries: each re-occurrence of `k_i` must be answered with `v_i` at the
+//! next position. Keys/values/filler live in disjoint vocabulary ranges
+//! so chance accuracy is ~1/n_values.
+
+use crate::util::Rng;
+
+use super::{Query, TaskBatch};
+
+#[derive(Debug, Clone)]
+pub struct MqarConfig {
+    pub seq: usize,
+    pub n_pairs: usize,
+    pub n_keys: usize,
+    pub n_values: usize,
+    /// vocabulary layout: [0,2) specials, [2, 2+n_keys) keys,
+    /// [2+n_keys, 2+n_keys+n_values) values, rest filler
+    pub vocab: usize,
+}
+
+impl Default for MqarConfig {
+    fn default() -> Self {
+        MqarConfig { seq: 256, n_pairs: 16, n_keys: 64, n_values: 64, vocab: 192 }
+    }
+}
+
+impl MqarConfig {
+    pub fn key_token(&self, i: usize) -> i32 {
+        (2 + i) as i32
+    }
+    pub fn value_token(&self, i: usize) -> i32 {
+        (2 + self.n_keys + i) as i32
+    }
+    fn filler_range(&self) -> (usize, usize) {
+        (2 + self.n_keys + self.n_values, self.vocab)
+    }
+}
+
+/// Generate one batch of MQAR instances.
+pub fn generate(cfg: &MqarConfig, batch: usize, rng: &mut Rng) -> TaskBatch {
+    assert!(2 * cfg.n_pairs * 2 <= cfg.seq, "sequence too short for pairs+queries");
+    let (flo, fhi) = cfg.filler_range();
+    assert!(fhi > flo, "no filler tokens available");
+    let mut tokens = Vec::with_capacity(batch * cfg.seq);
+    let mut queries = Vec::new();
+    for b in 0..batch {
+        // distinct keys, random values
+        let keys = rng.sample_indices(cfg.n_keys, cfg.n_pairs);
+        let values: Vec<usize> = (0..cfg.n_pairs).map(|_| rng.below(cfg.n_values)).collect();
+        let mut row = Vec::with_capacity(cfg.seq);
+        // binding prefix
+        for i in 0..cfg.n_pairs {
+            row.push(cfg.key_token(keys[i]));
+            row.push(cfg.value_token(values[i]));
+        }
+        // queries at random positions in the remainder (each takes 2 slots)
+        let remaining = cfg.seq - row.len();
+        let n_queries = cfg.n_pairs.min(remaining / 2);
+        // choose which pairs to query (shuffled, possibly all)
+        let mut order: Vec<usize> = (0..cfg.n_pairs).collect();
+        rng.shuffle(&mut order);
+        let mut slots: Vec<bool> = vec![false; remaining];
+        // reserve n_queries random 2-aligned slots
+        let mut starts: Vec<usize> = (0..remaining / 2).collect();
+        rng.shuffle(&mut starts);
+        for &s in starts.iter().take(n_queries) {
+            slots[2 * s] = true;
+        }
+        let base = row.len();
+        let mut qi = 0;
+        let mut pos = 0;
+        while pos < remaining {
+            if slots[pos] && qi < n_queries && pos + 1 < remaining {
+                let pair = order[qi];
+                qi += 1;
+                queries.push(Query {
+                    batch_idx: b,
+                    pos: base + pos,
+                    answer: cfg.value_token(values[pair]),
+                });
+                row.push(cfg.key_token(keys[pair]));
+                row.push(cfg.value_token(values[pair]));
+                pos += 2;
+            } else {
+                row.push(rng.range(flo, fhi) as i32);
+                pos += 1;
+            }
+        }
+        debug_assert_eq!(row.len(), cfg.seq);
+        tokens.extend_from_slice(&row);
+    }
+    TaskBatch { tokens, batch, seq: cfg.seq, queries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queries_are_consistent_and_counted() {
+        let cfg = MqarConfig::default();
+        let mut rng = Rng::new(7);
+        for n_pairs in [4usize, 16, 64] {
+            let c = MqarConfig { n_pairs, ..cfg.clone() };
+            let tb = generate(&c, 4, &mut rng);
+            assert!(tb.queries_consistent());
+            assert_eq!(tb.tokens.len(), 4 * c.seq);
+            assert!(!tb.queries.is_empty());
+            // all tokens in vocab
+            assert!(tb.tokens.iter().all(|&t| (t as usize) < c.vocab));
+        }
+    }
+
+    #[test]
+    fn perfect_predictor_scores_one() {
+        let cfg = MqarConfig::default();
+        let mut rng = Rng::new(8);
+        let tb = generate(&cfg, 2, &mut rng);
+        // oracle: predict token at pos+1 for every position
+        let mut preds = vec![0i32; tb.tokens.len()];
+        for b in 0..tb.batch {
+            for t in 0..tb.seq - 1 {
+                preds[b * tb.seq + t] = tb.token(b, t + 1);
+            }
+        }
+        assert!((tb.accuracy(&preds) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn keys_bound_once_per_sequence() {
+        // distinct keys in the binding prefix
+        let cfg = MqarConfig { n_pairs: 32, ..Default::default() };
+        let mut rng = Rng::new(9);
+        let tb = generate(&cfg, 1, &mut rng);
+        let prefix: Vec<i32> = (0..32).map(|i| tb.token(0, 2 * i)).collect();
+        let mut sorted = prefix.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 32);
+    }
+}

@@ -1,0 +1,195 @@
+//! Needle-In-A-Haystack suite (RULER; paper Table 4 / Fig. 10).
+//!
+//! Six tasks, each a synthetic analogue of the RULER variant (DESIGN.md
+//! §6): a haystack of Zipf-distributed filler hides needles of the form
+//! `NEEDLE_MARK key value…`; the probe `QUERY_MARK key` at the end must be
+//! answered with the value token(s). Variants differ in needle count,
+//! value length, number of queried needles and number of values per key:
+//!
+//! - `SNiah1` — pass-key: 1 needle, 1-token value
+//! - `SNiah2` — number-in-haystack: 1 needle, 3-token value
+//! - `SNiah3` — uuid-in-haystack: 1 needle, 6-token value
+//! - `MkNiah` — multi-key: 4 needles, 1 queried
+//! - `MqNiah` — multi-query: 4 needles, 2 queried
+//! - `MvNiah` — multi-value: 1 key bound to 3 values, all queried
+
+use crate::util::{rng::Zipf, Rng};
+
+use super::{Query, TaskBatch};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NiahTask {
+    SNiah1,
+    SNiah2,
+    SNiah3,
+    MkNiah,
+    MqNiah,
+    MvNiah,
+}
+
+impl NiahTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NiahTask::SNiah1 => "S-NIAH-1",
+            NiahTask::SNiah2 => "S-NIAH-2",
+            NiahTask::SNiah3 => "S-NIAH-3",
+            NiahTask::MkNiah => "MK-NIAH-1",
+            NiahTask::MqNiah => "MQ-NIAH",
+            NiahTask::MvNiah => "MV-NIAH",
+        }
+    }
+
+    pub fn all() -> &'static [NiahTask] {
+        &[
+            NiahTask::SNiah1,
+            NiahTask::SNiah2,
+            NiahTask::SNiah3,
+            NiahTask::MkNiah,
+            NiahTask::MqNiah,
+            NiahTask::MvNiah,
+        ]
+    }
+
+    fn spec(&self) -> (usize, usize, usize, usize) {
+        // (n_needles, value_len, n_queried, values_per_key)
+        match self {
+            NiahTask::SNiah1 => (1, 1, 1, 1),
+            NiahTask::SNiah2 => (1, 3, 1, 1),
+            NiahTask::SNiah3 => (1, 6, 1, 1),
+            NiahTask::MkNiah => (4, 1, 1, 1),
+            NiahTask::MqNiah => (4, 1, 2, 1),
+            NiahTask::MvNiah => (1, 1, 1, 3),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct NiahConfig {
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl Default for NiahConfig {
+    fn default() -> Self {
+        NiahConfig { seq: 512, vocab: 512 }
+    }
+}
+
+const NEEDLE_MARK: i32 = 1;
+const QUERY_MARK: i32 = 2;
+
+/// Generate one batch. Needle depth is uniform over the haystack.
+pub fn generate(task: NiahTask, cfg: &NiahConfig, batch: usize, rng: &mut Rng) -> TaskBatch {
+    let (n_needles, value_len, n_queried, vals_per_key) = task.spec();
+    // vocabulary layout: [0,4) specials; keys/values from the top quarter;
+    // filler from the bulk.
+    let key_lo = cfg.vocab * 3 / 4;
+    let key_n = (cfg.vocab - key_lo) / 2;
+    let val_lo = key_lo + key_n;
+    let val_n = cfg.vocab - val_lo;
+    let filler = Zipf::new(key_lo - 4, 1.1);
+
+    let mut tokens = Vec::with_capacity(batch * cfg.seq);
+    let mut queries = Vec::new();
+    for b in 0..batch {
+        let keys = rng.sample_indices(key_n, n_needles);
+        // values: per needle, vals_per_key sequences of value_len tokens
+        let needle_vals: Vec<Vec<Vec<i32>>> = (0..n_needles)
+            .map(|_| {
+                (0..vals_per_key)
+                    .map(|_| (0..value_len).map(|_| (val_lo + rng.below(val_n)) as i32).collect())
+                    .collect()
+            })
+            .collect();
+
+        // needle segments: MARK key v...v  (per value binding)
+        let mut segments: Vec<Vec<i32>> = Vec::new();
+        for (ni, &key) in keys.iter().enumerate() {
+            for vi in 0..vals_per_key {
+                let mut seg = vec![NEEDLE_MARK, (key_lo + key) as i32];
+                seg.extend(&needle_vals[ni][vi]);
+                segments.push(seg);
+            }
+        }
+
+        // probe: for each queried needle (+each value), QUERY key -> answer
+        let queried: Vec<usize> = (0..n_queried).collect();
+        let probe_len: usize = queried
+            .iter()
+            .map(|_| vals_per_key * (2 + value_len))
+            .sum();
+        let hay_len = cfg.seq - probe_len;
+        let seg_total: usize = segments.iter().map(|s| s.len()).sum();
+        assert!(seg_total < hay_len, "needles don't fit");
+
+        // place segments at random non-overlapping depths
+        let mut row: Vec<i32> = (0..hay_len).map(|_| (4 + filler.sample(rng)) as i32).collect();
+        let mut placed: Vec<(usize, usize)> = Vec::new(); // (start, len)
+        for seg in &segments {
+            loop {
+                let start = rng.below(hay_len - seg.len());
+                if placed.iter().all(|&(s, l)| start + seg.len() <= s || start >= s + l) {
+                    row[start..start + seg.len()].copy_from_slice(seg);
+                    placed.push((start, seg.len()));
+                    break;
+                }
+            }
+        }
+
+        // probes at the end
+        for &ni in &queried {
+            for vi in 0..vals_per_key {
+                row.push(QUERY_MARK);
+                row.push((key_lo + keys[ni]) as i32);
+                let qpos = row.len() - 1; // predict first value token from key pos
+                for (j, &vt) in needle_vals[ni][vi].iter().enumerate() {
+                    queries.push(Query { batch_idx: b, pos: qpos + j, answer: vt });
+                    row.push(vt);
+                }
+            }
+        }
+        debug_assert_eq!(row.len(), cfg.seq, "row len {} != seq {}", row.len(), cfg.seq);
+        tokens.extend_from_slice(&row);
+    }
+    TaskBatch { tokens, batch, seq: cfg.seq, queries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_consistent_batches() {
+        let cfg = NiahConfig { seq: 256, vocab: 256 };
+        let mut rng = Rng::new(1);
+        for &task in NiahTask::all() {
+            let tb = generate(task, &cfg, 3, &mut rng);
+            assert!(tb.queries_consistent(), "{}", task.name());
+            assert!(tb.tokens.iter().all(|&t| (t as usize) < cfg.vocab));
+            let (_, value_len, n_queried, vpk) = task.spec();
+            assert_eq!(tb.queries.len(), 3 * n_queried * vpk * value_len);
+        }
+    }
+
+    #[test]
+    fn needle_key_appears_in_haystack() {
+        let cfg = NiahConfig { seq: 256, vocab: 256 };
+        let mut rng = Rng::new(2);
+        let tb = generate(NiahTask::SNiah1, &cfg, 1, &mut rng);
+        // key token (at probe) must appear earlier in the haystack too
+        let q = tb.queries[0];
+        let key = tb.token(0, q.pos); // key sits at the query position
+        let count = (0..q.pos).filter(|&t| tb.token(0, t) == key).count();
+        assert!(count >= 1, "needle key missing from haystack");
+    }
+
+    #[test]
+    fn chance_level_is_low() {
+        // A constant predictor should score ~0 on value prediction.
+        let cfg = NiahConfig { seq: 256, vocab: 256 };
+        let mut rng = Rng::new(3);
+        let tb = generate(NiahTask::MkNiah, &cfg, 4, &mut rng);
+        let preds = vec![5i32; tb.tokens.len()];
+        assert!(tb.accuracy(&preds) < 0.05);
+    }
+}

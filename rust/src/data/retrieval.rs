@@ -1,0 +1,188 @@
+//! In-context retrieval suite (paper Table 7: SWDE, SQuAD, FDA, TriviaQA,
+//! Drop, NQ) — synthetic analogues with the benchmark-defining knobs:
+//! evidence position, distractor count, answer length, and the input
+//! *truncation sweep* (512 / 1024 / 2048 / 16k in the paper).
+//!
+//! Each profile plants a queried fact at a controlled depth inside a
+//! filler+distractor document, then truncates **from the left** (as the
+//! paper does) — once the evidence falls outside the window, accuracy
+//! drops to chance, which is exactly the state-size effect Table 7 probes.
+
+use crate::util::{rng::Zipf, Rng};
+
+use super::{Query, TaskBatch};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetrievalTask {
+    Swde,
+    Squad,
+    Fda,
+    TriviaQa,
+    Drop,
+    Nq,
+}
+
+impl RetrievalTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RetrievalTask::Swde => "SWDE",
+            RetrievalTask::Squad => "SQuAD",
+            RetrievalTask::Fda => "FDA",
+            RetrievalTask::TriviaQa => "TriviaQA",
+            RetrievalTask::Drop => "Drop",
+            RetrievalTask::Nq => "NQ",
+        }
+    }
+
+    pub fn all() -> &'static [RetrievalTask] {
+        &[
+            RetrievalTask::Swde,
+            RetrievalTask::Squad,
+            RetrievalTask::Fda,
+            RetrievalTask::TriviaQa,
+            RetrievalTask::Drop,
+            RetrievalTask::Nq,
+        ]
+    }
+
+    /// (n_distractor_fields, answer_len, evidence_depth_frac)
+    /// depth_frac = where in the document the evidence sits (0 = oldest).
+    fn spec(&self) -> (usize, usize, f64) {
+        match self {
+            RetrievalTask::Swde => (8, 1, 0.2),      // many fields, shallow
+            RetrievalTask::Squad => (4, 2, 0.5),     // mid-document span
+            RetrievalTask::Fda => (12, 1, 0.1),      // long docs, early field
+            RetrievalTask::TriviaQa => (2, 1, 0.5),  // sparse evidence
+            RetrievalTask::Drop => (6, 2, 0.7),      // late, multi-token
+            RetrievalTask::Nq => (3, 1, 0.3),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RetrievalConfig {
+    /// full (untruncated) document length incl. probe
+    pub doc_len: usize,
+    /// evaluated window (truncate from the left, keep the probe)
+    pub window: usize,
+    pub vocab: usize,
+}
+
+const QUERY_MARK: i32 = 2;
+const FIELD_MARK: i32 = 3;
+
+/// Generate a batch for one task at one truncation window.
+pub fn generate(task: RetrievalTask, cfg: &RetrievalConfig, batch: usize, rng: &mut Rng) -> TaskBatch {
+    let (n_distract, ans_len, depth_frac) = task.spec();
+    let key_lo = cfg.vocab * 3 / 4;
+    let key_n = (cfg.vocab - key_lo) / 2;
+    let val_lo = key_lo + key_n;
+    let val_n = cfg.vocab - val_lo;
+    let filler = Zipf::new(key_lo - 4, 1.1);
+
+    let probe_len = 2 + ans_len;
+    let body = cfg.doc_len - probe_len;
+    let mut tokens = Vec::with_capacity(batch * cfg.window);
+    let mut queries = Vec::new();
+    for b in 0..batch {
+        let mut row: Vec<i32> = (0..body).map(|_| (4 + filler.sample(rng)) as i32).collect();
+        // fields: FIELD key val...  ; one is the target
+        let keys = rng.sample_indices(key_n, n_distract + 1);
+        let target = 0usize;
+        let mut answer = Vec::new();
+        for (fi, &key) in keys.iter().enumerate() {
+            let vals: Vec<i32> = (0..ans_len).map(|_| (val_lo + rng.below(val_n)) as i32).collect();
+            let seg_len = 2 + ans_len;
+            // the target field sits at its task-defined depth; distractors random
+            let start = if fi == target {
+                ((body - seg_len) as f64 * depth_frac) as usize
+            } else {
+                rng.below(body - seg_len)
+            };
+            // allow overlap for distractors (filler anyway); rewrite target last
+            if fi != target {
+                row[start] = FIELD_MARK;
+                row[start + 1] = (key_lo + key) as i32;
+                for (j, &v) in vals.iter().enumerate() {
+                    row[start + 2 + j] = v;
+                }
+            } else {
+                answer = vals;
+            }
+        }
+        // write target field after distractors so it is never clobbered
+        let seg_len = 2 + ans_len;
+        let tstart = ((body - seg_len) as f64 * depth_frac) as usize;
+        row[tstart] = FIELD_MARK;
+        row[tstart + 1] = (key_lo + keys[target]) as i32;
+        for (j, &v) in answer.iter().enumerate() {
+            row[tstart + 2 + j] = v;
+        }
+        // probe
+        row.push(QUERY_MARK);
+        row.push((key_lo + keys[target]) as i32);
+        let qpos_full = row.len() - 1;
+        for &v in &answer {
+            row.push(v);
+        }
+        debug_assert_eq!(row.len(), cfg.doc_len);
+        // truncate from the left to `window`
+        let cut = cfg.doc_len.saturating_sub(cfg.window);
+        let win = &row[cut..];
+        for (j, &v) in answer.iter().enumerate() {
+            let pos = qpos_full - cut + j;
+            queries.push(Query { batch_idx: b, pos, answer: v });
+        }
+        tokens.extend_from_slice(win);
+    }
+    TaskBatch { tokens, batch, seq: cfg.window, queries }
+}
+
+/// Whether the evidence survives the truncation (used to compute the
+/// expected ceiling of a perfect-recall model).
+pub fn evidence_survives(task: RetrievalTask, cfg: &RetrievalConfig) -> bool {
+    let (_, ans_len, depth_frac) = task.spec();
+    let body = cfg.doc_len - (2 + ans_len);
+    let tstart = ((body - (2 + ans_len)) as f64 * depth_frac) as usize;
+    let cut = cfg.doc_len.saturating_sub(cfg.window);
+    tstart >= cut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_consistent_untruncated() {
+        let cfg = RetrievalConfig { doc_len: 512, window: 512, vocab: 256 };
+        let mut rng = Rng::new(1);
+        for &task in RetrievalTask::all() {
+            let tb = generate(task, &cfg, 2, &mut rng);
+            assert!(tb.queries_consistent(), "{}", task.name());
+            assert!(evidence_survives(task, &cfg));
+        }
+    }
+
+    #[test]
+    fn truncation_can_remove_evidence() {
+        // FDA plants evidence at 10% depth; a half-doc window cuts it off,
+        // while Drop's late (70%) evidence survives the same window.
+        let cfg = RetrievalConfig { doc_len: 1024, window: 512, vocab: 256 };
+        assert!(!evidence_survives(RetrievalTask::Fda, &cfg));
+        assert!(evidence_survives(RetrievalTask::Drop, &cfg));
+    }
+
+    #[test]
+    fn oracle_scores_one_when_evidence_survives() {
+        let cfg = RetrievalConfig { doc_len: 256, window: 256, vocab: 256 };
+        let mut rng = Rng::new(2);
+        let tb = generate(RetrievalTask::Squad, &cfg, 2, &mut rng);
+        let mut preds = vec![0i32; tb.tokens.len()];
+        for b in 0..tb.batch {
+            for t in 0..tb.seq - 1 {
+                preds[b * tb.seq + t] = tb.token(b, t + 1);
+            }
+        }
+        assert!((tb.accuracy(&preds) - 1.0).abs() < 1e-9);
+    }
+}

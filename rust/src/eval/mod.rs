@@ -1,0 +1,148 @@
+//! Evaluation harness: perplexity, per-position loss (Fig. 5), and
+//! task-batch accuracy (Tables 2/4/7/8) over the compiled `eval` artifact;
+//! plus fixed-width table printers shared by all experiment commands.
+
+use anyhow::Result;
+
+use crate::data::TaskBatch;
+use crate::runtime::ModelHandle;
+
+/// Mean loss + perplexity over `n_batches` held-out batches.
+pub fn perplexity(
+    model: &ModelHandle,
+    mut next_batch: impl FnMut() -> Vec<i32>,
+    n_batches: usize,
+) -> Result<(f64, f64)> {
+    let mut total = 0.0;
+    for _ in 0..n_batches {
+        let tokens = next_batch();
+        let out = model.eval(&tokens)?;
+        total += out.loss as f64;
+    }
+    let mean = total / n_batches as f64;
+    Ok((mean, mean.exp()))
+}
+
+/// Average per-position loss curve over batches (Fig. 5 input).
+pub fn per_position_loss(
+    model: &ModelHandle,
+    mut next_batch: impl FnMut() -> Vec<i32>,
+    n_batches: usize,
+) -> Result<Vec<f64>> {
+    let b = model.manifest.batch;
+    let t = model.manifest.cfg("seq_len");
+    let mut acc = vec![0.0f64; t - 1];
+    for _ in 0..n_batches {
+        let tokens = next_batch();
+        let out = model.eval(&tokens)?;
+        for bi in 0..b {
+            for p in 0..t - 1 {
+                acc[p] += out.per_pos[bi * (t - 1) + p] as f64;
+            }
+        }
+    }
+    for v in acc.iter_mut() {
+        *v /= (n_batches * b) as f64;
+    }
+    Ok(acc)
+}
+
+/// Accuracy of the model's argmax predictions on a task batch. The batch
+/// shape must match the compiled eval artifact.
+pub fn task_accuracy(model: &ModelHandle, tb: &TaskBatch) -> Result<f64> {
+    assert_eq!(tb.batch, model.manifest.batch, "batch mismatch");
+    assert_eq!(tb.seq, model.manifest.cfg("seq_len"), "seq mismatch");
+    let out = model.eval(&tb.tokens)?;
+    Ok(tb.accuracy(&out.preds))
+}
+
+/// Accuracy averaged over several generated batches.
+pub fn task_accuracy_n(
+    model: &ModelHandle,
+    mut gen: impl FnMut() -> TaskBatch,
+    n: usize,
+) -> Result<f64> {
+    let mut acc = 0.0;
+    for _ in 0..n {
+        acc += task_accuracy(model, &gen())?;
+    }
+    Ok(acc / n as f64)
+}
+
+/// Fixed-width table printer used by every experiment command.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i == 0 {
+                    s.push_str(&format!("{:<w$}", c, w = widths[i]));
+                } else {
+                    s.push_str(&format!("  {:>w$}", c, w = widths[i]));
+                }
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut obj = Json::obj();
+                for (h, c) in self.headers.iter().zip(r) {
+                    obj = obj.set(h, c.as_str());
+                }
+                obj
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_prints_and_serializes() {
+        let mut t = Table::new(&["model", "acc"]);
+        t.row(vec!["mamba2".into(), "0.93".into()]);
+        t.row(vec!["loglinear".into(), "0.97".into()]);
+        t.print();
+        let j = t.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].get("acc").unwrap().as_str(), Some("0.97"));
+    }
+}

@@ -1,0 +1,312 @@
+//! Fenwick-tree prefix partitioning (paper §3.1, footnote 8).
+//!
+//! For a query at (0-indexed) position `t`, the prefix `[0, t]` is
+//! partitioned into a sentinel bucket `B^(0) = {t}` plus at most
+//! `⌈log2 t⌉` power-of-two buckets: greedily subtract the largest power
+//! of two dividing the remaining boundary (`lssb`). Bucket at level
+//! `ℓ ≥ 1` has size `2^(ℓ-1)`.
+//!
+//! Example, `t = 6` (binary 110): buckets `{6}` (ℓ=0), `{4,5}` (ℓ=2),
+//! `{0..3}` (ℓ=3) — recent tokens at fine resolution, distant tokens
+//! coarse.
+//!
+//! Everything else in the repo (the `M^H` mask, the chunkwise algorithm's
+//! level masks, the decode-time state manager, the Pallas kernels' python
+//! twin `fenwick.py`) is derived from the three functions here:
+//! [`lssb`], [`buckets`], [`level_of`].
+
+/// Index of the least significant set bit of `t` (`t > 0`), i.e. the
+/// largest `ℓ` with `2^ℓ | t`.
+#[inline]
+pub fn lssb(t: usize) -> u32 {
+    debug_assert!(t > 0, "lssb(0) is undefined");
+    t.trailing_zeros()
+}
+
+/// A contiguous bucket `[start, end)` at hierarchy level `level`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bucket {
+    pub level: usize,
+    pub start: usize,
+    pub end: usize, // exclusive
+}
+
+impl Bucket {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+    pub fn contains(&self, s: usize) -> bool {
+        (self.start..self.end).contains(&s)
+    }
+}
+
+/// The Fenwick partition of `[0, t]` for a query at position `t`,
+/// ordered from the sentinel (level 0) to the coarsest bucket.
+pub fn buckets(t: usize) -> Vec<Bucket> {
+    let mut out = vec![Bucket { level: 0, start: t, end: t + 1 }];
+    let mut b = t;
+    while b > 0 {
+        let l = lssb(b);
+        let size = 1usize << l;
+        out.push(Bucket {
+            level: l as usize + 1,
+            start: b - size,
+            end: b,
+        });
+        b -= size;
+    }
+    out
+}
+
+/// Level `ℓ(t, s)` of the bucket containing `s` in the partition for a
+/// query at `t`. Requires `s <= t`.
+pub fn level_of(t: usize, s: usize) -> usize {
+    debug_assert!(s <= t, "level_of requires s <= t");
+    if s == t {
+        return 0;
+    }
+    let mut b = t;
+    loop {
+        debug_assert!(b > 0);
+        let l = lssb(b);
+        let size = 1usize << l;
+        if s >= b - size {
+            return l as usize + 1;
+        }
+        b -= size;
+    }
+}
+
+/// Number of distinct levels needed for sequences of length `seq_len`
+/// (positions `0..seq_len`): levels `0 ..= ceil_log2(seq_len)`, matching
+/// the paper's `num_levels = log2(T) + 1` for power-of-two `T`.
+pub fn num_levels(seq_len: usize) -> usize {
+    assert!(seq_len >= 1);
+    ceil_log2(seq_len) + 1
+}
+
+/// Smallest `k` with `2^k >= n`.
+pub fn ceil_log2(n: usize) -> usize {
+    assert!(n >= 1);
+    (usize::BITS - (n - 1).leading_zeros()) as usize
+}
+
+/// The set of levels whose bucket is non-empty at position `t`
+/// (`popcount(t) + 1` of them — roughly half of all levels, App. B.4).
+pub fn active_levels(t: usize) -> Vec<usize> {
+    buckets(t).iter().map(|b| b.level).collect()
+}
+
+/// Boolean level mask at granularity `n`: `mask[i][j] = (level_of(i,j) == level)`,
+/// zero above the diagonal. This is the `level_mask` of the paper's
+/// Appendix-C reference code; at chunk granularity it selects which
+/// chunk-to-chunk state transfers belong to inter-chunk level `level`.
+pub fn level_mask(level: usize, n: usize) -> Vec<Vec<bool>> {
+    let mut m = vec![vec![false; n]; n];
+    for (i, row) in m.iter_mut().enumerate() {
+        for (j, cell) in row.iter_mut().enumerate().take(i + 1) {
+            *cell = level_of(i, j) == level;
+        }
+    }
+    m
+}
+
+/// `M^H` scalar mask (Eq. 4): `M[t][s] = lambda[t][level_of(t,s)]` for
+/// `s <= t`, else 0. `lambda` is `(T, num_levels)` row-major.
+pub fn hmask(lambda: &crate::tensor::Mat, seq_len: usize) -> crate::tensor::Mat {
+    assert!(lambda.rows >= seq_len);
+    let nl = lambda.cols;
+    crate::tensor::Mat::from_fn(seq_len, seq_len, |t, s| {
+        if s > t {
+            0.0
+        } else {
+            let l = level_of(t, s);
+            assert!(l < nl, "lambda has too few levels: need {l}, have {nl}");
+            lambda.at(t, l)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, UsizeIn};
+
+    #[test]
+    fn lssb_known_values() {
+        assert_eq!(lssb(1), 0);
+        assert_eq!(lssb(2), 1);
+        assert_eq!(lssb(6), 1);
+        assert_eq!(lssb(8), 3);
+        assert_eq!(lssb(12), 2);
+    }
+
+    #[test]
+    fn buckets_t6_matches_paper_figure() {
+        // t=6 -> {6} (l=0), {4,5} (l=2), {0..3} (l=3)
+        let bs = buckets(6);
+        assert_eq!(
+            bs,
+            vec![
+                Bucket { level: 0, start: 6, end: 7 },
+                Bucket { level: 2, start: 4, end: 6 },
+                Bucket { level: 3, start: 0, end: 4 },
+            ]
+        );
+    }
+
+    #[test]
+    fn buckets_partition_prefix_property() {
+        check("buckets partition [0,t]", 300, &UsizeIn(0, 5000), |&t| {
+            let bs = buckets(t);
+            // Disjoint cover of [0, t]: sort by start and check contiguity.
+            let mut sorted = bs.clone();
+            sorted.sort_by_key(|b| b.start);
+            let mut pos = 0;
+            for b in &sorted {
+                if b.start != pos {
+                    return false;
+                }
+                pos = b.end;
+            }
+            pos == t + 1
+        });
+    }
+
+    #[test]
+    fn bucket_sizes_are_powers_of_two_property() {
+        check("bucket sizes 2^(l-1)", 300, &UsizeIn(0, 5000), |&t| {
+            buckets(t).iter().all(|b| {
+                if b.level == 0 {
+                    b.len() == 1
+                } else {
+                    b.len() == (1 << (b.level - 1))
+                }
+            })
+        });
+    }
+
+    #[test]
+    fn bucket_count_is_logarithmic_property() {
+        check("O(log t) buckets", 300, &UsizeIn(1, 100_000), |&t| {
+            let n = buckets(t).len();
+            n == t.count_ones() as usize + 1 && n <= ceil_log2(t + 1) + 2
+        });
+    }
+
+    #[test]
+    fn level_of_agrees_with_buckets_property() {
+        check("level_of == bucket membership", 100, &UsizeIn(0, 600), |&t| {
+            let bs = buckets(t);
+            (0..=t).all(|s| {
+                let l = level_of(t, s);
+                bs.iter().any(|b| b.contains(s) && b.level == l)
+            })
+        });
+    }
+
+    #[test]
+    fn level_zero_iff_sentinel() {
+        for t in 0..100 {
+            assert_eq!(level_of(t, t), 0);
+            for s in 0..t {
+                assert_ne!(level_of(t, s), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn num_levels_matches_paper() {
+        // T power of two: log2(T) + 1
+        assert_eq!(num_levels(1), 1);
+        assert_eq!(num_levels(8), 4);
+        assert_eq!(num_levels(256), 9);
+        // covers every level that can occur for t < T
+        for t in 0..256 {
+            for b in buckets(t) {
+                assert!(b.level < num_levels(256));
+            }
+        }
+    }
+
+    #[test]
+    fn active_levels_has_popcount_plus_one() {
+        for t in 0..2000 {
+            assert_eq!(active_levels(t).len(), t.count_ones() as usize + 1);
+        }
+    }
+
+    #[test]
+    fn level_mask_partitions_lower_triangle() {
+        let n = 32;
+        let masks: Vec<_> = (0..num_levels(n)).map(|l| level_mask(l, n)).collect();
+        for i in 0..n {
+            for j in 0..n {
+                let hits = masks.iter().filter(|m| m[i][j]).count();
+                if j <= i {
+                    assert_eq!(hits, 1, "({i},{j}) not covered exactly once");
+                } else {
+                    assert_eq!(hits, 0, "({i},{j}) above diagonal");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_level_correspondence() {
+        // level_of at token granularity for cross-chunk (t,s) equals
+        // log2(C) + level_of at chunk granularity -- the identity that
+        // makes Algorithm 1 correct.
+        let c: usize = 8; // chunk size
+        let lc = c.trailing_zeros() as usize; // log2(C)
+        let t_max = 16 * c;
+        for t in 0..t_max {
+            for s in 0..=t {
+                let (tc, sc) = (t / c, s / c);
+                if tc != sc {
+                    assert_eq!(
+                        level_of(t, s),
+                        lc + level_of(tc, sc),
+                        "t={t} s={s} tc={tc} sc={sc}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intra_chunk_levels_are_local() {
+        // Within a chunk, level_of(t,s) only depends on chunk-local offsets.
+        let c: usize = 16;
+        for chunk in 0..8 {
+            for dt in 0..c {
+                for ds in 0..=dt {
+                    let (t, s) = (chunk * c + dt, chunk * c + ds);
+                    assert_eq!(level_of(t, s), level_of(dt, ds));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hmask_selects_lambda_by_level() {
+        use crate::tensor::Mat;
+        let t_len = 8;
+        let nl = num_levels(t_len);
+        // lambda[t][l] = 100*t + l so we can read indices back.
+        let lambda = Mat::from_fn(t_len, nl, |t, l| (100 * t + l) as f32);
+        let m = hmask(&lambda, t_len);
+        for t in 0..t_len {
+            for s in 0..t_len {
+                if s > t {
+                    assert_eq!(m.at(t, s), 0.0);
+                } else {
+                    assert_eq!(m.at(t, s), (100 * t + level_of(t, s)) as f32);
+                }
+            }
+        }
+    }
+}

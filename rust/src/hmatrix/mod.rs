@@ -1,0 +1,23 @@
+//! Structured masking matrices (paper §2 and Appendix B).
+//!
+//! The paper's unified view is `O = (A ⊙ M) V`, where the *structure* of
+//! the causal mask `M` determines training/inference complexity:
+//!
+//! | structure | example | train | decode memory |
+//! |-----------|---------|-------|---------------|
+//! | all-ones lower triangle | linear attention | O(T) | O(1) |
+//! | 1-semiseparable ([`sss`]) | RetNet / Mamba-2 | O(T) | O(1) |
+//! | quasi-hierarchical ([`quasi`]) | **log-linear attention** | O(T log T) | O(log T) |
+//! | HODLR ([`hodlr`]) | general H-matrix | O(T log T) | (no known O(log T) recurrence) |
+//!
+//! [`quasi::QuasiH`] is the paper's `M^H ⊙ M^S` object; its `matvec` is the
+//! O(T log T) structured multiply that the chunkwise training algorithm
+//! exploits, and `hodlr::Hodlr` exists both as the general class it embeds
+//! into and as the weak-vs-strong admissibility ablation target (App. B.4).
+
+pub mod sss;
+pub mod hodlr;
+pub mod quasi;
+
+pub use quasi::QuasiH;
+pub use sss::SssMask;

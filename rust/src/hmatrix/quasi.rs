@@ -1,0 +1,237 @@
+//! Quasi-hierarchical masks `M = M^H ⊙ M^S` (paper Eq. 4 + App. B.3).
+//!
+//! `M[t][s] = λ_t^(ℓ(t,s)) · Π_{k=s+1}^t α_k` for `s <= t`. One basis
+//! sequence (the column one, from the gate cumprods) nests across levels
+//! — that is what makes the matrix *quasi*-hierarchical and yields the
+//! `O(log T)` decoding recurrence; the row weights `λ_t^(ℓ)` are free per
+//! level, which is what makes it strictly more expressive than a
+//! semiseparable mask.
+//!
+//! [`QuasiH::matvec`] is the `O(T log T)` structured multiply, built on a
+//! dyadic merge of block summaries (numerically safe: all intermediate
+//! quantities are products of gates `α ≤ 1`, so they underflow benignly
+//! instead of overflowing).
+
+use crate::fenwick;
+use crate::tensor::Mat;
+
+/// A quasi-hierarchical mask defined by per-step gates and per-(step,level)
+/// weights λ.
+#[derive(Debug, Clone)]
+pub struct QuasiH {
+    /// gates `α_t ∈ (0, 1]`, length T.
+    pub alpha: Vec<f32>,
+    /// λ, shape (T, num_levels(T)) row-major.
+    pub lambda: Mat,
+}
+
+impl QuasiH {
+    pub fn new(alpha: Vec<f32>, lambda: Mat) -> QuasiH {
+        assert_eq!(alpha.len(), lambda.rows);
+        assert!(
+            alpha.iter().all(|&a| a > 0.0 && a <= 1.0),
+            "gates must be in (0, 1]"
+        );
+        assert!(lambda.cols >= fenwick::num_levels(alpha.len()));
+        QuasiH { alpha, lambda }
+    }
+
+    /// Ungated variant (α = 1): the pure `M^H` of Eq. 4.
+    pub fn ungated(lambda: Mat) -> QuasiH {
+        let t = lambda.rows;
+        QuasiH::new(vec![1.0; t], lambda)
+    }
+
+    pub fn len(&self) -> usize {
+        self.alpha.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.alpha.is_empty()
+    }
+
+    /// Entry `M[t][s]` (slow; for tests and dense materialization).
+    pub fn entry(&self, t: usize, s: usize) -> f32 {
+        if s > t {
+            return 0.0;
+        }
+        let l = fenwick::level_of(t, s);
+        let decay: f64 = self.alpha[s + 1..=t].iter().map(|&a| a as f64).fold(1.0, |p, a| p * a);
+        self.lambda.at(t, l) * decay as f32
+    }
+
+    /// Dense materialization (tests / small T).
+    pub fn dense(&self) -> Mat {
+        let t = self.len();
+        // log-cumsum of gates for O(T^2) total instead of O(T^3)
+        let mut cum = vec![0.0f64; t + 1];
+        for i in 0..t {
+            cum[i + 1] = cum[i] + (self.alpha[i] as f64).ln();
+        }
+        Mat::from_fn(t, t, |i, j| {
+            if j > i {
+                0.0
+            } else {
+                let l = fenwick::level_of(i, j);
+                self.lambda.at(i, l) * (cum[i + 1] - cum[j + 1]).exp() as f32
+            }
+        })
+    }
+
+    /// `y = M x` in `O(T log T)` using dyadic block summaries.
+    ///
+    /// For each level ℓ ≥ 1, aligned blocks `B` of size `2^(ℓ-1)` carry
+    /// `Z_B = Σ_{s∈B} (Π_{k=s+1}^{max B} α_k) x_s`, merged bottom-up via
+    /// `Z_parent = Z_right + D_right · Z_left`, `D_parent = D_left·D_right`
+    /// with `D_B = Π_{k∈B} α_k`. The bucket of level ℓ for query `t`
+    /// contributes `λ_t^(ℓ) · (Π_{k=maxB+1}^t α_k) · Z_B`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let t_len = self.len();
+        assert_eq!(x.len(), t_len);
+        if t_len == 0 {
+            return Vec::new();
+        }
+        let nl = fenwick::num_levels(t_len);
+
+        // logcum[i] = sum of ln(alpha[0..i]) for the cross-bucket decay.
+        let mut logcum = vec![0.0f64; t_len + 1];
+        for i in 0..t_len {
+            logcum[i + 1] = logcum[i] + (self.alpha[i] as f64).ln();
+        }
+
+        // Level-1 blocks: single elements.
+        let mut z: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let mut d: Vec<f64> = self.alpha.iter().map(|&a| a as f64).collect();
+
+        let mut y: Vec<f64> = vec![0.0; t_len];
+        // Sentinel level 0: y_t += λ_t^(0) x_t.
+        for t in 0..t_len {
+            y[t] += self.lambda.at(t, 0) as f64 * x[t] as f64;
+        }
+
+        for level in 1..nl {
+            let bsize = 1usize << (level - 1);
+            // Bucket at this level exists for t with bit (level-1) set:
+            // B = [m - bsize, m) with m = t with low (level-1) bits cleared.
+            for t in 0..t_len {
+                if (t >> (level - 1)) & 1 == 1 {
+                    let m = t & !(bsize - 1); // end (exclusive) of bucket
+                    let block_idx = (m - bsize) / bsize;
+                    // decay from maxB = m-1 to t: Π_{k=m}^{t} α_k
+                    let decay = (logcum[t + 1] - logcum[m]).exp();
+                    y[t] += self.lambda.at(t, level) as f64 * decay * z[block_idx];
+                }
+            }
+            // Merge blocks pairwise for the next level.
+            let nblocks = z.len() / 2;
+            let mut z2 = Vec::with_capacity(nblocks);
+            let mut d2 = Vec::with_capacity(nblocks);
+            for b in 0..nblocks {
+                let (zl, zr) = (z[2 * b], z[2 * b + 1]);
+                let (dl, dr) = (d[2 * b], d[2 * b + 1]);
+                z2.push(zr + dr * zl);
+                d2.push(dl * dr);
+            }
+            z = z2;
+            d = d2;
+        }
+        y.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Storage in floats: T gates + T·L lambdas = `O(T log T)`.
+    pub fn storage_floats(&self) -> usize {
+        self.alpha.len() + self.lambda.rows * self.lambda.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_quasi(t: usize, seed: u64) -> QuasiH {
+        let mut rng = Rng::new(seed);
+        let alpha: Vec<f32> = (0..t).map(|_| rng.range_f32(0.8, 1.0)).collect();
+        let nl = fenwick::num_levels(t);
+        let lambda = Mat::rand_uniform(t, nl, 0.0, 1.0, &mut rng);
+        QuasiH::new(alpha, lambda)
+    }
+
+    #[test]
+    fn dense_agrees_with_entry() {
+        let q = random_quasi(32, 1);
+        let d = q.dense();
+        for i in 0..32 {
+            for j in 0..32 {
+                assert!((d.at(i, j) - q.entry(i, j)).abs() < 1e-5, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_matvec_matches_dense() {
+        for &t in &[1usize, 2, 3, 7, 8, 16, 33, 64, 100, 128] {
+            let q = random_quasi(t, t as u64);
+            let mut rng = Rng::new(99 + t as u64);
+            let x: Vec<f32> = (0..t).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let fast = q.matvec(&x);
+            let slow = q.dense().matvec(&x);
+            for i in 0..t {
+                assert!(
+                    (fast[i] - slow[i]).abs() < 1e-3,
+                    "T={t} i={i}: {} vs {}",
+                    fast[i],
+                    slow[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn collapses_to_sss_when_lambda_constant() {
+        // Paper §3.1: if all λ_t^(ℓ) are equal the model collapses to
+        // (gated) linear attention, i.e. M == M^S.
+        let t = 64;
+        let mut rng = Rng::new(5);
+        let alpha: Vec<f32> = (0..t).map(|_| rng.range_f32(0.8, 1.0)).collect();
+        let lambda = Mat::from_fn(t, fenwick::num_levels(t), |_, _| 1.0);
+        let q = QuasiH::new(alpha.clone(), lambda);
+        let sss = crate::hmatrix::sss::SssMask::new(&alpha);
+        crate::tensor::assert_close(&q.dense(), &sss.dense(), 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn ungated_pure_hmask() {
+        let t = 16;
+        let mut rng = Rng::new(6);
+        let lambda = Mat::rand_uniform(t, fenwick::num_levels(t), 0.0, 1.0, &mut rng);
+        let q = QuasiH::ungated(lambda.clone());
+        let m = fenwick::hmask(&lambda, t);
+        crate::tensor::assert_close(&q.dense(), &m, 1e-6, 0.0);
+    }
+
+    #[test]
+    fn storage_is_t_log_t() {
+        let q = random_quasi(1024, 7);
+        assert_eq!(
+            q.storage_floats(),
+            1024 + 1024 * fenwick::num_levels(1024)
+        );
+        assert!(q.storage_floats() < 1024 * 1024 / 8);
+    }
+
+    #[test]
+    fn no_overflow_with_strong_decay_long_t() {
+        // Strong decay + long T used to overflow naive exp(-cumsum)
+        // prefix-sum formulations; the dyadic merge must stay finite.
+        let t = 4096;
+        let alpha = vec![0.5f32; t];
+        let lambda = Mat::from_fn(t, fenwick::num_levels(t), |_, _| 1.0);
+        let q = QuasiH::new(alpha, lambda);
+        let x = vec![1.0f32; t];
+        let y = q.matvec(&x);
+        assert!(y.iter().all(|v| v.is_finite()));
+        // y_t -> 2.0 geometric limit
+        assert!((y[t - 1] - 2.0).abs() < 1e-3);
+    }
+}

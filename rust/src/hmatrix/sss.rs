@@ -1,0 +1,196 @@
+//! 1-semiseparable (SSS) masks from scalar gates (paper Eq. 2).
+//!
+//! `M^S[i][j] = Π_{k=j+1}^i α_k` for `i >= j`, 0 otherwise. This is the
+//! Mamba-2 / RetNet temporal structure: every lower-triangular submatrix
+//! has rank ≤ 1, which is what makes the O(T) chunkwise algorithm work.
+
+use crate::tensor::Mat;
+
+/// A 1-semiseparable causal mask defined by per-step gates `α_t ∈ (0, 1]`.
+#[derive(Debug, Clone)]
+pub struct SssMask {
+    /// `log α_t` per step (logs for numerical stability over long T).
+    pub log_alpha: Vec<f64>,
+}
+
+impl SssMask {
+    pub fn new(alphas: &[f32]) -> SssMask {
+        assert!(
+            alphas.iter().all(|&a| a > 0.0),
+            "gates must be positive for log-space cumsum"
+        );
+        SssMask {
+            log_alpha: alphas.iter().map(|&a| (a as f64).ln()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.log_alpha.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.log_alpha.is_empty()
+    }
+
+    /// `M[i][j] = Π_{k=j+1}^i α_k` via segment-sum of logs (the `segsum`
+    /// of the paper's reference code).
+    pub fn entry(&self, i: usize, j: usize) -> f32 {
+        if j > i {
+            return 0.0;
+        }
+        let s: f64 = self.log_alpha[j + 1..=i].iter().sum();
+        s.exp() as f32
+    }
+
+    /// Materialize the dense `T x T` mask.
+    pub fn dense(&self) -> Mat {
+        let t = self.len();
+        // Cumulative log sums: cum[i] = sum of log_alpha[0..=i-1]
+        let mut cum = vec![0.0f64; t + 1];
+        for i in 0..t {
+            cum[i + 1] = cum[i] + self.log_alpha[i];
+        }
+        Mat::from_fn(t, t, |i, j| {
+            if j > i {
+                0.0
+            } else {
+                (cum[i + 1] - cum[j + 1]).exp() as f32
+            }
+        })
+    }
+
+    /// O(T) masked matvec: `y = M^S x` via the linear recurrence
+    /// `y_i = α_i y_{i-1} + x_i` — the reason SSS masks give O(T) training
+    /// and O(1)-state decoding.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.len());
+        let mut y = Vec::with_capacity(x.len());
+        let mut carry = 0.0f64;
+        for (i, &xi) in x.iter().enumerate() {
+            let a = self.log_alpha[i].exp();
+            // y_i = x_i + α_i * y_{i-1}, but note M[i][i] = 1 (empty product)
+            carry = xi as f64 + a * carry * if i == 0 { 0.0 } else { 1.0 };
+            if i == 0 {
+                carry = xi as f64;
+            }
+            y.push(carry as f32);
+        }
+        y
+    }
+}
+
+/// Stable segment-sum helper: given per-step values `a`, return the matrix
+/// `S[i][j] = Σ_{k=j+1}^i a_k` (lower triangle; `-inf` above). Mirrors the
+/// `segsum` in the paper's Appendix C and in `python/compile/kernels/`.
+pub fn segsum(a: &[f32]) -> Mat {
+    let t = a.len();
+    let mut cum = vec![0.0f64; t + 1];
+    for i in 0..t {
+        cum[i + 1] = cum[i] + a[i] as f64;
+    }
+    Mat::from_fn(t, t, |i, j| {
+        if j > i {
+            f32::NEG_INFINITY
+        } else {
+            (cum[i + 1] - cum[j + 1]) as f32
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_gates(t: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..t).map(|_| rng.range_f32(0.7, 1.0)).collect()
+    }
+
+    #[test]
+    fn entry_matches_naive_product() {
+        let alphas = random_gates(16, 1);
+        let m = SssMask::new(&alphas);
+        for i in 0..16 {
+            for j in 0..=i {
+                let naive: f32 = alphas[j + 1..=i].iter().product();
+                assert!((m.entry(i, j) - naive).abs() < 1e-5, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_agrees_with_entry() {
+        let alphas = random_gates(32, 2);
+        let m = SssMask::new(&alphas);
+        let d = m.dense();
+        for i in 0..32 {
+            for j in 0..32 {
+                assert!((d.at(i, j) - m.entry(i, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_is_one_strict_upper_zero() {
+        let m = SssMask::new(&random_gates(8, 3)).dense();
+        for i in 0..8 {
+            assert!((m.at(i, i) - 1.0).abs() < 1e-6);
+            for j in i + 1..8 {
+                assert_eq!(m.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_recurrence_matches_dense() {
+        let alphas = random_gates(64, 4);
+        let m = SssMask::new(&alphas);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..64).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let fast = m.matvec(&x);
+        let slow = m.dense().matvec(&x);
+        for i in 0..64 {
+            assert!((fast[i] - slow[i]).abs() < 1e-4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn semiseparable_rank_one_submatrices() {
+        // Every 2x2 strictly-lower submatrix [[a,b],[c,d]] of an SSS mask
+        // satisfies a*d == b*c (rank 1).
+        let alphas = random_gates(24, 6);
+        let d = SssMask::new(&alphas).dense();
+        for i1 in 1..24 {
+            for i2 in i1 + 1..24 {
+                for j1 in 0..i1 {
+                    for j2 in j1 + 1..i1 {
+                        let (a, b) = (d.at(i1, j1) as f64, d.at(i1, j2) as f64);
+                        let (c, e) = (d.at(i2, j1) as f64, d.at(i2, j2) as f64);
+                        assert!(
+                            (a * e - b * c).abs() < 1e-4 * (a * e).abs().max(1e-8),
+                            "rank>1 at ({i1},{i2})x({j1},{j2})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn segsum_matches_exp_relation() {
+        let alphas = random_gates(12, 7);
+        let logs: Vec<f32> = alphas.iter().map(|a| a.ln()).collect();
+        let s = segsum(&logs);
+        let m = SssMask::new(&alphas);
+        for i in 0..12 {
+            for j in 0..12 {
+                if j > i {
+                    assert_eq!(s.at(i, j), f32::NEG_INFINITY);
+                } else {
+                    assert!((s.at(i, j).exp() - m.entry(i, j)).abs() < 1e-5);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! # loglinear — Log-Linear Attention, reproduced as a three-layer system
+//!
+//! This crate is the Layer-3 (Rust) portion of a Rust + JAX + Pallas
+//! reproduction of *"Log-Linear Attention"* (Guo, Yang, Goel, Xing, Dao,
+//! Kim; 2025). It contains:
+//!
+//! - [`fenwick`] — the Fenwick-tree prefix partitioning of §3.1,
+//! - [`hmatrix`] — semiseparable / HODLR / quasi-hierarchical masks (§2, App. B),
+//! - [`attention`] — a pure-Rust attention zoo (softmax, linear, Mamba-2,
+//!   DeltaNet, Gated DeltaNet and their log-linear lifts) in recurrent,
+//!   parallel, and chunkwise forms — the correctness oracles and the CPU
+//!   performance substrate for the paper's benchmarks,
+//! - [`state`] — the `O(log T)` Fenwick state manager used at decode time,
+//! - [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust,
+//! - [`coordinator`] — the serving coordinator (router, dynamic batcher,
+//!   decode scheduler) and training orchestrator,
+//! - [`train`], [`eval`], [`data`] — training driver, evaluation harness,
+//!   and synthetic workload generators for every table/figure in the paper,
+//! - [`tensor`], [`util`], [`bench`] — from-scratch substrates (tensor math,
+//!   RNG, JSON, CLI, stats, thread pool, property testing, bench harness);
+//!   the build is fully offline so no external crates beyond `xla` are used.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod util;
+pub mod tensor;
+pub mod fenwick;
+pub mod hmatrix;
+pub mod attention;
+pub mod state;
+pub mod runtime;
+pub mod coordinator;
+pub mod data;
+pub mod config;
+pub mod train;
+pub mod eval;
+pub mod bench;

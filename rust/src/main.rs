@@ -1,0 +1,589 @@
+//! `loglinear` — the Layer-3 coordinator CLI.
+//!
+//! Every experiment in the paper's evaluation section is a subcommand
+//! (see DESIGN.md §4 for the experiment index):
+//!
+//! ```text
+//! loglinear info                          list artifacts
+//! loglinear train        --config tiny --variant loglinear_mamba2 --steps 200
+//! loglinear lm-suite     --steps 300     Table 3/6: ppl + zero-shot evals
+//! loglinear per-position --steps 300     Fig. 5: per-position loss
+//! loglinear mqar         --dims 16,32,64 Table 2 / Fig. 9
+//! loglinear train-tasks  --steps 400     task-pretrain the `task` models
+//! loglinear niah         --lens 64,128,256       Table 4 / Fig. 10
+//! loglinear retrieval    --windows 64,128,256    Table 7
+//! loglinear longbench                            Table 8
+//! loglinear serve-demo   --requests 12   batched decode serving demo
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use loglinear::config::RunConfig;
+use loglinear::coordinator::batcher::BatchPolicy;
+use loglinear::coordinator::server::DecodeServer;
+use loglinear::coordinator::GenRequest;
+use loglinear::data::{self, corpus, longbench, mqar, niah, retrieval};
+use loglinear::eval::{self, Table};
+use loglinear::info;
+use loglinear::runtime::{ModelHandle, Runtime};
+use loglinear::train::{self, TrainConfig};
+use loglinear::util::cli::Args;
+use loglinear::util::json::Json;
+use loglinear::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    if let Some(level) = args.get("log") {
+        loglinear::util::logger::set_level_str(level);
+    }
+    let cmd = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    let result = match cmd.as_str() {
+        "info" => cmd_info(&args),
+        "train" => cmd_train(&args),
+        "lm-suite" => cmd_lm_suite(&args),
+        "per-position" => cmd_per_position(&args),
+        "mqar" => cmd_mqar(&args),
+        "train-tasks" => cmd_train_tasks(&args),
+        "niah" => cmd_niah(&args),
+        "retrieval" => cmd_retrieval(&args),
+        "longbench" => cmd_longbench(&args),
+        "serve-demo" => cmd_serve_demo(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "loglinear — Log-Linear Attention reproduction (see README.md)\n\n\
+         commands: info, train, lm-suite, per-position, mqar, train-tasks,\n\
+         niah, retrieval, longbench, serve-demo\n\n\
+         common options: --config <tiny|lm|task|mqar16..>, --variant <name>,\n\
+         --variants a,b,c|all, --steps N, --lr X, --seed N, --out file.json"
+    );
+}
+
+fn variants_from(args: &Args, default: &[&str]) -> Vec<String> {
+    let vs = args.str_list_or("variants", default);
+    if vs.len() == 1 && vs[0] == "all" {
+        ["transformer", "mamba2", "loglinear_mamba2", "gdn", "loglinear_gdn"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    } else {
+        vs
+    }
+}
+
+fn write_json(path: &Option<PathBuf>, j: &Json) -> Result<()> {
+    if let Some(p) = path {
+        std::fs::write(p, j.pretty())?;
+        info!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let dir = &cfg.artifacts;
+    println!("artifacts dir: {}", dir.display());
+    let mut found = 0;
+    for entry in std::fs::read_dir(dir)? {
+        let name = entry?.file_name().to_string_lossy().to_string();
+        if let Some(stem) = name.strip_prefix("manifest_").and_then(|s| s.strip_suffix(".json")) {
+            let m = loglinear::runtime::Manifest::load(dir, stem)?;
+            println!(
+                "  {stem}: variant={} params={} batch={} seq={} artifacts={}",
+                m.variant,
+                m.param_count,
+                m.batch,
+                m.cfg("seq_len"),
+                m.artifact_paths.len()
+            );
+            found += 1;
+        }
+    }
+    if found == 0 {
+        println!("  (none — run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn load_model(rt: &Runtime, cfg: &RunConfig) -> Result<ModelHandle> {
+    ModelHandle::load(rt, &cfg.artifacts, &cfg.model_name())
+        .map_err(|e| anyhow!("loading {} (run `make artifacts`?): {e}", cfg.model_name()))
+}
+
+fn default_corpus(model: &ModelHandle, seed: u64) -> corpus::Corpus {
+    let seq = model.manifest.cfg("seq_len");
+    corpus::Corpus::new(
+        corpus::CorpusConfig {
+            vocab: model.manifest.cfg("vocab"),
+            seq,
+            recall_band: (8, seq * 3 / 4),
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let rt = Runtime::cpu()?;
+    let mut model = load_model(&rt, &cfg)?;
+    info!("training {} ({} params)", cfg.model_name(), model.manifest.param_count);
+    let corpus = default_corpus(&model, 1000);
+    let tc = TrainConfig {
+        steps: cfg.steps,
+        lr: cfg.lr,
+        warmup: cfg.warmup,
+        seed: cfg.seed,
+        checkpoint: Some(cfg.artifacts.join(format!("ckpt_{}.bin", cfg.model_name()))),
+        ..Default::default()
+    };
+    let curve = train::train(&rt, &mut model, &corpus, &tc)?;
+    let j = Json::Arr(
+        curve
+            .iter()
+            .map(|(s, l, sm)| Json::obj().set("step", *s).set("loss", *l).set("ema", *sm))
+            .collect(),
+    );
+    write_json(&cfg.out, &j)?;
+    Ok(())
+}
+
+/// Train (or reuse checkpoint) + evaluate one variant on the LM suite.
+fn lm_eval_one(rt: &Runtime, cfg: &RunConfig, variant: &str) -> Result<(f64, f64, f64, f64)> {
+    let mut vcfg = cfg.clone();
+    vcfg.variant = variant.to_string();
+    let mut model = load_model(rt, &vcfg)?;
+    let ckpt = cfg.artifacts.join(format!("ckpt_{}.bin", vcfg.model_name()));
+    let corpus = default_corpus(&model, 1000);
+    if ckpt.exists() {
+        model.load_checkpoint(&ckpt)?;
+        info!("{variant}: loaded checkpoint");
+    } else {
+        info!("{variant}: training {} steps", cfg.steps);
+        let tc = TrainConfig {
+            steps: cfg.steps,
+            lr: cfg.lr,
+            warmup: cfg.warmup,
+            seed: cfg.seed,
+            checkpoint: Some(ckpt),
+            ..Default::default()
+        };
+        train::train(rt, &mut model, &corpus, &tc)?;
+    }
+    // held-out ppl (eval seeds disjoint from the training stream)
+    let batch = model.manifest.batch;
+    let mut eval_rng = Rng::new(777_000);
+    let (loss, ppl) = eval::perplexity(
+        &model,
+        || corpus.train_batch(batch, &mut eval_rng),
+        cfg.eval_batches,
+    )?;
+    // LAMBADA-style cloze accuracy
+    let mut rng2 = Rng::new(778_000);
+    let lamb =
+        eval::task_accuracy_n(&model, || corpus.lambada_batch(batch, &mut rng2), cfg.eval_batches)?;
+    // planted-fact recall accuracy (the zero-shot analogue)
+    let mut rng3 = Rng::new(779_000);
+    let recall =
+        eval::task_accuracy_n(&model, || corpus.eval_batch(batch, &mut rng3), cfg.eval_batches)?;
+    Ok((loss, ppl, lamb, recall))
+}
+
+fn cmd_lm_suite(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let rt = Runtime::cpu()?;
+    let variants = variants_from(args, &["all"]);
+    let mut table = Table::new(&["model", "loss", "ppl", "lambada-acc", "recall-acc"]);
+    let mut rows = Vec::new();
+    for v in &variants {
+        let (loss, ppl, lamb, recall) = lm_eval_one(&rt, &cfg, v)?;
+        table.row(vec![
+            v.clone(),
+            format!("{loss:.4}"),
+            format!("{ppl:.2}"),
+            format!("{lamb:.3}"),
+            format!("{recall:.3}"),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("model", v.as_str())
+                .set("loss", loss)
+                .set("ppl", ppl)
+                .set("lambada", lamb)
+                .set("recall", recall),
+        );
+    }
+    println!("\nTable 3/6 analogue — LM suite ({} config):", cfg.config);
+    table.print();
+    write_json(&cfg.out, &Json::Arr(rows))?;
+    Ok(())
+}
+
+fn cmd_per_position(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let rt = Runtime::cpu()?;
+    let variants = variants_from(args, &["all"]);
+    let window = args.usize_or("window", 11);
+    let mut out = Json::obj();
+    let mut curves: Vec<(String, Vec<f64>)> = Vec::new();
+    for v in &variants {
+        let mut vcfg = cfg.clone();
+        vcfg.variant = v.clone();
+        let mut model = load_model(&rt, &vcfg)?;
+        let ckpt = cfg.artifacts.join(format!("ckpt_{}.bin", vcfg.model_name()));
+        if ckpt.exists() {
+            model.load_checkpoint(&ckpt)?;
+        } else {
+            anyhow::bail!("no checkpoint for {v}; run lm-suite first");
+        }
+        let corpus = default_corpus(&model, 1000);
+        let batch = model.manifest.batch;
+        let mut rng = Rng::new(888_000);
+        let curve = eval::per_position_loss(
+            &model,
+            || corpus.train_batch(batch, &mut rng),
+            cfg.eval_batches,
+        )?;
+        let smoothed = loglinear::util::stats::running_average(&curve, window);
+        out = out.set(
+            v.as_str(),
+            smoothed.iter().map(|&x| Json::Num(x)).collect::<Vec<_>>(),
+        );
+        curves.push((v.clone(), smoothed));
+    }
+    // quartile summary table (Fig. 5 analogue, printable)
+    let mut table = Table::new(&["model", "loss@Q1", "loss@Q2", "loss@Q3", "loss@end", "slope"]);
+    for (v, c) in &curves {
+        let n = c.len();
+        let xs: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let (_a, b, _r2) = loglinear::util::stats::ols(&xs, c);
+        table.row(vec![
+            v.clone(),
+            format!("{:.4}", c[n / 4]),
+            format!("{:.4}", c[n / 2]),
+            format!("{:.4}", c[3 * n / 4]),
+            format!("{:.4}", c[n - 1]),
+            format!("{:+.2e}", b),
+        ]);
+    }
+    println!("\nFig. 5 analogue — per-position loss (more negative slope = better long-context use):");
+    table.print();
+    write_json(&cfg.out, &out)?;
+    Ok(())
+}
+
+fn cmd_mqar(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let rt = Runtime::cpu()?;
+    let dims = args.usize_list_or("dims", &[16, 32, 64]);
+    let variants = variants_from(args, &["mamba2", "loglinear_mamba2", "gdn", "loglinear_gdn"]);
+    let seeds = args.usize_or("seeds", 2);
+    let max_steps = args.usize_or("max-steps", cfg.steps.max(300));
+    let n_pairs = args.usize_or("pairs", 16);
+    let mut table = Table::new(&["model", "dim", "acc-mean", "acc-std", "steps-to-99"]);
+    let mut rows = Vec::new();
+    for dim in &dims {
+        for v in &variants {
+            let mut accs = Vec::new();
+            let mut stop_steps = Vec::new();
+            for seed in 0..seeds {
+                let mut vcfg = cfg.clone();
+                vcfg.config = format!("mqar{dim}");
+                vcfg.variant = v.clone();
+                let mut model = load_model(&rt, &vcfg)?;
+                model.ensure_train(&rt)?;
+                let batch = model.manifest.batch;
+                let mcfg = mqar::MqarConfig { n_pairs, ..Default::default() };
+                let mut rng = Rng::new(42 + seed as u64);
+                let mut eval_rng = Rng::new(999_000 + seed as u64);
+                // train with early stopping at 99% eval accuracy (App. D)
+                let mut acc = 0.0;
+                let mut stopped_at = max_steps;
+                for step in 1..=max_steps {
+                    let tb = mqar::generate(&mcfg, batch, &mut rng);
+                    let lr = train::lr_schedule(step - 1, max_steps, cfg.lr, cfg.warmup) as f32;
+                    model.train_step(step as i32, &tb.tokens, lr)?;
+                    if step % 25 == 0 || step == max_steps {
+                        acc = eval::task_accuracy_n(
+                            &model,
+                            || mqar::generate(&mcfg, batch, &mut eval_rng),
+                            4,
+                        )?;
+                        if acc >= 0.99 {
+                            stopped_at = step;
+                            break;
+                        }
+                    }
+                }
+                accs.push(acc);
+                stop_steps.push(stopped_at);
+                info!("mqar d={dim} {v} seed={seed}: acc={acc:.3} steps={stopped_at}");
+            }
+            let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+            let std = (accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>()
+                / accs.len() as f64)
+                .sqrt();
+            table.row(vec![
+                v.clone(),
+                dim.to_string(),
+                format!("{:.1}", mean * 100.0),
+                format!("{:.1}", std * 100.0),
+                format!("{}", stop_steps.iter().sum::<usize>() / stop_steps.len()),
+            ]);
+            rows.push(
+                Json::obj()
+                    .set("model", v.as_str())
+                    .set("dim", *dim)
+                    .set("acc", mean)
+                    .set("std", std),
+            );
+        }
+    }
+    println!("\nTable 2 analogue — MQAR accuracy (%):");
+    table.print();
+    write_json(&cfg.out, &Json::Arr(rows))?;
+    Ok(())
+}
+
+fn task_ckpt(cfg: &RunConfig, variant: &str) -> PathBuf {
+    cfg.artifacts.join(format!("ckpt_task_{variant}.bin"))
+}
+
+fn load_task_model(rt: &Runtime, cfg: &RunConfig, variant: &str) -> Result<ModelHandle> {
+    let mut vcfg = cfg.clone();
+    vcfg.config = "task".into();
+    vcfg.variant = variant.to_string();
+    let mut model = load_model(rt, &vcfg)?;
+    let ckpt = task_ckpt(cfg, variant);
+    if ckpt.exists() {
+        model.load_checkpoint(&ckpt)?;
+    } else {
+        anyhow::bail!("no task checkpoint for {variant}; run `loglinear train-tasks` first");
+    }
+    Ok(model)
+}
+
+fn cmd_train_tasks(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let rt = Runtime::cpu()?;
+    let variants = variants_from(args, &["all"]);
+    for v in &variants {
+        let mut vcfg = cfg.clone();
+        vcfg.config = "task".into();
+        vcfg.variant = v.clone();
+        let mut model = load_model(&rt, &vcfg)?;
+        model.ensure_train(&rt)?;
+        let batch = model.manifest.batch;
+        let seq = model.manifest.cfg("seq_len");
+        let vocab = model.manifest.cfg("vocab");
+        let mut rng = Rng::new(cfg.seed);
+        info!("task-training {v} for {} steps", cfg.steps);
+        for step in 1..=cfg.steps {
+            let tokens = data::mixture_batch(batch, seq, vocab, &mut rng);
+            let lr = train::lr_schedule(step - 1, cfg.steps, cfg.lr, cfg.warmup) as f32;
+            let out = model.train_step(step as i32, &tokens, lr)?;
+            if step % 25 == 0 || step == 1 {
+                info!("  {v} step {step}: loss {:.4}", out.loss);
+            }
+        }
+        model.save_checkpoint(&task_ckpt(&cfg, v))?;
+    }
+    Ok(())
+}
+
+fn cmd_niah(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let rt = Runtime::cpu()?;
+    let variants = variants_from(args, &["mamba2", "loglinear_mamba2", "gdn", "loglinear_gdn"]);
+    let lens = args.usize_list_or("lens", &[64, 128, 256]);
+    let headers: Vec<String> = ["task", "model"]
+        .iter()
+        .map(|s| s.to_string())
+        .chain(lens.iter().map(|l| format!("T={l}")))
+        .collect();
+    let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut rows = Vec::new();
+    for &task in niah::NiahTask::all() {
+        for v in &variants {
+            let mut model = load_task_model(&rt, &cfg, v)?;
+            let mut cells = vec![task.name().to_string(), v.clone()];
+            for &len in &lens {
+                model.ensure_eval_seq(&rt, len)?;
+                let vocab = model.manifest.cfg("vocab");
+                let batch = model.manifest.batch;
+                let ncfg = niah::NiahConfig { seq: len, vocab };
+                let mut rng = Rng::new(123_400 + len as u64);
+                let mut acc = 0.0;
+                for _ in 0..cfg.eval_batches {
+                    let tb = niah::generate(task, &ncfg, batch, &mut rng);
+                    let out = model.eval_at(len, &tb.tokens)?;
+                    acc += tb.accuracy(&out.preds);
+                }
+                acc /= cfg.eval_batches as f64;
+                cells.push(format!("{:.1}", acc * 100.0));
+                rows.push(
+                    Json::obj()
+                        .set("task", task.name())
+                        .set("model", v.as_str())
+                        .set("len", len)
+                        .set("acc", acc),
+                );
+            }
+            table.row(cells);
+        }
+    }
+    println!("\nTable 4 analogue — NIAH accuracy (%):");
+    table.print();
+    write_json(&cfg.out, &Json::Arr(rows))?;
+    Ok(())
+}
+
+fn cmd_retrieval(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let rt = Runtime::cpu()?;
+    let variants = variants_from(args, &["mamba2", "loglinear_mamba2", "gdn", "loglinear_gdn"]);
+    let windows = args.usize_list_or("windows", &[64, 128, 256]);
+    let headers: Vec<String> = ["task", "model"]
+        .iter()
+        .map(|s| s.to_string())
+        .chain(windows.iter().map(|w| format!("W={w}")))
+        .collect();
+    let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut rows = Vec::new();
+    for &task in retrieval::RetrievalTask::all() {
+        for v in &variants {
+            let mut model = load_task_model(&rt, &cfg, v)?;
+            let mut cells = vec![task.name().to_string(), v.clone()];
+            for &w in &windows {
+                model.ensure_eval_seq(&rt, w)?;
+                let vocab = model.manifest.cfg("vocab");
+                let batch = model.manifest.batch;
+                let rcfg = retrieval::RetrievalConfig {
+                    doc_len: model.manifest.cfg("seq_len"),
+                    window: w,
+                    vocab,
+                };
+                let mut rng = Rng::new(500_000 + w as u64);
+                let mut acc = 0.0;
+                for _ in 0..cfg.eval_batches {
+                    let tb = retrieval::generate(task, &rcfg, batch, &mut rng);
+                    let out = model.eval_at(w, &tb.tokens)?;
+                    acc += tb.accuracy(&out.preds);
+                }
+                acc /= cfg.eval_batches as f64;
+                cells.push(format!("{:.1}", acc * 100.0));
+                rows.push(
+                    Json::obj()
+                        .set("task", task.name())
+                        .set("model", v.as_str())
+                        .set("window", w)
+                        .set("acc", acc),
+                );
+            }
+            table.row(cells);
+        }
+    }
+    println!("\nTable 7 analogue — retrieval accuracy (%) vs truncation window:");
+    table.print();
+    write_json(&cfg.out, &Json::Arr(rows))?;
+    Ok(())
+}
+
+fn cmd_longbench(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let rt = Runtime::cpu()?;
+    let variants = variants_from(args, &["mamba2", "loglinear_mamba2", "gdn", "loglinear_gdn"]);
+    let headers: Vec<String> = std::iter::once("model".to_string())
+        .chain(longbench::LongBenchTask::all().iter().map(|t| t.name().to_string()))
+        .collect();
+    let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut rows = Vec::new();
+    for v in &variants {
+        let model = load_task_model(&rt, &cfg, v)?;
+        let vocab = model.manifest.cfg("vocab");
+        let seq = model.manifest.cfg("seq_len");
+        let batch = model.manifest.batch;
+        let mut cells = vec![v.clone()];
+        for &task in longbench::LongBenchTask::all() {
+            let lcfg = longbench::LongBenchConfig { seq, vocab };
+            let mut rng = Rng::new(600_000);
+            let acc = eval::task_accuracy_n(
+                &model,
+                || longbench::generate(task, &lcfg, batch, &mut rng),
+                cfg.eval_batches,
+            )?;
+            cells.push(format!("{:.1}", acc * 100.0));
+            rows.push(
+                Json::obj()
+                    .set("task", task.name())
+                    .set("model", v.as_str())
+                    .set("acc", acc),
+            );
+        }
+        table.row(cells);
+    }
+    println!("\nTable 8 analogue — LongBench-style accuracy (%):");
+    table.print();
+    write_json(&cfg.out, &Json::Arr(rows))?;
+    Ok(())
+}
+
+fn cmd_serve_demo(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let rt = Runtime::cpu()?;
+    let model = load_model(&rt, &cfg)?;
+    let n_requests = args.usize_or("requests", 12);
+    let max_new = args.usize_or("max-new", 24);
+    let policy = BatchPolicy::new(
+        model.decode_batches_available(),
+        std::time::Duration::from_millis(2),
+    );
+    let mut server = DecodeServer::new(&rt, model, policy)?;
+    let mut rng = Rng::new(7);
+    let vocab = server.model().manifest.cfg("vocab");
+    for id in 0..n_requests as u64 {
+        let plen = rng.range(4, 16);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+        server.submit(GenRequest { id, prompt, max_new });
+    }
+    let t0 = std::time::Instant::now();
+    let results = server.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats.clone();
+    println!("served {} requests in {:.2}s", results.len(), wall);
+    println!(
+        "decode steps: {}  tokens: {}  throughput: {:.0} tok/s",
+        stats.steps,
+        stats.tokens_processed,
+        stats.tokens_per_second()
+    );
+    if let Some(s) = stats.latency_summary() {
+        println!(
+            "step latency: mean {:.2}ms p50 {:.2}ms p99 {:.2}ms",
+            s.mean * 1e3,
+            s.p50 * 1e3,
+            s.p99 * 1e3
+        );
+    }
+    println!(
+        "mean batch occupancy: {:.2}  peak state bytes: {}",
+        stats.batch_occupancy.iter().sum::<f64>() / stats.batch_occupancy.len().max(1) as f64,
+        stats.peak_state_bytes
+    );
+    for r in results.iter().take(3) {
+        println!("  req {}: {} tokens, latency {:.2}s", r.id, r.tokens.len(), r.latency);
+    }
+    Ok(())
+}

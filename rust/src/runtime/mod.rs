@@ -1,0 +1,539 @@
+//! PJRT runtime bridge (Layer 3 ↔ Layer 2).
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py`
+//! (`artifacts/*.hlo.txt` + `manifest_*.json` + `params_*.bin`), compiles
+//! them once on the PJRT CPU client, and exposes typed entry points:
+//! [`ModelHandle::eval`], [`ModelHandle::train_step`],
+//! [`ModelHandle::decode_step`].
+//!
+//! Interchange is HLO **text** — xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids (see
+//! DESIGN.md §2).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shared PJRT client (one per process).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+    }
+}
+
+/// One named tensor (host side).
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape {}: {e:?}", self.name))
+    }
+}
+
+/// Parsed `manifest_<name>.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub variant: String,
+    pub config: BTreeMap<String, usize>,
+    pub num_levels: usize,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub param_count: usize,
+    pub batch: usize,
+    pub decode_batches: Vec<usize>,
+    pub state_shapes: Vec<Vec<usize>>, // per layer, without batch dim
+    pub artifact_paths: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path, name: &str) -> Result<Manifest> {
+        let path = dir.join(format!("manifest_{name}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let params = j
+            .get("params")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing params"))?;
+        let mut param_names = Vec::new();
+        let mut param_shapes = Vec::new();
+        for p in params {
+            param_names.push(p.get("name").and_then(|n| n.as_str()).unwrap().to_string());
+            param_shapes.push(
+                p.get("shape")
+                    .and_then(|s| s.as_arr())
+                    .unwrap()
+                    .iter()
+                    .map(|d| d.as_usize().unwrap())
+                    .collect(),
+            );
+        }
+        let mut artifact_paths = BTreeMap::new();
+        if let Some(Json::Obj(arts)) = j.get("artifacts") {
+            for (k, v) in arts {
+                if let Some(p) = v.get("path").and_then(|p| p.as_str()) {
+                    artifact_paths.insert(k.clone(), p.to_string());
+                }
+            }
+        }
+        let mut config = BTreeMap::new();
+        if let Some(Json::Obj(c)) = j.get("config") {
+            for (k, v) in c {
+                config.insert(k.clone(), v.as_usize().unwrap_or(0));
+            }
+        }
+        let state_shapes: Vec<Vec<usize>> = j
+            .get("state_shapes")
+            .and_then(|s| s.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .unwrap()
+                            .iter()
+                            .map(|d| d.as_usize().unwrap())
+                            .collect()
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Manifest {
+            name: name.to_string(),
+            variant: j.get("variant").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+            config,
+            num_levels: j.get("num_levels").and_then(|v| v.as_usize()).unwrap_or(0),
+            param_names,
+            param_shapes,
+            param_count: j.get("param_count").and_then(|v| v.as_usize()).unwrap_or(0),
+            batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(1),
+            decode_batches: j
+                .get("decode_batches")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            state_shapes,
+            artifact_paths,
+        })
+    }
+
+    pub fn cfg(&self, key: &str) -> usize {
+        *self.config.get(key).unwrap_or(&0)
+    }
+
+    /// Read `params_<name>.bin` into named host tensors (manifest order).
+    pub fn load_params(&self, dir: &Path) -> Result<Vec<HostTensor>> {
+        let path = dir.join(format!("params_{}.bin", self.name));
+        let raw = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let total: usize = self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        if floats.len() != total {
+            bail!("params.bin has {} floats, manifest wants {}", floats.len(), total);
+        }
+        let mut out = Vec::with_capacity(self.param_names.len());
+        let mut off = 0;
+        for (name, shape) in self.param_names.iter().zip(&self.param_shapes) {
+            let n: usize = shape.iter().product();
+            out.push(HostTensor {
+                name: name.clone(),
+                shape: shape.clone(),
+                data: floats[off..off + n].to_vec(),
+            });
+            off += n;
+        }
+        Ok(out)
+    }
+}
+
+/// Outputs of one training step.
+pub struct TrainOut {
+    pub loss: f32,
+}
+
+/// Outputs of one eval call.
+pub struct EvalOut {
+    pub loss: f32,
+    /// per-position loss, (batch, seq-1) row-major
+    pub per_pos: Vec<f32>,
+    /// argmax predictions, (batch, seq) row-major
+    pub preds: Vec<i32>,
+}
+
+/// A loaded model: manifest + host-mirrored params (+ optimizer state)
+/// + compiled executables.
+pub struct ModelHandle {
+    pub manifest: Manifest,
+    dir: PathBuf,
+    /// current parameters (host mirror, manifest order)
+    pub params: Vec<HostTensor>,
+    /// Adam moments (host mirrors), allocated lazily by `ensure_train`
+    opt_m: Option<Vec<HostTensor>>,
+    opt_v: Option<Vec<HostTensor>>,
+    exe_eval: Option<xla::PjRtLoadedExecutable>,
+    exe_eval_seqs: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    exe_train: Option<xla::PjRtLoadedExecutable>,
+    exe_decode: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl ModelHandle {
+    pub fn load(rt: &Runtime, dir: &Path, name: &str) -> Result<ModelHandle> {
+        let manifest = Manifest::load(dir, name)?;
+        let params = manifest.load_params(dir)?;
+        let mut h = ModelHandle {
+            manifest,
+            dir: dir.to_path_buf(),
+            params,
+            opt_m: None,
+            opt_v: None,
+            exe_eval: None,
+            exe_eval_seqs: BTreeMap::new(),
+            exe_train: None,
+            exe_decode: BTreeMap::new(),
+        };
+        if h.manifest.artifact_paths.contains_key("eval") {
+            h.exe_eval = Some(rt.load(&h.dir.join(&h.manifest.artifact_paths["eval"]))?);
+        }
+        Ok(h)
+    }
+
+    pub fn ensure_train(&mut self, rt: &Runtime) -> Result<()> {
+        if self.exe_train.is_none() {
+            let p = self
+                .manifest
+                .artifact_paths
+                .get("train_step")
+                .ok_or_else(|| anyhow!("no train_step artifact"))?
+                .clone();
+            self.exe_train = Some(rt.load(&self.dir.join(p))?);
+        }
+        if self.opt_m.is_none() {
+            self.opt_m = Some(zeros_like(&self.params));
+            self.opt_v = Some(zeros_like(&self.params));
+        }
+        Ok(())
+    }
+
+    pub fn ensure_decode(&mut self, rt: &Runtime, batch: usize) -> Result<()> {
+        if !self.exe_decode.contains_key(&batch) {
+            let key = format!("decode_step_b{batch}");
+            let p = self
+                .manifest
+                .artifact_paths
+                .get(&key)
+                .ok_or_else(|| anyhow!("no decode artifact for batch {batch}"))?
+                .clone();
+            let exe = rt.load(&self.dir.join(p))?;
+            self.exe_decode.insert(batch, exe);
+        }
+        Ok(())
+    }
+
+    pub fn decode_batches_available(&self) -> Vec<usize> {
+        self.manifest.decode_batches.clone()
+    }
+
+    /// Compile the eval artifact for a specific sequence length
+    /// (`eval_s<seq>`; the primary seq length aliases the main artifact).
+    pub fn ensure_eval_seq(&mut self, rt: &Runtime, seq: usize) -> Result<()> {
+        if seq == self.manifest.cfg("seq_len") || self.exe_eval_seqs.contains_key(&seq) {
+            return Ok(());
+        }
+        let key = format!("eval_s{seq}");
+        let p = self
+            .manifest
+            .artifact_paths
+            .get(&key)
+            .ok_or_else(|| anyhow!("no eval artifact for seq {seq}"))?
+            .clone();
+        let exe = rt.load(&self.dir.join(p))?;
+        self.exe_eval_seqs.insert(seq, exe);
+        Ok(())
+    }
+
+    /// Evaluate at a specific sequence length (must be compiled via
+    /// `ensure_eval_seq`, or the primary length).
+    pub fn eval_at(&self, seq: usize, tokens: &[i32]) -> Result<EvalOut> {
+        if seq == self.manifest.cfg("seq_len") {
+            return self.eval(tokens);
+        }
+        let exe = self
+            .exe_eval_seqs
+            .get(&seq)
+            .ok_or_else(|| anyhow!("eval seq {seq} not compiled"))?;
+        let b = self.manifest.batch;
+        if tokens.len() != b * seq {
+            bail!("eval_at expects {}x{} tokens, got {}", b, seq, tokens.len());
+        }
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 1);
+        for p in &self.params {
+            args.push(p.to_literal()?);
+        }
+        args.push(
+            xla::Literal::vec1(tokens)
+                .reshape(&[b as i64, seq as i64])
+                .map_err(|e| anyhow!("{e:?}"))?,
+        );
+        let result = exe.execute::<xla::Literal>(&args).map_err(|e| anyhow!("{e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let loss = tuple[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let per_pos = tuple[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let preds = tuple[2].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(EvalOut { loss, per_pos, preds })
+    }
+
+    /// Evaluate on a token batch (shape must match the compiled (B, T)).
+    pub fn eval(&self, tokens: &[i32]) -> Result<EvalOut> {
+        let exe = self.exe_eval.as_ref().ok_or_else(|| anyhow!("eval not compiled"))?;
+        let b = self.manifest.batch;
+        let t = self.manifest.cfg("seq_len");
+        if tokens.len() != b * t {
+            bail!("eval expects {}x{} tokens, got {}", b, t, tokens.len());
+        }
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 1);
+        for p in &self.params {
+            args.push(p.to_literal()?);
+        }
+        args.push(
+            xla::Literal::vec1(tokens)
+                .reshape(&[b as i64, t as i64])
+                .map_err(|e| anyhow!("{e:?}"))?,
+        );
+        let result = exe.execute::<xla::Literal>(&args).map_err(|e| anyhow!("{e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let loss = tuple[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let per_pos = tuple[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let preds = tuple[2].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(EvalOut { loss, per_pos, preds })
+    }
+
+    /// One fused Adam step. Updates the host param/moment mirrors.
+    pub fn train_step(&mut self, step: i32, tokens: &[i32], lr: f32) -> Result<TrainOut> {
+        let exe = self.exe_train.as_ref().ok_or_else(|| anyhow!("train not compiled"))?;
+        let b = self.manifest.batch;
+        let t = self.manifest.cfg("seq_len");
+        if tokens.len() != b * t {
+            bail!("train expects {}x{} tokens, got {}", b, t, tokens.len());
+        }
+        let m = self.opt_m.as_ref().unwrap();
+        let v = self.opt_v.as_ref().unwrap();
+        let n = self.params.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(3 * n + 3);
+        for p in self.params.iter().chain(m.iter()).chain(v.iter()) {
+            args.push(p.to_literal()?);
+        }
+        args.push(xla::Literal::scalar(step));
+        args.push(
+            xla::Literal::vec1(tokens)
+                .reshape(&[b as i64, t as i64])
+                .map_err(|e| anyhow!("{e:?}"))?,
+        );
+        args.push(xla::Literal::scalar(lr));
+        let result = exe.execute::<xla::Literal>(&args).map_err(|e| anyhow!("{e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        debug_assert_eq!(tuple.len(), 3 * n + 1);
+        for (i, lit) in tuple.iter().take(n).enumerate() {
+            self.params[i].data = lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        }
+        let m = self.opt_m.as_mut().unwrap();
+        for (i, lit) in tuple[n..2 * n].iter().enumerate() {
+            m[i].data = lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        }
+        let v = self.opt_v.as_mut().unwrap();
+        for (i, lit) in tuple[2 * n..3 * n].iter().enumerate() {
+            v[i].data = lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        }
+        let loss = tuple[3 * n].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok(TrainOut { loss })
+    }
+
+    /// One decode step for a batch of sequences. `states` is one flat f32
+    /// buffer per layer with shape (B, *state_shape); `tokens`/`pos` are
+    /// per-sequence. Returns the logits (B, vocab) and mutates `states`.
+    pub fn decode_step(
+        &self,
+        batch: usize,
+        states: &mut [Vec<f32>],
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<f32>> {
+        let exe = self
+            .exe_decode
+            .get(&batch)
+            .ok_or_else(|| anyhow!("decode batch {batch} not compiled"))?;
+        if tokens.len() != batch || pos.len() != batch {
+            bail!("decode batch mismatch");
+        }
+        let n = self.params.len();
+        let layers = self.manifest.state_shapes.len();
+        if states.len() != layers {
+            bail!("expected {} state buffers", layers);
+        }
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(n + layers + 2);
+        for p in &self.params {
+            args.push(p.to_literal()?);
+        }
+        for (i, st) in states.iter().enumerate() {
+            let mut dims: Vec<i64> = vec![batch as i64];
+            dims.extend(self.manifest.state_shapes[i].iter().map(|&d| d as i64));
+            args.push(
+                xla::Literal::vec1(st)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("state {i}: {e:?}"))?,
+            );
+        }
+        args.push(xla::Literal::vec1(tokens));
+        args.push(xla::Literal::vec1(pos));
+        let result = exe.execute::<xla::Literal>(&args).map_err(|e| anyhow!("{e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let logits = tuple[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        for (i, st) in states.iter_mut().enumerate() {
+            *st = tuple[1 + i].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        }
+        Ok(logits)
+    }
+
+    /// Zeroed decode state buffers for a batch.
+    pub fn zero_states(&self, batch: usize) -> Vec<Vec<f32>> {
+        self.manifest
+            .state_shapes
+            .iter()
+            .map(|s| vec![0.0; batch * s.iter().product::<usize>()])
+            .collect()
+    }
+
+    /// Save current params as a checkpoint (raw f32, manifest order).
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut raw = Vec::new();
+        for p in &self.params {
+            for x in &p.data {
+                raw.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(path, raw)?;
+        Ok(())
+    }
+
+    /// Load params from a checkpoint produced by `save_checkpoint`.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let raw = std::fs::read(path)?;
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let total: usize = self.params.iter().map(|p| p.numel()).sum();
+        if floats.len() != total {
+            bail!("checkpoint size mismatch: {} vs {}", floats.len(), total);
+        }
+        let mut off = 0;
+        for p in self.params.iter_mut() {
+            let n = p.numel();
+            p.data = floats[off..off + n].to_vec();
+            off += n;
+        }
+        Ok(())
+    }
+}
+
+fn zeros_like(params: &[HostTensor]) -> Vec<HostTensor> {
+    params
+        .iter()
+        .map(|p| HostTensor {
+            name: p.name.clone(),
+            shape: p.shape.clone(),
+            data: vec![0.0; p.numel()],
+        })
+        .collect()
+}
+
+/// Locate the artifacts directory (env override, then repo default).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("LOGLINEAR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest_tiny_loglinear_mamba2.json").exists()
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir(), "tiny_loglinear_mamba2").unwrap();
+        assert_eq!(m.variant, "loglinear_mamba2");
+        assert!(m.param_count > 0);
+        let params = m.load_params(&artifacts_dir()).unwrap();
+        let total: usize = params.iter().map(|p| p.numel()).sum();
+        assert_eq!(total, m.param_count);
+        assert_eq!(m.state_shapes.len(), m.cfg("n_layers"));
+    }
+
+    #[test]
+    fn host_tensor_literal_roundtrip() {
+        let t = HostTensor {
+            name: "x".into(),
+            shape: vec![2, 3],
+            data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), t.data);
+    }
+}

@@ -1,0 +1,210 @@
+//! Decode-time state management (paper §3.2 + App. B.4).
+//!
+//! [`FenwickState`] is the token-granularity O(log T) state machine: at
+//! step `t` the buckets `0..=lssb(t)` merge one level up, every surviving
+//! state passes through the model's transition, and the fresh (k, v) pair
+//! enters at level 0. Only `popcount(t)+1` of the `O(log T)` slots are
+//! ever live — [`StatePool`] exploits exactly that for batched serving,
+//! handing out fixed-size (d_k × d_v) buffers from a free list so a
+//! sequence's resident memory tracks its live-state count, not the level
+//! capacity.
+//!
+//! The same machinery measured against a softmax KV cache is experiment
+//! E11 (decode time/memory vs. T — Table 1's right columns).
+
+pub mod pool;
+
+use crate::fenwick;
+use crate::tensor::Mat;
+
+/// Transition applied to every live state at each step.
+pub enum Transition<'a> {
+    /// Mamba-2 family: `S ← α S`.
+    Decay(f32),
+    /// (Gated) DeltaNet family: `S ← α (I − β k k^T) S`.
+    GatedHouseholder { alpha: f32, beta: f32, k: &'a [f32] },
+}
+
+/// O(log T) Fenwick decode state for one sequence (one head).
+#[derive(Debug, Clone)]
+pub struct FenwickState {
+    pub dk: usize,
+    pub dv: usize,
+    /// levels[l] = bucket state at level l (0 = sentinel)
+    levels: Vec<Option<Mat>>,
+    /// number of tokens processed so far
+    pub t: usize,
+}
+
+impl FenwickState {
+    pub fn new(dk: usize, dv: usize) -> FenwickState {
+        FenwickState { dk, dv, levels: Vec::new(), t: 0 }
+    }
+
+    /// Process one token: merge, transition, write, then read the output
+    /// `o = Σ_l λ^(l) S^(l)T q` with per-level weights `lambda`.
+    pub fn step(
+        &mut self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        write_scale: f32,
+        transition: Transition<'_>,
+        lambda: &[f32],
+    ) -> Vec<f32> {
+        let t = self.t;
+        // 1) merge levels 0..=lssb(t) into lssb(t)+1
+        if t > 0 {
+            let l = fenwick::lssb(t) as usize;
+            let mut merged: Option<Mat> = None;
+            for s in self.levels.iter_mut().take(l + 1) {
+                if let Some(m) = s.take() {
+                    match merged {
+                        None => merged = Some(m),
+                        Some(ref mut acc) => acc.axpy(1.0, &m),
+                    }
+                }
+            }
+            if let Some(m) = merged {
+                if self.levels.len() <= l + 1 {
+                    self.levels.resize(l + 2, None);
+                }
+                debug_assert!(self.levels[l + 1].is_none(), "Fenwick invariant");
+                self.levels[l + 1] = Some(m);
+            }
+        }
+        // 2) transition carried states
+        for s in self.levels.iter_mut().flatten() {
+            match &transition {
+                Transition::Decay(a) => s.scale_inplace(*a),
+                Transition::GatedHouseholder { alpha, beta, k } => {
+                    crate::attention::deltanet::apply_householder(s, k, *beta);
+                    s.scale_inplace(*alpha);
+                }
+            }
+        }
+        // 3) sentinel write
+        let mut s0 = Mat::zeros(self.dk, self.dv);
+        crate::tensor::outer_acc(&mut s0, k, v, write_scale);
+        if self.levels.is_empty() {
+            self.levels.resize(1, None);
+        }
+        self.levels[0] = Some(s0);
+        // 4) read
+        let mut o = vec![0.0f32; self.dv];
+        for (l, s) in self.levels.iter().enumerate() {
+            if let Some(s) = s {
+                let lam = lambda.get(l).copied().unwrap_or(0.0);
+                if lam == 0.0 {
+                    continue;
+                }
+                for (dst, x) in o.iter_mut().zip(s.matvec_t(q)) {
+                    *dst += lam * x;
+                }
+            }
+        }
+        self.t += 1;
+        o
+    }
+
+    /// Number of live (non-empty) level states.
+    pub fn live_states(&self) -> usize {
+        self.levels.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Resident state bytes (the decode-memory metric of E11).
+    pub fn state_bytes(&self) -> usize {
+        self.live_states() * self.dk * self.dv * 4
+    }
+
+    /// Level capacity currently allocated (≈ log2 t).
+    pub fn level_capacity(&self) -> usize {
+        self.levels.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{self, AttnInputs};
+    use crate::util::Rng;
+
+    #[test]
+    fn replays_loglinear_mamba2_recurrent_oracle() {
+        let mut rng = Rng::new(1);
+        let t_len = 64;
+        let x = AttnInputs::random(t_len, 8, 8, &mut rng);
+        let oracle = attention::loglinear_mamba2::recurrent(&x.q, &x.k, &x.v, &x.alpha, &x.lambda);
+        let mut st = FenwickState::new(8, 8);
+        for t in 0..t_len {
+            let o = st.step(
+                x.q.row(t),
+                x.k.row(t),
+                x.v.row(t),
+                1.0,
+                Transition::Decay(x.alpha[t]),
+                x.lambda.row(t),
+            );
+            for j in 0..8 {
+                assert!((o[j] - oracle.at(t, j)).abs() < 1e-4, "t={t} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn replays_loglinear_gdn_recurrent_oracle() {
+        let mut rng = Rng::new(2);
+        let t_len = 48;
+        let x = AttnInputs::random(t_len, 8, 8, &mut rng);
+        let oracle = attention::loglinear_gdn::recurrent(&x.q, &x.k, &x.v, &x.alpha, &x.beta, &x.lambda);
+        let mut st = FenwickState::new(8, 8);
+        for t in 0..t_len {
+            let o = st.step(
+                x.q.row(t),
+                x.k.row(t),
+                x.v.row(t),
+                x.beta[t],
+                Transition::GatedHouseholder { alpha: x.alpha[t], beta: x.beta[t], k: x.k.row(t) },
+                x.lambda.row(t),
+            );
+            for j in 0..8 {
+                assert!((o[j] - oracle.at(t, j)).abs() < 1e-4, "t={t} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn live_state_count_is_popcount_plus_one() {
+        let mut rng = Rng::new(3);
+        let x = AttnInputs::random(300, 4, 4, &mut rng);
+        let mut st = FenwickState::new(4, 4);
+        for t in 0..300 {
+            st.step(
+                x.q.row(t), x.k.row(t), x.v.row(t), 1.0,
+                Transition::Decay(x.alpha[t]), x.lambda.row(t.min(x.lambda.rows - 1)),
+            );
+            // after step t, the prefix [0, t] is partitioned -> popcount(t)+1
+            assert_eq!(st.live_states(), (t).count_ones() as usize + 1, "t={t}");
+        }
+    }
+
+    #[test]
+    fn memory_grows_logarithmically() {
+        let mut rng = Rng::new(4);
+        let t_len = 1 << 12;
+        let x = AttnInputs::random(64, 4, 4, &mut rng);
+        let mut st = FenwickState::new(4, 4);
+        let mut max_bytes = 0;
+        for t in 0..t_len {
+            let i = t % 64;
+            st.step(
+                x.q.row(i), x.k.row(i), x.v.row(i), 1.0,
+                Transition::Decay(0.95), x.lambda.row(i),
+            );
+            max_bytes = max_bytes.max(st.state_bytes());
+        }
+        // <= (log2(T)+1) states of dk*dv*4 bytes
+        let bound = (12 + 1) * 4 * 4 * 4;
+        assert!(max_bytes <= bound, "{max_bytes} > {bound}");
+    }
+}

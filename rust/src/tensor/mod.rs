@@ -1,0 +1,400 @@
+//! Minimal dense-tensor substrate (no BLAS/ndarray available offline).
+//!
+//! The attention zoo ([`crate::attention`]), the hierarchical-matrix module
+//! ([`crate::hmatrix`]), and the benches all run on [`Mat`]: a row-major
+//! `f32` matrix with cache-friendly matmul kernels. Accumulation is f32
+//! with an ikj loop order that autovectorizes well; for oracle comparisons
+//! the tests use tolerance-based closeness, and `allclose` reports the
+//! worst absolute/relative deviation.
+
+pub mod ops;
+
+use crate::util::Rng;
+
+/// A row-major `rows x cols` matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len(), "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_uniform(&mut m.data, lo, hi);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Contiguous sub-matrix copy: rows [r0, r1), all columns.
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// `self @ other` — (m,k) x (k,n). ikj order for row-major locality.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (p, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[p * n..(p + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other^T` — (m,k) x (n,k) -> (m,n). Dot-product form: both
+    /// operands are traversed row-wise, the fastest kernel for QK^T.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                let b_row = &other.data[j * k..(j + 1) * k];
+                out_row[j] = dot(a_row, b_row);
+            }
+        }
+        out
+    }
+
+    /// `self^T @ other` — (k,m) x (k,n) -> (m,n). Used for K^T V state writes.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for p in 0..k {
+            let a_row = &self.data[p * m..(p + 1) * m];
+            let b_row = &other.data[p * n..(p + 1) * n];
+            for i in 0..m {
+                let a = a_row[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// out = self + other
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (o, &b) in out.data.iter_mut().zip(other.data.iter()) {
+            *o += b;
+        }
+        out
+    }
+
+    /// self += scale * other
+    pub fn axpy(&mut self, scale: f32, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (o, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *o += scale * b;
+        }
+    }
+
+    /// self *= s (in place)
+    pub fn scale_inplace(&mut self, s: f32) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        let mut out = self.clone();
+        out.scale_inplace(s);
+        out
+    }
+
+    /// Elementwise (Hadamard) product.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (o, &b) in out.data.iter_mut().zip(other.data.iter()) {
+            *o *= b;
+        }
+        out
+    }
+
+    /// Matrix–vector product `self @ x`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// `self^T @ x`.
+    pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, x.len());
+        let mut out = vec![0.0f32; self.cols];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(i)) {
+                *o += xi * a;
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Max |a - b| over entries.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Dot product with 4-way unrolled accumulation (autovectorizes).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// outer-product accumulate: `state += v k^T` where state is (dv, dk).
+#[inline]
+pub fn outer_acc(state: &mut Mat, v: &[f32], k: &[f32], scale: f32) {
+    debug_assert_eq!(state.rows, v.len());
+    debug_assert_eq!(state.cols, k.len());
+    let dk = k.len();
+    for (i, &vi) in v.iter().enumerate() {
+        let row = &mut state.data[i * dk..(i + 1) * dk];
+        let s = vi * scale;
+        for (r, &kj) in row.iter_mut().zip(k.iter()) {
+            *r += s * kj;
+        }
+    }
+}
+
+/// Closeness check with combined absolute/relative tolerance; returns the
+/// worst offender on failure for debuggable assertions.
+pub fn allclose(a: &Mat, b: &Mat, atol: f32, rtol: f32) -> Result<(), String> {
+    if (a.rows, a.cols) != (b.rows, b.cols) {
+        return Err(format!(
+            "shape mismatch: ({},{}) vs ({},{})",
+            a.rows, a.cols, b.rows, b.cols
+        ));
+    }
+    let mut worst = 0.0f32;
+    let mut worst_idx = 0usize;
+    for (i, (&x, &y)) in a.data.iter().zip(b.data.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        let d = (x - y).abs();
+        if d > tol && d - tol > worst {
+            worst = d - tol;
+            worst_idx = i;
+        }
+    }
+    if worst > 0.0 {
+        let (i, j) = (worst_idx / a.cols, worst_idx % a.cols);
+        return Err(format!(
+            "allclose failed at ({},{}): {} vs {} (excess {:.3e})",
+            i, j, a.data[worst_idx], b.data[worst_idx], worst
+        ));
+    }
+    Ok(())
+}
+
+/// Assert two matrices are close (panics with diagnostics).
+pub fn assert_close(a: &Mat, b: &Mat, atol: f32, rtol: f32) {
+    if let Err(e) = allclose(a, b, atol, rtol) {
+        panic!("{e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(7, 5, 1.0, &mut rng);
+        let b = Mat::randn(5, 9, 1.0, &mut rng);
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_nt(&b.transpose());
+        let c3 = a.transpose().matmul_tn(&b);
+        assert_close(&c1, &c2, 1e-5, 1e-5);
+        assert_close(&c1, &c3, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn matvec_agrees_with_matmul() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(6, 4, 1.0, &mut rng);
+        let x: Vec<f32> = (0..4).map(|i| i as f32).collect();
+        let y = a.matvec(&x);
+        let xm = Mat::from_vec(4, 1, x.clone());
+        let ym = a.matmul(&xm);
+        for i in 0..6 {
+            assert!((y[i] - ym.data[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matvec_t_agrees() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(6, 4, 1.0, &mut rng);
+        let x: Vec<f32> = (0..6).map(|i| (i as f32) * 0.5).collect();
+        let y = a.matvec_t(&x);
+        let yt = a.transpose().matvec(&x);
+        for i in 0..4 {
+            assert!((y[i] - yt[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(5, 8, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn outer_acc_matches_matmul() {
+        let v = vec![1.0f32, 2.0];
+        let k = vec![3.0f32, 4.0, 5.0];
+        let mut s = Mat::zeros(2, 3);
+        outer_acc(&mut s, &v, &k, 2.0);
+        let expect = Mat::from_vec(2, 3, vec![6.0, 8.0, 10.0, 12.0, 16.0, 20.0]);
+        assert_eq!(s, expect);
+    }
+
+    #[test]
+    fn allclose_reports_worst() {
+        let a = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Mat::from_vec(1, 2, vec![1.0, 2.5]);
+        let err = allclose(&a, &b, 1e-3, 0.0).unwrap_err();
+        assert!(err.contains("(0,1)"), "{err}");
+    }
+
+    #[test]
+    fn eye_is_identity_under_matmul() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(4, 4, 1.0, &mut rng);
+        assert_close(&a.matmul(&Mat::eye(4)), &a, 1e-6, 0.0);
+        assert_close(&Mat::eye(4).matmul(&a), &a, 1e-6, 0.0);
+    }
+
+    #[test]
+    fn rows_slice_copies() {
+        let a = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f32);
+        let s = a.rows_slice(1, 3);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.row(0), &[3.0, 4.0, 5.0]);
+        assert_eq!(s.row(1), &[6.0, 7.0, 8.0]);
+    }
+}

@@ -1,0 +1,241 @@
+//! Elementwise / reduction ops on [`Mat`] and slices used by the attention
+//! zoo and the eval harness: softmax, logsumexp, silu/softplus/sigmoid,
+//! cross-entropy, argmax.
+
+use super::Mat;
+
+/// Numerically-stable softmax over each row, in place.
+pub fn softmax_rows(m: &mut Mat) {
+    for i in 0..m.rows {
+        softmax_inplace(m.row_mut(i));
+    }
+}
+
+/// Stable softmax on a slice.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let mx = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if mx == f32::NEG_INFINITY {
+        // All -inf: define as uniform zeros (masked-out row).
+        for v in x.iter_mut() {
+            *v = 0.0;
+        }
+        return;
+    }
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// log(sum(exp(x))) stable.
+pub fn logsumexp(x: &[f32]) -> f32 {
+    let mx = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if mx == f32::NEG_INFINITY {
+        return f32::NEG_INFINITY;
+    }
+    let s: f32 = x.iter().map(|&v| (v - mx).exp()).sum();
+    mx + s.ln()
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// softplus with linear tail for stability; used for λ parameterization.
+#[inline]
+pub fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+/// Cross-entropy of a logits row against a target index (natural log).
+pub fn cross_entropy(logits: &[f32], target: usize) -> f32 {
+    logsumexp(logits) - logits[target]
+}
+
+/// Index of max element.
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in x.iter().enumerate() {
+        if v > x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// RMS-normalize a slice with learned gain (used by the Rust-side model).
+pub fn rmsnorm(x: &mut [f32], gain: &[f32], eps: f32) {
+    debug_assert_eq!(x.len(), gain.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for (v, &g) in x.iter_mut().zip(gain.iter()) {
+        *v *= inv * g;
+    }
+}
+
+/// L2 norm of a slice.
+pub fn l2_norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+/// Solve `L X = B` where `L` is *unit* lower-triangular (diagonal == 1,
+/// entries above the diagonal ignored). Forward substitution, O(n^2 m).
+/// This is the UT-transform solve of the DeltaNet parallel form.
+pub fn solve_unit_lower(l: &Mat, b: &Mat) -> Mat {
+    assert_eq!(l.rows, l.cols);
+    assert_eq!(l.rows, b.rows);
+    let (n, m) = (b.rows, b.cols);
+    let mut x = b.clone();
+    for i in 0..n {
+        for j in 0..i {
+            let lij = l.at(i, j);
+            if lij == 0.0 {
+                continue;
+            }
+            // x[i] -= l[i][j] * x[j]
+            let (head, tail) = x.data.split_at_mut(i * m);
+            let xj = &head[j * m..(j + 1) * m];
+            let xi = &mut tail[..m];
+            for (a, &b_) in xi.iter_mut().zip(xj.iter()) {
+                *a -= lij * b_;
+            }
+        }
+    }
+    x
+}
+
+/// Solve `U X = B` where `U` is *unit* upper-triangular. Back substitution.
+pub fn solve_unit_upper(u: &Mat, b: &Mat) -> Mat {
+    assert_eq!(u.rows, u.cols);
+    assert_eq!(u.rows, b.rows);
+    let (n, m) = (b.rows, b.cols);
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        for j in i + 1..n {
+            let uij = u.at(i, j);
+            if uij == 0.0 {
+                continue;
+            }
+            let (head, tail) = x.data.split_at_mut(j * m);
+            let xi = &mut head[i * m..(i + 1) * m];
+            let xj = &tail[..m];
+            for (a, &b_) in xi.iter_mut().zip(xj.iter()) {
+                *a -= uij * b_;
+            }
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        softmax_inplace(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_inputs() {
+        let mut x = vec![1000.0f32, 1000.0];
+        softmax_inplace(&mut x);
+        assert!((x[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_all_masked_row() {
+        let mut x = vec![f32::NEG_INFINITY; 3];
+        softmax_inplace(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn logsumexp_matches_naive_in_safe_range() {
+        let x = vec![0.1f32, -0.3, 0.7];
+        let naive = x.iter().map(|v| v.exp()).sum::<f32>().ln();
+        assert!((logsumexp(&x) - naive).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_of_confident_logits_is_small() {
+        let mut logits = vec![0.0f32; 10];
+        logits[3] = 20.0;
+        assert!(cross_entropy(&logits, 3) < 1e-3);
+        assert!(cross_entropy(&logits, 4) > 10.0);
+    }
+
+    #[test]
+    fn softplus_positive_and_tail() {
+        assert!(softplus(-10.0) > 0.0);
+        assert!((softplus(30.0) - 30.0).abs() < 1e-6);
+        assert!((softplus(0.0) - (2.0f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let mut x = vec![3.0f32, 4.0];
+        let gain = vec![1.0f32, 1.0];
+        rmsnorm(&mut x, &gain, 1e-6);
+        let ms = x.iter().map(|v| v * v).sum::<f32>() / 2.0;
+        assert!((ms - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn unit_lower_solve_roundtrip() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(11);
+        let n = 12;
+        let mut l = Mat::randn(n, n, 0.3, &mut rng);
+        for i in 0..n {
+            *l.at_mut(i, i) = 1.0;
+            for j in i + 1..n {
+                *l.at_mut(i, j) = 0.0;
+            }
+        }
+        let b = Mat::randn(n, 5, 1.0, &mut rng);
+        let x = solve_unit_lower(&l, &b);
+        crate::tensor::assert_close(&l.matmul(&x), &b, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn unit_upper_solve_roundtrip() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(12);
+        let n = 12;
+        let mut u = Mat::randn(n, n, 0.3, &mut rng);
+        for i in 0..n {
+            *u.at_mut(i, i) = 1.0;
+            for j in 0..i {
+                *u.at_mut(i, j) = 0.0;
+            }
+        }
+        let b = Mat::randn(n, 5, 1.0, &mut rng);
+        let x = solve_unit_upper(&u, &b);
+        crate::tensor::assert_close(&u.matmul(&x), &b, 1e-4, 1e-4);
+    }
+}

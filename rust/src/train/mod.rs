@@ -1,0 +1,106 @@
+//! Training orchestrator: drives the fused `train_step` HLO artifact over
+//! the synthetic corpus, with LR scheduling, loss logging, and
+//! checkpointing. Python never runs here — the whole fwd+bwd+Adam update
+//! is one compiled executable per step.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::corpus::Corpus;
+use crate::runtime::{ModelHandle, Runtime};
+use crate::util::stats::Ema;
+use crate::util::Rng;
+
+/// Linear warmup then cosine decay to 10% of peak.
+pub fn lr_schedule(step: usize, total: usize, peak: f64, warmup: usize) -> f64 {
+    if step < warmup {
+        return peak * (step + 1) as f64 / warmup as f64;
+    }
+    let t = (step - warmup) as f64 / (total - warmup).max(1) as f64;
+    let min_lr = 0.1 * peak;
+    min_lr + 0.5 * (peak - min_lr) * (1.0 + (std::f64::consts::PI * t).cos())
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup: usize,
+    pub log_every: usize,
+    pub seed: u64,
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            lr: 3e-3,
+            warmup: 20,
+            log_every: 10,
+            seed: 0,
+            checkpoint: None,
+        }
+    }
+}
+
+/// One (step, raw loss, smoothed loss) record.
+pub type LossCurve = Vec<(usize, f32, f32)>;
+
+/// Train `model` on `corpus` for `cfg.steps` steps. Returns the loss curve.
+pub fn train(
+    rt: &Runtime,
+    model: &mut ModelHandle,
+    corpus: &Corpus,
+    cfg: &TrainConfig,
+) -> Result<LossCurve> {
+    model.ensure_train(rt)?;
+    let batch = model.manifest.batch;
+    let mut rng = Rng::new(cfg.seed);
+    let mut curve = Vec::new();
+    let mut ema = Ema::new(0.1);
+    let t0 = std::time::Instant::now();
+    for step in 1..=cfg.steps {
+        let tokens = corpus.train_batch(batch, &mut rng);
+        let lr = lr_schedule(step - 1, cfg.steps, cfg.lr, cfg.warmup) as f32;
+        let out = model.train_step(step as i32, &tokens, lr)?;
+        let sm = ema.update(out.loss as f64) as f32;
+        curve.push((step, out.loss, sm));
+        if step % cfg.log_every == 0 || step == 1 || step == cfg.steps {
+            let tps = (step * batch * model.manifest.cfg("seq_len")) as f64
+                / t0.elapsed().as_secs_f64();
+            crate::info!(
+                "step {step:>5}/{} loss {:.4} (ema {:.4}) lr {lr:.2e} tok/s {tps:.0}",
+                cfg.steps,
+                out.loss,
+                sm
+            );
+        }
+        if !out.loss.is_finite() {
+            anyhow::bail!("loss diverged at step {step}");
+        }
+    }
+    if let Some(path) = &cfg.checkpoint {
+        model.save_checkpoint(path)?;
+        crate::info!("checkpoint -> {}", path.display());
+    }
+    Ok(curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_warms_up_then_decays() {
+        let peak = 1e-3;
+        assert!(lr_schedule(0, 100, peak, 10) < peak * 0.2);
+        assert!((lr_schedule(10, 100, peak, 10) - peak).abs() < peak * 0.1);
+        assert!(lr_schedule(99, 100, peak, 10) < peak * 0.2);
+        // monotone decay after warmup
+        let a = lr_schedule(20, 100, peak, 10);
+        let b = lr_schedule(60, 100, peak, 10);
+        assert!(a > b);
+    }
+}

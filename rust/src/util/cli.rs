@@ -1,0 +1,186 @@
+//! A tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and typed
+//! accessors with defaults. The `loglinear` binary and all examples use it.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, keyword options, and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of argument strings.
+    pub fn parse<I, S>(args: I) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut it = args.into_iter().map(|s| s.into()).peekable();
+
+        // First non-flag token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = Some(it.next().unwrap());
+            }
+        }
+
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    out.opts.insert(k.to_string(), v[1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Was `--name` given as a bare flag (or as `--name=true`)?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--lens 512,1024,2048`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated string list.
+    pub fn str_list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().to_string())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace())
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train data.txt --steps 100 --lr=3e-4 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert!((a.f64_or("lr", 0.0) - 3e-4).abs() < 1e-12);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["data.txt"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("serve");
+        assert_eq!(a.usize_or("port", 8080), 8080);
+        assert_eq!(a.str_or("model", "mamba2"), "mamba2");
+        assert!(!a.flag("debug"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("bench --lens 512,1024,2048 --models mamba2,loglinear_mamba2");
+        assert_eq!(a.usize_list_or("lens", &[]), vec![512, 1024, 2048]);
+        assert_eq!(
+            a.str_list_or("models", &[]),
+            vec!["mamba2", "loglinear_mamba2"]
+        );
+        assert_eq!(a.usize_list_or("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn no_subcommand_when_flags_first() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn eq_form_with_negative_number() {
+        let a = parse("x --offset=-5");
+        assert_eq!(a.f64_or("offset", 0.0), -5.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! From-scratch utility substrates.
+//!
+//! The build is fully offline: crates like `clap`, `serde`, `rand`,
+//! `criterion`, and `proptest` are not available, so this module provides
+//! the small, well-tested pieces of them the rest of the crate needs.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod logger;
+pub mod stats;
+pub mod threadpool;
+pub mod prop;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,160 @@
+//! A miniature property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs.
+//! On failure it performs a bounded greedy shrink using the generator's
+//! `shrink` hook and panics with the minimal failing case, the seed, and
+//! the case index so failures are reproducible.
+
+use super::rng::Rng;
+
+/// A generator of random test inputs with an optional shrinker.
+pub trait Gen {
+    type Item: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Item;
+    /// Produce "smaller" candidate inputs. Default: no shrinking.
+    fn shrink(&self, _item: &Self::Item) -> Vec<Self::Item> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random inputs (seed fixed for CI stability,
+/// overridable with env `PROP_SEED`).
+pub fn check<G: Gen>(name: &str, cases: usize, gen: &G, prop: impl Fn(&G::Item) -> bool) {
+    let seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            // Greedy bounded shrink.
+            let mut minimal = input.clone();
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&minimal) {
+                    budget -= 1;
+                    if !prop(&cand) {
+                        minimal = cand;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case})\n  original: {input:?}\n  minimal:  {minimal:?}"
+            );
+        }
+    }
+}
+
+/// Generator: usize uniform in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Item = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.range(self.0, self.1 + 1)
+    }
+    fn shrink(&self, item: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *item > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*item - self.0) / 2);
+            out.push(item - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator: Vec<f32> with length in [min_len, max_len], values in [lo, hi].
+pub struct F32Vec {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for F32Vec {
+    type Item = Vec<f32>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let n = rng.range(self.min_len, self.max_len + 1);
+        (0..n).map(|_| rng.range_f32(self.lo, self.hi)).collect()
+    }
+    fn shrink(&self, item: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if item.len() > self.min_len {
+            out.push(item[..item.len() / 2.max(self.min_len)].to_vec());
+            let mut v = item.clone();
+            v.pop();
+            out.push(v);
+        }
+        // Zero out values.
+        if item.iter().any(|&x| x != 0.0) {
+            out.push(item.iter().map(|_| 0.0).collect());
+        }
+        out
+    }
+}
+
+/// Pair generator from two independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Item = (A::Item, B::Item);
+    fn generate(&self, rng: &mut Rng) -> Self::Item {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, item: &Self::Item) -> Vec<Self::Item> {
+        let mut out = Vec::new();
+        for a in self.0.shrink(&item.0) {
+            out.push((a, item.1.clone()));
+        }
+        for b in self.1.shrink(&item.1) {
+            out.push((item.0.clone(), b));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("len bounds", 200, &F32Vec { min_len: 1, max_len: 16, lo: -1.0, hi: 1.0 }, |v| {
+            v.len() >= 1 && v.len() <= 16 && v.iter().all(|x| (-1.0..1.0).contains(x))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_panics_with_info() {
+        check("always false", 10, &UsizeIn(0, 100), |_| false);
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Property fails for n >= 10; shrinker should report something < 20.
+        let result = std::panic::catch_unwind(|| {
+            check("n < 10", 100, &UsizeIn(0, 1000), |&n| n < 10);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal"), "{msg}");
+    }
+
+    #[test]
+    fn pair_generator_works() {
+        check(
+            "pair",
+            100,
+            &Pair(UsizeIn(1, 8), UsizeIn(1, 8)),
+            |&(a, b)| a >= 1 && b <= 8,
+        );
+    }
+}

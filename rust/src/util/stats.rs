@@ -1,0 +1,207 @@
+//! Descriptive statistics and timing helpers used by the bench harness,
+//! the coordinator's metrics, and the experiment tables.
+
+use std::time::Instant;
+
+/// Summary statistics over a sample of f64 observations.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Ordinary least squares fit of `y = a + b x`. Returns `(a, b, r2)`.
+///
+/// Used to fit empirical complexity exponents: regress `log(time)` on
+/// `log(T)` and read the slope (Table 1 reproduction).
+pub fn ols(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let syy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+/// Fit the scaling exponent p in `time ≈ c * T^p` from (T, time) pairs.
+pub fn scaling_exponent(ts: &[usize], times: &[f64]) -> f64 {
+    let xs: Vec<f64> = ts.iter().map(|&t| (t as f64).ln()).collect();
+    let ys: Vec<f64> = times.iter().map(|&y| y.ln()).collect();
+    ols(&xs, &ys).1
+}
+
+/// Stopwatch for timing a closure; returns (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Repeat a closure with warmup, collect per-iteration seconds.
+pub fn sample_times(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Simple exponential moving average, used for smoothed loss curves.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    pub alpha: f64,
+    pub value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: None }
+    }
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v * (1.0 - self.alpha) + x * self.alpha,
+        };
+        self.value = Some(v);
+        v
+    }
+}
+
+/// Running average with window `w` (Fig. 5 per-position loss smoothing).
+pub fn running_average(xs: &[f64], w: usize) -> Vec<f64> {
+    assert!(w >= 1);
+    let n = xs.len();
+    let mut out = Vec::with_capacity(n);
+    // prefix sums for O(n)
+    let mut pre = Vec::with_capacity(n + 1);
+    pre.push(0.0);
+    for &x in xs {
+        pre.push(pre.last().unwrap() + x);
+    }
+    let half = w / 2;
+    for i in 0..n {
+        let lo = i.saturating_sub(half);
+        let hi = (i + half + 1).min(n);
+        out.push((pre[hi] - pre[lo]) / (hi - lo) as f64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 0.9) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 + 0.5 * x).collect();
+        let (a, b, r2) = ols(&xs, &ys);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert!((b - 0.5).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaling_exponent_quadratic() {
+        let ts = [256usize, 512, 1024, 2048];
+        let times: Vec<f64> = ts.iter().map(|&t| 1e-9 * (t as f64).powi(2)).collect();
+        let p = scaling_exponent(&ts, &times);
+        assert!((p - 2.0).abs() < 1e-6, "p={p}");
+    }
+
+    #[test]
+    fn running_average_window1_is_identity() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(running_average(&xs, 1), xs.to_vec());
+    }
+
+    #[test]
+    fn running_average_smooths() {
+        let xs = [0.0, 10.0, 0.0, 10.0, 0.0, 10.0];
+        let sm = running_average(&xs, 3);
+        // interior points average over 3
+        assert!((sm[2] - 20.0 / 3.0).abs() < 1e-9 || (sm[2] - 10.0 / 3.0).abs() < 1e-9);
+        assert_eq!(sm.len(), xs.len());
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..30 {
+            e.update(4.0);
+        }
+        assert!((e.value.unwrap() - 4.0).abs() < 1e-6);
+    }
+}

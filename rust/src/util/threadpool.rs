@@ -1,0 +1,137 @@
+//! A small fixed-size thread pool (tokio/rayon unavailable offline).
+//!
+//! Used by the serving coordinator for worker threads and by data
+//! generation. Supports fire-and-forget jobs and a scoped parallel map.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size pool of worker threads consuming from a shared queue.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    tx: mpsc::Sender<Msg>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> ThreadPool {
+        assert!(n > 0);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { workers, tx }
+    }
+
+    /// Submit a job for asynchronous execution.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.send(Msg::Run(Box::new(job))).expect("pool closed");
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel map over items using transient scoped threads; preserves order.
+/// For CPU-bound work on this single-core testbed it degrades gracefully
+/// to near-sequential execution.
+pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let items: Vec<Option<T>> = items.into_iter().map(Some).collect();
+    let items = Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>());
+    let results = Mutex::new(&mut out);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let next = { items.lock().unwrap().pop() };
+                match next {
+                    None => break,
+                    Some((i, item)) => {
+                        let r = f(item.unwrap());
+                        results.lock().unwrap()[i] = Some(r);
+                    }
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<usize> = (0..50).collect();
+        let ys = par_map(xs, 4, |x| x * x);
+        for (i, y) in ys.iter().enumerate() {
+            assert_eq!(*y, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let ys: Vec<usize> = par_map(Vec::<usize>::new(), 4, |x| x);
+        assert!(ys.is_empty());
+    }
+}
