@@ -9,21 +9,43 @@
 //! - Log-Linear Mamba-2      → chunkwise Alg. 1, level-fused (O(T log T))
 //! - Log-Linear Mamba-2 (naive) → one masked sweep per level (E12 ablation)
 //!
-//! Run: `cargo bench --bench fig4_throughput`
+//! Run: `cargo bench --bench fig4_throughput [-- --quick] [--threads N]`
+//!
+//! Emits `BENCH_fig4.json` (series, T, secs, ns/token, fitted scaling
+//! exponents, GEMM thread count). If a previous `BENCH_fig4.json` exists
+//! its points are carried along as `previous_ns_per_token` and a
+//! `speedup_vs_previous` table is computed — run once before and once
+//! after a kernel change to record the before/after trajectory.
 
 use loglinear::attention::{self, AttnInputs};
 use loglinear::bench::{bench, section};
+use loglinear::tensor;
+use loglinear::util::json::Json;
 use loglinear::util::stats::scaling_exponent;
 use loglinear::util::Rng;
 
-fn main() {
-    let (dk, dv, c) = (64, 64, 64);
-    let lens: Vec<usize> = std::env::args()
-        .nth(1)
-        .and_then(|s| if s == "--quick" { Some(vec![512, 1024, 2048]) } else { None })
-        .unwrap_or_else(|| vec![512, 1024, 2048, 4096, 8192]);
+const OUT_PATH: &str = "BENCH_fig4.json";
 
-    section("Fig. 4 (right): kernel runtime, forward pass, head-dim 64, chunk 64");
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    if let Some(pos) = args.iter().position(|a| a == "--threads") {
+        if let Some(n) = args.get(pos + 1).and_then(|s| s.parse::<usize>().ok()) {
+            tensor::gemm_threads(n);
+        }
+    }
+
+    let (dk, dv, c) = (64, 64, 64);
+    let lens: Vec<usize> = if quick {
+        vec![512, 1024, 2048]
+    } else {
+        vec![512, 1024, 2048, 4096, 8192]
+    };
+
+    section(&format!(
+        "Fig. 4 (right): kernel runtime, forward pass, head-dim 64, chunk 64, gemm_threads={}",
+        tensor::current_gemm_threads()
+    ));
     let mut rows: Vec<(String, usize, f64)> = Vec::new();
     for &t in &lens {
         let mut rng = Rng::new(t as u64);
@@ -60,6 +82,7 @@ fn main() {
     }
 
     section("scaling exponents (log-log slope of runtime vs T)");
+    let mut exponents: Vec<(&str, f64)> = Vec::new();
     for series in ["softmax", "mamba2", "loglinear_mamba2", "loglinear_naive"] {
         let pts: Vec<(usize, f64)> = rows
             .iter()
@@ -72,6 +95,7 @@ fn main() {
                 &pts.iter().map(|(_, s)| *s).collect::<Vec<_>>(),
             );
             println!("  {series:<22} T^{p:.2}");
+            exponents.push((series, p));
         }
     }
 
@@ -92,5 +116,73 @@ fn main() {
         if let (Some(nv), Some(ll)) = (get("loglinear_naive"), get("loglinear_mamba2")) {
             println!("  T={t:>6}: fused speedup over naive = {:.2}x", nv / ll);
         }
+    }
+
+    // ---- machine-readable record (BENCH_fig4.json) ----
+    let previous = std::fs::read_to_string(OUT_PATH)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+    let prev_ns = |series: &str, t: usize| -> Option<f64> {
+        previous
+            .as_ref()?
+            .get("points")?
+            .as_arr()?
+            .iter()
+            .find(|p| {
+                p.get("series").and_then(|s| s.as_str()) == Some(series)
+                    && p.get("T").and_then(|v| v.as_usize()) == Some(t)
+            })?
+            .get("ns_per_token")?
+            .as_f64()
+    };
+
+    let mut points = Vec::new();
+    let mut speedups = Vec::new();
+    for (name, t, secs) in &rows {
+        let ns_per_token = secs * 1e9 / *t as f64;
+        let mut p = Json::obj()
+            .set("series", name.as_str())
+            .set("T", *t)
+            .set("secs", *secs)
+            .set("ns_per_token", ns_per_token);
+        if let Some(old) = prev_ns(name, *t) {
+            p = p.set("previous_ns_per_token", old);
+            speedups.push(
+                Json::obj()
+                    .set("series", name.as_str())
+                    .set("T", *t)
+                    .set("speedup", old / ns_per_token),
+            );
+        }
+        points.push(p);
+    }
+    let mut doc = Json::obj()
+        .set("bench", "fig4_throughput")
+        .set("quick", quick)
+        .set("gemm_threads", tensor::current_gemm_threads())
+        .set("dk", dk)
+        .set("dv", dv)
+        .set("chunk", c)
+        .set("points", Json::Arr(points));
+    let mut exp_obj = Json::obj();
+    for (series, p) in &exponents {
+        exp_obj = exp_obj.set(series, *p);
+    }
+    doc = doc.set("scaling_exponents", exp_obj);
+    if !speedups.is_empty() {
+        doc = doc.set("speedup_vs_previous", Json::Arr(speedups.clone()));
+        section("speedup vs previous BENCH_fig4.json");
+        for s in &speedups {
+            println!(
+                "  {:<22} T={:>6}: {:.2}x",
+                s.get("series").and_then(|v| v.as_str()).unwrap_or("?"),
+                s.get("T").and_then(|v| v.as_usize()).unwrap_or(0),
+                s.get("speedup").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            );
+        }
+    }
+    match std::fs::write(OUT_PATH, doc.pretty()) {
+        Ok(()) => println!("\nwrote {OUT_PATH}"),
+        Err(e) => eprintln!("\nfailed to write {OUT_PATH}: {e}"),
     }
 }

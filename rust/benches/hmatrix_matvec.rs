@@ -21,7 +21,7 @@ fn main() {
         let mut rng = Rng::new(t as u64);
         let alpha: Vec<f32> = (0..t).map(|_| rng.range_f32(0.85, 1.0)).collect();
         let lambda = Mat::rand_uniform(t, fenwick::num_levels(t), 0.05, 1.0, &mut rng);
-        let q = QuasiH::new(alpha, lambda);
+        let q = QuasiH::new(&alpha, &lambda);
         let x: Vec<f32> = (0..t).map(|_| rng.range_f32(-1.0, 1.0)).collect();
         let r = bench(&format!("quasi-fast/T={t}"), 0.3, || {
             std::hint::black_box(q.matvec(&x));

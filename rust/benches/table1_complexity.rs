@@ -5,18 +5,32 @@
 //! Method: measure runtime at geometrically spaced T, fit the log-log
 //! slope. Decode: measure per-step time and resident state at step t.
 //!
-//! Run: `cargo bench --bench table1_complexity`
+//! Run: `cargo bench --bench table1_complexity [-- --quick]`
+//!
+//! Emits `BENCH_table1.json`: per-model training points (T, ns/token),
+//! fitted scaling exponent, and the decode-time rows — so future PRs can
+//! track the perf trajectory mechanically.
 
 use loglinear::attention::{self, forward, AttnInputs, Form, Model};
 use loglinear::bench::section;
 use loglinear::state::{FenwickState, Transition};
 use loglinear::tensor::Mat;
+use loglinear::util::json::Json;
 use loglinear::util::stats::{sample_times, scaling_exponent, Summary};
 use loglinear::util::Rng;
 
+const OUT_PATH: &str = "BENCH_table1.json";
+
 fn main() {
+    let quick = std::env::args().skip(1).any(|a| a == "--quick");
     let (dk, dv, c) = (32, 32, 32);
-    let lens = [256usize, 512, 1024, 2048, 4096];
+    let lens: Vec<usize> = if quick {
+        vec![128, 256, 512, 1024]
+    } else {
+        vec![256, 512, 1024, 2048, 4096]
+    };
+    let softmax_cap = if quick { 1024 } else { 2048 };
+    let t_decode = if quick { 4096usize } else { 16_384usize };
 
     section("Table 1: training-time scaling (fit of runtime ~ T^p)");
     println!(
@@ -31,12 +45,14 @@ fn main() {
         (Model::LogLinearMamba2, "O(T log T)", 1.0), // slope ~1.0-1.3
         (Model::LogLinearGdn, "O(T log T)", 1.0),
     ];
+    let mut train_rows = Vec::new();
     for (model, paper, expect) in cases {
         let mut ts = Vec::new();
         let mut times = Vec::new();
+        let mut points = Vec::new();
         for &t in &lens {
             // keep the quadratic baseline affordable
-            if model == Model::Softmax && t > 2048 {
+            if model == Model::Softmax && t > softmax_cap {
                 continue;
             }
             let mut rng = Rng::new(t as u64);
@@ -45,8 +61,15 @@ fn main() {
             let samples = sample_times(1, 3, || {
                 std::hint::black_box(forward(model, form, &x));
             });
+            let p50 = Summary::of(&samples).p50;
             ts.push(t);
-            times.push(Summary::of(&samples).p50);
+            times.push(p50);
+            points.push(
+                Json::obj()
+                    .set("T", t)
+                    .set("secs", p50)
+                    .set("ns_per_token", p50 * 1e9 / t as f64),
+            );
         }
         let p = scaling_exponent(&ts, &times);
         // log-linear shows as slope slightly above 1; quadratic ~2
@@ -58,37 +81,55 @@ fn main() {
             paper,
             if ok { "matches" } else { "CHECK" }
         );
+        train_rows.push(
+            Json::obj()
+                .set("model", model.name())
+                .set("fit_exponent", p)
+                .set("paper", paper)
+                .set("matches", ok)
+                .set("points", Json::Arr(points)),
+        );
     }
 
-    section("Table 1: decoding time per step & state memory at T = 16384");
-    let t_decode = 16_384usize;
+    section(&format!("Table 1: decoding time per step & state memory at T = {t_decode}"));
     println!(
         "{:<22} {:>14} {:>16} {:>12}",
         "model", "us/step@T", "state bytes", "paper space"
     );
     let mut rng = Rng::new(9);
     let x = AttnInputs::random(1024, dk, dv, &mut rng);
+    let mut decode_rows = Vec::new();
+    let mut push_decode = |model: &str, us_per_step: f64, state_bytes: usize, paper: &str| {
+        println!("{model:<22} {us_per_step:>14.1} {state_bytes:>16} {paper:>12}");
+        decode_rows.push(
+            Json::obj()
+                .set("model", model)
+                .set("us_per_step", us_per_step)
+                .set("state_bytes", state_bytes)
+                .set("paper_space", paper),
+        );
+    };
 
     // softmax: KV-cache decode, measure at a few depths then extrapolate slope
     {
+        let depth = t_decode / 2;
         let mut kv = attention::softmax::KvCacheDecoder::new(dk);
         let mut step_times = Vec::new();
-        for t in 0..8192 {
+        for t in 0..depth {
             let i = t % 1024;
             let t0 = std::time::Instant::now();
             kv.step(x.q.row(i), x.k.row(i), x.v.row(i));
-            if t >= 8000 {
+            if t >= depth - 192 {
                 step_times.push(t0.elapsed().as_secs_f64());
             }
         }
         let mean = Summary::of(&step_times).p50;
-        // per-step cost is linear in t; extrapolate to 16K
-        println!(
-            "{:<22} {:>14.1} {:>16} {:>12}",
+        // per-step cost is linear in t; extrapolate to full depth
+        push_decode(
             "softmax (KV cache)",
-            mean * 1e6 * (t_decode as f64 / 8192.0),
+            mean * 1e6 * (t_decode as f64 / depth as f64),
             t_decode * (dk + dv) * 4,
-            "O(T)"
+            "O(T)",
         );
     }
     // mamba2: constant state
@@ -99,15 +140,9 @@ fn main() {
             loglinear::tensor::outer_acc(&mut s, x.k.row(0), x.v.row(0), 1.0);
             std::hint::black_box(s.matvec_t(x.q.row(0)));
         });
-        println!(
-            "{:<22} {:>14.1} {:>16} {:>12}",
-            "mamba2",
-            Summary::of(&times).p50 * 1e6,
-            dk * dv * 4,
-            "O(1)"
-        );
+        push_decode("mamba2", Summary::of(&times).p50 * 1e6, dk * dv * 4, "O(1)");
     }
-    // log-linear: Fenwick states at depth 16K
+    // log-linear: Fenwick states at full decode depth
     {
         let mut st = FenwickState::new(dk, dv);
         let lambda = vec![1.0f32; 20];
@@ -120,12 +155,11 @@ fn main() {
                 step_times.push(t0.elapsed().as_secs_f64());
             }
         }
-        println!(
-            "{:<22} {:>14.1} {:>16} {:>12}",
+        push_decode(
             "loglinear_mamba2",
             Summary::of(&step_times).p50 * 1e6,
             st.state_bytes(),
-            "O(log T)"
+            "O(log T)",
         );
     }
     // log-linear GDN
@@ -148,12 +182,25 @@ fn main() {
                 step_times.push(t0.elapsed().as_secs_f64());
             }
         }
-        println!(
-            "{:<22} {:>14.1} {:>16} {:>12}",
+        push_decode(
             "loglinear_gdn",
             Summary::of(&step_times).p50 * 1e6,
             st.state_bytes(),
-            "O(log T)"
+            "O(log T)",
         );
+    }
+
+    let doc = Json::obj()
+        .set("bench", "table1_complexity")
+        .set("quick", quick)
+        .set("dk", dk)
+        .set("dv", dv)
+        .set("chunk", c)
+        .set("decode_depth", t_decode)
+        .set("training", Json::Arr(train_rows))
+        .set("decode", Json::Arr(decode_rows));
+    match std::fs::write(OUT_PATH, doc.pretty()) {
+        Ok(()) => println!("\nwrote {OUT_PATH}"),
+        Err(e) => eprintln!("\nfailed to write {OUT_PATH}: {e}"),
     }
 }

@@ -85,7 +85,7 @@ pub fn parallel(q: &Mat, k: &Mat, v: &Mat, beta: &[f32]) -> Mat {
             *qk.at_mut(i, j) = 0.0;
         }
     }
-    qk.matmul(&w)
+    qk.matmul_sparse_rows(&w)
 }
 
 /// The explicit DeltaNet attention matrix

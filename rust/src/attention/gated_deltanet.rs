@@ -16,7 +16,7 @@
 //! `S_out = G_C S_in + Σ_s (G_C/G_s) k_s ŵ_s^T`.
 
 use crate::hmatrix::sss::SssMask;
-use crate::tensor::{ops, Mat};
+use crate::tensor::{self, ops, Mat};
 
 use super::deltanet;
 
@@ -41,7 +41,7 @@ pub fn recurrent(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], beta: &[f32]) -> Mat 
 pub fn parallel(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], beta: &[f32]) -> Mat {
     let a = deltanet::attn_matrix(q, k, beta);
     let p = a.hadamard(&SssMask::new(alpha).dense());
-    p.matmul(v)
+    p.matmul_sparse_rows(v)
 }
 
 /// Result of running one chunk: per-position outputs plus outgoing state.
@@ -55,6 +55,7 @@ pub struct ChunkOut {
 /// Processes positions `[start, end)` given the state at chunk entry
 /// (covering all transitions through `start-1`). Returns the chunk's
 /// outputs and the state at chunk exit.
+#[allow(clippy::too_many_arguments)]
 pub fn gdn_chunk(
     q: &Mat,
     k: &Mat,
@@ -66,7 +67,7 @@ pub fn gdn_chunk(
     s_in: &Mat,
 ) -> ChunkOut {
     let len = end - start;
-    let dv = v.cols;
+    let (dk, dv) = (k.cols, v.cols);
     // G[i] = Π_{j=start..start+i} α_j  (decay through position i, local).
     let mut g = vec![0.0f32; len];
     let mut acc = 1.0f64;
@@ -75,61 +76,59 @@ pub fn gdn_chunk(
         g[i] = acc as f32;
     }
 
-    // System matrix M (strict lower) with entries β_t (k_t·k_s) G_t/G_s.
+    // System matrix M (strict lower) with entries β_t (k_t·k_s) G_t/G_s:
+    // one K_c K_c^T GEMM, then an O(len^2) scaling pass.
     let mut sys = Mat::zeros(len, len);
+    tensor::gemm_nt_into(len, dk, len, k.rows_data(start, end), k.rows_data(start, end), &mut sys.data, false);
     for i in 0..len {
-        *sys.at_mut(i, i) = 1.0;
-        for j in 0..i {
-            *sys.at_mut(i, j) = beta[start + i]
-                * crate::tensor::dot(k.row(start + i), k.row(start + j))
-                * (g[i] / g[j]);
+        let row = sys.row_mut(i);
+        for (j, sij) in row.iter_mut().enumerate() {
+            if j < i {
+                *sij *= beta[start + i] * (g[i] / g[j]);
+            } else {
+                *sij = if j == i { 1.0 } else { 0.0 };
+            }
         }
     }
 
-    // RHS = diag(β) (V − diag(G) K S_in)
+    // RHS = diag(β) (V − diag(G) K S_in): one K_c @ S_in GEMM + scaling.
+    let mut ks = Mat::zeros(len, dv);
+    tensor::gemm_into(len, dk, dv, k.rows_data(start, end), &s_in.data, &mut ks.data, false);
     let mut rhs = Mat::zeros(len, dv);
     for i in 0..len {
-        let ks = s_in.matvec_t(k.row(start + i)); // S_in^T k_i : (dv)
-        for j in 0..dv {
-            *rhs.at_mut(i, j) = beta[start + i] * (v.at(start + i, j) - g[i] * ks[j]);
+        let bi = beta[start + i];
+        let gi = g[i];
+        let ksrow = ks.row(i);
+        let vrow = v.row(start + i);
+        for (j, r) in rhs.row_mut(i).iter_mut().enumerate() {
+            *r = bi * (vrow[j] - gi * ksrow[j]);
         }
     }
     let w_hat = ops::solve_unit_lower(&sys, &rhs);
 
-    // Outputs: o_t = G_t (S_in^T q_t) + Σ_{s≤t} (q_t·k_s)(G_t/G_s) ŵ_s
+    // Outputs: O = diag(G) Q_c S_in + (tril(Q_c K_c^T) ⊙ Gratio) Ŵ —
+    // two GEMMs plus a masked GEMM.
     let mut o = Mat::zeros(len, dv);
+    tensor::gemm_diag_acc(len, dk, dv, &g, q.rows_data(start, end), &s_in.data, &mut o.data);
+    let mut qk = Mat::zeros(len, len);
+    tensor::gemm_nt_into(len, dk, len, q.rows_data(start, end), k.rows_data(start, end), &mut qk.data, false);
     for i in 0..len {
-        let qi = q.row(start + i);
-        let base = s_in.matvec_t(qi);
-        let orow = o.row_mut(i);
-        for j in 0..dv {
-            orow[j] = g[i] * base[j];
-        }
-        for s in 0..=i {
-            let w = crate::tensor::dot(qi, k.row(start + s)) * (g[i] / g[s]);
-            for (dst, &x) in orow.iter_mut().zip(w_hat.row(s)) {
-                *dst += w * x;
+        let row = qk.row_mut(i);
+        for (j, pij) in row.iter_mut().enumerate() {
+            if j > i {
+                *pij = 0.0;
+            } else {
+                *pij *= g[i] / g[j];
             }
         }
     }
+    tensor::gemm_sparse_rows(len, len, dv, &qk.data, &w_hat.data, &mut o.data, true);
 
-    // S_out = G_C S_in + Σ_s (G_C/G_s) k_s ŵ_s^T
+    // S_out = G_C S_in + K_c^T diag(G_C/G_s) Ŵ as one fused kernel.
     let g_c = g[len - 1];
     let mut s_out = s_in.scale(g_c);
-    for s in 0..len {
-        let scale = g_c / g[s];
-        let ks = k.row(start + s);
-        for (i, &ki) in ks.iter().enumerate() {
-            let c = scale * ki;
-            if c == 0.0 {
-                continue;
-            }
-            let row = &mut s_out.data[i * dv..(i + 1) * dv];
-            for (r, &w) in row.iter_mut().zip(w_hat.row(s)) {
-                *r += c * w;
-            }
-        }
-    }
+    let wscale: Vec<f32> = g.iter().map(|&gs| g_c / gs).collect();
+    tensor::gemm_tn_diag_acc(len, dk, dv, &wscale, k.rows_data(start, end), &w_hat.data, &mut s_out.data);
     ChunkOut { o, s_out }
 }
 

@@ -2,7 +2,7 @@
 //! three algorithmic forms of the paper's §2. No feature map, no
 //! normalizer, matching the paper's working definition (footnote 4).
 
-use crate::tensor::{outer_acc, Mat};
+use crate::tensor::{self, outer_acc, Mat};
 
 /// Recurrent form: `S_t = S_{t-1} + k_t v_t^T`, `o_t = S_t^T q_t`.
 /// Linear time, constant memory — the oracle.
@@ -28,44 +28,69 @@ pub fn parallel(q: &Mat, k: &Mat, v: &Mat) -> Mat {
             *p.at_mut(i, j) = 0.0;
         }
     }
-    p.matmul(v)
+    p.matmul_sparse_rows(v)
 }
 
 /// Chunkwise form: intra-chunk quadratic + inter-chunk state passing
 /// (the `O(T)` training algorithm the paper's Alg. 1 generalizes).
+/// Matmul-rich: inter-chunk reads are one `Q_c @ S` GEMM, intra-chunk is
+/// `Q_c K_c^T` + masked `P V_c`, and the state write is one `K_c^T V_c`.
 pub fn chunkwise(q: &Mat, k: &Mat, v: &Mat, c: usize) -> Mat {
     assert!(c >= 1);
     let (t, dk, dv) = (q.rows, q.cols, v.cols);
     let mut out = Mat::zeros(t, dv);
     let mut state = Mat::zeros(dk, dv); // state entering the current chunk
+    let cmax = c.min(t.max(1));
+    let mut pbuf = vec![0.0f32; cmax * cmax];
     let mut chunk_start = 0;
     while chunk_start < t {
         let chunk_end = (chunk_start + c).min(t);
+        let len = chunk_end - chunk_start;
         // Inter-chunk: o_t += state^T q_t  (state frozen at chunk entry).
-        for i in chunk_start..chunk_end {
-            let o = state.matvec_t(q.row(i));
-            out.row_mut(i).copy_from_slice(&o);
-        }
-        // Intra-chunk: (Q_c K_c^T ⊙ L) V_c, dense within the chunk.
-        for i in chunk_start..chunk_end {
-            let oi = {
-                let mut acc = vec![0.0f32; dv];
-                for j in chunk_start..=i {
-                    let w = crate::tensor::dot(q.row(i), k.row(j));
-                    for (a, &vv) in acc.iter_mut().zip(v.row(j)) {
-                        *a += w * vv;
-                    }
-                }
-                acc
-            };
-            for (o, a) in out.row_mut(i).iter_mut().zip(oi) {
-                *o += a;
+        tensor::gemm_into(
+            len,
+            dk,
+            dv,
+            q.rows_data(chunk_start, chunk_end),
+            &state.data,
+            out.rows_data_mut(chunk_start, chunk_end),
+            true,
+        );
+        // Intra-chunk: (Q_c K_c^T ⊙ L) V_c via a GEMM + tril mask + masked GEMM.
+        let p = &mut pbuf[..len * len];
+        tensor::gemm_nt_into(
+            len,
+            dk,
+            len,
+            q.rows_data(chunk_start, chunk_end),
+            k.rows_data(chunk_start, chunk_end),
+            p,
+            false,
+        );
+        for i in 0..len {
+            for pij in p[i * len + i + 1..(i + 1) * len].iter_mut() {
+                *pij = 0.0;
             }
         }
-        // State update: fold this chunk's keys/values in.
-        for i in chunk_start..chunk_end {
-            outer_acc(&mut state, k.row(i), v.row(i), 1.0);
-        }
+        tensor::gemm_sparse_rows(
+            len,
+            len,
+            dv,
+            p,
+            v.rows_data(chunk_start, chunk_end),
+            out.rows_data_mut(chunk_start, chunk_end),
+            true,
+        );
+        // State update: S += K_c^T V_c, one fused kernel.
+        tensor::gemm_tn_into(
+            len,
+            dk,
+            dv,
+            k.rows_data(chunk_start, chunk_end),
+            v.rows_data(chunk_start, chunk_end),
+            &mut state.data,
+            true,
+        );
         chunk_start = chunk_end;
     }
     out

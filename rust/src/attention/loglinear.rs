@@ -11,6 +11,16 @@
 //!   at level 0. Inter-chunk levels map to token levels as
 //!   `token_level = log2(C) + chunk_level`.
 //!
+//! The engine is built for the matmul-rich form of §3.5: instead of one
+//! `S^T q` matvec per (token, level), [`ChunkFenwick::read_levels_into`]
+//! concatenates the `O(log T)` live states into a single `(d_k, L·d_v)`
+//! matrix and reads a whole chunk of queries against it with **one GEMM**,
+//! folding the per-level λ weights afterwards. It is also allocation-free
+//! in steady state: merged-out states go to an internal free list that
+//! [`ChunkFenwick::take_buffer`] recycles, and the concat/read workspaces
+//! persist across chunks (and across sequences via
+//! [`ChunkFenwick::reset`]).
+//!
 //! Both log-linear instantiations (Mamba-2 and Gated DeltaNet) drive this
 //! engine with their own transitions (scalar decay vs. gated Householder
 //! chain), which is exactly the paper's claim that any linear-attention
@@ -18,39 +28,49 @@
 
 use crate::fenwick;
 use crate::hmatrix::QuasiH;
-use crate::tensor::Mat;
+use crate::tensor::{self, Mat};
 
 /// Generic parallel form: `O = (A ⊙ M^S ⊙ M^H) V`.
 ///
 /// `a` must be the model's (lower-triangular) interaction matrix:
 /// `Q K^T` for Mamba-2, `T_K(Q K^T)` for Gated DeltaNet.
 pub fn parallel_from_a(a: &Mat, alpha: &[f32], lambda: &Mat, v: &Mat) -> Mat {
-    let quasi = QuasiH::new(alpha.to_vec(), lambda.clone()).dense();
-    a.hadamard(&quasi).matmul(v)
+    let quasi = QuasiH::new(alpha, lambda).dense();
+    // the masked product is lower-triangular: ~half structural zeros
+    a.hadamard(&quasi).matmul_sparse_rows(v)
 }
 
 /// Chunk-granularity Fenwick state set. `levels[m]` holds the bucket state
 /// for chunk-level `m >= 1` (a `(d_k, d_v)` matrix summarizing
 /// `2^(m-1)` chunks); `level0` holds the most recent chunk's state.
-#[derive(Debug, Clone)]
+///
+/// Owns its workspaces (state free list, concat buffer, GEMM read buffer)
+/// so a chunkwise sweep allocates nothing per chunk after warm-up.
+#[derive(Debug, Clone, Default)]
 pub struct ChunkFenwick {
     level0: Option<Mat>,
     levels: Vec<Option<Mat>>,
-}
-
-impl Default for ChunkFenwick {
-    fn default() -> Self {
-        Self::new()
-    }
+    /// state shape, fixed on first write (0 until then)
+    dk: usize,
+    dv: usize,
+    /// recycled (dk, dv) buffers from merged-out states
+    free: Vec<Mat>,
+    /// concat workspace: row-major (dk, live_levels * dv)
+    cat: Vec<f32>,
+    /// GEMM output workspace: (chunk_len, live_levels * dv)
+    read_buf: Vec<f32>,
+    /// chunk-levels (>= 1) live at the last concat, panel order
+    active_ids: Vec<usize>,
 }
 
 impl ChunkFenwick {
     pub fn new() -> ChunkFenwick {
-        ChunkFenwick { level0: None, levels: Vec::new() }
+        ChunkFenwick::default()
     }
 
     /// Merge step before processing chunk `z` (no-op for `z = 0`):
-    /// levels `0..=lssb(z)` sum into level `lssb(z)+1`.
+    /// levels `0..=lssb(z)` sum into level `lssb(z)+1`. Merged-out
+    /// buffers are recycled, not dropped.
     pub fn advance(&mut self, z: usize) {
         if z == 0 {
             return;
@@ -61,7 +81,10 @@ impl ChunkFenwick {
             if let Some(s) = self.levels.get_mut(m - 1).and_then(|x| x.take()) {
                 match merged {
                     None => merged = Some(s),
-                    Some(ref mut acc) => acc.axpy(1.0, &s),
+                    Some(ref mut acc) => {
+                        acc.axpy(1.0, &s);
+                        self.free.push(s);
+                    }
                 }
             }
         }
@@ -98,10 +121,134 @@ impl ChunkFenwick {
         }
     }
 
+    /// Apply a matrix transition `S ← Φ S` to every live state as dense
+    /// GEMMs (`Φ` is `(d_k, d_k)`, e.g. a chunk's Householder-chain
+    /// product). Uses a recycled scratch buffer — no allocation in steady
+    /// state.
+    pub fn apply_matrix_transition(&mut self, phi: &Mat) {
+        if self.dk == 0 {
+            return;
+        }
+        assert_eq!((phi.rows, phi.cols), (self.dk, self.dk), "transition shape");
+        let mut tmp = match self.free.pop() {
+            Some(m) => m,
+            None => Mat::zeros(self.dk, self.dv),
+        };
+        if let Some(s) = self.level0.as_mut() {
+            phi.matmul_into(s, &mut tmp);
+            std::mem::swap(&mut s.data, &mut tmp.data);
+        }
+        for s in self.levels.iter_mut().flatten() {
+            phi.matmul_into(s, &mut tmp);
+            std::mem::swap(&mut s.data, &mut tmp.data);
+        }
+        self.free.push(tmp);
+    }
+
+    /// A zeroed `(dk, dv)` buffer for the next chunk state, recycled from
+    /// the free list when possible. Fill it (e.g. via
+    /// [`crate::tensor::gemm_tn_diag_acc`]) and install it with
+    /// [`ChunkFenwick::set_level0`].
+    pub fn take_buffer(&mut self, dk: usize, dv: usize) -> Mat {
+        if self.dk == 0 {
+            self.dk = dk;
+            self.dv = dv;
+        }
+        assert_eq!((self.dk, self.dv), (dk, dv), "state shape changed mid-sequence");
+        match self.free.pop() {
+            Some(mut m) => {
+                m.data.fill(0.0);
+                m
+            }
+            None => Mat::zeros(dk, dv),
+        }
+    }
+
     /// Install the freshly-computed chunk state at level 0.
     pub fn set_level0(&mut self, s: Mat) {
         debug_assert!(self.level0.is_none(), "level0 must be merged before rewrite");
+        if self.dk == 0 {
+            self.dk = s.rows;
+            self.dv = s.cols;
+        }
         self.level0 = Some(s);
+    }
+
+    /// Clear all states for a new sequence, keeping the recycled buffers
+    /// and workspaces (zero-alloc reuse across sequences).
+    pub fn reset(&mut self) {
+        if let Some(s) = self.level0.take() {
+            self.free.push(s);
+        }
+        for slot in self.levels.iter_mut() {
+            if let Some(s) = slot.take() {
+                self.free.push(s);
+            }
+        }
+    }
+
+    /// Batched inter-chunk level read (§3.5's level fusion as one GEMM):
+    /// concatenates the live level states into `S_cat: (d_k, L·d_v)`,
+    /// computes `P = Q_block @ S_cat` in a single GEMM, then folds level
+    /// panels into `out` rows `out_row0..out_row0+len` with
+    /// `out[out_row0+i] += weight(i, level) · P[i, panel(level)]`.
+    ///
+    /// `q_block` is row-major `(len, d_k)` — pass a zero-copy
+    /// [`Mat::rows_data`] view of Q (or of the effective queries for
+    /// delta-rule models). `weight` receives the chunk-local row index and
+    /// the chunk-level `m >= 1`; return 0 to skip a (row, level) pair.
+    pub fn read_levels_into(
+        &mut self,
+        q_block: &[f32],
+        len: usize,
+        out: &mut Mat,
+        out_row0: usize,
+        mut weight: impl FnMut(usize, usize) -> f32,
+    ) {
+        let (dk, dv) = (self.dk, self.dv);
+        if dk == 0 || len == 0 {
+            return;
+        }
+        assert_eq!(q_block.len(), len * dk, "q_block shape");
+        assert!(out_row0 + len <= out.rows && out.cols == dv, "out shape");
+        // 1) gather live levels (chunk_level >= 1), panel order = level order
+        self.active_ids.clear();
+        for (i, s) in self.levels.iter().enumerate() {
+            if s.is_some() {
+                self.active_ids.push(i + 1);
+            }
+        }
+        let nl = self.active_ids.len();
+        if nl == 0 {
+            return;
+        }
+        let ncat = nl * dv;
+        // 2) concat: row r of S_cat is [S^(m1) row r | S^(m2) row r | ...]
+        self.cat.clear();
+        self.cat.resize(dk * ncat, 0.0);
+        for (li, &lvl) in self.active_ids.iter().enumerate() {
+            let s = self.levels[lvl - 1].as_ref().expect("active level live");
+            for r in 0..dk {
+                let dst = r * ncat + li * dv;
+                self.cat[dst..dst + dv].copy_from_slice(s.row(r));
+            }
+        }
+        // 3) one GEMM for the whole chunk's level reads
+        self.read_buf.clear();
+        self.read_buf.resize(len * ncat, 0.0);
+        tensor::gemm_into(len, dk, ncat, q_block, &self.cat, &mut self.read_buf, false);
+        // 4) λ-weighted level fold
+        for i in 0..len {
+            let prow = &self.read_buf[i * ncat..(i + 1) * ncat];
+            let orow = out.row_mut(out_row0 + i);
+            for (li, &lvl) in self.active_ids.iter().enumerate() {
+                let w = weight(i, lvl);
+                if w == 0.0 {
+                    continue;
+                }
+                tensor::axpy8(orow, &prow[li * dv..(li + 1) * dv], w);
+            }
+        }
     }
 }
 
@@ -154,7 +301,7 @@ mod tests {
                 "z={z}"
             );
             // write marker for chunk z
-            let mut m = Mat::zeros(1, zmax);
+            let mut m = eng.take_buffer(1, zmax);
             *m.at_mut(0, z) = 1.0;
             eng.set_level0(m);
         }
@@ -174,6 +321,97 @@ mod tests {
         let total: f32 = eng.active().map(|(_, s)| s.at(0, 0)).sum();
         let expect: f32 = (0..8).map(|z| 2.0f32.powi(7 - z)).sum();
         assert!((total - expect).abs() < 1e-4);
+    }
+
+    #[test]
+    fn matrix_transition_matches_scalar_for_diagonal_phi() {
+        // Φ = c·I must agree with scale_inplace(c) on every live state.
+        let mut rng = Rng::new(7);
+        let (dk, dv) = (6, 5);
+        let mut a = ChunkFenwick::new();
+        let mut b = ChunkFenwick::new();
+        for z in 0..13 {
+            a.advance(z);
+            b.advance(z);
+            a.apply_transition(|s| s.scale_inplace(0.9));
+            b.apply_matrix_transition(&Mat::eye(dk).scale(0.9));
+            let w = Mat::randn(dk, dv, 1.0, &mut rng);
+            a.set_level0(w.clone());
+            b.set_level0(w);
+        }
+        a.advance(13);
+        b.advance(13);
+        let sa: Vec<&Mat> = a.active().map(|(_, s)| s).collect();
+        let sb: Vec<&Mat> = b.active().map(|(_, s)| s).collect();
+        assert_eq!(sa.len(), sb.len());
+        for (x, y) in sa.iter().zip(sb.iter()) {
+            crate::tensor::assert_close(x, y, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn batched_read_matches_per_level_matvecs() {
+        // read_levels_into (one GEMM + fold) against the scalar loop it
+        // replaced: per active level, out_i += w * S^(m)T q_i.
+        let mut rng = Rng::new(8);
+        let (dk, dv, len) = (7, 6, 5);
+        let mut eng = ChunkFenwick::new();
+        for z in 0..11 {
+            eng.advance(z);
+            eng.set_level0(Mat::randn(dk, dv, 1.0, &mut rng));
+        }
+        eng.advance(11);
+        let q = Mat::randn(len, dk, 1.0, &mut rng);
+        let lam = Mat::rand_uniform(len, 8, 0.0, 1.0, &mut rng);
+
+        let mut want = Mat::zeros(len, dv);
+        for i in 0..len {
+            for (m, s) in eng.active() {
+                let w = lam.at(i, m);
+                s.matvec_t_acc(q.row(i), w, want.row_mut(i));
+            }
+        }
+        let mut got = Mat::zeros(len, dv);
+        eng.read_levels_into(q.rows_data(0, len), len, &mut got, 0, |i, m| lam.at(i, m));
+        crate::tensor::assert_close(&got, &want, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn workspace_reuse_across_two_sequences() {
+        // A reset engine re-driven on fresh data must agree with a fresh
+        // engine, and recycle its buffers instead of allocating.
+        let mut rng = Rng::new(9);
+        let (dk, dv, len) = (6, 4, 4);
+        let drive = |eng: &mut ChunkFenwick, states: &[Mat], q: &Mat| -> Mat {
+            let mut out = Mat::zeros(len, dv);
+            for (z, w) in states.iter().enumerate() {
+                eng.advance(z);
+                eng.apply_transition(|s| s.scale_inplace(0.95));
+                let mut buf = eng.take_buffer(dk, dv);
+                buf.data.copy_from_slice(&w.data);
+                eng.set_level0(buf);
+            }
+            eng.advance(states.len());
+            eng.read_levels_into(q.rows_data(0, len), len, &mut out, 0, |_, _| 1.0);
+            out
+        };
+        let seq_a: Vec<Mat> = (0..9).map(|_| Mat::randn(dk, dv, 1.0, &mut rng)).collect();
+        let seq_b: Vec<Mat> = (0..6).map(|_| Mat::randn(dk, dv, 1.0, &mut rng)).collect();
+        let q = Mat::randn(len, dk, 1.0, &mut rng);
+
+        let mut reused = ChunkFenwick::new();
+        let a1 = drive(&mut reused, &seq_a, &q);
+        reused.reset();
+        let b1 = drive(&mut reused, &seq_b, &q);
+
+        let a2 = drive(&mut ChunkFenwick::new(), &seq_a, &q);
+        let b2 = drive(&mut ChunkFenwick::new(), &seq_b, &q);
+        crate::tensor::assert_close(&a1, &a2, 1e-5, 1e-5);
+        crate::tensor::assert_close(&b1, &b2, 1e-5, 1e-5);
+        // reset recycles every live state onto the free list
+        reused.reset();
+        assert_eq!(reused.live_states(), 0);
+        assert!(!reused.free.is_empty(), "reset must keep buffers for reuse");
     }
 
     #[test]

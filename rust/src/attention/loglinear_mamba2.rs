@@ -7,14 +7,19 @@
 //! - [`parallel`]: dense masked form via [`crate::hmatrix::QuasiH`].
 //! - [`chunkwise`]: Algorithm 1 — intra-chunk dense H-masked attention +
 //!   `O(log(T/C))`-level inter-chunk state passing (fused, one pass).
+//!   This is the matmul-rich §3.5 form: per chunk, *three* GEMMs do all
+//!   the heavy lifting (batched level read `Q_c S_cat`, local `Q_c K_c^T`,
+//!   masked `P V_c`) plus one fused `K_c^T diag(w) V_c` state write —
+//!   no per-token matvec loops anywhere.
 //! - [`chunkwise_naive`]: the "Log-Linear Mamba-2 (naive)" baseline of
 //!   Fig. 4 — one full Mamba-2-style masked state-passing sweep *per
-//!   level*, for the E12 level-fusion ablation.
+//!   level*, for the E12 level-fusion ablation (same GEMM substrate, so
+//!   the ablation isolates level fusion, not scalar-vs-GEMM).
 
 use crate::fenwick;
-use crate::tensor::{outer_acc, Mat};
+use crate::tensor::{self, outer_acc, Mat};
 
-use super::loglinear::{local_lambda_mask, parallel_from_a, ChunkFenwick};
+use super::loglinear::{parallel_from_a, ChunkFenwick};
 
 /// Token-granularity Fenwick recurrence (decode form). `O(log t)` live
 /// states; per step: merge, decay, write sentinel, read with λ.
@@ -50,7 +55,7 @@ pub fn recurrent(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat) -> Mat 
         let mut s0 = Mat::zeros(dk, dv);
         outer_acc(&mut s0, k.row(t), v.row(t), 1.0);
         levels[0] = Some(s0);
-        // 4) read: o_t = Σ_ℓ λ_t^(ℓ) S^(ℓ)T q_t.
+        // 4) read: o_t = Σ_ℓ λ_t^(ℓ) S^(ℓ)T q_t (fused, no temporaries).
         let orow = out.row_mut(t);
         for (l, s) in levels.iter().enumerate() {
             if let Some(s) = s {
@@ -58,9 +63,7 @@ pub fn recurrent(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat) -> Mat 
                 if lam == 0.0 {
                     continue;
                 }
-                for (dst, x) in orow.iter_mut().zip(s.matvec_t(q.row(t))) {
-                    *dst += lam * x;
-                }
+                s.matvec_t_acc(q.row(t), lam, orow);
             }
         }
     }
@@ -81,14 +84,20 @@ pub fn parallel(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat) -> Mat {
 
 /// Algorithm 1, fused: one pass over chunks; per chunk the engine exposes
 /// all `O(log(T/C))` level states at once so every level's contribution is
-/// accumulated from a single read of Q (the level-fusion optimization of
-/// §3.5 — contrast [`chunkwise_naive`]).
+/// read with a single `Q_c @ S_cat` GEMM (the level-fusion optimization of
+/// §3.5 — contrast [`chunkwise_naive`]). All per-chunk buffers are
+/// workspaces reused across chunks.
 pub fn chunkwise(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat, c: usize) -> Mat {
     assert!(c >= 1 && c.is_power_of_two(), "chunk size must be a power of two");
     let (t_len, dk, dv) = (q.rows, q.cols, v.cols);
     let lc = c.trailing_zeros() as usize; // log2(C): token level = lc + chunk level
     let mut out = Mat::zeros(t_len, dv);
     let mut eng = ChunkFenwick::new();
+    // per-chunk workspaces, allocated once (chunks never exceed T rows)
+    let cmax = c.min(t_len.max(1));
+    let mut pbuf = vec![0.0f32; cmax * cmax];
+    let mut dec_in = vec![0.0f32; cmax];
+    let mut wscale = vec![0.0f32; cmax];
     let mut z = 0usize;
     let mut start = 0usize;
     while start < t_len {
@@ -97,55 +106,50 @@ pub fn chunkwise(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat, c: usiz
         eng.advance(z);
 
         // Local cumulative decay through position i.
-        let mut dec_in = vec![0.0f32; len];
         let mut acc = 1.0f64;
         for i in 0..len {
             acc *= alpha[start + i] as f64;
             dec_in[i] = acc as f32;
         }
 
-        // Inter-chunk: o_t += Σ_m λ_t^(lc+m) dec_in[t] (S^(m)T q_t).
+        // Inter-chunk, batched: one GEMM over the concatenated level
+        // states, folded with λ_t^(lc+m) · dec_in[t].
+        eng.read_levels_into(q.rows_data(start, end), len, &mut out, start, |i, m| {
+            lambda.at(start + i, lc + m) * dec_in[i]
+        });
+
+        // Intra-chunk: P = Q_c K_c^T (GEMM), masked in place by the decay
+        // ratio and the local λ mask, then out += P V_c (masked GEMM).
+        let p = &mut pbuf[..len * len];
+        tensor::gemm_nt_into(len, dk, len, q.rows_data(start, end), k.rows_data(start, end), p, false);
         for i in 0..len {
-            let qrow = q.row(start + i);
-            let orow = out.row_mut(start + i);
-            for (m, s) in eng.active() {
-                let lam = lambda.at(start + i, lc + m) * dec_in[i];
-                if lam == 0.0 {
-                    continue;
-                }
-                for (dst, x) in orow.iter_mut().zip(s.matvec_t(qrow)) {
-                    *dst += lam * x;
+            let prow = &mut p[i * len..(i + 1) * len];
+            for (j, pij) in prow.iter_mut().enumerate() {
+                if j > i {
+                    *pij = 0.0;
+                } else {
+                    *pij *= (dec_in[i] / dec_in[j]) * lambda.at(start + i, fenwick::level_of(i, j));
                 }
             }
         }
+        tensor::gemm_sparse_rows(len, len, dv, p, v.rows_data(start, end), out.rows_data_mut(start, end), true);
 
-        // Intra-chunk: dense H-masked local attention
-        // weight(i,j) = (q_i·k_j) · dec_in[i]/dec_in[j] · λ_local(i,j).
-        let lam_loc = local_lambda_mask(lambda, start, len);
-        for i in 0..len {
-            let qi = q.row(start + i);
-            let mut acc_row = vec![0.0f32; dv];
-            for j in 0..=i {
-                let lam = lam_loc.at(i, j);
-                if lam == 0.0 {
-                    continue;
-                }
-                let w = crate::tensor::dot(qi, k.row(start + j)) * (dec_in[i] / dec_in[j]) * lam;
-                for (a, &vv) in acc_row.iter_mut().zip(v.row(start + j)) {
-                    *a += w * vv;
-                }
-            }
-            for (dst, a) in out.row_mut(start + i).iter_mut().zip(acc_row) {
-                *dst += a;
-            }
-        }
-
-        // Chunk state write: W_z = Σ_s (chunk_decay / dec_in[s]) k_s v_s^T.
+        // Chunk state write: W_z = K_c^T diag(chunk_decay / dec_in) V_c
+        // as one fused kernel into a recycled buffer.
         let chunk_decay = dec_in[len - 1];
-        let mut w = Mat::zeros(dk, dv);
         for j in 0..len {
-            outer_acc(&mut w, k.row(start + j), v.row(start + j), chunk_decay / dec_in[j]);
+            wscale[j] = chunk_decay / dec_in[j];
         }
+        let mut w = eng.take_buffer(dk, dv);
+        tensor::gemm_tn_diag_acc(
+            len,
+            dk,
+            dv,
+            &wscale[..len],
+            k.rows_data(start, end),
+            v.rows_data(start, end),
+            &mut w.data,
+        );
         // Transition carried states, then install the fresh one.
         eng.apply_transition(|s| s.scale_inplace(chunk_decay));
         eng.set_level0(w);
@@ -158,8 +162,9 @@ pub fn chunkwise(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat, c: usiz
 
 /// The naive multi-level baseline (Fig. 4 "Log-Linear Mamba-2 (naive)"):
 /// one independent Mamba-2-style masked inter-chunk sweep *per level*,
-/// each re-reading Q and the chunk states. Same asymptotics, ~L× the
-/// memory traffic — the target of the §3.5 level-fusion optimization.
+/// each re-reading Q and the chunk states. Same asymptotics and the same
+/// GEMM substrate as [`chunkwise`], ~L× the memory traffic — the target
+/// of the §3.5 level-fusion optimization.
 pub fn chunkwise_naive(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat, c: usize) -> Mat {
     assert!(c >= 1 && c.is_power_of_two());
     let (t_len, dk, dv) = (q.rows, q.cols, v.cols);
@@ -180,46 +185,57 @@ pub fn chunkwise_naive(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat, c
         chunk_decay[z] = acc as f32;
     }
 
-    // Per-chunk states (own contribution only).
+    // Per-chunk states (own contribution only), fused K^T diag(w) V writes.
+    let cmax = c.min(t_len.max(1));
+    let mut wscale = vec![0.0f32; cmax];
     let states: Vec<Mat> = (0..nchunks)
         .map(|z| {
             let (start, end) = (z * c, ((z + 1) * c).min(t_len));
-            let mut w = Mat::zeros(dk, dv);
-            for j in start..end {
-                outer_acc(&mut w, k.row(j), v.row(j), chunk_decay[z] / dec_in[j]);
+            let len = end - start;
+            for j in 0..len {
+                wscale[j] = chunk_decay[z] / dec_in[start + j];
             }
+            let mut w = Mat::zeros(dk, dv);
+            tensor::gemm_tn_diag_acc(
+                len,
+                dk,
+                dv,
+                &wscale[..len],
+                k.rows_data(start, end),
+                v.rows_data(start, end),
+                &mut w.data,
+            );
             w
         })
         .collect();
 
     // Intra-chunk (identical to the fused version).
+    let mut pbuf = vec![0.0f32; cmax * cmax];
     for z in 0..nchunks {
         let (start, end) = (z * c, ((z + 1) * c).min(t_len));
         let len = end - start;
-        let lam_loc = local_lambda_mask(lambda, start, len);
+        let p = &mut pbuf[..len * len];
+        tensor::gemm_nt_into(len, dk, len, q.rows_data(start, end), k.rows_data(start, end), p, false);
         for i in 0..len {
-            let qi = q.row(start + i);
-            let mut acc_row = vec![0.0f32; dv];
-            for j in 0..=i {
-                let lam = lam_loc.at(i, j);
-                if lam == 0.0 {
-                    continue;
+            let prow = &mut p[i * len..(i + 1) * len];
+            for (j, pij) in prow.iter_mut().enumerate() {
+                if j > i {
+                    *pij = 0.0;
+                } else {
+                    *pij *= (dec_in[start + i] / dec_in[start + j])
+                        * lambda.at(start + i, fenwick::level_of(i, j));
                 }
-                let w = crate::tensor::dot(qi, k.row(start + j)) * (dec_in[start + i] / dec_in[start + j]) * lam;
-                for (a, &vv) in acc_row.iter_mut().zip(v.row(start + j)) {
-                    *a += w * vv;
-                }
-            }
-            for (dst, a) in out.row_mut(start + i).iter_mut().zip(acc_row) {
-                *dst += a;
             }
         }
+        tensor::gemm_sparse_rows(len, len, dv, p, v.rows_data(start, end), out.rows_data_mut(start, end), true);
     }
 
-    // Inter-chunk: one independent masked sweep per level.
+    // Inter-chunk: one independent masked sweep per level — each level
+    // re-reads Q and re-touches the states (the traffic the fused form
+    // eliminates), but each read is still a GEMM.
     let max_level = fenwick::num_levels(nchunks.max(1));
+    let mut rweight = vec![0.0f32; cmax];
     for m in 1..max_level {
-        // combined[z] = Σ_{c ∈ B_z^(m)} (Π chunk decays between) states[c]
         for z in 1..nchunks {
             if (z >> (m - 1)) & 1 != 1 {
                 continue;
@@ -237,17 +253,19 @@ pub fn chunkwise_naive(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], lambda: &Mat, c
                 combined.axpy(dec as f32, &states[cz]);
             }
             let (start, end) = (z * c, ((z + 1) * c).min(t_len));
-            for i in start..end {
-                let lam = lambda.at(i, lc + m) * dec_in[i];
-                if lam == 0.0 {
-                    continue;
-                }
-                let qrow = q.row(i);
-                let contrib = combined.matvec_t(qrow);
-                for (dst, x) in out.row_mut(i).iter_mut().zip(contrib) {
-                    *dst += lam * x;
-                }
+            let len = end - start;
+            for i in 0..len {
+                rweight[i] = lambda.at(start + i, lc + m) * dec_in[start + i];
             }
+            tensor::gemm_diag_acc(
+                len,
+                dk,
+                dv,
+                &rweight[..len],
+                q.rows_data(start, end),
+                &combined.data,
+                out.rows_data_mut(start, end),
+            );
         }
     }
     out
@@ -316,7 +334,7 @@ mod tests {
         }
         let o = recurrent(&x.q, &x.k, &x.v, &x.alpha, &lam);
         // direct masked computation
-        let quasi = crate::hmatrix::QuasiH::new(x.alpha.clone(), lam).dense();
+        let quasi = crate::hmatrix::QuasiH::new(&x.alpha, &lam).dense();
         let mut a = x.q.matmul_nt(&x.k);
         for i in 0..t {
             for j in i + 1..t {

@@ -6,7 +6,7 @@
 //! "state-passing primitive" that Algorithm 1 invokes O(log T/C) times.
 
 use crate::hmatrix::sss::SssMask;
-use crate::tensor::{outer_acc, Mat};
+use crate::tensor::{self, outer_acc, Mat};
 
 /// Recurrent oracle.
 pub fn recurrent(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32]) -> Mat {
@@ -26,27 +26,30 @@ pub fn recurrent(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32]) -> Mat {
 /// Parallel (masked) form: `O = (Q K^T ⊙ M^S) V`.
 pub fn parallel(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32]) -> Mat {
     let p = q.matmul_nt(k).hadamard(&SssMask::new(alpha).dense());
-    p.matmul(v)
+    p.matmul_sparse_rows(v)
 }
 
-/// Chunkwise (SSD) form with chunk size `c`.
-///
-/// Per chunk: (1) intra-chunk dense masked attention, (2) inter-chunk
-/// contribution `o_t += decay(start..t) · q_t^T S_in`, (3) state update
-/// `S_out = decay(chunk) · S_in + Σ_s decay(s..end) k_s v_s^T`.
+/// Chunkwise (SSD) form with chunk size `c`, matmul-rich: per chunk,
+/// (1) intra-chunk masked attention as `Q_c K_c^T` + masked `P V_c`
+/// GEMMs, (2) inter-chunk contribution as one fused
+/// `diag(dec) · Q_c @ S_in` GEMM, (3) state update as one fused
+/// `K_c^T diag(w) V_c` kernel. Workspaces are reused across chunks.
 pub fn chunkwise(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], c: usize) -> Mat {
     assert!(c >= 1);
     let (t, dk, dv) = (q.rows, q.cols, v.cols);
     assert_eq!(alpha.len(), t);
     let mut out = Mat::zeros(t, dv);
     let mut state = Mat::zeros(dk, dv);
+    let cmax = c.min(t.max(1));
+    let mut pbuf = vec![0.0f32; cmax * cmax];
+    let mut dec_in = vec![0.0f32; cmax];
+    let mut wscale = vec![0.0f32; cmax];
     let mut start = 0;
     while start < t {
         let end = (start + c).min(t);
         let len = end - start;
         // Local cumulative decay: dec_in[i] = Π_{j=start..start+i} α_j
         // (decay from chunk entry *through* position i).
-        let mut dec_in = vec![0.0f32; len];
         let mut acc = 1.0f64;
         for i in 0..len {
             acc *= alpha[start + i] as f64;
@@ -54,34 +57,46 @@ pub fn chunkwise(q: &Mat, k: &Mat, v: &Mat, alpha: &[f32], c: usize) -> Mat {
         }
         let chunk_decay = dec_in[len - 1];
 
-        // (2) inter-chunk reads.
+        // (2) inter-chunk reads: out_c += diag(dec_in) · Q_c @ S_in.
+        tensor::gemm_diag_acc(
+            len,
+            dk,
+            dv,
+            &dec_in[..len],
+            q.rows_data(start, end),
+            &state.data,
+            out.rows_data_mut(start, end),
+        );
+        // (1) intra-chunk: P = Q_c K_c^T, masked in place by
+        // weight(i,j) = dec_in[i]/dec_in[j] (tril), then out_c += P V_c.
+        let p = &mut pbuf[..len * len];
+        tensor::gemm_nt_into(len, dk, len, q.rows_data(start, end), k.rows_data(start, end), p, false);
         for i in 0..len {
-            let o = state.matvec_t(q.row(start + i));
-            for (dst, val) in out.row_mut(start + i).iter_mut().zip(o) {
-                *dst = dec_in[i] * val;
-            }
-        }
-        // (1) intra-chunk dense: weight(i,j) = (q_i . k_j) Π_{u=j+1..i} α_u
-        //     = (q_i . k_j) * dec_in[i] / dec_in[j].
-        for i in 0..len {
-            let qi = q.row(start + i);
-            let mut acc_row = vec![0.0f32; dv];
-            for j in 0..=i {
-                let w = crate::tensor::dot(qi, k.row(start + j)) * (dec_in[i] / dec_in[j]);
-                for (a, &vv) in acc_row.iter_mut().zip(v.row(start + j)) {
-                    *a += w * vv;
+            let prow = &mut p[i * len..(i + 1) * len];
+            for (j, pij) in prow.iter_mut().enumerate() {
+                if j > i {
+                    *pij = 0.0;
+                } else {
+                    *pij *= dec_in[i] / dec_in[j];
                 }
             }
-            for (dst, a) in out.row_mut(start + i).iter_mut().zip(acc_row) {
-                *dst += a;
-            }
         }
-        // (3) state update.
+        tensor::gemm_sparse_rows(len, len, dv, p, v.rows_data(start, end), out.rows_data_mut(start, end), true);
+        // (3) state update: S ← chunk_decay·S + K_c^T diag(w) V_c with
+        // w_j = decay from position j+1 .. end-1 = chunk_decay / dec_in[j].
         state.scale_inplace(chunk_decay);
         for j in 0..len {
-            // decay from position j+1 .. end-1 = chunk_decay / dec_in[j]
-            outer_acc(&mut state, k.row(start + j), v.row(start + j), chunk_decay / dec_in[j]);
+            wscale[j] = chunk_decay / dec_in[j];
         }
+        tensor::gemm_tn_diag_acc(
+            len,
+            dk,
+            dv,
+            &wscale[..len],
+            k.rows_data(start, end),
+            v.rows_data(start, end),
+            &mut state.data,
+        );
         start = end;
     }
     out

@@ -21,7 +21,8 @@ pub fn softmax_attention(q: &Mat, k: &Mat, v: &Mat) -> Mat {
         }
     }
     ops::softmax_rows(&mut scores);
-    scores.matmul(v)
+    // masked upper triangle softmaxes to exact zeros — sparse path applies
+    scores.matmul_sparse_rows(v)
 }
 
 /// Incremental KV-cache decoder: append one (k, v), produce the output for

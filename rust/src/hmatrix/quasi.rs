@@ -16,30 +16,25 @@ use crate::fenwick;
 use crate::tensor::Mat;
 
 /// A quasi-hierarchical mask defined by per-step gates and per-(step,level)
-/// weights λ.
-#[derive(Debug, Clone)]
-pub struct QuasiH {
+/// weights λ. Borrows its inputs — constructing one (e.g. per training
+/// step in `parallel_from_a`) copies nothing.
+#[derive(Debug, Clone, Copy)]
+pub struct QuasiH<'a> {
     /// gates `α_t ∈ (0, 1]`, length T.
-    pub alpha: Vec<f32>,
+    pub alpha: &'a [f32],
     /// λ, shape (T, num_levels(T)) row-major.
-    pub lambda: Mat,
+    pub lambda: &'a Mat,
 }
 
-impl QuasiH {
-    pub fn new(alpha: Vec<f32>, lambda: Mat) -> QuasiH {
+impl<'a> QuasiH<'a> {
+    pub fn new(alpha: &'a [f32], lambda: &'a Mat) -> QuasiH<'a> {
         assert_eq!(alpha.len(), lambda.rows);
         assert!(
             alpha.iter().all(|&a| a > 0.0 && a <= 1.0),
             "gates must be in (0, 1]"
         );
-        assert!(lambda.cols >= fenwick::num_levels(alpha.len()));
+        assert!(lambda.cols >= fenwick::num_levels(alpha.len().max(1)));
         QuasiH { alpha, lambda }
-    }
-
-    /// Ungated variant (α = 1): the pure `M^H` of Eq. 4.
-    pub fn ungated(lambda: Mat) -> QuasiH {
-        let t = lambda.rows;
-        QuasiH::new(vec![1.0; t], lambda)
     }
 
     pub fn len(&self) -> usize {
@@ -149,17 +144,19 @@ mod tests {
     use super::*;
     use crate::util::Rng;
 
-    fn random_quasi(t: usize, seed: u64) -> QuasiH {
+    /// Random (alpha, lambda) inputs; `QuasiH::new(&a, &l)` borrows them.
+    fn random_inputs(t: usize, seed: u64) -> (Vec<f32>, Mat) {
         let mut rng = Rng::new(seed);
         let alpha: Vec<f32> = (0..t).map(|_| rng.range_f32(0.8, 1.0)).collect();
         let nl = fenwick::num_levels(t);
         let lambda = Mat::rand_uniform(t, nl, 0.0, 1.0, &mut rng);
-        QuasiH::new(alpha, lambda)
+        (alpha, lambda)
     }
 
     #[test]
     fn dense_agrees_with_entry() {
-        let q = random_quasi(32, 1);
+        let (alpha, lambda) = random_inputs(32, 1);
+        let q = QuasiH::new(&alpha, &lambda);
         let d = q.dense();
         for i in 0..32 {
             for j in 0..32 {
@@ -171,7 +168,8 @@ mod tests {
     #[test]
     fn fast_matvec_matches_dense() {
         for &t in &[1usize, 2, 3, 7, 8, 16, 33, 64, 100, 128] {
-            let q = random_quasi(t, t as u64);
+            let (alpha, lambda) = random_inputs(t, t as u64);
+            let q = QuasiH::new(&alpha, &lambda);
             let mut rng = Rng::new(99 + t as u64);
             let x: Vec<f32> = (0..t).map(|_| rng.range_f32(-1.0, 1.0)).collect();
             let fast = q.matvec(&x);
@@ -195,24 +193,27 @@ mod tests {
         let mut rng = Rng::new(5);
         let alpha: Vec<f32> = (0..t).map(|_| rng.range_f32(0.8, 1.0)).collect();
         let lambda = Mat::from_fn(t, fenwick::num_levels(t), |_, _| 1.0);
-        let q = QuasiH::new(alpha.clone(), lambda);
+        let q = QuasiH::new(&alpha, &lambda);
         let sss = crate::hmatrix::sss::SssMask::new(&alpha);
         crate::tensor::assert_close(&q.dense(), &sss.dense(), 1e-4, 1e-4);
     }
 
     #[test]
-    fn ungated_pure_hmask() {
+    fn ungated_is_pure_hmask() {
+        // α = 1 everywhere: the mask degenerates to the pure M^H of Eq. 4.
         let t = 16;
         let mut rng = Rng::new(6);
         let lambda = Mat::rand_uniform(t, fenwick::num_levels(t), 0.0, 1.0, &mut rng);
-        let q = QuasiH::ungated(lambda.clone());
+        let ones = vec![1.0f32; t];
+        let q = QuasiH::new(&ones, &lambda);
         let m = fenwick::hmask(&lambda, t);
         crate::tensor::assert_close(&q.dense(), &m, 1e-6, 0.0);
     }
 
     #[test]
     fn storage_is_t_log_t() {
-        let q = random_quasi(1024, 7);
+        let (alpha, lambda) = random_inputs(1024, 7);
+        let q = QuasiH::new(&alpha, &lambda);
         assert_eq!(
             q.storage_floats(),
             1024 + 1024 * fenwick::num_levels(1024)
@@ -227,7 +228,7 @@ mod tests {
         let t = 4096;
         let alpha = vec![0.5f32; t];
         let lambda = Mat::from_fn(t, fenwick::num_levels(t), |_, _| 1.0);
-        let q = QuasiH::new(alpha, lambda);
+        let q = QuasiH::new(&alpha, &lambda);
         let x = vec![1.0f32; t];
         let y = q.matvec(&x);
         assert!(y.iter().all(|v| v.is_finite()));

@@ -9,6 +9,13 @@
 //! sequence's resident memory tracks its live-state count, not the level
 //! capacity.
 //!
+//! The step loop is allocation-free in steady state: merged-out level
+//! buffers go to an internal free list and are recycled for the next
+//! sentinel write, and the per-level read is the fused
+//! [`Mat::matvec_t_acc`] accumulate (the decode-time analogue of the
+//! chunkwise engine's batched `Q @ S_cat` read — for a single query the
+//! batch degenerates to one fused pass per live level, no temporaries).
+//!
 //! The same machinery measured against a softmax KV cache is experiment
 //! E11 (decode time/memory vs. T — Table 1's right columns).
 
@@ -32,13 +39,15 @@ pub struct FenwickState {
     pub dv: usize,
     /// levels[l] = bucket state at level l (0 = sentinel)
     levels: Vec<Option<Mat>>,
+    /// recycled (dk, dv) buffers from merged-out states
+    free: Vec<Mat>,
     /// number of tokens processed so far
     pub t: usize,
 }
 
 impl FenwickState {
     pub fn new(dk: usize, dv: usize) -> FenwickState {
-        FenwickState { dk, dv, levels: Vec::new(), t: 0 }
+        FenwickState { dk, dv, levels: Vec::new(), free: Vec::new(), t: 0 }
     }
 
     /// Process one token: merge, transition, write, then read the output
@@ -53,7 +62,8 @@ impl FenwickState {
         lambda: &[f32],
     ) -> Vec<f32> {
         let t = self.t;
-        // 1) merge levels 0..=lssb(t) into lssb(t)+1
+        // 1) merge levels 0..=lssb(t) into lssb(t)+1; merged-out buffers
+        //    are recycled, not dropped.
         if t > 0 {
             let l = fenwick::lssb(t) as usize;
             let mut merged: Option<Mat> = None;
@@ -61,7 +71,10 @@ impl FenwickState {
                 if let Some(m) = s.take() {
                     match merged {
                         None => merged = Some(m),
-                        Some(ref mut acc) => acc.axpy(1.0, &m),
+                        Some(ref mut acc) => {
+                            acc.axpy(1.0, &m);
+                            self.free.push(m);
+                        }
                     }
                 }
             }
@@ -83,14 +96,20 @@ impl FenwickState {
                 }
             }
         }
-        // 3) sentinel write
-        let mut s0 = Mat::zeros(self.dk, self.dv);
+        // 3) sentinel write into a recycled buffer (zero alloc once warm)
+        let mut s0 = match self.free.pop() {
+            Some(mut m) => {
+                m.data.fill(0.0);
+                m
+            }
+            None => Mat::zeros(self.dk, self.dv),
+        };
         crate::tensor::outer_acc(&mut s0, k, v, write_scale);
         if self.levels.is_empty() {
             self.levels.resize(1, None);
         }
         self.levels[0] = Some(s0);
-        // 4) read
+        // 4) read: fused λ-weighted accumulate, no per-level temporaries
         let mut o = vec![0.0f32; self.dv];
         for (l, s) in self.levels.iter().enumerate() {
             if let Some(s) = s {
@@ -98,9 +117,7 @@ impl FenwickState {
                 if lam == 0.0 {
                     continue;
                 }
-                for (dst, x) in o.iter_mut().zip(s.matvec_t(q)) {
-                    *dst += lam * x;
-                }
+                s.matvec_t_acc(q, lam, &mut o);
             }
         }
         self.t += 1;
@@ -112,9 +129,11 @@ impl FenwickState {
         self.levels.iter().filter(|s| s.is_some()).count()
     }
 
-    /// Resident state bytes (the decode-memory metric of E11).
+    /// Resident state bytes (the decode-memory metric of E11): live level
+    /// states plus the recycled free-list buffers — everything the
+    /// process actually holds for this sequence.
     pub fn state_bytes(&self) -> usize {
-        self.live_states() * self.dk * self.dv * 4
+        (self.live_states() + self.free.len()) * self.dk * self.dv * 4
     }
 
     /// Level capacity currently allocated (≈ log2 t).

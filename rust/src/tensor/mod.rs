@@ -2,14 +2,347 @@
 //!
 //! The attention zoo ([`crate::attention`]), the hierarchical-matrix module
 //! ([`crate::hmatrix`]), and the benches all run on [`Mat`]: a row-major
-//! `f32` matrix with cache-friendly matmul kernels. Accumulation is f32
-//! with an ikj loop order that autovectorizes well; for oracle comparisons
-//! the tests use tolerance-based closeness, and `allclose` reports the
-//! worst absolute/relative deviation.
+//! `f32` matrix backed by cache-blocked, multi-threaded GEMM kernels.
+//!
+//! # Blocking scheme
+//!
+//! All three dense GEMM layouts (`A@B`, `A@B^T`, `A^T@B`) reduce to the
+//! slice-level kernels [`gemm_into`], [`gemm_nt_into`], [`gemm_tn_into`]:
+//!
+//! - **NN** (`A@B`): ikj loop order, with the k-dimension tiled into
+//!   panels of [`KC`] so the touched rows of `B` stay resident in L1/L2
+//!   while a row block of `A` streams past. The innermost j-loop is the
+//!   8-wide unrolled [`axpy8`] microkernel over contiguous rows — no
+//!   branches, so it autovectorizes. (The old per-element
+//!   `if a == 0.0 { continue }` shortcut defeated vectorization on dense
+//!   operands; it now lives only in [`gemm_sparse_rows`], used by the
+//!   masked paths that really contain structural zeros.)
+//! - **NT** (`A@B^T`): pure dot-product form — both operands are
+//!   traversed row-wise, the natural kernel for `QK^T`. Uses [`dot`]
+//!   (8 independent accumulators via `chunks_exact`).
+//! - **TN** (`A^T@B`): rank-1-update form, p outermost; within a row
+//!   block, the `B` row is reused across all output rows.
+//!
+//! # Threading model
+//!
+//! Output rows are partitioned into contiguous row blocks, one scoped
+//! worker per block ([`crate::util::threadpool::par_row_chunks`] —
+//! `par_map`-style transient scoped threads). Blocks are disjoint slices
+//! of the output, so workers share nothing mutable and need no
+//! synchronization. Every output element is reduced by exactly one thread
+//! in a fixed sequential k-order, so results are **bit-for-bit identical**
+//! for any thread count — see `threaded_gemm_is_deterministic`. The
+//! thread count comes from the [`gemm_threads`] knob (0 = one per core);
+//! kernels below [`PAR_FLOP_THRESHOLD`] flops stay single-threaded to
+//! avoid spawn overhead.
+//!
+//! Accumulation is f32; for oracle comparisons the tests use
+//! tolerance-based closeness, and `allclose` reports the worst
+//! absolute/relative deviation.
 
 pub mod ops;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::util::threadpool::par_row_chunks;
 use crate::util::Rng;
+
+/// k-panel depth for the NN kernel: KC rows of B (KC × n floats) are
+/// streamed per panel; 256 keeps the panel within L2 for n ≲ 1k.
+const KC: usize = 256;
+
+/// Below this many flops (2·m·k·n) a GEMM stays single-threaded: thread
+/// spawn costs ~10µs, which only amortizes on larger products.
+const PAR_FLOP_THRESHOLD: usize = 1 << 18;
+
+/// Requested GEMM worker count; 0 = auto (one per available core).
+static GEMM_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the number of worker threads the GEMM kernels may use; `0`
+/// restores the default (one per available core). Benches use this to
+/// compare 1-thread vs N-thread kernels. Results are bit-for-bit
+/// identical across settings (see module docs on determinism).
+pub fn gemm_threads(n: usize) {
+    GEMM_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The currently effective GEMM thread count.
+pub fn current_gemm_threads() -> usize {
+    match GEMM_THREADS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+}
+
+/// Worker count for a (m,k,n) product: 1 below the flop threshold, else
+/// the knob value capped so every worker amortizes at least one
+/// threshold's worth of flops (spawn costs ~10µs; a barely-threaded GEMM
+/// must not fan out to a full core count) and by the output row count.
+fn plan_threads(m: usize, k: usize, n: usize) -> usize {
+    let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
+    if flops < PAR_FLOP_THRESHOLD {
+        return 1;
+    }
+    let by_work = flops / PAR_FLOP_THRESHOLD; // >= 1 here
+    current_gemm_threads().min(by_work).clamp(1, m.max(1))
+}
+
+/// The GEMM microkernel: `out_row += a * b_row`, 8-wide unrolled via
+/// `chunks_exact` so the eight FMAs vectorize.
+#[inline(always)]
+pub fn axpy8(out_row: &mut [f32], b_row: &[f32], a: f32) {
+    debug_assert_eq!(out_row.len(), b_row.len());
+    let n8 = out_row.len() - out_row.len() % 8;
+    let (c8, cr) = out_row.split_at_mut(n8);
+    let (b8, br) = b_row.split_at(n8);
+    for (c, b) in c8.chunks_exact_mut(8).zip(b8.chunks_exact(8)) {
+        c[0] += a * b[0];
+        c[1] += a * b[1];
+        c[2] += a * b[2];
+        c[3] += a * b[3];
+        c[4] += a * b[4];
+        c[5] += a * b[5];
+        c[6] += a * b[6];
+        c[7] += a * b[7];
+    }
+    for (c, b) in cr.iter_mut().zip(br.iter()) {
+        *c += a * b;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Slice-level GEMM kernels. `a`, `b`, `out` are row-major; `out` covers
+// rows [r0, r1) of the logical output with *local* indexing (row r0 is
+// out[0..n]) so a parallel row block can pass its own sub-slice.
+// ---------------------------------------------------------------------------
+
+fn block_nn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize, r0: usize, r1: usize) {
+    for p0 in (0..k).step_by(KC) {
+        let p1 = (p0 + KC).min(k);
+        for i in r0..r1 {
+            let a_row = &a[i * k + p0..i * k + p1];
+            let out_row = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            for (dp, &av) in a_row.iter().enumerate() {
+                let p = p0 + dp;
+                axpy8(out_row, &b[p * n..(p + 1) * n], av);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn block_nn_diag(
+    a: &[f32],
+    b: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    k: usize,
+    n: usize,
+    r0: usize,
+    r1: usize,
+) {
+    for p0 in (0..k).step_by(KC) {
+        let p1 = (p0 + KC).min(k);
+        for i in r0..r1 {
+            let wi = w[i];
+            let a_row = &a[i * k + p0..i * k + p1];
+            let out_row = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            for (dp, &av) in a_row.iter().enumerate() {
+                let p = p0 + dp;
+                axpy8(out_row, &b[p * n..(p + 1) * n], wi * av);
+            }
+        }
+    }
+}
+
+fn block_nt(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize, r0: usize, r1: usize) {
+    for i in r0..r1 {
+        let a_row = &a[i * k..(i + 1) * k];
+        let out_row = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+        for (j, o) in out_row.iter_mut().enumerate() {
+            *o += dot(a_row, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn block_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize, r0: usize, r1: usize) {
+    for p in 0..k {
+        let a_row = &a[p * m..(p + 1) * m];
+        let b_row = &b[p * n..(p + 1) * n];
+        for i in r0..r1 {
+            axpy8(&mut out[(i - r0) * n..(i - r0 + 1) * n], b_row, a_row[i]);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn block_tn_diag(
+    a: &[f32],
+    b: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    r0: usize,
+    r1: usize,
+) {
+    for p in 0..k {
+        let wp = w[p];
+        let a_row = &a[p * m..(p + 1) * m];
+        let b_row = &b[p * n..(p + 1) * n];
+        for i in r0..r1 {
+            axpy8(&mut out[(i - r0) * n..(i - r0 + 1) * n], b_row, wp * a_row[i]);
+        }
+    }
+}
+
+fn block_sparse(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize, r0: usize, r1: usize) {
+    for i in r0..r1 {
+        let a_row = &a[i * k..(i + 1) * k];
+        let out_row = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+        for (p, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            axpy8(out_row, &b[p * n..(p + 1) * n], av);
+        }
+    }
+}
+
+/// `out (+)= A @ B` on raw row-major slices: `a` is (m,k), `b` (k,n),
+/// `out` (m,n). With `accumulate = false` the output is overwritten.
+/// Blocked + threaded per the module docs.
+pub fn gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32], accumulate: bool) {
+    assert_eq!(a.len(), m * k, "gemm a shape");
+    assert_eq!(b.len(), k * n, "gemm b shape");
+    assert_eq!(out.len(), m * n, "gemm out shape");
+    if !accumulate {
+        out.fill(0.0);
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = plan_threads(m, k, n);
+    if threads <= 1 {
+        block_nn(a, b, out, k, n, 0, m);
+    } else {
+        par_row_chunks(out, n, m.div_ceil(threads), |r0, r1, chunk| {
+            block_nn(a, b, chunk, k, n, r0, r1)
+        });
+    }
+}
+
+/// `out (+)= A @ B^T`: `a` is (m,k), `b` (n,k), `out` (m,n). The `QK^T`
+/// kernel: both operands traversed row-wise.
+pub fn gemm_nt_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32], accumulate: bool) {
+    assert_eq!(a.len(), m * k, "gemm_nt a shape");
+    assert_eq!(b.len(), n * k, "gemm_nt b shape");
+    assert_eq!(out.len(), m * n, "gemm_nt out shape");
+    if !accumulate {
+        out.fill(0.0);
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = plan_threads(m, k, n);
+    if threads <= 1 {
+        block_nt(a, b, out, k, n, 0, m);
+    } else {
+        par_row_chunks(out, n, m.div_ceil(threads), |r0, r1, chunk| {
+            block_nt(a, b, chunk, k, n, r0, r1)
+        });
+    }
+}
+
+/// `out (+)= A^T @ B`: `a` is (k,m), `b` (k,n), `out` (m,n). The `K^T V`
+/// state-write kernel.
+pub fn gemm_tn_into(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32], accumulate: bool) {
+    assert_eq!(a.len(), k * m, "gemm_tn a shape");
+    assert_eq!(b.len(), k * n, "gemm_tn b shape");
+    assert_eq!(out.len(), m * n, "gemm_tn out shape");
+    if !accumulate {
+        out.fill(0.0);
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = plan_threads(m, k, n);
+    if threads <= 1 {
+        block_tn(a, b, out, k, m, n, 0, m);
+    } else {
+        par_row_chunks(out, n, m.div_ceil(threads), |r0, r1, chunk| {
+            block_tn(a, b, chunk, k, m, n, r0, r1)
+        });
+    }
+}
+
+/// Fused `out += diag(w) · (A @ B)`: row `i` of the product is scaled by
+/// `w[i]` as it accumulates (the decay-weighted inter-chunk read, done
+/// without materializing the product).
+pub fn gemm_diag_acc(m: usize, k: usize, n: usize, w: &[f32], a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(w.len(), m, "gemm_diag_acc w shape");
+    assert_eq!(a.len(), m * k, "gemm_diag_acc a shape");
+    assert_eq!(b.len(), k * n, "gemm_diag_acc b shape");
+    assert_eq!(out.len(), m * n, "gemm_diag_acc out shape");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = plan_threads(m, k, n);
+    if threads <= 1 {
+        block_nn_diag(a, b, w, out, k, n, 0, m);
+    } else {
+        par_row_chunks(out, n, m.div_ceil(threads), |r0, r1, chunk| {
+            block_nn_diag(a, b, w, chunk, k, n, r0, r1)
+        });
+    }
+}
+
+/// Fused `out += A^T diag(w) B`: `a` is (k,m), `b` (k,n), `w` length k.
+/// Batched outer-product accumulate — the decay-weighted chunk state
+/// write `Σ_p w[p] · a_p b_p^T` as one kernel.
+pub fn gemm_tn_diag_acc(k: usize, m: usize, n: usize, w: &[f32], a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(w.len(), k, "gemm_tn_diag_acc w shape");
+    assert_eq!(a.len(), k * m, "gemm_tn_diag_acc a shape");
+    assert_eq!(b.len(), k * n, "gemm_tn_diag_acc b shape");
+    assert_eq!(out.len(), m * n, "gemm_tn_diag_acc out shape");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = plan_threads(m, k, n);
+    if threads <= 1 {
+        block_tn_diag(a, b, w, out, k, m, n, 0, m);
+    } else {
+        par_row_chunks(out, n, m.div_ceil(threads), |r0, r1, chunk| {
+            block_tn_diag(a, b, w, chunk, k, m, n, r0, r1)
+        });
+    }
+}
+
+/// `out (+)= A @ B` skipping zero entries of `A` — the sparsity shortcut
+/// for *masked* operands (lower-triangular attention weights, λ-masked
+/// local attention) where ~half the entries are structural zeros. Dense
+/// operands should use [`gemm_into`]: the branch defeats vectorization.
+pub fn gemm_sparse_rows(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32], accumulate: bool) {
+    assert_eq!(a.len(), m * k, "gemm_sparse_rows a shape");
+    assert_eq!(b.len(), k * n, "gemm_sparse_rows b shape");
+    assert_eq!(out.len(), m * n, "gemm_sparse_rows out shape");
+    if !accumulate {
+        out.fill(0.0);
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = plan_threads(m, k, n);
+    if threads <= 1 {
+        block_sparse(a, b, out, k, n, 0, m);
+    } else {
+        par_row_chunks(out, n, m.div_ceil(threads), |r0, r1, chunk| {
+            block_sparse(a, b, chunk, k, n, r0, r1)
+        });
+    }
+}
 
 /// A row-major `rows x cols` matrix of `f32`.
 #[derive(Clone, Debug, PartialEq)]
@@ -78,6 +411,22 @@ impl Mat {
         &mut self.data[i * c..(i + 1) * c]
     }
 
+    /// Borrow of the row-major data for rows [r0, r1) — a zero-copy view
+    /// for the slice-level GEMM kernels.
+    #[inline]
+    pub fn rows_data(&self, r0: usize, r1: usize) -> &[f32] {
+        debug_assert!(r0 <= r1 && r1 <= self.rows);
+        &self.data[r0 * self.cols..r1 * self.cols]
+    }
+
+    /// Mutable counterpart of [`rows_data`](Mat::rows_data).
+    #[inline]
+    pub fn rows_data_mut(&mut self, r0: usize, r1: usize) -> &mut [f32] {
+        debug_assert!(r0 <= r1 && r1 <= self.rows);
+        let c = self.cols;
+        &mut self.data[r0 * c..r1 * c]
+    }
+
     /// Contiguous sub-matrix copy: rows [r0, r1), all columns.
     pub fn rows_slice(&self, r0: usize, r1: usize) -> Mat {
         assert!(r0 <= r1 && r1 <= self.rows);
@@ -98,24 +447,28 @@ impl Mat {
         out
     }
 
-    /// `self @ other` — (m,k) x (k,n). ikj order for row-major locality.
+    /// `self @ other` — (m,k) x (k,n). Blocked + threaded dense kernel.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            let out_row = &mut out.data[i * n..(i + 1) * n];
-            for (p, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = &other.data[p * n..(p + 1) * n];
-                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
+        let mut out = Mat::zeros(self.rows, other.cols);
+        gemm_into(self.rows, self.cols, other.cols, &self.data, &other.data, &mut out.data, false);
+        out
+    }
+
+    /// `out = self @ other` into an existing buffer (no allocation).
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows, "matmul_into shape mismatch");
+        assert_eq!((out.rows, out.cols), (self.rows, other.cols), "matmul_into out shape");
+        gemm_into(self.rows, self.cols, other.cols, &self.data, &other.data, &mut out.data, false);
+    }
+
+    /// `self @ other` where rows of `self` are mostly structural zeros
+    /// (masked attention weights): keeps the zero-skip shortcut that the
+    /// dense kernel dropped.
+    pub fn matmul_sparse_rows(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul_sparse_rows shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        gemm_sparse_rows(self.rows, self.cols, other.cols, &self.data, &other.data, &mut out.data, false);
         out
     }
 
@@ -123,38 +476,16 @@ impl Mat {
     /// operands are traversed row-wise, the fastest kernel for QK^T.
     pub fn matmul_nt(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.rows);
-        let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            let out_row = &mut out.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                let b_row = &other.data[j * k..(j + 1) * k];
-                out_row[j] = dot(a_row, b_row);
-            }
-        }
+        let mut out = Mat::zeros(self.rows, other.rows);
+        gemm_nt_into(self.rows, self.cols, other.rows, &self.data, &other.data, &mut out.data, false);
         out
     }
 
     /// `self^T @ other` — (k,m) x (k,n) -> (m,n). Used for K^T V state writes.
     pub fn matmul_tn(&self, other: &Mat) -> Mat {
         assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
-        let (k, m, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        for p in 0..k {
-            let a_row = &self.data[p * m..(p + 1) * m];
-            let b_row = &other.data[p * n..(p + 1) * n];
-            for i in 0..m {
-                let a = a_row[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let out_row = &mut out.data[i * n..(i + 1) * n];
-                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
+        let mut out = Mat::zeros(self.cols, other.cols);
+        gemm_tn_into(self.rows, self.cols, other.cols, &self.data, &other.data, &mut out.data, false);
         out
     }
 
@@ -171,9 +502,7 @@ impl Mat {
     /// self += scale * other
     pub fn axpy(&mut self, scale: f32, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (o, &b) in self.data.iter_mut().zip(other.data.iter()) {
-            *o += scale * b;
-        }
+        axpy8(&mut self.data, &other.data, scale);
     }
 
     /// self *= s (in place)
@@ -207,17 +536,19 @@ impl Mat {
 
     /// `self^T @ x`.
     pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(self.rows, x.len());
         let mut out = vec![0.0f32; self.cols];
-        for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
-            }
-            for (o, &a) in out.iter_mut().zip(self.row(i)) {
-                *o += xi * a;
-            }
-        }
+        self.matvec_t_acc(x, 1.0, &mut out);
         out
+    }
+
+    /// `out += scale * self^T x` — the zero-alloc fused read used by the
+    /// decode-time Fenwick state machine (one pass, no temporary).
+    pub fn matvec_t_acc(&self, x: &[f32], scale: f32, out: &mut [f32]) {
+        assert_eq!(self.rows, x.len());
+        assert_eq!(self.cols, out.len());
+        for (i, &xi) in x.iter().enumerate() {
+            axpy8(out, self.row(i), scale * xi);
+        }
     }
 
     /// Frobenius norm.
@@ -236,22 +567,35 @@ impl Mat {
     }
 }
 
-/// Dot product with 4-way unrolled accumulation (autovectorizes).
+/// `out += diag(w) · (a @ b)` on [`Mat`]s — see [`gemm_diag_acc`].
+pub fn scaled_matmul_acc(out: &mut Mat, w: &[f32], a: &Mat, b: &Mat) {
+    assert_eq!(a.cols, b.rows, "scaled_matmul_acc shape mismatch");
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols), "scaled_matmul_acc out shape");
+    gemm_diag_acc(a.rows, a.cols, b.cols, w, &a.data, &b.data, &mut out.data);
+}
+
+/// Dot product with 8 independent accumulators over `chunks_exact(8)`
+/// blocks (autovectorizes to wide FMA lanes).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
+    let n8 = a.len() - a.len() % 8;
+    let (a8, ar) = a.split_at(n8);
+    let (b8, br) = b.split_at(n8);
+    let mut acc = [0.0f32; 8];
+    for (x, y) in a8.chunks_exact(8).zip(b8.chunks_exact(8)) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+        acc[4] += x[4] * y[4];
+        acc[5] += x[5] * y[5];
+        acc[6] += x[6] * y[6];
+        acc[7] += x[7] * y[7];
     }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..a.len() {
-        s += a[i] * b[i];
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for (x, y) in ar.iter().zip(br.iter()) {
+        s += x * y;
     }
     s
 }
@@ -263,11 +607,7 @@ pub fn outer_acc(state: &mut Mat, v: &[f32], k: &[f32], scale: f32) {
     debug_assert_eq!(state.cols, k.len());
     let dk = k.len();
     for (i, &vi) in v.iter().enumerate() {
-        let row = &mut state.data[i * dk..(i + 1) * dk];
-        let s = vi * scale;
-        for (r, &kj) in row.iter_mut().zip(k.iter()) {
-            *r += s * kj;
-        }
+        axpy8(&mut state.data[i * dk..(i + 1) * dk], k, vi * scale);
     }
 }
 
@@ -311,6 +651,23 @@ pub fn assert_close(a: &Mat, b: &Mat, atol: f32, rtol: f32) {
 mod tests {
     use super::*;
 
+    /// Unblocked, untiled, single-threaded triple loop — the reference the
+    /// blocked/threaded kernels are checked against.
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.cols, b.rows);
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f32;
+                for p in 0..a.cols {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
     #[test]
     fn matmul_small_known() {
         let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
@@ -329,6 +686,124 @@ mod tests {
         let c3 = a.transpose().matmul_tn(&b);
         assert_close(&c1, &c2, 1e-5, 1e-5);
         assert_close(&c1, &c3, 1e-5, 1e-5);
+    }
+
+    /// Blocked/threaded GEMM vs the naive loop on ragged shapes: 1x1,
+    /// 1xN, odd sizes, k spanning multiple KC panels, and sizes above the
+    /// parallel threshold.
+    #[test]
+    fn blocked_gemm_matches_naive_on_ragged_shapes() {
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 1, 17),
+            (1, 9, 1),
+            (3, 7, 5),
+            (5, 1, 9),
+            (17, 13, 11),
+            (2, 300, 3), // k crosses a KC panel boundary
+            (64, 64, 64),
+            (70, 65, 66), // above PAR_FLOP_THRESHOLD, odd everything
+        ] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let want = naive_matmul(&a, &b);
+            assert_close(&a.matmul(&b), &want, 1e-4, 1e-4);
+            assert_close(&a.matmul_nt(&b.transpose()), &want, 1e-4, 1e-4);
+            assert_close(&a.transpose().matmul_tn(&b), &want, 1e-4, 1e-4);
+            assert_close(&a.matmul_sparse_rows(&b), &want, 1e-4, 1e-4);
+            let mut into = Mat::randn(m, n, 1.0, &mut rng); // dirty buffer
+            a.matmul_into(&b, &mut into);
+            assert_close(&into, &want, 1e-4, 1e-4);
+        }
+    }
+
+    /// The GEMM is deterministic across thread counts: each output row is
+    /// reduced by one thread in a fixed k-order, so 1 thread and 8
+    /// threads agree bit-for-bit.
+    #[test]
+    fn threaded_gemm_is_deterministic() {
+        let mut rng = Rng::new(8);
+        // big enough to clear PAR_FLOP_THRESHOLD
+        let a = Mat::randn(96, 80, 1.0, &mut rng);
+        let b = Mat::randn(80, 72, 1.0, &mut rng);
+        gemm_threads(1);
+        let c1 = a.matmul(&b);
+        let t1 = a.transpose().matmul_tn(&b);
+        let n1 = a.matmul_nt(&b.transpose());
+        gemm_threads(8);
+        let c8 = a.matmul(&b);
+        let t8 = a.transpose().matmul_tn(&b);
+        let n8 = a.matmul_nt(&b.transpose());
+        gemm_threads(0); // restore auto
+        assert_eq!(c1.data, c8.data, "NN kernel not deterministic across threads");
+        assert_eq!(t1.data, t8.data, "TN kernel not deterministic across threads");
+        assert_eq!(n1.data, n8.data, "NT kernel not deterministic across threads");
+    }
+
+    /// `dot` against an f64 reference on random lengths (covers the
+    /// chunks_exact remainder path for every residue mod 8).
+    #[test]
+    fn dot_matches_f64_reference_property() {
+        let mut rng = Rng::new(9);
+        for len in 0..64usize {
+            let a: Vec<f32> = (0..len).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+            let want: f64 = a.iter().zip(b.iter()).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = dot(&a, &b) as f64;
+            let tol = 1e-4 * (1.0 + want.abs());
+            assert!((got - want).abs() < tol, "len={len}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sparse_rows_matches_dense_on_masked_operand() {
+        let mut rng = Rng::new(10);
+        let t = 33;
+        let mut a = Mat::randn(t, t, 1.0, &mut rng);
+        for i in 0..t {
+            for j in i + 1..t {
+                *a.at_mut(i, j) = 0.0; // lower-triangular mask
+            }
+        }
+        let b = Mat::randn(t, 12, 1.0, &mut rng);
+        assert_close(&a.matmul_sparse_rows(&b), &naive_matmul(&a, &b), 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn scaled_matmul_acc_matches_composition() {
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (6, 5, 7);
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let w: Vec<f32> = (0..m).map(|_| rng.range_f32(0.1, 2.0)).collect();
+        let base = Mat::randn(m, n, 1.0, &mut rng);
+        let mut out = base.clone();
+        scaled_matmul_acc(&mut out, &w, &a, &b);
+        let mut want = base.clone();
+        let prod = a.matmul(&b);
+        for i in 0..m {
+            for j in 0..n {
+                *want.at_mut(i, j) += w[i] * prod.at(i, j);
+            }
+        }
+        assert_close(&out, &want, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn gemm_tn_diag_acc_matches_outer_products() {
+        let mut rng = Rng::new(12);
+        let (kdim, m, n) = (9, 6, 7);
+        let a = Mat::randn(kdim, m, 1.0, &mut rng); // rows a_p
+        let b = Mat::randn(kdim, n, 1.0, &mut rng); // rows b_p
+        let w: Vec<f32> = (0..kdim).map(|_| rng.range_f32(0.1, 2.0)).collect();
+        let mut out = Mat::zeros(m, n);
+        gemm_tn_diag_acc(kdim, m, n, &w, &a.data, &b.data, &mut out.data);
+        let mut want = Mat::zeros(m, n);
+        for p in 0..kdim {
+            outer_acc(&mut want, a.row(p), b.row(p), w[p]);
+        }
+        assert_close(&out, &want, 1e-4, 1e-4);
     }
 
     #[test]
@@ -353,6 +828,19 @@ mod tests {
         let yt = a.transpose().matvec(&x);
         for i in 0..4 {
             assert!((y[i] - yt[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matvec_t_acc_accumulates_scaled() {
+        let mut rng = Rng::new(13);
+        let a = Mat::randn(5, 4, 1.0, &mut rng);
+        let x: Vec<f32> = (0..5).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut out = vec![1.0f32; 4];
+        a.matvec_t_acc(&x, 0.5, &mut out);
+        let plain = a.matvec_t(&x);
+        for i in 0..4 {
+            assert!((out[i] - (1.0 + 0.5 * plain[i])).abs() < 1e-5);
         }
     }
 

@@ -101,6 +101,39 @@ where
     out.into_iter().map(|r| r.unwrap()).collect()
 }
 
+/// Row-block parallel-for over a mutable row-major buffer: `out` is split
+/// into contiguous blocks of `rows_per_block` whole rows (each `row_len`
+/// long) and `f(row0, row1, block)` runs for each block on a transient
+/// scoped worker, `par_map`-style. `f` receives the *global* row range
+/// [row0, row1) plus the block's own sub-slice (locally indexed from
+/// row0), so workers share nothing mutable and need no synchronization.
+/// This is the scheduler under the tensor GEMM kernels
+/// ([`crate::tensor::gemm_into`] and friends).
+pub fn par_row_chunks<F>(out: &mut [f32], row_len: usize, rows_per_block: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && rows_per_block > 0);
+    debug_assert_eq!(out.len() % row_len, 0);
+    let block_elems = rows_per_block * row_len;
+    if out.len() <= block_elems {
+        // single block: run inline, no spawn
+        let rows = out.len() / row_len;
+        f(0, rows, out);
+        return;
+    }
+    thread::scope(|s| {
+        for (bi, chunk) in out.chunks_mut(block_elems).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let r0 = bi * rows_per_block;
+                let r1 = r0 + chunk.len() / row_len;
+                f(r0, r1, chunk);
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,5 +166,33 @@ mod tests {
     fn par_map_empty() {
         let ys: Vec<usize> = par_map(Vec::<usize>::new(), 4, |x| x);
         assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn par_row_chunks_covers_every_row_once() {
+        // 13 rows of width 5, blocks of 3 rows: the last block is ragged.
+        let (rows, width) = (13usize, 5usize);
+        let mut buf = vec![0.0f32; rows * width];
+        par_row_chunks(&mut buf, width, 3, |r0, r1, chunk| {
+            assert_eq!(chunk.len(), (r1 - r0) * width);
+            for i in r0..r1 {
+                for j in 0..width {
+                    chunk[(i - r0) * width + j] += (i * width + j) as f32;
+                }
+            }
+        });
+        for (idx, &v) in buf.iter().enumerate() {
+            assert_eq!(v, idx as f32, "row element {idx} written wrong or twice");
+        }
+    }
+
+    #[test]
+    fn par_row_chunks_single_block_runs_inline() {
+        let mut buf = vec![0.0f32; 4];
+        par_row_chunks(&mut buf, 2, 10, |r0, r1, chunk| {
+            assert_eq!((r0, r1), (0, 2));
+            chunk.fill(1.0);
+        });
+        assert!(buf.iter().all(|&v| v == 1.0));
     }
 }

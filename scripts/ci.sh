@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# CI for the Rust substrate: tier-1 verify (build + tests), lints, and a
+# bench smoke that regenerates the machine-readable BENCH_*.json records.
+#
+# Prerequisites: a Rust toolchain (cargo, clippy, rustfmt), network or a
+# populated cargo cache for the crates.io deps (`xla`, `anyhow`), and the
+# native xla_extension library the `xla` bindings link against (see
+# rust/src/runtime/mod.rs docs).
+#
+# Usage: scripts/ci.sh [--no-bench]
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+command -v cargo >/dev/null || { echo "cargo not found — install a Rust toolchain first" >&2; exit 1; }
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== lint: clippy -D warnings =="
+cargo clippy -- -D warnings
+
+echo "== lint: fmt --check =="
+cargo fmt --check
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    echo "== bench smoke (--quick): fig4 + table1, emits BENCH_*.json =="
+    cargo bench --bench fig4_throughput -- --quick
+    cargo bench --bench table1_complexity -- --quick
+fi
+
+echo "CI OK"
