@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     for id in 0..n_requests as u64 {
         let plen = rng.range(4, 20);
         let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
-        server.submit(GenRequest { id, prompt, max_new });
+        server.submit(GenRequest { id, prompt, max_new })?;
     }
 
     let t0 = std::time::Instant::now();

@@ -1,0 +1,196 @@
+//! Decode-side batched Fenwick reads (the serving analogue of Fig. 4's
+//! level fusion): per-step read cost for a batch of sequences at mixed
+//! positions, per-sequence matvec loop vs the pooled
+//! [`BatchedDecoder`](loglinear::state::pooled::BatchedDecoder) that
+//! folds every live level of every sequence into one λ-weighted
+//! block-sparse GEMM over the state-pool slab.
+//!
+//! Run: `cargo bench --bench decode_batched [-- --quick] [--threads N]`
+//!
+//! Emits `BENCH_decode.json` (per-batch ns/token for both paths, the
+//! batched/per-seq speedup, Σ live blocks, GEMM thread count) in the
+//! style of `BENCH_fig4.json`: if a previous record exists its points are
+//! carried along as `previous_ns_per_token` with a `speedup_vs_previous`
+//! table, so before/after trajectories of engine changes are recorded.
+//! The two paths are asserted bit-exact before timing.
+
+use loglinear::bench::{bench, section};
+use loglinear::state::pool::StatePool;
+use loglinear::state::pooled::{BatchedDecoder, PooledFenwickState};
+use loglinear::state::{FenwickState, Transition};
+use loglinear::tensor;
+use loglinear::util::json::Json;
+use loglinear::util::Rng;
+
+const OUT_PATH: &str = "BENCH_decode.json";
+
+/// One batch's fixture: the same sequences held twice — as Mat-backed
+/// `FenwickState`s (the per-sequence matvec-loop baseline) and as
+/// pool-backed `PooledFenwickState`s (the batched path) — advanced to
+/// mixed positions with a shared trace.
+struct Fixture {
+    plain: Vec<FenwickState>,
+    pooled: Vec<PooledFenwickState>,
+    pool: StatePool,
+    qs: Vec<f32>,
+    lambda: Vec<f32>,
+}
+
+fn build(batch: usize, dk: usize, dv: usize, base_pos: usize) -> Fixture {
+    let mut rng = Rng::new(0xDEC0DE + batch as u64);
+    let lambda: Vec<f32> = (0..24).map(|l| 1.0 / (l as f32 + 1.0)).collect();
+    let mut pool = StatePool::new(dk * dv, batch * 16);
+    let mut plain = Vec::new();
+    let mut pooled = Vec::new();
+    for i in 0..batch {
+        let mut fs = FenwickState::new(dk, dv);
+        let mut ps = PooledFenwickState::new(dk, dv);
+        let steps = base_pos + 137 * i; // mixed positions across the batch
+        for _ in 0..steps {
+            let k: Vec<f32> = (0..dk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let v: Vec<f32> = (0..dv).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            fs.step(&k, &k, &v, 1.0, Transition::Decay(0.999), &lambda);
+            ps.advance(&mut pool, &k, &v, 1.0, Transition::Decay(0.999))
+                .expect("pool sized for the trace");
+        }
+        plain.push(fs);
+        pooled.push(ps);
+    }
+    let qs: Vec<f32> = (0..batch * dk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    Fixture { plain, pooled, pool, qs, lambda }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    if let Some(pos) = args.iter().position(|a| a == "--threads") {
+        if let Some(n) = args.get(pos + 1).and_then(|s| s.parse::<usize>().ok()) {
+            tensor::gemm_threads(n);
+        }
+    }
+
+    let (dk, dv) = (64, 64);
+    let base_pos = 700; // ~6 live levels per sequence
+    let batches: Vec<usize> = if quick { vec![1, 2, 4, 8] } else { vec![1, 2, 4, 8, 16, 32] };
+
+    section(&format!(
+        "decode read path: per-seq matvec loop vs batched pool GEMM (dk=dv={dk}, mixed positions, gemm_threads={})",
+        tensor::current_gemm_threads()
+    ));
+
+    // rows: (path, batch, secs_per_step, sum_live)
+    let mut rows: Vec<(String, usize, f64, usize)> = Vec::new();
+    for &b in &batches {
+        let mut fx = build(b, dk, dv, base_pos);
+        let sum_live: usize = fx.pooled.iter().map(|s| s.live_states()).sum();
+
+        // correctness first: the two paths must agree bit-for-bit
+        let mut want = vec![0.0f32; b * dv];
+        for i in 0..b {
+            let q = &fx.qs[i * dk..(i + 1) * dk];
+            fx.plain[i].read_into(q, &fx.lambda, &mut want[i * dv..(i + 1) * dv]);
+        }
+        let mut dec = BatchedDecoder::new();
+        let mut got = vec![0.0f32; b * dv];
+        {
+            let refs: Vec<&PooledFenwickState> = fx.pooled.iter().collect();
+            let lambdas: Vec<&[f32]> = vec![&fx.lambda[..]; b];
+            dec.read_batch(&fx.pool, &refs, &fx.qs, &lambdas, &mut got);
+        }
+        assert_eq!(got, want, "batched read diverged from per-sequence oracle (B={b})");
+
+        let r = bench(&format!("per-seq matvec loop/B={b} (Σlive={sum_live})"), 0.25, || {
+            for i in 0..b {
+                let q = &fx.qs[i * dk..(i + 1) * dk];
+                fx.plain[i].read_into(q, &fx.lambda, &mut want[i * dv..(i + 1) * dv]);
+            }
+            std::hint::black_box(&want);
+        });
+        rows.push(("per_seq".into(), b, r.secs.mean, sum_live));
+
+        let refs: Vec<&PooledFenwickState> = fx.pooled.iter().collect();
+        let lambdas: Vec<&[f32]> = vec![&fx.lambda[..]; b];
+        let r = bench(&format!("batched pool read/B={b} (Σlive={sum_live})"), 0.25, || {
+            dec.read_batch(&fx.pool, &refs, &fx.qs, &lambdas, &mut got);
+            std::hint::black_box(&got);
+        });
+        rows.push(("batched".into(), b, r.secs.mean, sum_live));
+    }
+
+    section("ns per sequence-token (read path) and batched speedup");
+    println!("{:>6} {:>16} {:>16} {:>10}", "B", "per-seq ns/tok", "batched ns/tok", "speedup");
+    let mut speedup_rows: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for &b in &batches {
+        let get = |path: &str| {
+            rows.iter()
+                .find(|(p, bb, _, _)| p == path && *bb == b)
+                .map(|(_, _, s, _)| *s)
+                .unwrap()
+        };
+        let per_seq = get("per_seq") * 1e9 / b as f64;
+        let batched = get("batched") * 1e9 / b as f64;
+        let speedup = per_seq / batched;
+        println!("{b:>6} {per_seq:>16.1} {batched:>16.1} {speedup:>9.2}x");
+        speedup_rows.push((b, per_seq, batched, speedup));
+    }
+
+    // ---- machine-readable record (BENCH_decode.json) ----
+    let previous = std::fs::read_to_string(OUT_PATH)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+    let prev_ns = |path: &str, b: usize| -> Option<f64> {
+        previous
+            .as_ref()?
+            .get("points")?
+            .as_arr()?
+            .iter()
+            .find(|p| {
+                p.get("path").and_then(|s| s.as_str()) == Some(path)
+                    && p.get("batch").and_then(|v| v.as_usize()) == Some(b)
+            })?
+            .get("ns_per_token")?
+            .as_f64()
+    };
+
+    let mut points = Vec::new();
+    let mut prev_speedups = Vec::new();
+    for (path, b, secs, sum_live) in &rows {
+        let ns_per_token = secs * 1e9 / *b as f64;
+        let mut p = Json::obj()
+            .set("path", path.as_str())
+            .set("batch", *b)
+            .set("secs", *secs)
+            .set("ns_per_token", ns_per_token)
+            .set("sum_live_blocks", *sum_live);
+        if let Some(old) = prev_ns(path, *b) {
+            p = p.set("previous_ns_per_token", old);
+            prev_speedups.push(
+                Json::obj()
+                    .set("path", path.as_str())
+                    .set("batch", *b)
+                    .set("speedup", old / ns_per_token),
+            );
+        }
+        points.push(p);
+    }
+    let batched_speedup: Vec<Json> = speedup_rows
+        .iter()
+        .map(|(b, _, _, s)| Json::obj().set("batch", *b).set("speedup_vs_per_seq", *s))
+        .collect();
+    let mut doc = Json::obj()
+        .set("bench", "decode_batched")
+        .set("quick", quick)
+        .set("gemm_threads", tensor::current_gemm_threads())
+        .set("dk", dk)
+        .set("dv", dv)
+        .set("base_pos", base_pos)
+        .set("points", Json::Arr(points))
+        .set("batched_speedup", Json::Arr(batched_speedup));
+    if !prev_speedups.is_empty() {
+        doc = doc.set("speedup_vs_previous", Json::Arr(prev_speedups));
+    }
+    match std::fs::write(OUT_PATH, doc.pretty()) {
+        Ok(()) => println!("\nwrote {OUT_PATH}"),
+        Err(e) => eprintln!("\nfailed to write {OUT_PATH}: {e}"),
+    }
+}

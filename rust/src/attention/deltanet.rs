@@ -26,17 +26,27 @@ pub fn recurrent(q: &Mat, k: &Mat, v: &Mat, beta: &[f32]) -> Mat {
 
 /// `S ← (I − β k k^T) S`, in place: `S -= β k (k^T S)`.
 pub fn apply_householder(s: &mut Mat, k: &[f32], beta: f32) {
+    apply_householder_slice(&mut s.data, s.cols, k, beta);
+}
+
+/// Slice form of [`apply_householder`] for row-major `(d_k, d_v)` states
+/// that don't live in a [`Mat`] — e.g. the pooled decode blocks of
+/// [`crate::state::pool::StatePool`]. Bit-identical to the `Mat` form
+/// (same op order), so pooled and per-sequence decode agree exactly.
+pub fn apply_householder_slice(s: &mut [f32], dv: usize, k: &[f32], beta: f32) {
     if beta == 0.0 {
         return;
     }
-    let kt_s = s.matvec_t(k); // (dv)
-    let dv = s.cols;
+    debug_assert_eq!(s.len(), k.len() * dv);
+    // kt_s = S^T k, accumulated row-wise like Mat::matvec_t
+    let mut kt_s = vec![0.0f32; dv];
+    crate::tensor::matvec_t_acc_slice(s, dv, k, 1.0, &mut kt_s);
     for (i, &ki) in k.iter().enumerate() {
         let scale = beta * ki;
         if scale == 0.0 {
             continue;
         }
-        let row = &mut s.data[i * dv..(i + 1) * dv];
+        let row = &mut s[i * dv..(i + 1) * dv];
         for (r, &x) in row.iter_mut().zip(kt_s.iter()) {
             *r -= scale * x;
         }

@@ -252,6 +252,18 @@ impl ChunkFenwick {
     }
 }
 
+/// Decode-time λ-weighted level read: `out += λ · S^T q` for one
+/// row-major `(d_k, d_v)` level state `s`. This is the shared read-path
+/// primitive of the serving stack — both the per-sequence
+/// [`crate::state::FenwickState`] and the pooled batched decoder
+/// ([`crate::state::pooled::BatchedDecoder`]) reduce to exactly this op
+/// sequence per (sequence, level), so the two paths are bit-identical by
+/// construction.
+#[inline]
+pub fn level_read_acc(s: &[f32], dv: usize, q: &[f32], lam: f32, out: &mut [f32]) {
+    tensor::matvec_t_acc_slice(s, dv, q, lam, out);
+}
+
 /// Intra-chunk λ mask: `Λ[i][j] = lambda[start+i][level_of(i, j)]` for
 /// `j <= i` within a chunk (chunk-local offsets equal absolute levels for
 /// intra-chunk pairs — see `fenwick::tests::intra_chunk_levels_are_local`).

@@ -1,0 +1,337 @@
+//! Decode execution backends behind the serving engine.
+//!
+//! [`DecodeServer`](super::server::DecodeServer) owns queueing, batching,
+//! sampling, and retirement; *how* a batch of (token, position) rows is
+//! stepped — and how per-sequence state is held — is a [`DecodeBackend`]:
+//!
+//! - [`PjrtBackend`]: the AOT path. Per-sequence dense state stacks are
+//!   gathered into batched PJRT buffers, the compiled `decode_step`
+//!   executes, states scatter back. Admission never backpressures (dense
+//!   stacks are host `Vec`s).
+//! - [`PooledBackend`]: the pure-Rust pooled path (this PR's engine). A
+//!   single-layer log-linear attention LM whose per-sequence Fenwick
+//!   states live in a shared [`StatePool`]; each step is matmul-rich —
+//!   one [`BatchedDecoder::read_batch`] block-sparse GEMM for every live
+//!   level of every sequence at once, then one `O @ W_o^T` GEMM for the
+//!   whole batch's logits. [`DecodeBackend::admit`] reserves
+//!   `blocks_for_steps(max_steps)` pool blocks per sequence and returns
+//!   [`AdmitError::Exhausted`] when the pool can't hold another sequence
+//!   — the backpressure signal the server's admission loop honors by
+//!   leaving requests queued.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{ModelHandle, Runtime};
+use crate::state::pool::StatePool;
+use crate::state::pooled::{blocks_for_steps, BatchedDecoder, PooledFenwickState};
+use crate::state::Transition;
+use crate::tensor::{self, Mat};
+use crate::util::Rng;
+
+/// Backend-side handle for one admitted sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeqSlot(pub usize);
+
+/// Why admission was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// No resources *right now* — retry once running sequences retire
+    /// (the batcher keeps the request queued).
+    Exhausted,
+    /// The request can never fit this backend (e.g. needs more state
+    /// blocks than the whole pool holds) — reject it.
+    TooLarge,
+}
+
+/// One decode execution engine (state storage + step function).
+pub trait DecodeBackend {
+    /// Reserve resources for a sequence running at most `max_steps`
+    /// decode steps; returns the slot to pass to [`DecodeBackend::step`].
+    fn admit(&mut self, max_steps: usize) -> Result<SeqSlot, AdmitError>;
+
+    /// Release a sequence's resources.
+    fn retire(&mut self, slot: SeqSlot);
+
+    /// Execute one decode step for `rows` of (slot, token, position) in a
+    /// `bucket`-sized batch (`rows.len() <= bucket`; padding, if the
+    /// backend needs fixed shapes, is backend-internal). Returns logits
+    /// `(rows.len(), vocab)` row-major.
+    fn step(&mut self, bucket: usize, rows: &[(SeqSlot, i32, i32)]) -> Result<Vec<f32>>;
+
+    /// Resident decode-state bytes right now (peak accounting).
+    fn state_bytes(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT (AOT artifact) backend
+// ---------------------------------------------------------------------------
+
+/// The compiled-artifact backend: dense per-layer state stacks per
+/// sequence, batched through the AOT `decode_step` executables.
+pub struct PjrtBackend {
+    model: ModelHandle,
+    state_numels: Vec<usize>,
+    dense_state_bytes_per_seq: usize,
+    /// per-slot per-layer flat states (None = free slot)
+    slots: Vec<Option<Vec<Vec<f32>>>>,
+    free_slots: Vec<usize>,
+}
+
+impl PjrtBackend {
+    /// Compile the decode executables for every bucket up front.
+    pub fn new(rt: &Runtime, mut model: ModelHandle, buckets: &[usize]) -> Result<PjrtBackend> {
+        for &b in buckets {
+            model.ensure_decode(rt, b)?;
+        }
+        let state_numels: Vec<usize> = model
+            .manifest
+            .state_shapes
+            .iter()
+            .map(|s| s.iter().product())
+            .collect();
+        let dense = state_numels.iter().sum::<usize>() * 4;
+        Ok(PjrtBackend {
+            model,
+            state_numels,
+            dense_state_bytes_per_seq: dense,
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+        })
+    }
+
+    pub fn model(&self) -> &ModelHandle {
+        &self.model
+    }
+}
+
+impl DecodeBackend for PjrtBackend {
+    fn admit(&mut self, _max_steps: usize) -> Result<SeqSlot, AdmitError> {
+        let states: Vec<Vec<f32>> = self.state_numels.iter().map(|&n| vec![0.0f32; n]).collect();
+        let idx = match self.free_slots.pop() {
+            Some(i) => {
+                self.slots[i] = Some(states);
+                i
+            }
+            None => {
+                self.slots.push(Some(states));
+                self.slots.len() - 1
+            }
+        };
+        Ok(SeqSlot(idx))
+    }
+
+    fn retire(&mut self, slot: SeqSlot) {
+        assert!(self.slots[slot.0].take().is_some(), "retire of free slot");
+        self.free_slots.push(slot.0);
+    }
+
+    fn step(&mut self, bucket: usize, rows: &[(SeqSlot, i32, i32)]) -> Result<Vec<f32>> {
+        let n = rows.len();
+        if n == 0 || n > bucket {
+            bail!("bad batch: {n} rows for bucket {bucket}");
+        }
+        let layers = self.state_numels.len();
+        // gather into the fixed (bucket, ...) shapes the artifact expects
+        let mut tokens = vec![0i32; bucket];
+        let mut pos = vec![0i32; bucket];
+        let mut batched: Vec<Vec<f32>> = self
+            .state_numels
+            .iter()
+            .map(|&numel| vec![0.0f32; bucket * numel])
+            .collect();
+        for (i, &(slot, tok, p)) in rows.iter().enumerate() {
+            tokens[i] = tok;
+            pos[i] = p;
+            let st = self.slots[slot.0].as_ref().expect("live slot");
+            for (l, layer) in st.iter().enumerate() {
+                let numel = self.state_numels[l];
+                batched[l][i * numel..(i + 1) * numel].copy_from_slice(layer);
+            }
+        }
+        let mut logits = self.model.decode_step(bucket, &mut batched, &tokens, &pos)?;
+        // scatter back
+        for (i, &(slot, _, _)) in rows.iter().enumerate() {
+            let st = self.slots[slot.0].as_mut().expect("live slot");
+            for l in 0..layers {
+                let numel = self.state_numels[l];
+                st[l].copy_from_slice(&batched[l][i * numel..(i + 1) * numel]);
+            }
+        }
+        // drop padding rows in place — no copy in the full-bucket case
+        let vocab = logits.len() / bucket;
+        logits.truncate(n * vocab);
+        Ok(logits)
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.slots.iter().flatten().count() * self.dense_state_bytes_per_seq
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pooled pure-Rust backend
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust pooled decode backend: a fixed-weight single-layer
+/// log-linear Mamba-2-style LM (random embeddings + output head) whose
+/// decode states live in a shared [`StatePool`]. Exists to serve real
+/// token traffic through the batched Fenwick engine without PJRT — the
+/// scheduler/backpressure testbed and the `decode_batched` bench engine.
+pub struct PooledBackend {
+    pub dk: usize,
+    pub dv: usize,
+    pub vocab: usize,
+    /// query/key/value embeddings, (vocab, dk|dk|dv); keys L2-normalized
+    eq: Mat,
+    ek: Mat,
+    ev: Mat,
+    /// output head, (vocab, dv): logits = O @ W_o^T
+    wo: Mat,
+    /// per-level λ weights (decaying with level)
+    lambda: Vec<f32>,
+    /// per-step decay gate α
+    alpha: f32,
+    pool: StatePool,
+    slots: Vec<Option<PooledFenwickState>>,
+    free_slots: Vec<usize>,
+    /// blocks reserved per live slot (admission accounting)
+    reserved: Vec<usize>,
+    reserved_total: usize,
+    dec: BatchedDecoder,
+    // step workspaces (reused across steps; logits are allocated per
+    // step because the trait returns an owned Vec)
+    q_buf: Vec<f32>,
+    o_buf: Vec<f32>,
+}
+
+impl PooledBackend {
+    /// `pool_blocks` bounds resident decode memory: admission reserves
+    /// `blocks_for_steps(max_steps)` blocks per sequence against it.
+    pub fn new(vocab: usize, dk: usize, dv: usize, pool_blocks: usize, seed: u64) -> PooledBackend {
+        let mut rng = Rng::new(seed);
+        let eq = Mat::randn(vocab, dk, 1.0 / (dk as f32).sqrt(), &mut rng);
+        let mut ek = Mat::randn(vocab, dk, 1.0, &mut rng);
+        for i in 0..vocab {
+            let norm = crate::tensor::ops::l2_norm(ek.row(i)).max(1e-6);
+            for x in ek.row_mut(i) {
+                *x /= norm;
+            }
+        }
+        let ev = Mat::randn(vocab, dv, 1.0, &mut rng);
+        let wo = Mat::randn(vocab, dv, 1.0 / (dv as f32).sqrt(), &mut rng);
+        // coarser levels matter less: λ^(l) = 2^-l, wide enough for any
+        // practical position (clamped past the table by level_weight)
+        let lambda: Vec<f32> = (0..24).map(|l| 0.5f32.powi(l)).collect();
+        PooledBackend {
+            dk,
+            dv,
+            vocab,
+            eq,
+            ek,
+            ev,
+            wo,
+            lambda,
+            alpha: 0.97,
+            pool: StatePool::new(dk * dv, pool_blocks),
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            reserved: Vec::new(),
+            reserved_total: 0,
+            dec: BatchedDecoder::new(),
+            q_buf: Vec::new(),
+            o_buf: Vec::new(),
+        }
+    }
+
+    /// The shared state pool (inspection: in_use/peak/capacity).
+    pub fn pool(&self) -> &StatePool {
+        &self.pool
+    }
+}
+
+/// Clamp a sampled/user token into embedding range.
+#[inline]
+fn tok_index(tok: i32, vocab: usize) -> usize {
+    (tok.max(0) as usize).min(vocab - 1)
+}
+
+impl DecodeBackend for PooledBackend {
+    fn admit(&mut self, max_steps: usize) -> Result<SeqSlot, AdmitError> {
+        let need = blocks_for_steps(max_steps.max(1));
+        if need > self.pool.capacity() {
+            return Err(AdmitError::TooLarge);
+        }
+        if self.reserved_total + need > self.pool.capacity() {
+            return Err(AdmitError::Exhausted);
+        }
+        self.reserved_total += need;
+        let idx = match self.free_slots.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(None);
+                self.reserved.push(0);
+                self.slots.len() - 1
+            }
+        };
+        self.slots[idx] = Some(PooledFenwickState::new(self.dk, self.dv));
+        self.reserved[idx] = need;
+        Ok(SeqSlot(idx))
+    }
+
+    fn retire(&mut self, slot: SeqSlot) {
+        let mut seq = self.slots[slot.0].take().expect("retire of free slot");
+        seq.release(&mut self.pool);
+        self.reserved_total -= self.reserved[slot.0];
+        self.reserved[slot.0] = 0;
+        self.free_slots.push(slot.0);
+    }
+
+    fn step(&mut self, _bucket: usize, rows: &[(SeqSlot, i32, i32)]) -> Result<Vec<f32>> {
+        let n = rows.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let (dv, vocab) = (self.dv, self.vocab);
+        // 1) per-sequence state update (merge + decay + write)
+        for &(slot, tok, pos) in rows {
+            let t = tok_index(tok, vocab);
+            let k = self.ek.row(t);
+            let v = self.ev.row(t);
+            let seq = self.slots[slot.0].as_mut().expect("live slot");
+            debug_assert_eq!(seq.t as i32, pos, "position desync");
+            if seq
+                .advance(&mut self.pool, k, v, 1.0, Transition::Decay(self.alpha))
+                .is_err()
+            {
+                // unreachable under admission reservation; surface loudly
+                bail!("state pool exhausted mid-step (reservation bug?)");
+            }
+        }
+        // 2) the batched read: every live level of every sequence in the
+        //    batch, one fused block-sparse GEMM over the pool slab
+        self.q_buf.clear();
+        for &(_, tok, _) in rows {
+            let row = self.eq.row(tok_index(tok, vocab));
+            self.q_buf.extend_from_slice(row);
+        }
+        self.o_buf.clear();
+        self.o_buf.resize(n * dv, 0.0);
+        {
+            let seqs: Vec<&PooledFenwickState> = rows
+                .iter()
+                .map(|&(slot, _, _)| self.slots[slot.0].as_ref().expect("live slot"))
+                .collect();
+            let lambdas: Vec<&[f32]> = vec![&self.lambda[..]; n];
+            self.dec
+                .read_batch(&self.pool, &seqs, &self.q_buf, &lambdas, &mut self.o_buf);
+        }
+        // 3) whole-batch logits in one GEMM: (n, dv) @ (vocab, dv)^T
+        let mut logits = vec![0.0f32; n * vocab];
+        tensor::gemm_nt_into(n, dv, vocab, &self.o_buf, &self.wo.data, &mut logits, false);
+        Ok(logits)
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.pool.in_use() * self.pool.block_elems() * 4
+    }
+}

@@ -83,6 +83,26 @@ impl<T> RequestQueue<T> {
             .unwrap_or(Duration::ZERO)
     }
 
+    /// The oldest item, without removing it — admission control inspects
+    /// a request's resource needs before committing to pop it (a refused
+    /// request stays at the head, preserving FIFO order under
+    /// backpressure).
+    pub fn peek(&self) -> Option<&T> {
+        self.items.front().map(|(item, _)| item)
+    }
+
+    /// Pop the oldest item.
+    pub fn pop(&mut self) -> Option<T> {
+        self.items.pop_front().map(|(item, _)| item)
+    }
+
+    /// Pop the oldest item together with its arrival timestamp, so the
+    /// server can account queue-wait time in request latency (it grows
+    /// exactly when admission backpressure or holds make it matter).
+    pub fn pop_timed(&mut self) -> Option<(T, Instant)> {
+        self.items.pop_front()
+    }
+
     /// Pop up to `n` items in arrival order.
     pub fn take(&mut self, n: usize) -> Vec<T> {
         let n = n.min(self.items.len());

@@ -7,14 +7,32 @@
 //! `Σ_seq t_seq`. The coordinator mirrors a vLLM-style layout:
 //!
 //! - [`batcher`]: queueing + bucketed dynamic batching (batch sizes are
-//!   bound to AOT-compiled decode artifacts),
-//! - [`server`]: the decode engine — gathers per-sequence states into the
-//!   batched PJRT buffers, steps the compiled `decode_step`, scatters
-//!   states back, samples, and retires finished sequences.
+//!   bound to AOT-compiled decode artifacts on the PJRT backend; the
+//!   pooled backend accepts any bucket),
+//! - [`backend`]: pluggable decode engines. [`backend::PjrtBackend`]
+//!   gathers per-sequence dense state stacks into batched PJRT buffers
+//!   and steps the compiled `decode_step`. [`backend::PooledBackend`] is
+//!   the pure-Rust **pooled decode path**: every sequence's live Fenwick
+//!   level states are [`crate::state::pool::StatePool`] blocks, each
+//!   step reads *all live states of all sequences in the batch* with one
+//!   λ-weighted block-sparse GEMM
+//!   ([`crate::state::pooled::BatchedDecoder`] — the decode-time
+//!   analogue of the chunkwise trainer's `read_levels_into`), and pool
+//!   exhaustion surfaces as admission backpressure instead of OOM:
+//!   admission reserves `blocks_for_steps(max_steps)` blocks per
+//!   sequence and requests wait in the FIFO queue while the pool is
+//!   committed.
+//! - [`server`]: the engine loop — admits (honoring backpressure),
+//!   schedules round-robin through the batch policy's bucket, samples
+//!   greedily, retires finished sequences, and *honors the batcher's
+//!   hold* (when [`batcher::BatchPolicy::plan`] says wait for a fuller
+//!   bucket, the engine waits — bounded by `max_wait` — rather than
+//!   running padded buckets).
 //!
 //! Rust owns the event loop, queueing, metrics, and memory accounting;
 //! Python never runs at serve time.
 
+pub mod backend;
 pub mod batcher;
 pub mod server;
 
@@ -25,6 +43,25 @@ pub struct GenRequest {
     pub prompt: Vec<i32>,
     pub max_new: usize,
 }
+
+/// Why a request was refused at submit time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// No token to feed at position 0 — the engine cannot start an
+    /// empty-prompt sequence (and would previously panic deep in
+    /// `Seq::next_token`).
+    EmptyPrompt,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::EmptyPrompt => write!(f, "empty prompt: nothing to decode from"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// A finished generation.
 #[derive(Debug, Clone)]

@@ -1,25 +1,40 @@
-//! The decode engine: continuous batching over the AOT `decode_step`
-//! artifacts with per-sequence Fenwick states.
+//! The decode engine: continuous batching over a pluggable
+//! [`DecodeBackend`] with per-sequence Fenwick states.
 //!
-//! Each live sequence owns one flat state buffer per layer (the dense
-//! (L, H, dk, dv) stack the artifact expects — App. B.4's "half the
-//! levels are zero" sparsity is tracked in the memory accounting and
-//! exploited by the pure-Rust `state::pool` path; the HLO path keeps
-//! dense stacks for fixed shapes). A step: take up to `bucket` runnable
-//! sequences (mixed positions — the artifact's per-sequence `pos` vector
-//! makes continuous batching sound), gather states, execute, scatter,
-//! sample greedily, retire finished sequences.
+//! The server owns the request queue, the bucketed batch policy, greedy
+//! sampling, retirement, and metrics; the backend owns state storage and
+//! the batched step itself (PJRT artifacts via [`PjrtBackend`], or the
+//! pure-Rust pooled engine via
+//! [`PooledBackend`](super::backend::PooledBackend) — see
+//! `coordinator::backend`).
+//!
+//! Scheduling properties (regression-tested below):
+//! - **Round-robin fairness**: the running list rotates by the number of
+//!   processed survivors each step, so when `ready > bucket` the tail
+//!   advances on the next step instead of starving behind a fixed
+//!   prefix.
+//! - **The batch policy's hold is honored**: when
+//!   [`BatchPolicy::plan`](super::batcher::BatchPolicy::plan) says wait
+//!   for a fuller bucket, the engine *waits* (bounded by `max_wait` via
+//!   the hold clock) instead of immediately running a padded bucket —
+//!   occupancy under bursty traffic is the point of dynamic batching.
+//! - **Admission backpressure**: a backend may refuse admission
+//!   ([`AdmitError::Exhausted`], e.g. state-pool exhaustion); the request
+//!   stays queued, FIFO order intact, until capacity frees up.
+//! - **Degenerate requests**: empty prompts are rejected at submit;
+//!   `max_new == 0` completes immediately without touching the engine.
 
 use std::collections::BTreeMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::runtime::{ModelHandle, Runtime};
 use crate::util::stats::Summary;
 
+use super::backend::{AdmitError, DecodeBackend, PjrtBackend, SeqSlot};
 use super::batcher::{BatchPolicy, RequestQueue};
-use super::{GenRequest, GenResult};
+use super::{GenRequest, GenResult, SubmitError};
 
 struct Seq {
     id: u64,
@@ -27,8 +42,8 @@ struct Seq {
     generated: Vec<i32>,
     /// index of the next token to feed (position of that token)
     pos: usize,
-    /// per-layer flat state (numel per layer, batch dim excluded)
-    states: Vec<Vec<f32>>,
+    /// backend-side state handle
+    slot: SeqSlot,
     max_new: usize,
     submitted: Instant,
     steps: usize,
@@ -40,7 +55,10 @@ impl Seq {
         if self.pos < self.prompt.len() {
             self.prompt[self.pos]
         } else {
-            *self.generated.last().unwrap()
+            *self
+                .generated
+                .last()
+                .expect("non-empty prompt + max_new >= 1 guarantee a sample before feedback")
         }
     }
 
@@ -77,122 +95,188 @@ impl ServerStats {
             Some(Summary::of(&self.step_seconds))
         }
     }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batch_occupancy.is_empty() {
+            0.0
+        } else {
+            self.batch_occupancy.iter().sum::<f64>() / self.batch_occupancy.len() as f64
+        }
+    }
 }
 
-/// Synchronous decode server (single engine thread — the testbed has one
-/// core; the queue/batcher interfaces are thread-safe by construction).
-pub struct DecodeServer {
-    model: ModelHandle,
+/// Synchronous decode server (single engine thread — the queue/batcher
+/// interfaces are thread-safe by construction), generic over the decode
+/// backend.
+pub struct DecodeServer<B: DecodeBackend> {
+    backend: B,
     policy: BatchPolicy,
     queue: RequestQueue<GenRequest>,
     running: Vec<Seq>,
     finished: Vec<GenResult>,
     pub stats: ServerStats,
-    state_numels: Vec<usize>,
-    /// memory accounting: live (non-zero) blocks per state stack
-    dense_state_bytes_per_seq: usize,
+    /// when the current "wait for a fuller bucket" hold started
+    hold_since: Option<Instant>,
 }
 
-impl DecodeServer {
-    pub fn new(rt: &Runtime, mut model: ModelHandle, policy: BatchPolicy) -> Result<DecodeServer> {
-        for &b in &policy.buckets {
-            model.ensure_decode(rt, b)?;
-        }
-        let state_numels: Vec<usize> = model
-            .manifest
-            .state_shapes
-            .iter()
-            .map(|s| s.iter().product())
-            .collect();
-        let dense: usize = state_numels.iter().sum::<usize>() * 4;
-        Ok(DecodeServer {
-            model,
+impl DecodeServer<PjrtBackend> {
+    /// The AOT/PJRT server (compiles decode executables for every policy
+    /// bucket up front).
+    pub fn new(rt: &Runtime, model: ModelHandle, policy: BatchPolicy) -> Result<DecodeServer<PjrtBackend>> {
+        let backend = PjrtBackend::new(rt, model, &policy.buckets)?;
+        Ok(DecodeServer::with_backend(backend, policy))
+    }
+
+    pub fn model(&self) -> &ModelHandle {
+        self.backend.model()
+    }
+}
+
+impl<B: DecodeBackend> DecodeServer<B> {
+    pub fn with_backend(backend: B, policy: BatchPolicy) -> DecodeServer<B> {
+        DecodeServer {
+            backend,
             policy,
             queue: RequestQueue::new(),
             running: Vec::new(),
             finished: Vec::new(),
             stats: ServerStats::default(),
-            state_numels,
-            dense_state_bytes_per_seq: dense,
-        })
+            hold_since: None,
+        }
     }
 
-    pub fn submit(&mut self, req: GenRequest) {
+    /// Enqueue a request. Empty prompts are rejected (there is no token
+    /// to feed at position 0); `max_new == 0` completes immediately.
+    pub fn submit(&mut self, req: GenRequest) -> Result<(), SubmitError> {
+        if req.prompt.is_empty() {
+            return Err(SubmitError::EmptyPrompt);
+        }
+        if req.max_new == 0 {
+            self.finished.push(GenResult {
+                id: req.id,
+                tokens: Vec::new(),
+                latency: 0.0,
+                steps: 0,
+            });
+            self.stats.completed += 1;
+            return Ok(());
+        }
         self.queue.push(req);
+        Ok(())
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len() + self.running.len()
     }
 
-    /// Admit queued requests (zero states) up to the largest bucket.
-    fn admit(&mut self) {
-        let cap = *self.policy.buckets.last().unwrap();
-        if self.running.len() >= cap {
-            return;
-        }
-        for req in self.queue.take(cap - self.running.len()) {
-            let states = self
-                .state_numels
-                .iter()
-                .map(|&n| vec![0.0f32; n])
-                .collect();
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// (id, position, steps) of every running sequence, in scheduling
+    /// order — monitoring + fairness regression tests.
+    pub fn running_progress(&self) -> Vec<(u64, usize, usize)> {
+        self.running.iter().map(|s| (s.id, s.pos, s.steps)).collect()
+    }
+
+    /// Admit queued requests, FIFO, stopping at the first the backend
+    /// refuses (resource backpressure keeps it — and everything behind
+    /// it — queued). The running set is allowed to exceed the largest
+    /// bucket by 2× (continuous-batching headroom: retirements backfill
+    /// from already-admitted sequences, round-robined through the
+    /// bucket, instead of paying admission latency).
+    fn admit(&mut self) -> Result<()> {
+        let cap = 2 * *self.policy.buckets.last().unwrap();
+        while self.running.len() < cap {
+            let Some(req) = self.queue.peek() else { break };
+            let max_steps = req.prompt.len() + req.max_new - 1;
+            let slot = match self.backend.admit(max_steps.max(1)) {
+                Ok(slot) => slot,
+                Err(AdmitError::Exhausted) => break,
+                Err(AdmitError::TooLarge) => {
+                    // drop the impossible request before erroring so it
+                    // can't wedge the queue head: the caller sees the
+                    // failure once, traffic behind it still serves
+                    let req = self.queue.pop().expect("peeked above");
+                    bail!(
+                        "request {} needs more decode state than the backend can ever hold \
+                         ({} steps); request dropped",
+                        req.id,
+                        max_steps
+                    );
+                }
+            };
+            // keep the queue-entry timestamp: latency must include the
+            // time a request waited under backpressure/holds
+            let (req, submitted) = self.queue.pop_timed().expect("peeked above");
             self.running.push(Seq {
                 id: req.id,
                 prompt: req.prompt,
                 generated: Vec::new(),
                 pos: 0,
-                states,
+                slot,
                 max_new: req.max_new,
-                submitted: Instant::now(),
+                submitted,
                 steps: 0,
             });
         }
+        Ok(())
     }
 
-    /// Run one engine iteration; returns how many sequences advanced.
+    /// Run one engine iteration; returns how many sequences advanced
+    /// (0 while the batcher holds out for a fuller bucket).
     pub fn step(&mut self) -> Result<usize> {
-        self.admit();
+        self.admit()?;
         let ready = self.running.len();
-        let bucket = match self.policy.plan(ready, self.queue.oldest_age()) {
-            Some(b) => b,
-            None if ready > 0 => *self.policy.buckets.first().unwrap().max(&1),
-            None => return Ok(0),
+        // the hold clock: how long runnable work has been waiting — the
+        // queue's oldest age while queued, the hold timer once admitted
+        let held = self.hold_since.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
+        let waited = self.queue.oldest_age().max(held);
+        // a hold only ever applies to a *fresh* batch (nothing stepped
+        // yet): once any sequence is mid-generation, stalling it for
+        // max_wait on every plan refusal — or on every new arrival —
+        // would collapse decode throughput to one step per max_wait
+        let in_flight = self.running.iter().any(|s| s.steps > 0);
+        let bucket = match self.policy.plan(ready, waited) {
+            Some(b) => {
+                self.hold_since = None;
+                b
+            }
+            None if ready > 0 && in_flight => {
+                self.hold_since = None;
+                // force expired-hold planning: smallest covering bucket
+                match self.policy.plan(ready, self.policy.max_wait) {
+                    Some(b) => b,
+                    None => return Ok(0), // unreachable: expired plan with ready > 0 is Some
+                }
+            }
+            None => {
+                if ready > 0 && self.hold_since.is_none() {
+                    // start the hold the policy asked for; max_wait later
+                    // plan() will release it
+                    self.hold_since = Some(Instant::now());
+                }
+                return Ok(0);
+            }
         };
         let n = ready.min(bucket);
-        let layers = self.state_numels.len();
 
-        // gather
-        let mut tokens = vec![0i32; bucket];
-        let mut pos = vec![0i32; bucket];
-        let mut batched: Vec<Vec<f32>> = self
-            .state_numels
+        // gather the scheduling prefix (the list is rotated after each
+        // step, so over consecutive steps this round-robins the batch)
+        let rows: Vec<(SeqSlot, i32, i32)> = self.running[..n]
             .iter()
-            .map(|&numel| vec![0.0f32; bucket * numel])
+            .map(|s| (s.slot, s.next_token(), s.pos as i32))
             .collect();
-        for (i, seq) in self.running.iter().take(n).enumerate() {
-            tokens[i] = seq.next_token();
-            pos[i] = seq.pos as i32;
-            for (l, st) in seq.states.iter().enumerate() {
-                let numel = self.state_numels[l];
-                batched[l][i * numel..(i + 1) * numel].copy_from_slice(st);
-            }
-        }
 
         // execute
         let t0 = Instant::now();
-        let logits = self.model.decode_step(bucket, &mut batched, &tokens, &pos)?;
+        let logits = self.backend.step(bucket, &rows)?;
         let dt = t0.elapsed().as_secs_f64();
 
-        // scatter + sample
-        let vocab = logits.len() / bucket;
-        let mut retired = Vec::new();
+        // sample + advance
+        let vocab = logits.len() / n;
         for i in 0..n {
             let seq = &mut self.running[i];
-            for l in 0..layers {
-                let numel = self.state_numels[l];
-                seq.states[l].copy_from_slice(&batched[l][i * numel..(i + 1) * numel]);
-            }
             seq.pos += 1;
             seq.steps += 1;
             // still prefilling? only sample once the prompt is consumed
@@ -201,34 +285,49 @@ impl DecodeServer {
                 let tok = crate::tensor::ops::argmax(row) as i32;
                 seq.generated.push(tok);
             }
-            if seq.done() {
-                retired.push(i);
+        }
+        // retire finished sequences, preserving scheduling order
+        let mut retired = 0;
+        for i in (0..n).rev() {
+            if self.running[i].done() {
+                let seq = self.running.remove(i);
+                self.backend.retire(seq.slot);
+                self.finished.push(GenResult {
+                    id: seq.id,
+                    tokens: seq.generated,
+                    latency: seq.submitted.elapsed().as_secs_f64(),
+                    steps: seq.steps,
+                });
+                self.stats.completed += 1;
+                retired += 1;
             }
         }
-        for &i in retired.iter().rev() {
-            let seq = self.running.swap_remove(i);
-            self.finished.push(GenResult {
-                id: seq.id,
-                tokens: seq.generated,
-                latency: seq.submitted.elapsed().as_secs_f64(),
-                steps: seq.steps,
-            });
-            self.stats.completed += 1;
+        // round-robin: surviving processed sequences go to the back so
+        // the unprocessed tail leads the next step
+        let kept = n - retired;
+        if !self.running.is_empty() && kept > 0 {
+            let len = self.running.len();
+            self.running.rotate_left(kept % len);
         }
 
         self.stats.steps += 1;
         self.stats.tokens_processed += n;
         self.stats.step_seconds.push(dt);
         self.stats.batch_occupancy.push(n as f64 / bucket as f64);
-        let live_bytes = self.running.len() * self.dense_state_bytes_per_seq;
-        self.stats.peak_state_bytes = self.stats.peak_state_bytes.max(live_bytes);
+        self.stats.peak_state_bytes = self.stats.peak_state_bytes.max(self.backend.state_bytes());
         Ok(n)
     }
 
     /// Drive until all submitted work completes; returns the results.
+    /// While the batcher holds for a fuller bucket, naps briefly so the
+    /// hold can expire (bounded by the policy's `max_wait`).
     pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
         while self.pending() > 0 {
-            self.step()?;
+            if self.step()? == 0 {
+                let nap = (self.policy.max_wait / 8)
+                    .clamp(Duration::from_micros(50), Duration::from_millis(5));
+                std::thread::sleep(nap);
+            }
         }
         Ok(std::mem::take(&mut self.finished))
     }
@@ -237,12 +336,208 @@ impl DecodeServer {
         std::mem::take(&mut self.finished)
     }
 
-    pub fn model(&self) -> &ModelHandle {
-        &self.model
-    }
-
     /// Results sorted by id (BTreeMap for determinism in demos).
     pub fn results_by_id(results: Vec<GenResult>) -> BTreeMap<u64, GenResult> {
         results.into_iter().map(|r| (r.id, r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::PooledBackend;
+
+    fn pooled_server(pool_blocks: usize, buckets: Vec<usize>, max_wait: Duration) -> DecodeServer<PooledBackend> {
+        let backend = PooledBackend::new(64, 8, 8, pool_blocks, 7);
+        DecodeServer::with_backend(backend, BatchPolicy::new(buckets, max_wait))
+    }
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt: (0..prompt_len as i32).map(|i| (id as i32 * 13 + i * 7) % 64).collect(),
+            max_new,
+        }
+    }
+
+    #[test]
+    fn round_robin_rotates_the_tail_into_the_batch() {
+        // 12 sequences share bucket 8: under the old fixed-prefix gather
+        // the tail 4 never advanced until the head retired.
+        let mut srv = pooled_server(256, vec![8], Duration::ZERO);
+        for id in 0..12 {
+            srv.submit(req(id, 2, 4)).unwrap();
+        }
+        srv.step().unwrap();
+        srv.step().unwrap();
+        let progress = srv.running_progress();
+        assert_eq!(progress.len(), 12);
+        for (id, pos, steps) in progress {
+            assert!(steps >= 1, "seq {id} starved after two steps (pos {pos})");
+        }
+        // and everything completes with the same per-sequence step count
+        let results = srv.run_to_completion().unwrap();
+        assert_eq!(results.len(), 12);
+        for r in &results {
+            assert_eq!(r.steps, 2 + 4 - 1, "req {}", r.id);
+            assert_eq!(r.tokens.len(), 4);
+        }
+    }
+
+    #[test]
+    fn hold_for_fuller_bucket_is_honored_and_improves_occupancy() {
+        // bursty traffic: 3 requests arrive, then 5 more. The held server
+        // must not run a padded 3/4 bucket immediately.
+        let mut held = pooled_server(256, vec![1, 4, 8], Duration::from_secs(5));
+        for id in 0..3 {
+            held.submit(req(id, 2, 2)).unwrap();
+        }
+        assert_eq!(held.step().unwrap(), 0, "must hold for a fuller bucket");
+        assert_eq!(held.stats.steps, 0, "a held step must not record a batch");
+        for id in 3..8 {
+            held.submit(req(id, 2, 2)).unwrap();
+        }
+        assert_eq!(held.step().unwrap(), 8, "full bucket runs immediately");
+        let results = held.run_to_completion().unwrap();
+        assert_eq!(results.len(), 8);
+        assert!(
+            held.stats.batch_occupancy.iter().all(|&o| o == 1.0),
+            "held server should only run full buckets: {:?}",
+            held.stats.batch_occupancy
+        );
+
+        // same traffic with max_wait = 0 (the old always-run-now
+        // behavior): strictly worse occupancy
+        let mut eager = pooled_server(256, vec![1, 4, 8], Duration::ZERO);
+        for id in 0..3 {
+            eager.submit(req(id, 2, 2)).unwrap();
+        }
+        eager.step().unwrap();
+        for id in 3..8 {
+            eager.submit(req(id, 2, 2)).unwrap();
+        }
+        let _ = eager.run_to_completion().unwrap();
+        assert!(
+            held.stats.mean_occupancy() > eager.stats.mean_occupancy(),
+            "hold must improve occupancy: held {} vs eager {}",
+            held.stats.mean_occupancy(),
+            eager.stats.mean_occupancy()
+        );
+    }
+
+    #[test]
+    fn hold_never_stalls_in_flight_sequences() {
+        // The hold applies to a *fresh* batch exactly once: after the
+        // first executed step, neither plan refusals nor new arrivals may
+        // pause the running batch for another max_wait.
+        let mut srv = pooled_server(256, vec![1, 4, 8], Duration::from_millis(2));
+        for id in 0..4 {
+            srv.submit(req(id, 2, 4)).unwrap();
+        }
+        assert_eq!(srv.step().unwrap(), 0, "initial hold for a fuller bucket");
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(srv.step().unwrap(), 4, "hold expires once");
+        // consecutive sub-bucket steps run back-to-back, no fresh hold
+        assert_eq!(srv.step().unwrap(), 4, "re-armed hold stalled a running batch");
+        // a trickle arrival joins immediately instead of re-arming the hold
+        srv.submit(req(4, 2, 4)).unwrap();
+        assert_eq!(srv.step().unwrap(), 5, "new arrival must not stall in-flight sequences");
+        let results = srv.run_to_completion().unwrap();
+        assert_eq!(results.len(), 5);
+        for r in &results {
+            assert_eq!(r.steps, 2 + 4 - 1, "req {}", r.id);
+        }
+    }
+
+    #[test]
+    fn lone_request_still_completes_after_max_wait() {
+        // the hold is bounded: a single request must not wait forever
+        let mut srv = pooled_server(64, vec![1, 4], Duration::from_millis(2));
+        srv.submit(req(0, 3, 2)).unwrap();
+        let results = srv.run_to_completion().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].tokens.len(), 2);
+    }
+
+    #[test]
+    fn empty_prompt_rejected_and_zero_max_new_short_circuits() {
+        let mut srv = pooled_server(64, vec![4], Duration::ZERO);
+        assert_eq!(
+            srv.submit(GenRequest { id: 1, prompt: vec![], max_new: 5 }),
+            Err(SubmitError::EmptyPrompt)
+        );
+        // max_new == 0 retires cleanly without ever touching the engine
+        srv.submit(GenRequest { id: 2, prompt: vec![1, 2], max_new: 0 }).unwrap();
+        assert_eq!(srv.pending(), 0);
+        let results = srv.run_to_completion().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].id, 2);
+        assert!(results[0].tokens.is_empty());
+        assert_eq!(results[0].steps, 0);
+        assert_eq!(srv.stats.steps, 0, "no engine step for a zero-length generation");
+    }
+
+    #[test]
+    fn pool_backpressure_defers_admission_and_everything_completes() {
+        // Each request needs blocks_for_steps(2+3-1) = 3 blocks; a
+        // 7-block pool admits at most 2 at a time. All 6 must still
+        // complete, FIFO-fairly, with the pool never over-committed.
+        let mut srv = pooled_server(7, vec![4], Duration::ZERO);
+        for id in 0..6 {
+            srv.submit(req(id, 2, 3)).unwrap();
+        }
+        let mut max_running = 0;
+        let mut max_in_use = 0;
+        let mut guard = 0;
+        while srv.pending() > 0 {
+            srv.step().unwrap();
+            max_running = max_running.max(srv.running_progress().len());
+            max_in_use = max_in_use.max(srv.backend().pool().in_use());
+            guard += 1;
+            assert!(guard < 200, "no forward progress under backpressure");
+        }
+        assert!(max_running <= 2, "admission over-committed: {max_running} concurrent");
+        assert!(max_in_use <= 7, "pool over-committed: {max_in_use} blocks");
+        let results = srv.take_finished();
+        assert_eq!(results.len(), 6);
+        assert_eq!(srv.backend().pool().in_use(), 0, "retirement leaked pool blocks");
+        for r in &results {
+            assert_eq!(r.tokens.len(), 3, "req {}", r.id);
+        }
+    }
+
+    #[test]
+    fn oversized_request_fails_loudly_without_wedging_the_queue() {
+        // needs blocks_for_steps(1+200-1) = 8 blocks > 4-block pool
+        let mut srv = pooled_server(4, vec![4], Duration::ZERO);
+        srv.submit(req(0, 1, 200)).unwrap();
+        srv.submit(req(1, 2, 2)).unwrap();
+        srv.submit(req(2, 2, 2)).unwrap();
+        assert!(srv.step().is_err(), "impossible request must error, not spin");
+        // the poisoned request was dropped: traffic behind it still serves
+        let results = srv.run_to_completion().unwrap();
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert_eq!(r.tokens.len(), 2, "req {}", r.id);
+        }
+    }
+
+    #[test]
+    fn pooled_decode_is_deterministic_across_batch_schedules() {
+        // The same request decoded alone and inside a big batch must
+        // yield identical tokens (batched read is bit-exact and per-row
+        // logits don't depend on batchmates).
+        let solo_tokens = {
+            let mut srv = pooled_server(64, vec![1], Duration::ZERO);
+            srv.submit(req(3, 4, 6)).unwrap();
+            let results = srv.run_to_completion().unwrap();
+            results.into_iter().next().unwrap().tokens
+        };
+        let mut srv = pooled_server(256, vec![8], Duration::ZERO);
+        for id in 0..8 {
+            srv.submit(req(id, 4, 6)).unwrap();
+        }
+        let results = DecodeServer::<PooledBackend>::results_by_id(srv.run_to_completion().unwrap());
+        assert_eq!(results[&3].tokens, solo_tokens, "batching changed a sequence's decode");
     }
 }

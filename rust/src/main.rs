@@ -556,7 +556,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     for id in 0..n_requests as u64 {
         let plen = rng.range(4, 16);
         let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
-        server.submit(GenRequest { id, prompt, max_new });
+        server.submit(GenRequest { id, prompt, max_new })?;
     }
     let t0 = std::time::Instant::now();
     let results = server.run_to_completion()?;

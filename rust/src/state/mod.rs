@@ -12,17 +12,43 @@
 //! The step loop is allocation-free in steady state: merged-out level
 //! buffers go to an internal free list and are recycled for the next
 //! sentinel write, and the per-level read is the fused
-//! [`Mat::matvec_t_acc`] accumulate (the decode-time analogue of the
-//! chunkwise engine's batched `Q @ S_cat` read — for a single query the
-//! batch degenerates to one fused pass per live level, no temporaries).
+//! [`crate::attention::loglinear::level_read_acc`] accumulate (the
+//! decode-time analogue of the chunkwise engine's batched `Q @ S_cat`
+//! read — for a single query the batch degenerates to one fused pass per
+//! live level, no temporaries). The serving-side lift of that read —
+//! every live level of every sequence in a decode batch folded into one
+//! block-sparse GEMM over pooled storage — lives in [`pooled`]
+//! ([`PooledFenwickState`] + [`BatchedDecoder`]), bit-exact with
+//! [`FenwickState`] by sharing the same primitive in the same order.
 //!
 //! The same machinery measured against a softmax KV cache is experiment
 //! E11 (decode time/memory vs. T — Table 1's right columns).
 
 pub mod pool;
+pub mod pooled;
+
+pub use pooled::{BatchedDecoder, PooledFenwickState};
 
 use crate::fenwick;
 use crate::tensor::Mat;
+
+/// λ weight for level `l`, clamping to the last table entry when a
+/// sequence outgrows its λ table (`T > 2^lambda_width` makes levels live
+/// beyond the table width). The old `unwrap_or(0.0)` silently *dropped*
+/// the coarsest-level reads past that point; clamping keeps the distant
+/// context contributing with the coarsest provided weight. Shared by
+/// [`FenwickState`] and [`pooled::PooledFenwickState`] so both decode
+/// paths agree bit-for-bit.
+#[inline]
+pub fn level_weight(lambda: &[f32], l: usize) -> f32 {
+    match lambda.get(l) {
+        Some(&w) => w,
+        None => {
+            debug_assert!(!lambda.is_empty(), "empty lambda table");
+            lambda.last().copied().unwrap_or(0.0)
+        }
+    }
+}
 
 /// Transition applied to every live state at each step.
 pub enum Transition<'a> {
@@ -52,6 +78,11 @@ impl FenwickState {
 
     /// Process one token: merge, transition, write, then read the output
     /// `o = Σ_l λ^(l) S^(l)T q` with per-level weights `lambda`.
+    ///
+    /// LOCK-STEP CONTRACT: steps 1–3 are mirrored (pool-block storage
+    /// instead of owned `Mat`s) by [`pooled::PooledFenwickState::advance`];
+    /// changes to the op order here must land there too — the pooled
+    /// bit-exactness test enforces it.
     pub fn step(
         &mut self,
         q: &[f32],
@@ -111,17 +142,26 @@ impl FenwickState {
         self.levels[0] = Some(s0);
         // 4) read: fused λ-weighted accumulate, no per-level temporaries
         let mut o = vec![0.0f32; self.dv];
+        self.read_into(q, lambda, &mut o);
+        self.t += 1;
+        o
+    }
+
+    /// λ-weighted read `o = Σ_l λ^(l) S^(l)T q` without advancing the
+    /// state (the per-sequence matvec loop — the baseline the pooled
+    /// [`BatchedDecoder`] batches across sequences). Overwrites `out`.
+    pub fn read_into(&self, q: &[f32], lambda: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dv);
+        out.fill(0.0);
         for (l, s) in self.levels.iter().enumerate() {
             if let Some(s) = s {
-                let lam = lambda.get(l).copied().unwrap_or(0.0);
+                let lam = level_weight(lambda, l);
                 if lam == 0.0 {
                     continue;
                 }
-                s.matvec_t_acc(q, lam, &mut o);
+                crate::attention::loglinear::level_read_acc(&s.data, self.dv, q, lam, out);
             }
         }
-        self.t += 1;
-        o
     }
 
     /// Number of live (non-empty) level states.
@@ -188,6 +228,37 @@ mod tests {
             );
             for j in 0..8 {
                 assert!((o[j] - oracle.at(t, j)).abs() < 1e-4, "t={t} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn clamps_lambda_past_table_width_to_coarsest_level() {
+        // T > 2^lambda_width: levels beyond the table must read with the
+        // last provided weight (not silently drop). Oracle: the recurrent
+        // form fed the clamp-extended full-width table.
+        let mut rng = Rng::new(11);
+        let t_len = 100; // live levels reach 7 > width
+        let width = 4;
+        let x = AttnInputs::random(t_len, 8, 8, &mut rng);
+        let nl = crate::fenwick::num_levels(t_len);
+        assert!(nl > width, "test must exceed the lambda table");
+        let lam_trunc = Mat::from_fn(t_len, width, |t, l| x.lambda.at(t, l));
+        let lam_ext = Mat::from_fn(t_len, nl, |t, l| x.lambda.at(t, l.min(width - 1)));
+        let oracle =
+            attention::loglinear_mamba2::recurrent(&x.q, &x.k, &x.v, &x.alpha, &lam_ext);
+        let mut st = FenwickState::new(8, 8);
+        for t in 0..t_len {
+            let o = st.step(
+                x.q.row(t),
+                x.k.row(t),
+                x.v.row(t),
+                1.0,
+                Transition::Decay(x.alpha[t]),
+                lam_trunc.row(t),
+            );
+            for j in 0..8 {
+                assert!((o[j] - oracle.at(t, j)).abs() < 1e-3, "t={t} j={j}");
             }
         }
     }

@@ -6,6 +6,19 @@
 //! to how paged KV-cache allocators (vLLM) track used pages rather than
 //! max context. Invariants (no leak, no double-free, no use-after-free)
 //! are property-tested below.
+//!
+//! This is the storage layer of the pooled decode path:
+//! [`crate::state::pooled::PooledFenwickState`] keeps its live level
+//! states as [`BlockId`]s here, and
+//! [`crate::state::pooled::BatchedDecoder`] reads all live blocks across
+//! a whole decode batch straight out of the contiguous `storage` slab —
+//! one λ-weighted block-sparse GEMM over `(Σ live, d_k·d_v)` resident
+//! floats instead of `Σ_i popcount(t_i)` scattered matvecs. Exhaustion is
+//! a *backpressure signal*: [`StatePool::alloc`] returns `None` and the
+//! serving coordinator defers admission (see
+//! `coordinator::backend::PooledBackend`) rather than growing
+//! unboundedly; capacity planning can use [`StatePool::grow`] and the
+//! [`StatePool::peak`] accounting.
 
 /// Handle to one pooled block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -43,6 +56,29 @@ impl StatePool {
 
     pub fn peak(&self) -> usize {
         self.peak_blocks
+    }
+
+    /// Blocks still allocatable before the pool is exhausted.
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Elements per block (d_k · d_v).
+    pub fn block_elems(&self) -> usize {
+        self.block_elems
+    }
+
+    /// Append `extra` zeroed blocks to the pool (capacity planning; the
+    /// serving path prefers admission backpressure over growth so resident
+    /// memory stays bounded, but offline drivers can expand freely).
+    /// Existing [`BlockId`]s remain valid.
+    pub fn grow(&mut self, extra: usize) {
+        let old = self.capacity();
+        self.storage.resize((old + extra) * self.block_elems, 0.0);
+        self.allocated.resize(old + extra, false);
+        for idx in (old..old + extra).rev() {
+            self.free.push(idx);
+        }
     }
 
     /// Allocate a zeroed block; None if the pool is exhausted
@@ -137,6 +173,20 @@ mod tests {
         pool.release(a);
         let b = pool.alloc().unwrap();
         assert!(pool.get(b).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn grow_extends_capacity_and_keeps_blocks_valid() {
+        let mut pool = StatePool::new(4, 1);
+        let a = pool.alloc().unwrap();
+        pool.get_mut(a)[0] = 5.0;
+        assert!(pool.alloc().is_none());
+        pool.grow(2);
+        assert_eq!(pool.capacity(), 3);
+        assert_eq!(pool.available(), 2);
+        let b = pool.alloc().unwrap();
+        assert!(pool.get(b).iter().all(|&x| x == 0.0));
+        assert_eq!(pool.get(a)[0], 5.0, "grow must not move existing blocks' data");
     }
 
     #[test]

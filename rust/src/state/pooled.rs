@@ -1,0 +1,477 @@
+//! Pool-backed Fenwick decode states + the batched cross-sequence read
+//! (paper §3.2 / App. B.4, lifted to serving).
+//!
+//! [`PooledFenwickState`] is [`super::FenwickState`] with its
+//! `popcount(t)+1` live level states held as [`StatePool`] blocks instead
+//! of owned `Mat`s: a server's resident decode memory becomes *pool
+//! blocks in use* — the sum of live states across sequences — and pool
+//! exhaustion is an explicit backpressure signal for admission control
+//! instead of an OOM.
+//!
+//! [`BatchedDecoder`] is the decode-time analogue of
+//! [`crate::attention::loglinear::ChunkFenwick::read_levels_into`]: where
+//! the chunkwise trainer concatenates O(log T) level states *within* one
+//! sequence into a single `Q_c @ S_cat` GEMM, the decoder concatenates
+//! all live states *across the sequences of a decode batch*. Per step it
+//! builds one λ-weighted query row per live (sequence, level) block and
+//! folds the whole batch's output in a single block-sparse GEMM pass
+//! `O = A' S_all` — `A'` is `(B, Σ live·d_k)` with the weighted queries
+//! scattered on each row, `S_all` the `(Σ live·d_k, d_v)` stack of live
+//! blocks read *in place* from the pool's contiguous slab (no gather
+//! copy). Work is dispatched over the resident worker pool
+//! ([`crate::util::threadpool::resident_pool`]) with one contiguous
+//! output row-block per worker.
+//!
+//! Both the per-sequence and the batched read reduce to the shared
+//! [`crate::attention::loglinear::level_read_acc`] op sequence per
+//! (sequence, level), in the same order, so the batched path is
+//! **bit-exact** with the [`super::FenwickState`] oracle — asserted by
+//! the tests below and re-checked by the `decode_batched` bench.
+
+use crate::attention::deltanet::apply_householder_slice;
+use crate::attention::loglinear::level_read_acc;
+use crate::fenwick;
+use crate::state::pool::{BlockId, StatePool};
+use crate::state::{level_weight, Transition};
+use crate::tensor;
+use crate::util::threadpool::par_row_chunks_pooled;
+
+/// The pool had no free block for a state write — a backpressure signal
+/// (defer admission / shed load), not a corruption: the failed step left
+/// the sequence untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted;
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "state pool exhausted")
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// Upper bound on simultaneously-live blocks for a sequence that runs at
+/// most `steps` decode steps: `max_{t < steps} popcount(t) + 1`, i.e. the
+/// bit-length of `steps`. Admission control reserves exactly this many
+/// blocks per sequence, which makes pool exhaustion impossible for
+/// admitted sequences.
+pub fn blocks_for_steps(steps: usize) -> usize {
+    assert!(steps >= 1, "a sequence runs at least one step");
+    (usize::BITS - steps.leading_zeros()) as usize
+}
+
+/// O(log T) Fenwick decode state for one sequence (one head), with level
+/// states resident in a shared [`StatePool`].
+#[derive(Debug, Clone)]
+pub struct PooledFenwickState {
+    pub dk: usize,
+    pub dv: usize,
+    /// levels[l] = pool block of the bucket state at level l (0 = sentinel)
+    levels: Vec<Option<BlockId>>,
+    /// number of tokens processed so far
+    pub t: usize,
+}
+
+impl PooledFenwickState {
+    pub fn new(dk: usize, dv: usize) -> PooledFenwickState {
+        PooledFenwickState { dk, dv, levels: Vec::new(), t: 0 }
+    }
+
+    /// Number of live (non-empty) level states (= `popcount(t) + 1`).
+    pub fn live_states(&self) -> usize {
+        self.levels.iter().flatten().count()
+    }
+
+    /// Level capacity currently tracked (≈ log2 t).
+    pub fn level_capacity(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Process one token's state update — merge, transition, write — the
+    /// mutation half of [`super::FenwickState::step`], bit-identical op
+    /// order. The read half lives in [`PooledFenwickState::read_into`] /
+    /// [`BatchedDecoder::read_batch`] so a whole batch can read at once.
+    ///
+    /// LOCK-STEP CONTRACT: this skeleton intentionally mirrors
+    /// `FenwickState::step` steps 1–3 (only the storage type differs);
+    /// any change to either copy's merge order, transition ops, or write
+    /// must be made in both, and `pooled_state_is_bit_exact_with_fenwick_state`
+    /// enforces it over mixed-transition traces.
+    ///
+    /// Fails (before mutating anything) if the pool cannot supply the one
+    /// fresh block the sentinel write needs after the merge's releases.
+    pub fn advance(
+        &mut self,
+        pool: &mut StatePool,
+        k: &[f32],
+        v: &[f32],
+        write_scale: f32,
+        transition: Transition<'_>,
+    ) -> Result<(), PoolExhausted> {
+        let t = self.t;
+        // 0) admission check first: the merge below frees `live-1` blocks
+        //    and the write allocates one, so fail cleanly up front.
+        let freed = if t > 0 {
+            let l = fenwick::lssb(t) as usize;
+            let live = self.levels.iter().take(l + 1).flatten().count();
+            live.saturating_sub(1)
+        } else {
+            0
+        };
+        if pool.available() + freed < 1 {
+            return Err(PoolExhausted);
+        }
+        // 1) merge levels 0..=lssb(t) into lssb(t)+1; merged-out blocks
+        //    go back to the pool.
+        if t > 0 {
+            let l = fenwick::lssb(t) as usize;
+            let mut merged: Option<BlockId> = None;
+            for s in self.levels.iter_mut().take(l + 1) {
+                if let Some(id) = s.take() {
+                    match merged {
+                        None => merged = Some(id),
+                        Some(acc) => {
+                            pool.axpy(acc, id, 1.0);
+                            pool.release(id);
+                        }
+                    }
+                }
+            }
+            if let Some(id) = merged {
+                if self.levels.len() <= l + 1 {
+                    self.levels.resize(l + 2, None);
+                }
+                debug_assert!(self.levels[l + 1].is_none(), "Fenwick invariant");
+                self.levels[l + 1] = Some(id);
+            }
+        }
+        // 2) transition carried states
+        for slot in self.levels.iter().flatten() {
+            let s = pool.get_mut(*slot);
+            match &transition {
+                Transition::Decay(a) => {
+                    for x in s.iter_mut() {
+                        *x *= *a;
+                    }
+                }
+                Transition::GatedHouseholder { alpha, beta, k } => {
+                    apply_householder_slice(s, self.dv, k, *beta);
+                    for x in s.iter_mut() {
+                        *x *= *alpha;
+                    }
+                }
+            }
+        }
+        // 3) sentinel write into a fresh (zeroed) pool block
+        let id = pool.alloc().expect("checked available above");
+        let s0 = pool.get_mut(id);
+        for (i, &ki) in k.iter().enumerate() {
+            tensor::axpy8(&mut s0[i * self.dv..(i + 1) * self.dv], v, ki * write_scale);
+        }
+        if self.levels.is_empty() {
+            self.levels.resize(1, None);
+        }
+        debug_assert!(self.levels[0].is_none(), "sentinel slot must be merged first");
+        self.levels[0] = Some(id);
+        self.t += 1;
+        Ok(())
+    }
+
+    /// Per-sequence λ-weighted read `o = Σ_l λ^(l) S^(l)T q` (overwrites
+    /// `out`) — the matvec-loop baseline that [`BatchedDecoder`] batches.
+    pub fn read_into(&self, pool: &StatePool, q: &[f32], lambda: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dv);
+        out.fill(0.0);
+        for (l, slot) in self.levels.iter().enumerate() {
+            if let Some(id) = slot {
+                let lam = level_weight(lambda, l);
+                if lam == 0.0 {
+                    continue;
+                }
+                level_read_acc(pool.get(*id), self.dv, q, lam, out);
+            }
+        }
+    }
+
+    /// Convenience advance + read (mirrors [`super::FenwickState::step`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        pool: &mut StatePool,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        write_scale: f32,
+        transition: Transition<'_>,
+        lambda: &[f32],
+    ) -> Result<Vec<f32>, PoolExhausted> {
+        self.advance(pool, k, v, write_scale, transition)?;
+        let mut o = vec![0.0f32; self.dv];
+        self.read_into(pool, q, lambda, &mut o);
+        Ok(o)
+    }
+
+    /// Retire the sequence: release every live block back to the pool.
+    pub fn release(&mut self, pool: &mut StatePool) {
+        for slot in self.levels.iter_mut() {
+            if let Some(id) = slot.take() {
+                pool.release(id);
+            }
+        }
+        self.t = 0;
+    }
+}
+
+/// Below this many flops a batched read stays single-threaded; much lower
+/// than the GEMM spawn threshold because the resident pool makes the
+/// per-dispatch cost a queue handoff, which is what lets decode-sized
+/// reads thread at all.
+const BATCH_READ_FLOP_THRESHOLD: usize = 1 << 16;
+
+/// Batched decode-time read engine: one λ-weighted block-sparse GEMM per
+/// step for a whole batch of sequences at mixed positions (see module
+/// docs). Owns its plan workspaces so steady-state steps allocate
+/// nothing.
+#[derive(Debug, Clone, Default)]
+pub struct BatchedDecoder {
+    /// λ-weighted query rows, one per live (sequence, level) block:
+    /// row j = λ_{seq(j)}^{(level(j))} · q_{seq(j)}, shape (Σ live, d_k)
+    wq: Vec<f32>,
+    /// pool block per weighted-query row, CSR order
+    blocks: Vec<BlockId>,
+    /// CSR offsets: sequence i owns blocks[row_ptr[i]..row_ptr[i+1]]
+    row_ptr: Vec<usize>,
+}
+
+impl BatchedDecoder {
+    pub fn new() -> BatchedDecoder {
+        BatchedDecoder::default()
+    }
+
+    /// Live blocks planned in the last [`BatchedDecoder::read_batch`]
+    /// (the Σ live of the single fused read).
+    pub fn last_planned_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// The batched read: `out[i] = Σ_l λ_i^(l) S_i^(l)T q_i` for every
+    /// sequence in the batch, as one fused pass over the pool slab.
+    ///
+    /// `qs` is `(n, d_k)` row-major, `lambdas` one λ table per sequence,
+    /// `out` `(n, d_v)` row-major (overwritten). Per sequence the op
+    /// order equals [`PooledFenwickState::read_into`], so results are
+    /// bit-exact with the per-sequence path for any thread count (each
+    /// output row is owned by exactly one worker).
+    pub fn read_batch(
+        &mut self,
+        pool: &StatePool,
+        seqs: &[&PooledFenwickState],
+        qs: &[f32],
+        lambdas: &[&[f32]],
+        out: &mut [f32],
+    ) {
+        let n = seqs.len();
+        if n == 0 {
+            return;
+        }
+        let (dk, dv) = (seqs[0].dk, seqs[0].dv);
+        assert_eq!(qs.len(), n * dk, "qs shape");
+        assert_eq!(lambdas.len(), n, "lambdas shape");
+        assert_eq!(out.len(), n * dv, "out shape");
+        // 1) plan: a λ-weighted query row per live (sequence, level)
+        //    block, grouped by sequence in ascending level order (the
+        //    per-sequence read order).
+        self.wq.clear();
+        self.blocks.clear();
+        self.row_ptr.clear();
+        self.row_ptr.push(0);
+        for (i, seq) in seqs.iter().enumerate() {
+            assert_eq!((seq.dk, seq.dv), (dk, dv), "mixed state shapes in batch");
+            let q = &qs[i * dk..(i + 1) * dk];
+            for (l, slot) in seq.levels.iter().enumerate() {
+                if let Some(id) = slot {
+                    let lam = level_weight(lambdas[i], l);
+                    if lam == 0.0 {
+                        continue;
+                    }
+                    self.blocks.push(*id);
+                    for &qk in q {
+                        self.wq.push(lam * qk);
+                    }
+                }
+            }
+            self.row_ptr.push(self.blocks.len());
+        }
+        out.fill(0.0);
+        if self.blocks.is_empty() {
+            return;
+        }
+        // 2) execute: the block-sparse GEMM over the resident pool —
+        //    contiguous output row-blocks per worker, blocks streamed
+        //    straight from the pool slab (zero-copy).
+        let flops = 2 * self.blocks.len() * dk * dv;
+        let threads = if flops < BATCH_READ_FLOP_THRESHOLD {
+            1
+        } else {
+            tensor::current_gemm_threads().clamp(1, n)
+        };
+        let (wq, blocks, row_ptr) = (&self.wq, &self.blocks, &self.row_ptr);
+        par_row_chunks_pooled(out, dv, n.div_ceil(threads), |r0, r1, chunk| {
+            for i in r0..r1 {
+                let orow = &mut chunk[(i - r0) * dv..(i - r0 + 1) * dv];
+                for j in row_ptr[i]..row_ptr[i + 1] {
+                    // the λ weight is pre-folded into the wq row, so
+                    // scale = 1.0 reproduces the per-sequence op sequence
+                    // exactly (1.0 * (λ·q_k) is bitwise λ·q_k)
+                    let a = &wq[j * dk..(j + 1) * dk];
+                    tensor::matvec_t_acc_slice(pool.get(blocks[j]), dv, a, 1.0, orow);
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttnInputs;
+    use crate::state::FenwickState;
+    use crate::util::prop::{check, UsizeIn};
+    use crate::util::Rng;
+
+    #[test]
+    fn blocks_for_steps_bounds_live_states_tightly() {
+        for steps in 1usize..300 {
+            let max_live = (0..steps).map(|t| t.count_ones() as usize + 1).max().unwrap();
+            assert_eq!(blocks_for_steps(steps), max_live, "steps={steps}");
+        }
+    }
+
+    #[test]
+    fn pooled_state_is_bit_exact_with_fenwick_state() {
+        let mut rng = Rng::new(21);
+        let (dk, dv, t_len) = (8, 8, 200);
+        let x = AttnInputs::random(t_len, dk, dv, &mut rng);
+        let mut pool = StatePool::new(dk * dv, 16);
+        let mut ps = PooledFenwickState::new(dk, dv);
+        let mut fs = FenwickState::new(dk, dv);
+        // truncated λ table also exercises clamp parity past the width
+        let width = 5;
+        for t in 0..t_len {
+            let lam = &x.lambda.row(t)[..width];
+            let (ws, tr_f, tr_p) = if t % 2 == 0 {
+                (1.0, Transition::Decay(x.alpha[t]), Transition::Decay(x.alpha[t]))
+            } else {
+                (
+                    x.beta[t],
+                    Transition::GatedHouseholder { alpha: x.alpha[t], beta: x.beta[t], k: x.k.row(t) },
+                    Transition::GatedHouseholder { alpha: x.alpha[t], beta: x.beta[t], k: x.k.row(t) },
+                )
+            };
+            let o1 = fs.step(x.q.row(t), x.k.row(t), x.v.row(t), ws, tr_f, lam);
+            let o2 = ps
+                .step(&mut pool, x.q.row(t), x.k.row(t), x.v.row(t), ws, tr_p, lam)
+                .unwrap();
+            assert_eq!(o1, o2, "bit-exact divergence at t={t}");
+            assert_eq!(ps.live_states(), fs.live_states(), "t={t}");
+            assert_eq!(pool.in_use(), ps.live_states(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn batched_read_matches_per_sequence_reads_bit_exact() {
+        let (dk, dv) = (16, 12);
+        let mut rng = Rng::new(22);
+        let mut pool = StatePool::new(dk * dv, 64);
+        let steps = [1usize, 3, 7, 12, 33, 64];
+        let n = steps.len();
+        let mut seqs = Vec::new();
+        for (i, &st) in steps.iter().enumerate() {
+            let mut seq = PooledFenwickState::new(dk, dv);
+            let mut srng = Rng::new(100 + i as u64);
+            for _ in 0..st {
+                let k: Vec<f32> = (0..dk).map(|_| srng.normal_f32(0.0, 1.0)).collect();
+                let v: Vec<f32> = (0..dv).map(|_| srng.normal_f32(0.0, 1.0)).collect();
+                seq.advance(&mut pool, &k, &v, 1.0, Transition::Decay(0.97)).unwrap();
+            }
+            seqs.push(seq);
+        }
+        let qs: Vec<f32> = (0..n * dk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let table: Vec<f32> = (0..10).map(|_| rng.range_f32(0.05, 1.0)).collect();
+        // mixed widths exercise per-sequence λ clamping inside the batch
+        let lambdas: Vec<&[f32]> = (0..n).map(|i| &table[..3 + i]).collect();
+
+        let mut want = vec![0.0f32; n * dv];
+        for i in 0..n {
+            seqs[i].read_into(&pool, &qs[i * dk..(i + 1) * dk], lambdas[i], &mut want[i * dv..(i + 1) * dv]);
+        }
+        let refs: Vec<&PooledFenwickState> = seqs.iter().collect();
+        let mut dec = BatchedDecoder::new();
+        let mut got = vec![1.0f32; n * dv]; // dirty buffer: read_batch overwrites
+        dec.read_batch(&pool, &refs, &qs, &lambdas, &mut got);
+        assert_eq!(got, want, "batched read diverged from per-sequence reads");
+        assert_eq!(
+            dec.last_planned_blocks(),
+            seqs.iter().map(|s| s.live_states()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn pool_never_leaks_under_random_retirement() {
+        check("pooled no-leak", 25, &UsizeIn(1, 1000), |&seed| {
+            let (dk, dv) = (4, 4);
+            let mut rng = Rng::new(seed as u64);
+            let mut pool = StatePool::new(dk * dv, 64);
+            let mut live: Vec<PooledFenwickState> = Vec::new();
+            let lam = [1.0f32, 0.5, 0.25];
+            for _ in 0..200 {
+                let r = rng.f64();
+                if r < 0.25 && live.len() < 8 {
+                    live.push(PooledFenwickState::new(dk, dv));
+                } else if r < 0.45 && !live.is_empty() {
+                    let i = rng.below(live.len());
+                    let mut seq = live.swap_remove(i);
+                    seq.release(&mut pool);
+                } else if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    let k: Vec<f32> = (0..dk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    let v: Vec<f32> = (0..dv).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    // exhaustion is allowed mid-trace; it must not corrupt
+                    let _ = live[i].step(&mut pool, &k, &k, &v, 1.0, Transition::Decay(0.9), &lam);
+                }
+                let total: usize = live.iter().map(|s| s.live_states()).sum();
+                if pool.in_use() != total {
+                    return false;
+                }
+            }
+            for mut seq in live.drain(..) {
+                seq.release(&mut pool);
+            }
+            pool.in_use() == 0
+        });
+    }
+
+    #[test]
+    fn advance_signals_exhaustion_cleanly_and_recovers_after_grow() {
+        let (dk, dv) = (4, 4);
+        let mut pool = StatePool::new(dk * dv, 2);
+        let mut seq = PooledFenwickState::new(dk, dv);
+        let k = vec![1.0f32; dk];
+        let v = vec![1.0f32; dv];
+        for _ in 0..3 {
+            seq.advance(&mut pool, &k, &v, 1.0, Transition::Decay(0.9)).unwrap();
+        }
+        // t=3 needs a third simultaneous block: clean backpressure error
+        let before = (seq.live_states(), seq.t, pool.in_use());
+        assert_eq!(
+            seq.advance(&mut pool, &k, &v, 1.0, Transition::Decay(0.9)),
+            Err(PoolExhausted)
+        );
+        assert_eq!((seq.live_states(), seq.t, pool.in_use()), before, "failed step must not mutate");
+        pool.grow(2);
+        seq.advance(&mut pool, &k, &v, 1.0, Transition::Decay(0.9)).unwrap();
+        assert_eq!(seq.live_states(), 3); // popcount(3)+1
+        seq.release(&mut pool);
+        assert_eq!(pool.in_use(), 0);
+    }
+}

@@ -25,16 +25,20 @@
 //!
 //! # Threading model
 //!
-//! Output rows are partitioned into contiguous row blocks, one scoped
-//! worker per block ([`crate::util::threadpool::par_row_chunks`] —
-//! `par_map`-style transient scoped threads). Blocks are disjoint slices
-//! of the output, so workers share nothing mutable and need no
-//! synchronization. Every output element is reduced by exactly one thread
-//! in a fixed sequential k-order, so results are **bit-for-bit identical**
-//! for any thread count — see `threaded_gemm_is_deterministic`. The
-//! thread count comes from the [`gemm_threads`] knob (0 = one per core);
-//! kernels below [`PAR_FLOP_THRESHOLD`] flops stay single-threaded to
-//! avoid spawn overhead.
+//! Output rows are partitioned into contiguous row blocks, one block per
+//! worker of the process-resident pool
+//! ([`crate::util::threadpool::par_row_chunks_pooled`] dispatching to
+//! [`crate::util::threadpool::resident_pool`] — no transient thread
+//! spawns per kernel). Blocks are disjoint slices of the output, so
+//! workers share nothing mutable and need no synchronization. Every
+//! output element is reduced by exactly one worker in a fixed sequential
+//! k-order, and the partition depends only on the requested thread count
+//! (not on pool size or scheduling), so results are **bit-for-bit
+//! identical** for any thread count — see
+//! `threaded_gemm_is_deterministic`. The thread count comes from the
+//! [`gemm_threads`] knob (0 = one per core); kernels below
+//! [`PAR_FLOP_THRESHOLD`] flops stay single-threaded so the queue handoff
+//! never dominates tiny products.
 //!
 //! Accumulation is f32; for oracle comparisons the tests use
 //! tolerance-based closeness, and `allclose` reports the worst
@@ -44,15 +48,15 @@ pub mod ops;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::util::threadpool::par_row_chunks;
+use crate::util::threadpool::par_row_chunks_pooled;
 use crate::util::Rng;
 
 /// k-panel depth for the NN kernel: KC rows of B (KC × n floats) are
 /// streamed per panel; 256 keeps the panel within L2 for n ≲ 1k.
 const KC: usize = 256;
 
-/// Below this many flops (2·m·k·n) a GEMM stays single-threaded: thread
-/// spawn costs ~10µs, which only amortizes on larger products.
+/// Below this many flops (2·m·k·n) a GEMM stays single-threaded: even a
+/// resident-pool handoff (~1µs) only amortizes on larger products.
 const PAR_FLOP_THRESHOLD: usize = 1 << 18;
 
 /// Requested GEMM worker count; 0 = auto (one per available core).
@@ -76,8 +80,8 @@ pub fn current_gemm_threads() -> usize {
 
 /// Worker count for a (m,k,n) product: 1 below the flop threshold, else
 /// the knob value capped so every worker amortizes at least one
-/// threshold's worth of flops (spawn costs ~10µs; a barely-threaded GEMM
-/// must not fan out to a full core count) and by the output row count.
+/// threshold's worth of flops (a barely-threaded GEMM must not fan out
+/// to a full core count) and by the output row count.
 fn plan_threads(m: usize, k: usize, n: usize) -> usize {
     let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
     if flops < PAR_FLOP_THRESHOLD {
@@ -228,7 +232,7 @@ pub fn gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [
     if threads <= 1 {
         block_nn(a, b, out, k, n, 0, m);
     } else {
-        par_row_chunks(out, n, m.div_ceil(threads), |r0, r1, chunk| {
+        par_row_chunks_pooled(out, n, m.div_ceil(threads), |r0, r1, chunk| {
             block_nn(a, b, chunk, k, n, r0, r1)
         });
     }
@@ -250,7 +254,7 @@ pub fn gemm_nt_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mu
     if threads <= 1 {
         block_nt(a, b, out, k, n, 0, m);
     } else {
-        par_row_chunks(out, n, m.div_ceil(threads), |r0, r1, chunk| {
+        par_row_chunks_pooled(out, n, m.div_ceil(threads), |r0, r1, chunk| {
             block_nt(a, b, chunk, k, n, r0, r1)
         });
     }
@@ -272,7 +276,7 @@ pub fn gemm_tn_into(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], out: &mu
     if threads <= 1 {
         block_tn(a, b, out, k, m, n, 0, m);
     } else {
-        par_row_chunks(out, n, m.div_ceil(threads), |r0, r1, chunk| {
+        par_row_chunks_pooled(out, n, m.div_ceil(threads), |r0, r1, chunk| {
             block_tn(a, b, chunk, k, m, n, r0, r1)
         });
     }
@@ -293,7 +297,7 @@ pub fn gemm_diag_acc(m: usize, k: usize, n: usize, w: &[f32], a: &[f32], b: &[f3
     if threads <= 1 {
         block_nn_diag(a, b, w, out, k, n, 0, m);
     } else {
-        par_row_chunks(out, n, m.div_ceil(threads), |r0, r1, chunk| {
+        par_row_chunks_pooled(out, n, m.div_ceil(threads), |r0, r1, chunk| {
             block_nn_diag(a, b, w, chunk, k, n, r0, r1)
         });
     }
@@ -314,7 +318,7 @@ pub fn gemm_tn_diag_acc(k: usize, m: usize, n: usize, w: &[f32], a: &[f32], b: &
     if threads <= 1 {
         block_tn_diag(a, b, w, out, k, m, n, 0, m);
     } else {
-        par_row_chunks(out, n, m.div_ceil(threads), |r0, r1, chunk| {
+        par_row_chunks_pooled(out, n, m.div_ceil(threads), |r0, r1, chunk| {
             block_tn_diag(a, b, w, chunk, k, m, n, r0, r1)
         });
     }
@@ -338,7 +342,7 @@ pub fn gemm_sparse_rows(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out:
     if threads <= 1 {
         block_sparse(a, b, out, k, n, 0, m);
     } else {
-        par_row_chunks(out, n, m.div_ceil(threads), |r0, r1, chunk| {
+        par_row_chunks_pooled(out, n, m.div_ceil(threads), |r0, r1, chunk| {
             block_sparse(a, b, chunk, k, n, r0, r1)
         });
     }
@@ -546,9 +550,7 @@ impl Mat {
     pub fn matvec_t_acc(&self, x: &[f32], scale: f32, out: &mut [f32]) {
         assert_eq!(self.rows, x.len());
         assert_eq!(self.cols, out.len());
-        for (i, &xi) in x.iter().enumerate() {
-            axpy8(out, self.row(i), scale * xi);
-        }
+        matvec_t_acc_slice(&self.data, self.cols, x, scale, out);
     }
 
     /// Frobenius norm.
@@ -572,6 +574,22 @@ pub fn scaled_matmul_acc(out: &mut Mat, w: &[f32], a: &Mat, b: &Mat) {
     assert_eq!(a.cols, b.rows, "scaled_matmul_acc shape mismatch");
     assert_eq!((out.rows, out.cols), (a.rows, b.cols), "scaled_matmul_acc out shape");
     gemm_diag_acc(a.rows, a.cols, b.cols, w, &a.data, &b.data, &mut out.data);
+}
+
+/// `out += scale * S^T x` for a row-major `(x.len(), cols)` slice `s` —
+/// THE weighted-accumulate primitive of the decode read path. Every
+/// consumer ([`Mat::matvec_t_acc`], the per-sequence
+/// `attention::loglinear::level_read_acc`, the pooled batched decoder,
+/// and the Householder `k^T S` pass) delegates here, so the bit-exactness
+/// guarantees between those paths survive any future change to this one
+/// op sequence (e.g. a SIMD microkernel).
+#[inline]
+pub fn matvec_t_acc_slice(s: &[f32], cols: usize, x: &[f32], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(s.len(), x.len() * cols);
+    debug_assert_eq!(out.len(), cols);
+    for (i, &xi) in x.iter().enumerate() {
+        axpy8(out, &s[i * cols..(i + 1) * cols], scale * xi);
+    }
 }
 
 /// Dot product with 8 independent accumulators over `chunks_exact(8)`

@@ -1,10 +1,17 @@
 //! A small fixed-size thread pool (tokio/rayon unavailable offline).
 //!
-//! Used by the serving coordinator for worker threads and by data
-//! generation. Supports fire-and-forget jobs and a scoped parallel map.
+//! Used by the serving coordinator for worker threads, by data
+//! generation, and — via [`resident_pool`] + [`par_row_chunks_pooled`] —
+//! as the resident scheduler under the tensor GEMM kernels and the
+//! batched Fenwick decoder. Supports fire-and-forget jobs, a scoped
+//! parallel map, and a rayon-style blocking [`ThreadPool::scope`] that
+//! lets non-`'static` work run on resident workers (no per-kernel thread
+//! spawns — the "pooled GEMM workers" item of the roadmap).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -14,15 +21,26 @@ enum Msg {
     Shutdown,
 }
 
+/// Process-unique id per pool so worker threads can be attributed to
+/// *their* pool (scope's reentrancy check must not confuse two pools).
+static POOL_IDS: AtomicUsize = AtomicUsize::new(0);
+
 /// Fixed-size pool of worker threads consuming from a shared queue.
 pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
-    tx: mpsc::Sender<Msg>,
+    /// Mutex-wrapped so a `&ThreadPool` can be shared across threads
+    /// (the resident pool is a process-wide static).
+    tx: Mutex<mpsc::Sender<Msg>>,
+    /// worker thread-name prefix, unique to this pool instance
+    /// (trailing '-' makes prefix matching unambiguous: "pool1-" never
+    /// prefixes a "pool10-" worker name)
+    name_prefix: String,
 }
 
 impl ThreadPool {
     pub fn new(n: usize) -> ThreadPool {
         assert!(n > 0);
+        let name_prefix = format!("pool{}-", POOL_IDS.fetch_add(1, Ordering::Relaxed));
         let (tx, rx) = mpsc::channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
         let mut workers = Vec::with_capacity(n);
@@ -30,7 +48,7 @@ impl ThreadPool {
             let rx = Arc::clone(&rx);
             workers.push(
                 thread::Builder::new()
-                    .name(format!("pool-{i}"))
+                    .name(format!("{name_prefix}{i}"))
                     .spawn(move || loop {
                         let msg = { rx.lock().unwrap().recv() };
                         match msg {
@@ -41,12 +59,70 @@ impl ThreadPool {
                     .expect("spawn worker"),
             );
         }
-        ThreadPool { workers, tx }
+        ThreadPool { workers, tx: Mutex::new(tx), name_prefix }
     }
 
     /// Submit a job for asynchronous execution.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx.send(Msg::Run(Box::new(job))).expect("pool closed");
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Msg::Run(Box::new(job)))
+            .expect("pool closed");
+    }
+
+    /// Run a batch of non-`'static` jobs on the pool, blocking until all
+    /// of them complete (scoped-threads semantics on resident workers).
+    ///
+    /// Worker panics are caught so the completion counter always drains,
+    /// then re-raised here. Called from one of *this pool's own* worker
+    /// threads the jobs run inline instead (a blocked worker waiting on
+    /// its own pool would deadlock a single-worker pool); workers of
+    /// other pools dispatch normally.
+    pub fn scope<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let on_own_worker = thread::current()
+            .name()
+            .is_some_and(|n| n.starts_with(self.name_prefix.as_str()));
+        if on_own_worker || self.size() == 1 {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let sync = Arc::new((Mutex::new(jobs.len()), Condvar::new()));
+        let panicked = Arc::new(AtomicBool::new(false));
+        for job in jobs {
+            // SAFETY: this function blocks below until every job has
+            // signalled completion, so everything borrowed by `job`
+            // (lifetime 'env) strictly outlives its execution.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+            };
+            let sync = Arc::clone(&sync);
+            let panicked = Arc::clone(&panicked);
+            self.execute(move || {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    panicked.store(true, Ordering::SeqCst);
+                }
+                let (left, cv) = &*sync;
+                let mut left = left.lock().unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    cv.notify_all();
+                }
+            });
+        }
+        let (left, cv) = &*sync;
+        let mut left = left.lock().unwrap();
+        while *left > 0 {
+            left = cv.wait(left).unwrap();
+        }
+        if panicked.load(Ordering::SeqCst) {
+            panic!("job panicked in ThreadPool::scope");
+        }
     }
 
     /// Number of worker threads.
@@ -57,13 +133,30 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Msg::Shutdown);
+        {
+            let tx = self.tx.lock().unwrap();
+            for _ in &self.workers {
+                let _ = tx.send(Msg::Shutdown);
+            }
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
+}
+
+/// The process-wide resident worker pool (one worker per core), shared by
+/// the GEMM row-block scheduler and the batched decode read path. Workers
+/// are spawned once on first use and live for the process — kernels pay a
+/// queue handoff instead of a thread spawn, which is what makes
+/// many-small-GEMM regimes (decode batching, short chunks) worth
+/// threading at all.
+pub fn resident_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n.max(1))
+    })
 }
 
 /// Parallel map over items using transient scoped threads; preserves order.
@@ -107,8 +200,11 @@ where
 /// scoped worker, `par_map`-style. `f` receives the *global* row range
 /// [row0, row1) plus the block's own sub-slice (locally indexed from
 /// row0), so workers share nothing mutable and need no synchronization.
-/// This is the scheduler under the tensor GEMM kernels
-/// ([`crate::tensor::gemm_into`] and friends).
+///
+/// This is the *scoped-threads reference implementation*: the production
+/// scheduler under the tensor GEMM kernels is [`par_row_chunks_pooled`]
+/// (same contract, resident workers); this version is kept as the
+/// spawn-per-call baseline and the equivalence oracle in the tests.
 pub fn par_row_chunks<F>(out: &mut [f32], row_len: usize, rows_per_block: usize, f: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
@@ -132,6 +228,39 @@ where
             });
         }
     });
+}
+
+/// [`par_row_chunks`] on the resident worker pool: same contract and the
+/// same deterministic row partition, but blocks are dispatched to
+/// [`resident_pool`] workers instead of transient scoped threads. This is
+/// the scheduler under the tensor GEMM kernels ([`crate::tensor::gemm_into`]
+/// and friends) and the batched Fenwick decode read.
+pub fn par_row_chunks_pooled<F>(out: &mut [f32], row_len: usize, rows_per_block: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && rows_per_block > 0);
+    debug_assert_eq!(out.len() % row_len, 0);
+    let block_elems = rows_per_block * row_len;
+    if out.len() <= block_elems {
+        // single block: run inline, no dispatch
+        let rows = out.len() / row_len;
+        f(0, rows, out);
+        return;
+    }
+    let f = &f;
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(block_elems)
+        .enumerate()
+        .map(|(bi, chunk)| {
+            Box::new(move || {
+                let r0 = bi * rows_per_block;
+                let r1 = r0 + chunk.len() / row_len;
+                f(r0, r1, chunk);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    resident_pool().scope(jobs);
 }
 
 #[cfg(test)]
@@ -194,5 +323,89 @@ mod tests {
             chunk.fill(1.0);
         });
         assert!(buf.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn scope_runs_all_jobs_and_blocks_until_done() {
+        let pool = ThreadPool::new(3);
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..64)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(jobs);
+        // scope returned => every job has finished (borrow of counter ends here)
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn scope_from_inside_a_worker_runs_inline_without_deadlock() {
+        // a size-1 pool whose single job opens a nested scope: must not
+        // block forever waiting for itself
+        let pool = Arc::new(ThreadPool::new(1));
+        let (tx, rx) = mpsc::channel();
+        let p2 = Arc::clone(&pool);
+        pool.execute(move || {
+            let hits = AtomicUsize::new(0);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|_| {
+                    Box::new(|| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            p2.scope(jobs);
+            tx.send(hits.load(Ordering::SeqCst)).unwrap();
+        });
+        let n = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("nested scope deadlocked");
+        assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn scope_from_another_pools_worker_dispatches_normally() {
+        // cross-pool nesting must not be mistaken for self-reentrancy:
+        // pool A's worker scoping onto pool B uses B's workers and returns
+        let a = Arc::new(ThreadPool::new(1));
+        let b = Arc::new(ThreadPool::new(2));
+        let (tx, rx) = mpsc::channel();
+        let b2 = Arc::clone(&b);
+        a.execute(move || {
+            let hits = AtomicUsize::new(0);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                .map(|_| {
+                    Box::new(|| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            b2.scope(jobs);
+            tx.send(hits.load(Ordering::SeqCst)).unwrap();
+        });
+        let n = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("cross-pool scope deadlocked");
+        assert_eq!(n, 8);
+    }
+
+    #[test]
+    fn pooled_row_chunks_matches_scoped_version() {
+        let (rows, width) = (29usize, 7usize);
+        let fill = |r0: usize, r1: usize, chunk: &mut [f32]| {
+            for i in r0..r1 {
+                for j in 0..width {
+                    chunk[(i - r0) * width + j] += (i * width + j) as f32;
+                }
+            }
+        };
+        let mut a = vec![0.0f32; rows * width];
+        let mut b = vec![0.0f32; rows * width];
+        par_row_chunks(&mut a, width, 4, fill);
+        par_row_chunks_pooled(&mut b, width, 4, fill);
+        assert_eq!(a, b);
     }
 }

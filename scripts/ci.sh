@@ -26,9 +26,10 @@ echo "== lint: fmt --check =="
 cargo fmt --check
 
 if [[ "${1:-}" != "--no-bench" ]]; then
-    echo "== bench smoke (--quick): fig4 + table1, emits BENCH_*.json =="
+    echo "== bench smoke (--quick): fig4 + table1 + decode, emits BENCH_*.json =="
     cargo bench --bench fig4_throughput -- --quick
     cargo bench --bench table1_complexity -- --quick
+    cargo bench --bench decode_batched -- --quick
 fi
 
 echo "CI OK"
