@@ -25,6 +25,14 @@
 //! engine with their own transitions (scalar decay vs. gated Householder
 //! chain), which is exactly the paper's claim that any linear-attention
 //! model with an efficient chunkwise primitive can be "lifted".
+//!
+//! Serving-side consumers: the prompt-prefill subsystem
+//! ([`crate::prefill`]) runs a head-batched, state-only variant of this
+//! hierarchy ([`crate::prefill::PrefillEngine`]) and exports it — or a
+//! plain [`ChunkFenwick`] — into pool-backed decode states through
+//! [`crate::prefill::bridge`] at any chunk boundary (the level layouts
+//! coincide at the token machine's post-merge boundary; see the bridge
+//! docs for the alignment argument).
 
 use crate::fenwick;
 use crate::hmatrix::QuasiH;
@@ -109,6 +117,19 @@ impl ChunkFenwick {
     /// Number of live states (≈ popcount of the chunk index, App. B.4).
     pub fn live_states(&self) -> usize {
         self.levels.iter().filter(|s| s.is_some()).count() + usize::from(self.level0.is_some())
+    }
+
+    /// Whether a chunk-sentinel (level-0) state is currently installed —
+    /// false right after [`ChunkFenwick::advance`] merged it away, which
+    /// is the boundary the prefill export bridge
+    /// (`crate::prefill::bridge`) requires.
+    pub fn has_level0(&self) -> bool {
+        self.level0.is_some()
+    }
+
+    /// State shape `(d_k, d_v)`, or `(0, 0)` before the first write.
+    pub fn state_dims(&self) -> (usize, usize) {
+        (self.dk, self.dv)
     }
 
     /// Apply the current chunk's transition to every live state.

@@ -1,22 +1,27 @@
 //! The attention zoo: pure-Rust reference implementations of every model
 //! row in the paper's Table 1, each in up to three algorithmic forms.
 //!
-//! | model | recurrent | parallel (masked) | chunkwise |
-//! |-------|-----------|-------------------|-----------|
-//! | softmax attention           | (KV-cache decode) | ✓ `O(T^2)` | — |
-//! | linear attention            | ✓ `O(T)` | ✓ | ✓ `O(T)` |
-//! | Mamba-2 (scalar gate)       | ✓ | ✓ | ✓ (SSD) |
-//! | DeltaNet                    | ✓ | ✓ (WY/UT) | ✓ |
-//! | Gated DeltaNet              | ✓ | ✓ | ✓ |
-//! | Log-Linear Mamba-2          | ✓ `O(log T)` state | ✓ | ✓ `O(T log T)` (Alg. 1) |
-//! | Log-Linear Gated DeltaNet   | ✓ `O(log T)` state | ✓ | ✓ |
+//! | model | recurrent | parallel (masked) | chunkwise | serving prefill |
+//! |-------|-----------|-------------------|-----------|-----------------|
+//! | softmax attention           | (KV-cache decode) | ✓ `O(T^2)` | — | — |
+//! | linear attention            | ✓ `O(T)` | ✓ | ✓ `O(T)` | — |
+//! | Mamba-2 (scalar gate)       | ✓ | ✓ | ✓ (SSD) | — |
+//! | DeltaNet                    | ✓ | ✓ (WY/UT) | ✓ | — |
+//! | Gated DeltaNet              | ✓ | ✓ | ✓ | — |
+//! | Log-Linear Mamba-2          | ✓ `O(log T)` state | ✓ | ✓ `O(T log T)` (Alg. 1) | ✓ head-batched |
+//! | Log-Linear Gated DeltaNet   | ✓ `O(log T)` state | ✓ | ✓ | ✓ head-batched |
 //!
 //! The *recurrent* form is always the unambiguous ground truth; property
 //! tests assert `recurrent == parallel == chunkwise` on random inputs.
-//! These implementations serve three roles: correctness oracles for the
+//! These implementations serve four roles: correctness oracles for the
 //! Pallas kernels (shared golden fixtures), the CPU substrate for the
-//! Fig. 4 / Table 1 benchmark reproductions, and the decode path of the
-//! Rust-side serving demo.
+//! Fig. 4 / Table 1 benchmark reproductions, the decode path of the
+//! Rust-side serving demo, and — for the log-linear rows — the chunkwise
+//! machinery behind the serving engine's **prompt prefill**
+//! ([`crate::prefill`]): a state-only, H-head-batched form of the
+//! chunkwise algorithm ingests prompts at `O(T log T)` and hands the
+//! resulting hierarchy to the pooled decode path through the export
+//! bridge, replacing token-by-token prompt ingestion.
 //!
 //! Conventions: single head; `q,k: (T, d_k)`, `v: (T, d_v)`; hidden state
 //! `S: (d_k, d_v)` updated as `S ← transition(S) + k_t v_t^T` and read as

@@ -7,24 +7,35 @@
 //! - [`PjrtBackend`]: the AOT path. Per-sequence dense state stacks are
 //!   gathered into batched PJRT buffers, the compiled `decode_step`
 //!   executes, states scatter back. Admission never backpressures (dense
-//!   stacks are host `Vec`s).
-//! - [`PooledBackend`]: the pure-Rust pooled path (this PR's engine). A
-//!   single-layer log-linear attention LM whose per-sequence Fenwick
-//!   states live in a shared [`StatePool`]; each step is matmul-rich —
-//!   one [`BatchedDecoder::read_batch`] block-sparse GEMM for every live
-//!   level of every sequence at once, then one `O @ W_o^T` GEMM for the
-//!   whole batch's logits. [`DecodeBackend::admit`] reserves
-//!   `blocks_for_steps(max_steps)` pool blocks per sequence and returns
-//!   [`AdmitError::Exhausted`] when the pool can't hold another sequence
-//!   — the backpressure signal the server's admission loop honors by
-//!   leaving requests queued.
+//!   stacks are host `Vec`s) and prompts are ingested token-by-token.
+//! - [`PooledBackend`]: the pure-Rust pooled engine. An H-head
+//!   single-layer log-linear attention LM whose per-(sequence, head)
+//!   Fenwick states live in a shared [`StatePool`]; each decode step is
+//!   matmul-rich — one [`BatchedDecoder::read_batch`] block-sparse GEMM
+//!   over every live level of every (sequence, head) in the batch, then
+//!   one `O_cat @ W_o^T` GEMM for the whole batch's logits. Prompts are
+//!   ingested **chunkwise**: [`DecodeBackend::prefill_chunk`] streams full
+//!   chunks through a per-sequence head-batched
+//!   [`PrefillEngine`](crate::prefill::PrefillEngine) (state-only Alg. 1 —
+//!   no logits until the prompt's final token), and the first decode row
+//!   flips the sequence to pooled decode states via the export bridge
+//!   ([`crate::prefill::bridge::export_prefill_head`]). Position-dependent
+//!   gates come from one [`GateTable`] consulted by both paths, so
+//!   chunkwise-prefilled and token-stepped sequences follow the same α/λ
+//!   schedule. [`DecodeBackend::admit`] reserves
+//!   `heads · blocks_for_steps(max_steps)` pool blocks per sequence and
+//!   returns [`AdmitError::Exhausted`] when the pool can't hold another
+//!   sequence — the backpressure signal the server's admission loop honors
+//!   by leaving requests queued.
 
 use anyhow::{bail, Result};
 
+use crate::prefill::bridge::export_prefill_head;
+use crate::prefill::PrefillEngine;
 use crate::runtime::{ModelHandle, Runtime};
 use crate::state::pool::StatePool;
 use crate::state::pooled::{blocks_for_steps, BatchedDecoder, PooledFenwickState};
-use crate::state::Transition;
+use crate::state::{GateTable, Transition};
 use crate::tensor::{self, Mat};
 use crate::util::Rng;
 
@@ -60,6 +71,24 @@ pub trait DecodeBackend {
 
     /// Resident decode-state bytes right now (peak accounting).
     fn state_bytes(&self) -> usize;
+
+    /// Chunk size for chunked prompt prefill; 0 = unsupported (the server
+    /// then feeds prompts token-by-token through [`DecodeBackend::step`],
+    /// the pre-prefill behavior).
+    fn prefill_chunk_size(&self) -> usize {
+        0
+    }
+
+    /// Ingest one full prompt chunk for `slot`: `tokens` are the prompt
+    /// tokens at positions `pos .. pos + tokens.len()`, state-only (no
+    /// logits — the prompt's final token goes through
+    /// [`DecodeBackend::step`] to produce the first sample). Only valid
+    /// before the sequence's first decode row, with
+    /// `tokens.len() == prefill_chunk_size()` and chunk-aligned `pos`.
+    fn prefill_chunk(&mut self, slot: SeqSlot, tokens: &[i32], pos: usize) -> Result<()> {
+        let _ = (slot, tokens, pos);
+        bail!("this backend does not support chunked prefill")
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -172,27 +201,39 @@ impl DecodeBackend for PjrtBackend {
 // Pooled pure-Rust backend
 // ---------------------------------------------------------------------------
 
-/// Pure-Rust pooled decode backend: a fixed-weight single-layer
-/// log-linear Mamba-2-style LM (random embeddings + output head) whose
-/// decode states live in a shared [`StatePool`]. Exists to serve real
-/// token traffic through the batched Fenwick engine without PJRT — the
-/// scheduler/backpressure testbed and the `decode_batched` bench engine.
+/// One admitted sequence's backend-side state: a head-batched chunkwise
+/// prefill engine while the prompt streams in, then per-head pool-backed
+/// decode states (flipped by the export bridge on the first decode row).
+enum SeqState {
+    Prefilling(PrefillEngine),
+    Decoding(Vec<PooledFenwickState>),
+}
+
+/// Pure-Rust pooled decode backend: a fixed-weight single-layer H-head
+/// log-linear Mamba-2-style LM (random per-head embeddings + output head)
+/// whose decode states live in a shared [`StatePool`] and whose prompts
+/// ingest chunkwise through per-sequence [`PrefillEngine`]s. Exists to
+/// serve real token traffic through the batched Fenwick engines without
+/// PJRT — the scheduler/backpressure testbed and the bench engine for
+/// `decode_batched` / `prefill_throughput`.
 pub struct PooledBackend {
     pub dk: usize,
     pub dv: usize,
     pub vocab: usize,
-    /// query/key/value embeddings, (vocab, dk|dk|dv); keys L2-normalized
-    eq: Mat,
-    ek: Mat,
-    ev: Mat,
-    /// output head, (vocab, dv): logits = O @ W_o^T
+    pub heads: usize,
+    /// per-head query/key/value embeddings, (vocab, dk|dk|dv) each; keys
+    /// L2-normalized
+    eq: Vec<Mat>,
+    ek: Vec<Mat>,
+    ev: Vec<Mat>,
+    /// output head, (vocab, heads·dv): logits = O_cat @ W_o^T
     wo: Mat,
-    /// per-level λ weights (decaying with level)
-    lambda: Vec<f32>,
-    /// per-step decay gate α
-    alpha: f32,
+    /// position-dependent α/λ — the one gate source for prefill AND decode
+    gates: GateTable,
+    /// chunked-prefill chunk size (power of two; 0 disables)
+    prefill_chunk: usize,
     pool: StatePool,
-    slots: Vec<Option<PooledFenwickState>>,
+    slots: Vec<Option<SeqState>>,
     free_slots: Vec<usize>,
     /// blocks reserved per live slot (admission accounting)
     reserved: Vec<usize>,
@@ -202,36 +243,71 @@ pub struct PooledBackend {
     // step because the trait returns an owned Vec)
     q_buf: Vec<f32>,
     o_buf: Vec<f32>,
+    // prefill gather workspaces (reused across chunks: the stacked
+    // per-head (k, v) embeddings and the chunk's α schedule)
+    kc_buf: Vec<f32>,
+    vc_buf: Vec<f32>,
+    alpha_buf: Vec<f32>,
 }
 
 impl PooledBackend {
-    /// `pool_blocks` bounds resident decode memory: admission reserves
-    /// `blocks_for_steps(max_steps)` blocks per sequence against it.
+    /// Single-head backend with the default gates and a 16-token prefill
+    /// chunk. `pool_blocks` bounds resident decode memory: admission
+    /// reserves `heads · blocks_for_steps(max_steps)` blocks per sequence
+    /// against it.
     pub fn new(vocab: usize, dk: usize, dv: usize, pool_blocks: usize, seed: u64) -> PooledBackend {
+        PooledBackend::with_config(vocab, 1, dk, dv, 16, pool_blocks, seed)
+    }
+
+    /// Fully-configured backend: `heads` attention heads and a
+    /// `prefill_chunk`-token chunkwise prefill path (0 disables chunked
+    /// prefill; the server then feeds prompts token-by-token).
+    pub fn with_config(
+        vocab: usize,
+        heads: usize,
+        dk: usize,
+        dv: usize,
+        prefill_chunk: usize,
+        pool_blocks: usize,
+        seed: u64,
+    ) -> PooledBackend {
+        assert!(heads >= 1, "at least one head");
+        assert!(
+            prefill_chunk == 0 || prefill_chunk.is_power_of_two(),
+            "prefill chunk must be a power of two (or 0 to disable)"
+        );
         let mut rng = Rng::new(seed);
-        let eq = Mat::randn(vocab, dk, 1.0 / (dk as f32).sqrt(), &mut rng);
-        let mut ek = Mat::randn(vocab, dk, 1.0, &mut rng);
-        for i in 0..vocab {
-            let norm = crate::tensor::ops::l2_norm(ek.row(i)).max(1e-6);
-            for x in ek.row_mut(i) {
-                *x /= norm;
+        let mut eq = Vec::with_capacity(heads);
+        let mut ek = Vec::with_capacity(heads);
+        let mut ev = Vec::with_capacity(heads);
+        for _ in 0..heads {
+            eq.push(Mat::randn(vocab, dk, 1.0 / (dk as f32).sqrt(), &mut rng));
+            let mut k = Mat::randn(vocab, dk, 1.0, &mut rng);
+            for i in 0..vocab {
+                let norm = crate::tensor::ops::l2_norm(k.row(i)).max(1e-6);
+                for x in k.row_mut(i) {
+                    *x /= norm;
+                }
             }
+            ek.push(k);
+            ev.push(Mat::randn(vocab, dv, 1.0, &mut rng));
         }
-        let ev = Mat::randn(vocab, dv, 1.0, &mut rng);
-        let wo = Mat::randn(vocab, dv, 1.0 / (dv as f32).sqrt(), &mut rng);
-        // coarser levels matter less: λ^(l) = 2^-l, wide enough for any
-        // practical position (clamped past the table by level_weight)
-        let lambda: Vec<f32> = (0..24).map(|l| 0.5f32.powi(l)).collect();
+        let wo = Mat::randn(vocab, heads * dv, 1.0 / ((heads * dv) as f32).sqrt(), &mut rng);
+        // default schedule: fixed α, λ^(l) = 2^-l — coarser levels matter
+        // less; wide enough for any practical position (clamped past the
+        // table by level_weight)
+        let gates = GateTable::fixed(0.97, (0..24).map(|l| 0.5f32.powi(l)).collect());
         PooledBackend {
             dk,
             dv,
             vocab,
+            heads,
             eq,
             ek,
             ev,
             wo,
-            lambda,
-            alpha: 0.97,
+            gates,
+            prefill_chunk,
             pool: StatePool::new(dk * dv, pool_blocks),
             slots: Vec::new(),
             free_slots: Vec::new(),
@@ -240,12 +316,66 @@ impl PooledBackend {
             dec: BatchedDecoder::new(),
             q_buf: Vec::new(),
             o_buf: Vec::new(),
+            kc_buf: Vec::new(),
+            vc_buf: Vec::new(),
+            alpha_buf: Vec::new(),
         }
     }
 
     /// The shared state pool (inspection: in_use/peak/capacity).
     pub fn pool(&self) -> &StatePool {
         &self.pool
+    }
+
+    /// Install a position-dependent gate schedule (per-token α/λ). Both
+    /// the chunkwise prefill path and the decode path read it, so the two
+    /// ingestion paths cannot drift. Only meaningful before traffic runs.
+    pub fn set_gates(&mut self, gates: GateTable) {
+        self.gates = gates;
+    }
+
+    /// The gate schedule currently in force.
+    pub fn gates(&self) -> &GateTable {
+        &self.gates
+    }
+
+    /// Number of sequences currently mid-prefill (engine states resident
+    /// outside the pool).
+    pub fn prefilling(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|s| matches!(s, SeqState::Prefilling(_)))
+            .count()
+    }
+
+    /// Flip a prefilling slot to decode mode: seal the engine at its
+    /// chunk boundary and export every head into pool blocks through the
+    /// bridge. No-op for slots already decoding.
+    fn ensure_decoding(&mut self, slot: SeqSlot) -> Result<()> {
+        if matches!(self.slots[slot.0], Some(SeqState::Decoding(_))) {
+            return Ok(());
+        }
+        let Some(SeqState::Prefilling(mut eng)) = self.slots[slot.0].take() else {
+            bail!("step row for a free slot");
+        };
+        eng.finish();
+        let mut seqs = Vec::with_capacity(self.heads);
+        for h in 0..self.heads {
+            match export_prefill_head(&eng, h, &mut self.pool) {
+                Ok(s) => seqs.push(s),
+                Err(_) => {
+                    // roll back the heads already exported; unreachable
+                    // under admission reservation, so surface loudly
+                    for mut s in seqs {
+                        s.release(&mut self.pool);
+                    }
+                    bail!("state pool exhausted during prefill export (reservation bug?)");
+                }
+            }
+        }
+        self.slots[slot.0] = Some(SeqState::Decoding(seqs));
+        Ok(())
     }
 }
 
@@ -257,7 +387,7 @@ fn tok_index(tok: i32, vocab: usize) -> usize {
 
 impl DecodeBackend for PooledBackend {
     fn admit(&mut self, max_steps: usize) -> Result<SeqSlot, AdmitError> {
-        let need = blocks_for_steps(max_steps.max(1));
+        let need = self.heads * blocks_for_steps(max_steps.max(1));
         if need > self.pool.capacity() {
             return Err(AdmitError::TooLarge);
         }
@@ -273,17 +403,71 @@ impl DecodeBackend for PooledBackend {
                 self.slots.len() - 1
             }
         };
-        self.slots[idx] = Some(PooledFenwickState::new(self.dk, self.dv));
+        // a fresh sequence starts in prefill mode when the backend has a
+        // chunked-prefill path; with it disabled, decode states from step 0
+        self.slots[idx] = Some(if self.prefill_chunk > 0 {
+            SeqState::Prefilling(PrefillEngine::new(self.heads, self.dk, self.dv, self.prefill_chunk))
+        } else {
+            SeqState::Decoding((0..self.heads).map(|_| PooledFenwickState::new(self.dk, self.dv)).collect())
+        });
         self.reserved[idx] = need;
         Ok(SeqSlot(idx))
     }
 
     fn retire(&mut self, slot: SeqSlot) {
-        let mut seq = self.slots[slot.0].take().expect("retire of free slot");
-        seq.release(&mut self.pool);
+        match self.slots[slot.0].take().expect("retire of free slot") {
+            SeqState::Prefilling(_) => {} // engine states live outside the pool
+            SeqState::Decoding(seqs) => {
+                for mut seq in seqs {
+                    seq.release(&mut self.pool);
+                }
+            }
+        }
         self.reserved_total -= self.reserved[slot.0];
         self.reserved[slot.0] = 0;
         self.free_slots.push(slot.0);
+    }
+
+    fn prefill_chunk_size(&self) -> usize {
+        self.prefill_chunk
+    }
+
+    fn prefill_chunk(&mut self, slot: SeqSlot, tokens: &[i32], pos: usize) -> Result<()> {
+        let c = self.prefill_chunk;
+        if c == 0 {
+            bail!("chunked prefill disabled on this backend");
+        }
+        if tokens.len() != c {
+            bail!("prefill chunk must be exactly {c} tokens, got {}", tokens.len());
+        }
+        let (heads, dk, dv, vocab) = (self.heads, self.dk, self.dv, self.vocab);
+        // per-token gates from the shared schedule — the same source the
+        // decode step reads
+        self.alpha_buf.clear();
+        self.alpha_buf.extend((0..c).map(|j| self.gates.alpha(pos + j)));
+        // stacked per-head (k, v) for the chunk: (H, C, dk) / (H, C, dv),
+        // gathered into persistent workspaces (this is the serving hot
+        // path — no steady-state allocation)
+        self.kc_buf.clear();
+        self.vc_buf.clear();
+        for h in 0..heads {
+            for &tok in tokens {
+                let ti = tok_index(tok, vocab);
+                self.kc_buf.extend_from_slice(self.ek[h].row(ti));
+                self.vc_buf.extend_from_slice(self.ev[h].row(ti));
+            }
+        }
+        debug_assert_eq!(self.kc_buf.len(), heads * c * dk);
+        debug_assert_eq!(self.vc_buf.len(), heads * c * dv);
+        let state = self.slots[slot.0].as_mut().expect("prefill of free slot");
+        let SeqState::Prefilling(eng) = state else {
+            bail!("prefill_chunk after decode began");
+        };
+        if eng.tokens() != pos {
+            bail!("prefill position desync: engine at {}, chunk at {pos}", eng.tokens());
+        }
+        eng.ingest_chunk_mamba2(&self.kc_buf, &self.vc_buf, &self.alpha_buf, None);
+        Ok(())
     }
 
     fn step(&mut self, _bucket: usize, rows: &[(SeqSlot, i32, i32)]) -> Result<Vec<f32>> {
@@ -291,47 +475,74 @@ impl DecodeBackend for PooledBackend {
         if n == 0 {
             return Ok(Vec::new());
         }
-        let (dv, vocab) = (self.dv, self.vocab);
-        // 1) per-sequence state update (merge + decay + write)
+        let (heads, dv, vocab) = (self.heads, self.dv, self.vocab);
+        // 0) rows arriving from chunked prefill flip to pooled decode
+        //    states via the export bridge
+        for &(slot, _, _) in rows {
+            self.ensure_decoding(slot)?;
+        }
+        // 1) per-(sequence, head) state update (merge + decay + write)
         for &(slot, tok, pos) in rows {
-            let t = tok_index(tok, vocab);
-            let k = self.ek.row(t);
-            let v = self.ev.row(t);
-            let seq = self.slots[slot.0].as_mut().expect("live slot");
-            debug_assert_eq!(seq.t as i32, pos, "position desync");
-            if seq
-                .advance(&mut self.pool, k, v, 1.0, Transition::Decay(self.alpha))
-                .is_err()
-            {
-                // unreachable under admission reservation; surface loudly
-                bail!("state pool exhausted mid-step (reservation bug?)");
+            let ti = tok_index(tok, vocab);
+            let alpha = self.gates.alpha(pos as usize);
+            let state = self.slots[slot.0].as_mut().expect("live slot");
+            let SeqState::Decoding(seqs) = state else { unreachable!("ensured above") };
+            for (h, seq) in seqs.iter_mut().enumerate() {
+                debug_assert_eq!(seq.t as i32, pos, "position desync (head {h})");
+                if seq
+                    .advance(&mut self.pool, self.ek[h].row(ti), self.ev[h].row(ti), 1.0, Transition::Decay(alpha))
+                    .is_err()
+                {
+                    // unreachable under admission reservation; surface loudly
+                    bail!("state pool exhausted mid-step (reservation bug?)");
+                }
             }
         }
-        // 2) the batched read: every live level of every sequence in the
-        //    batch, one fused block-sparse GEMM over the pool slab
+        // 2) the batched read: every live level of every (sequence, head)
+        //    in the batch, one fused block-sparse GEMM over the pool slab.
+        //    Entry order (seq-major, head-minor) makes o_buf row-major
+        //    (n, H·dv) — the logits GEMM's left operand, no reshuffle.
         self.q_buf.clear();
         for &(_, tok, _) in rows {
-            let row = self.eq.row(tok_index(tok, vocab));
-            self.q_buf.extend_from_slice(row);
+            let ti = tok_index(tok, vocab);
+            for h in 0..heads {
+                self.q_buf.extend_from_slice(self.eq[h].row(ti));
+            }
         }
         self.o_buf.clear();
-        self.o_buf.resize(n * dv, 0.0);
+        self.o_buf.resize(n * heads * dv, 0.0);
         {
-            let seqs: Vec<&PooledFenwickState> = rows
-                .iter()
-                .map(|&(slot, _, _)| self.slots[slot.0].as_ref().expect("live slot"))
-                .collect();
-            let lambdas: Vec<&[f32]> = vec![&self.lambda[..]; n];
+            let mut seq_refs: Vec<&PooledFenwickState> = Vec::with_capacity(n * heads);
+            let mut lambdas: Vec<&[f32]> = Vec::with_capacity(n * heads);
+            for &(slot, _, pos) in rows {
+                let Some(SeqState::Decoding(seqs)) = self.slots[slot.0].as_ref() else {
+                    unreachable!("ensured above")
+                };
+                let lam = self.gates.lambda(pos as usize);
+                for seq in seqs {
+                    seq_refs.push(seq);
+                    lambdas.push(lam);
+                }
+            }
             self.dec
-                .read_batch(&self.pool, &seqs, &self.q_buf, &lambdas, &mut self.o_buf);
+                .read_batch(&self.pool, &seq_refs, &self.q_buf, &lambdas, &mut self.o_buf);
         }
-        // 3) whole-batch logits in one GEMM: (n, dv) @ (vocab, dv)^T
+        // 3) whole-batch logits in one GEMM: (n, H·dv) @ (vocab, H·dv)^T
         let mut logits = vec![0.0f32; n * vocab];
-        tensor::gemm_nt_into(n, dv, vocab, &self.o_buf, &self.wo.data, &mut logits, false);
+        tensor::gemm_nt_into(n, heads * dv, vocab, &self.o_buf, &self.wo.data, &mut logits, false);
         Ok(logits)
     }
 
     fn state_bytes(&self) -> usize {
-        self.pool.in_use() * self.pool.block_elems() * 4
+        let prefill: usize = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|s| match s {
+                SeqState::Prefilling(eng) => eng.state_bytes(),
+                SeqState::Decoding(_) => 0,
+            })
+            .sum();
+        self.pool.in_use() * self.pool.block_elems() * 4 + prefill
     }
 }

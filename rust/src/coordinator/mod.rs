@@ -19,15 +19,19 @@
 //!   ([`crate::state::pooled::BatchedDecoder`] — the decode-time
 //!   analogue of the chunkwise trainer's `read_levels_into`), and pool
 //!   exhaustion surfaces as admission backpressure instead of OOM:
-//!   admission reserves `blocks_for_steps(max_steps)` blocks per
+//!   admission reserves `heads · blocks_for_steps(max_steps)` blocks per
 //!   sequence and requests wait in the FIFO queue while the pool is
-//!   committed.
+//!   committed. Prompts ingest **chunkwise** through per-sequence
+//!   head-batched [`crate::prefill::PrefillEngine`]s
+//!   ([`backend::DecodeBackend::prefill_chunk`]) and flip into pool
+//!   blocks via the export bridge on their first decode row.
 //! - [`server`]: the engine loop — admits (honoring backpressure),
-//!   schedules round-robin through the batch policy's bucket, samples
+//!   advances one prefill chunk per still-prefilling prompt, schedules
+//!   decode rows round-robin through the batch policy's bucket, samples
 //!   greedily, retires finished sequences, and *honors the batcher's
 //!   hold* (when [`batcher::BatchPolicy::plan`] says wait for a fuller
-//!   bucket, the engine waits — bounded by `max_wait` — rather than
-//!   running padded buckets).
+//!   bucket, the decode batch waits — bounded by `max_wait` — rather than
+//!   running padded buckets; prefill chunks proceed regardless).
 //!
 //! Rust owns the event loop, queueing, metrics, and memory accounting;
 //! Python never runs at serve time.

@@ -9,10 +9,19 @@
 //! `coordinator::backend`).
 //!
 //! Scheduling properties (regression-tested below):
-//! - **Round-robin fairness**: the running list rotates by the number of
-//!   processed survivors each step, so when `ready > bucket` the tail
-//!   advances on the next step instead of starving behind a fixed
-//!   prefix.
+//! - **Chunked prefill interleaves with decode**: when the backend has a
+//!   chunkwise prefill path ([`DecodeBackend::prefill_chunk_size`] > 0),
+//!   a sequence whose remaining prompt still holds a full chunk (plus the
+//!   final token the decode step needs) advances **one chunk per engine
+//!   step** through [`DecodeBackend::prefill_chunk`] — state-only, off
+//!   the decode bucket — while the running decode rows step in the same
+//!   loop iteration. A long prompt therefore cannot starve in-flight
+//!   decode rows, and decode traffic cannot stall prompt ingestion. The
+//!   sub-chunk prompt tail (and the final prompt token, whose logits seed
+//!   sampling) feed through the decode step as before.
+//! - **Round-robin fairness**: processed survivors go to the back of the
+//!   running list each step, so when `ready > bucket` the tail advances
+//!   on the next step instead of starving behind a fixed prefix.
 //! - **The batch policy's hold is honored**: when
 //!   [`BatchPolicy::plan`](super::batcher::BatchPolicy::plan) says wait
 //!   for a fuller bucket, the engine *waits* (bounded by `max_wait` via
@@ -46,7 +55,12 @@ struct Seq {
     slot: SeqSlot,
     max_new: usize,
     submitted: Instant,
+    /// engine advances: prefill chunks + decode rows (reported in results)
     steps: usize,
+    /// decode rows only — the "is a batch mid-generation" signal the
+    /// batcher's hold logic keys on (prefill chunks must NOT defeat the
+    /// hold: a prompt streaming chunks is not a running decode batch)
+    decode_steps: usize,
 }
 
 impl Seq {
@@ -76,6 +90,11 @@ pub struct ServerStats {
     pub batch_occupancy: Vec<f64>,
     pub completed: usize,
     pub peak_state_bytes: usize,
+    /// prompt chunks ingested through the chunkwise prefill path
+    pub prefill_chunks: usize,
+    /// prompt tokens those chunks covered (not counted in
+    /// `tokens_processed`, which tracks decode-step rows)
+    pub prefill_tokens: usize,
 }
 
 impl ServerStats {
@@ -218,25 +237,76 @@ impl<B: DecodeBackend> DecodeServer<B> {
                 max_new: req.max_new,
                 submitted,
                 steps: 0,
+                decode_steps: 0,
             });
         }
         Ok(())
     }
 
-    /// Run one engine iteration; returns how many sequences advanced
-    /// (0 while the batcher holds out for a fuller bucket).
+    /// Still at least one full prefill chunk (plus the final prompt token
+    /// the decode step needs for sampling) ahead of this sequence?
+    fn mid_prefill(seq: &Seq, chunk: usize) -> bool {
+        chunk > 0 && seq.pos % chunk == 0 && seq.pos + chunk < seq.prompt.len()
+    }
+
+    /// Run one engine iteration; returns how many sequences advanced —
+    /// decode rows plus prefill chunks (0 while the batcher holds out for
+    /// a fuller bucket and no prompt is mid-prefill).
     pub fn step(&mut self) -> Result<usize> {
         self.admit()?;
-        let ready = self.running.len();
+
+        // ---- chunked prefill pass: every sequence still a full chunk
+        // away from its last prompt token ingests one chunk, state-only.
+        // These don't occupy the decode bucket, so a long prompt and the
+        // running decode rows advance in the same engine iteration.
+        let chunk = self.backend.prefill_chunk_size();
+        let mut prefilled = 0usize;
+        if chunk > 0 {
+            let jobs: Vec<(usize, SeqSlot, usize, Vec<i32>)> = self
+                .running
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| Self::mid_prefill(s, chunk))
+                .map(|(i, s)| (i, s.slot, s.pos, s.prompt[s.pos..s.pos + chunk].to_vec()))
+                .collect();
+            for (i, slot, pos, tokens) in jobs {
+                self.backend.prefill_chunk(slot, &tokens, pos)?;
+                let seq = &mut self.running[i];
+                seq.pos += chunk;
+                seq.steps += 1;
+                prefilled += 1;
+                self.stats.prefill_chunks += 1;
+                self.stats.prefill_tokens += chunk;
+            }
+            // prefill-engine states live outside the pool; sample the peak
+            // here too, since a held/prefill-only iteration exits early
+            if prefilled > 0 {
+                self.stats.peak_state_bytes =
+                    self.stats.peak_state_bytes.max(self.backend.state_bytes());
+            }
+        }
+
+        // ---- decode pass over everything past its prefill chunks
+        let decode_idx: Vec<usize> = self
+            .running
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !Self::mid_prefill(s, chunk))
+            .map(|(i, _)| i)
+            .collect();
+        let ready = decode_idx.len();
         // the hold clock: how long runnable work has been waiting — the
         // queue's oldest age while queued, the hold timer once admitted
         let held = self.hold_since.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
         let waited = self.queue.oldest_age().max(held);
-        // a hold only ever applies to a *fresh* batch (nothing stepped
-        // yet): once any sequence is mid-generation, stalling it for
-        // max_wait on every plan refusal — or on every new arrival —
-        // would collapse decode throughput to one step per max_wait
-        let in_flight = self.running.iter().any(|s| s.steps > 0);
+        // a hold only ever applies to a *fresh* batch (no decode row
+        // executed yet): once any sequence is mid-generation, stalling it
+        // for max_wait on every plan refusal — or on every new arrival —
+        // would collapse decode throughput to one step per max_wait.
+        // Prefill chunks deliberately don't count: a prompt streaming
+        // chunks is not a running decode batch, so the hold still gets to
+        // gather a fuller first bucket while long prompts ingest.
+        let in_flight = self.running.iter().any(|s| s.decode_steps > 0);
         let bucket = match self.policy.plan(ready, waited) {
             Some(b) => {
                 self.hold_since = None;
@@ -247,7 +317,7 @@ impl<B: DecodeBackend> DecodeServer<B> {
                 // force expired-hold planning: smallest covering bucket
                 match self.policy.plan(ready, self.policy.max_wait) {
                     Some(b) => b,
-                    None => return Ok(0), // unreachable: expired plan with ready > 0 is Some
+                    None => return Ok(prefilled), // unreachable: expired plan with ready > 0 is Some
                 }
             }
             None => {
@@ -256,16 +326,21 @@ impl<B: DecodeBackend> DecodeServer<B> {
                     // plan() will release it
                     self.hold_since = Some(Instant::now());
                 }
-                return Ok(0);
+                return Ok(prefilled);
             }
         };
         let n = ready.min(bucket);
 
-        // gather the scheduling prefix (the list is rotated after each
-        // step, so over consecutive steps this round-robins the batch)
-        let rows: Vec<(SeqSlot, i32, i32)> = self.running[..n]
+        // gather the scheduling prefix of the decode-ready list
+        // (processed survivors go to the back after each step, so over
+        // consecutive steps this round-robins the batch)
+        let sched: Vec<usize> = decode_idx[..n].to_vec();
+        let rows: Vec<(SeqSlot, i32, i32)> = sched
             .iter()
-            .map(|s| (s.slot, s.next_token(), s.pos as i32))
+            .map(|&i| {
+                let s = &self.running[i];
+                (s.slot, s.next_token(), s.pos as i32)
+            })
             .collect();
 
         // execute
@@ -275,22 +350,31 @@ impl<B: DecodeBackend> DecodeServer<B> {
 
         // sample + advance
         let vocab = logits.len() / n;
-        for i in 0..n {
+        for (j, &i) in sched.iter().enumerate() {
             let seq = &mut self.running[i];
             seq.pos += 1;
             seq.steps += 1;
-            // still prefilling? only sample once the prompt is consumed
+            seq.decode_steps += 1;
+            // still feeding prompt? only sample once the prompt is consumed
             if seq.pos >= seq.prompt.len() {
-                let row = &logits[i * vocab..(i + 1) * vocab];
+                let row = &logits[j * vocab..(j + 1) * vocab];
                 let tok = crate::tensor::ops::argmax(row) as i32;
                 seq.generated.push(tok);
             }
         }
-        // retire finished sequences, preserving scheduling order
-        let mut retired = 0;
-        for i in (0..n).rev() {
-            if self.running[i].done() {
-                let seq = self.running.remove(i);
+        // retire finished sequences and move processed survivors to the
+        // back (so the unprocessed tail leads the next step) in one O(R)
+        // compaction pass — no per-row Vec::remove shifting
+        let mut scheduled = vec![false; self.running.len()];
+        for &i in &sched {
+            scheduled[i] = true;
+        }
+        let old = std::mem::take(&mut self.running);
+        let mut processed_survivors: Vec<Seq> = Vec::with_capacity(n);
+        for (i, seq) in old.into_iter().enumerate() {
+            if !scheduled[i] {
+                self.running.push(seq);
+            } else if seq.done() {
                 self.backend.retire(seq.slot);
                 self.finished.push(GenResult {
                     id: seq.id,
@@ -299,23 +383,18 @@ impl<B: DecodeBackend> DecodeServer<B> {
                     steps: seq.steps,
                 });
                 self.stats.completed += 1;
-                retired += 1;
+            } else {
+                processed_survivors.push(seq);
             }
         }
-        // round-robin: surviving processed sequences go to the back so
-        // the unprocessed tail leads the next step
-        let kept = n - retired;
-        if !self.running.is_empty() && kept > 0 {
-            let len = self.running.len();
-            self.running.rotate_left(kept % len);
-        }
+        self.running.extend(processed_survivors);
 
         self.stats.steps += 1;
         self.stats.tokens_processed += n;
         self.stats.step_seconds.push(dt);
         self.stats.batch_occupancy.push(n as f64 / bucket as f64);
         self.stats.peak_state_bytes = self.stats.peak_state_bytes.max(self.backend.state_bytes());
-        Ok(n)
+        Ok(n + prefilled)
     }
 
     /// Drive until all submitted work completes; returns the results.
@@ -450,6 +529,48 @@ mod tests {
     }
 
     #[test]
+    fn prefill_chunks_do_not_defeat_the_batchers_hold() {
+        // Long prompts stream prefill chunks while the batcher holds for
+        // a fuller bucket. Prefill steps are not decode progress, so the
+        // hold must survive them (a regression here would re-introduce
+        // the padded-bucket eagerness the hold exists to prevent), and
+        // the first decode batch runs only once the bucket fills.
+        let backend = PooledBackend::with_config(64, 1, 8, 8, 4, 512, 7);
+        let mut srv = DecodeServer::with_backend(
+            backend,
+            BatchPolicy::new(vec![1, 4, 8], Duration::from_secs(5)),
+        );
+        for id in 0..3 {
+            srv.submit(req(id, 10, 2)).unwrap(); // 2 chunks + a 2-token tail
+        }
+        assert_eq!(srv.step().unwrap(), 3, "chunk 1 of each prompt");
+        assert_eq!(srv.step().unwrap(), 3, "chunk 2; decode now holds at 3/8");
+        assert_eq!(srv.stats.steps, 0, "held decode batch must not have run");
+        assert_eq!(
+            srv.step().unwrap(),
+            0,
+            "prefill steps must not arm in_flight and break the hold"
+        );
+        assert_eq!(srv.stats.steps, 0);
+        // five more arrivals prefill, then fill the bucket: the first
+        // decode batch runs full
+        for id in 3..8 {
+            srv.submit(req(id, 10, 2)).unwrap();
+        }
+        let results = srv.run_to_completion().unwrap();
+        assert_eq!(results.len(), 8);
+        assert!(
+            srv.stats.batch_occupancy.iter().all(|&o| o == 1.0),
+            "held server should only run full decode buckets: {:?}",
+            srv.stats.batch_occupancy
+        );
+        for r in &results {
+            assert_eq!(r.tokens.len(), 2, "req {}", r.id);
+            assert_eq!(r.steps, 2 + 3, "req {}: 2 chunks + 3 decode rows", r.id);
+        }
+    }
+
+    #[test]
     fn lone_request_still_completes_after_max_wait() {
         // the hold is bounded: a single request must not wait forever
         let mut srv = pooled_server(64, vec![1, 4], Duration::from_millis(2));
@@ -520,6 +641,91 @@ mod tests {
         for r in &results {
             assert_eq!(r.tokens.len(), 2, "req {}", r.id);
         }
+    }
+
+    #[test]
+    fn long_prefill_interleaves_with_decode_rows() {
+        // One long prompt (4 full chunks of 8 + a 3-token tail) next to
+        // three short decoding requests: every engine step must advance
+        // BOTH the prefill (exactly one chunk) and every decode row —
+        // chunked prefill may not starve in-flight decode, and decode may
+        // not stall prompt ingestion.
+        let backend = PooledBackend::with_config(64, 2, 8, 8, 8, 512, 11);
+        let mut srv =
+            DecodeServer::with_backend(backend, BatchPolicy::new(vec![4], Duration::ZERO));
+        srv.submit(req(0, 8 * 4 + 3, 2)).unwrap();
+        for id in 1..4 {
+            srv.submit(req(id, 2, 12)).unwrap();
+        }
+        for step in 1..=3usize {
+            srv.step().unwrap();
+            let prog = srv.running_progress();
+            let &(_, pos0, _) = prog.iter().find(|(id, _, _)| *id == 0).unwrap();
+            assert_eq!(pos0, 8 * step, "prefill must advance one chunk per engine step");
+            for &(id, pos, steps) in &prog {
+                if id != 0 {
+                    assert_eq!(steps, step, "decode seq {id} starved at step {step} (pos {pos})");
+                }
+            }
+            assert_eq!(srv.backend().prefilling(), 1, "id 0 still mid-prefill");
+        }
+        // step 4: the last chunk ingests (pos 24 → 32), after which the
+        // tail no longer holds a full chunk, so id 0 joins the decode
+        // batch in the same iteration (pos 32 → 33) and flips to pooled
+        // decode states via the export bridge
+        srv.step().unwrap();
+        let prog = srv.running_progress();
+        let &(_, pos0, _) = prog.iter().find(|(id, _, _)| *id == 0).unwrap();
+        assert_eq!(pos0, 33, "tail decode must start the moment chunks are exhausted");
+        assert_eq!(srv.backend().prefilling(), 0, "export bridge must have run");
+        assert_eq!(srv.stats.prefill_chunks, 4);
+        assert_eq!(srv.stats.prefill_tokens, 32);
+
+        let results = DecodeServer::<PooledBackend>::results_by_id(srv.run_to_completion().unwrap());
+        assert_eq!(results.len(), 4);
+        assert_eq!(results[&0].tokens.len(), 2);
+        // 4 chunk-steps + 4 decode rows (tail 32/33/34 + one feedback)
+        assert_eq!(results[&0].steps, 4 + 4, "req 0 step accounting");
+        for id in 1..4u64 {
+            assert_eq!(results[&id].tokens.len(), 12, "req {id}");
+            assert_eq!(results[&id].steps, 2 + 12 - 1, "req {id}");
+        }
+        assert_eq!(srv.backend().pool().in_use(), 0, "retirement leaked pool blocks");
+    }
+
+    #[test]
+    fn chunked_prefill_is_deterministic_across_batch_schedules_with_per_token_gates() {
+        // Multi-head + chunked prefill + a per-token α/λ schedule: the
+        // same request decoded alone and inside a batch of 8 must yield
+        // identical tokens (prefill GEMMs are per-sequence, the batched
+        // read is bit-exact, and both paths read one GateTable).
+        use crate::state::GateTable;
+        use crate::tensor::Mat;
+        use crate::util::Rng;
+        let gates = || {
+            let mut grng = Rng::new(0x6A7E);
+            let alpha: Vec<f32> = (0..64).map(|_| grng.range_f32(0.9, 1.0)).collect();
+            let lambda = Mat::rand_uniform(64, 8, 0.05, 1.0, &mut grng);
+            GateTable::per_token(alpha, lambda)
+        };
+        let server = |buckets: Vec<usize>| {
+            let mut backend = PooledBackend::with_config(64, 2, 8, 8, 4, 512, 7);
+            backend.set_gates(gates());
+            DecodeServer::with_backend(backend, BatchPolicy::new(buckets, Duration::ZERO))
+        };
+        let solo_tokens = {
+            let mut srv = server(vec![1]);
+            srv.submit(req(3, 11, 5)).unwrap(); // 2 chunks + 3-token tail
+            let results = srv.run_to_completion().unwrap();
+            results.into_iter().next().unwrap().tokens
+        };
+        let mut srv = server(vec![8]);
+        for id in 0..8 {
+            srv.submit(req(id, 11, 5)).unwrap();
+        }
+        let results = DecodeServer::<PooledBackend>::results_by_id(srv.run_to_completion().unwrap());
+        assert_eq!(results[&3].tokens, solo_tokens, "batching changed a prefilled decode");
+        assert!(srv.stats.prefill_chunks > 0, "prompts this long must prefill chunkwise");
     }
 
     #[test]

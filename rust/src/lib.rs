@@ -11,6 +11,9 @@
 //!   parallel, and chunkwise forms — the correctness oracles and the CPU
 //!   performance substrate for the paper's benchmarks,
 //! - [`state`] — the `O(log T)` Fenwick state manager used at decode time,
+//! - [`prefill`] — the chunkwise prompt-ingestion subsystem: head-batched
+//!   `O(T log T)` prefill engines plus the state-export bridge into the
+//!   pooled decode path,
 //! - [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust,
 //! - [`coordinator`] — the serving coordinator (router, dynamic batcher,
@@ -30,6 +33,7 @@ pub mod fenwick;
 pub mod hmatrix;
 pub mod attention;
 pub mod state;
+pub mod prefill;
 pub mod runtime;
 pub mod coordinator;
 pub mod data;

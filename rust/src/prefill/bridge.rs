@@ -1,0 +1,329 @@
+//! The state-export bridge: chunk-granularity Fenwick hierarchies →
+//! pool-backed token-granularity decode states.
+//!
+//! Why this is exact (and not an approximation): after `z` chunks of size
+//! `C = 2^lc`, a chunk-level bucket `m ≥ 1` summarizes chunks
+//! `[b − 2^{m-1}, b)` — exactly the tokens of the token-level `lc + m`
+//! bucket in the Fenwick partition of `t = z·C`. And at the *post-merge
+//! boundary* of token step `t` (the merge of step `t` performed, the
+//! sentinel not yet written), the token machine's live levels are exactly
+//! `{l + 1 : bit l of t set}` = `{lc + m : bit (m−1) of z set}` — the
+//! chunk hierarchy's live levels after
+//! [`ChunkFenwick::advance`]`(z)`, relabeled. So export is: merge the
+//! chunk sentinel (`advance(z)` / [`PrefillEngine::finish`]), copy each
+//! live chunk-level state into a pool block at token level `lc + m`, set
+//! `t = z·C`. The next [`PooledFenwickState::advance`] performs a no-op
+//! merge (all levels `≤ lssb(t)` are empty) and proceeds exactly like the
+//! token recurrence — no special decode-side casing.
+//!
+//! Decay bookkeeping also lines up: the chunkwise engines apply each
+//! chunk's transition to carried states at the end of the chunk, so an
+//! exported state carries transitions through token `t − 1`, which is
+//! what the token machine's state holds between steps `t − 1` and `t`.
+//!
+//! Content equality is within the chunkwise tolerance (the chunk state
+//! write reorders the same sum of decayed outer products into GEMMs);
+//! layout equality is asserted hard by
+//! [`PooledFenwickState::import_levels`]. The tests below prove the
+//! acceptance property: a sequence prefilled through the bridge, then
+//! decoded token-by-token, matches the [`FenwickState`]
+//! (`crate::state::FenwickState`) oracle that ingested every token
+//! recurrently.
+
+use crate::attention::loglinear::ChunkFenwick;
+use crate::prefill::engine::PrefillEngine;
+use crate::state::pool::StatePool;
+use crate::state::pooled::{PoolExhausted, PooledFenwickState};
+
+/// Export a single-head [`ChunkFenwick`] hierarchy at the `chunks`-chunk
+/// boundary into a pool-backed decode state at token position
+/// `t = chunks · chunk_size`. The engine must be post-`advance(chunks)`
+/// (chunk sentinel merged). Fails without touching the pool if it cannot
+/// hold the live states.
+pub fn export_chunk_fenwick(
+    eng: &ChunkFenwick,
+    chunks: usize,
+    chunk_size: usize,
+    dk: usize,
+    dv: usize,
+    pool: &mut StatePool,
+) -> Result<PooledFenwickState, PoolExhausted> {
+    assert!(chunk_size >= 1 && chunk_size.is_power_of_two(), "chunk size must be a power of two");
+    assert!(
+        !eng.has_level0(),
+        "export requires the chunk sentinel merged: call advance(chunks) first"
+    );
+    let (edk, edv) = eng.state_dims();
+    if edk != 0 {
+        assert_eq!((edk, edv), (dk, dv), "state shape mismatch");
+    }
+    let lc = chunk_size.trailing_zeros() as usize;
+    let states: Vec<(usize, &[f32])> = eng.active().map(|(m, s)| (lc + m, &s.data[..])).collect();
+    assert_eq!(
+        states.len(),
+        chunks.count_ones() as usize,
+        "live chunk levels must cover every bucket of the partition of {chunks} chunks"
+    );
+    PooledFenwickState::import_levels(pool, dk, dv, chunks << lc, &states)
+}
+
+/// Export one head of a finished [`PrefillEngine`] into a pool-backed
+/// decode state at token position `engine.tokens()`. Fails without
+/// touching the pool if it cannot hold the live states.
+pub fn export_prefill_head(
+    eng: &PrefillEngine,
+    head: usize,
+    pool: &mut StatePool,
+) -> Result<PooledFenwickState, PoolExhausted> {
+    let (dk, dv) = eng.state_dims();
+    let states = eng.export_head(head);
+    assert_eq!(
+        states.len(),
+        eng.chunks().count_ones() as usize,
+        "live levels must cover every bucket of the partition of {} chunks",
+        eng.chunks()
+    );
+    PooledFenwickState::import_levels(pool, dk, dv, eng.tokens(), &states)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttnInputs;
+    use crate::prefill::engine::PrefillEngine;
+    use crate::state::{FenwickState, Transition};
+    use crate::tensor::{self, Mat};
+    use crate::util::Rng;
+
+    /// Single-head Mamba-2 chunk ingestion into a ChunkFenwick (the state
+    /// half of `loglinear_mamba2::chunkwise`), advanced to the boundary.
+    fn ingest_chunks_mamba2(k: &Mat, v: &Mat, alpha: &[f32], c: usize, chunks: usize) -> ChunkFenwick {
+        let (dk, dv) = (k.cols, v.cols);
+        let mut eng = ChunkFenwick::new();
+        let mut wscale = vec![0.0f32; c];
+        for z in 0..chunks {
+            let start = z * c;
+            eng.advance(z);
+            let mut g = vec![0.0f32; c];
+            let mut acc = 1.0f64;
+            for i in 0..c {
+                acc *= alpha[start + i] as f64;
+                g[i] = acc as f32;
+            }
+            let chunk_decay = g[c - 1];
+            for j in 0..c {
+                wscale[j] = chunk_decay / g[j];
+            }
+            let mut w = eng.take_buffer(dk, dv);
+            tensor::gemm_tn_diag_acc(
+                c,
+                dk,
+                dv,
+                &wscale,
+                k.rows_data(start, start + c),
+                v.rows_data(start, start + c),
+                &mut w.data,
+            );
+            eng.apply_transition(|s| s.scale_inplace(chunk_decay));
+            eng.set_level0(w);
+        }
+        eng.advance(chunks);
+        eng
+    }
+
+    /// THE acceptance property: a ChunkFenwick hierarchy exported at an
+    /// arbitrary chunk boundary, then decoded token-by-token through the
+    /// pooled state, matches the FenwickState oracle that ingested every
+    /// token recurrently — within the existing chunkwise tolerance.
+    #[test]
+    fn exported_chunk_fenwick_decodes_like_the_fenwick_oracle() {
+        let mut rng = Rng::new(0xB41D);
+        let (dk, dv, c) = (8usize, 6usize, 8usize);
+        for &chunks in &[1usize, 2, 3, 5, 8, 11] {
+            let t0 = chunks * c; // export position
+            let t_len = t0 + 9; // decode tail after the boundary
+            let x = AttnInputs::random(t_len, dk, dv, &mut rng);
+            let eng = ingest_chunks_mamba2(&x.k, &x.v, &x.alpha, c, chunks);
+
+            let mut pool = StatePool::new(dk * dv, 32);
+            let mut seq = export_chunk_fenwick(&eng, chunks, c, dk, dv, &mut pool).unwrap();
+            assert_eq!(seq.t, t0);
+            assert_eq!(seq.live_states(), chunks.count_ones() as usize);
+
+            // oracle: every token through the recurrent state machine
+            let mut oracle = FenwickState::new(dk, dv);
+            for t in 0..t_len {
+                let o_want = oracle.step(
+                    x.q.row(t),
+                    x.k.row(t),
+                    x.v.row(t),
+                    1.0,
+                    Transition::Decay(x.alpha[t]),
+                    x.lambda.row(t),
+                );
+                if t >= t0 {
+                    let o_got = seq
+                        .step(
+                            &mut pool,
+                            x.q.row(t),
+                            x.k.row(t),
+                            x.v.row(t),
+                            1.0,
+                            Transition::Decay(x.alpha[t]),
+                            x.lambda.row(t),
+                        )
+                        .unwrap();
+                    for j in 0..dv {
+                        assert!(
+                            (o_got[j] - o_want[j]).abs() < 2e-3 + 2e-3 * o_want[j].abs(),
+                            "chunks={chunks} t={t} j={j}: {} vs {}",
+                            o_got[j],
+                            o_want[j]
+                        );
+                    }
+                    assert_eq!(seq.live_states(), oracle.live_states(), "chunks={chunks} t={t}");
+                }
+            }
+            seq.release(&mut pool);
+            assert_eq!(pool.in_use(), 0);
+        }
+    }
+
+    /// Multi-head prefill-vs-oracle equivalence, both variants: full
+    /// chunks through the head-batched engine, the sub-chunk tail
+    /// token-by-token through the pooled state, then a decode tail —
+    /// every post-prefill output matches the per-head FenwickState oracle.
+    #[test]
+    fn prefilled_heads_decode_like_per_head_oracles_both_variants() {
+        let mut rng = Rng::new(0xB42D);
+        let (heads, dk, dv, c) = (2usize, 8usize, 8usize, 8usize);
+        let prompt = 37usize; // 4 full chunks + 5-token tail
+        let decode = 6usize;
+        let t_len = prompt + decode;
+        let shared = AttnInputs::random(t_len, dk, dv, &mut rng); // gates + λ
+        // L2-normalized keys, as everywhere else: keeps the GDN
+        // Householder transitions contractive
+        let ks: Vec<Mat> = (0..heads)
+            .map(|_| {
+                let mut k = Mat::randn(t_len, dk, 1.0, &mut rng);
+                for i in 0..t_len {
+                    let n = crate::tensor::ops::l2_norm(k.row(i)).max(1e-6);
+                    for x in k.row_mut(i) {
+                        *x /= n;
+                    }
+                }
+                k
+            })
+            .collect();
+        let vs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dv, 1.0, &mut rng)).collect();
+        let qs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dk, 1.0, &mut rng)).collect();
+        let nchunks = prompt / c;
+
+        for gdn in [false, true] {
+            // head-batched chunkwise ingestion of the full chunks
+            let mut eng = PrefillEngine::new(heads, dk, dv, c);
+            for z in 0..nchunks {
+                let (s, e) = (z * c, (z + 1) * c);
+                let mut kc = Vec::new();
+                let mut vc = Vec::new();
+                for h in 0..heads {
+                    kc.extend_from_slice(ks[h].rows_data(s, e));
+                    vc.extend_from_slice(vs[h].rows_data(s, e));
+                }
+                if gdn {
+                    eng.ingest_chunk_gdn(&kc, &vc, &shared.alpha[s..e], &shared.beta[s..e]);
+                } else {
+                    eng.ingest_chunk_mamba2(&kc, &vc, &shared.alpha[s..e], None);
+                }
+            }
+            eng.finish();
+            assert_eq!(eng.tokens(), nchunks * c);
+
+            let mut pool = StatePool::new(dk * dv, heads * 16);
+            for h in 0..heads {
+                let mut seq = export_prefill_head(&eng, h, &mut pool).unwrap();
+                let mut oracle = FenwickState::new(dk, dv);
+                for t in 0..t_len {
+                    let (ws, tr_o, tr_p) = if gdn {
+                        (
+                            shared.beta[t],
+                            Transition::GatedHouseholder {
+                                alpha: shared.alpha[t],
+                                beta: shared.beta[t],
+                                k: ks[h].row(t),
+                            },
+                            Transition::GatedHouseholder {
+                                alpha: shared.alpha[t],
+                                beta: shared.beta[t],
+                                k: ks[h].row(t),
+                            },
+                        )
+                    } else {
+                        (1.0, Transition::Decay(shared.alpha[t]), Transition::Decay(shared.alpha[t]))
+                    };
+                    let o_want = oracle.step(
+                        qs[h].row(t),
+                        ks[h].row(t),
+                        vs[h].row(t),
+                        ws,
+                        tr_o,
+                        shared.lambda.row(t),
+                    );
+                    if t >= nchunks * c {
+                        // tail + decode: token steps on the exported state
+                        let o_got = seq
+                            .step(
+                                &mut pool,
+                                qs[h].row(t),
+                                ks[h].row(t),
+                                vs[h].row(t),
+                                ws,
+                                tr_p,
+                                shared.lambda.row(t),
+                            )
+                            .unwrap();
+                        for j in 0..dv {
+                            assert!(
+                                (o_got[j] - o_want[j]).abs() < 2e-3 + 2e-3 * o_want[j].abs(),
+                                "gdn={gdn} head={h} t={t} j={j}: {} vs {}",
+                                o_got[j],
+                                o_want[j]
+                            );
+                        }
+                    }
+                }
+                seq.release(&mut pool);
+            }
+            assert_eq!(pool.in_use(), 0);
+        }
+    }
+
+    #[test]
+    fn export_fails_cleanly_on_pool_exhaustion() {
+        let mut rng = Rng::new(0xB43D);
+        let (dk, dv, c, chunks) = (4usize, 4usize, 4usize, 7usize); // 3 live levels
+        let t_len = chunks * c;
+        let x = AttnInputs::random(t_len, dk, dv, &mut rng);
+        let eng = ingest_chunks_mamba2(&x.k, &x.v, &x.alpha, c, chunks);
+        let mut pool = StatePool::new(dk * dv, 2); // too small for 3 states
+        assert_eq!(
+            export_chunk_fenwick(&eng, chunks, c, dk, dv, &mut pool).unwrap_err(),
+            PoolExhausted
+        );
+        assert_eq!(pool.in_use(), 0, "failed export must not leak blocks");
+        pool.grow(1);
+        let mut seq = export_chunk_fenwick(&eng, chunks, c, dk, dv, &mut pool).unwrap();
+        assert_eq!(pool.in_use(), 3);
+        seq.release(&mut pool);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not live at position")]
+    fn import_rejects_misaligned_levels() {
+        let mut pool = StatePool::new(4, 4);
+        let data = vec![0.0f32; 4];
+        // level 1 requires bit 0 of t set; t = 4 has it clear
+        let _ = PooledFenwickState::import_levels(&mut pool, 2, 2, 4, &[(1, &data[..])]);
+    }
+}

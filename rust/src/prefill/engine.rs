@@ -1,0 +1,534 @@
+//! Head-batched chunkwise prefill engine (state-only Alg. 1).
+//!
+//! [`PrefillEngine`] ingests a prompt one chunk at a time for **H heads
+//! at once**. The level hierarchy itself *is* a
+//! [`crate::attention::loglinear::ChunkFenwick`] — no mirrored merge
+//! skeleton — holding **stacked** states: level `m` is one
+//! `(H·d_k, d_v)` matrix whose rows `h·d_k..(h+1)·d_k` are head `h`'s
+//! bucket state. Stacking is what lets every per-chunk product run
+//! through the batched GEMM dispatch ([`crate::tensor::batch`]) as one
+//! kernel launch covering all heads:
+//!
+//! - state write `S_new^h = K_c^{hT} diag(w) V_c^h` →
+//!   [`crate::tensor::gemm_tn_diag_batch_acc`],
+//! - GDN UT system `K_c^h K_c^{hT}` → [`crate::tensor::gemm_nt_batch_into`],
+//! - GDN carried-state transition `Φ^h S^h` and the optional level read
+//!   `Q_c^h S_cat^h` → [`crate::tensor::gemm_batch_into`].
+//!
+//! Per head and chunk, the op sequences mirror the single-head chunkwise
+//! reference paths (`loglinear_mamba2::chunkwise` /
+//! `loglinear_gdn::chunkwise` state halves), so exported per-head states
+//! match the per-head engines bit-for-bit on the Mamba-2 path and within
+//! solver tolerance on the GDN path (the UT solve here is an in-place
+//! forward substitution).
+//!
+//! The engine is **state-only**: serving prefill never needs prompt
+//! logits (the final prompt token is fed through the decode step, which
+//! samples the first generated token), so ingestion skips intra-chunk
+//! attention and level reads entirely. The head-batched `Q_c S_cat` read
+//! is still available via [`LevelRead`] on the Mamba-2 path — the seam
+//! for prompt scoring (per-token log-probs) — and covers the inter-chunk
+//! contribution only.
+//!
+//! Gates (`α`, `β`, λ) are shared across heads, matching the pooled
+//! backend's [`crate::state::GateTable`]; per-head gate tables would only
+//! change the bookkeeping, not the batched GEMM structure.
+
+use crate::attention::deltanet::apply_householder_slice;
+use crate::attention::loglinear::ChunkFenwick;
+use crate::tensor::{self, Mat};
+
+/// Optional inter-chunk level read riding along a Mamba-2 ingest: one
+/// head-batched `Q_c S_cat` GEMM over the pre-transition level states,
+/// λ·decay-folded into `out`.
+pub struct LevelRead<'a> {
+    /// stacked queries `(H, C, d_k)`, head-major row-major
+    pub qs: &'a [f32],
+    /// λ lookup `(chunk-local row, token level) → weight` (token level =
+    /// `log2(C) + chunk level`; the engine folds the intra-chunk
+    /// cumulative decay in itself)
+    pub lambda: &'a dyn Fn(usize, usize) -> f32,
+    /// stacked outputs `(H, C, d_v)`, accumulated into
+    pub out: &'a mut [f32],
+}
+
+/// Multi-head chunk-granularity Fenwick state builder (see module docs).
+#[derive(Debug)]
+pub struct PrefillEngine {
+    heads: usize,
+    dk: usize,
+    dv: usize,
+    chunk: usize,
+    /// chunks ingested so far
+    z: usize,
+    /// sealed by [`PrefillEngine::finish`]: level 0 merged, exportable
+    finished: bool,
+    /// the shared chunk-granularity hierarchy, holding stacked
+    /// `(H·d_k, d_v)` states (head `h` = rows `h·d_k..(h+1)·d_k`)
+    fen: ChunkFenwick,
+    /// stacked scratch for the batched `Φ S` transition swap
+    scratch: Mat,
+    // ---- workspaces (reused across chunks; no steady-state allocation)
+    g: Vec<f32>,
+    wscale: Vec<f32>,
+    cat: Vec<f32>,
+    read_buf: Vec<f32>,
+    active_ids: Vec<usize>,
+    sys: Vec<f32>,
+    what: Vec<f32>,
+    phi: Vec<f32>,
+}
+
+impl PrefillEngine {
+    pub fn new(heads: usize, dk: usize, dv: usize, chunk: usize) -> PrefillEngine {
+        assert!(heads >= 1 && dk >= 1 && dv >= 1);
+        assert!(chunk >= 1 && chunk.is_power_of_two(), "chunk size must be a power of two");
+        PrefillEngine {
+            heads,
+            dk,
+            dv,
+            chunk,
+            z: 0,
+            finished: false,
+            fen: ChunkFenwick::new(),
+            scratch: Mat::zeros(heads * dk, dv),
+            g: Vec::new(),
+            wscale: Vec::new(),
+            cat: Vec::new(),
+            read_buf: Vec::new(),
+            active_ids: Vec::new(),
+            sys: Vec::new(),
+            what: Vec::new(),
+            phi: Vec::new(),
+        }
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    /// State shape per head.
+    pub fn state_dims(&self) -> (usize, usize) {
+        (self.dk, self.dv)
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.chunk
+    }
+
+    /// Chunks ingested so far.
+    pub fn chunks(&self) -> usize {
+        self.z
+    }
+
+    /// Tokens ingested so far (`chunks · chunk_size`).
+    pub fn tokens(&self) -> usize {
+        self.z * self.chunk
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Live stacked level states (`popcount(z)` after finish).
+    pub fn live_states(&self) -> usize {
+        self.fen.live_states()
+    }
+
+    /// Resident bytes: live stacked states plus the transition scratch.
+    pub fn state_bytes(&self) -> usize {
+        (self.fen.live_states() * self.heads * self.dk * self.dv + self.scratch.data.len()) * 4
+    }
+
+    /// Intra-chunk cumulative decays `g[i] = Π_{j<=i} α_j` into `self.g`
+    /// (f64 accumulator, matching the chunkwise reference paths).
+    fn fill_decays(&mut self, alpha: &[f32]) {
+        self.g.clear();
+        let mut acc = 1.0f64;
+        for &a in alpha {
+            acc *= a as f64;
+            self.g.push(acc as f32);
+        }
+    }
+
+    /// `wscale = H copies of [w_c / g[0], …, w_c / g[C-1]]` — the
+    /// per-token write weights, repeated per head for the batched
+    /// `K^T diag(w) V` kernel.
+    fn fill_wscale(&mut self, chunk_decay: f32) {
+        self.wscale.clear();
+        for _ in 0..self.heads {
+            for &gj in &self.g {
+                self.wscale.push(chunk_decay / gj);
+            }
+        }
+    }
+
+    /// Ingest one full chunk for every head under the Mamba-2 (scalar
+    /// decay) transition. `ks` is `(H, C, d_k)` and `vs` `(H, C, d_v)`,
+    /// head-major row-major; `alpha` the chunk's `C` per-token decay
+    /// gates (shared across heads). Pass [`LevelRead`] to also read the
+    /// chunk's inter-chunk contribution (one head-batched `Q_c S_cat`
+    /// GEMM over the pre-transition states).
+    pub fn ingest_chunk_mamba2(
+        &mut self,
+        ks: &[f32],
+        vs: &[f32],
+        alpha: &[f32],
+        read: Option<LevelRead<'_>>,
+    ) {
+        assert!(!self.finished, "ingest after finish()");
+        let (h, c, dk, dv) = (self.heads, self.chunk, self.dk, self.dv);
+        assert_eq!(alpha.len(), c, "alpha shape");
+        assert_eq!(ks.len(), h * c * dk, "ks shape");
+        assert_eq!(vs.len(), h * c * dv, "vs shape");
+        self.fen.advance(self.z);
+        self.fill_decays(alpha);
+        if let Some(rd) = read {
+            let g = std::mem::take(&mut self.g);
+            let lam = rd.lambda;
+            self.batched_level_read(rd.qs, &mut |i, lvl| lam(i, lvl) * g[i], rd.out);
+            self.g = g;
+        }
+        let chunk_decay = self.g[c - 1];
+        self.fill_wscale(chunk_decay);
+        // the new chunk state, all heads in one batched fused kernel
+        let mut s_new = self.fen.take_buffer(h * dk, dv);
+        tensor::gemm_tn_diag_batch_acc(h, c, dk, dv, &self.wscale, ks, vs, &mut s_new.data);
+        // transition carried states (the chunk sentinel was merged away
+        // by the advance above, so only carried buckets remain)
+        self.fen.apply_transition(|s| s.scale_inplace(chunk_decay));
+        self.fen.set_level0(s_new);
+        self.z += 1;
+    }
+
+    /// Ingest one full chunk for every head under the Gated-DeltaNet
+    /// (gated Householder chain) transition. Shapes as in
+    /// [`PrefillEngine::ingest_chunk_mamba2`]; `beta` the chunk's `C`
+    /// delta strengths (shared across heads). State-only (no read seam:
+    /// GDN reads need the effective-query chain, which serving prefill
+    /// never exercises).
+    pub fn ingest_chunk_gdn(&mut self, ks: &[f32], vs: &[f32], alpha: &[f32], beta: &[f32]) {
+        assert!(!self.finished, "ingest after finish()");
+        let (h, c, dk, dv) = (self.heads, self.chunk, self.dk, self.dv);
+        assert_eq!(alpha.len(), c, "alpha shape");
+        assert_eq!(beta.len(), c, "beta shape");
+        assert_eq!(ks.len(), h * c * dk, "ks shape");
+        assert_eq!(vs.len(), h * c * dv, "vs shape");
+        self.fen.advance(self.z);
+        self.fill_decays(alpha);
+        let g_c = self.g[c - 1];
+
+        // UT systems for all heads in one batched K_c K_c^T, then the
+        // O(C²) scaling pass per head:
+        // sys_h = I + StrictTril(diag(β) (K K^T) ⊙ (g_i/g_j))
+        self.sys.clear();
+        self.sys.resize(h * c * c, 0.0);
+        tensor::gemm_nt_batch_into(h, c, dk, c, ks, ks, &mut self.sys, false);
+        for head in 0..h {
+            let sys_h = &mut self.sys[head * c * c..(head + 1) * c * c];
+            for i in 0..c {
+                let (bi, gi) = (beta[i], self.g[i]);
+                let row = &mut sys_h[i * c..(i + 1) * c];
+                for (j, sij) in row.iter_mut().enumerate() {
+                    if j < i {
+                        *sij *= bi * (gi / self.g[j]);
+                    } else {
+                        *sij = if j == i { 1.0 } else { 0.0 };
+                    }
+                }
+            }
+        }
+
+        // Ŵ_h = sys_h^{-1} diag(β) V_h by in-place forward substitution
+        self.what.clear();
+        self.what.reserve(h * c * dv);
+        for head in 0..h {
+            for i in 0..c {
+                let v_row = &vs[(head * c + i) * dv..(head * c + i + 1) * dv];
+                let bi = beta[i];
+                self.what.extend(v_row.iter().map(|&x| bi * x));
+            }
+        }
+        for head in 0..h {
+            let sys_h = &self.sys[head * c * c..(head + 1) * c * c];
+            let wh = &mut self.what[head * c * dv..(head + 1) * c * dv];
+            for i in 1..c {
+                let (done, rest) = wh.split_at_mut(i * dv);
+                let row_i = &mut rest[..dv];
+                for j in 0..i {
+                    let coef = sys_h[i * c + j];
+                    if coef != 0.0 {
+                        tensor::axpy8(row_i, &done[j * dv..(j + 1) * dv], -coef);
+                    }
+                }
+            }
+        }
+
+        // S_new_h = K_h^T diag(g_C/g_s) Ŵ_h, all heads batched
+        self.fill_wscale(g_c);
+        let mut s_new = self.fen.take_buffer(h * dk, dv);
+        tensor::gemm_tn_diag_batch_acc(h, c, dk, dv, &self.wscale, ks, &self.what, &mut s_new.data);
+
+        // materialize Φ_h = g_C · (I − β_{C-1} k k^T) ··· (I − β_0 k k^T)
+        // per head, then advance every carried state with one batched
+        // (d_k, d_k) GEMM per level (block-diagonal analogue of
+        // ChunkFenwick::apply_matrix_transition, swapping through the
+        // stacked scratch)
+        self.phi.clear();
+        self.phi.resize(h * dk * dk, 0.0);
+        for head in 0..h {
+            let phi_h = &mut self.phi[head * dk * dk..(head + 1) * dk * dk];
+            for i in 0..dk {
+                phi_h[i * dk + i] = 1.0;
+            }
+            for j in 0..c {
+                let k_row = &ks[(head * c + j) * dk..(head * c + j + 1) * dk];
+                apply_householder_slice(phi_h, dk, k_row, beta[j]);
+            }
+        }
+        for x in self.phi.iter_mut() {
+            *x *= g_c;
+        }
+        let phi = &self.phi;
+        let scratch = &mut self.scratch;
+        self.fen.apply_transition(|s| {
+            tensor::gemm_batch_into(h, dk, dk, dv, phi, &s.data, &mut scratch.data, false);
+            std::mem::swap(&mut s.data, &mut scratch.data);
+        });
+
+        self.fen.set_level0(s_new);
+        self.z += 1;
+    }
+
+    /// Head-batched inter-chunk level read: concat each head's live level
+    /// states into `S_cat^h (d_k, L·d_v)`, one batched `Q^h @ S_cat^h`
+    /// GEMM, then the weight fold. `weight(row, token_level)` must
+    /// already include any intra-chunk decay factor.
+    fn batched_level_read(
+        &mut self,
+        qs: &[f32],
+        weight: &mut dyn FnMut(usize, usize) -> f32,
+        out: &mut [f32],
+    ) {
+        let (h, c, dk, dv) = (self.heads, self.chunk, self.dk, self.dv);
+        assert_eq!(qs.len(), h * c * dk, "qs shape");
+        assert_eq!(out.len(), h * c * dv, "out shape");
+        self.active_ids.clear();
+        self.active_ids.extend(self.fen.active().map(|(m, _)| m));
+        let nl = self.active_ids.len();
+        if nl == 0 {
+            return;
+        }
+        let ncat = nl * dv;
+        self.cat.clear();
+        self.cat.resize(h * dk * ncat, 0.0);
+        for (li, (_, s)) in self.fen.active().enumerate() {
+            for head in 0..h {
+                for r in 0..dk {
+                    let dst = head * dk * ncat + r * ncat + li * dv;
+                    self.cat[dst..dst + dv].copy_from_slice(s.row(head * dk + r));
+                }
+            }
+        }
+        self.read_buf.clear();
+        self.read_buf.resize(h * c * ncat, 0.0);
+        tensor::gemm_batch_into(h, c, dk, ncat, qs, &self.cat, &mut self.read_buf, false);
+        let lc = self.chunk.trailing_zeros() as usize;
+        for row in 0..h * c {
+            let i = row % c; // chunk-local position (weights shared across heads)
+            let prow = &self.read_buf[row * ncat..(row + 1) * ncat];
+            let orow = &mut out[row * dv..(row + 1) * dv];
+            for (li, &lvl) in self.active_ids.iter().enumerate() {
+                let w = weight(i, lc + lvl);
+                if w == 0.0 {
+                    continue;
+                }
+                tensor::axpy8(orow, &prow[li * dv..(li + 1) * dv], w);
+            }
+        }
+    }
+
+    /// Seal the engine at the chunk boundary: merge the chunk sentinel
+    /// one level up (the merge the *next* chunk would have performed), so
+    /// the level layout aligns with the token-granularity post-merge
+    /// boundary at `t = chunks · C` and heads can be exported
+    /// ([`crate::prefill::bridge::export_prefill_head`]). No further
+    /// ingestion is allowed.
+    pub fn finish(&mut self) {
+        assert!(!self.finished, "finish() called twice");
+        self.fen.advance(self.z);
+        self.finished = true;
+    }
+
+    /// One head's live levels as `(token_level, row-major (d_k, d_v)
+    /// state)` pairs, ready for
+    /// [`crate::state::PooledFenwickState::import_levels`]. Requires
+    /// [`PrefillEngine::finish`].
+    pub fn export_head(&self, head: usize) -> Vec<(usize, &[f32])> {
+        assert!(self.finished, "export before finish()");
+        assert!(head < self.heads, "head out of range");
+        let lc = self.chunk.trailing_zeros() as usize;
+        let dk = self.dk;
+        self.fen
+            .active()
+            .map(|(m, s)| (lc + m, s.rows_data(head * dk, (head + 1) * dk)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Per-head single-head oracle: drive a ChunkFenwick with the same
+    /// chunk-state writes the Mamba-2 chunkwise path performs, then
+    /// advance to the boundary.
+    fn mamba2_oracle(ks: &Mat, vs: &Mat, alpha: &[f32], c: usize) -> ChunkFenwick {
+        let (t_len, dk, dv) = (ks.rows, ks.cols, vs.cols);
+        assert_eq!(t_len % c, 0);
+        let mut eng = ChunkFenwick::new();
+        let mut wscale = vec![0.0f32; c];
+        for z in 0..t_len / c {
+            let start = z * c;
+            eng.advance(z);
+            let mut g = vec![0.0f32; c];
+            let mut acc = 1.0f64;
+            for i in 0..c {
+                acc *= alpha[start + i] as f64;
+                g[i] = acc as f32;
+            }
+            let chunk_decay = g[c - 1];
+            for j in 0..c {
+                wscale[j] = chunk_decay / g[j];
+            }
+            let mut w = eng.take_buffer(dk, dv);
+            crate::tensor::gemm_tn_diag_acc(
+                c,
+                dk,
+                dv,
+                &wscale,
+                ks.rows_data(start, start + c),
+                vs.rows_data(start, start + c),
+                &mut w.data,
+            );
+            eng.apply_transition(|s| s.scale_inplace(chunk_decay));
+            eng.set_level0(w);
+        }
+        eng.advance(t_len / c);
+        eng
+    }
+
+    /// Stack H per-head matrices (T, d) into the engine's head-major
+    /// per-chunk layout (H, C, d) for chunk z.
+    fn stack_chunk(per_head: &[Mat], z: usize, c: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        for m in per_head {
+            out.extend_from_slice(m.rows_data(z * c, (z + 1) * c));
+        }
+        out
+    }
+
+    #[test]
+    fn mamba2_engine_matches_per_head_chunk_fenwick_bit_exact() {
+        let mut rng = Rng::new(0x9E1);
+        let (heads, dk, dv, c, t_len) = (3usize, 8usize, 6usize, 4usize, 44usize); // 11 chunks
+        let ks: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dk, 1.0, &mut rng)).collect();
+        let vs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dv, 1.0, &mut rng)).collect();
+        let alpha: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.8, 1.0)).collect();
+
+        let mut eng = PrefillEngine::new(heads, dk, dv, c);
+        for z in 0..t_len / c {
+            let kc = stack_chunk(&ks, z, c);
+            let vc = stack_chunk(&vs, z, c);
+            eng.ingest_chunk_mamba2(&kc, &vc, &alpha[z * c..(z + 1) * c], None);
+        }
+        eng.finish();
+        assert_eq!(eng.tokens(), t_len);
+
+        let lc = c.trailing_zeros() as usize;
+        for h in 0..heads {
+            let oracle = mamba2_oracle(&ks[h], &vs[h], &alpha, c);
+            let want: Vec<(usize, &[f32])> =
+                oracle.active().map(|(m, s)| (lc + m, &s.data[..])).collect();
+            let got = eng.export_head(h);
+            assert_eq!(got.len(), want.len(), "head {h}: live level count");
+            for ((gl, gs), (wl, ws)) in got.iter().zip(want.iter()) {
+                assert_eq!(gl, wl, "head {h}: level mismatch");
+                assert_eq!(*gs, *ws, "head {h} level {gl}: state not bit-exact");
+            }
+        }
+    }
+
+    #[test]
+    fn level_read_matches_per_head_chunk_fenwick_read() {
+        // The head-batched Q_c S_cat read against the single-head
+        // ChunkFenwick read, same λ·decay weights: bit-exact.
+        let mut rng = Rng::new(0x9E2);
+        let (heads, dk, dv, c, t_len) = (2usize, 6usize, 5usize, 8usize, 56usize); // 7 chunks
+        let ks: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dk, 1.0, &mut rng)).collect();
+        let vs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dv, 1.0, &mut rng)).collect();
+        let qs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dk, 1.0, &mut rng)).collect();
+        let alpha: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.8, 1.0)).collect();
+        let nl = crate::fenwick::num_levels(t_len);
+        let lambda = Mat::rand_uniform(t_len, nl, 0.05, 1.0, &mut rng);
+        let lc = c.trailing_zeros() as usize;
+        let nchunks = t_len / c;
+
+        // engine with reads on every chunk
+        let mut eng = PrefillEngine::new(heads, dk, dv, c);
+        let mut got = vec![vec![0.0f32; heads * c * dv]; nchunks];
+        for z in 0..nchunks {
+            let kc = stack_chunk(&ks, z, c);
+            let vc = stack_chunk(&vs, z, c);
+            let qc = stack_chunk(&qs, z, c);
+            let start = z * c;
+            let lam = |i: usize, lvl: usize| lambda.at(start + i, lvl);
+            eng.ingest_chunk_mamba2(
+                &kc,
+                &vc,
+                &alpha[start..start + c],
+                Some(LevelRead { qs: &qc, lambda: &lam, out: &mut got[z][..] }),
+            );
+        }
+
+        // per-head oracle: ChunkFenwick::read_levels_into per chunk
+        for h in 0..heads {
+            let mut oracle = ChunkFenwick::new();
+            let mut wscale = vec![0.0f32; c];
+            for z in 0..nchunks {
+                let start = z * c;
+                oracle.advance(z);
+                let mut g = vec![0.0f32; c];
+                let mut acc = 1.0f64;
+                for i in 0..c {
+                    acc *= alpha[start + i] as f64;
+                    g[i] = acc as f32;
+                }
+                let mut want = Mat::zeros(c, dv);
+                oracle.read_levels_into(qs[h].rows_data(start, start + c), c, &mut want, 0, |i, m| {
+                    lambda.at(start + i, lc + m) * g[i]
+                });
+                let got_h = &got[z][h * c * dv..(h + 1) * c * dv];
+                assert_eq!(got_h, &want.data[..], "head {h} chunk {z}: read not bit-exact");
+                // mirror the engine's write/transition to keep states in step
+                let chunk_decay = g[c - 1];
+                for j in 0..c {
+                    wscale[j] = chunk_decay / g[j];
+                }
+                let mut w = oracle.take_buffer(dk, dv);
+                crate::tensor::gemm_tn_diag_acc(
+                    c,
+                    dk,
+                    dv,
+                    &wscale,
+                    ks[h].rows_data(start, start + c),
+                    vs[h].rows_data(start, start + c),
+                    &mut w.data,
+                );
+                oracle.apply_transition(|s| s.scale_inplace(chunk_decay));
+                oracle.set_level0(w);
+            }
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Chunkwise prompt prefill (paper Alg. 1, turned into a serving
+//! subsystem).
+//!
+//! Until this module existed the serving engine ingested prompts the slow
+//! way: one token at a time through the recurrent decode step, O(T)
+//! scalar state updates per sequence, even though the chunkwise engines
+//! of [`crate::attention::loglinear_mamba2`] and
+//! [`crate::attention::loglinear_gdn`] already implement the O(T log T)
+//! matmul-rich form. The pieces here close that gap:
+//!
+//! - [`engine::PrefillEngine`] — a **head-batched, state-only** chunkwise
+//!   ingester: H heads' chunk-granularity Fenwick level states are stored
+//!   stacked, so every per-chunk product (`K_c^T diag(w) V_c` state
+//!   writes, `Φ_chunk S` carried-state transitions, the optional
+//!   `Q_c S_cat` level read) runs as **one batched GEMM dispatch over all
+//!   heads** ([`crate::tensor::batch`]) instead of H separate kernel
+//!   launches — the multi-head widening the ROADMAP asked for, applied
+//!   where chunks make the products wide. Serving prefill skips attention
+//!   outputs entirely (only the final prompt token's logits matter, and
+//!   the decode step produces those), so a chunk costs one state write +
+//!   one transition pass instead of C recurrent steps.
+//! - [`bridge`] — the **state-export bridge**: converts a chunk-granularity
+//!   hierarchy ([`crate::attention::loglinear::ChunkFenwick`] or one
+//!   [`engine::PrefillEngine`] head) at an arbitrary chunk-aligned
+//!   position into [`crate::state::PooledFenwickState`] pool blocks. The
+//!   alignment fact that makes this exact: after `z` chunks of size
+//!   `C = 2^lc`, the token-granularity Fenwick machine at the *post-merge
+//!   boundary* of step `t = z·C` holds exactly the levels
+//!   `{lc + m : chunk-level m live}` — the same layout, one relabel.
+//!
+//! The serving integration lives in
+//! [`crate::coordinator::backend::PooledBackend`] (per-sequence engines,
+//! lazy export on the first decode step) and the engine loop of
+//! [`crate::coordinator::server::DecodeServer`] (prompts advance one
+//! chunk per step, interleaved with running decode rows). Gates come from
+//! the shared [`crate::state::GateTable`], so prefill and decode read the
+//! same position-dependent α/λ schedule.
+
+pub mod bridge;
+pub mod engine;
+
+pub use bridge::{export_chunk_fenwick, export_prefill_head};
+pub use engine::{LevelRead, PrefillEngine};

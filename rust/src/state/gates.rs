@@ -1,0 +1,91 @@
+//! Position-dependent gate/level-weight tables shared by prefill and
+//! decode (ROADMAP item: per-token α/λ instead of the fixed scalars the
+//! pooled backend hard-coded).
+//!
+//! A serving model's gates are a function of absolute position: the decay
+//! gate `α_t` applied to carried states at step `t`, and the level-weight
+//! row `λ_t^{(·)}` the read at position `t` folds over live levels.
+//! [`GateTable`] is the one source both ingestion paths consult —
+//! the chunkwise prefill engine reads `alpha(pos..pos+C)` for a chunk's
+//! cumulative decays, the decode step reads `alpha(pos)` / `lambda(pos)`
+//! for its transition and batched read — which is what makes
+//! chunkwise-prefilled and token-stepped sequences agree: there is no
+//! second copy of the schedule to drift.
+//!
+//! Past the end of a finite table the last entry is held (the same
+//! clamping convention as [`super::level_weight`] past the λ width), so a
+//! sequence can always outrun the table without dropping gates.
+
+use crate::tensor::Mat;
+
+/// Per-position gate schedule: `alpha(t)` decay gates and `lambda(t)`
+/// level-weight rows, clamped to the last provided position.
+#[derive(Debug, Clone)]
+pub struct GateTable {
+    /// α_t per position (non-empty; index clamps to the last entry)
+    alpha: Vec<f32>,
+    /// λ rows, `(positions, levels)` row-major (≥1 row; row clamps)
+    lambda: Mat,
+}
+
+impl GateTable {
+    /// Position-independent gates: one α for every step, one λ row for
+    /// every position (the pre-PR pooled-backend behavior).
+    pub fn fixed(alpha: f32, lambda: Vec<f32>) -> GateTable {
+        assert!(!lambda.is_empty(), "empty lambda row");
+        let cols = lambda.len();
+        GateTable { alpha: vec![alpha], lambda: Mat::from_vec(1, cols, lambda) }
+    }
+
+    /// Fully position-dependent gates: `alpha[t]` and `lambda.row(t)`
+    /// apply at position `t`; both clamp to their last entry beyond the
+    /// table.
+    pub fn per_token(alpha: Vec<f32>, lambda: Mat) -> GateTable {
+        assert!(!alpha.is_empty(), "empty alpha table");
+        assert!(lambda.rows >= 1 && lambda.cols >= 1, "empty lambda table");
+        GateTable { alpha, lambda }
+    }
+
+    /// Decay gate applied to carried states at step `t`.
+    #[inline]
+    pub fn alpha(&self, t: usize) -> f32 {
+        self.alpha[t.min(self.alpha.len() - 1)]
+    }
+
+    /// Level-weight row for the read at position `t`.
+    #[inline]
+    pub fn lambda(&self, t: usize) -> &[f32] {
+        self.lambda.row(t.min(self.lambda.rows - 1))
+    }
+
+    /// Number of levels per λ row.
+    pub fn lambda_levels(&self) -> usize {
+        self.lambda.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_table_is_position_independent() {
+        let g = GateTable::fixed(0.9, vec![1.0, 0.5, 0.25]);
+        for t in [0usize, 1, 7, 1000] {
+            assert_eq!(g.alpha(t), 0.9);
+            assert_eq!(g.lambda(t), &[1.0, 0.5, 0.25]);
+        }
+        assert_eq!(g.lambda_levels(), 3);
+    }
+
+    #[test]
+    fn per_token_table_clamps_to_last_entry() {
+        let lam = Mat::from_fn(3, 2, |t, l| (10 * t + l) as f32);
+        let g = GateTable::per_token(vec![0.5, 0.6, 0.7], lam);
+        assert_eq!(g.alpha(0), 0.5);
+        assert_eq!(g.alpha(2), 0.7);
+        assert_eq!(g.alpha(99), 0.7, "alpha clamps past the table");
+        assert_eq!(g.lambda(1), &[10.0, 11.0]);
+        assert_eq!(g.lambda(99), &[20.0, 21.0], "lambda clamps past the table");
+    }
+}

@@ -24,12 +24,14 @@
 //! The same machinery measured against a softmax KV cache is experiment
 //! E11 (decode time/memory vs. T — Table 1's right columns).
 
+pub mod gates;
 pub mod pool;
 pub mod pooled;
+pub(crate) mod update;
 
+pub use gates::GateTable;
 pub use pooled::{BatchedDecoder, PooledFenwickState};
 
-use crate::fenwick;
 use crate::tensor::Mat;
 
 /// λ weight for level `l`, clamping to the last table entry when a
@@ -79,10 +81,11 @@ impl FenwickState {
     /// Process one token: merge, transition, write, then read the output
     /// `o = Σ_l λ^(l) S^(l)T q` with per-level weights `lambda`.
     ///
-    /// LOCK-STEP CONTRACT: steps 1–3 are mirrored (pool-block storage
-    /// instead of owned `Mat`s) by [`pooled::PooledFenwickState::advance`];
-    /// changes to the op order here must land there too — the pooled
-    /// bit-exactness test enforces it.
+    /// The merge/transition/write skeleton is the storage-generic
+    /// [`update::advance_levels`] — the *same code* that drives
+    /// [`pooled::PooledFenwickState::advance`], so the two decode paths
+    /// are bit-identical by construction (the pooled bit-exactness test
+    /// now guards the shared skeleton instead of a hand-mirrored copy).
     pub fn step(
         &mut self,
         q: &[f32],
@@ -92,55 +95,10 @@ impl FenwickState {
         transition: Transition<'_>,
         lambda: &[f32],
     ) -> Vec<f32> {
-        let t = self.t;
-        // 1) merge levels 0..=lssb(t) into lssb(t)+1; merged-out buffers
-        //    are recycled, not dropped.
-        if t > 0 {
-            let l = fenwick::lssb(t) as usize;
-            let mut merged: Option<Mat> = None;
-            for s in self.levels.iter_mut().take(l + 1) {
-                if let Some(m) = s.take() {
-                    match merged {
-                        None => merged = Some(m),
-                        Some(ref mut acc) => {
-                            acc.axpy(1.0, &m);
-                            self.free.push(m);
-                        }
-                    }
-                }
-            }
-            if let Some(m) = merged {
-                if self.levels.len() <= l + 1 {
-                    self.levels.resize(l + 2, None);
-                }
-                debug_assert!(self.levels[l + 1].is_none(), "Fenwick invariant");
-                self.levels[l + 1] = Some(m);
-            }
-        }
-        // 2) transition carried states
-        for s in self.levels.iter_mut().flatten() {
-            match &transition {
-                Transition::Decay(a) => s.scale_inplace(*a),
-                Transition::GatedHouseholder { alpha, beta, k } => {
-                    crate::attention::deltanet::apply_householder(s, k, *beta);
-                    s.scale_inplace(*alpha);
-                }
-            }
-        }
-        // 3) sentinel write into a recycled buffer (zero alloc once warm)
-        let mut s0 = match self.free.pop() {
-            Some(mut m) => {
-                m.data.fill(0.0);
-                m
-            }
-            None => Mat::zeros(self.dk, self.dv),
-        };
-        crate::tensor::outer_acc(&mut s0, k, v, write_scale);
-        if self.levels.is_empty() {
-            self.levels.resize(1, None);
-        }
-        self.levels[0] = Some(s0);
-        // 4) read: fused λ-weighted accumulate, no per-level temporaries
+        let mut store = update::MatStore { free: &mut self.free, dk: self.dk, dv: self.dv };
+        update::advance_levels(&mut store, &mut self.levels, self.t, k, v, write_scale, transition)
+            .expect("Mat-backed store never exhausts");
+        // read: fused λ-weighted accumulate, no per-level temporaries
         let mut o = vec![0.0f32; self.dv];
         self.read_into(q, lambda, &mut o);
         self.t += 1;

@@ -28,9 +28,7 @@
 //! **bit-exact** with the [`super::FenwickState`] oracle — asserted by
 //! the tests below and re-checked by the `decode_batched` bench.
 
-use crate::attention::deltanet::apply_householder_slice;
 use crate::attention::loglinear::level_read_acc;
-use crate::fenwick;
 use crate::state::pool::{BlockId, StatePool};
 use crate::state::{level_weight, Transition};
 use crate::tensor;
@@ -88,15 +86,12 @@ impl PooledFenwickState {
     }
 
     /// Process one token's state update — merge, transition, write — the
-    /// mutation half of [`super::FenwickState::step`], bit-identical op
-    /// order. The read half lives in [`PooledFenwickState::read_into`] /
+    /// mutation half of [`super::FenwickState::step`]. Both run the *same*
+    /// storage-generic skeleton ([`crate::state::update::advance_levels`]),
+    /// so the op order is bit-identical by construction; only the storage
+    /// backing differs ([`crate::state::update::PoolStore`] here). The
+    /// read half lives in [`PooledFenwickState::read_into`] /
     /// [`BatchedDecoder::read_batch`] so a whole batch can read at once.
-    ///
-    /// LOCK-STEP CONTRACT: this skeleton intentionally mirrors
-    /// `FenwickState::step` steps 1–3 (only the storage type differs);
-    /// any change to either copy's merge order, transition ops, or write
-    /// must be made in both, and `pooled_state_is_bit_exact_with_fenwick_state`
-    /// enforces it over mixed-transition traces.
     ///
     /// Fails (before mutating anything) if the pool cannot supply the one
     /// fresh block the sentinel write needs after the merge's releases.
@@ -108,73 +103,60 @@ impl PooledFenwickState {
         write_scale: f32,
         transition: Transition<'_>,
     ) -> Result<(), PoolExhausted> {
-        let t = self.t;
-        // 0) admission check first: the merge below frees `live-1` blocks
-        //    and the write allocates one, so fail cleanly up front.
-        let freed = if t > 0 {
-            let l = fenwick::lssb(t) as usize;
-            let live = self.levels.iter().take(l + 1).flatten().count();
-            live.saturating_sub(1)
-        } else {
-            0
-        };
-        if pool.available() + freed < 1 {
-            return Err(PoolExhausted);
-        }
-        // 1) merge levels 0..=lssb(t) into lssb(t)+1; merged-out blocks
-        //    go back to the pool.
-        if t > 0 {
-            let l = fenwick::lssb(t) as usize;
-            let mut merged: Option<BlockId> = None;
-            for s in self.levels.iter_mut().take(l + 1) {
-                if let Some(id) = s.take() {
-                    match merged {
-                        None => merged = Some(id),
-                        Some(acc) => {
-                            pool.axpy(acc, id, 1.0);
-                            pool.release(id);
-                        }
-                    }
-                }
-            }
-            if let Some(id) = merged {
-                if self.levels.len() <= l + 1 {
-                    self.levels.resize(l + 2, None);
-                }
-                debug_assert!(self.levels[l + 1].is_none(), "Fenwick invariant");
-                self.levels[l + 1] = Some(id);
-            }
-        }
-        // 2) transition carried states
-        for slot in self.levels.iter().flatten() {
-            let s = pool.get_mut(*slot);
-            match &transition {
-                Transition::Decay(a) => {
-                    for x in s.iter_mut() {
-                        *x *= *a;
-                    }
-                }
-                Transition::GatedHouseholder { alpha, beta, k } => {
-                    apply_householder_slice(s, self.dv, k, *beta);
-                    for x in s.iter_mut() {
-                        *x *= *alpha;
-                    }
-                }
-            }
-        }
-        // 3) sentinel write into a fresh (zeroed) pool block
-        let id = pool.alloc().expect("checked available above");
-        let s0 = pool.get_mut(id);
-        for (i, &ki) in k.iter().enumerate() {
-            tensor::axpy8(&mut s0[i * self.dv..(i + 1) * self.dv], v, ki * write_scale);
-        }
-        if self.levels.is_empty() {
-            self.levels.resize(1, None);
-        }
-        debug_assert!(self.levels[0].is_none(), "sentinel slot must be merged first");
-        self.levels[0] = Some(id);
+        let mut store = crate::state::update::PoolStore { pool, dv: self.dv };
+        crate::state::update::advance_levels(
+            &mut store,
+            &mut self.levels,
+            self.t,
+            k,
+            v,
+            write_scale,
+            transition,
+        )?;
         self.t += 1;
         Ok(())
+    }
+
+    /// Install an externally-built level layout — the prefill export
+    /// bridge's entry point. `states[i] = (token_level, data)` with `data`
+    /// a row-major `(dk, dv)` state; the sequence is positioned at `t`
+    /// tokens processed, at the **post-merge boundary** of step `t`: level
+    /// 0 (the sentinel) is empty and each provided `token_level ≥ 1` must
+    /// be live in the Fenwick partition implied by `t` (bit `level-1` of
+    /// `t` set). The next [`PooledFenwickState::advance`] then performs a
+    /// no-op merge and proceeds exactly like the token recurrence at step
+    /// `t` (see `prefill::bridge` for why chunk-aligned positions land on
+    /// this boundary).
+    ///
+    /// Fails without mutating the pool if it cannot hold all the states.
+    pub fn import_levels(
+        pool: &mut StatePool,
+        dk: usize,
+        dv: usize,
+        t: usize,
+        states: &[(usize, &[f32])],
+    ) -> Result<PooledFenwickState, PoolExhausted> {
+        if pool.available() < states.len() {
+            return Err(PoolExhausted);
+        }
+        let mut seq = PooledFenwickState::new(dk, dv);
+        for &(level, data) in states {
+            assert!(level >= 1, "level 0 is the sentinel; it is written by advance");
+            assert!(
+                level <= usize::BITS as usize && (t >> (level - 1)) & 1 == 1,
+                "level {level} is not live at position {t} (Fenwick misalignment)"
+            );
+            assert_eq!(data.len(), dk * dv, "state shape");
+            if seq.levels.len() <= level {
+                seq.levels.resize(level + 1, None);
+            }
+            assert!(seq.levels[level].is_none(), "duplicate level {level} in import");
+            let id = pool.alloc().expect("availability checked above");
+            pool.get_mut(id).copy_from_slice(data);
+            seq.levels[level] = Some(id);
+        }
+        seq.t = t;
+        Ok(seq)
     }
 
     /// Per-sequence λ-weighted read `o = Σ_l λ^(l) S^(l)T q` (overwrites

@@ -1,0 +1,195 @@
+//! The single storage-generic Fenwick level update (ROADMAP item).
+//!
+//! [`FenwickState::step`](super::FenwickState::step) and
+//! [`PooledFenwickState::advance`](super::pooled::PooledFenwickState::advance)
+//! used to hand-mirror the same merge → transition → sentinel-write
+//! skeleton, differing only in where level states live (owned [`Mat`]s
+//! with a private free list vs [`StatePool`] blocks). That lock-step
+//! contract was documented and enforced by a bit-exactness test, but any
+//! edit still had to land twice. [`advance_levels`] is now the one copy of
+//! the skeleton; the storage difference is a [`FenwickStore`] impl
+//! ([`MatStore`] / [`PoolStore`]), and the bit-exactness of the two decode
+//! paths is *by construction*: the same generic function drives the same
+//! primitive op sequence (`axpy8`-based merges/writes, identical
+//! transition loops) against either backing.
+//!
+//! The pooled path's backpressure semantics survive the unification:
+//! [`FenwickStore::can_write`] is checked **before any mutation**, so a
+//! refused step leaves the sequence untouched (the admission-control
+//! contract), and the Mat-backed store simply never refuses.
+
+use crate::attention::deltanet::{apply_householder, apply_householder_slice};
+use crate::fenwick;
+use crate::state::pool::{BlockId, StatePool};
+use crate::state::pooled::PoolExhausted;
+use crate::state::Transition;
+use crate::tensor::{self, Mat};
+
+/// Storage backing for one sequence's Fenwick level states.
+pub(crate) trait FenwickStore {
+    type Slot;
+
+    /// Can a sentinel write succeed after a merge that frees `freed`
+    /// slots? Checked before any mutation so a refusal is clean.
+    fn can_write(&self, freed: usize) -> bool;
+
+    /// Bucket merge: `acc += src`, then recycle `src`'s storage.
+    fn merge(&mut self, acc: &mut Self::Slot, src: Self::Slot);
+
+    /// Apply the per-token transition to one live state.
+    fn transition(&mut self, slot: &mut Self::Slot, tr: &Transition<'_>);
+
+    /// Fresh zeroed state holding `write_scale * k v^T`; `None` only if
+    /// the backing is exhausted (never, after `can_write` returned true).
+    fn write(&mut self, k: &[f32], v: &[f32], write_scale: f32) -> Option<Self::Slot>;
+}
+
+/// One token's state update — merge levels `0..=lssb(t)` one level up,
+/// transition every carried state, write the fresh `(k, v)` sentinel at
+/// level 0. `t` is the number of tokens processed so far. Fails (before
+/// mutating anything) only if the store cannot supply the sentinel block.
+pub(crate) fn advance_levels<S: FenwickStore>(
+    store: &mut S,
+    levels: &mut Vec<Option<S::Slot>>,
+    t: usize,
+    k: &[f32],
+    v: &[f32],
+    write_scale: f32,
+    transition: Transition<'_>,
+) -> Result<(), PoolExhausted> {
+    // 0) capacity check first: the merge below frees `live-1` slots and
+    //    the write takes one, so a refusal must come before any mutation.
+    let freed = if t > 0 {
+        let l = fenwick::lssb(t) as usize;
+        let live = levels.iter().take(l + 1).flatten().count();
+        live.saturating_sub(1)
+    } else {
+        0
+    };
+    if !store.can_write(freed) {
+        return Err(PoolExhausted);
+    }
+    // 1) merge levels 0..=lssb(t) into lssb(t)+1; merged-out storage is
+    //    recycled, not dropped.
+    if t > 0 {
+        let l = fenwick::lssb(t) as usize;
+        let mut merged: Option<S::Slot> = None;
+        for s in levels.iter_mut().take(l + 1) {
+            if let Some(m) = s.take() {
+                match merged {
+                    None => merged = Some(m),
+                    Some(ref mut acc) => store.merge(acc, m),
+                }
+            }
+        }
+        if let Some(m) = merged {
+            if levels.len() <= l + 1 {
+                levels.resize_with(l + 2, || None);
+            }
+            debug_assert!(levels[l + 1].is_none(), "Fenwick invariant");
+            levels[l + 1] = Some(m);
+        }
+    }
+    // 2) transition carried states
+    for s in levels.iter_mut().flatten() {
+        store.transition(s, &transition);
+    }
+    // 3) sentinel write
+    let s0 = store.write(k, v, write_scale).expect("can_write checked above");
+    if levels.is_empty() {
+        levels.resize_with(1, || None);
+    }
+    debug_assert!(levels[0].is_none(), "sentinel slot must be merged first");
+    levels[0] = Some(s0);
+    Ok(())
+}
+
+/// Owned-`Mat` backing with a recycled free list — the storage of
+/// [`super::FenwickState`]. Never refuses a write.
+pub(crate) struct MatStore<'a> {
+    pub free: &'a mut Vec<Mat>,
+    pub dk: usize,
+    pub dv: usize,
+}
+
+impl FenwickStore for MatStore<'_> {
+    type Slot = Mat;
+
+    fn can_write(&self, _freed: usize) -> bool {
+        true
+    }
+
+    fn merge(&mut self, acc: &mut Mat, src: Mat) {
+        acc.axpy(1.0, &src);
+        self.free.push(src);
+    }
+
+    fn transition(&mut self, s: &mut Mat, tr: &Transition<'_>) {
+        match tr {
+            Transition::Decay(a) => s.scale_inplace(*a),
+            Transition::GatedHouseholder { alpha, beta, k } => {
+                apply_householder(s, k, *beta);
+                s.scale_inplace(*alpha);
+            }
+        }
+    }
+
+    fn write(&mut self, k: &[f32], v: &[f32], write_scale: f32) -> Option<Mat> {
+        let mut s0 = match self.free.pop() {
+            Some(mut m) => {
+                m.data.fill(0.0);
+                m
+            }
+            None => Mat::zeros(self.dk, self.dv),
+        };
+        tensor::outer_acc(&mut s0, k, v, write_scale);
+        Some(s0)
+    }
+}
+
+/// [`StatePool`]-block backing — the storage of
+/// [`super::pooled::PooledFenwickState`]. Refuses cleanly on exhaustion
+/// (the admission-backpressure signal).
+pub(crate) struct PoolStore<'a> {
+    pub pool: &'a mut StatePool,
+    pub dv: usize,
+}
+
+impl FenwickStore for PoolStore<'_> {
+    type Slot = BlockId;
+
+    fn can_write(&self, freed: usize) -> bool {
+        self.pool.available() + freed >= 1
+    }
+
+    fn merge(&mut self, acc: &mut BlockId, src: BlockId) {
+        self.pool.axpy(*acc, src, 1.0);
+        self.pool.release(src);
+    }
+
+    fn transition(&mut self, slot: &mut BlockId, tr: &Transition<'_>) {
+        let s = self.pool.get_mut(*slot);
+        match tr {
+            Transition::Decay(a) => {
+                for x in s.iter_mut() {
+                    *x *= *a;
+                }
+            }
+            Transition::GatedHouseholder { alpha, beta, k } => {
+                apply_householder_slice(s, self.dv, k, *beta);
+                for x in s.iter_mut() {
+                    *x *= *alpha;
+                }
+            }
+        }
+    }
+
+    fn write(&mut self, k: &[f32], v: &[f32], write_scale: f32) -> Option<BlockId> {
+        let id = self.pool.alloc()?;
+        let s0 = self.pool.get_mut(id);
+        for (i, &ki) in k.iter().enumerate() {
+            tensor::axpy8(&mut s0[i * self.dv..(i + 1) * self.dv], v, ki * write_scale);
+        }
+        Some(id)
+    }
+}

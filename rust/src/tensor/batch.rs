@@ -1,0 +1,230 @@
+//! Head-batched GEMM dispatch (the multi-head batching item of the
+//! ROADMAP): run `batch` independent same-shape GEMM problems through
+//! **one** pooled row-block dispatch instead of `batch` separate kernel
+//! launches.
+//!
+//! A multi-head chunkwise step issues the same per-chunk product once per
+//! head (`Q_c S_cat`, `K_c^T diag(w) V_c`, `Φ S` …) with head-specific
+//! operands, so no single dense GEMM can cover all heads without an H×
+//! zero-padding waste. What *can* be shared is the scheduling: the stacked
+//! output `(batch·m, n)` is partitioned into contiguous row blocks exactly
+//! like a single `(batch·m, k, n)` product would be, each worker resolves
+//! the heads its rows intersect, and the per-head inner kernels are the
+//! same `block_*` microkernels the dense entry points use. The effective
+//! product the thread planner sees is therefore **widened by `batch`**:
+//! a per-chunk product too small to amortize a dispatch on its own
+//! (`plan_threads` would run it inline) crosses the threshold once H heads
+//! ride in one call, and a chunk's worth of per-head GEMMs pays one queue
+//! handoff total instead of H.
+//!
+//! Determinism: each output row is reduced by exactly one worker in the
+//! same sequential k-order as the single-problem kernels, so every batched
+//! entry point is **bit-exact** with `batch` separate calls to its dense
+//! counterpart, for any thread count (asserted by the tests below).
+
+use super::{block_nn, block_nt, block_tn_diag, plan_threads};
+use crate::util::threadpool::par_row_chunks_pooled;
+
+/// Dispatch a batch of same-shape row-major problems as one pooled
+/// row-block parallel-for over the stacked `(batch·m, n)` output.
+/// `kernel(h, lr0, lr1, chunk)` computes rows `[lr0, lr1)` of problem
+/// `h`'s output into `chunk` (locally indexed from `lr0`).
+fn batch_dispatch<F>(batch: usize, m: usize, n: usize, threads: usize, out: &mut [f32], kernel: F)
+where
+    F: Fn(usize, usize, usize, &mut [f32]) + Sync,
+{
+    if threads <= 1 {
+        for (h, out_h) in out.chunks_mut(m * n).enumerate() {
+            kernel(h, 0, m, out_h);
+        }
+        return;
+    }
+    let rows = batch * m;
+    par_row_chunks_pooled(out, n, rows.div_ceil(threads), |r0, r1, chunk| {
+        // a worker's rows may span several heads: split at head borders
+        let (h0, h1) = (r0 / m, (r1 - 1) / m);
+        for h in h0..=h1 {
+            let lr0 = r0.max(h * m) - h * m;
+            let lr1 = r1.min((h + 1) * m) - h * m;
+            let sub = &mut chunk[(h * m + lr0 - r0) * n..(h * m + lr1 - r0) * n];
+            kernel(h, lr0, lr1, sub);
+        }
+    });
+}
+
+/// `out_h (+)= A_h @ B_h` for `batch` independent problems in one
+/// dispatch: `a` is `(batch, m, k)`, `b` `(batch, k, n)`, `out`
+/// `(batch, m, n)`, all contiguous row-major stacks. Bit-exact with
+/// `batch` calls to [`super::gemm_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_batch_into(
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    accumulate: bool,
+) {
+    assert_eq!(a.len(), batch * m * k, "gemm_batch a shape");
+    assert_eq!(b.len(), batch * k * n, "gemm_batch b shape");
+    assert_eq!(out.len(), batch * m * n, "gemm_batch out shape");
+    if !accumulate {
+        out.fill(0.0);
+    }
+    if batch == 0 || m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = plan_threads(batch * m, k, n);
+    batch_dispatch(batch, m, n, threads, out, |h, lr0, lr1, sub| {
+        block_nn(&a[h * m * k..(h + 1) * m * k], &b[h * k * n..(h + 1) * k * n], sub, k, n, lr0, lr1)
+    });
+}
+
+/// `out_h (+)= A_h @ B_h^T` for `batch` independent problems in one
+/// dispatch: `a` is `(batch, m, k)`, `b` `(batch, n, k)`, `out`
+/// `(batch, m, n)`. The head-batched `Q_c K_c^T` kernel. Bit-exact with
+/// `batch` calls to [`super::gemm_nt_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_batch_into(
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    accumulate: bool,
+) {
+    assert_eq!(a.len(), batch * m * k, "gemm_nt_batch a shape");
+    assert_eq!(b.len(), batch * n * k, "gemm_nt_batch b shape");
+    assert_eq!(out.len(), batch * m * n, "gemm_nt_batch out shape");
+    if !accumulate {
+        out.fill(0.0);
+    }
+    if batch == 0 || m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = plan_threads(batch * m, k, n);
+    batch_dispatch(batch, m, n, threads, out, |h, lr0, lr1, sub| {
+        block_nt(&a[h * m * k..(h + 1) * m * k], &b[h * n * k..(h + 1) * n * k], sub, k, n, lr0, lr1)
+    });
+}
+
+/// `out_h += A_h^T diag(w_h) B_h` for `batch` independent problems in one
+/// dispatch: `a` is `(batch, k, m)`, `b` `(batch, k, n)`, `w`
+/// `(batch, k)`, `out` `(batch, m, n)`. The head-batched
+/// `K_c^T diag(w) V_c` chunk-state write. Bit-exact with `batch` calls to
+/// [`super::gemm_tn_diag_acc`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_diag_batch_acc(
+    batch: usize,
+    k: usize,
+    m: usize,
+    n: usize,
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(w.len(), batch * k, "gemm_tn_diag_batch w shape");
+    assert_eq!(a.len(), batch * k * m, "gemm_tn_diag_batch a shape");
+    assert_eq!(b.len(), batch * k * n, "gemm_tn_diag_batch b shape");
+    assert_eq!(out.len(), batch * m * n, "gemm_tn_diag_batch out shape");
+    if batch == 0 || m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = plan_threads(batch * m, k, n);
+    batch_dispatch(batch, m, n, threads, out, |h, lr0, lr1, sub| {
+        block_tn_diag(
+            &a[h * k * m..(h + 1) * k * m],
+            &b[h * k * n..(h + 1) * k * n],
+            &w[h * k..(h + 1) * k],
+            sub,
+            k,
+            m,
+            n,
+            lr0,
+            lr1,
+        )
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{self, Mat};
+    use crate::util::Rng;
+
+    /// Every batched entry point against per-problem dense calls, on
+    /// shapes below and above the parallel threshold, bit-exact for
+    /// 1 and 8 threads.
+    #[test]
+    fn batched_gemms_match_per_problem_calls_bit_exact() {
+        let mut rng = Rng::new(0xBA7C);
+        for &(batch, m, k, n) in &[
+            (1usize, 3usize, 4usize, 5usize),
+            (4, 8, 8, 8),
+            (3, 1, 7, 9),
+            (8, 33, 64, 40), // crosses PAR_FLOP_THRESHOLD only when batched
+            (2, 130, 17, 19),
+        ] {
+            let a: Vec<f32> = (0..batch * m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..batch * k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let bt: Vec<f32> = (0..batch * n * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let wa: Vec<f32> = (0..batch * k * m).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let w: Vec<f32> = (0..batch * k).map(|_| rng.range_f32(0.1, 2.0)).collect();
+
+            let mut want_nn = vec![0.0f32; batch * m * n];
+            let mut want_nt = vec![0.0f32; batch * m * n];
+            let mut want_tn = vec![0.1f32; batch * m * n];
+            for h in 0..batch {
+                let o = &mut want_nn[h * m * n..(h + 1) * m * n];
+                tensor::gemm_into(m, k, n, &a[h * m * k..(h + 1) * m * k], &b[h * k * n..(h + 1) * k * n], o, false);
+                let o = &mut want_nt[h * m * n..(h + 1) * m * n];
+                tensor::gemm_nt_into(m, k, n, &a[h * m * k..(h + 1) * m * k], &bt[h * n * k..(h + 1) * n * k], o, false);
+                let o = &mut want_tn[h * m * n..(h + 1) * m * n];
+                tensor::gemm_tn_diag_acc(
+                    k,
+                    m,
+                    n,
+                    &w[h * k..(h + 1) * k],
+                    &wa[h * k * m..(h + 1) * k * m],
+                    &b[h * k * n..(h + 1) * k * n],
+                    o,
+                );
+            }
+
+            for threads in [1usize, 8] {
+                tensor::gemm_threads(threads);
+                let mut got = vec![1.0f32; batch * m * n]; // dirty: overwritten
+                gemm_batch_into(batch, m, k, n, &a, &b, &mut got, false);
+                assert_eq!(got, want_nn, "NN batch={batch} m={m} k={k} n={n} threads={threads}");
+                let mut got = vec![1.0f32; batch * m * n];
+                gemm_nt_batch_into(batch, m, k, n, &a, &bt, &mut got, false);
+                assert_eq!(got, want_nt, "NT batch={batch} m={m} k={k} n={n} threads={threads}");
+                let mut got = vec![0.1f32; batch * m * n]; // accumulate onto same base
+                gemm_tn_diag_batch_acc(batch, k, m, n, &w, &wa, &b, &mut got);
+                assert_eq!(got, want_tn, "TN-diag batch={batch} m={m} k={k} n={n} threads={threads}");
+            }
+            tensor::gemm_threads(0);
+        }
+    }
+
+    /// Accumulate mode adds onto the existing output.
+    #[test]
+    fn batch_accumulate_adds() {
+        let mut rng = Rng::new(0xACC);
+        let (batch, m, k, n) = (2usize, 3usize, 4usize, 5usize);
+        let a = Mat::randn(batch * m, k, 1.0, &mut rng);
+        let b = Mat::randn(batch * k, n, 1.0, &mut rng);
+        let mut out = vec![2.0f32; batch * m * n];
+        gemm_batch_into(batch, m, k, n, &a.data, &b.data, &mut out, true);
+        let mut want = vec![0.0f32; batch * m * n];
+        gemm_batch_into(batch, m, k, n, &a.data, &b.data, &mut want, false);
+        for (o, w) in out.iter().zip(want.iter()) {
+            assert!((o - (w + 2.0)).abs() < 1e-5);
+        }
+    }
+}

@@ -44,7 +44,10 @@
 //! tolerance-based closeness, and `allclose` reports the worst
 //! absolute/relative deviation.
 
+pub mod batch;
 pub mod ops;
+
+pub use batch::{gemm_batch_into, gemm_nt_batch_into, gemm_tn_diag_batch_acc};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

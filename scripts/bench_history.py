@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Fold the current BENCH_*.json records into a cross-PR trajectory file.
+
+Each bench target (fig4_throughput, table1_complexity, decode_batched,
+prefill_throughput, ...) emits a machine-readable BENCH_<name>.json with
+its latest numbers and a previous-run delta. That gives one step of
+history; this script gives the whole trajectory: every invocation appends
+a snapshot of all BENCH_*.json files found in the bench directory to
+BENCH_HISTORY.json, keyed by timestamp and (when available) the git
+revision, so per-PR perf movement can be plotted without re-running old
+checkouts (the ROADMAP's perf-trajectory-tracking item).
+
+Usage: scripts/bench_history.py [bench_dir]
+  bench_dir defaults to the rust/ package root (where `cargo bench` runs
+  and drops its BENCH_*.json files). The history file lives next to them.
+
+Idempotence: a snapshot is only appended when at least one bench record
+changed since the last snapshot, so re-running CI without re-running
+benches does not grow the file.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+HISTORY_NAME = "BENCH_HISTORY.json"
+
+
+def git_rev(cwd):
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=cwd,
+            capture_output=True,
+            text=True,
+            timeout=10,
+        )
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def main():
+    bench_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "rust"
+    )
+    records = {}
+    for name in sorted(os.listdir(bench_dir)):
+        if not (name.startswith("BENCH_") and name.endswith(".json")) or name == HISTORY_NAME:
+            continue
+        path = os.path.join(bench_dir, name)
+        try:
+            with open(path) as f:
+                records[name[len("BENCH_"):-len(".json")]] = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"bench_history: skipping unreadable {name}: {e}", file=sys.stderr)
+    if not records:
+        print(f"bench_history: no BENCH_*.json in {bench_dir}; nothing to fold")
+        return 0
+
+    history_path = os.path.join(bench_dir, HISTORY_NAME)
+    history = {"runs": []}
+    if os.path.exists(history_path):
+        try:
+            with open(history_path) as f:
+                history = json.load(f)
+            if not isinstance(history.get("runs"), list):
+                raise ValueError("malformed history (no runs list)")
+        except (OSError, json.JSONDecodeError, ValueError) as e:
+            print(f"bench_history: resetting malformed {HISTORY_NAME}: {e}", file=sys.stderr)
+            history = {"runs": []}
+
+    if history["runs"] and history["runs"][-1].get("benches") == records:
+        print(f"bench_history: no bench record changed; {history_path} untouched "
+              f"({len(history['runs'])} snapshot(s))")
+        return 0
+
+    history["runs"].append({
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "git_rev": git_rev(bench_dir),
+        "benches": records,
+    })
+    tmp = history_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(history, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, history_path)
+    print(f"bench_history: appended snapshot #{len(history['runs'])} "
+          f"({', '.join(sorted(records))}) -> {history_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

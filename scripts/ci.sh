@@ -26,10 +26,18 @@ echo "== lint: fmt --check =="
 cargo fmt --check
 
 if [[ "${1:-}" != "--no-bench" ]]; then
-    echo "== bench smoke (--quick): fig4 + table1 + decode, emits BENCH_*.json =="
+    echo "== bench smoke (--quick): fig4 + table1 + decode + prefill, emits BENCH_*.json =="
     cargo bench --bench fig4_throughput -- --quick
     cargo bench --bench table1_complexity -- --quick
     cargo bench --bench decode_batched -- --quick
+    cargo bench --bench prefill_throughput -- --quick
+
+    echo "== bench history: fold BENCH_*.json into BENCH_HISTORY.json =="
+    if command -v python3 >/dev/null; then
+        python3 ../scripts/bench_history.py .
+    else
+        echo "python3 not found — skipping bench-history fold" >&2
+    fi
 fi
 
 echo "CI OK"
