@@ -1,23 +1,33 @@
-//! Decode-side batched Fenwick reads (the serving analogue of Fig. 4's
-//! level fusion): per-step read cost for a batch of sequences at mixed
-//! positions, per-sequence matvec loop vs the pooled
-//! [`BatchedDecoder`](loglinear::state::pooled::BatchedDecoder) that
-//! folds every live level of every sequence into one λ-weighted
-//! block-sparse GEMM over the state-pool slab.
+//! Decode-side batched Fenwick passes (the serving analogue of Fig. 4's
+//! level fusion), both halves of a pooled decode step:
+//!
+//! - **read**: per-step read cost for a batch of sequences at mixed
+//!   positions, per-sequence matvec loop vs the pooled
+//!   [`BatchedDecoder`](loglinear::state::pooled::BatchedDecoder) that
+//!   folds every live level of every sequence into one λ-weighted
+//!   block-sparse GEMM over the state-pool slab;
+//! - **advance**: per-step state-update cost, the per-sequence
+//!   `PooledFenwickState::advance` loop vs the pool-wide
+//!   [`BatchedAdvance`](loglinear::state::BatchedAdvance) pass that
+//!   groups every sequence's merge/transition/sentinel-write by Fenwick
+//!   level and runs the per-block work as one scattered-slab dispatch
+//!   (mixed Mamba-2 + GDN transitions across the bucket).
 //!
 //! Run: `cargo bench --bench decode_batched [-- --quick] [--threads N]`
 //!
-//! Emits `BENCH_decode.json` (per-batch ns/token for both paths, the
-//! batched/per-seq speedup, Σ live blocks, GEMM thread count) in the
-//! style of `BENCH_fig4.json`: if a previous record exists its points are
-//! carried along as `previous_ns_per_token` with a `speedup_vs_previous`
-//! table, so before/after trajectories of engine changes are recorded.
-//! The two paths are asserted bit-exact before timing.
+//! Emits `BENCH_decode.json` (per-batch ns/token for all four paths, the
+//! batched/per-seq speedups — headline `advance_speedup_vs_per_seq` —
+//! Σ live blocks, GEMM thread count) in the style of `BENCH_fig4.json`:
+//! if a previous record exists its points are carried along as
+//! `previous_ns_per_token` with a `speedup_vs_previous` table, so
+//! before/after trajectories of engine changes are recorded. Every
+//! batched path is asserted bit-exact against its per-sequence
+//! counterpart before timing.
 
 use loglinear::bench::{bench, section};
 use loglinear::state::pool::StatePool;
 use loglinear::state::pooled::{BatchedDecoder, PooledFenwickState};
-use loglinear::state::{FenwickState, Transition};
+use loglinear::state::{AdvanceJob, BatchedAdvance, FenwickState, Transition};
 use loglinear::tensor;
 use loglinear::util::json::Json;
 use loglinear::util::Rng;
@@ -117,6 +127,96 @@ fn main() {
         rows.push(("batched".into(), b, r.secs.mean, sum_live));
     }
 
+    // ---- advance path: per-sequence loop vs pool-wide batched pass ----
+    section(&format!(
+        "decode advance path: per-seq advance loop vs pool-wide batched pass (dk=dv={dk}, mixed Mamba-2/GDN, gemm_threads={})",
+        tensor::current_gemm_threads()
+    ));
+    for &b in &batches {
+        // twin pooled fixtures at the same mixed positions; pools sized
+        // for any step count a timed run can reach (t < 2^33)
+        let blocks = b * 34;
+        let mut pool_a = StatePool::new(dk * dv, blocks);
+        let mut pool_b = StatePool::new(dk * dv, blocks);
+        let mut rng = Rng::new(0xADFACE + b as u64);
+        // normalized keys keep the GDN Householder transitions contractive
+        let ks: Vec<Vec<f32>> = (0..b)
+            .map(|_| {
+                let mut k: Vec<f32> = (0..dk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let n = loglinear::tensor::ops::l2_norm(&k).max(1e-6);
+                k.iter_mut().for_each(|x| *x /= n);
+                k
+            })
+            .collect();
+        let vs: Vec<Vec<f32>> = (0..b)
+            .map(|_| (0..dv).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let mut seqs_a: Vec<PooledFenwickState> = Vec::new();
+        let mut seqs_b: Vec<PooledFenwickState> = Vec::new();
+        for i in 0..b {
+            let mut sa = PooledFenwickState::new(dk, dv);
+            let mut sb = PooledFenwickState::new(dk, dv);
+            for _ in 0..base_pos + 137 * i {
+                sa.advance(&mut pool_a, &ks[i], &vs[i], 1.0, Transition::Decay(0.999))
+                    .expect("pool sized for the trace");
+                sb.advance(&mut pool_b, &ks[i], &vs[i], 1.0, Transition::Decay(0.999))
+                    .expect("pool sized for the trace");
+            }
+            seqs_a.push(sa);
+            seqs_b.push(sb);
+        }
+        // mixed transition families across the bucket, as in serving
+        let job = |i: usize| {
+            if i % 2 == 0 {
+                (1.0, Transition::Decay(0.999))
+            } else {
+                (0.5, Transition::GatedHouseholder { alpha: 0.999, beta: 0.5, k: &ks[i] })
+            }
+        };
+        let jobs: Vec<AdvanceJob<'_>> = (0..b)
+            .map(|i| {
+                let (write_scale, transition) = job(i);
+                AdvanceJob { k: &ks[i], v: &vs[i], write_scale, transition }
+            })
+            .collect();
+        let mut adv = BatchedAdvance::new();
+        // correctness first: one batched round must be bit-exact with the
+        // per-sequence loop (states AND pool occupancy)
+        {
+            for (i, sa) in seqs_a.iter_mut().enumerate() {
+                let (ws, tr) = job(i);
+                sa.advance(&mut pool_a, &ks[i], &vs[i], ws, tr).unwrap();
+            }
+            let mut refs: Vec<&mut PooledFenwickState> = seqs_b.iter_mut().collect();
+            let refused = adv.advance_bucket(&mut pool_b, &mut refs, &jobs);
+            assert!(refused.is_empty(), "pool sized for the trace (B={b})");
+            assert_eq!(pool_a.in_use(), pool_b.in_use(), "occupancy diverged (B={b})");
+            let q: Vec<f32> = (0..dk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let lambda: Vec<f32> = (0..24).map(|l| 1.0 / (l as f32 + 1.0)).collect();
+            let (mut oa, mut ob) = (vec![0.0f32; dv], vec![0.0f32; dv]);
+            for i in 0..b {
+                seqs_a[i].read_into(&pool_a, &q, &lambda, &mut oa);
+                seqs_b[i].read_into(&pool_b, &q, &lambda, &mut ob);
+                assert_eq!(oa, ob, "batched advance diverged from per-seq loop (B={b} seq {i})");
+            }
+        }
+        let sum_live: usize = seqs_a.iter().map(|s| s.live_states()).sum();
+        let r = bench(&format!("per-seq advance loop/B={b} (Σlive={sum_live})"), 0.25, || {
+            for (i, sa) in seqs_a.iter_mut().enumerate() {
+                let (ws, tr) = job(i);
+                sa.advance(&mut pool_a, &ks[i], &vs[i], ws, tr).expect("pool sized for the trace");
+            }
+        });
+        rows.push(("advance_per_seq".into(), b, r.secs.mean, sum_live));
+        let mut refs: Vec<&mut PooledFenwickState> = seqs_b.iter_mut().collect();
+        let r = bench(&format!("batched pool advance/B={b} (Σlive={sum_live})"), 0.25, || {
+            let refused = adv.advance_bucket(&mut pool_b, &mut refs, &jobs);
+            debug_assert!(refused.is_empty());
+            std::hint::black_box(&refused);
+        });
+        rows.push(("advance_batched".into(), b, r.secs.mean, sum_live));
+    }
+
     section("ns per sequence-token (read path) and batched speedup");
     println!("{:>6} {:>16} {:>16} {:>10}", "B", "per-seq ns/tok", "batched ns/tok", "speedup");
     let mut speedup_rows: Vec<(usize, f64, f64, f64)> = Vec::new();
@@ -132,6 +232,23 @@ fn main() {
         let speedup = per_seq / batched;
         println!("{b:>6} {per_seq:>16.1} {batched:>16.1} {speedup:>9.2}x");
         speedup_rows.push((b, per_seq, batched, speedup));
+    }
+
+    section("ns per sequence-token (advance path) and batched speedup — the headline");
+    println!("{:>6} {:>16} {:>16} {:>10}", "B", "per-seq ns/tok", "batched ns/tok", "speedup");
+    let mut adv_speedup_rows: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for &b in &batches {
+        let get = |path: &str| {
+            rows.iter()
+                .find(|(p, bb, _, _)| p == path && *bb == b)
+                .map(|(_, _, s, _)| *s)
+                .unwrap()
+        };
+        let per_seq = get("advance_per_seq") * 1e9 / b as f64;
+        let batched = get("advance_batched") * 1e9 / b as f64;
+        let speedup = per_seq / batched;
+        println!("{b:>6} {per_seq:>16.1} {batched:>16.1} {speedup:>9.2}x");
+        adv_speedup_rows.push((b, per_seq, batched, speedup));
     }
 
     // ---- machine-readable record (BENCH_decode.json) ----
@@ -177,6 +294,10 @@ fn main() {
         .iter()
         .map(|(b, _, _, s)| Json::obj().set("batch", *b).set("speedup_vs_per_seq", *s))
         .collect();
+    let advance_speedup: Vec<Json> = adv_speedup_rows
+        .iter()
+        .map(|(b, _, _, s)| Json::obj().set("batch", *b).set("advance_speedup_vs_per_seq", *s))
+        .collect();
     let mut doc = Json::obj()
         .set("bench", "decode_batched")
         .set("quick", quick)
@@ -185,7 +306,8 @@ fn main() {
         .set("dv", dv)
         .set("base_pos", base_pos)
         .set("points", Json::Arr(points))
-        .set("batched_speedup", Json::Arr(batched_speedup));
+        .set("batched_speedup", Json::Arr(batched_speedup))
+        .set("advance_speedup_vs_per_seq", Json::Arr(advance_speedup));
     if !prev_speedups.is_empty() {
         doc = doc.set("speedup_vs_previous", Json::Arr(prev_speedups));
     }

@@ -8,25 +8,29 @@
 //!   gathered into batched PJRT buffers, the compiled `decode_step`
 //!   executes, states scatter back. Admission never backpressures (dense
 //!   stacks are host `Vec`s) and prompts are ingested token-by-token.
-//! - [`PooledBackend`]: the pure-Rust pooled engine. An H-head
-//!   single-layer log-linear attention LM whose per-(sequence, head)
-//!   Fenwick states live in a shared [`StatePool`]; each decode step is
-//!   matmul-rich — one [`BatchedDecoder::read_batch`] block-sparse GEMM
-//!   over every live level of every (sequence, head) in the batch, then
-//!   one `O_cat @ W_o^T` GEMM for the whole batch's logits. Prompts are
-//!   ingested **chunkwise**: [`DecodeBackend::prefill_chunk`] streams full
-//!   chunks through a per-sequence head-batched
-//!   [`PrefillEngine`](crate::prefill::PrefillEngine) (state-only Alg. 1 —
-//!   no logits until the prompt's final token), and the first decode row
-//!   flips the sequence to pooled decode states via the export bridge
-//!   ([`crate::prefill::bridge::export_prefill_head`]). Position-dependent
-//!   gates come from one [`GateTable`] consulted by both paths, so
-//!   chunkwise-prefilled and token-stepped sequences follow the same α/λ
-//!   schedule. [`DecodeBackend::admit`] reserves
-//!   `heads · blocks_for_steps(max_steps)` pool blocks per sequence and
-//!   returns [`AdmitError::Exhausted`] when the pool can't hold another
-//!   sequence — the backpressure signal the server's admission loop honors
-//!   by leaving requests queued.
+//! - [`PooledBackend`]: the pure-Rust pooled engine. An L-layer H-head
+//!   log-linear attention LM (Mamba-2 or GDN transitions, see
+//!   [`TransitionKind`]) whose per-(sequence, layer, head) Fenwick states
+//!   live in a shared [`StatePool`]; each decode step is matmul-rich —
+//!   one pool-wide [`BatchedAdvance::advance_bucket`] pass (every entry's
+//!   merge + transition + sentinel write as batched slab dispatches), one
+//!   [`BatchedDecoder::read_batch`] block-sparse GEMM over every live
+//!   level of every entry, then one `O_cat @ W_o^T` GEMM for the whole
+//!   batch's logits. Prompts are ingested **chunkwise**:
+//!   [`DecodeBackend::prefill_chunk`] streams full chunks through
+//!   per-sequence per-layer head-batched
+//!   [`PrefillEngine`](crate::prefill::PrefillEngine)s (state-only Alg. 1
+//!   — no logits until the prompt's final token), and the first decode
+//!   row flips the sequence to pooled decode states via the export bridge
+//!   ([`crate::prefill::bridge::export_prefill_head`]). Position- (and
+//!   optionally head-)dependent gates come from one [`GateTable`] per
+//!   layer consulted by both paths, so chunkwise-prefilled and
+//!   token-stepped sequences follow the same α/β/λ schedules.
+//!   [`DecodeBackend::admit`] reserves
+//!   `layers · heads · blocks_for_steps(max_steps)` pool blocks per
+//!   sequence and returns [`AdmitError::Exhausted`] when the pool can't
+//!   hold another sequence — the backpressure signal the server's
+//!   admission loop honors by leaving requests queued.
 
 use anyhow::{bail, Result};
 
@@ -35,7 +39,7 @@ use crate::prefill::PrefillEngine;
 use crate::runtime::{ModelHandle, Runtime};
 use crate::state::pool::StatePool;
 use crate::state::pooled::{blocks_for_steps, BatchedDecoder, PooledFenwickState};
-use crate::state::{GateTable, Transition};
+use crate::state::{AdvanceJob, BatchedAdvance, FenwickState, GateTable, Transition};
 use crate::tensor::{self, Mat};
 use crate::util::Rng;
 
@@ -201,35 +205,76 @@ impl DecodeBackend for PjrtBackend {
 // Pooled pure-Rust backend
 // ---------------------------------------------------------------------------
 
-/// One admitted sequence's backend-side state: a head-batched chunkwise
-/// prefill engine while the prompt streams in, then per-head pool-backed
-/// decode states (flipped by the export bridge on the first decode row).
+/// Which per-token state transition the backend's attention states apply
+/// (both serving paths: chunkwise prefill and pooled decode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransitionKind {
+    /// Mamba-2 scalar decay: `S ← α S`, sentinel write scale 1.
+    Mamba2,
+    /// Gated DeltaNet: `S ← α (I − β k k^T) S`, sentinel write scale β
+    /// (keys are L2-normalized so the Householder stays contractive).
+    Gdn,
+}
+
+/// One admitted sequence's backend-side state: per-layer head-batched
+/// chunkwise prefill engines while the prompt streams in, then per-(layer,
+/// head) pool-backed decode states (flipped by the export bridge on the
+/// first decode row). Both vectors are layer-major (decode states are
+/// additionally head-minor: index `l · heads + h`).
 enum SeqState {
-    Prefilling(PrefillEngine),
+    Prefilling(Vec<PrefillEngine>),
     Decoding(Vec<PooledFenwickState>),
 }
 
-/// Pure-Rust pooled decode backend: a fixed-weight single-layer H-head
-/// log-linear Mamba-2-style LM (random per-head embeddings + output head)
-/// whose decode states live in a shared [`StatePool`] and whose prompts
-/// ingest chunkwise through per-sequence [`PrefillEngine`]s. Exists to
-/// serve real token traffic through the batched Fenwick engines without
-/// PJRT — the scheduler/backpressure testbed and the bench engine for
+/// Pure-Rust pooled decode backend: a fixed-weight L-layer H-head
+/// log-linear attention LM (random per-(layer, head) embeddings + one
+/// output head over the concatenated layer outputs) whose decode states
+/// live in a shared [`StatePool`] and whose prompts ingest chunkwise
+/// through per-sequence, per-layer [`PrefillEngine`]s. Exists to serve
+/// real token traffic through the batched Fenwick engines without PJRT —
+/// the scheduler/backpressure testbed and the bench engine for
 /// `decode_batched` / `prefill_throughput`.
+///
+/// **Model layout (multi-layer).** Layer `l` is an independent H-head
+/// log-linear attention branch over the token stream: per-(layer, head)
+/// q/k/v embeddings, a per-layer [`GateTable`] (α/β/λ schedules, optionally
+/// per-head), and per-(sequence, layer, head) Fenwick level states in the
+/// one shared pool. A step's hidden output is the `(n, L·H·d_v)`
+/// concatenation of every layer's head outputs; logits are one
+/// `O_cat @ W_o^T` GEMM against the `(vocab, L·H·d_v)` output head.
+/// Layers are parallel branches rather than a sequential hidden-state
+/// stack: feeding layer `l`'s per-token outputs into layer `l+1` during
+/// *chunkwise prefill* would need intra-chunk attention outputs, which the
+/// state-only prefill engine deliberately skips (see the prompt-scoring
+/// open item in ROADMAP.md); parallel branches keep chunkwise-prefilled
+/// and token-stepped trajectories bit-identical, which the serving-trace
+/// differential harness depends on.
+///
+/// **Step structure.** Every decode step runs exactly two batched passes
+/// over all `n · L · H` (sequence, layer, head) entries of the bucket:
+/// one pool-wide [`BatchedAdvance::advance_bucket`] (merge + transition +
+/// sentinel write as slab dispatches — the per-sequence `advance` loop it
+/// replaces is benched against it in `decode_batched`), then one
+/// [`BatchedDecoder::read_batch`] block-sparse GEMM, whose entry order
+/// (sequence-major, layer, head) makes the output buffer the logits
+/// GEMM's left operand with no reshuffle.
 pub struct PooledBackend {
     pub dk: usize,
     pub dv: usize,
     pub vocab: usize,
     pub heads: usize,
-    /// per-head query/key/value embeddings, (vocab, dk|dk|dv) each; keys
-    /// L2-normalized
+    pub layers: usize,
+    kind: TransitionKind,
+    /// per-(layer, head) query/key/value embeddings, layer-major
+    /// (index `l · heads + h`), (vocab, dk|dk|dv) each; keys L2-normalized
     eq: Vec<Mat>,
     ek: Vec<Mat>,
     ev: Vec<Mat>,
-    /// output head, (vocab, heads·dv): logits = O_cat @ W_o^T
+    /// output head, (vocab, layers·heads·dv): logits = O_cat @ W_o^T
     wo: Mat,
-    /// position-dependent α/λ — the one gate source for prefill AND decode
-    gates: GateTable,
+    /// per-layer position-dependent α/β/λ — the one gate source for
+    /// prefill AND decode
+    gates: Vec<GateTable>,
     /// chunked-prefill chunk size (power of two; 0 disables)
     prefill_chunk: usize,
     pool: StatePool,
@@ -239,27 +284,30 @@ pub struct PooledBackend {
     reserved: Vec<usize>,
     reserved_total: usize,
     dec: BatchedDecoder,
+    adv: BatchedAdvance,
     // step workspaces (reused across steps; logits are allocated per
     // step because the trait returns an owned Vec)
     q_buf: Vec<f32>,
     o_buf: Vec<f32>,
     // prefill gather workspaces (reused across chunks: the stacked
-    // per-head (k, v) embeddings and the chunk's α schedule)
+    // per-head (k, v) embeddings and the chunk's α/β schedules)
     kc_buf: Vec<f32>,
     vc_buf: Vec<f32>,
     alpha_buf: Vec<f32>,
+    beta_buf: Vec<f32>,
 }
 
 impl PooledBackend {
-    /// Single-head backend with the default gates and a 16-token prefill
-    /// chunk. `pool_blocks` bounds resident decode memory: admission
-    /// reserves `heads · blocks_for_steps(max_steps)` blocks per sequence
+    /// Single-layer single-head backend with the default gates and a
+    /// 16-token prefill chunk. `pool_blocks` bounds resident decode
+    /// memory: admission reserves
+    /// `layers · heads · blocks_for_steps(max_steps)` blocks per sequence
     /// against it.
     pub fn new(vocab: usize, dk: usize, dv: usize, pool_blocks: usize, seed: u64) -> PooledBackend {
         PooledBackend::with_config(vocab, 1, dk, dv, 16, pool_blocks, seed)
     }
 
-    /// Fully-configured backend: `heads` attention heads and a
+    /// Single-layer Mamba-2 backend: `heads` attention heads and a
     /// `prefill_chunk`-token chunkwise prefill path (0 disables chunked
     /// prefill; the server then feeds prompts token-by-token).
     pub fn with_config(
@@ -271,16 +319,47 @@ impl PooledBackend {
         pool_blocks: usize,
         seed: u64,
     ) -> PooledBackend {
+        PooledBackend::with_model_config(
+            vocab,
+            1,
+            heads,
+            TransitionKind::Mamba2,
+            dk,
+            dv,
+            prefill_chunk,
+            pool_blocks,
+            seed,
+        )
+    }
+
+    /// Fully-configured backend: `layers` parallel attention layers of
+    /// `heads` heads each, under the `kind` state transition (see the
+    /// type docs for the model layout). A single-layer Mamba-2 config
+    /// reproduces the pre-multi-layer backend exactly (same RNG draws,
+    /// same weights, same trajectories).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_model_config(
+        vocab: usize,
+        layers: usize,
+        heads: usize,
+        kind: TransitionKind,
+        dk: usize,
+        dv: usize,
+        prefill_chunk: usize,
+        pool_blocks: usize,
+        seed: u64,
+    ) -> PooledBackend {
+        assert!(layers >= 1, "at least one layer");
         assert!(heads >= 1, "at least one head");
         assert!(
             prefill_chunk == 0 || prefill_chunk.is_power_of_two(),
             "prefill chunk must be a power of two (or 0 to disable)"
         );
         let mut rng = Rng::new(seed);
-        let mut eq = Vec::with_capacity(heads);
-        let mut ek = Vec::with_capacity(heads);
-        let mut ev = Vec::with_capacity(heads);
-        for _ in 0..heads {
+        let mut eq = Vec::with_capacity(layers * heads);
+        let mut ek = Vec::with_capacity(layers * heads);
+        let mut ev = Vec::with_capacity(layers * heads);
+        for _ in 0..layers * heads {
             eq.push(Mat::randn(vocab, dk, 1.0 / (dk as f32).sqrt(), &mut rng));
             let mut k = Mat::randn(vocab, dk, 1.0, &mut rng);
             for i in 0..vocab {
@@ -292,21 +371,23 @@ impl PooledBackend {
             ek.push(k);
             ev.push(Mat::randn(vocab, dv, 1.0, &mut rng));
         }
-        let wo = Mat::randn(vocab, heads * dv, 1.0 / ((heads * dv) as f32).sqrt(), &mut rng);
-        // default schedule: fixed α, λ^(l) = 2^-l — coarser levels matter
-        // less; wide enough for any practical position (clamped past the
-        // table by level_weight)
+        let wo = Mat::randn(vocab, layers * heads * dv, 1.0 / ((layers * heads * dv) as f32).sqrt(), &mut rng);
+        // default schedule per layer: fixed α, λ^(l) = 2^-l — coarser
+        // levels matter less; wide enough for any practical position
+        // (clamped past the table by level_weight)
         let gates = GateTable::fixed(0.97, (0..24).map(|l| 0.5f32.powi(l)).collect());
         PooledBackend {
             dk,
             dv,
             vocab,
             heads,
+            layers,
+            kind,
             eq,
             ek,
             ev,
             wo,
-            gates,
+            gates: vec![gates; layers],
             prefill_chunk,
             pool: StatePool::new(dk * dv, pool_blocks),
             slots: Vec::new(),
@@ -314,11 +395,13 @@ impl PooledBackend {
             reserved: Vec::new(),
             reserved_total: 0,
             dec: BatchedDecoder::new(),
+            adv: BatchedAdvance::new(),
             q_buf: Vec::new(),
             o_buf: Vec::new(),
             kc_buf: Vec::new(),
             vc_buf: Vec::new(),
             alpha_buf: Vec::new(),
+            beta_buf: Vec::new(),
         }
     }
 
@@ -327,16 +410,33 @@ impl PooledBackend {
         &self.pool
     }
 
-    /// Install a position-dependent gate schedule (per-token α/λ). Both
-    /// the chunkwise prefill path and the decode path read it, so the two
-    /// ingestion paths cannot drift. Only meaningful before traffic runs.
-    pub fn set_gates(&mut self, gates: GateTable) {
-        self.gates = gates;
+    /// The state-transition family this backend's layers run.
+    pub fn transition_kind(&self) -> TransitionKind {
+        self.kind
     }
 
-    /// The gate schedule currently in force.
+    /// Install a position-dependent gate schedule (per-token and/or
+    /// per-head α/β/λ) on **every** layer. Both the chunkwise prefill
+    /// path and the decode path read it, so the two ingestion paths
+    /// cannot drift. Only meaningful before traffic runs.
+    pub fn set_gates(&mut self, gates: GateTable) {
+        self.gates = vec![gates; self.layers];
+    }
+
+    /// Install one layer's gate schedule (per-layer gate tables).
+    pub fn set_layer_gates(&mut self, layer: usize, gates: GateTable) {
+        self.gates[layer] = gates;
+    }
+
+    /// The gate schedule currently in force (layer 0's; see
+    /// [`PooledBackend::layer_gates`] for the rest).
     pub fn gates(&self) -> &GateTable {
-        &self.gates
+        &self.gates[0]
+    }
+
+    /// One layer's gate schedule.
+    pub fn layer_gates(&self, layer: usize) -> &GateTable {
+        &self.gates[layer]
     }
 
     /// Number of sequences currently mid-prefill (engine states resident
@@ -349,33 +449,165 @@ impl PooledBackend {
             .count()
     }
 
-    /// Flip a prefilling slot to decode mode: seal the engine at its
-    /// chunk boundary and export every head into pool blocks through the
-    /// bridge. No-op for slots already decoding.
+    /// Flip a prefilling slot to decode mode: seal every layer's engine
+    /// at its chunk boundary and export every (layer, head) into pool
+    /// blocks through the bridge. No-op for slots already decoding.
     fn ensure_decoding(&mut self, slot: SeqSlot) -> Result<()> {
         if matches!(self.slots[slot.0], Some(SeqState::Decoding(_))) {
             return Ok(());
         }
-        let Some(SeqState::Prefilling(mut eng)) = self.slots[slot.0].take() else {
+        let Some(SeqState::Prefilling(mut engines)) = self.slots[slot.0].take() else {
             bail!("step row for a free slot");
         };
-        eng.finish();
-        let mut seqs = Vec::with_capacity(self.heads);
-        for h in 0..self.heads {
-            match export_prefill_head(&eng, h, &mut self.pool) {
-                Ok(s) => seqs.push(s),
-                Err(_) => {
-                    // roll back the heads already exported; unreachable
-                    // under admission reservation, so surface loudly
-                    for mut s in seqs {
-                        s.release(&mut self.pool);
+        let mut seqs = Vec::with_capacity(self.layers * self.heads);
+        for eng in engines.iter_mut() {
+            eng.finish();
+            for h in 0..self.heads {
+                match export_prefill_head(eng, h, &mut self.pool) {
+                    Ok(s) => seqs.push(s),
+                    Err(_) => {
+                        // roll back the states already exported;
+                        // unreachable under admission reservation, so
+                        // surface loudly
+                        for mut s in seqs {
+                            s.release(&mut self.pool);
+                        }
+                        bail!("state pool exhausted during prefill export (reservation bug?)");
                     }
-                    bail!("state pool exhausted during prefill export (reservation bug?)");
                 }
             }
         }
         self.slots[slot.0] = Some(SeqState::Decoding(seqs));
         Ok(())
+    }
+
+    /// Gather one layer's chunk inputs — the stacked per-head `(k, v)`
+    /// embedding rows and the head-major per-(head, token) α/β gate
+    /// entries — into the caller's buffers (cleared first). THE one
+    /// gather for both the serving path ([`DecodeBackend::prefill_chunk`])
+    /// and the oracle replay ([`PooledBackend::oracle_decode_logits`]),
+    /// so the two ingest bitwise-identical engine inputs by construction.
+    fn gather_chunk_inputs(
+        &self,
+        layer: usize,
+        tokens: &[i32],
+        pos: usize,
+        kc: &mut Vec<f32>,
+        vc: &mut Vec<f32>,
+        alpha: &mut Vec<f32>,
+        beta: &mut Vec<f32>,
+    ) {
+        let (heads, vocab) = (self.heads, self.vocab);
+        kc.clear();
+        vc.clear();
+        alpha.clear();
+        beta.clear();
+        for h in 0..heads {
+            for (j, &tok) in tokens.iter().enumerate() {
+                let ti = tok_index(tok, vocab);
+                kc.extend_from_slice(self.ek[layer * heads + h].row(ti));
+                vc.extend_from_slice(self.ev[layer * heads + h].row(ti));
+                alpha.push(self.gates[layer].alpha_h(h, pos + j));
+                beta.push(self.gates[layer].beta_h(h, pos + j));
+            }
+        }
+    }
+
+    /// The chunkwise-prefill position boundary for a `prompt_len`-token
+    /// prompt: the server ingests full chunks while at least one chunk
+    /// *plus the final prompt token the decode step needs* remains, so
+    /// prefill covers positions `[0, boundary)` and the decode step feeds
+    /// `[boundary, …)`.
+    pub fn prefill_boundary(&self, prompt_len: usize) -> usize {
+        let c = self.prefill_chunk;
+        let mut pe = 0;
+        if c > 0 {
+            while pe + c < prompt_len {
+                pe += c;
+            }
+        }
+        pe
+    }
+
+    /// Per-sequence **oracle replay** of one request's full serving
+    /// trajectory, on Mat-backed [`FenwickState`]s instead of the pool:
+    /// the prompt's chunkwise span re-ingests through fresh per-layer
+    /// [`PrefillEngine`]s (identical code and inputs as the serving path,
+    /// so identical floats) and exports into `FenwickState::import_levels`
+    /// — the Mat-backed mirror of the pool bridge — then every decode row
+    /// steps token-by-token. Returns `(position, logits)` for every row
+    /// the serving engine would feed through [`DecodeBackend::step`].
+    ///
+    /// `fed` is the exact token stream the server fed: the prompt followed
+    /// by the sampled tokens except the last (which is never fed back).
+    /// Bit-exactness with the pooled serving path — batched advance,
+    /// batched read, batched logits GEMM, for any bucketing/scheduling —
+    /// is the serving-trace differential property (`coordinator::trace`).
+    pub fn oracle_decode_logits(&self, prompt_len: usize, fed: &[i32]) -> Vec<(usize, Vec<f32>)> {
+        assert!(prompt_len >= 1 && prompt_len <= fed.len(), "fed must cover the prompt");
+        let (layers, heads, dk, dv, vocab) = (self.layers, self.heads, self.dk, self.dv, self.vocab);
+        let pe = self.prefill_boundary(prompt_len);
+        let c = self.prefill_chunk;
+        // 1) chunkwise prefill span, per layer (same engine code as
+        //    `prefill_chunk`; the gathers below copy the same embedding
+        //    rows and gate entries, so the inputs are bitwise identical)
+        let mut states: Vec<FenwickState> = Vec::with_capacity(layers * heads);
+        if pe > 0 {
+            let mut engines: Vec<PrefillEngine> =
+                (0..layers).map(|_| PrefillEngine::new(heads, dk, dv, c)).collect();
+            let (mut kc, mut vc, mut alpha, mut beta) =
+                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            for (l, eng) in engines.iter_mut().enumerate() {
+                let mut pos = 0;
+                while pos < pe {
+                    let tokens = &fed[pos..pos + c];
+                    self.gather_chunk_inputs(l, tokens, pos, &mut kc, &mut vc, &mut alpha, &mut beta);
+                    match self.kind {
+                        TransitionKind::Mamba2 => eng.ingest_chunk_mamba2(&kc, &vc, &alpha, None),
+                        TransitionKind::Gdn => eng.ingest_chunk_gdn(&kc, &vc, &alpha, &beta),
+                    }
+                    pos += c;
+                }
+                eng.finish();
+                for h in 0..heads {
+                    states.push(FenwickState::import_levels(dk, dv, pe, &eng.export_head(h)));
+                }
+            }
+        } else {
+            states = (0..layers * heads).map(|_| FenwickState::new(dk, dv)).collect();
+        }
+        // 2) decode rows, token by token
+        let mut out = Vec::with_capacity(fed.len() - pe);
+        let mut o_cat = vec![0.0f32; layers * heads * dv];
+        for (p, &tok) in fed.iter().enumerate().skip(pe) {
+            let ti = tok_index(tok, vocab);
+            for l in 0..layers {
+                for h in 0..heads {
+                    let e = l * heads + h;
+                    let alpha = self.gates[l].alpha_h(h, p);
+                    let (ws, tr) = match self.kind {
+                        TransitionKind::Mamba2 => (1.0, Transition::Decay(alpha)),
+                        TransitionKind::Gdn => {
+                            let beta = self.gates[l].beta_h(h, p);
+                            (beta, Transition::GatedHouseholder { alpha, beta, k: self.ek[e].row(ti) })
+                        }
+                    };
+                    let o = states[e].step(
+                        self.eq[e].row(ti),
+                        self.ek[e].row(ti),
+                        self.ev[e].row(ti),
+                        ws,
+                        tr,
+                        self.gates[l].lambda_h(h, p),
+                    );
+                    o_cat[e * dv..(e + 1) * dv].copy_from_slice(&o);
+                }
+            }
+            let mut logits = vec![0.0f32; vocab];
+            tensor::gemm_nt_into(1, layers * heads * dv, vocab, &o_cat, &self.wo.data, &mut logits, false);
+            out.push((p, logits));
+        }
+        out
     }
 }
 
@@ -387,7 +619,7 @@ fn tok_index(tok: i32, vocab: usize) -> usize {
 
 impl DecodeBackend for PooledBackend {
     fn admit(&mut self, max_steps: usize) -> Result<SeqSlot, AdmitError> {
-        let need = self.heads * blocks_for_steps(max_steps.max(1));
+        let need = self.layers * self.heads * blocks_for_steps(max_steps.max(1));
         if need > self.pool.capacity() {
             return Err(AdmitError::TooLarge);
         }
@@ -406,9 +638,17 @@ impl DecodeBackend for PooledBackend {
         // a fresh sequence starts in prefill mode when the backend has a
         // chunked-prefill path; with it disabled, decode states from step 0
         self.slots[idx] = Some(if self.prefill_chunk > 0 {
-            SeqState::Prefilling(PrefillEngine::new(self.heads, self.dk, self.dv, self.prefill_chunk))
+            SeqState::Prefilling(
+                (0..self.layers)
+                    .map(|_| PrefillEngine::new(self.heads, self.dk, self.dv, self.prefill_chunk))
+                    .collect(),
+            )
         } else {
-            SeqState::Decoding((0..self.heads).map(|_| PooledFenwickState::new(self.dk, self.dv)).collect())
+            SeqState::Decoding(
+                (0..self.layers * self.heads)
+                    .map(|_| PooledFenwickState::new(self.dk, self.dv))
+                    .collect(),
+            )
         });
         self.reserved[idx] = need;
         Ok(SeqSlot(idx))
@@ -440,33 +680,46 @@ impl DecodeBackend for PooledBackend {
         if tokens.len() != c {
             bail!("prefill chunk must be exactly {c} tokens, got {}", tokens.len());
         }
-        let (heads, dk, dv, vocab) = (self.heads, self.dk, self.dv, self.vocab);
-        // per-token gates from the shared schedule — the same source the
-        // decode step reads
-        self.alpha_buf.clear();
-        self.alpha_buf.extend((0..c).map(|j| self.gates.alpha(pos + j)));
-        // stacked per-head (k, v) for the chunk: (H, C, dk) / (H, C, dv),
-        // gathered into persistent workspaces (this is the serving hot
-        // path — no steady-state allocation)
-        self.kc_buf.clear();
-        self.vc_buf.clear();
-        for h in 0..heads {
-            for &tok in tokens {
-                let ti = tok_index(tok, vocab);
-                self.kc_buf.extend_from_slice(self.ek[h].row(ti));
-                self.vc_buf.extend_from_slice(self.ev[h].row(ti));
+        let (layers, heads, dk, dv) = (self.layers, self.heads, self.dk, self.dv);
+        {
+            let state = self.slots[slot.0].as_ref().expect("prefill of free slot");
+            let SeqState::Prefilling(engines) = state else {
+                bail!("prefill_chunk after decode began");
+            };
+            if engines[0].tokens() != pos {
+                bail!("prefill position desync: engine at {}, chunk at {pos}", engines[0].tokens());
             }
         }
-        debug_assert_eq!(self.kc_buf.len(), heads * c * dk);
-        debug_assert_eq!(self.vc_buf.len(), heads * c * dv);
-        let state = self.slots[slot.0].as_mut().expect("prefill of free slot");
-        let SeqState::Prefilling(eng) = state else {
-            bail!("prefill_chunk after decode began");
-        };
-        if eng.tokens() != pos {
-            bail!("prefill position desync: engine at {}, chunk at {pos}", eng.tokens());
+        for l in 0..layers {
+            // per-(head, token) gates from the layer's shared schedule —
+            // the same source the decode step reads — and the stacked
+            // per-head (k, v) embeddings: (H, C, dk) / (H, C, dv), via
+            // the one shared gather (`gather_chunk_inputs`) into
+            // persistent workspaces, taken out for the call (this is the
+            // serving hot path — no steady-state allocation)
+            let mut kc = std::mem::take(&mut self.kc_buf);
+            let mut vc = std::mem::take(&mut self.vc_buf);
+            let mut alpha = std::mem::take(&mut self.alpha_buf);
+            let mut beta = std::mem::take(&mut self.beta_buf);
+            self.gather_chunk_inputs(l, tokens, pos, &mut kc, &mut vc, &mut alpha, &mut beta);
+            debug_assert_eq!(kc.len(), heads * c * dk);
+            debug_assert_eq!(vc.len(), heads * c * dv);
+            let Some(SeqState::Prefilling(engines)) = self.slots[slot.0].as_mut() else {
+                unreachable!("checked above")
+            };
+            match self.kind {
+                TransitionKind::Mamba2 => {
+                    engines[l].ingest_chunk_mamba2(&kc, &vc, &alpha, None)
+                }
+                TransitionKind::Gdn => {
+                    engines[l].ingest_chunk_gdn(&kc, &vc, &alpha, &beta)
+                }
+            }
+            self.kc_buf = kc;
+            self.vc_buf = vc;
+            self.alpha_buf = alpha;
+            self.beta_buf = beta;
         }
-        eng.ingest_chunk_mamba2(&self.kc_buf, &self.vc_buf, &self.alpha_buf, None);
         Ok(())
     }
 
@@ -475,61 +728,96 @@ impl DecodeBackend for PooledBackend {
         if n == 0 {
             return Ok(Vec::new());
         }
-        let (heads, dv, vocab) = (self.heads, self.dv, self.vocab);
+        let (layers, heads, dv, vocab) = (self.layers, self.heads, self.dv, self.vocab);
         // 0) rows arriving from chunked prefill flip to pooled decode
         //    states via the export bridge
         for &(slot, _, _) in rows {
             self.ensure_decoding(slot)?;
         }
-        // 1) per-(sequence, head) state update (merge + decay + write)
-        for &(slot, tok, pos) in rows {
+        // 1) the pool-wide batched advance: every (sequence, layer, head)
+        //    entry's merge + transition + sentinel write in ONE
+        //    advance_bucket pass (level-major merges, one fused
+        //    transition+write slab dispatch) — the per-sequence `advance`
+        //    loop this replaces is the bench baseline in `decode_batched`.
+        //    States are taken out of their slots for the duration so the
+        //    pass can hold one &mut per entry without unsafe.
+        let mut taken: Vec<(usize, Vec<PooledFenwickState>)> = Vec::with_capacity(n);
+        for &(slot, _, _) in rows {
+            let Some(SeqState::Decoding(seqs)) = self.slots[slot.0].take() else {
+                unreachable!("ensured above")
+            };
+            taken.push((slot.0, seqs));
+        }
+        let mut jobs: Vec<AdvanceJob<'_>> = Vec::with_capacity(n * layers * heads);
+        for &(_, tok, pos) in rows {
             let ti = tok_index(tok, vocab);
-            let alpha = self.gates.alpha(pos as usize);
-            let state = self.slots[slot.0].as_mut().expect("live slot");
-            let SeqState::Decoding(seqs) = state else { unreachable!("ensured above") };
-            for (h, seq) in seqs.iter_mut().enumerate() {
-                debug_assert_eq!(seq.t as i32, pos, "position desync (head {h})");
-                if seq
-                    .advance(&mut self.pool, self.ek[h].row(ti), self.ev[h].row(ti), 1.0, Transition::Decay(alpha))
-                    .is_err()
-                {
-                    // unreachable under admission reservation; surface loudly
-                    bail!("state pool exhausted mid-step (reservation bug?)");
+            for l in 0..layers {
+                for h in 0..heads {
+                    let e = l * heads + h;
+                    let alpha = self.gates[l].alpha_h(h, pos as usize);
+                    let k = self.ek[e].row(ti);
+                    let (write_scale, transition) = match self.kind {
+                        TransitionKind::Mamba2 => (1.0, Transition::Decay(alpha)),
+                        TransitionKind::Gdn => {
+                            let beta = self.gates[l].beta_h(h, pos as usize);
+                            (beta, Transition::GatedHouseholder { alpha, beta, k })
+                        }
+                    };
+                    jobs.push(AdvanceJob { k, v: self.ev[e].row(ti), write_scale, transition });
                 }
             }
         }
-        // 2) the batched read: every live level of every (sequence, head)
-        //    in the batch, one fused block-sparse GEMM over the pool slab.
-        //    Entry order (seq-major, head-minor) makes o_buf row-major
-        //    (n, H·dv) — the logits GEMM's left operand, no reshuffle.
+        let refused = {
+            let mut refs: Vec<&mut PooledFenwickState> =
+                taken.iter_mut().flat_map(|(_, seqs)| seqs.iter_mut()).collect();
+            debug_assert!(refs
+                .iter()
+                .zip(jobs.iter().enumerate())
+                .all(|(s, (e, _))| s.t as i32 == rows[e / (layers * heads)].2));
+            self.adv.advance_bucket(&mut self.pool, &mut refs, &jobs)
+        };
+        drop(jobs);
+        for (slot_idx, seqs) in taken {
+            self.slots[slot_idx] = Some(SeqState::Decoding(seqs));
+        }
+        if !refused.is_empty() {
+            // unreachable under admission reservation; surface loudly
+            bail!("state pool exhausted mid-step (reservation bug?)");
+        }
+        // 2) the batched read: every live level of every (sequence,
+        //    layer, head) in the batch, one fused block-sparse GEMM over
+        //    the pool slab. Entry order (seq-major, layer, head) makes
+        //    o_buf row-major (n, L·H·dv) — the logits GEMM's left
+        //    operand, no reshuffle.
         self.q_buf.clear();
         for &(_, tok, _) in rows {
             let ti = tok_index(tok, vocab);
-            for h in 0..heads {
-                self.q_buf.extend_from_slice(self.eq[h].row(ti));
+            for e in 0..layers * heads {
+                self.q_buf.extend_from_slice(self.eq[e].row(ti));
             }
         }
         self.o_buf.clear();
-        self.o_buf.resize(n * heads * dv, 0.0);
+        self.o_buf.resize(n * layers * heads * dv, 0.0);
         {
-            let mut seq_refs: Vec<&PooledFenwickState> = Vec::with_capacity(n * heads);
-            let mut lambdas: Vec<&[f32]> = Vec::with_capacity(n * heads);
+            let mut seq_refs: Vec<&PooledFenwickState> = Vec::with_capacity(n * layers * heads);
+            let mut lambdas: Vec<&[f32]> = Vec::with_capacity(n * layers * heads);
             for &(slot, _, pos) in rows {
                 let Some(SeqState::Decoding(seqs)) = self.slots[slot.0].as_ref() else {
                     unreachable!("ensured above")
                 };
-                let lam = self.gates.lambda(pos as usize);
-                for seq in seqs {
-                    seq_refs.push(seq);
-                    lambdas.push(lam);
+                for l in 0..layers {
+                    for h in 0..heads {
+                        seq_refs.push(&seqs[l * heads + h]);
+                        lambdas.push(self.gates[l].lambda_h(h, pos as usize));
+                    }
                 }
             }
             self.dec
                 .read_batch(&self.pool, &seq_refs, &self.q_buf, &lambdas, &mut self.o_buf);
         }
-        // 3) whole-batch logits in one GEMM: (n, H·dv) @ (vocab, H·dv)^T
+        // 3) whole-batch logits in one GEMM: (n, L·H·dv) @ (vocab, L·H·dv)^T
         let mut logits = vec![0.0f32; n * vocab];
-        tensor::gemm_nt_into(n, heads * dv, vocab, &self.o_buf, &self.wo.data, &mut logits, false);
+        tensor::gemm_nt_into(n, layers * heads * dv, vocab, &self.o_buf, &self.wo.data, &mut logits, false);
         Ok(logits)
     }
 
@@ -539,7 +827,7 @@ impl DecodeBackend for PooledBackend {
             .iter()
             .flatten()
             .map(|s| match s {
-                SeqState::Prefilling(eng) => eng.state_bytes(),
+                SeqState::Prefilling(engines) => engines.iter().map(|e| e.state_bytes()).sum(),
                 SeqState::Decoding(_) => 0,
             })
             .sum();

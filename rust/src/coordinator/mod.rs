@@ -21,10 +21,19 @@
 //!   exhaustion surfaces as admission backpressure instead of OOM:
 //!   admission reserves `heads · blocks_for_steps(max_steps)` blocks per
 //!   sequence and requests wait in the FIFO queue while the pool is
-//!   committed. Prompts ingest **chunkwise** through per-sequence
+//!   committed. Each step first advances every (sequence, layer, head)
+//!   entry's state through the pool-wide batched Fenwick pass
+//!   ([`crate::state::BatchedAdvance`] — merges, transitions, and
+//!   sentinel writes grouped by level and executed as slab dispatches).
+//!   Prompts ingest **chunkwise** through per-sequence per-layer
 //!   head-batched [`crate::prefill::PrefillEngine`]s
 //!   ([`backend::DecodeBackend::prefill_chunk`]) and flip into pool
-//!   blocks via the export bridge on their first decode row.
+//!   blocks via the export bridge on their first decode row. Models are
+//!   L-layer, H-head, Mamba-2 or GDN ([`backend::TransitionKind`]), with
+//!   per-layer (optionally per-head) gate tables; the serving-trace
+//!   differential suite ([`server`] tests + the `trace` property module)
+//!   pins every path to a per-sequence `FenwickState` oracle replay,
+//!   bit-exactly.
 //! - [`server`]: the engine loop — admits (honoring backpressure),
 //!   advances one prefill chunk per still-prefilling prompt, schedules
 //!   decode rows round-robin through the batch policy's bucket, samples
@@ -39,6 +48,8 @@
 pub mod backend;
 pub mod batcher;
 pub mod server;
+#[cfg(test)]
+mod trace;
 
 /// A generation request.
 #[derive(Debug, Clone)]

@@ -136,6 +136,10 @@ pub struct DecodeServer<B: DecodeBackend> {
     pub stats: ServerStats,
     /// when the current "wait for a fuller bucket" hold started
     hold_since: Option<Instant>,
+    /// record every decode row's logits (differential-test hook)
+    capture_logits: bool,
+    /// captured (sequence id, position, logits) rows, in execution order
+    logit_log: Vec<(u64, usize, Vec<f32>)>,
 }
 
 impl DecodeServer<PjrtBackend> {
@@ -161,7 +165,22 @@ impl<B: DecodeBackend> DecodeServer<B> {
             finished: Vec::new(),
             stats: ServerStats::default(),
             hold_since: None,
+            capture_logits: false,
+            logit_log: Vec::new(),
         }
+    }
+
+    /// Record every decode row's logits from here on — the serving-trace
+    /// differential harness compares them bit-for-bit against a
+    /// per-sequence oracle replay (see `coordinator::trace`). Test-scale
+    /// traffic only: every row's `(id, position, logits)` is kept.
+    pub fn enable_logit_capture(&mut self) {
+        self.capture_logits = true;
+    }
+
+    /// Drain the captured `(id, position, logits)` rows (execution order).
+    pub fn take_captured_logits(&mut self) -> Vec<(u64, usize, Vec<f32>)> {
+        std::mem::take(&mut self.logit_log)
     }
 
     /// Enqueue a request. Empty prompts are rejected (there is no token
@@ -352,6 +371,9 @@ impl<B: DecodeBackend> DecodeServer<B> {
         let vocab = logits.len() / n;
         for (j, &i) in sched.iter().enumerate() {
             let seq = &mut self.running[i];
+            if self.capture_logits {
+                self.logit_log.push((seq.id, seq.pos, logits[j * vocab..(j + 1) * vocab].to_vec()));
+            }
             seq.pos += 1;
             seq.steps += 1;
             seq.decode_steps += 1;

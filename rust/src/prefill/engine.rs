@@ -30,9 +30,14 @@
 //! for prompt scoring (per-token log-probs) — and covers the inter-chunk
 //! contribution only.
 //!
-//! Gates (`α`, `β`, λ) are shared across heads, matching the pooled
-//! backend's [`crate::state::GateTable`]; per-head gate tables would only
-//! change the bookkeeping, not the batched GEMM structure.
+//! Gates (`α`, `β`) may be **shared or per-head** (the ROADMAP per-head
+//! gate-tables item): ingest accepts either `C` gates applied to every
+//! head or `H·C` head-major gates, matching the pooled backend's
+//! per-head [`crate::state::GateTable`]. The shared case is executed as
+//! the per-head case with the schedule replicated bit-identically, so
+//! one code path serves both and a shared schedule reproduces the
+//! pre-per-head results exactly (regression-tested below). As predicted,
+//! only the bookkeeping changes — every batched GEMM keeps its shape.
 
 use crate::attention::deltanet::apply_householder_slice;
 use crate::attention::loglinear::ChunkFenwick;
@@ -44,10 +49,11 @@ use crate::tensor::{self, Mat};
 pub struct LevelRead<'a> {
     /// stacked queries `(H, C, d_k)`, head-major row-major
     pub qs: &'a [f32],
-    /// λ lookup `(chunk-local row, token level) → weight` (token level =
-    /// `log2(C) + chunk level`; the engine folds the intra-chunk
-    /// cumulative decay in itself)
-    pub lambda: &'a dyn Fn(usize, usize) -> f32,
+    /// λ lookup `(head, chunk-local row, token level) → weight` (token
+    /// level = `log2(C) + chunk level`; the engine folds the intra-chunk
+    /// cumulative decay in itself; ignore the head argument for schedules
+    /// shared across heads)
+    pub lambda: &'a dyn Fn(usize, usize, usize) -> f32,
     /// stacked outputs `(H, C, d_v)`, accumulated into
     pub out: &'a mut [f32],
 }
@@ -140,35 +146,53 @@ impl PrefillEngine {
         (self.fen.live_states() * self.heads * self.dk * self.dv + self.scratch.data.len()) * 4
     }
 
-    /// Intra-chunk cumulative decays `g[i] = Π_{j<=i} α_j` into `self.g`
-    /// (f64 accumulator, matching the chunkwise reference paths).
+    /// Intra-chunk cumulative decays, head-major `(H, C)`:
+    /// `g[h·C + i] = Π_{j≤i} α^h_j` (f64 accumulator per head, matching
+    /// the chunkwise reference paths). `alpha` holds either `C` shared
+    /// gates — replicated bit-identically per head — or `H·C` head-major
+    /// per-head gates.
     fn fill_decays(&mut self, alpha: &[f32]) {
+        let (h, c) = (self.heads, self.chunk);
+        assert!(
+            alpha.len() == c || alpha.len() == h * c,
+            "alpha must hold C (shared) or H*C (per-head) gates, got {}",
+            alpha.len()
+        );
         self.g.clear();
-        let mut acc = 1.0f64;
-        for &a in alpha {
-            acc *= a as f64;
-            self.g.push(acc as f32);
+        for head in 0..alpha.len() / c {
+            let mut acc = 1.0f64;
+            for &a in &alpha[head * c..(head + 1) * c] {
+                acc *= a as f64;
+                self.g.push(acc as f32);
+            }
+        }
+        while self.g.len() < h * c {
+            self.g.extend_from_within(0..c);
         }
     }
 
-    /// `wscale = H copies of [w_c / g[0], …, w_c / g[C-1]]` — the
-    /// per-token write weights, repeated per head for the batched
-    /// `K^T diag(w) V` kernel.
-    fn fill_wscale(&mut self, chunk_decay: f32) {
+    /// `wscale[h·C + j] = g[h·C + C−1] / g[h·C + j]` — the per-token
+    /// write weights for the batched `K^T diag(w) V` kernel, head-major
+    /// (each head's chunk decay over its own cumulative decays).
+    fn fill_wscale(&mut self) {
+        let (h, c) = (self.heads, self.chunk);
         self.wscale.clear();
-        for _ in 0..self.heads {
-            for &gj in &self.g {
-                self.wscale.push(chunk_decay / gj);
+        for head in 0..h {
+            let gh = &self.g[head * c..(head + 1) * c];
+            let cd = gh[c - 1];
+            for &gj in gh {
+                self.wscale.push(cd / gj);
             }
         }
     }
 
     /// Ingest one full chunk for every head under the Mamba-2 (scalar
     /// decay) transition. `ks` is `(H, C, d_k)` and `vs` `(H, C, d_v)`,
-    /// head-major row-major; `alpha` the chunk's `C` per-token decay
-    /// gates (shared across heads). Pass [`LevelRead`] to also read the
-    /// chunk's inter-chunk contribution (one head-batched `Q_c S_cat`
-    /// GEMM over the pre-transition states).
+    /// head-major row-major; `alpha` the chunk's decay gates — `C`
+    /// shared across heads or `H·C` head-major per-head. Pass
+    /// [`LevelRead`] to also read the chunk's inter-chunk contribution
+    /// (one head-batched `Q_c S_cat` GEMM over the pre-transition
+    /// states).
     pub fn ingest_chunk_mamba2(
         &mut self,
         ks: &[f32],
@@ -178,7 +202,6 @@ impl PrefillEngine {
     ) {
         assert!(!self.finished, "ingest after finish()");
         let (h, c, dk, dv) = (self.heads, self.chunk, self.dk, self.dv);
-        assert_eq!(alpha.len(), c, "alpha shape");
         assert_eq!(ks.len(), h * c * dk, "ks shape");
         assert_eq!(vs.len(), h * c * dv, "vs shape");
         self.fen.advance(self.z);
@@ -186,52 +209,71 @@ impl PrefillEngine {
         if let Some(rd) = read {
             let g = std::mem::take(&mut self.g);
             let lam = rd.lambda;
-            self.batched_level_read(rd.qs, &mut |i, lvl| lam(i, lvl) * g[i], rd.out);
+            self.batched_level_read(
+                rd.qs,
+                &mut |head, i, lvl| lam(head, i, lvl) * g[head * c + i],
+                rd.out,
+            );
             self.g = g;
         }
-        let chunk_decay = self.g[c - 1];
-        self.fill_wscale(chunk_decay);
+        self.fill_wscale();
         // the new chunk state, all heads in one batched fused kernel
         let mut s_new = self.fen.take_buffer(h * dk, dv);
         tensor::gemm_tn_diag_batch_acc(h, c, dk, dv, &self.wscale, ks, vs, &mut s_new.data);
-        // transition carried states (the chunk sentinel was merged away
-        // by the advance above, so only carried buckets remain)
-        self.fen.apply_transition(|s| s.scale_inplace(chunk_decay));
+        // transition carried states with each head's chunk decay (the
+        // chunk sentinel was merged away by the advance above, so only
+        // carried buckets remain); elementwise per head-row-range, so a
+        // shared schedule reproduces the old whole-state scale exactly
+        let g = &self.g;
+        self.fen.apply_transition(|s| {
+            for head in 0..h {
+                let cd = g[head * c + c - 1];
+                for x in s.rows_data_mut(head * dk, (head + 1) * dk) {
+                    *x *= cd;
+                }
+            }
+        });
         self.fen.set_level0(s_new);
         self.z += 1;
     }
 
     /// Ingest one full chunk for every head under the Gated-DeltaNet
     /// (gated Householder chain) transition. Shapes as in
-    /// [`PrefillEngine::ingest_chunk_mamba2`]; `beta` the chunk's `C`
-    /// delta strengths (shared across heads). State-only (no read seam:
-    /// GDN reads need the effective-query chain, which serving prefill
-    /// never exercises).
+    /// [`PrefillEngine::ingest_chunk_mamba2`]; `alpha` and `beta` are the
+    /// chunk's decay gates / delta strengths — each either `C` shared
+    /// across heads or `H·C` head-major per-head. State-only (no read
+    /// seam: GDN reads need the effective-query chain, which serving
+    /// prefill never exercises).
     pub fn ingest_chunk_gdn(&mut self, ks: &[f32], vs: &[f32], alpha: &[f32], beta: &[f32]) {
         assert!(!self.finished, "ingest after finish()");
         let (h, c, dk, dv) = (self.heads, self.chunk, self.dk, self.dv);
-        assert_eq!(alpha.len(), c, "alpha shape");
-        assert_eq!(beta.len(), c, "beta shape");
+        assert!(
+            beta.len() == c || beta.len() == h * c,
+            "beta must hold C (shared) or H*C (per-head) strengths, got {}",
+            beta.len()
+        );
         assert_eq!(ks.len(), h * c * dk, "ks shape");
         assert_eq!(vs.len(), h * c * dv, "vs shape");
         self.fen.advance(self.z);
         self.fill_decays(alpha);
-        let g_c = self.g[c - 1];
+        let per_head_beta = beta.len() == h * c;
+        let b_at = |head: usize, j: usize| if per_head_beta { beta[head * c + j] } else { beta[j] };
 
         // UT systems for all heads in one batched K_c K_c^T, then the
-        // O(C²) scaling pass per head:
-        // sys_h = I + StrictTril(diag(β) (K K^T) ⊙ (g_i/g_j))
+        // O(C²) scaling pass per head (each head its own β/g schedules):
+        // sys_h = I + StrictTril(diag(β^h) (K K^T) ⊙ (g^h_i/g^h_j))
         self.sys.clear();
         self.sys.resize(h * c * c, 0.0);
         tensor::gemm_nt_batch_into(h, c, dk, c, ks, ks, &mut self.sys, false);
         for head in 0..h {
+            let gh = &self.g[head * c..(head + 1) * c];
             let sys_h = &mut self.sys[head * c * c..(head + 1) * c * c];
             for i in 0..c {
-                let (bi, gi) = (beta[i], self.g[i]);
+                let (bi, gi) = (b_at(head, i), gh[i]);
                 let row = &mut sys_h[i * c..(i + 1) * c];
                 for (j, sij) in row.iter_mut().enumerate() {
                     if j < i {
-                        *sij *= bi * (gi / self.g[j]);
+                        *sij *= bi * (gi / gh[j]);
                     } else {
                         *sij = if j == i { 1.0 } else { 0.0 };
                     }
@@ -239,13 +281,13 @@ impl PrefillEngine {
             }
         }
 
-        // Ŵ_h = sys_h^{-1} diag(β) V_h by in-place forward substitution
+        // Ŵ_h = sys_h^{-1} diag(β^h) V_h by in-place forward substitution
         self.what.clear();
         self.what.reserve(h * c * dv);
         for head in 0..h {
             for i in 0..c {
                 let v_row = &vs[(head * c + i) * dv..(head * c + i + 1) * dv];
-                let bi = beta[i];
+                let bi = b_at(head, i);
                 self.what.extend(v_row.iter().map(|&x| bi * x));
             }
         }
@@ -264,12 +306,12 @@ impl PrefillEngine {
             }
         }
 
-        // S_new_h = K_h^T diag(g_C/g_s) Ŵ_h, all heads batched
-        self.fill_wscale(g_c);
+        // S_new_h = K_h^T diag(g^h_C/g^h_s) Ŵ_h, all heads batched
+        self.fill_wscale();
         let mut s_new = self.fen.take_buffer(h * dk, dv);
         tensor::gemm_tn_diag_batch_acc(h, c, dk, dv, &self.wscale, ks, &self.what, &mut s_new.data);
 
-        // materialize Φ_h = g_C · (I − β_{C-1} k k^T) ··· (I − β_0 k k^T)
+        // materialize Φ_h = g^h_C · (I − β^h_{C-1} k k^T) ··· (I − β^h_0 k k^T)
         // per head, then advance every carried state with one batched
         // (d_k, d_k) GEMM per level (block-diagonal analogue of
         // ChunkFenwick::apply_matrix_transition, swapping through the
@@ -283,11 +325,12 @@ impl PrefillEngine {
             }
             for j in 0..c {
                 let k_row = &ks[(head * c + j) * dk..(head * c + j + 1) * dk];
-                apply_householder_slice(phi_h, dk, k_row, beta[j]);
+                apply_householder_slice(phi_h, dk, k_row, b_at(head, j));
             }
-        }
-        for x in self.phi.iter_mut() {
-            *x *= g_c;
+            let g_ch = self.g[head * c + c - 1];
+            for x in phi_h.iter_mut() {
+                *x *= g_ch;
+            }
         }
         let phi = &self.phi;
         let scratch = &mut self.scratch;
@@ -302,12 +345,13 @@ impl PrefillEngine {
 
     /// Head-batched inter-chunk level read: concat each head's live level
     /// states into `S_cat^h (d_k, L·d_v)`, one batched `Q^h @ S_cat^h`
-    /// GEMM, then the weight fold. `weight(row, token_level)` must
-    /// already include any intra-chunk decay factor.
+    /// GEMM, then the weight fold. `weight(head, row, token_level)` must
+    /// already include any intra-chunk decay factor (per-head, for
+    /// per-head gate schedules).
     fn batched_level_read(
         &mut self,
         qs: &[f32],
-        weight: &mut dyn FnMut(usize, usize) -> f32,
+        weight: &mut dyn FnMut(usize, usize, usize) -> f32,
         out: &mut [f32],
     ) {
         let (h, c, dk, dv) = (self.heads, self.chunk, self.dk, self.dv);
@@ -335,11 +379,11 @@ impl PrefillEngine {
         tensor::gemm_batch_into(h, c, dk, ncat, qs, &self.cat, &mut self.read_buf, false);
         let lc = self.chunk.trailing_zeros() as usize;
         for row in 0..h * c {
-            let i = row % c; // chunk-local position (weights shared across heads)
+            let (head, i) = (row / c, row % c); // head + chunk-local position
             let prow = &self.read_buf[row * ncat..(row + 1) * ncat];
             let orow = &mut out[row * dv..(row + 1) * dv];
             for (li, &lvl) in self.active_ids.iter().enumerate() {
-                let w = weight(i, lc + lvl);
+                let w = weight(head, i, lc + lvl);
                 if w == 0.0 {
                     continue;
                 }
@@ -483,7 +527,7 @@ mod tests {
             let vc = stack_chunk(&vs, z, c);
             let qc = stack_chunk(&qs, z, c);
             let start = z * c;
-            let lam = |i: usize, lvl: usize| lambda.at(start + i, lvl);
+            let lam = |_h: usize, i: usize, lvl: usize| lambda.at(start + i, lvl);
             eng.ingest_chunk_mamba2(
                 &kc,
                 &vc,
@@ -528,6 +572,157 @@ mod tests {
                 );
                 oracle.apply_transition(|s| s.scale_inplace(chunk_decay));
                 oracle.set_level0(w);
+            }
+        }
+    }
+
+    /// Per-head gate schedules (ROADMAP per-head gate-tables item): an
+    /// H-head engine fed `H·C` head-major gates must match, per head, a
+    /// 1-head engine run with that head's schedule — bit-exact, for both
+    /// variants — and distinct schedules must actually change the states.
+    #[test]
+    fn per_head_gates_match_single_head_engines_and_differ_across_heads() {
+        let mut rng = Rng::new(0x9E3);
+        let (heads, dk, dv, c, t_len) = (3usize, 6usize, 5usize, 4usize, 24usize); // 6 chunks
+        let ks: Vec<Mat> = (0..heads)
+            .map(|_| {
+                let mut k = Mat::randn(t_len, dk, 1.0, &mut rng);
+                for i in 0..t_len {
+                    let n = crate::tensor::ops::l2_norm(k.row(i)).max(1e-6);
+                    for x in k.row_mut(i) {
+                        *x /= n;
+                    }
+                }
+                k
+            })
+            .collect();
+        let vs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dv, 1.0, &mut rng)).collect();
+        // distinct per-head α/β schedules, head-major (H, T)
+        let alpha: Vec<Vec<f32>> = (0..heads)
+            .map(|h| (0..t_len).map(|_| rng.range_f32(0.7 + 0.05 * h as f32, 1.0)).collect())
+            .collect();
+        let beta: Vec<Vec<f32>> = (0..heads)
+            .map(|_| (0..t_len).map(|_| rng.range_f32(0.1, 1.0)).collect())
+            .collect();
+
+        for gdn in [false, true] {
+            let mut eng = PrefillEngine::new(heads, dk, dv, c);
+            for z in 0..t_len / c {
+                let (s, e) = (z * c, (z + 1) * c);
+                let kc = stack_chunk(&ks, z, c);
+                let vc = stack_chunk(&vs, z, c);
+                let mut ac = Vec::new();
+                let mut bc = Vec::new();
+                for h in 0..heads {
+                    ac.extend_from_slice(&alpha[h][s..e]);
+                    bc.extend_from_slice(&beta[h][s..e]);
+                }
+                if gdn {
+                    eng.ingest_chunk_gdn(&kc, &vc, &ac, &bc);
+                } else {
+                    eng.ingest_chunk_mamba2(&kc, &vc, &ac, None);
+                }
+            }
+            eng.finish();
+
+            for h in 0..heads {
+                let mut solo = PrefillEngine::new(1, dk, dv, c);
+                for z in 0..t_len / c {
+                    let (s, e) = (z * c, (z + 1) * c);
+                    if gdn {
+                        solo.ingest_chunk_gdn(
+                            ks[h].rows_data(s, e),
+                            vs[h].rows_data(s, e),
+                            &alpha[h][s..e],
+                            &beta[h][s..e],
+                        );
+                    } else {
+                        solo.ingest_chunk_mamba2(
+                            ks[h].rows_data(s, e),
+                            vs[h].rows_data(s, e),
+                            &alpha[h][s..e],
+                            None,
+                        );
+                    }
+                }
+                solo.finish();
+                let got = eng.export_head(h);
+                let want = solo.export_head(0);
+                assert_eq!(got.len(), want.len(), "gdn={gdn} head {h}: live level count");
+                for ((gl, gs), (wl, ws)) in got.iter().zip(want.iter()) {
+                    assert_eq!(gl, wl, "gdn={gdn} head {h}: level mismatch");
+                    assert_eq!(*gs, *ws, "gdn={gdn} head {h} level {gl}: not bit-exact");
+                }
+            }
+            // distinct schedules must actually distinguish the heads: run
+            // head 1's inputs under head 0's schedule and require a
+            // different state (guards against a head index being dropped)
+            let mut cross = PrefillEngine::new(1, dk, dv, c);
+            for z in 0..t_len / c {
+                let (s, e) = (z * c, (z + 1) * c);
+                if gdn {
+                    cross.ingest_chunk_gdn(
+                        ks[1].rows_data(s, e),
+                        vs[1].rows_data(s, e),
+                        &alpha[0][s..e],
+                        &beta[0][s..e],
+                    );
+                } else {
+                    cross.ingest_chunk_mamba2(
+                        ks[1].rows_data(s, e),
+                        vs[1].rows_data(s, e),
+                        &alpha[0][s..e],
+                        None,
+                    );
+                }
+            }
+            cross.finish();
+            let h1 = eng.export_head(1);
+            let x0 = cross.export_head(0);
+            assert!(
+                h1.iter().zip(x0.iter()).any(|((_, a), (_, b))| a != b),
+                "gdn={gdn}: distinct per-head schedules must change the states"
+            );
+        }
+    }
+
+    /// A shared `C`-gate schedule and the same schedule replicated `H·C`
+    /// head-major must be bit-identical (the shared path IS the per-head
+    /// path with replication, so pre-per-head results are reproduced
+    /// exactly).
+    #[test]
+    fn shared_gates_equal_replicated_per_head_gates_bit_exact() {
+        let mut rng = Rng::new(0x9E4);
+        let (heads, dk, dv, c, t_len) = (2usize, 5usize, 4usize, 4usize, 16usize);
+        let ks: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dk, 1.0, &mut rng)).collect();
+        let vs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dv, 1.0, &mut rng)).collect();
+        let alpha: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.8, 1.0)).collect();
+        let beta: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.1, 1.0)).collect();
+        for gdn in [false, true] {
+            let mut shared = PrefillEngine::new(heads, dk, dv, c);
+            let mut repl = PrefillEngine::new(heads, dk, dv, c);
+            for z in 0..t_len / c {
+                let (s, e) = (z * c, (z + 1) * c);
+                let kc = stack_chunk(&ks, z, c);
+                let vc = stack_chunk(&vs, z, c);
+                let ac: Vec<f32> = (0..heads).flat_map(|_| alpha[s..e].to_vec()).collect();
+                let bc: Vec<f32> = (0..heads).flat_map(|_| beta[s..e].to_vec()).collect();
+                if gdn {
+                    shared.ingest_chunk_gdn(&kc, &vc, &alpha[s..e], &beta[s..e]);
+                    repl.ingest_chunk_gdn(&kc, &vc, &ac, &bc);
+                } else {
+                    shared.ingest_chunk_mamba2(&kc, &vc, &alpha[s..e], None);
+                    repl.ingest_chunk_mamba2(&kc, &vc, &ac, None);
+                }
+            }
+            shared.finish();
+            repl.finish();
+            for h in 0..heads {
+                assert_eq!(
+                    shared.export_head(h),
+                    repl.export_head(h),
+                    "gdn={gdn} head {h}: shared vs replicated gates diverged"
+                );
             }
         }
     }

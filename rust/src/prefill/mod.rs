@@ -29,12 +29,16 @@
 //!   `{lc + m : chunk-level m live}` — the same layout, one relabel.
 //!
 //! The serving integration lives in
-//! [`crate::coordinator::backend::PooledBackend`] (per-sequence engines,
-//! lazy export on the first decode step) and the engine loop of
-//! [`crate::coordinator::server::DecodeServer`] (prompts advance one
-//! chunk per step, interleaved with running decode rows). Gates come from
-//! the shared [`crate::state::GateTable`], so prefill and decode read the
-//! same position-dependent α/λ schedule.
+//! [`crate::coordinator::backend::PooledBackend`] (per-sequence,
+//! per-layer engines, lazy export on the first decode step) and the
+//! engine loop of [`crate::coordinator::server::DecodeServer`] (prompts
+//! advance one chunk per step, interleaved with running decode rows).
+//! Gates come from the per-layer [`crate::state::GateTable`]s — `C`
+//! shared or `H·C` head-major per-head schedules per chunk — so prefill
+//! and decode read the same position- (and head-)dependent α/β/λ
+//! schedules, and a chunkwise-prefilled sequence's decode trajectory is
+//! bit-identical to a token-stepped one (the serving-trace differential
+//! harness in `coordinator::trace` pins this).
 
 pub mod bridge;
 pub mod engine;

@@ -1,0 +1,493 @@
+//! Pool-wide batched Fenwick advance (the ROADMAP batched-*advance* seam:
+//! the state-update mirror of [`super::pooled::BatchedDecoder`]'s batched
+//! read).
+//!
+//! The pooled decode path used to *read* every live level of every
+//! sequence in a decode bucket as one block-sparse GEMM but *advance*
+//! each sequence one at a time — `Σ_i popcount(t_i)` scattered per-block
+//! loops per step, each paying its own call overhead and none of them
+//! threading. [`BatchedAdvance::advance_bucket`] closes that asymmetry:
+//! one call advances a whole bucket, grouping the work by phase and
+//! Fenwick level and executing the heavy per-block ops (per-token
+//! transitions, sentinel writes) as **one scattered-block dispatch over
+//! the [`StatePool`] slab** ([`crate::tensor::slab_block_dispatch`]) on
+//! the resident worker pool.
+//!
+//! **Bit-exactness by shared primitives.** Phases mirror the
+//! storage-generic per-sequence skeleton
+//! ([`crate::state::update::advance_levels`]) exactly:
+//!
+//! 1. *Admission* — the pre-mutation `can_write` contract, batch-wide: a
+//!    sequential simulation of per-sequence admission (each admitted
+//!    sequence frees its merged-out blocks and consumes one sentinel
+//!    block) decides, **before any mutation**, which sequences step.
+//!    Refused sequences are skipped cleanly — levels, position, and pool
+//!    occupancy untouched — exactly as if the per-sequence loop had
+//!    skipped them in order.
+//! 2. *Merge*, level-major — for level `s = 0, 1, …`, every admitted
+//!    sequence with live level `s ≤ lssb(t)` folds it into its bucket
+//!    accumulator via the same [`StatePool::axpy`] + release the
+//!    per-sequence path uses. Iterating levels outermost preserves each
+//!    sequence's ascending-level merge order (the accumulator is its
+//!    lowest live level), and different sequences touch disjoint blocks,
+//!    so every block sees the identical op sequence. Merges stay on the
+//!    caller thread: amortized one block-axpy per sequence per step, and
+//!    the accumulate reads sources scattered anywhere in the slab.
+//! 3. *Transition + write*, one dispatch — every carried (sequence,
+//!    level) block's per-token transition
+//!    ([`crate::state::update::transition_block`]: Mamba-2 decay or GDN
+//!    gated Householder) and every admitted sequence's fresh sentinel
+//!    write ([`crate::state::update::write_block`]) are independent
+//!    per-block ops on disjoint blocks, so they run as **one**
+//!    [`crate::tensor::slab_block_dispatch`] pass — the dominant
+//!    `Σ_i popcount(t_i)` cost of the advance, now threaded with a single
+//!    queue handoff. Each block is owned by exactly one worker running
+//!    the same primitive as the per-sequence store, so results are
+//!    bit-exact for any thread count (asserted by the tests below and the
+//!    `decode_batched` bench's pre-timing check).
+//!
+//! All merge releases happen before any sentinel alloc, so an admission
+//! plan that succeeds sequentially always succeeds batched (the pool's
+//! low-water mark under batching is no lower than under the loop).
+
+use crate::fenwick;
+use crate::state::pool::{BlockId, StatePool};
+use crate::state::pooled::PooledFenwickState;
+use crate::state::update::{merge_freed, transition_block, write_block};
+use crate::state::Transition;
+use crate::tensor;
+
+/// One sequence's per-token inputs for a batched advance: the `(k, v)`
+/// sentinel pair, its write scale, and the transition applied to carried
+/// states — exactly the argument row of
+/// [`PooledFenwickState::advance`].
+pub struct AdvanceJob<'a> {
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub write_scale: f32,
+    pub transition: Transition<'a>,
+}
+
+/// Work-item tag for the fused transition+write dispatch: which job a
+/// block belongs to and which primitive to run on it.
+#[derive(Clone, Copy)]
+enum BlockOp {
+    /// Apply job `j`'s transition to a carried state block.
+    Transition(usize),
+    /// Write job `j`'s `write_scale · k v^T` sentinel into a fresh block.
+    Write(usize),
+}
+
+/// Per-admitted-sequence merge bookkeeping.
+struct MergePlan {
+    /// index into the bucket's `seqs`/`jobs`
+    seq: usize,
+    /// merge range top: levels `0..=l` fold one level up
+    l: usize,
+    /// running accumulator (the sequence's lowest live merged level)
+    acc: Option<BlockId>,
+}
+
+/// Below this many block-elements of transition+write work the fused
+/// dispatch stays on the caller thread (same rationale as the batched
+/// read's threshold: the resident pool makes a dispatch a queue handoff,
+/// but decode-sized buckets of tiny states still don't amortize one).
+const ADVANCE_FLOP_THRESHOLD: usize = 1 << 16;
+
+/// Pool-wide batched advance engine (see module docs). Owns its plan
+/// workspaces so steady-state bucket steps allocate nothing.
+#[derive(Default)]
+pub struct BatchedAdvance {
+    admitted: Vec<usize>,
+    plans: Vec<MergePlan>,
+    /// fused dispatch plan: (slab block row, op), sorted by row
+    ops: Vec<(usize, BlockOp)>,
+    rows: Vec<usize>,
+    tags: Vec<BlockOp>,
+    /// sentinel block per admitted sequence (same order as `admitted`)
+    sentinels: Vec<BlockId>,
+}
+
+impl BatchedAdvance {
+    pub fn new() -> BatchedAdvance {
+        BatchedAdvance::default()
+    }
+
+    /// Advance every sequence in the bucket by one token — the pool-wide
+    /// analogue of calling [`PooledFenwickState::advance`] on each
+    /// `seqs[i]` with `jobs[i]`, in order. Returns the indices of
+    /// sequences the pool could not admit (in bucket order); those are
+    /// left completely untouched, everything else is stepped. Bit-exact
+    /// with the per-sequence loop for both transition families and any
+    /// thread count.
+    pub fn advance_bucket(
+        &mut self,
+        pool: &mut StatePool,
+        seqs: &mut [&mut PooledFenwickState],
+        jobs: &[AdvanceJob<'_>],
+    ) -> Vec<usize> {
+        assert_eq!(seqs.len(), jobs.len(), "one job per sequence");
+        let n = seqs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let (dk, dv) = (seqs[0].dk, seqs[0].dv);
+        // hard assert: the fused dispatch below slices the slab at dk·dv
+        // strides, so a mismatched pool would silently corrupt unrelated
+        // blocks in release builds (once per bucket — cheap)
+        assert_eq!(pool.block_elems(), dk * dv, "pool sized for these states");
+
+        // ---- 1) admission: sequential simulation of the per-sequence
+        // pre-mutation `can_write` check (the same `merge_freed` formula
+        // `advance_levels` uses, so the two paths agree by construction).
+        // Nothing is mutated yet, so a refusal here leaves the sequence
+        // exactly as it was.
+        let mut refused = Vec::new();
+        self.admitted.clear();
+        let mut avail = pool.available();
+        for (i, seq) in seqs.iter().enumerate() {
+            assert_eq!((seq.dk, seq.dv), (dk, dv), "mixed state shapes in bucket");
+            assert_eq!(jobs[i].k.len(), dk, "k shape (seq {i})");
+            assert_eq!(jobs[i].v.len(), dv, "v shape (seq {i})");
+            let freed = merge_freed(seq.levels(), seq.t);
+            if avail + freed >= 1 {
+                avail = avail + freed - 1;
+                self.admitted.push(i);
+            } else {
+                refused.push(i);
+            }
+        }
+        if self.admitted.is_empty() {
+            return refused;
+        }
+
+        // ---- 2) merge, level-major: fold levels 0..=lssb(t) one level
+        // up for every admitted sequence, preserving each sequence's
+        // ascending-level accumulate order.
+        self.plans.clear();
+        let mut max_l = 0usize;
+        for &i in &self.admitted {
+            if seqs[i].t == 0 {
+                continue;
+            }
+            let l = fenwick::lssb(seqs[i].t) as usize;
+            max_l = max_l.max(l);
+            let acc = seqs[i].levels_mut().first_mut().and_then(Option::take);
+            self.plans.push(MergePlan { seq: i, l, acc });
+        }
+        for s in 1..=max_l {
+            for plan in self.plans.iter_mut() {
+                if s > plan.l {
+                    continue;
+                }
+                let Some(src) = seqs[plan.seq].levels_mut().get_mut(s).and_then(Option::take)
+                else {
+                    continue;
+                };
+                match plan.acc {
+                    None => plan.acc = Some(src),
+                    Some(acc) => {
+                        pool.axpy(acc, src, 1.0);
+                        pool.release(src);
+                    }
+                }
+            }
+        }
+        for plan in self.plans.iter() {
+            if let Some(acc) = plan.acc {
+                let levels = seqs[plan.seq].levels_mut();
+                if levels.len() <= plan.l + 1 {
+                    levels.resize_with(plan.l + 2, || None);
+                }
+                debug_assert!(levels[plan.l + 1].is_none(), "Fenwick invariant");
+                levels[plan.l + 1] = Some(acc);
+            }
+        }
+
+        // ---- 3) transition + write, one fused scattered-block dispatch.
+        // Sentinel allocs come after every merge release, so the plan's
+        // guarantee holds (see module docs); alloc() zeroes each block,
+        // exactly like the per-sequence store's write.
+        self.sentinels.clear();
+        for _ in &self.admitted {
+            let id = pool.alloc().expect("admission plan reserved this block");
+            self.sentinels.push(id);
+        }
+        self.ops.clear();
+        for (slot, &i) in self.admitted.iter().enumerate() {
+            for id in seqs[i].levels().iter().flatten() {
+                debug_assert!(pool.is_allocated(*id));
+                self.ops.push((id.0, BlockOp::Transition(i)));
+            }
+            self.ops.push((self.sentinels[slot].0, BlockOp::Write(i)));
+        }
+        self.ops.sort_unstable_by_key(|&(row, _)| row);
+        self.rows.clear();
+        self.tags.clear();
+        for &(row, op) in &self.ops {
+            self.rows.push(row);
+            self.tags.push(op);
+        }
+        let threads = if self.rows.len() * dk * dv < ADVANCE_FLOP_THRESHOLD {
+            1
+        } else {
+            tensor::current_gemm_threads().clamp(1, self.rows.len())
+        };
+        let tags = &self.tags;
+        tensor::slab_block_dispatch(pool.slab_mut(), dk * dv, &self.rows, threads, |j, block| {
+            match tags[j] {
+                BlockOp::Transition(i) => transition_block(block, dv, &jobs[i].transition),
+                BlockOp::Write(i) => {
+                    write_block(block, dv, jobs[i].k, jobs[i].v, jobs[i].write_scale)
+                }
+            }
+        });
+
+        // ---- 4) install sentinels and bump positions.
+        for (slot, &i) in self.admitted.iter().enumerate() {
+            let levels = seqs[i].levels_mut();
+            if levels.is_empty() {
+                levels.resize_with(1, || None);
+            }
+            debug_assert!(levels[0].is_none(), "sentinel slot must be merged first");
+            levels[0] = Some(self.sentinels[slot]);
+            seqs[i].bump_t();
+        }
+        refused
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::pooled::blocks_for_steps;
+    use crate::util::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    fn unit(mut v: Vec<f32>) -> Vec<f32> {
+        let n = crate::tensor::ops::l2_norm(&v).max(1e-6);
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+        v
+    }
+
+    /// THE tentpole property: advancing a bucket through the batched pass
+    /// is bit-exact with the per-sequence `advance` loop, for mixed
+    /// Mamba-2/GDN transitions, mixed positions, and any thread count.
+    #[test]
+    fn batched_advance_is_bit_exact_with_per_sequence_loop() {
+        let (dk, dv, n, steps) = (8usize, 6usize, 7usize, 100usize);
+        for threads in [1usize, 4] {
+            crate::tensor::gemm_threads(threads);
+            let mut rng = Rng::new(0xADB1 + threads as u64);
+            let mut pool_a = StatePool::new(dk * dv, n * blocks_for_steps(steps + 16));
+            let mut pool_b = StatePool::new(dk * dv, n * blocks_for_steps(steps + 16));
+            let mut per_seq: Vec<PooledFenwickState> =
+                (0..n).map(|_| PooledFenwickState::new(dk, dv)).collect();
+            let mut batched: Vec<PooledFenwickState> =
+                (0..n).map(|_| PooledFenwickState::new(dk, dv)).collect();
+            // stagger positions so every Fenwick level pattern appears
+            for (i, seq) in per_seq.iter_mut().enumerate() {
+                for _ in 0..(3 * i) {
+                    let k = unit(randv(&mut rng, dk));
+                    let v = randv(&mut rng, dv);
+                    seq.advance(&mut pool_a, &k, &v, 1.0, Transition::Decay(0.95)).unwrap();
+                    batched[i]
+                        .advance(&mut pool_b, &k, &v, 1.0, Transition::Decay(0.95))
+                        .unwrap();
+                }
+            }
+            let mut adv = BatchedAdvance::new();
+            let lambda: Vec<f32> = (0..10).map(|l| 0.8f32.powi(l)).collect();
+            for step in 0..steps {
+                let ks: Vec<Vec<f32>> = (0..n).map(|_| unit(randv(&mut rng, dk))).collect();
+                let vs: Vec<Vec<f32>> = (0..n).map(|_| randv(&mut rng, dv)).collect();
+                let alphas: Vec<f32> = (0..n).map(|_| rng.range_f32(0.8, 1.0)).collect();
+                let betas: Vec<f32> = (0..n).map(|_| rng.range_f32(0.1, 1.0)).collect();
+                let job = |i: usize| {
+                    // alternate transition families across the bucket AND
+                    // over time so mixed buckets are the common case
+                    if (i + step) % 2 == 0 {
+                        (1.0, Transition::Decay(alphas[i]))
+                    } else {
+                        (
+                            betas[i],
+                            Transition::GatedHouseholder {
+                                alpha: alphas[i],
+                                beta: betas[i],
+                                k: &ks[i],
+                            },
+                        )
+                    }
+                };
+                for i in 0..n {
+                    let (ws, tr) = job(i);
+                    per_seq[i].advance(&mut pool_a, &ks[i], &vs[i], ws, tr).unwrap();
+                }
+                let jobs: Vec<AdvanceJob<'_>> = (0..n)
+                    .map(|i| {
+                        let (ws, tr) = job(i);
+                        AdvanceJob { k: &ks[i], v: &vs[i], write_scale: ws, transition: tr }
+                    })
+                    .collect();
+                let mut refs: Vec<&mut PooledFenwickState> = batched.iter_mut().collect();
+                let refused = adv.advance_bucket(&mut pool_b, &mut refs, &jobs);
+                assert!(refused.is_empty(), "pool sized for the trace (step {step})");
+
+                assert_eq!(pool_a.in_use(), pool_b.in_use(), "step {step}");
+                let q = randv(&mut rng, dk);
+                let (mut oa, mut ob) = (vec![0.0f32; dv], vec![0.0f32; dv]);
+                for i in 0..n {
+                    assert_eq!(per_seq[i].t, batched[i].t, "step {step} seq {i}");
+                    assert_eq!(
+                        per_seq[i].live_states(),
+                        batched[i].live_states(),
+                        "step {step} seq {i}"
+                    );
+                    per_seq[i].read_into(&pool_a, &q, &lambda, &mut oa);
+                    batched[i].read_into(&pool_b, &q, &lambda, &mut ob);
+                    assert_eq!(oa, ob, "bit-exact divergence at step {step} seq {i} (threads {threads})");
+                }
+            }
+            for mut s in per_seq {
+                s.release(&mut pool_a);
+            }
+            for mut s in batched {
+                s.release(&mut pool_b);
+            }
+            assert_eq!((pool_a.in_use(), pool_b.in_use()), (0, 0));
+        }
+        crate::tensor::gemm_threads(0);
+    }
+
+    /// Batch-wide admission (satellite): when the pool can only satisfy
+    /// some sequences' sentinel writes mid-bucket, exactly the refused
+    /// sequences are untouched — levels, position, pool occupancy — and
+    /// they recover after `StatePool::grow`.
+    #[test]
+    fn refused_sequences_are_untouched_and_recover_after_grow() {
+        let (dk, dv, n) = (4usize, 4usize, 4usize);
+        let mut rng = Rng::new(0xADB2);
+        // twin pools: `ref_pool` is big enough for everything (the oracle
+        // trajectory), `pool` refuses mid-bucket
+        let mut pool = StatePool::new(dk * dv, 4 * n);
+        let mut ref_pool = StatePool::new(dk * dv, 4 * n);
+        let mut seqs: Vec<PooledFenwickState> =
+            (0..n).map(|_| PooledFenwickState::new(dk, dv)).collect();
+        let mut oracle: Vec<PooledFenwickState> =
+            (0..n).map(|_| PooledFenwickState::new(dk, dv)).collect();
+        // park everyone at t = 5 (2 live blocks: levels 0 and 3); the
+        // next advance merges only the sentinel (frees nothing) and
+        // consumes one fresh block per sequence
+        for i in 0..n {
+            for _ in 0..5 {
+                let k = randv(&mut rng, dk);
+                let v = randv(&mut rng, dv);
+                seqs[i].advance(&mut pool, &k, &v, 1.0, Transition::Decay(0.9)).unwrap();
+                oracle[i].advance(&mut ref_pool, &k, &v, 1.0, Transition::Decay(0.9)).unwrap();
+            }
+            assert_eq!(seqs[i].live_states(), 2);
+        }
+        // park extra allocations (other tenants of the pool) until only
+        // the first two sequences' sentinel writes fit
+        while pool.available() > 2 {
+            let _ = pool.alloc().unwrap();
+        }
+        let in_use_before = pool.in_use();
+        let ks: Vec<Vec<f32>> = (0..n).map(|_| randv(&mut rng, dk)).collect();
+        let vs: Vec<Vec<f32>> = (0..n).map(|_| randv(&mut rng, dv)).collect();
+        let jobs_v: Vec<AdvanceJob<'_>> = (0..n)
+            .map(|i| AdvanceJob {
+                k: &ks[i],
+                v: &vs[i],
+                write_scale: 1.0,
+                transition: Transition::Decay(0.9),
+            })
+            .collect();
+        let mut adv = BatchedAdvance::new();
+        let refused = {
+            let mut refs: Vec<&mut PooledFenwickState> = seqs.iter_mut().collect();
+            adv.advance_bucket(&mut pool, &mut refs, &jobs_v)
+        };
+        assert_eq!(refused, vec![2, 3], "exactly the overflow sequences are refused");
+        // admitted sequences advanced...
+        for i in 0..2 {
+            oracle[i].advance(&mut ref_pool, &ks[i], &vs[i], 1.0, Transition::Decay(0.9)).unwrap();
+            assert_eq!(seqs[i].t, 6, "seq {i} advanced");
+        }
+        // ...refused sequences are untouched: levels, position, occupancy
+        for i in 2..n {
+            assert_eq!(seqs[i].t, 5, "refused seq {i} position mutated");
+            assert_eq!(seqs[i].live_states(), 2, "refused seq {i} levels mutated");
+        }
+        assert_eq!(
+            pool.in_use(),
+            in_use_before + 2,
+            "occupancy must reflect only the two admitted sentinel writes"
+        );
+        // recovery: grow the pool, re-run the bucket for the refused tail
+        pool.grow(8);
+        let refused2 = {
+            let mut refs: Vec<&mut PooledFenwickState> = seqs.iter_mut().skip(2).collect();
+            adv.advance_bucket(&mut pool, &mut refs, &jobs_v[2..])
+        };
+        assert!(refused2.is_empty(), "grown pool admits the tail");
+        for i in 2..n {
+            oracle[i].advance(&mut ref_pool, &ks[i], &vs[i], 1.0, Transition::Decay(0.9)).unwrap();
+        }
+        // everyone's state now matches the never-refused oracle bitwise
+        let q = randv(&mut rng, dk);
+        let lam = [1.0f32, 0.5, 0.25, 0.125];
+        let (mut got, mut want) = (vec![0.0f32; dv], vec![0.0f32; dv]);
+        for i in 0..n {
+            seqs[i].read_into(&pool, &q, &lam, &mut got);
+            oracle[i].read_into(&ref_pool, &q, &lam, &mut want);
+            assert_eq!(got, want, "seq {i} diverged from the never-refused oracle");
+        }
+    }
+
+    /// Degenerate buckets: empty input, and an all-refused bucket on an
+    /// exhausted pool (no mutation at all).
+    #[test]
+    fn empty_and_fully_refused_buckets_are_no_ops() {
+        let (dk, dv) = (4usize, 4usize);
+        let mut pool = StatePool::new(dk * dv, 1);
+        let mut adv = BatchedAdvance::new();
+        assert!(adv.advance_bucket(&mut pool, &mut [], &[]).is_empty());
+        let mut a = PooledFenwickState::new(dk, dv);
+        let mut b = PooledFenwickState::new(dk, dv);
+        let k = vec![1.0f32; dk];
+        let v = vec![1.0f32; dv];
+        // one block: seq `a` takes it at t=0. In the bucket {a, b} that
+        // follows, `a`'s merge at t=1 just relocates its sentinel (frees
+        // nothing) and `b` writes fresh — both need a block from an
+        // exhausted pool, so both are refused.
+        a.advance(&mut pool, &k, &v, 1.0, Transition::Decay(0.9)).unwrap();
+        assert_eq!(pool.available(), 0);
+        let jobs: Vec<AdvanceJob<'_>> = (0..2)
+            .map(|_| AdvanceJob {
+                k: &k,
+                v: &v,
+                write_scale: 1.0,
+                transition: Transition::Decay(0.9),
+            })
+            .collect();
+        let before = (a.t, a.live_states(), b.t, b.live_states(), pool.in_use());
+        let refused = {
+            let mut refs: Vec<&mut PooledFenwickState> = vec![&mut a, &mut b];
+            adv.advance_bucket(&mut pool, &mut refs, &jobs)
+        };
+        assert_eq!(refused, vec![0, 1], "exhausted pool refuses the whole bucket");
+        assert_eq!(
+            (a.t, a.live_states(), b.t, b.live_states(), pool.in_use()),
+            before,
+            "a fully refused bucket must not mutate anything"
+        );
+        a.release(&mut pool);
+        assert_eq!(pool.in_use(), 0);
+    }
+}

@@ -1,66 +1,142 @@
 //! Position-dependent gate/level-weight tables shared by prefill and
-//! decode (ROADMAP item: per-token α/λ instead of the fixed scalars the
-//! pooled backend hard-coded).
+//! decode, with an optional **per-head axis** (ROADMAP items: per-token
+//! α/λ instead of fixed scalars, then per-head schedules instead of one
+//! table shared across heads).
 //!
-//! A serving model's gates are a function of absolute position: the decay
-//! gate `α_t` applied to carried states at step `t`, and the level-weight
-//! row `λ_t^{(·)}` the read at position `t` folds over live levels.
-//! [`GateTable`] is the one source both ingestion paths consult —
-//! the chunkwise prefill engine reads `alpha(pos..pos+C)` for a chunk's
-//! cumulative decays, the decode step reads `alpha(pos)` / `lambda(pos)`
-//! for its transition and batched read — which is what makes
-//! chunkwise-prefilled and token-stepped sequences agree: there is no
-//! second copy of the schedule to drift.
+//! A serving model's gates are a function of absolute position — and,
+//! for multi-head models, of the head: the decay gate `α_t^h` applied to
+//! head `h`'s carried states at step `t`, the GDN delta strength
+//! `β_t^h`, and the level-weight row `λ_t^{h,(·)}` the read at position
+//! `t` folds over head `h`'s live levels. [`GateTable`] is the one
+//! source both ingestion paths consult — the chunkwise prefill engine
+//! reads `alpha_h/beta_h` for a chunk's per-head cumulative decays, the
+//! decode step reads `alpha_h(h, pos)` / `lambda_h(h, pos)` per
+//! (sequence, head) entry — which is what makes chunkwise-prefilled and
+//! token-stepped sequences agree: there is no second copy of the
+//! schedule to drift.
 //!
-//! Past the end of a finite table the last entry is held (the same
-//! clamping convention as [`super::level_weight`] past the λ width), so a
-//! sequence can always outrun the table without dropping gates.
+//! Head indices clamp to the last provided head, so a 1-head (shared)
+//! table serves any number of heads and reproduces the pre-per-head
+//! behavior **exactly** (the `*_h(h, t)` accessors degenerate to the
+//! shared `alpha(t)`/`lambda(t)`). Positions past the end of a finite
+//! table hold the last entry (the same clamping convention as
+//! [`super::level_weight`] past the λ width), so a sequence can always
+//! outrun the table without dropping gates.
 
 use crate::tensor::Mat;
 
-/// Per-position gate schedule: `alpha(t)` decay gates and `lambda(t)`
-/// level-weight rows, clamped to the last provided position.
+/// Per-position, optionally per-head gate schedule: `alpha_h(h, t)` decay
+/// gates, `beta_h(h, t)` GDN delta strengths, and `lambda_h(h, t)`
+/// level-weight rows; head and position both clamp to the last provided
+/// entry.
 #[derive(Debug, Clone)]
 pub struct GateTable {
-    /// α_t per position (non-empty; index clamps to the last entry)
-    alpha: Vec<f32>,
-    /// λ rows, `(positions, levels)` row-major (≥1 row; row clamps)
-    lambda: Mat,
+    /// α tables, one per head (each non-empty; position clamps)
+    alpha: Vec<Vec<f32>>,
+    /// β tables, one per head (GDN delta strength; defaults to all-1.0)
+    beta: Vec<Vec<f32>>,
+    /// λ tables, one per head, each `(positions, levels)` row-major
+    lambda: Vec<Mat>,
 }
 
 impl GateTable {
-    /// Position-independent gates: one α for every step, one λ row for
-    /// every position (the pre-PR pooled-backend behavior).
+    /// Position-independent shared gates: one α for every step and head,
+    /// one λ row for every position (the original pooled-backend
+    /// behavior). β defaults to 1.0 (plain DeltaNet strength); see
+    /// [`GateTable::with_beta`].
     pub fn fixed(alpha: f32, lambda: Vec<f32>) -> GateTable {
         assert!(!lambda.is_empty(), "empty lambda row");
         let cols = lambda.len();
-        GateTable { alpha: vec![alpha], lambda: Mat::from_vec(1, cols, lambda) }
+        GateTable {
+            alpha: vec![vec![alpha]],
+            beta: vec![vec![1.0]],
+            lambda: vec![Mat::from_vec(1, cols, lambda)],
+        }
     }
 
-    /// Fully position-dependent gates: `alpha[t]` and `lambda.row(t)`
-    /// apply at position `t`; both clamp to their last entry beyond the
-    /// table.
+    /// Fully position-dependent shared gates: `alpha[t]` and
+    /// `lambda.row(t)` apply at position `t` for every head; both clamp
+    /// to their last entry beyond the table.
     pub fn per_token(alpha: Vec<f32>, lambda: Mat) -> GateTable {
         assert!(!alpha.is_empty(), "empty alpha table");
         assert!(lambda.rows >= 1 && lambda.cols >= 1, "empty lambda table");
-        GateTable { alpha, lambda }
+        GateTable { alpha: vec![alpha], beta: vec![vec![1.0]], lambda: vec![lambda] }
     }
 
-    /// Decay gate applied to carried states at step `t`.
+    /// Install a per-token β schedule (GDN delta strength), replicated to
+    /// every head of this table. Clamps past the end like α.
+    pub fn with_beta(mut self, beta: Vec<f32>) -> GateTable {
+        assert!(!beta.is_empty(), "empty beta table");
+        self.beta = vec![beta; self.heads()];
+        self
+    }
+
+    /// Stack single-head tables into one per-head table: head `h` reads
+    /// `tables[h]`'s schedules. Passing `heads` clones of one table is
+    /// bit-identical to using that table shared (regression-tested).
+    pub fn per_head(tables: Vec<GateTable>) -> GateTable {
+        assert!(!tables.is_empty(), "at least one head table");
+        let mut alpha = Vec::with_capacity(tables.len());
+        let mut beta = Vec::with_capacity(tables.len());
+        let mut lambda = Vec::with_capacity(tables.len());
+        for t in tables {
+            assert_eq!(t.heads(), 1, "per_head composes single-head tables");
+            alpha.extend(t.alpha);
+            beta.extend(t.beta);
+            lambda.extend(t.lambda);
+        }
+        GateTable { alpha, beta, lambda }
+    }
+
+    /// Number of distinct head schedules (1 = shared across heads).
+    pub fn heads(&self) -> usize {
+        self.alpha.len()
+    }
+
+    #[inline]
+    fn h(&self, head: usize) -> usize {
+        head.min(self.alpha.len() - 1)
+    }
+
+    /// Decay gate applied to carried states at step `t` (shared/head-0
+    /// view — identical to [`GateTable::alpha_h`] with `head = 0`).
     #[inline]
     pub fn alpha(&self, t: usize) -> f32 {
-        self.alpha[t.min(self.alpha.len() - 1)]
+        self.alpha_h(0, t)
     }
 
-    /// Level-weight row for the read at position `t`.
+    /// Decay gate for head `head` at step `t` (head clamps to the last
+    /// provided schedule, so shared tables serve every head).
+    #[inline]
+    pub fn alpha_h(&self, head: usize, t: usize) -> f32 {
+        let a = &self.alpha[self.h(head)];
+        a[t.min(a.len() - 1)]
+    }
+
+    /// GDN delta strength for head `head` at step `t`.
+    #[inline]
+    pub fn beta_h(&self, head: usize, t: usize) -> f32 {
+        let b = &self.beta[self.h(head)];
+        b[t.min(b.len() - 1)]
+    }
+
+    /// Level-weight row for the read at position `t` (shared/head-0 view).
     #[inline]
     pub fn lambda(&self, t: usize) -> &[f32] {
-        self.lambda.row(t.min(self.lambda.rows - 1))
+        self.lambda_h(0, t)
     }
 
-    /// Number of levels per λ row.
+    /// Level-weight row for head `head`'s read at position `t`.
+    #[inline]
+    pub fn lambda_h(&self, head: usize, t: usize) -> &[f32] {
+        let l = &self.lambda[self.h(head)];
+        l.row(t.min(l.rows - 1))
+    }
+
+    /// Number of levels per λ row (head 0's width; all heads agree in
+    /// practice, but readers clamp per [`super::level_weight`] anyway).
     pub fn lambda_levels(&self) -> usize {
-        self.lambda.cols
+        self.lambda[0].cols
     }
 }
 
@@ -76,6 +152,7 @@ mod tests {
             assert_eq!(g.lambda(t), &[1.0, 0.5, 0.25]);
         }
         assert_eq!(g.lambda_levels(), 3);
+        assert_eq!(g.heads(), 1);
     }
 
     #[test]
@@ -87,5 +164,45 @@ mod tests {
         assert_eq!(g.alpha(99), 0.7, "alpha clamps past the table");
         assert_eq!(g.lambda(1), &[10.0, 11.0]);
         assert_eq!(g.lambda(99), &[20.0, 21.0], "lambda clamps past the table");
+    }
+
+    #[test]
+    fn shared_table_serves_every_head_identically() {
+        let g = GateTable::per_token(vec![0.5, 0.6], Mat::from_fn(2, 2, |t, l| (t + l) as f32))
+            .with_beta(vec![0.3, 0.4]);
+        for head in [0usize, 1, 7] {
+            for t in [0usize, 1, 9] {
+                assert_eq!(g.alpha_h(head, t), g.alpha(t));
+                assert_eq!(g.lambda_h(head, t), g.lambda(t));
+                assert_eq!(g.beta_h(head, t), g.beta_h(0, t));
+            }
+        }
+    }
+
+    #[test]
+    fn per_head_tables_give_each_head_its_own_schedule() {
+        let g = GateTable::per_head(vec![
+            GateTable::fixed(0.9, vec![1.0, 0.5]).with_beta(vec![0.2]),
+            GateTable::fixed(0.8, vec![1.0, 0.25]).with_beta(vec![0.7]),
+        ]);
+        assert_eq!(g.heads(), 2);
+        assert_eq!(g.alpha_h(0, 5), 0.9);
+        assert_eq!(g.alpha_h(1, 5), 0.8);
+        assert_eq!(g.beta_h(0, 0), 0.2);
+        assert_eq!(g.beta_h(1, 0), 0.7);
+        assert_eq!(g.lambda_h(0, 3), &[1.0, 0.5]);
+        assert_eq!(g.lambda_h(1, 3), &[1.0, 0.25]);
+        // heads past the table clamp to the last schedule
+        assert_eq!(g.alpha_h(9, 5), 0.8);
+    }
+
+    #[test]
+    #[should_panic(expected = "single-head tables")]
+    fn per_head_rejects_nested_per_head_tables() {
+        let two = GateTable::per_head(vec![
+            GateTable::fixed(0.9, vec![1.0]),
+            GateTable::fixed(0.8, vec![1.0]),
+        ]);
+        let _ = GateTable::per_head(vec![two, GateTable::fixed(0.7, vec![1.0])]);
     }
 }

@@ -19,16 +19,25 @@
 //! every live level of every sequence in a decode batch folded into one
 //! block-sparse GEMM over pooled storage — lives in [`pooled`]
 //! ([`PooledFenwickState`] + [`BatchedDecoder`]), bit-exact with
-//! [`FenwickState`] by sharing the same primitive in the same order.
+//! [`FenwickState`] by sharing the same primitive in the same order. The
+//! matching serving-side lift of the *update* — every sequence's merge,
+//! transition, and sentinel write grouped by Fenwick level and executed
+//! as scattered-slab dispatches — is [`batched_advance`]
+//! ([`BatchedAdvance`]), bit-exact with the per-sequence
+//! [`update::advance_levels`] skeleton by sharing its per-block
+//! primitives. Position/head-dependent gate schedules live in [`gates`]
+//! ([`GateTable`]).
 //!
 //! The same machinery measured against a softmax KV cache is experiment
 //! E11 (decode time/memory vs. T — Table 1's right columns).
 
+pub mod batched_advance;
 pub mod gates;
 pub mod pool;
 pub mod pooled;
 pub(crate) mod update;
 
+pub use batched_advance::{AdvanceJob, BatchedAdvance};
 pub use gates::GateTable;
 pub use pooled::{BatchedDecoder, PooledFenwickState};
 
@@ -53,6 +62,7 @@ pub fn level_weight(lambda: &[f32], l: usize) -> f32 {
 }
 
 /// Transition applied to every live state at each step.
+#[derive(Clone, Copy)]
 pub enum Transition<'a> {
     /// Mamba-2 family: `S ← α S`.
     Decay(f32),
@@ -125,6 +135,34 @@ impl FenwickState {
     /// Number of live (non-empty) level states.
     pub fn live_states(&self) -> usize {
         self.levels.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Install an externally-built level layout — the Mat-backed mirror
+    /// of [`pooled::PooledFenwickState::import_levels`], with the same
+    /// validation: the sequence lands at the **post-merge boundary** of
+    /// step `t` (sentinel empty, each `token_level ≥ 1` live in the
+    /// Fenwick partition of `t`). Used by the per-sequence oracle replay
+    /// of a chunkwise-prefilled serving sequence
+    /// (`coordinator::backend::PooledOracle`): the prefill bridge exports
+    /// the same engine states here instead of into pool blocks, so the
+    /// oracle's decode trajectory is bit-identical to the pooled one.
+    pub fn import_levels(dk: usize, dv: usize, t: usize, states: &[(usize, &[f32])]) -> FenwickState {
+        let mut st = FenwickState::new(dk, dv);
+        for &(level, data) in states {
+            assert!(level >= 1, "level 0 is the sentinel; it is written by step");
+            assert!(
+                level <= usize::BITS as usize && (t >> (level - 1)) & 1 == 1,
+                "level {level} is not live at position {t} (Fenwick misalignment)"
+            );
+            assert_eq!(data.len(), dk * dv, "state shape");
+            if st.levels.len() <= level {
+                st.levels.resize_with(level + 1, || None);
+            }
+            assert!(st.levels[level].is_none(), "duplicate level {level} in import");
+            st.levels[level] = Some(Mat::from_vec(dk, dv, data.to_vec()));
+        }
+        st.t = t;
+        st
     }
 
     /// Resident state bytes (the decode-memory metric of E11): live level

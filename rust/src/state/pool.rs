@@ -112,6 +112,21 @@ impl StatePool {
         &mut self.storage[s..s + self.block_elems]
     }
 
+    /// The raw slab, for batched passes that partition work across many
+    /// *allocated* blocks in one dispatch
+    /// ([`crate::tensor::slab_block_dispatch`], driven by
+    /// `state::batched_advance`). Callers must touch only ranges of
+    /// blocks they hold live [`BlockId`]s for.
+    pub(crate) fn slab_mut(&mut self) -> &mut [f32] {
+        &mut self.storage
+    }
+
+    /// Is this block currently allocated? (validation hook for the
+    /// batched passes that bypass [`StatePool::get_mut`]).
+    pub(crate) fn is_allocated(&self, id: BlockId) -> bool {
+        self.allocated[id.0]
+    }
+
     /// `dst += scale * src` across two blocks (bucket merge).
     pub fn axpy(&mut self, dst: BlockId, src: BlockId, scale: f32) {
         assert!(self.allocated[dst.0] && self.allocated[src.0]);

@@ -80,6 +80,25 @@ impl PooledFenwickState {
         self.levels.iter().flatten().count()
     }
 
+    /// The raw level slots (batched-advance plumbing).
+    pub(crate) fn levels(&self) -> &[Option<BlockId>] {
+        &self.levels
+    }
+
+    /// Mutable level slots (batched-advance plumbing). Invariants —
+    /// level l live only when bit l−1 of `t` is set, plus the sentinel —
+    /// are the caller's to preserve.
+    pub(crate) fn levels_mut(&mut self) -> &mut Vec<Option<BlockId>> {
+        &mut self.levels
+    }
+
+    /// Record one more processed token (batched-advance plumbing: the
+    /// pool-wide pass mutates levels directly, then bumps `t` exactly like
+    /// [`PooledFenwickState::advance`] does).
+    pub(crate) fn bump_t(&mut self) {
+        self.t += 1;
+    }
+
     /// Level capacity currently tracked (≈ log2 t).
     pub fn level_capacity(&self) -> usize {
         self.levels.len()

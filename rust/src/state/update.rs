@@ -25,6 +25,52 @@ use crate::state::pooled::PoolExhausted;
 use crate::state::Transition;
 use crate::tensor::{self, Mat};
 
+/// Apply `tr` to one row-major `(d_k, d_v)` state slice — THE per-token
+/// transition primitive for slice-backed states, shared by the
+/// per-sequence [`PoolStore`] and the pool-wide batched pass
+/// ([`crate::state::batched_advance`]) so the two advance paths are
+/// bit-exact by construction.
+pub(crate) fn transition_block(s: &mut [f32], dv: usize, tr: &Transition<'_>) {
+    match tr {
+        Transition::Decay(a) => {
+            for x in s.iter_mut() {
+                *x *= *a;
+            }
+        }
+        Transition::GatedHouseholder { alpha, beta, k } => {
+            apply_householder_slice(s, dv, k, *beta);
+            for x in s.iter_mut() {
+                *x *= *alpha;
+            }
+        }
+    }
+}
+
+/// Accumulate `write_scale · k v^T` into a (zeroed) row-major `(d_k, d_v)`
+/// state slice — THE sentinel-write primitive, shared like
+/// [`transition_block`].
+pub(crate) fn write_block(s0: &mut [f32], dv: usize, k: &[f32], v: &[f32], write_scale: f32) {
+    for (i, &ki) in k.iter().enumerate() {
+        tensor::axpy8(&mut s0[i * dv..(i + 1) * dv], v, ki * write_scale);
+    }
+}
+
+/// How many storage slots the merge of step `t` frees: the live levels in
+/// the merge range `0..=lssb(t)` collapse into one accumulator, so
+/// `live − 1` slots come back (none at `t = 0`, where nothing merges).
+/// THE capacity-check formula — shared by [`advance_levels`]'s
+/// pre-mutation `can_write` check and the batch-wide admission simulation
+/// in [`crate::state::batched_advance`], so the "an admission plan that
+/// succeeds sequentially succeeds batched" guarantee holds by
+/// construction, not by two hand-synced copies.
+pub(crate) fn merge_freed<T>(levels: &[Option<T>], t: usize) -> usize {
+    if t == 0 {
+        return 0;
+    }
+    let l = fenwick::lssb(t) as usize;
+    levels.iter().take(l + 1).flatten().count().saturating_sub(1)
+}
+
 /// Storage backing for one sequence's Fenwick level states.
 pub(crate) trait FenwickStore {
     type Slot;
@@ -59,13 +105,7 @@ pub(crate) fn advance_levels<S: FenwickStore>(
 ) -> Result<(), PoolExhausted> {
     // 0) capacity check first: the merge below frees `live-1` slots and
     //    the write takes one, so a refusal must come before any mutation.
-    let freed = if t > 0 {
-        let l = fenwick::lssb(t) as usize;
-        let live = levels.iter().take(l + 1).flatten().count();
-        live.saturating_sub(1)
-    } else {
-        0
-    };
+    let freed = merge_freed(levels, t);
     if !store.can_write(freed) {
         return Err(PoolExhausted);
     }
@@ -168,28 +208,12 @@ impl FenwickStore for PoolStore<'_> {
     }
 
     fn transition(&mut self, slot: &mut BlockId, tr: &Transition<'_>) {
-        let s = self.pool.get_mut(*slot);
-        match tr {
-            Transition::Decay(a) => {
-                for x in s.iter_mut() {
-                    *x *= *a;
-                }
-            }
-            Transition::GatedHouseholder { alpha, beta, k } => {
-                apply_householder_slice(s, self.dv, k, *beta);
-                for x in s.iter_mut() {
-                    *x *= *alpha;
-                }
-            }
-        }
+        transition_block(self.pool.get_mut(*slot), self.dv, tr);
     }
 
     fn write(&mut self, k: &[f32], v: &[f32], write_scale: f32) -> Option<BlockId> {
         let id = self.pool.alloc()?;
-        let s0 = self.pool.get_mut(id);
-        for (i, &ki) in k.iter().enumerate() {
-            tensor::axpy8(&mut s0[i * self.dv..(i + 1) * self.dv], v, ki * write_scale);
-        }
+        write_block(self.pool.get_mut(id), self.dv, k, v, write_scale);
         Some(id)
     }
 }

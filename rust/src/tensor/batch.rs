@@ -23,7 +23,7 @@
 //! counterpart, for any thread count (asserted by the tests below).
 
 use super::{block_nn, block_nt, block_tn_diag, plan_threads};
-use crate::util::threadpool::par_row_chunks_pooled;
+use crate::util::threadpool::{par_row_chunks_pooled, resident_pool};
 
 /// Dispatch a batch of same-shape row-major problems as one pooled
 /// row-block parallel-for over the stacked `(batch·m, n)` output.
@@ -151,6 +151,72 @@ pub fn gemm_tn_diag_batch_acc(
     });
 }
 
+/// Dispatch per-block work over a **scattered** subset of a slab's
+/// fixed-size blocks as one pooled pass: `blocks` names the slab rows to
+/// touch (sorted, strictly increasing — i.e. each block at most once),
+/// and `kernel(j, block)` runs once for job `j` on block `blocks[j]`'s
+/// `block_elems`-sized slice. Jobs are partitioned into contiguous runs,
+/// one resident worker per run, with the slab split at run borders so
+/// workers hold disjoint sub-slices (no locks, no unsafe).
+///
+/// This is the scheduling half of the pool-wide batched Fenwick advance
+/// ([`crate::state::batched_advance`]): where [`gemm_batch_into`] batches
+/// H same-shape GEMMs over one *contiguous* stacked output, this batches
+/// per-block state ops (transition, sentinel write) over the
+/// [`crate::state::pool::StatePool`] slab's *allocated* blocks, which are
+/// scattered. Each block is touched by exactly one worker running the
+/// same per-block primitive as the per-sequence path, so results are
+/// bit-exact for any thread count.
+pub fn slab_block_dispatch<F>(
+    slab: &mut [f32],
+    block_elems: usize,
+    blocks: &[usize],
+    threads: usize,
+    kernel: F,
+) where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let n = blocks.len();
+    if n == 0 {
+        return;
+    }
+    debug_assert!(block_elems > 0);
+    debug_assert!(
+        blocks.windows(2).all(|w| w[0] < w[1]),
+        "blocks must be sorted and unique"
+    );
+    debug_assert!((blocks[n - 1] + 1) * block_elems <= slab.len(), "block out of slab range");
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        for (j, &b) in blocks.iter().enumerate() {
+            kernel(j, &mut slab[b * block_elems..(b + 1) * block_elems]);
+        }
+        return;
+    }
+    let per = n.div_ceil(threads);
+    let kernel = &kernel;
+    let mut rest: &mut [f32] = slab;
+    let mut consumed_rows = 0usize;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+    for (run_idx, run) in blocks.chunks(per).enumerate() {
+        let (first, last) = (run[0], *run.last().unwrap());
+        // skip untouched rows before this run, then carve the run's span
+        let tail = std::mem::take(&mut rest);
+        let (_, tail) = tail.split_at_mut((first - consumed_rows) * block_elems);
+        let (span, tail) = tail.split_at_mut((last + 1 - first) * block_elems);
+        rest = tail;
+        consumed_rows = last + 1;
+        let j0 = run_idx * per;
+        jobs.push(Box::new(move || {
+            for (lj, &b) in run.iter().enumerate() {
+                let s = (b - first) * block_elems;
+                kernel(j0 + lj, &mut span[s..s + block_elems]);
+            }
+        }));
+    }
+    resident_pool().scope(jobs);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,6 +275,39 @@ mod tests {
                 assert_eq!(got, want_tn, "TN-diag batch={batch} m={m} k={k} n={n} threads={threads}");
             }
             tensor::gemm_threads(0);
+        }
+    }
+
+    /// The scattered-block dispatcher touches exactly the named blocks,
+    /// hands each job its own block, and is deterministic across thread
+    /// counts (each block is owned by one worker).
+    #[test]
+    fn slab_block_dispatch_covers_each_block_once_any_threads() {
+        let (cap, be) = (17usize, 6usize);
+        // a scattered, sorted subset of the slab's blocks
+        let blocks = [0usize, 2, 3, 7, 11, 12, 16];
+        for threads in [1usize, 2, 3, 8] {
+            let mut slab = vec![-1.0f32; cap * be];
+            slab_block_dispatch(&mut slab, be, &blocks, threads, |j, block| {
+                assert_eq!(block.len(), be);
+                for (e, x) in block.iter_mut().enumerate() {
+                    assert_eq!(*x, -1.0, "block touched twice (job {j})");
+                    *x = (j * be + e) as f32;
+                }
+            });
+            for (row, chunk) in slab.chunks(be).enumerate() {
+                match blocks.iter().position(|&b| b == row) {
+                    Some(j) => {
+                        for (e, &x) in chunk.iter().enumerate() {
+                            assert_eq!(x, (j * be + e) as f32, "threads={threads} row={row}");
+                        }
+                    }
+                    None => assert!(
+                        chunk.iter().all(|&x| x == -1.0),
+                        "untouched block {row} was written (threads={threads})"
+                    ),
+                }
+            }
         }
     }
 

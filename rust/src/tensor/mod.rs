@@ -47,7 +47,7 @@
 pub mod batch;
 pub mod ops;
 
-pub use batch::{gemm_batch_into, gemm_nt_batch_into, gemm_tn_diag_batch_acc};
+pub use batch::{gemm_batch_into, gemm_nt_batch_into, gemm_tn_diag_batch_acc, slab_block_dispatch};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

@@ -10,9 +10,20 @@ BENCH_HISTORY.json, keyed by timestamp and (when available) the git
 revision, so per-PR perf movement can be plotted without re-running old
 checkouts (the ROADMAP's perf-trajectory-tracking item).
 
-Usage: scripts/bench_history.py [bench_dir]
+Usage: scripts/bench_history.py [--check | --self-test] [bench_dir]
   bench_dir defaults to the rust/ package root (where `cargo bench` runs
   and drops its BENCH_*.json files). The history file lives next to them.
+
+  --check      validate BENCH_HISTORY.json instead of folding: exit
+               non-zero on malformed records (missing/ill-typed
+               timestamp, git_rev, or benches) or duplicates (two
+               identical records anywhere, or adjacent snapshots with
+               identical bench payloads — the fold's idempotence
+               guarantees neither can happen, so either means the file
+               was corrupted or hand-edited). A missing history file is
+               fine: nothing to check yet.
+  --self-test  run the built-in test suite for --check and the fold's
+               idempotence, in a temp directory. CI runs this.
 
 Idempotence: a snapshot is only appended when at least one bench record
 changed since the last snapshot, so re-running CI without re-running
@@ -23,9 +34,11 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 import time
 
 HISTORY_NAME = "BENCH_HISTORY.json"
+TIMESTAMP_FMT = "%Y-%m-%dT%H:%M:%SZ"
 
 
 def git_rev(cwd):
@@ -42,10 +55,13 @@ def git_rev(cwd):
         return None
 
 
-def main():
-    bench_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+def default_bench_dir():
+    return os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "rust"
     )
+
+
+def fold(bench_dir):
     records = {}
     for name in sorted(os.listdir(bench_dir)):
         if not (name.startswith("BENCH_") and name.endswith(".json")) or name == HISTORY_NAME:
@@ -78,7 +94,7 @@ def main():
         return 0
 
     history["runs"].append({
-        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "timestamp": time.strftime(TIMESTAMP_FMT, time.gmtime()),
         "git_rev": git_rev(bench_dir),
         "benches": records,
     })
@@ -90,6 +106,152 @@ def main():
     print(f"bench_history: appended snapshot #{len(history['runs'])} "
           f"({', '.join(sorted(records))}) -> {history_path}")
     return 0
+
+
+def record_errors(i, run):
+    """Structural problems of one history record, as human-readable strings."""
+    errs = []
+    if not isinstance(run, dict):
+        return [f"run #{i}: not an object"]
+    ts = run.get("timestamp")
+    if not isinstance(ts, str):
+        errs.append(f"run #{i}: missing/non-string timestamp")
+    else:
+        try:
+            time.strptime(ts, TIMESTAMP_FMT)
+        except ValueError:
+            errs.append(f"run #{i}: timestamp {ts!r} is not {TIMESTAMP_FMT}")
+    if not (run.get("git_rev") is None or isinstance(run.get("git_rev"), str)):
+        errs.append(f"run #{i}: git_rev must be a string or null")
+    benches = run.get("benches")
+    if not isinstance(benches, dict) or not benches:
+        errs.append(f"run #{i}: benches must be a non-empty object")
+    unknown = set(run) - {"timestamp", "git_rev", "benches"}
+    if unknown:
+        errs.append(f"run #{i}: unknown keys {sorted(unknown)}")
+    return errs
+
+
+def check(bench_dir):
+    """Validate BENCH_HISTORY.json; return 0 if clean, 1 otherwise."""
+    history_path = os.path.join(bench_dir, HISTORY_NAME)
+    if not os.path.exists(history_path):
+        print(f"bench_history --check: no {HISTORY_NAME} in {bench_dir}; nothing to check")
+        return 0
+    try:
+        with open(history_path) as f:
+            history = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_history --check: unreadable {history_path}: {e}", file=sys.stderr)
+        return 1
+    errs = []
+    if not isinstance(history, dict) or not isinstance(history.get("runs"), list):
+        errs.append("top level must be an object with a 'runs' list")
+        runs = []
+    else:
+        runs = history["runs"]
+    for i, run in enumerate(runs):
+        errs.extend(record_errors(i, run))
+    # duplicates the fold can never produce: adjacent snapshots with the
+    # same bench payload (idempotence skips those), or two byte-identical
+    # records anywhere
+    for i in range(1, len(runs)):
+        if isinstance(runs[i], dict) and isinstance(runs[i - 1], dict) \
+                and runs[i].get("benches") is not None \
+                and runs[i].get("benches") == runs[i - 1].get("benches"):
+            errs.append(f"runs #{i - 1}/#{i}: adjacent snapshots with identical benches "
+                        "(idempotence violation)")
+    seen = {}
+    for i, run in enumerate(runs):
+        key = json.dumps(run, sort_keys=True)
+        if key in seen:
+            errs.append(f"runs #{seen[key]}/#{i}: byte-identical records")
+        else:
+            seen[key] = i
+    if errs:
+        for e in errs:
+            print(f"bench_history --check: {e}", file=sys.stderr)
+        print(f"bench_history --check: {history_path} FAILED ({len(errs)} problem(s))",
+              file=sys.stderr)
+        return 1
+    print(f"bench_history --check: {history_path} OK ({len(runs)} snapshot(s))")
+    return 0
+
+
+def self_test():
+    """Exercise --check and the fold's idempotence in a temp dir."""
+    failures = []
+
+    def expect(name, got, want):
+        if got != want:
+            failures.append(f"{name}: check returned {got}, wanted {want}")
+
+    def write_history(d, doc):
+        with open(os.path.join(d, HISTORY_NAME), "w") as f:
+            if isinstance(doc, str):
+                f.write(doc)
+            else:
+                json.dump(doc, f)
+
+    run_a = {"timestamp": "2026-07-30T00:00:00Z", "git_rev": "abc1234",
+             "benches": {"decode": {"x": 1}}}
+    run_b = {"timestamp": "2026-07-30T01:00:00Z", "git_rev": "abc1234",
+             "benches": {"decode": {"x": 2}}}
+
+    with tempfile.TemporaryDirectory() as d:
+        expect("missing history is fine", check(d), 0)
+        write_history(d, {"runs": [run_a, run_b]})
+        expect("well-formed history", check(d), 0)
+        write_history(d, "{not json")
+        expect("unparsable history", check(d), 1)
+        write_history(d, {"snapshots": []})
+        expect("missing runs list", check(d), 1)
+        write_history(d, {"runs": [dict(run_a, timestamp="yesterday")]})
+        expect("bad timestamp", check(d), 1)
+        write_history(d, {"runs": [{"timestamp": "2026-07-30T00:00:00Z",
+                                    "git_rev": None, "benches": {}}]})
+        expect("empty benches", check(d), 1)
+        write_history(d, {"runs": [run_a, dict(run_b, benches=run_a["benches"])]})
+        expect("adjacent duplicate benches", check(d), 1)
+        write_history(d, {"runs": [run_a, run_b, dict(run_a)]})
+        expect("byte-identical records", check(d), 1)
+
+    # fold + check integration: folding twice over unchanged BENCH files
+    # appends exactly one snapshot and stays clean
+    with tempfile.TemporaryDirectory() as d:
+        with open(os.path.join(d, "BENCH_decode.json"), "w") as f:
+            json.dump({"bench": "decode_batched", "points": []}, f)
+        fold(d)
+        fold(d)
+        with open(os.path.join(d, HISTORY_NAME)) as f:
+            runs = json.load(f)["runs"]
+        if len(runs) != 1:
+            failures.append(f"idempotent fold: {len(runs)} snapshots, wanted 1")
+        expect("fold output passes --check", check(d), 0)
+
+    if failures:
+        for f_ in failures:
+            print(f"bench_history --self-test: FAIL {f_}", file=sys.stderr)
+        return 1
+    print("bench_history --self-test: OK")
+    return 0
+
+
+def main():
+    args = sys.argv[1:]
+    mode = "fold"
+    if "--check" in args:
+        mode = "check"
+        args.remove("--check")
+    if "--self-test" in args:
+        mode = "self-test"
+        args.remove("--self-test")
+    bench_dir = args[0] if args else default_bench_dir()
+    if mode == "check":
+        return check(bench_dir)
+    if mode == "self-test":
+        return self_test()
+    return fold(bench_dir)
 
 
 if __name__ == "__main__":

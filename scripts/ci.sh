@@ -19,6 +19,15 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+# The property suites (util::prop: pool no-leak, pooled no-leak, the
+# serving-trace differential harness, ...) run under the fixed default
+# seed above; re-run them under two extra seeds so CI explores fresh
+# random traces every time the suite logic changes.
+for seed in 20260730 987654321; do
+    echo "== property suite under PROP_SEED=$seed =="
+    PROP_SEED=$seed cargo test -q --lib -- property
+done
+
 echo "== lint: clippy -D warnings =="
 cargo clippy -- -D warnings
 
@@ -34,7 +43,9 @@ if [[ "${1:-}" != "--no-bench" ]]; then
 
     echo "== bench history: fold BENCH_*.json into BENCH_HISTORY.json =="
     if command -v python3 >/dev/null; then
+        python3 ../scripts/bench_history.py --self-test
         python3 ../scripts/bench_history.py .
+        python3 ../scripts/bench_history.py --check .
     else
         echo "python3 not found — skipping bench-history fold" >&2
     fi
