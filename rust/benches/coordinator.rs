@@ -1,15 +1,19 @@
 //! L3 coordinator micro-benches: the serving hot path must not be the
-//! bottleneck (DESIGN.md §9 L3 target). Measures batcher planning, queue
-//! ops, state-pool alloc/release, and the gather/scatter of per-sequence
-//! Fenwick state stacks into batched buffers — everything around the
-//! PJRT execute call.
+//! bottleneck. Measures batcher planning, queue ops, state-pool
+//! alloc/release, and — on the REAL serving engine ([`PooledBackend`]
+//! driven by [`DecodeServer`]) — end-to-end engine-step overhead for a
+//! mixed prefill + decode + scoring workload, where the old bench
+//! measured only the PJRT path's gather/scatter mirror.
 //!
 //! Run: `cargo bench --bench coordinator`
 
 use std::time::Duration;
 
 use loglinear::bench::{bench, section};
+use loglinear::coordinator::backend::{PooledBackend, TransitionKind};
 use loglinear::coordinator::batcher::{BatchPolicy, RequestQueue};
+use loglinear::coordinator::server::DecodeServer;
+use loglinear::coordinator::{GenRequest, ScoreRequest};
 use loglinear::state::pool::StatePool;
 use loglinear::util::Rng;
 
@@ -52,33 +56,55 @@ fn main() {
         }
     });
 
-    section("state gather/scatter (8 seqs x 4 layers x (9,2,16,32) stacks)");
-    // mirrors DecodeServer::step's memory movement around the execute call
-    let numel = 9 * 2 * 16 * 32;
-    let layers = 4;
-    let batch = 8;
-    let seq_states: Vec<Vec<Vec<f32>>> = (0..batch)
-        .map(|_| (0..layers).map(|_| vec![1.0f32; numel]).collect())
-        .collect();
-    bench("gather+scatter", 0.3, || {
-        let mut batched: Vec<Vec<f32>> = (0..layers).map(|_| vec![0.0f32; batch * numel]).collect();
-        for (i, seq) in seq_states.iter().enumerate() {
-            for (l, st) in seq.iter().enumerate() {
-                batched[l][i * numel..(i + 1) * numel].copy_from_slice(st);
-            }
+    // The real serving engine end to end: a sequential 2-layer 2-head
+    // pooled backend under continuous batching, with chunked prefill,
+    // decode, and prompt-scoring traffic mixed — measures the whole
+    // engine loop (admission, budgeted ingest, batched step, sampling,
+    // retirement), not a gather/scatter mirror of it.
+    section("pooled serving engine: mixed prefill/decode/score traffic (L=2, H=2, dk=dv=16)");
+    let serve = || {
+        let backend = PooledBackend::with_model_config(
+            128,
+            2,
+            2,
+            TransitionKind::Mamba2,
+            16,
+            16,
+            8,
+            4096,
+            0xC00,
+        );
+        let mut srv = DecodeServer::with_backend(
+            backend,
+            BatchPolicy::new(vec![8], Duration::ZERO).with_prefill_budget(4),
+        );
+        let mut rng = Rng::new(7);
+        for id in 0..16u64 {
+            let prompt_len = 2 + rng.below(30);
+            let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(128) as i32).collect();
+            srv.submit(GenRequest { id, prompt, max_new: 8 }).unwrap();
         }
-        std::hint::black_box(&batched);
-        // scatter back
-        let mut out = seq_states.clone();
-        for (i, seq) in out.iter_mut().enumerate() {
-            for (l, st) in seq.iter_mut().enumerate() {
-                st.copy_from_slice(&batched[l][i * numel..(i + 1) * numel]);
-            }
+        for id in 0..4u64 {
+            let tokens: Vec<i32> = (0..24).map(|_| rng.below(128) as i32).collect();
+            srv.submit_score(ScoreRequest { id: 100 + id, tokens }).unwrap();
         }
-        std::hint::black_box(&out);
+        let results = srv.run_to_completion().unwrap();
+        assert_eq!(results.len(), 16);
+        assert_eq!(srv.take_score_results().len(), 4);
+        let s = &srv.stats;
+        // every executed engine work unit: decode batches + prefill
+        // chunks + scoring chunks + scoring tails (one per request)
+        let units = s.steps + s.prefill_chunks + s.score_chunks + s.score_requests;
+        (s.steps, s.tokens_processed, s.prefill_chunks, units)
+    };
+    // warm once, then time full serves
+    let (steps, toks, chunks, units) = serve();
+    println!("  one serve: {steps} decode steps, {toks} decode rows, {chunks} prefill chunks");
+    let r = bench("serve 16 gen + 4 score", 0.3, || {
+        std::hint::black_box(serve());
     });
-
+    let per_unit_us = r.secs.mean / units as f64 * 1e6;
     println!(
-        "\n  (for end-to-end step latency incl. PJRT execute, run\n   `loglinear serve-demo` or `cargo run --release --example serve`)"
+        "  ~{per_unit_us:.1} us per engine work unit ({units} units = decode batches + prefill/score chunks + score tails)"
     );
 }

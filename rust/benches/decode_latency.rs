@@ -1,22 +1,71 @@
-//! E11 — decode latency/memory growth (the §3.2 claim): per-step decode
-//! time and resident state vs context depth for the three regimes.
-//! KV-cache cost grows linearly, Fenwick stays ~log.
+//! E11 — decode latency/memory growth (the §3.2 claim), measured on the
+//! REAL serving engine: per-step decode time and resident state vs
+//! context depth, through [`PooledBackend::step`] (pool-backed batched
+//! Fenwick advance + batched read + logits GEMM — the exact code
+//! `DecodeServer` drives), for a single-layer model and a sequential
+//! 2-layer × 2-head stack, against a softmax KV-cache baseline.
+//! KV-cache cost grows linearly with depth; the Fenwick engines stay ~log.
 //!
-//! Run: `cargo bench --bench decode_latency`
+//! Run: `cargo bench --bench decode_latency [-- --quick]`
 
 use loglinear::attention::softmax::KvCacheDecoder;
 use loglinear::bench::section;
-use loglinear::state::{FenwickState, Transition};
+use loglinear::coordinator::backend::{DecodeBackend, PooledBackend, SeqSlot, TransitionKind};
 use loglinear::util::stats::Summary;
 use loglinear::util::Rng;
 
-fn window_mean(samples: &[f64]) -> f64 {
+fn window_p50_us(samples: &[f64]) -> f64 {
     Summary::of(samples).p50 * 1e6
 }
 
+/// One pooled serving sequence stepped to `max_t` depth through the real
+/// backend; records per-step seconds.
+struct PooledRun {
+    backend: PooledBackend,
+    slot: SeqSlot,
+    times: Vec<f64>,
+}
+
+impl PooledRun {
+    fn new(layers: usize, heads: usize, dk: usize, max_t: usize) -> PooledRun {
+        // chunked prefill off: this bench measures the decode step itself
+        let mut backend = PooledBackend::with_model_config(
+            128,
+            layers,
+            heads,
+            TransitionKind::Mamba2,
+            dk,
+            dk,
+            0,
+            4 * layers * heads * 32,
+            0xE11,
+        );
+        let slot = backend.admit(max_t).expect("pool sized for the run");
+        PooledRun { backend, slot, times: Vec::new() }
+    }
+
+    fn step(&mut self, tok: i32, pos: usize) {
+        let t0 = std::time::Instant::now();
+        let logits = self
+            .backend
+            .step(1, &[(self.slot, tok, pos as i32)])
+            .expect("decode step");
+        self.times.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(logits);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.backend.state_bytes()
+    }
+}
+
 fn main() {
-    let (dk, dv) = (32, 32);
-    let depths = [1024usize, 4096, 16_384, 65_536];
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+
+    let (dk, dv) = (32usize, 32usize);
+    let depths: &[usize] =
+        if quick { &[1024, 4096] } else { &[1024, 4096, 16_384, 65_536] };
     let max_t = *depths.last().unwrap();
     let mut rng = Rng::new(3);
     let n_inputs = 2048;
@@ -28,22 +77,19 @@ fn main() {
         .map(|_| (0..dv).map(|_| rng.normal_f32(0.0, 1.0)).collect())
         .collect();
 
-    section("per-step decode time (us) and state bytes vs context depth");
+    section("per-step decode time (us, p50) and state bytes vs context depth");
     println!(
-        "{:>8} | {:>12} {:>12} | {:>10} {:>10} | {:>12} {:>12}",
-        "depth", "kv us/step", "kv bytes", "m2 us", "m2 bytes", "fenwick us", "fenwick bytes"
+        "{:>8} | {:>12} {:>12} | {:>12} {:>12} | {:>14} {:>12}",
+        "depth", "kv us/step", "kv bytes", "pooled L1 us", "L1 bytes", "pooled L2xH2 us", "L2 bytes"
     );
 
     let mut kv = KvCacheDecoder::new(dk);
-    let mut m2 = loglinear::tensor::Mat::zeros(dk, dv);
-    let mut fw = FenwickState::new(dk, dv);
-    let lambda = vec![1.0f32; 24];
-    let mut next = 0usize;
     let mut kv_t = Vec::new();
-    let mut m2_t = Vec::new();
-    let mut fw_t = Vec::new();
-    let kv_cap = 16_384; // KV path becomes the bottleneck of the bench itself
+    let kv_cap = 16_384.min(max_t); // KV path becomes the bench's own bottleneck
+    let mut l1 = PooledRun::new(1, 1, dk, max_t);
+    let mut l2 = PooledRun::new(2, 2, dk, max_t);
 
+    let mut next = 0usize;
     for t in 0..max_t {
         let i = t % n_inputs;
         if t < kv_cap {
@@ -51,49 +97,46 @@ fn main() {
             kv.step(&qs[i], &ks[i], &vs[i]);
             kv_t.push(t0.elapsed().as_secs_f64());
         }
-        let t0 = std::time::Instant::now();
-        m2.scale_inplace(0.999);
-        loglinear::tensor::outer_acc(&mut m2, &ks[i], &vs[i], 1.0);
-        std::hint::black_box(m2.matvec_t(&qs[i]));
-        m2_t.push(t0.elapsed().as_secs_f64());
-
-        let t0 = std::time::Instant::now();
-        std::hint::black_box(fw.step(&qs[i], &ks[i], &vs[i], 1.0, Transition::Decay(0.999), &lambda));
-        fw_t.push(t0.elapsed().as_secs_f64());
+        let tok = (t % 128) as i32;
+        l1.step(tok, t);
+        l2.step(tok, t);
 
         if next < depths.len() && t + 1 == depths[next] {
             let w = 512.min(t + 1);
             let kv_us = if t < kv_cap {
-                format!("{:.2}", window_mean(&kv_t[kv_t.len() - w..]))
+                format!("{:.2}", window_p50_us(&kv_t[kv_t.len() - w.min(kv_t.len())..]))
             } else {
                 // linear extrapolation from the last measured window
                 format!(
                     "~{:.2}",
-                    window_mean(&kv_t[kv_t.len() - w..]) * (t + 1) as f64 / kv_cap as f64
+                    window_p50_us(&kv_t[kv_t.len() - w.min(kv_t.len())..]) * (t + 1) as f64
+                        / kv_cap as f64
                 )
             };
-            let kv_bytes = if t < kv_cap {
-                kv.state_bytes()
-            } else {
-                (t + 1) * (dk + dv) * 4
-            };
+            let kv_bytes = if t < kv_cap { kv.state_bytes() } else { (t + 1) * (dk + dv) * 4 };
             println!(
-                "{:>8} | {:>12} {:>12} | {:>10.2} {:>10} | {:>12.2} {:>12}",
+                "{:>8} | {:>12} {:>12} | {:>12.2} {:>12} | {:>14.2} {:>12}",
                 t + 1,
                 kv_us,
                 kv_bytes,
-                window_mean(&m2_t[m2_t.len() - w..]),
-                dk * dv * 4,
-                window_mean(&fw_t[fw_t.len() - w..]),
-                fw.state_bytes(),
+                window_p50_us(&l1.times[l1.times.len() - w..]),
+                l1.state_bytes(),
+                window_p50_us(&l2.times[l2.times.len() - w..]),
+                l2.state_bytes(),
             );
             next += 1;
         }
     }
 
-    section("growth factors depth 1K -> 64K (paper: KV x64, Fenwick ~x1.6)");
+    section("growth factors (paper: KV xT, Fenwick ~log)");
     println!(
-        "  fenwick live states at 64K: {} (= popcount+1; bound log2(64K)+1 = 17)",
-        fw.live_states()
+        "  pooled L1 blocks in use at depth {}: {} (= popcount+1; bound log2+1 = {})",
+        max_t,
+        l1.backend.pool().in_use(),
+        (usize::BITS - max_t.leading_zeros()) as usize
+    );
+    println!(
+        "  pooled L2xH2 blocks in use: {} (4 entries x live levels)",
+        l2.backend.pool().in_use()
     );
 }

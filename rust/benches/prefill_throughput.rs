@@ -1,25 +1,35 @@
-//! Prompt-ingestion throughput: chunkwise prefill (the new
-//! `loglinear::prefill` subsystem — head-batched state-only Alg. 1 +
-//! export bridge) vs the token-by-token recurrent path the serving engine
-//! used before (one `PooledFenwickState` advance + λ-read per token per
-//! head, which is what feeding prompt tokens through the decode step
-//! costs, minus the logits GEMM).
+//! Prompt-ingestion throughput: chunkwise prefill (the `prefill`
+//! subsystem — head-batched Alg. 1 + export bridge) vs the token-by-token
+//! recurrent path the serving engine used before (one `PooledFenwickState`
+//! advance + λ-read per token per head), plus the **sequential L-layer
+//! stack** ingest mode and the **prompt-scoring** workload the per-token
+//! chunk outputs unlock.
 //!
 //! Run: `cargo bench --bench prefill_throughput [-- --quick] [--threads N]`
 //!
-//! Emits `BENCH_prefill.json` (prompt tokens/s for both paths and both
-//! log-linear variants, with the chunkwise-vs-token speedup — the ≥5×
-//! acceptance number — and previous-run deltas in the style of
-//! `BENCH_decode.json`). Before timing, both ingestion paths are advanced
-//! one probe token and their reads compared within the chunkwise
-//! tolerance, so the speedup is only reported for equivalent states.
+//! Emits `BENCH_prefill.json`:
+//! - prompt tokens/s for both paths and both log-linear variants, with
+//!   the chunkwise-vs-token speedup headline (`speedup_vs_token_by_token`)
+//!   and previous-run deltas;
+//! - sequential L-layer stack ingest tokens/s (`sequential` block);
+//! - the `score_tokens_per_s` headline: per-token log-probs for a whole
+//!   prompt through the serving scoring path (chunkwise stack outputs +
+//!   logits GEMMs + sub-chunk tail), vs the token-by-token replay —
+//!   **equivalence asserted before timing** in both sections;
+//! - the shared-workspace accounting (`workspace_bytes_shared` /
+//!   `workspace_bytes_saved_per_extra_prompt`): scratch one extra
+//!   concurrent prompt no longer allocates now that all engines share
+//!   one `prefill::Workspace`.
 
 use loglinear::bench::{bench, section};
+use loglinear::coordinator::backend::{
+    fold_score_logprobs, DecodeBackend, PooledBackend, TransitionKind,
+};
 use loglinear::prefill::bridge::export_prefill_head;
-use loglinear::prefill::PrefillEngine;
+use loglinear::prefill::{LayerProjection, LayerStack, PrefillEngine, Workspace};
 use loglinear::state::pool::StatePool;
 use loglinear::state::pooled::PooledFenwickState;
-use loglinear::state::Transition;
+use loglinear::state::{GateTable, Transition};
 use loglinear::tensor::{self, Mat};
 use loglinear::util::json::Json;
 use loglinear::util::Rng;
@@ -39,6 +49,7 @@ struct Fixture {
     /// per-chunk stacked (H, C, d) views for the engine
     kc: Vec<Vec<f32>>,
     vc: Vec<Vec<f32>>,
+    qc: Vec<Vec<f32>>,
     alpha: Vec<f32>,
     beta: Vec<f32>,
     lambda: Vec<f32>,
@@ -63,20 +74,24 @@ fn build(heads: usize, dk: usize, dv: usize, c: usize, t: usize) -> Fixture {
     }
     let mut kc = Vec::new();
     let mut vc = Vec::new();
+    let mut qc = Vec::new();
     for z in 0..t / c {
         let mut kz = Vec::with_capacity(heads * c * dk);
         let mut vz = Vec::with_capacity(heads * c * dv);
+        let mut qz = Vec::with_capacity(heads * c * dk);
         for h in 0..heads {
             kz.extend_from_slice(ks[h].rows_data(z * c, (z + 1) * c));
             vz.extend_from_slice(vs[h].rows_data(z * c, (z + 1) * c));
+            qz.extend_from_slice(qs[h].rows_data(z * c, (z + 1) * c));
         }
         kc.push(kz);
         vc.push(vz);
+        qc.push(qz);
     }
     let alpha: Vec<f32> = (0..t).map(|_| rng.range_f32(0.99, 1.0)).collect();
     let beta: Vec<f32> = (0..t).map(|_| rng.range_f32(0.1, 0.9)).collect();
     let lambda: Vec<f32> = (0..24).map(|l| 0.5f32.powi(l)).collect();
-    Fixture { heads, dk, dv, c, t, ks, vs, qs, kc, vc, alpha, beta, lambda }
+    Fixture { heads, dk, dv, c, t, ks, vs, qs, kc, vc, qc, alpha, beta, lambda }
 }
 
 impl Fixture {
@@ -124,17 +139,22 @@ impl Fixture {
         out
     }
 
-    /// The new path: full chunks through the head-batched engine, then
-    /// the export bridge into pool blocks (state-only — the serving
-    /// prefill never reads).
-    fn ingest_chunkwise(&self, gdn: bool, pool: &mut StatePool) -> Vec<PooledFenwickState> {
+    /// The new path: full chunks through the head-batched engine (shared
+    /// workspace), then the export bridge into pool blocks (state-only —
+    /// the serving prefill never reads).
+    fn ingest_chunkwise(
+        &self,
+        gdn: bool,
+        ws: &mut Workspace,
+        pool: &mut StatePool,
+    ) -> Vec<PooledFenwickState> {
         let mut eng = PrefillEngine::new(self.heads, self.dk, self.dv, self.c);
         for z in 0..self.t / self.c {
             let (s, e) = (z * self.c, (z + 1) * self.c);
             if gdn {
-                eng.ingest_chunk_gdn(&self.kc[z], &self.vc[z], &self.alpha[s..e], &self.beta[s..e]);
+                eng.ingest_chunk_gdn(ws, &self.kc[z], &self.vc[z], &self.alpha[s..e], &self.beta[s..e], None);
             } else {
-                eng.ingest_chunk_mamba2(&self.kc[z], &self.vc[z], &self.alpha[s..e], None);
+                eng.ingest_chunk_mamba2(ws, &self.kc[z], &self.vc[z], &self.alpha[s..e], None);
             }
         }
         eng.finish();
@@ -145,9 +165,9 @@ impl Fixture {
 
     /// Both paths must agree: advance one probe token past the boundary
     /// on each and compare the λ-reads within the chunkwise tolerance.
-    fn assert_equivalent(&self, gdn: bool, pool: &mut StatePool) {
+    fn assert_equivalent(&self, gdn: bool, ws: &mut Workspace, pool: &mut StatePool) {
         let mut a = self.ingest_token_by_token(gdn, pool);
-        let mut b = self.ingest_chunkwise(gdn, pool);
+        let mut b = self.ingest_chunkwise(gdn, ws, pool);
         let probe_t = self.t - 1; // reuse the last token as the probe
         for h in 0..self.heads {
             for (seq, path) in [(&mut a[h], "token"), (&mut b[h], "chunkwise")] {
@@ -190,6 +210,48 @@ impl Fixture {
         }
         assert_eq!(pool.in_use(), 0);
     }
+
+    /// Sequential L-layer stack ingest over the whole prompt (per-token
+    /// outputs carried layer-to-layer) — the serving prefill shape for
+    /// the paper's actual stacked models.
+    fn ingest_stack(
+        &self,
+        gdn: bool,
+        layers: usize,
+        ws: &mut Workspace,
+        projs: &[LayerProjection],
+        gates: &[GateTable],
+    ) -> LayerStack {
+        let kind = if gdn { TransitionKind::Gdn } else { TransitionKind::Mamba2 };
+        let mut stack = LayerStack::new(layers, self.heads, self.dk, self.dv, self.c);
+        for z in 0..self.t / self.c {
+            stack.ingest_chunk(ws, kind, projs, gates, z * self.c, &self.qc[z], &self.kc[z], &self.vc[z], true);
+            std::hint::black_box(stack.last_output());
+        }
+        stack
+    }
+}
+
+/// Score a whole prompt through the serving trait path (budget-free:
+/// chunk loop + tail), returning its per-token log-probs.
+fn score_prompt(b: &mut PooledBackend, tokens: &[i32]) -> Vec<f32> {
+    let slot = b.score_admit().expect("score admit");
+    let c = b.prefill_chunk_size();
+    let n = tokens.len();
+    let mut lps = Vec::with_capacity(n.saturating_sub(1));
+    let mut pos = 0;
+    if c > 0 {
+        while pos + c < n {
+            let logits = b.score_chunk(slot, &tokens[pos..pos + c], pos).expect("score chunk");
+            fold_score_logprobs(&logits, c, tokens, pos, &mut lps);
+            pos += c;
+        }
+    }
+    let tail = &tokens[pos..n - 1];
+    let logits = b.score_tail(slot, tail, pos).expect("score tail");
+    fold_score_logprobs(&logits, tail.len(), tokens, pos, &mut lps);
+    b.retire(slot);
+    lps
 }
 
 fn main() {
@@ -204,6 +266,7 @@ fn main() {
     let (heads, dk, dv, c, t) = (4usize, 64usize, 64usize, 64usize, 4096usize);
     let fx = build(heads, dk, dv, c, t);
     let variants: &[bool] = if quick { &[false] } else { &[false, true] };
+    let mut ws = Workspace::new();
 
     section(&format!(
         "prompt ingestion: chunkwise prefill vs token-by-token (H={heads}, dk=dv={dk}, C={c}, T={t}, gemm_threads={})",
@@ -215,7 +278,7 @@ fn main() {
     for &gdn in variants {
         let variant = if gdn { "loglinear_gdn" } else { "loglinear_mamba2" };
         let mut pool = StatePool::new(dk * dv, heads * 16);
-        fx.assert_equivalent(gdn, &mut pool);
+        fx.assert_equivalent(gdn, &mut ws, &mut pool);
 
         let r = bench(&format!("token-by-token/{variant}"), 0.3, || {
             let seqs = fx.ingest_token_by_token(gdn, &mut pool);
@@ -226,13 +289,102 @@ fn main() {
         rows.push((variant.into(), "token_by_token".into(), r.secs.mean));
 
         let r = bench(&format!("chunkwise prefill/{variant}"), 0.3, || {
-            let seqs = fx.ingest_chunkwise(gdn, &mut pool);
+            let seqs = fx.ingest_chunkwise(gdn, &mut ws, &mut pool);
             for mut seq in seqs {
                 seq.release(&mut pool);
             }
         });
         rows.push((variant.into(), "chunkwise".into(), r.secs.mean));
     }
+
+    // ---- sequential L-layer stack mode ----
+    let stack_layers = 2usize;
+    section(&format!(
+        "sequential {stack_layers}-layer stack ingest (per-token outputs carried layer-to-layer)"
+    ));
+    let mut srng = Rng::new(0x5E0);
+    let projs: Vec<LayerProjection> =
+        (1..stack_layers).map(|_| LayerProjection::random(heads, dk, dv, &mut srng)).collect();
+    let gates =
+        vec![
+            GateTable::fixed(0.99, (0..24).map(|l| 0.5f32.powi(l)).collect())
+                .with_beta(vec![0.5]);
+            stack_layers
+        ];
+    let mut stack_rows: Vec<(String, f64)> = Vec::new();
+    for &gdn in variants {
+        let variant = if gdn { "loglinear_gdn" } else { "loglinear_mamba2" };
+        let r = bench(&format!("sequential stack x{stack_layers}/{variant}"), 0.3, || {
+            let stack = fx.ingest_stack(gdn, stack_layers, &mut ws, &projs, &gates);
+            std::hint::black_box(stack.tokens());
+        });
+        stack_rows.push((variant.into(), r.secs.mean));
+    }
+
+    // ---- prompt scoring: the workload the per-token outputs unlock ----
+    let (s_layers, s_heads, s_dk, s_vocab) = (2usize, 2usize, 32usize, 256usize);
+    let s_t = if quick { 1024usize } else { 2048 };
+    section(&format!(
+        "prompt scoring: chunkwise stack outputs vs token-by-token replay (L={s_layers}, H={s_heads}, dk=dv={s_dk}, vocab={s_vocab}, T={s_t})"
+    ));
+    let mut prng = Rng::new(0x5C0);
+    let prompt: Vec<i32> = (0..s_t).map(|_| prng.below(s_vocab) as i32).collect();
+    let mut chunked = PooledBackend::with_model_config(
+        s_vocab,
+        s_layers,
+        s_heads,
+        TransitionKind::Mamba2,
+        s_dk,
+        s_dk,
+        64,
+        64,
+        0x5EED,
+    );
+    let tokenwise = PooledBackend::with_model_config(
+        s_vocab,
+        s_layers,
+        s_heads,
+        TransitionKind::Mamba2,
+        s_dk,
+        s_dk,
+        0, // chunked prefill off: scoring degenerates to the per-token replay
+        64,
+        0x5EED, // same weights (the chunk size does not touch the RNG)
+    );
+    // equivalence before timing: the chunkwise score must match the
+    // token-by-token replay within the chunkwise tolerance
+    {
+        let got = score_prompt(&mut chunked, &prompt);
+        let want = tokenwise.oracle_score_logprobs(&prompt);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g - w).abs() < 5e-2 + 2e-2 * w.abs(),
+                "score target {}: chunkwise {} vs token-by-token {}",
+                i + 1,
+                g,
+                w
+            );
+        }
+    }
+    let r = bench("score/chunkwise", 0.3, || {
+        std::hint::black_box(score_prompt(&mut chunked, &prompt));
+    });
+    let score_chunk_secs = r.secs.mean;
+    let r = bench("score/token-by-token", 0.3, || {
+        std::hint::black_box(tokenwise.oracle_score_logprobs(&prompt));
+    });
+    let score_token_secs = r.secs.mean;
+    let score_tps = s_t as f64 / score_chunk_secs;
+    let score_speedup = score_token_secs / score_chunk_secs;
+
+    // ---- shared-workspace accounting ----
+    let ws_bytes = ws.bytes();
+    section("shared prefill workspace");
+    println!(
+        "  one shared workspace: {} KiB (before: every concurrent prompt's engine held its own copy)",
+        ws_bytes / 1024
+    );
 
     section("prompt tokens/s and chunkwise speedup");
     println!("{:>18} {:>18} {:>18} {:>10}", "variant", "token-by-token", "chunkwise", "speedup");
@@ -251,6 +403,9 @@ fn main() {
         println!("{variant:>18} {tok_s:>14.0} t/s {chunk_s:>14.0} t/s {speedup:>9.2}x");
         speedups.push((variant.into(), speedup));
     }
+    println!(
+        "\n  score_tokens_per_s: {score_tps:.0} ({score_speedup:.2}x vs token-by-token replay)"
+    );
 
     // ---- machine-readable record (BENCH_prefill.json) ----
     let previous = std::fs::read_to_string(OUT_PATH)
@@ -294,8 +449,17 @@ fn main() {
         .iter()
         .map(|(v, s)| Json::obj().set("variant", v.as_str()).set("speedup_vs_token_by_token", *s))
         .collect();
-    // headline acceptance number: the serving-path (log-linear Mamba-2,
-    // the PooledBackend variant) chunkwise-vs-token-by-token speedup
+    let stack_json: Vec<Json> = stack_rows
+        .iter()
+        .map(|(v, secs)| {
+            Json::obj()
+                .set("variant", v.as_str())
+                .set("layers", stack_layers)
+                .set("tokens_per_s", t as f64 / secs)
+        })
+        .collect();
+    // headline acceptance numbers: the serving-path chunkwise-vs-token
+    // speedup, and the scoring throughput the sequential outputs unlock
     let headline = speedups
         .iter()
         .find(|(v, _)| v == "loglinear_mamba2")
@@ -311,7 +475,13 @@ fn main() {
         .set("chunk", c)
         .set("prompt_tokens", t)
         .set("speedup_vs_token_by_token", headline)
+        .set("score_tokens_per_s", score_tps)
+        .set("score_speedup_vs_token_by_token", score_speedup)
+        .set("score_prompt_tokens", s_t)
+        .set("workspace_bytes_shared", ws_bytes as f64)
+        .set("workspace_bytes_saved_per_extra_prompt", ws_bytes as f64)
         .set("points", Json::Arr(points))
+        .set("sequential", Json::Arr(stack_json))
         .set("chunkwise_speedup", Json::Arr(speedup_json));
     if !prev_speedups.is_empty() {
         doc = doc.set("speedup_vs_previous", Json::Arr(prev_speedups));

@@ -1,15 +1,23 @@
 //! The attention zoo: pure-Rust reference implementations of every model
 //! row in the paper's Table 1, each in up to three algorithmic forms.
 //!
-//! | model | recurrent | parallel (masked) | chunkwise | serving prefill |
-//! |-------|-----------|-------------------|-----------|-----------------|
-//! | softmax attention           | (KV-cache decode) | ✓ `O(T^2)` | — | — |
-//! | linear attention            | ✓ `O(T)` | ✓ | ✓ `O(T)` | — |
-//! | Mamba-2 (scalar gate)       | ✓ | ✓ | ✓ (SSD) | — |
-//! | DeltaNet                    | ✓ | ✓ (WY/UT) | ✓ | — |
-//! | Gated DeltaNet              | ✓ | ✓ | ✓ | — |
-//! | Log-Linear Mamba-2          | ✓ `O(log T)` state | ✓ | ✓ `O(T log T)` (Alg. 1) | ✓ head-batched |
-//! | Log-Linear Gated DeltaNet   | ✓ `O(log T)` state | ✓ | ✓ | ✓ head-batched |
+//! | model | recurrent | parallel (masked) | chunkwise | serving prefill | prompt scoring |
+//! |-------|-----------|-------------------|-----------|-----------------|----------------|
+//! | softmax attention           | (KV-cache decode) | ✓ `O(T^2)` | — | — | — |
+//! | linear attention            | ✓ `O(T)` | ✓ | ✓ `O(T)` | — | — |
+//! | Mamba-2 (scalar gate)       | ✓ | ✓ | ✓ (SSD) | — | — |
+//! | DeltaNet                    | ✓ | ✓ (WY/UT) | ✓ | — | — |
+//! | Gated DeltaNet              | ✓ | ✓ | ✓ | — | — |
+//! | Log-Linear Mamba-2          | ✓ `O(log T)` state | ✓ | ✓ `O(T log T)` (Alg. 1) | ✓ head-batched | ✓ per-token log-probs |
+//! | Log-Linear Gated DeltaNet   | ✓ `O(log T)` state | ✓ | ✓ | ✓ head-batched | ✓ per-token log-probs |
+//!
+//! *Serving prefill* is the head-batched, sequential-L-layer chunkwise
+//! ingester of [`crate::prefill`] (state-only for generation prompts,
+//! per-token outputs for layer stacking); *prompt scoring* is the
+//! serving-side per-token log-prob workload built on those outputs
+//! (`coordinator::backend::PooledBackend::score_chunk` /
+//! `ScoreRequest` on the decode server) — the workload where the
+//! O(T log T) prefill directly wins over token-by-token replay.
 //!
 //! The *recurrent* form is always the unambiguous ground truth; property
 //! tests assert `recurrent == parallel == chunkwise` on random inputs.

@@ -8,40 +8,55 @@
 //!   gathered into batched PJRT buffers, the compiled `decode_step`
 //!   executes, states scatter back. Admission never backpressures (dense
 //!   stacks are host `Vec`s) and prompts are ingested token-by-token.
-//! - [`PooledBackend`]: the pure-Rust pooled engine. An L-layer H-head
-//!   log-linear attention LM (Mamba-2 or GDN transitions, see
-//!   [`TransitionKind`]) whose per-(sequence, layer, head) Fenwick states
-//!   live in a shared [`StatePool`]; each decode step is matmul-rich —
-//!   one pool-wide [`BatchedAdvance::advance_bucket`] pass (every entry's
-//!   merge + transition + sentinel write as batched slab dispatches), one
-//!   [`BatchedDecoder::read_batch`] block-sparse GEMM over every live
-//!   level of every entry, then one `O_cat @ W_o^T` GEMM for the whole
-//!   batch's logits. Prompts are ingested **chunkwise**:
-//!   [`DecodeBackend::prefill_chunk`] streams full chunks through
-//!   per-sequence per-layer head-batched
-//!   [`PrefillEngine`](crate::prefill::PrefillEngine)s (state-only Alg. 1
-//!   — no logits until the prompt's final token), and the first decode
-//!   row flips the sequence to pooled decode states via the export bridge
-//!   ([`crate::prefill::bridge::export_prefill_head`]). Position- (and
-//!   optionally head-)dependent gates come from one [`GateTable`] per
-//!   layer consulted by both paths, so chunkwise-prefilled and
-//!   token-stepped sequences follow the same α/β/λ schedules.
-//!   [`DecodeBackend::admit`] reserves
+//! - [`PooledBackend`]: the pure-Rust pooled engine. A **sequential**
+//!   L-layer H-head log-linear attention LM (Mamba-2 or GDN transitions,
+//!   see [`TransitionKind`]) whose per-(sequence, layer, head) Fenwick
+//!   states live in a shared [`StatePool`]. Layer ℓ+1's q/k/v are
+//!   projections of layer ℓ's per-token outputs
+//!   ([`LayerProjection`]), so a decode step runs one pool-wide
+//!   [`BatchedAdvance::advance_bucket`] pass plus one
+//!   [`BatchedDecoder::read_batch`] block-sparse GEMM **per layer**
+//!   (every (sequence, head) entry of the layer at once), threading the
+//!   `(n, H·d_v)` hidden output into the next layer's projections, then
+//!   one `O_last @ W_o^T` GEMM for the whole batch's logits. Prompts are
+//!   ingested **chunkwise** through one
+//!   [`LayerStack`](crate::prefill::LayerStack) per sequence
+//!   ([`DecodeBackend::prefill_chunk`]) — the per-token chunk-output mode
+//!   carries each layer's outputs into the next layer's chunk — and the
+//!   first decode row flips the sequence to pooled decode states via the
+//!   export bridge. Prompt **scoring** (per-token log-probs, no decode
+//!   loop) rides the same stack: [`DecodeBackend::score_chunk`] returns a
+//!   chunk's per-token logits from the last layer's chunk outputs, and
+//!   [`DecodeBackend::score_tail`] token-steps the sub-chunk tail on
+//!   Mat-backed states. Gates come from one [`GateTable`] per layer
+//!   consulted by every path. [`DecodeBackend::admit`] reserves
 //!   `layers · heads · blocks_for_steps(max_steps)` pool blocks per
 //!   sequence and returns [`AdmitError::Exhausted`] when the pool can't
-//!   hold another sequence — the backpressure signal the server's
-//!   admission loop honors by leaving requests queued.
+//!   hold another sequence.
+//!
+//! **The differential contract.** Every serving computation has a
+//! per-sequence oracle replay on this type —
+//! [`PooledBackend::oracle_decode_logits`] (chunkwise prefill span
+//! re-ingested through an identical `LayerStack`, then per-token
+//! per-layer recurrent [`FenwickState`] steps) and
+//! [`PooledBackend::oracle_score_logprobs`] — built from the same
+//! primitives in the same order, so the trace harness
+//! (`coordinator::trace`) can assert serving output **bit-exact** against
+//! them for any scheduling, batching, or interleaving.
 
 use anyhow::{bail, Result};
 
 use crate::prefill::bridge::export_prefill_head;
-use crate::prefill::PrefillEngine;
+use crate::prefill::stack::{normalize_keys, LayerProjection, LayerStack};
+use crate::prefill::Workspace;
 use crate::runtime::{ModelHandle, Runtime};
 use crate::state::pool::StatePool;
 use crate::state::pooled::{blocks_for_steps, BatchedDecoder, PooledFenwickState};
 use crate::state::{AdvanceJob, BatchedAdvance, FenwickState, GateTable, Transition};
 use crate::tensor::{self, Mat};
 use crate::util::Rng;
+
+pub use crate::state::TransitionKind;
 
 /// Backend-side handle for one admitted sequence.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -92,6 +107,38 @@ pub trait DecodeBackend {
     fn prefill_chunk(&mut self, slot: SeqSlot, tokens: &[i32], pos: usize) -> Result<()> {
         let _ = (slot, tokens, pos);
         bail!("this backend does not support chunked prefill")
+    }
+
+    /// Does this backend implement the prompt-scoring path
+    /// ([`DecodeBackend::score_admit`] / [`DecodeBackend::score_chunk`] /
+    /// [`DecodeBackend::score_tail`])?
+    fn supports_scoring(&self) -> bool {
+        false
+    }
+
+    /// Admit a scoring-only sequence: prompt ingestion and per-token
+    /// logits, never a decode step. Release with
+    /// [`DecodeBackend::retire`].
+    fn score_admit(&mut self) -> Result<SeqSlot, AdmitError> {
+        Err(AdmitError::TooLarge)
+    }
+
+    /// Ingest one full prompt chunk of a scoring sequence and return the
+    /// chunk's per-token logits `(chunk, vocab)` row-major — row `i` is
+    /// the next-token distribution after position `pos + i`, computed
+    /// from the sequential stack's last-layer per-token chunk outputs.
+    fn score_chunk(&mut self, slot: SeqSlot, tokens: &[i32], pos: usize) -> Result<Vec<f32>> {
+        let _ = (slot, tokens, pos);
+        bail!("this backend does not support prompt scoring")
+    }
+
+    /// Token-step a scoring sequence's sub-chunk tail: `tokens` at
+    /// positions `pos .. pos + tokens.len()`, returning their logits
+    /// `(tokens.len(), vocab)`. May be called with an empty `tokens` to
+    /// finalize a chunk-aligned prompt.
+    fn score_tail(&mut self, slot: SeqSlot, tokens: &[i32], pos: usize) -> Result<Vec<f32>> {
+        let _ = (slot, tokens, pos);
+        bail!("this backend does not support prompt scoring")
     }
 }
 
@@ -205,59 +252,90 @@ impl DecodeBackend for PjrtBackend {
 // Pooled pure-Rust backend
 // ---------------------------------------------------------------------------
 
-/// Which per-token state transition the backend's attention states apply
-/// (both serving paths: chunkwise prefill and pooled decode).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum TransitionKind {
-    /// Mamba-2 scalar decay: `S ← α S`, sentinel write scale 1.
-    Mamba2,
-    /// Gated DeltaNet: `S ← α (I − β k k^T) S`, sentinel write scale β
-    /// (keys are L2-normalized so the Householder stays contractive).
-    Gdn,
+/// A scoring-only sequence's backend state: the sequential prefill stack
+/// while chunks stream in (absent when chunked prefill is disabled),
+/// then Mat-backed per-(layer, head) token states for the sub-chunk tail
+/// — scoring never touches the pool, so it can never backpressure
+/// decode admission.
+struct ScoreSeq {
+    stack: Option<LayerStack>,
+    tail: Vec<FenwickState>,
 }
 
-/// One admitted sequence's backend-side state: per-layer head-batched
-/// chunkwise prefill engines while the prompt streams in, then per-(layer,
-/// head) pool-backed decode states (flipped by the export bridge on the
-/// first decode row). Both vectors are layer-major (decode states are
-/// additionally head-minor: index `l · heads + h`).
+/// Reusable scratch for [`PooledBackend::token_step_layers`] — callers
+/// hold one across their token loop so the per-token recurrent path
+/// (scoring tails, oracle replays) allocates nothing per token beyond
+/// the returned logits row.
+#[derive(Default)]
+struct TokenScratch {
+    o_prev: Vec<f32>,
+    o_cur: Vec<f32>,
+    q_rows: Vec<f32>,
+    k_rows: Vec<f32>,
+    v_rows: Vec<f32>,
+}
+
+impl TokenScratch {
+    /// Size every buffer for an H-head model (cleared to zero; layer 0
+    /// overwrites q/k/v fully and o_prev is never read before the first
+    /// layer swap, so contents cannot leak between tokens).
+    fn fit(&mut self, heads: usize, dk: usize, dv: usize) {
+        for (buf, n) in [
+            (&mut self.o_prev, heads * dv),
+            (&mut self.o_cur, heads * dv),
+            (&mut self.q_rows, heads * dk),
+            (&mut self.k_rows, heads * dk),
+            (&mut self.v_rows, heads * dv),
+        ] {
+            buf.clear();
+            buf.resize(n, 0.0);
+        }
+    }
+}
+
+/// One admitted sequence's backend-side state. Decode states are
+/// layer-major, head-minor: index `l · heads + h`.
 enum SeqState {
-    Prefilling(Vec<PrefillEngine>),
+    /// generation prompt streaming chunks through the sequential stack
+    Prefilling(LayerStack),
+    /// pool-backed decode states (flipped by the export bridge on the
+    /// first decode row)
     Decoding(Vec<PooledFenwickState>),
+    /// prompt-scoring sequence (never decodes)
+    Scoring(ScoreSeq),
 }
 
-/// Pure-Rust pooled decode backend: a fixed-weight L-layer H-head
-/// log-linear attention LM (random per-(layer, head) embeddings + one
-/// output head over the concatenated layer outputs) whose decode states
-/// live in a shared [`StatePool`] and whose prompts ingest chunkwise
-/// through per-sequence, per-layer [`PrefillEngine`]s. Exists to serve
-/// real token traffic through the batched Fenwick engines without PJRT —
-/// the scheduler/backpressure testbed and the bench engine for
-/// `decode_batched` / `prefill_throughput`.
+/// Pure-Rust pooled decode backend: a fixed-weight **sequential** L-layer
+/// H-head log-linear attention LM whose decode states live in a shared
+/// [`StatePool`] and whose prompts ingest chunkwise through one
+/// [`LayerStack`] per sequence. Exists to serve real token traffic
+/// through the batched Fenwick engines without PJRT — the
+/// scheduler/backpressure testbed and the bench engine for
+/// `decode_batched` / `prefill_throughput` / `decode_latency`.
 ///
-/// **Model layout (multi-layer).** Layer `l` is an independent H-head
-/// log-linear attention branch over the token stream: per-(layer, head)
-/// q/k/v embeddings, a per-layer [`GateTable`] (α/β/λ schedules, optionally
-/// per-head), and per-(sequence, layer, head) Fenwick level states in the
-/// one shared pool. A step's hidden output is the `(n, L·H·d_v)`
-/// concatenation of every layer's head outputs; logits are one
-/// `O_cat @ W_o^T` GEMM against the `(vocab, L·H·d_v)` output head.
-/// Layers are parallel branches rather than a sequential hidden-state
-/// stack: feeding layer `l`'s per-token outputs into layer `l+1` during
-/// *chunkwise prefill* would need intra-chunk attention outputs, which the
-/// state-only prefill engine deliberately skips (see the prompt-scoring
-/// open item in ROADMAP.md); parallel branches keep chunkwise-prefilled
-/// and token-stepped trajectories bit-identical, which the serving-trace
-/// differential harness depends on.
+/// **Model layout (sequential stack).** Layer 0 reads per-head q/k/v
+/// token embeddings (keys L2-normalized). Layer `ℓ ≥ 1` reads
+/// *projections* of layer `ℓ−1`'s per-token output `o ∈ R^{H·d_v}`
+/// ([`LayerProjection`]; projected keys re-normalized per token by the
+/// shared [`normalize_keys`]). Each layer has its own [`GateTable`]
+/// (α/β/λ schedules, optionally per-head) and per-(sequence, head)
+/// Fenwick level states in the one shared pool. Logits are one
+/// `O_last @ W_o^T` GEMM against the `(vocab, H·d_v)` output head — the
+/// last layer's hidden output, not a concat of parallel branches. A
+/// single-layer config draws exactly the same weights as the
+/// pre-sequential backend (same RNG order), so L = 1 trajectories are
+/// preserved bit-for-bit.
 ///
-/// **Step structure.** Every decode step runs exactly two batched passes
-/// over all `n · L · H` (sequence, layer, head) entries of the bucket:
-/// one pool-wide [`BatchedAdvance::advance_bucket`] (merge + transition +
-/// sentinel write as slab dispatches — the per-sequence `advance` loop it
-/// replaces is benched against it in `decode_batched`), then one
-/// [`BatchedDecoder::read_batch`] block-sparse GEMM, whose entry order
-/// (sequence-major, layer, head) makes the output buffer the logits
-/// GEMM's left operand with no reshuffle.
+/// **Step structure.** A decode step loops layers sequentially; per
+/// layer it runs exactly two batched passes over the bucket's `n · H`
+/// (sequence, head) entries — one pool-wide
+/// [`BatchedAdvance::advance_bucket`] (merge + transition + sentinel
+/// write as slab dispatches) and one [`BatchedDecoder::read_batch`]
+/// block-sparse GEMM — then two or three `(n, H·d)` projection GEMMs
+/// carry the hidden output into the next layer's inputs. Entry order
+/// (sequence-major, head) makes the read output buffer both the next
+/// layer's projection operand and the final logits GEMM's left operand
+/// with no reshuffle.
 pub struct PooledBackend {
     pub dk: usize,
     pub dv: usize,
@@ -265,15 +343,17 @@ pub struct PooledBackend {
     pub heads: usize,
     pub layers: usize,
     kind: TransitionKind,
-    /// per-(layer, head) query/key/value embeddings, layer-major
-    /// (index `l · heads + h`), (vocab, dk|dk|dv) each; keys L2-normalized
+    /// layer-0 per-head query/key/value token embeddings,
+    /// (vocab, dk|dk|dv) each; keys L2-normalized
     eq: Vec<Mat>,
     ek: Vec<Mat>,
     ev: Vec<Mat>,
-    /// output head, (vocab, layers·heads·dv): logits = O_cat @ W_o^T
+    /// inter-layer input projections, one per layer transition (L−1)
+    projs: Vec<LayerProjection>,
+    /// output head, (vocab, heads·dv): logits = O_last @ W_o^T
     wo: Mat,
     /// per-layer position-dependent α/β/λ — the one gate source for
-    /// prefill AND decode
+    /// prefill, decode, AND scoring
     gates: Vec<GateTable>,
     /// chunked-prefill chunk size (power of two; 0 disables)
     prefill_chunk: usize,
@@ -285,16 +365,21 @@ pub struct PooledBackend {
     reserved_total: usize,
     dec: BatchedDecoder,
     adv: BatchedAdvance,
+    /// ONE prefill scratch workspace shared by every sequence's stack
+    /// (the ROADMAP shared-workspace item): resident prefill scratch no
+    /// longer scales with concurrent prompts
+    ws: Workspace,
     // step workspaces (reused across steps; logits are allocated per
     // step because the trait returns an owned Vec)
-    q_buf: Vec<f32>,
+    q_rows: Vec<f32>,
+    k_rows: Vec<f32>,
+    v_rows: Vec<f32>,
     o_buf: Vec<f32>,
-    // prefill gather workspaces (reused across chunks: the stacked
-    // per-head (k, v) embeddings and the chunk's α/β schedules)
+    // prefill gather workspaces (the stacked per-head layer-0 q/k/v
+    // embedding rows for one chunk)
+    qc_buf: Vec<f32>,
     kc_buf: Vec<f32>,
     vc_buf: Vec<f32>,
-    alpha_buf: Vec<f32>,
-    beta_buf: Vec<f32>,
 }
 
 impl PooledBackend {
@@ -332,11 +417,11 @@ impl PooledBackend {
         )
     }
 
-    /// Fully-configured backend: `layers` parallel attention layers of
+    /// Fully-configured backend: a sequential stack of `layers` layers of
     /// `heads` heads each, under the `kind` state transition (see the
-    /// type docs for the model layout). A single-layer Mamba-2 config
-    /// reproduces the pre-multi-layer backend exactly (same RNG draws,
-    /// same weights, same trajectories).
+    /// type docs for the model layout). A single-layer config reproduces
+    /// the pre-sequential backend exactly (same RNG draws, same weights,
+    /// same trajectories).
     #[allow(clippy::too_many_arguments)]
     pub fn with_model_config(
         vocab: usize,
@@ -356,22 +441,19 @@ impl PooledBackend {
             "prefill chunk must be a power of two (or 0 to disable)"
         );
         let mut rng = Rng::new(seed);
-        let mut eq = Vec::with_capacity(layers * heads);
-        let mut ek = Vec::with_capacity(layers * heads);
-        let mut ev = Vec::with_capacity(layers * heads);
-        for _ in 0..layers * heads {
+        let mut eq = Vec::with_capacity(heads);
+        let mut ek = Vec::with_capacity(heads);
+        let mut ev = Vec::with_capacity(heads);
+        for _ in 0..heads {
             eq.push(Mat::randn(vocab, dk, 1.0 / (dk as f32).sqrt(), &mut rng));
             let mut k = Mat::randn(vocab, dk, 1.0, &mut rng);
-            for i in 0..vocab {
-                let norm = crate::tensor::ops::l2_norm(k.row(i)).max(1e-6);
-                for x in k.row_mut(i) {
-                    *x /= norm;
-                }
-            }
+            normalize_keys(&mut k.data, dk);
             ek.push(k);
             ev.push(Mat::randn(vocab, dv, 1.0, &mut rng));
         }
-        let wo = Mat::randn(vocab, layers * heads * dv, 1.0 / ((layers * heads * dv) as f32).sqrt(), &mut rng);
+        let projs: Vec<LayerProjection> =
+            (1..layers).map(|_| LayerProjection::random(heads, dk, dv, &mut rng)).collect();
+        let wo = Mat::randn(vocab, heads * dv, 1.0 / ((heads * dv) as f32).sqrt(), &mut rng);
         // default schedule per layer: fixed α, λ^(l) = 2^-l — coarser
         // levels matter less; wide enough for any practical position
         // (clamped past the table by level_weight)
@@ -386,6 +468,7 @@ impl PooledBackend {
             eq,
             ek,
             ev,
+            projs,
             wo,
             gates: vec![gates; layers],
             prefill_chunk,
@@ -396,12 +479,14 @@ impl PooledBackend {
             reserved_total: 0,
             dec: BatchedDecoder::new(),
             adv: BatchedAdvance::new(),
-            q_buf: Vec::new(),
+            ws: Workspace::new(),
+            q_rows: Vec::new(),
+            k_rows: Vec::new(),
+            v_rows: Vec::new(),
             o_buf: Vec::new(),
+            qc_buf: Vec::new(),
             kc_buf: Vec::new(),
             vc_buf: Vec::new(),
-            alpha_buf: Vec::new(),
-            beta_buf: Vec::new(),
         }
     }
 
@@ -415,10 +500,17 @@ impl PooledBackend {
         self.kind
     }
 
+    /// Resident bytes of the ONE shared prefill scratch workspace (the
+    /// shared-workspace item's metric: this is what each additional
+    /// concurrent prompt no longer allocates).
+    pub fn workspace_bytes(&self) -> usize {
+        self.ws.bytes()
+    }
+
     /// Install a position-dependent gate schedule (per-token and/or
-    /// per-head α/β/λ) on **every** layer. Both the chunkwise prefill
-    /// path and the decode path read it, so the two ingestion paths
-    /// cannot drift. Only meaningful before traffic runs.
+    /// per-head α/β/λ) on **every** layer. All three ingestion paths —
+    /// chunkwise prefill, pooled decode, prompt scoring — read it, so
+    /// they cannot drift. Only meaningful before traffic runs.
     pub fn set_gates(&mut self, gates: GateTable) {
         self.gates = vec![gates; self.layers];
     }
@@ -439,7 +531,7 @@ impl PooledBackend {
         &self.gates[layer]
     }
 
-    /// Number of sequences currently mid-prefill (engine states resident
+    /// Number of sequences currently mid-prefill (stack states resident
     /// outside the pool).
     pub fn prefilling(&self) -> usize {
         self.slots
@@ -449,21 +541,32 @@ impl PooledBackend {
             .count()
     }
 
-    /// Flip a prefilling slot to decode mode: seal every layer's engine
-    /// at its chunk boundary and export every (layer, head) into pool
-    /// blocks through the bridge. No-op for slots already decoding.
+    /// Number of scoring sequences currently resident.
+    pub fn scoring(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|s| matches!(s, SeqState::Scoring(_)))
+            .count()
+    }
+
+    /// Flip a prefilling slot to decode mode: seal the stack at its chunk
+    /// boundary and export every (layer, head) into pool blocks through
+    /// the bridge. No-op for slots already decoding.
     fn ensure_decoding(&mut self, slot: SeqSlot) -> Result<()> {
-        if matches!(self.slots[slot.0], Some(SeqState::Decoding(_))) {
-            return Ok(());
+        match &self.slots[slot.0] {
+            Some(SeqState::Decoding(_)) => return Ok(()),
+            Some(SeqState::Scoring(_)) => bail!("decode step for a scoring slot"),
+            _ => {}
         }
-        let Some(SeqState::Prefilling(mut engines)) = self.slots[slot.0].take() else {
+        let Some(SeqState::Prefilling(mut stack)) = self.slots[slot.0].take() else {
             bail!("step row for a free slot");
         };
+        stack.finish();
         let mut seqs = Vec::with_capacity(self.layers * self.heads);
-        for eng in engines.iter_mut() {
-            eng.finish();
+        for l in 0..self.layers {
             for h in 0..self.heads {
-                match export_prefill_head(eng, h, &mut self.pool) {
+                match export_prefill_head(stack.engine(l), h, &mut self.pool) {
                     Ok(s) => seqs.push(s),
                     Err(_) => {
                         // roll back the states already exported;
@@ -481,34 +584,28 @@ impl PooledBackend {
         Ok(())
     }
 
-    /// Gather one layer's chunk inputs — the stacked per-head `(k, v)`
-    /// embedding rows and the head-major per-(head, token) α/β gate
-    /// entries — into the caller's buffers (cleared first). THE one
-    /// gather for both the serving path ([`DecodeBackend::prefill_chunk`])
-    /// and the oracle replay ([`PooledBackend::oracle_decode_logits`]),
-    /// so the two ingest bitwise-identical engine inputs by construction.
+    /// Gather one chunk's layer-0 inputs — the stacked per-head
+    /// `(H, C, d)` q/k/v embedding rows — into the caller's buffers
+    /// (cleared first). THE one gather for the serving prefill path
+    /// ([`DecodeBackend::prefill_chunk`]), the scoring path
+    /// ([`DecodeBackend::score_chunk`]), and both oracle replays, so all
+    /// of them ingest bitwise-identical stack inputs by construction.
     fn gather_chunk_inputs(
         &self,
-        layer: usize,
         tokens: &[i32],
-        pos: usize,
+        qc: &mut Vec<f32>,
         kc: &mut Vec<f32>,
         vc: &mut Vec<f32>,
-        alpha: &mut Vec<f32>,
-        beta: &mut Vec<f32>,
     ) {
-        let (heads, vocab) = (self.heads, self.vocab);
+        qc.clear();
         kc.clear();
         vc.clear();
-        alpha.clear();
-        beta.clear();
-        for h in 0..heads {
-            for (j, &tok) in tokens.iter().enumerate() {
-                let ti = tok_index(tok, vocab);
-                kc.extend_from_slice(self.ek[layer * heads + h].row(ti));
-                vc.extend_from_slice(self.ev[layer * heads + h].row(ti));
-                alpha.push(self.gates[layer].alpha_h(h, pos + j));
-                beta.push(self.gates[layer].beta_h(h, pos + j));
+        for h in 0..self.heads {
+            for &tok in tokens {
+                let ti = tok_index(tok, self.vocab);
+                qc.extend_from_slice(self.eq[h].row(ti));
+                kc.extend_from_slice(self.ek[h].row(ti));
+                vc.extend_from_slice(self.ev[h].row(ti));
             }
         }
     }
@@ -517,7 +614,9 @@ impl PooledBackend {
     /// prompt: the server ingests full chunks while at least one chunk
     /// *plus the final prompt token the decode step needs* remains, so
     /// prefill covers positions `[0, boundary)` and the decode step feeds
-    /// `[boundary, …)`.
+    /// `[boundary, …)`. Scoring uses the same boundary, so score-path
+    /// tail logits are bit-exact with the decode rows the same prompt
+    /// would produce.
     pub fn prefill_boundary(&self, prompt_len: usize) -> usize {
         let c = self.prefill_chunk;
         let mut pe = 0;
@@ -529,92 +628,212 @@ impl PooledBackend {
         pe
     }
 
+    /// One token through the sequential stack on Mat-backed states — the
+    /// per-token, per-layer recurrent form shared by the decode oracle
+    /// replay and the scoring tail. Bit-identical to the pooled decode
+    /// step for the same inputs: the advance/read reduce to the same
+    /// primitives ([`crate::state::update::advance_levels`] /
+    /// `level_read_acc`), the projections run the same `gemm_nt` kernel
+    /// (row-batched GEMMs are bit-exact per row), and the keys normalize
+    /// through the same [`normalize_keys`]. Callers hold one
+    /// [`TokenScratch`] across their token loop so per-token work stays
+    /// allocation-free except the returned logits row.
+    fn token_step_layers(
+        &self,
+        scratch: &mut TokenScratch,
+        states: &mut [FenwickState],
+        tok: i32,
+        pos: usize,
+    ) -> Vec<f32> {
+        let (layers, heads, dk, dv, vocab) =
+            (self.layers, self.heads, self.dk, self.dv, self.vocab);
+        debug_assert_eq!(states.len(), layers * heads);
+        let ti = tok_index(tok, vocab);
+        scratch.fit(heads, dk, dv);
+        let TokenScratch { o_prev, o_cur, q_rows, k_rows, v_rows } = scratch;
+        for l in 0..layers {
+            if l == 0 {
+                for h in 0..heads {
+                    q_rows[h * dk..(h + 1) * dk].copy_from_slice(self.eq[h].row(ti));
+                    k_rows[h * dk..(h + 1) * dk].copy_from_slice(self.ek[h].row(ti));
+                    v_rows[h * dv..(h + 1) * dv].copy_from_slice(self.ev[h].row(ti));
+                }
+            } else {
+                let p = &self.projs[l - 1];
+                tensor::gemm_nt_into(1, heads * dv, heads * dk, o_prev, &p.wq.data, q_rows, false);
+                tensor::gemm_nt_into(1, heads * dv, heads * dk, o_prev, &p.wk.data, k_rows, false);
+                normalize_keys(k_rows, dk);
+                tensor::gemm_nt_into(1, heads * dv, heads * dv, o_prev, &p.wv.data, v_rows, false);
+            }
+            for h in 0..heads {
+                let k = &k_rows[h * dk..(h + 1) * dk];
+                let alpha = self.gates[l].alpha_h(h, pos);
+                let (write_scale, tr) = match self.kind {
+                    TransitionKind::Mamba2 => (1.0, Transition::Decay(alpha)),
+                    TransitionKind::Gdn => {
+                        let beta = self.gates[l].beta_h(h, pos);
+                        (beta, Transition::GatedHouseholder { alpha, beta, k })
+                    }
+                };
+                let o = states[l * heads + h].step(
+                    &q_rows[h * dk..(h + 1) * dk],
+                    k,
+                    &v_rows[h * dv..(h + 1) * dv],
+                    write_scale,
+                    tr,
+                    self.gates[l].lambda_h(h, pos),
+                );
+                o_cur[h * dv..(h + 1) * dv].copy_from_slice(&o);
+            }
+            std::mem::swap(o_prev, o_cur);
+        }
+        let mut logits = vec![0.0f32; vocab];
+        tensor::gemm_nt_into(1, heads * dv, vocab, o_prev, &self.wo.data, &mut logits, false);
+        logits
+    }
+
+    /// Replay a prompt's chunkwise span through a fresh [`LayerStack`]
+    /// (identical code and gathered inputs as the serving path, fresh
+    /// workspace — workspaces are inert) and export every (layer, head)
+    /// into Mat-backed [`FenwickState`]s at the boundary.
+    fn replay_prefill_span(&self, fed: &[i32], pe: usize) -> Vec<FenwickState> {
+        let (layers, heads, dk, dv) = (self.layers, self.heads, self.dk, self.dv);
+        if pe == 0 {
+            return (0..layers * heads).map(|_| FenwickState::new(dk, dv)).collect();
+        }
+        let c = self.prefill_chunk;
+        let mut ws = Workspace::new();
+        let mut stack = LayerStack::new(layers, heads, dk, dv, c);
+        let (mut qc, mut kc, mut vc) = (Vec::new(), Vec::new(), Vec::new());
+        let mut pos = 0;
+        while pos < pe {
+            self.gather_chunk_inputs(&fed[pos..pos + c], &mut qc, &mut kc, &mut vc);
+            stack.ingest_chunk(&mut ws, self.kind, &self.projs, &self.gates, pos, &qc, &kc, &vc, false);
+            pos += c;
+        }
+        stack.finish();
+        let mut states = Vec::with_capacity(layers * heads);
+        for l in 0..layers {
+            for h in 0..heads {
+                states.push(FenwickState::import_levels(dk, dv, pe, &stack.export_head(l, h)));
+            }
+        }
+        states
+    }
+
     /// Per-sequence **oracle replay** of one request's full serving
     /// trajectory, on Mat-backed [`FenwickState`]s instead of the pool:
-    /// the prompt's chunkwise span re-ingests through fresh per-layer
-    /// [`PrefillEngine`]s (identical code and inputs as the serving path,
-    /// so identical floats) and exports into `FenwickState::import_levels`
-    /// — the Mat-backed mirror of the pool bridge — then every decode row
-    /// steps token-by-token. Returns `(position, logits)` for every row
-    /// the serving engine would feed through [`DecodeBackend::step`].
+    /// the prompt's chunkwise span re-ingests through a fresh sequential
+    /// [`LayerStack`] (identical code and inputs as the serving path, so
+    /// identical floats), then every decode row steps token-by-token,
+    /// layer-by-layer. Returns `(position, logits)` for every row the
+    /// serving engine would feed through [`DecodeBackend::step`].
     ///
     /// `fed` is the exact token stream the server fed: the prompt followed
     /// by the sampled tokens except the last (which is never fed back).
     /// Bit-exactness with the pooled serving path — batched advance,
-    /// batched read, batched logits GEMM, for any bucketing/scheduling —
-    /// is the serving-trace differential property (`coordinator::trace`).
+    /// batched read, batched projection and logits GEMMs, for any
+    /// bucketing/scheduling — is the serving-trace differential property
+    /// (`coordinator::trace`).
     pub fn oracle_decode_logits(&self, prompt_len: usize, fed: &[i32]) -> Vec<(usize, Vec<f32>)> {
         assert!(prompt_len >= 1 && prompt_len <= fed.len(), "fed must cover the prompt");
-        let (layers, heads, dk, dv, vocab) = (self.layers, self.heads, self.dk, self.dv, self.vocab);
         let pe = self.prefill_boundary(prompt_len);
+        let mut states = self.replay_prefill_span(fed, pe);
+        let mut scratch = TokenScratch::default();
+        let mut out = Vec::with_capacity(fed.len() - pe);
+        for (p, &tok) in fed.iter().enumerate().skip(pe) {
+            out.push((p, self.token_step_layers(&mut scratch, &mut states, tok, p)));
+        }
+        out
+    }
+
+    /// One-shot prompt-scoring oracle: the same chunk/tail split, stack
+    /// code, logits GEMM shapes, and log-prob fold the serving
+    /// `score_chunk`/`score_tail` path runs — in one call, independent of
+    /// server scheduling and workspace state. `logprobs[i]` is
+    /// `log P(tokens[i+1] | tokens[..=i])` (natural log); a 1-token
+    /// prompt scores to an empty vector. The trace harness asserts served
+    /// [`ScoreResult`](super::ScoreResult)s equal this bit-for-bit.
+    pub fn oracle_score_logprobs(&self, tokens: &[i32]) -> Vec<f32> {
+        let n = tokens.len();
+        if n < 2 {
+            return Vec::new();
+        }
+        let (layers, heads, dk, dv, vocab) =
+            (self.layers, self.heads, self.dk, self.dv, self.vocab);
         let c = self.prefill_chunk;
-        // 1) chunkwise prefill span, per layer (same engine code as
-        //    `prefill_chunk`; the gathers below copy the same embedding
-        //    rows and gate entries, so the inputs are bitwise identical)
-        let mut states: Vec<FenwickState> = Vec::with_capacity(layers * heads);
+        let pe = self.prefill_boundary(n);
+        let mut lps = Vec::with_capacity(n - 1);
+        let mut states: Vec<FenwickState>;
         if pe > 0 {
-            let mut engines: Vec<PrefillEngine> =
-                (0..layers).map(|_| PrefillEngine::new(heads, dk, dv, c)).collect();
-            let (mut kc, mut vc, mut alpha, mut beta) =
-                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-            for (l, eng) in engines.iter_mut().enumerate() {
-                let mut pos = 0;
-                while pos < pe {
-                    let tokens = &fed[pos..pos + c];
-                    self.gather_chunk_inputs(l, tokens, pos, &mut kc, &mut vc, &mut alpha, &mut beta);
-                    match self.kind {
-                        TransitionKind::Mamba2 => eng.ingest_chunk_mamba2(&kc, &vc, &alpha, None),
-                        TransitionKind::Gdn => eng.ingest_chunk_gdn(&kc, &vc, &alpha, &beta),
-                    }
-                    pos += c;
-                }
-                eng.finish();
+            let mut ws = Workspace::new();
+            let mut stack = LayerStack::new(layers, heads, dk, dv, c);
+            let (mut qc, mut kc, mut vc) = (Vec::new(), Vec::new(), Vec::new());
+            let mut logits = vec![0.0f32; c * vocab];
+            let mut pos = 0;
+            while pos < pe {
+                self.gather_chunk_inputs(&tokens[pos..pos + c], &mut qc, &mut kc, &mut vc);
+                let o = stack
+                    .ingest_chunk(&mut ws, self.kind, &self.projs, &self.gates, pos, &qc, &kc, &vc, true);
+                tensor::gemm_nt_into(c, heads * dv, vocab, o, &self.wo.data, &mut logits, false);
+                fold_score_logprobs(&logits, c, tokens, pos, &mut lps);
+                pos += c;
+            }
+            stack.finish();
+            states = Vec::with_capacity(layers * heads);
+            for l in 0..layers {
                 for h in 0..heads {
-                    states.push(FenwickState::import_levels(dk, dv, pe, &eng.export_head(h)));
+                    states.push(FenwickState::import_levels(dk, dv, pe, &stack.export_head(l, h)));
                 }
             }
         } else {
             states = (0..layers * heads).map(|_| FenwickState::new(dk, dv)).collect();
         }
-        // 2) decode rows, token by token
-        let mut out = Vec::with_capacity(fed.len() - pe);
-        let mut o_cat = vec![0.0f32; layers * heads * dv];
-        for (p, &tok) in fed.iter().enumerate().skip(pe) {
-            let ti = tok_index(tok, vocab);
-            for l in 0..layers {
-                for h in 0..heads {
-                    let e = l * heads + h;
-                    let alpha = self.gates[l].alpha_h(h, p);
-                    let (ws, tr) = match self.kind {
-                        TransitionKind::Mamba2 => (1.0, Transition::Decay(alpha)),
-                        TransitionKind::Gdn => {
-                            let beta = self.gates[l].beta_h(h, p);
-                            (beta, Transition::GatedHouseholder { alpha, beta, k: self.ek[e].row(ti) })
-                        }
-                    };
-                    let o = states[e].step(
-                        self.eq[e].row(ti),
-                        self.ek[e].row(ti),
-                        self.ev[e].row(ti),
-                        ws,
-                        tr,
-                        self.gates[l].lambda_h(h, p),
-                    );
-                    o_cat[e * dv..(e + 1) * dv].copy_from_slice(&o);
-                }
-            }
-            let mut logits = vec![0.0f32; vocab];
-            tensor::gemm_nt_into(1, layers * heads * dv, vocab, &o_cat, &self.wo.data, &mut logits, false);
-            out.push((p, logits));
+        // sub-chunk tail: positions pe .. n−2 step token-by-token (the
+        // final token is never fed — nothing reads after it)
+        let mut scratch = TokenScratch::default();
+        for p in pe..n - 1 {
+            let logits = self.token_step_layers(&mut scratch, &mut states, tokens[p], p);
+            fold_score_logprobs(&logits, 1, tokens, p, &mut lps);
         }
-        out
+        lps
     }
 }
 
-/// Clamp a sampled/user token into embedding range.
+/// Clamp a sampled/user token into embedding range — the one token-id
+/// convention for embeddings AND log-prob targets (the server's scoring
+/// loop uses it too, so served log-probs match the oracle's exactly).
 #[inline]
-fn tok_index(tok: i32, vocab: usize) -> usize {
+pub(crate) fn tok_index(tok: i32, vocab: usize) -> usize {
     (tok.max(0) as usize).min(vocab - 1)
+}
+
+/// Fold a block of consecutive per-position logits rows into per-token
+/// log-probs: `logits` holds `rows` rows covering positions
+/// `pos .. pos + rows` of `tokens`; for every target position `p` in
+/// `pos+1 ..= min(pos + rows, tokens.len() − 1)` this appends
+/// `log P(tokens[p] | …) = −cross_entropy(row_{p−1−pos}, tokens[p])` to
+/// `out`. THE one log-prob fold — the server's scoring loop, the
+/// scoring oracle, and the prefill bench all call it, so the subtle
+/// row/target arithmetic cannot drift between them. A `rows = 0` block
+/// folds nothing.
+pub fn fold_score_logprobs(
+    logits: &[f32],
+    rows: usize,
+    tokens: &[i32],
+    pos: usize,
+    out: &mut Vec<f32>,
+) {
+    if rows == 0 {
+        return;
+    }
+    let vocab = logits.len() / rows;
+    debug_assert_eq!(logits.len(), rows * vocab, "ragged logits block");
+    let hi = (pos + rows).min(tokens.len() - 1);
+    for p in pos + 1..=hi {
+        let row = &logits[(p - 1 - pos) * vocab..(p - pos) * vocab];
+        out.push(-tensor::ops::cross_entropy(row, tok_index(tokens[p], vocab)));
+    }
 }
 
 impl DecodeBackend for PooledBackend {
@@ -638,11 +857,13 @@ impl DecodeBackend for PooledBackend {
         // a fresh sequence starts in prefill mode when the backend has a
         // chunked-prefill path; with it disabled, decode states from step 0
         self.slots[idx] = Some(if self.prefill_chunk > 0 {
-            SeqState::Prefilling(
-                (0..self.layers)
-                    .map(|_| PrefillEngine::new(self.heads, self.dk, self.dv, self.prefill_chunk))
-                    .collect(),
-            )
+            SeqState::Prefilling(LayerStack::new(
+                self.layers,
+                self.heads,
+                self.dk,
+                self.dv,
+                self.prefill_chunk,
+            ))
         } else {
             SeqState::Decoding(
                 (0..self.layers * self.heads)
@@ -656,7 +877,8 @@ impl DecodeBackend for PooledBackend {
 
     fn retire(&mut self, slot: SeqSlot) {
         match self.slots[slot.0].take().expect("retire of free slot") {
-            SeqState::Prefilling(_) => {} // engine states live outside the pool
+            // stack / scoring states live outside the pool
+            SeqState::Prefilling(_) | SeqState::Scoring(_) => {}
             SeqState::Decoding(seqs) => {
                 for mut seq in seqs {
                     seq.release(&mut self.pool);
@@ -680,47 +902,145 @@ impl DecodeBackend for PooledBackend {
         if tokens.len() != c {
             bail!("prefill chunk must be exactly {c} tokens, got {}", tokens.len());
         }
-        let (layers, heads, dk, dv) = (self.layers, self.heads, self.dk, self.dv);
         {
             let state = self.slots[slot.0].as_ref().expect("prefill of free slot");
-            let SeqState::Prefilling(engines) = state else {
+            let SeqState::Prefilling(stack) = state else {
                 bail!("prefill_chunk after decode began");
             };
-            if engines[0].tokens() != pos {
-                bail!("prefill position desync: engine at {}, chunk at {pos}", engines[0].tokens());
+            if stack.tokens() != pos {
+                bail!("prefill position desync: stack at {}, chunk at {pos}", stack.tokens());
             }
         }
-        for l in 0..layers {
-            // per-(head, token) gates from the layer's shared schedule —
-            // the same source the decode step reads — and the stacked
-            // per-head (k, v) embeddings: (H, C, dk) / (H, C, dv), via
-            // the one shared gather (`gather_chunk_inputs`) into
-            // persistent workspaces, taken out for the call (this is the
-            // serving hot path — no steady-state allocation)
-            let mut kc = std::mem::take(&mut self.kc_buf);
-            let mut vc = std::mem::take(&mut self.vc_buf);
-            let mut alpha = std::mem::take(&mut self.alpha_buf);
-            let mut beta = std::mem::take(&mut self.beta_buf);
-            self.gather_chunk_inputs(l, tokens, pos, &mut kc, &mut vc, &mut alpha, &mut beta);
-            debug_assert_eq!(kc.len(), heads * c * dk);
-            debug_assert_eq!(vc.len(), heads * c * dv);
-            let Some(SeqState::Prefilling(engines)) = self.slots[slot.0].as_mut() else {
-                unreachable!("checked above")
-            };
-            match self.kind {
-                TransitionKind::Mamba2 => {
-                    engines[l].ingest_chunk_mamba2(&kc, &vc, &alpha, None)
-                }
-                TransitionKind::Gdn => {
-                    engines[l].ingest_chunk_gdn(&kc, &vc, &alpha, &beta)
-                }
-            }
-            self.kc_buf = kc;
-            self.vc_buf = vc;
-            self.alpha_buf = alpha;
-            self.beta_buf = beta;
-        }
+        // layer-0 inputs via the one shared gather, into persistent
+        // buffers taken out for the call (serving hot path — no
+        // steady-state allocation); layers ≥ 1 derive inside the stack
+        let mut qc = std::mem::take(&mut self.qc_buf);
+        let mut kc = std::mem::take(&mut self.kc_buf);
+        let mut vc = std::mem::take(&mut self.vc_buf);
+        self.gather_chunk_inputs(tokens, &mut qc, &mut kc, &mut vc);
+        let Some(SeqState::Prefilling(stack)) = self.slots[slot.0].as_mut() else {
+            unreachable!("checked above")
+        };
+        stack.ingest_chunk(&mut self.ws, self.kind, &self.projs, &self.gates, pos, &qc, &kc, &vc, false);
+        self.qc_buf = qc;
+        self.kc_buf = kc;
+        self.vc_buf = vc;
         Ok(())
+    }
+
+    fn supports_scoring(&self) -> bool {
+        true
+    }
+
+    fn score_admit(&mut self) -> Result<SeqSlot, AdmitError> {
+        // scoring never touches the pool (stack + Mat-backed tail), so
+        // admission is just a slot: scoring cannot starve decode of state
+        // blocks, and decode backpressure never rejects scoring
+        let idx = match self.free_slots.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(None);
+                self.reserved.push(0);
+                self.slots.len() - 1
+            }
+        };
+        let stack = (self.prefill_chunk > 0).then(|| {
+            LayerStack::new(self.layers, self.heads, self.dk, self.dv, self.prefill_chunk)
+        });
+        self.slots[idx] = Some(SeqState::Scoring(ScoreSeq { stack, tail: Vec::new() }));
+        self.reserved[idx] = 0;
+        Ok(SeqSlot(idx))
+    }
+
+    fn score_chunk(&mut self, slot: SeqSlot, tokens: &[i32], pos: usize) -> Result<Vec<f32>> {
+        let c = self.prefill_chunk;
+        if c == 0 {
+            bail!("chunked scoring needs a prefill chunk size");
+        }
+        if tokens.len() != c {
+            bail!("score chunk must be exactly {c} tokens, got {}", tokens.len());
+        }
+        {
+            let Some(SeqState::Scoring(sc)) = self.slots[slot.0].as_ref() else {
+                bail!("score_chunk on a non-scoring slot");
+            };
+            let Some(stack) = sc.stack.as_ref() else {
+                bail!("score_chunk after the tail began");
+            };
+            if stack.tokens() != pos {
+                bail!("scoring position desync: stack at {}, chunk at {pos}", stack.tokens());
+            }
+        }
+        let mut qc = std::mem::take(&mut self.qc_buf);
+        let mut kc = std::mem::take(&mut self.kc_buf);
+        let mut vc = std::mem::take(&mut self.vc_buf);
+        self.gather_chunk_inputs(tokens, &mut qc, &mut kc, &mut vc);
+        let Some(SeqState::Scoring(sc)) = self.slots[slot.0].as_mut() else {
+            unreachable!("checked above")
+        };
+        let stack = sc.stack.as_mut().expect("checked above");
+        let o =
+            stack.ingest_chunk(&mut self.ws, self.kind, &self.projs, &self.gates, pos, &qc, &kc, &vc, true);
+        // the chunk's per-token logits from the last layer's outputs —
+        // the same GEMM shape the scoring oracle replays
+        let mut logits = vec![0.0f32; c * self.vocab];
+        tensor::gemm_nt_into(c, self.heads * self.dv, self.vocab, o, &self.wo.data, &mut logits, false);
+        self.qc_buf = qc;
+        self.kc_buf = kc;
+        self.vc_buf = vc;
+        Ok(logits)
+    }
+
+    fn score_tail(&mut self, slot: SeqSlot, tokens: &[i32], pos: usize) -> Result<Vec<f32>> {
+        {
+            let Some(SeqState::Scoring(_)) = self.slots[slot.0].as_ref() else {
+                bail!("score_tail on a non-scoring slot");
+            };
+        }
+        let Some(SeqState::Scoring(mut sc)) = self.slots[slot.0].take() else {
+            unreachable!("checked above")
+        };
+        if sc.tail.is_empty() {
+            // flip the stack into Mat-backed token states at the boundary
+            if let Some(mut stack) = sc.stack.take() {
+                if stack.tokens() != pos {
+                    let at = stack.tokens();
+                    // put the stack back before bailing: a dropped stack
+                    // would make a later correct call silently score with
+                    // no prompt prefix (or bail with a misleading error)
+                    sc.stack = Some(stack);
+                    self.slots[slot.0] = Some(SeqState::Scoring(sc));
+                    bail!("scoring tail desync: stack at {at}, tail at {pos}");
+                }
+                stack.finish();
+                for l in 0..self.layers {
+                    for h in 0..self.heads {
+                        sc.tail.push(FenwickState::import_levels(
+                            self.dk,
+                            self.dv,
+                            pos,
+                            &stack.export_head(l, h),
+                        ));
+                    }
+                }
+            } else {
+                if pos != 0 {
+                    self.slots[slot.0] = Some(SeqState::Scoring(sc));
+                    bail!("scoring tail at position {pos} without a chunk span");
+                }
+                sc.tail = (0..self.layers * self.heads)
+                    .map(|_| FenwickState::new(self.dk, self.dv))
+                    .collect();
+            }
+        }
+        let mut logits = Vec::with_capacity(tokens.len() * self.vocab);
+        let mut scratch = TokenScratch::default();
+        for (j, &tok) in tokens.iter().enumerate() {
+            let row = self.token_step_layers(&mut scratch, &mut sc.tail, tok, pos + j);
+            logits.extend_from_slice(&row);
+        }
+        self.slots[slot.0] = Some(SeqState::Scoring(sc));
+        Ok(logits)
     }
 
     fn step(&mut self, _bucket: usize, rows: &[(SeqSlot, i32, i32)]) -> Result<Vec<f32>> {
@@ -728,19 +1048,15 @@ impl DecodeBackend for PooledBackend {
         if n == 0 {
             return Ok(Vec::new());
         }
-        let (layers, heads, dv, vocab) = (self.layers, self.heads, self.dv, self.vocab);
+        let (layers, heads, dk, dv, vocab) =
+            (self.layers, self.heads, self.dk, self.dv, self.vocab);
         // 0) rows arriving from chunked prefill flip to pooled decode
         //    states via the export bridge
         for &(slot, _, _) in rows {
             self.ensure_decoding(slot)?;
         }
-        // 1) the pool-wide batched advance: every (sequence, layer, head)
-        //    entry's merge + transition + sentinel write in ONE
-        //    advance_bucket pass (level-major merges, one fused
-        //    transition+write slab dispatch) — the per-sequence `advance`
-        //    loop this replaces is the bench baseline in `decode_batched`.
-        //    States are taken out of their slots for the duration so the
-        //    pass can hold one &mut per entry without unsafe.
+        // take every row's states out of its slot for the duration so
+        // each per-layer pass can hold one &mut per entry without unsafe
         let mut taken: Vec<(usize, Vec<PooledFenwickState>)> = Vec::with_capacity(n);
         for &(slot, _, _) in rows {
             let Some(SeqState::Decoding(seqs)) = self.slots[slot.0].take() else {
@@ -748,14 +1064,46 @@ impl DecodeBackend for PooledBackend {
             };
             taken.push((slot.0, seqs));
         }
-        let mut jobs: Vec<AdvanceJob<'_>> = Vec::with_capacity(n * layers * heads);
-        for &(_, tok, pos) in rows {
-            let ti = tok_index(tok, vocab);
-            for l in 0..layers {
+        // 1..L) the sequential layer loop: per layer, one pool-wide
+        //    batched advance + one batched read over the bucket's n·H
+        //    (sequence, head) entries, then the projection GEMMs that
+        //    carry o into the next layer's q/k/v. Entry order (seq-major,
+        //    head) keeps o_buf row-major (n, H·dv) — the next layer's
+        //    projection operand and the logits GEMM's left operand.
+        let mut failed: Option<String> = None;
+        for l in 0..layers {
+            if l == 0 {
+                self.q_rows.clear();
+                self.k_rows.clear();
+                self.v_rows.clear();
+                for &(_, tok, _) in rows {
+                    let ti = tok_index(tok, vocab);
+                    for h in 0..heads {
+                        self.q_rows.extend_from_slice(self.eq[h].row(ti));
+                        self.k_rows.extend_from_slice(self.ek[h].row(ti));
+                        self.v_rows.extend_from_slice(self.ev[h].row(ti));
+                    }
+                }
+            } else {
+                let p = &self.projs[l - 1];
+                self.q_rows.clear();
+                self.q_rows.resize(n * heads * dk, 0.0);
+                tensor::gemm_nt_into(n, heads * dv, heads * dk, &self.o_buf, &p.wq.data, &mut self.q_rows, false);
+                self.k_rows.clear();
+                self.k_rows.resize(n * heads * dk, 0.0);
+                tensor::gemm_nt_into(n, heads * dv, heads * dk, &self.o_buf, &p.wk.data, &mut self.k_rows, false);
+                normalize_keys(&mut self.k_rows, dk);
+                self.v_rows.clear();
+                self.v_rows.resize(n * heads * dv, 0.0);
+                tensor::gemm_nt_into(n, heads * dv, heads * dv, &self.o_buf, &p.wv.data, &mut self.v_rows, false);
+            }
+            let mut jobs: Vec<AdvanceJob<'_>> = Vec::with_capacity(n * heads);
+            for (i, &(_, _, pos)) in rows.iter().enumerate() {
                 for h in 0..heads {
-                    let e = l * heads + h;
+                    let e = i * heads + h;
+                    let k = &self.k_rows[e * dk..(e + 1) * dk];
+                    let v = &self.v_rows[e * dv..(e + 1) * dv];
                     let alpha = self.gates[l].alpha_h(h, pos as usize);
-                    let k = self.ek[e].row(ti);
                     let (write_scale, transition) = match self.kind {
                         TransitionKind::Mamba2 => (1.0, Transition::Decay(alpha)),
                         TransitionKind::Gdn => {
@@ -763,74 +1111,171 @@ impl DecodeBackend for PooledBackend {
                             (beta, Transition::GatedHouseholder { alpha, beta, k })
                         }
                     };
-                    jobs.push(AdvanceJob { k, v: self.ev[e].row(ti), write_scale, transition });
+                    jobs.push(AdvanceJob { k, v, write_scale, transition });
                 }
             }
-        }
-        let refused = {
-            let mut refs: Vec<&mut PooledFenwickState> =
-                taken.iter_mut().flat_map(|(_, seqs)| seqs.iter_mut()).collect();
-            debug_assert!(refs
-                .iter()
-                .zip(jobs.iter().enumerate())
-                .all(|(s, (e, _))| s.t as i32 == rows[e / (layers * heads)].2));
-            self.adv.advance_bucket(&mut self.pool, &mut refs, &jobs)
-        };
-        drop(jobs);
-        for (slot_idx, seqs) in taken {
-            self.slots[slot_idx] = Some(SeqState::Decoding(seqs));
-        }
-        if !refused.is_empty() {
-            // unreachable under admission reservation; surface loudly
-            bail!("state pool exhausted mid-step (reservation bug?)");
-        }
-        // 2) the batched read: every live level of every (sequence,
-        //    layer, head) in the batch, one fused block-sparse GEMM over
-        //    the pool slab. Entry order (seq-major, layer, head) makes
-        //    o_buf row-major (n, L·H·dv) — the logits GEMM's left
-        //    operand, no reshuffle.
-        self.q_buf.clear();
-        for &(_, tok, _) in rows {
-            let ti = tok_index(tok, vocab);
-            for e in 0..layers * heads {
-                self.q_buf.extend_from_slice(self.eq[e].row(ti));
+            for (i, &(_, _, pos)) in rows.iter().enumerate() {
+                for h in 0..heads {
+                    debug_assert_eq!(taken[i].1[l * heads + h].t as i32, pos, "layer {l} desync");
+                }
             }
-        }
-        self.o_buf.clear();
-        self.o_buf.resize(n * layers * heads * dv, 0.0);
-        {
-            let mut seq_refs: Vec<&PooledFenwickState> = Vec::with_capacity(n * layers * heads);
-            let mut lambdas: Vec<&[f32]> = Vec::with_capacity(n * layers * heads);
-            for &(slot, _, pos) in rows {
-                let Some(SeqState::Decoding(seqs)) = self.slots[slot.0].as_ref() else {
-                    unreachable!("ensured above")
-                };
-                for l in 0..layers {
+            let refused = {
+                let mut refs: Vec<&mut PooledFenwickState> = taken
+                    .iter_mut()
+                    .flat_map(|(_, seqs)| seqs[l * heads..(l + 1) * heads].iter_mut())
+                    .collect();
+                self.adv.advance_bucket(&mut self.pool, &mut refs, &jobs)
+            };
+            drop(jobs);
+            if !refused.is_empty() {
+                // unreachable under admission reservation; surface loudly
+                failed = Some(format!("state pool exhausted mid-step at layer {l} (reservation bug?)"));
+                break;
+            }
+            self.o_buf.clear();
+            self.o_buf.resize(n * heads * dv, 0.0);
+            {
+                let mut seq_refs: Vec<&PooledFenwickState> = Vec::with_capacity(n * heads);
+                let mut lambdas: Vec<&[f32]> = Vec::with_capacity(n * heads);
+                for (i, &(_, _, pos)) in rows.iter().enumerate() {
                     for h in 0..heads {
-                        seq_refs.push(&seqs[l * heads + h]);
+                        seq_refs.push(&taken[i].1[l * heads + h]);
                         lambdas.push(self.gates[l].lambda_h(h, pos as usize));
                     }
                 }
+                self.dec.read_batch(&self.pool, &seq_refs, &self.q_rows, &lambdas, &mut self.o_buf);
             }
-            self.dec
-                .read_batch(&self.pool, &seq_refs, &self.q_buf, &lambdas, &mut self.o_buf);
         }
-        // 3) whole-batch logits in one GEMM: (n, L·H·dv) @ (vocab, L·H·dv)^T
+        for (slot_idx, seqs) in taken {
+            self.slots[slot_idx] = Some(SeqState::Decoding(seqs));
+        }
+        if let Some(msg) = failed {
+            bail!(msg);
+        }
+        // final) whole-batch logits in one GEMM: (n, H·dv) @ (vocab, H·dv)^T
         let mut logits = vec![0.0f32; n * vocab];
-        tensor::gemm_nt_into(n, layers * heads * dv, vocab, &self.o_buf, &self.wo.data, &mut logits, false);
+        tensor::gemm_nt_into(n, heads * dv, vocab, &self.o_buf, &self.wo.data, &mut logits, false);
         Ok(logits)
     }
 
     fn state_bytes(&self) -> usize {
-        let prefill: usize = self
+        let off_pool: usize = self
             .slots
             .iter()
             .flatten()
             .map(|s| match s {
-                SeqState::Prefilling(engines) => engines.iter().map(|e| e.state_bytes()).sum(),
+                SeqState::Prefilling(stack) => stack.state_bytes(),
+                SeqState::Scoring(sc) => {
+                    sc.stack.as_ref().map(|st| st.state_bytes()).unwrap_or(0)
+                        + sc.tail.iter().map(|f| f.state_bytes()).sum::<usize>()
+                }
                 SeqState::Decoding(_) => 0,
             })
             .sum();
-        self.pool.in_use() * self.pool.block_elems() * 4 + prefill
+        self.pool.in_use() * self.pool.block_elems() * 4 + off_pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prefill::stack::test_support::naive_sequential_outputs;
+
+    /// Naive per-token, per-layer recurrent reference for the backend's
+    /// sequential LM over a fed token stream: layer-0 inputs gathered
+    /// from the token embeddings, then the ONE shared naive stack
+    /// reference (`prefill::stack::test_support`) — completely bypassing
+    /// the chunkwise engines, the stack, the pool, and the batched
+    /// passes — and the output head. Returns per-position logits
+    /// `(T, vocab)`.
+    fn naive_lm_logits(b: &PooledBackend, fed: &[i32]) -> Mat {
+        let t = fed.len();
+        let gather = |e: &[Mat], d: usize| -> Vec<Mat> {
+            (0..b.heads)
+                .map(|h| Mat::from_fn(t, d, |i, j| e[h].at(tok_index(fed[i], b.vocab), j)))
+                .collect()
+        };
+        let (qs0, ks0, vs0) = (gather(&b.eq, b.dk), gather(&b.ek, b.dk), gather(&b.ev, b.dv));
+        let o = naive_sequential_outputs(b.kind, &qs0, &ks0, &vs0, &b.projs, &b.gates);
+        let mut logits = Mat::zeros(t, b.vocab);
+        tensor::gemm_nt_into(t, b.heads * b.dv, b.vocab, &o.data, &b.wo.data, &mut logits.data, false);
+        logits
+    }
+
+    /// THE sequential-model equivalence (satellite): L = 2, 3 chunkwise
+    /// prefill + decode — via the oracle replay the trace harness proves
+    /// bit-exact with the serving path — against the naive per-token,
+    /// per-layer recurrent reference, for both transition families,
+    /// including a sub-chunk prompt tail and a decode span. Prompt
+    /// scoring is checked against the same reference.
+    #[test]
+    fn sequential_serve_and_scoring_match_naive_recurrent_reference() {
+        let mut rng = Rng::new(0xBAC0);
+        for &layers in &[2usize, 3] {
+            for kind in [TransitionKind::Mamba2, TransitionKind::Gdn] {
+                let b = PooledBackend::with_model_config(
+                    32,
+                    layers,
+                    2,
+                    kind,
+                    6,
+                    6,
+                    4,
+                    4096,
+                    0xFEED + layers as u64,
+                );
+                // 11-token prompt = 2 full chunks + a 3-token sub-chunk
+                // tail, then a 4-row decode span
+                let prompt_len = 11usize;
+                let fed: Vec<i32> = (0..prompt_len + 4).map(|_| rng.below(32) as i32).collect();
+                let naive = naive_lm_logits(&b, &fed);
+                let oracle = b.oracle_decode_logits(prompt_len, &fed);
+                assert_eq!(oracle[0].0, b.prefill_boundary(prompt_len));
+                assert_eq!(oracle.len(), fed.len() - b.prefill_boundary(prompt_len));
+                for (p, logits) in &oracle {
+                    for j in 0..b.vocab {
+                        let (g, w) = (logits[j], naive.at(*p, j));
+                        assert!(
+                            (g - w).abs() < 5e-3 + 1e-2 * w.abs(),
+                            "L={layers} {kind:?} pos={p} vocab={j}: {g} vs {w}"
+                        );
+                    }
+                }
+                // prompt scoring against the same reference:
+                // logprobs[p-1] folds the naive row at p-1
+                let lps = b.oracle_score_logprobs(&fed[..prompt_len]);
+                assert_eq!(lps.len(), prompt_len - 1);
+                for p in 1..prompt_len {
+                    let want =
+                        -tensor::ops::cross_entropy(naive.row(p - 1), tok_index(fed[p], b.vocab));
+                    assert!(
+                        (lps[p - 1] - want).abs() < 2e-2 + 2e-2 * want.abs(),
+                        "L={layers} {kind:?} score target {p}: {} vs {want}",
+                        lps[p - 1]
+                    );
+                }
+            }
+        }
+    }
+
+    /// A single-layer sequential model must reproduce the pre-sequential
+    /// single-layer backend exactly: same RNG draw order, same weights,
+    /// and (because one layer has no projections) the same decode math.
+    /// Guarded here by checking layer-0 embeddings and the output head
+    /// shape stay as documented.
+    #[test]
+    fn single_layer_config_shapes_and_draws_are_preserved() {
+        let b = PooledBackend::with_config(64, 3, 8, 6, 4, 128, 9);
+        assert_eq!(b.layers, 1);
+        assert_eq!(b.eq.len(), 3);
+        assert!(b.projs.is_empty());
+        assert_eq!((b.wo.rows, b.wo.cols), (64, 3 * 6));
+        // keys L2-normalized per embedding row
+        for h in 0..3 {
+            for i in 0..64 {
+                let n = crate::tensor::ops::l2_norm(b.ek[h].row(i));
+                assert!((n - 1.0).abs() < 1e-4, "head {h} row {i}: key norm {n}");
+            }
+        }
     }
 }

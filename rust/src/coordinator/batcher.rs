@@ -15,6 +15,13 @@ pub struct BatchPolicy {
     pub buckets: Vec<usize>,
     /// how long to hold out for a fuller bucket
     pub max_wait: Duration,
+    /// flop budget for prompt ingestion: at most this many prefill
+    /// chunks (generation prompts + scoring work units combined) advance
+    /// per engine step, round-robin fair across sequences — so many
+    /// concurrent long prompts cannot crowd out decode latency. Each
+    /// sequence still advances at most one chunk per step (chunk-level
+    /// latency fairness); the budget caps the *total*.
+    pub prefill_budget: usize,
 }
 
 impl BatchPolicy {
@@ -22,7 +29,18 @@ impl BatchPolicy {
         assert!(!buckets.is_empty());
         buckets.sort_unstable();
         buckets.dedup();
-        BatchPolicy { buckets, max_wait }
+        // default budget: one largest-bucket's worth of chunk work per
+        // step — prompt ingestion may cost about as much as the decode
+        // batch it rides along, no more
+        let prefill_budget = *buckets.last().unwrap();
+        BatchPolicy { buckets, max_wait, prefill_budget }
+    }
+
+    /// Override the per-step prefill chunk budget (≥ 1).
+    pub fn with_prefill_budget(mut self, budget: usize) -> BatchPolicy {
+        assert!(budget >= 1, "a zero budget would starve prompt ingestion");
+        self.prefill_budget = budget;
+        self
     }
 
     /// Decide the bucket for `ready` runnable sequences. `waited` is the

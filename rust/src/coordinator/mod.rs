@@ -25,22 +25,32 @@
 //!   entry's state through the pool-wide batched Fenwick pass
 //!   ([`crate::state::BatchedAdvance`] — merges, transitions, and
 //!   sentinel writes grouped by level and executed as slab dispatches).
-//!   Prompts ingest **chunkwise** through per-sequence per-layer
-//!   head-batched [`crate::prefill::PrefillEngine`]s
-//!   ([`backend::DecodeBackend::prefill_chunk`]) and flip into pool
-//!   blocks via the export bridge on their first decode row. Models are
-//!   L-layer, H-head, Mamba-2 or GDN ([`backend::TransitionKind`]), with
-//!   per-layer (optionally per-head) gate tables; the serving-trace
+//!   Models are **sequential** L-layer, H-head stacks (layer ℓ+1's
+//!   q/k/v are projections of layer ℓ's per-token outputs), Mamba-2 or
+//!   GDN ([`backend::TransitionKind`]), with per-layer (optionally
+//!   per-head) gate tables; each decode step runs the batched
+//!   advance+read per layer and one last-layer logits GEMM. Prompts
+//!   ingest **chunkwise** through one sequential
+//!   [`crate::prefill::LayerStack`] per sequence
+//!   ([`backend::DecodeBackend::prefill_chunk`]; the per-token
+//!   chunk-output mode carries outputs layer-to-layer) and flip into
+//!   pool blocks via the export bridge on their first decode row.
+//!   **Prompt scoring** ([`ScoreRequest`] → [`ScoreResult`]) reuses the
+//!   same stack to return per-token log-probs straight from prefill
+//!   chunk outputs, never entering the decode loop. The serving-trace
 //!   differential suite ([`server`] tests + the `trace` property module)
 //!   pins every path to a per-sequence `FenwickState` oracle replay,
 //!   bit-exactly.
 //! - [`server`]: the engine loop — admits (honoring backpressure),
-//!   advances one prefill chunk per still-prefilling prompt, schedules
-//!   decode rows round-robin through the batch policy's bucket, samples
-//!   greedily, retires finished sequences, and *honors the batcher's
-//!   hold* (when [`batcher::BatchPolicy::plan`] says wait for a fuller
-//!   bucket, the decode batch waits — bounded by `max_wait` — rather than
-//!   running padded buckets; prefill chunks proceed regardless).
+//!   advances prefill chunks and scoring work under a **per-step chunk
+//!   budget** ([`batcher::BatchPolicy::prefill_budget`], round-robin
+//!   fair, so many concurrent long prompts cannot crowd out decode
+//!   latency), schedules decode rows round-robin through the batch
+//!   policy's bucket, samples greedily, retires finished sequences, and
+//!   *honors the batcher's hold* (when [`batcher::BatchPolicy::plan`]
+//!   says wait for a fuller bucket, the decode batch waits — bounded by
+//!   `max_wait` — rather than running padded buckets; prefill chunks
+//!   proceed regardless).
 //!
 //! Rust owns the event loop, queueing, metrics, and memory accounting;
 //! Python never runs at serve time.
@@ -59,6 +69,28 @@ pub struct GenRequest {
     pub max_new: usize,
 }
 
+/// A prompt-scoring request: per-token log-probs for a fixed token
+/// stream, computed from the chunkwise prefill outputs — never entering
+/// the decode loop (no sampling, no decode bucket slot).
+#[derive(Debug, Clone)]
+pub struct ScoreRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+}
+
+/// A finished scoring request. `logprobs[i]` is the natural-log
+/// probability `log P(tokens[i+1] | tokens[..=i])` — one entry per token
+/// after the first (`tokens.len() − 1` total).
+#[derive(Debug, Clone)]
+pub struct ScoreResult {
+    pub id: u64,
+    pub logprobs: Vec<f32>,
+    /// wall-clock seconds from submit to completion
+    pub latency: f64,
+    /// prefill chunks the scoring consumed (the budgeted work units)
+    pub chunks: usize,
+}
+
 /// Why a request was refused at submit time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitError {
@@ -66,12 +98,18 @@ pub enum SubmitError {
     /// empty-prompt sequence (and would previously panic deep in
     /// `Seq::next_token`).
     EmptyPrompt,
+    /// The backend has no prompt-scoring path
+    /// ([`backend::DecodeBackend::supports_scoring`] is false).
+    ScoringUnsupported,
 }
 
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::EmptyPrompt => write!(f, "empty prompt: nothing to decode from"),
+            SubmitError::ScoringUnsupported => {
+                write!(f, "this backend does not support prompt scoring")
+            }
         }
     }
 }

@@ -9,16 +9,28 @@
 //! `coordinator::backend`).
 //!
 //! Scheduling properties (regression-tested below):
-//! - **Chunked prefill interleaves with decode**: when the backend has a
-//!   chunkwise prefill path ([`DecodeBackend::prefill_chunk_size`] > 0),
-//!   a sequence whose remaining prompt still holds a full chunk (plus the
-//!   final token the decode step needs) advances **one chunk per engine
-//!   step** through [`DecodeBackend::prefill_chunk`] — state-only, off
-//!   the decode bucket — while the running decode rows step in the same
-//!   loop iteration. A long prompt therefore cannot starve in-flight
-//!   decode rows, and decode traffic cannot stall prompt ingestion. The
-//!   sub-chunk prompt tail (and the final prompt token, whose logits seed
-//!   sampling) feed through the decode step as before.
+//! - **Budgeted chunk ingestion interleaves with decode**: when the
+//!   backend has a chunkwise prefill path
+//!   ([`DecodeBackend::prefill_chunk_size`] > 0), sequences whose
+//!   remaining prompt still holds a full chunk (plus the final token the
+//!   decode step needs) advance through [`DecodeBackend::prefill_chunk`]
+//!   — state-only, off the decode bucket — while the running decode rows
+//!   step in the same loop iteration. Prompt work is **flop-budgeted**:
+//!   at most [`BatchPolicy::prefill_budget`] chunks advance per engine
+//!   step (generation prompts and scoring work combined), round-robin
+//!   fair across sequences, so MANY concurrent long prompts cannot crowd
+//!   out decode latency — and decode traffic still cannot stall prompt
+//!   ingestion (each step grants the budget before planning the decode
+//!   bucket). The sub-chunk prompt tail (and the final prompt token,
+//!   whose logits seed sampling) feed through the decode step as before.
+//! - **Prompt scoring never enters the decode loop**: a
+//!   [`ScoreRequest`] ingests its full chunks through
+//!   [`DecodeBackend::score_chunk`] (per-token logits straight from the
+//!   sequential stack's chunk outputs) under the same chunk budget, then
+//!   token-steps its sub-chunk tail via [`DecodeBackend::score_tail`] —
+//!   producing per-token log-probs without ever occupying a decode
+//!   bucket row. Tail logits are bit-exact with the decode rows the same
+//!   prompt would produce (same boundary, same token machinery).
 //! - **Round-robin fairness**: processed survivors go to the back of the
 //!   running list each step, so when `ready > bucket` the tail advances
 //!   on the next step instead of starving behind a fixed prefix.
@@ -31,7 +43,8 @@
 //!   ([`AdmitError::Exhausted`], e.g. state-pool exhaustion); the request
 //!   stays queued, FIFO order intact, until capacity frees up.
 //! - **Degenerate requests**: empty prompts are rejected at submit;
-//!   `max_new == 0` completes immediately without touching the engine.
+//!   `max_new == 0` (and 1-token score prompts) complete immediately
+//!   without touching the engine.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -41,9 +54,9 @@ use anyhow::{bail, Result};
 use crate::runtime::{ModelHandle, Runtime};
 use crate::util::stats::Summary;
 
-use super::backend::{AdmitError, DecodeBackend, PjrtBackend, SeqSlot};
+use super::backend::{fold_score_logprobs, AdmitError, DecodeBackend, PjrtBackend, SeqSlot};
 use super::batcher::{BatchPolicy, RequestQueue};
-use super::{GenRequest, GenResult, SubmitError};
+use super::{GenRequest, GenResult, ScoreRequest, ScoreResult, SubmitError};
 
 struct Seq {
     id: u64,
@@ -81,6 +94,19 @@ impl Seq {
     }
 }
 
+/// One in-flight scoring request: chunk position, accumulated log-probs,
+/// and the backend slot holding its stack/tail states.
+struct ScoreSeq {
+    id: u64,
+    tokens: Vec<i32>,
+    pos: usize,
+    slot: SeqSlot,
+    logprobs: Vec<f32>,
+    chunks: usize,
+    submitted: Instant,
+    done: bool,
+}
+
 /// Serving metrics.
 #[derive(Debug, Default, Clone)]
 pub struct ServerStats {
@@ -95,6 +121,12 @@ pub struct ServerStats {
     /// prompt tokens those chunks covered (not counted in
     /// `tokens_processed`, which tracks decode-step rows)
     pub prefill_tokens: usize,
+    /// completed scoring requests
+    pub score_requests: usize,
+    /// scoring chunks ingested (budgeted alongside prefill chunks)
+    pub score_chunks: usize,
+    /// prompt tokens scored (across completed scoring requests)
+    pub score_tokens: usize,
 }
 
 impl ServerStats {
@@ -133,9 +165,14 @@ pub struct DecodeServer<B: DecodeBackend> {
     queue: RequestQueue<GenRequest>,
     running: Vec<Seq>,
     finished: Vec<GenResult>,
+    score_queue: RequestQueue<ScoreRequest>,
+    scoring: Vec<ScoreSeq>,
+    finished_scores: Vec<ScoreResult>,
     pub stats: ServerStats,
     /// when the current "wait for a fuller bucket" hold started
     hold_since: Option<Instant>,
+    /// rotation cursor for the budgeted prefill/scoring pass
+    prefill_rr: usize,
     /// record every decode row's logits (differential-test hook)
     capture_logits: bool,
     /// captured (sequence id, position, logits) rows, in execution order
@@ -163,8 +200,12 @@ impl<B: DecodeBackend> DecodeServer<B> {
             queue: RequestQueue::new(),
             running: Vec::new(),
             finished: Vec::new(),
+            score_queue: RequestQueue::new(),
+            scoring: Vec::new(),
+            finished_scores: Vec::new(),
             stats: ServerStats::default(),
             hold_since: None,
+            prefill_rr: 0,
             capture_logits: false,
             logit_log: Vec::new(),
         }
@@ -203,8 +244,33 @@ impl<B: DecodeBackend> DecodeServer<B> {
         Ok(())
     }
 
+    /// Enqueue a prompt-scoring request (per-token log-probs, no decode).
+    /// Empty prompts are rejected; a 1-token prompt has nothing to score
+    /// and completes immediately with empty log-probs.
+    pub fn submit_score(&mut self, req: ScoreRequest) -> Result<(), SubmitError> {
+        if !self.backend.supports_scoring() {
+            return Err(SubmitError::ScoringUnsupported);
+        }
+        if req.tokens.is_empty() {
+            return Err(SubmitError::EmptyPrompt);
+        }
+        if req.tokens.len() == 1 {
+            self.finished_scores.push(ScoreResult {
+                id: req.id,
+                logprobs: Vec::new(),
+                latency: 0.0,
+                chunks: 0,
+            });
+            self.stats.score_requests += 1;
+            self.stats.score_tokens += 1;
+            return Ok(());
+        }
+        self.score_queue.push(req);
+        Ok(())
+    }
+
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.running.len()
+        self.queue.len() + self.running.len() + self.score_queue.len() + self.scoring.len()
     }
 
     pub fn backend(&self) -> &B {
@@ -262,46 +328,157 @@ impl<B: DecodeBackend> DecodeServer<B> {
         Ok(())
     }
 
+    /// Admit queued scoring requests (same 2× headroom cap; scoring never
+    /// holds pool blocks on the pooled backend, so Exhausted is rare but
+    /// honored the same way).
+    fn admit_scores(&mut self) -> Result<()> {
+        if !self.backend.supports_scoring() {
+            return Ok(());
+        }
+        let cap = 2 * *self.policy.buckets.last().unwrap();
+        while self.scoring.len() < cap && self.score_queue.peek().is_some() {
+            match self.backend.score_admit() {
+                Ok(slot) => {
+                    let (req, submitted) = self.score_queue.pop_timed().expect("peeked above");
+                    self.scoring.push(ScoreSeq {
+                        id: req.id,
+                        tokens: req.tokens,
+                        pos: 0,
+                        slot,
+                        logprobs: Vec::new(),
+                        chunks: 0,
+                        submitted,
+                        done: false,
+                    });
+                }
+                Err(AdmitError::Exhausted) => break,
+                Err(AdmitError::TooLarge) => {
+                    let req = self.score_queue.pop().expect("peeked above");
+                    bail!("score request {} rejected by the backend; request dropped", req.id);
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Still at least one full prefill chunk (plus the final prompt token
     /// the decode step needs for sampling) ahead of this sequence?
     fn mid_prefill(seq: &Seq, chunk: usize) -> bool {
         chunk > 0 && seq.pos % chunk == 0 && seq.pos + chunk < seq.prompt.len()
     }
 
+    /// Advance one scoring sequence by one budgeted work unit: a full
+    /// chunk through `score_chunk` (logits folded into log-probs), or the
+    /// sub-chunk tail through `score_tail` — which completes the request.
+    fn advance_score(&mut self, i: usize, chunk: usize) -> Result<()> {
+        let (slot, pos, len) = {
+            let sc = &self.scoring[i];
+            (sc.slot, sc.pos, sc.tokens.len())
+        };
+        if chunk > 0 && pos % chunk == 0 && pos + chunk < len {
+            let toks: Vec<i32> = self.scoring[i].tokens[pos..pos + chunk].to_vec();
+            let logits = self.backend.score_chunk(slot, &toks, pos)?;
+            let sc = &mut self.scoring[i];
+            // row r predicts the token at position pos + r + 1; the one
+            // shared fold (the scoring oracle runs the same helper)
+            fold_score_logprobs(&logits, chunk, &sc.tokens, pos, &mut sc.logprobs);
+            sc.pos += chunk;
+            sc.chunks += 1;
+            self.stats.score_chunks += 1;
+        } else {
+            // tail: token-step positions pos..len−1 (the final token is
+            // never fed — nothing reads after it), then finish
+            let toks: Vec<i32> = self.scoring[i].tokens[pos..len - 1].to_vec();
+            let logits = self.backend.score_tail(slot, &toks, pos)?;
+            let sc = &mut self.scoring[i];
+            fold_score_logprobs(&logits, toks.len(), &sc.tokens, pos, &mut sc.logprobs);
+            sc.pos = len;
+            sc.done = true;
+        }
+        Ok(())
+    }
+
     /// Run one engine iteration; returns how many sequences advanced —
-    /// decode rows plus prefill chunks (0 while the batcher holds out for
-    /// a fuller bucket and no prompt is mid-prefill).
+    /// decode rows plus budgeted ingest units (prefill chunks + scoring
+    /// work; 0 while the batcher holds out for a fuller bucket and no
+    /// ingest work exists).
     pub fn step(&mut self) -> Result<usize> {
         self.admit()?;
+        self.admit_scores()?;
 
-        // ---- chunked prefill pass: every sequence still a full chunk
-        // away from its last prompt token ingests one chunk, state-only.
-        // These don't occupy the decode bucket, so a long prompt and the
-        // running decode rows advance in the same engine iteration.
+        // ---- budgeted ingest pass: generation prompts still a full
+        // chunk away from their last prompt token, plus scoring
+        // sequences, share BatchPolicy::prefill_budget chunk-units per
+        // step, round-robin fair (at most one unit per sequence per
+        // step). These don't occupy the decode bucket, so long prompts
+        // and the running decode rows advance in the same iteration —
+        // but bounded prompt flops per step keep decode latency flat no
+        // matter how many long prompts are in flight.
         let chunk = self.backend.prefill_chunk_size();
-        let mut prefilled = 0usize;
-        if chunk > 0 {
-            let jobs: Vec<(usize, SeqSlot, usize, Vec<i32>)> = self
-                .running
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| Self::mid_prefill(s, chunk))
-                .map(|(i, s)| (i, s.slot, s.pos, s.prompt[s.pos..s.pos + chunk].to_vec()))
-                .collect();
-            for (i, slot, pos, tokens) in jobs {
-                self.backend.prefill_chunk(slot, &tokens, pos)?;
-                let seq = &mut self.running[i];
-                seq.pos += chunk;
-                seq.steps += 1;
-                prefilled += 1;
-                self.stats.prefill_chunks += 1;
-                self.stats.prefill_tokens += chunk;
+        let mut ingest_units = 0usize;
+        {
+            #[derive(Clone, Copy)]
+            enum Item {
+                Gen(usize),
+                Score(usize),
             }
-            // prefill-engine states live outside the pool; sample the peak
-            // here too, since a held/prefill-only iteration exits early
-            if prefilled > 0 {
+            let mut items: Vec<Item> = Vec::new();
+            if chunk > 0 {
+                for (i, s) in self.running.iter().enumerate() {
+                    if Self::mid_prefill(s, chunk) {
+                        items.push(Item::Gen(i));
+                    }
+                }
+            }
+            for i in 0..self.scoring.len() {
+                items.push(Item::Score(i));
+            }
+            if !items.is_empty() {
+                let rot = self.prefill_rr % items.len();
+                items.rotate_left(rot);
+                for &it in items.iter().take(self.policy.prefill_budget) {
+                    match it {
+                        Item::Gen(i) => {
+                            let (slot, pos, tokens) = {
+                                let s = &self.running[i];
+                                (s.slot, s.pos, s.prompt[s.pos..s.pos + chunk].to_vec())
+                            };
+                            self.backend.prefill_chunk(slot, &tokens, pos)?;
+                            let seq = &mut self.running[i];
+                            seq.pos += chunk;
+                            seq.steps += 1;
+                            self.stats.prefill_chunks += 1;
+                            self.stats.prefill_tokens += chunk;
+                        }
+                        Item::Score(i) => self.advance_score(i, chunk)?,
+                    }
+                    ingest_units += 1;
+                }
+                // skipped items lead the next step's grant order
+                self.prefill_rr = self.prefill_rr.wrapping_add(ingest_units.max(1));
+                // stack/scoring states live outside the pool; sample the
+                // peak here too, since a held iteration exits early
                 self.stats.peak_state_bytes =
                     self.stats.peak_state_bytes.max(self.backend.state_bytes());
+            }
+        }
+        // retire completed scoring requests
+        if self.scoring.iter().any(|s| s.done) {
+            let old = std::mem::take(&mut self.scoring);
+            for sc in old {
+                if sc.done {
+                    self.backend.retire(sc.slot);
+                    self.stats.score_requests += 1;
+                    self.stats.score_tokens += sc.tokens.len();
+                    self.finished_scores.push(ScoreResult {
+                        id: sc.id,
+                        logprobs: sc.logprobs,
+                        latency: sc.submitted.elapsed().as_secs_f64(),
+                        chunks: sc.chunks,
+                    });
+                } else {
+                    self.scoring.push(sc);
+                }
             }
         }
 
@@ -322,9 +499,10 @@ impl<B: DecodeBackend> DecodeServer<B> {
         // executed yet): once any sequence is mid-generation, stalling it
         // for max_wait on every plan refusal — or on every new arrival —
         // would collapse decode throughput to one step per max_wait.
-        // Prefill chunks deliberately don't count: a prompt streaming
-        // chunks is not a running decode batch, so the hold still gets to
-        // gather a fuller first bucket while long prompts ingest.
+        // Ingest units deliberately don't count: a prompt streaming
+        // chunks (or a scoring request) is not a running decode batch, so
+        // the hold still gets to gather a fuller first bucket while long
+        // prompts ingest.
         let in_flight = self.running.iter().any(|s| s.decode_steps > 0);
         let bucket = match self.policy.plan(ready, waited) {
             Some(b) => {
@@ -336,7 +514,7 @@ impl<B: DecodeBackend> DecodeServer<B> {
                 // force expired-hold planning: smallest covering bucket
                 match self.policy.plan(ready, self.policy.max_wait) {
                     Some(b) => b,
-                    None => return Ok(prefilled), // unreachable: expired plan with ready > 0 is Some
+                    None => return Ok(ingest_units), // unreachable: expired plan with ready > 0 is Some
                 }
             }
             None => {
@@ -345,7 +523,7 @@ impl<B: DecodeBackend> DecodeServer<B> {
                     // plan() will release it
                     self.hold_since = Some(Instant::now());
                 }
-                return Ok(prefilled);
+                return Ok(ingest_units);
             }
         };
         let n = ready.min(bucket);
@@ -416,12 +594,14 @@ impl<B: DecodeBackend> DecodeServer<B> {
         self.stats.step_seconds.push(dt);
         self.stats.batch_occupancy.push(n as f64 / bucket as f64);
         self.stats.peak_state_bytes = self.stats.peak_state_bytes.max(self.backend.state_bytes());
-        Ok(n + prefilled)
+        Ok(n + ingest_units)
     }
 
-    /// Drive until all submitted work completes; returns the results.
-    /// While the batcher holds for a fuller bucket, naps briefly so the
-    /// hold can expire (bounded by the policy's `max_wait`).
+    /// Drive until all submitted work completes; returns the generation
+    /// results (scoring results via
+    /// [`DecodeServer::take_score_results`]). While the batcher holds for
+    /// a fuller bucket, naps briefly so the hold can expire (bounded by
+    /// the policy's `max_wait`).
     pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
         while self.pending() > 0 {
             if self.step()? == 0 {
@@ -437,6 +617,11 @@ impl<B: DecodeBackend> DecodeServer<B> {
         std::mem::take(&mut self.finished)
     }
 
+    /// Completed scoring results, in completion order.
+    pub fn take_score_results(&mut self) -> Vec<ScoreResult> {
+        std::mem::take(&mut self.finished_scores)
+    }
+
     /// Results sorted by id (BTreeMap for determinism in demos).
     pub fn results_by_id(results: Vec<GenResult>) -> BTreeMap<u64, GenResult> {
         results.into_iter().map(|r| (r.id, r)).collect()
@@ -446,7 +631,8 @@ impl<B: DecodeBackend> DecodeServer<B> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::PooledBackend;
+    use crate::coordinator::backend::{tok_index, PooledBackend, TransitionKind};
+    use crate::tensor::ops;
 
     fn pooled_server(pool_blocks: usize, buckets: Vec<usize>, max_wait: Duration) -> DecodeServer<PooledBackend> {
         let backend = PooledBackend::new(64, 8, 8, pool_blocks, 7);
@@ -618,6 +804,18 @@ mod tests {
         assert!(results[0].tokens.is_empty());
         assert_eq!(results[0].steps, 0);
         assert_eq!(srv.stats.steps, 0, "no engine step for a zero-length generation");
+        // scoring degenerate cases mirror: empty rejected, 1-token
+        // completes immediately with nothing to score
+        assert_eq!(
+            srv.submit_score(ScoreRequest { id: 3, tokens: vec![] }),
+            Err(SubmitError::EmptyPrompt)
+        );
+        srv.submit_score(ScoreRequest { id: 4, tokens: vec![5] }).unwrap();
+        assert_eq!(srv.pending(), 0);
+        let scores = srv.take_score_results();
+        assert_eq!(scores.len(), 1);
+        assert_eq!(scores[0].id, 4);
+        assert!(scores[0].logprobs.is_empty());
     }
 
     #[test]
@@ -716,6 +914,43 @@ mod tests {
     }
 
     #[test]
+    fn prefill_budget_caps_chunk_work_and_decode_never_starves() {
+        // THE flop-budget regression: 8 long prompts next to a live
+        // decode bucket of 4. With prefill_budget = 2, every step must
+        // (a) grant at most 2 chunks, (b) still run the decode batch,
+        // and (c) rotate the grant across prompts so none starves.
+        let backend = PooledBackend::with_config(64, 1, 8, 8, 4, 4096, 7);
+        let policy = BatchPolicy::new(vec![1, 4, 8], Duration::ZERO).with_prefill_budget(2);
+        let mut srv = DecodeServer::with_backend(backend, policy);
+        for id in 0..4 {
+            srv.submit(req(id, 2, 40)).unwrap(); // short prompts, long decode
+        }
+        srv.step().unwrap(); // decode batch is live
+        assert_eq!(srv.stats.steps, 1);
+        for id in 4..12 {
+            srv.submit(req(id, 4 * 6 + 2, 2)).unwrap(); // 6 chunks + 2-token tail
+        }
+        for i in 0..8 {
+            let chunks_before = srv.stats.prefill_chunks;
+            let decode_before = srv.stats.steps;
+            srv.step().unwrap();
+            let granted = srv.stats.prefill_chunks - chunks_before;
+            assert_eq!(granted, 2, "step {i}: budget must be saturated with 8 prompts waiting");
+            assert_eq!(srv.stats.steps, decode_before + 1, "step {i}: decode batch starved");
+        }
+        // 16 chunks round-robined over 8 prompts: every prompt advanced
+        // exactly 2 chunks — no starvation, no favoritism
+        let prog = srv.running_progress();
+        for id in 4..12u64 {
+            let &(_, pos, _) = prog.iter().find(|(pid, _, _)| *pid == id).unwrap();
+            assert_eq!(pos, 8, "prompt {id} not fairly rotated (pos {pos})");
+        }
+        let results = srv.run_to_completion().unwrap();
+        assert_eq!(results.len(), 12);
+        assert_eq!(srv.backend().pool().in_use(), 0, "retirement leaked pool blocks");
+    }
+
+    #[test]
     fn chunked_prefill_is_deterministic_across_batch_schedules_with_per_token_gates() {
         // Multi-head + chunked prefill + a per-token α/λ schedule: the
         // same request decoded alone and inside a batch of 8 must yield
@@ -767,5 +1002,174 @@ mod tests {
         }
         let results = DecodeServer::<PooledBackend>::results_by_id(srv.run_to_completion().unwrap());
         assert_eq!(results[&3].tokens, solo_tokens, "batching changed a sequence's decode");
+    }
+
+    /// Drive a server until its scoring work drains, returning the
+    /// results sorted by id.
+    fn run_scores<B: DecodeBackend>(srv: &mut DecodeServer<B>) -> Vec<ScoreResult> {
+        let mut guard = 0;
+        while srv.pending() > 0 {
+            srv.step().unwrap();
+            guard += 1;
+            assert!(guard < 10_000, "scoring made no progress");
+        }
+        let mut out = srv.take_score_results();
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    #[test]
+    fn score_logprobs_match_token_by_token_decode_replay_bit_exact() {
+        // With chunked prefill DISABLED, both the decode path and the
+        // scoring path are per-token recurrences over the same sequential
+        // stack — so a prompt's score log-probs must equal the log-probs
+        // computed from the captured decode logits EXACTLY (f32 equality,
+        // no tolerance), for both transition families and L = 2 layers.
+        for (seed, kind) in [(21u64, TransitionKind::Mamba2), (22, TransitionKind::Gdn)] {
+            let mk = || {
+                PooledBackend::with_model_config(64, 2, 2, kind, 8, 8, 0, 4096, seed)
+            };
+            let prompt: Vec<i32> = (0..9).map(|i| (i * 11 + 3) % 64).collect();
+            // decode replay: feed the whole prompt through decode steps
+            let mut srv = DecodeServer::with_backend(
+                mk(),
+                BatchPolicy::new(vec![1], Duration::ZERO),
+            );
+            srv.enable_logit_capture();
+            srv.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new: 1 }).unwrap();
+            srv.run_to_completion().unwrap();
+            let captured = srv.take_captured_logits();
+            let vocab = captured[0].2.len();
+            let mut want = Vec::new();
+            for p in 1..prompt.len() {
+                let row = &captured.iter().find(|(_, pos, _)| *pos == p - 1).unwrap().2;
+                want.push(-ops::cross_entropy(row, tok_index(prompt[p], vocab)));
+            }
+            // score on a fresh identical server
+            let mut ssrv = DecodeServer::with_backend(
+                mk(),
+                BatchPolicy::new(vec![1], Duration::ZERO),
+            );
+            ssrv.submit_score(ScoreRequest { id: 0, tokens: prompt.clone() }).unwrap();
+            let res = run_scores(&mut ssrv);
+            assert_eq!(res.len(), 1);
+            assert_eq!(res[0].logprobs, want, "{kind:?}: score != decode replay");
+            // and the one-shot oracle agrees bit-for-bit too
+            assert_eq!(
+                res[0].logprobs,
+                ssrv.backend().oracle_score_logprobs(&prompt),
+                "{kind:?}: score != oracle"
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_score_matches_oracle_and_decode_tail_bit_exact() {
+        // With chunked prefill ON: (a) the served score equals the
+        // one-shot scoring oracle bit-for-bit (scheduling independence —
+        // interleaved budgeted chunks change nothing), and (b) the
+        // sub-chunk tail log-probs equal the captured decode rows of the
+        // same prompt served as a generation request, bit-for-bit (score
+        // and decode share the prefill boundary and the token machinery).
+        for (seed, kind) in [(31u64, TransitionKind::Mamba2), (32, TransitionKind::Gdn)] {
+            let mk = || {
+                PooledBackend::with_model_config(64, 2, 2, kind, 8, 8, 4, 4096, seed)
+            };
+            let prompt: Vec<i32> = (0..11).map(|i| (i * 7 + 5) % 64).collect(); // pe = 8
+            let mut gsrv = DecodeServer::with_backend(
+                mk(),
+                BatchPolicy::new(vec![1], Duration::ZERO),
+            );
+            gsrv.enable_logit_capture();
+            gsrv.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new: 1 }).unwrap();
+            gsrv.run_to_completion().unwrap();
+            let captured = gsrv.take_captured_logits();
+            let vocab = captured[0].2.len();
+
+            let mut ssrv = DecodeServer::with_backend(
+                mk(),
+                BatchPolicy::new(vec![1], Duration::ZERO),
+            );
+            // a second scoring request rides along so budgeted
+            // round-robin interleaving is actually exercised
+            ssrv.submit_score(ScoreRequest { id: 0, tokens: prompt.clone() }).unwrap();
+            ssrv.submit_score(ScoreRequest { id: 1, tokens: prompt[..7].to_vec() }).unwrap();
+            let res = run_scores(&mut ssrv);
+            assert_eq!(res.len(), 2);
+            assert_eq!(res[0].logprobs.len(), prompt.len() - 1);
+            assert_eq!(res[0].chunks, 2, "11-token prompt at C=4 scores 2 chunks");
+            assert_eq!(
+                res[0].logprobs,
+                ssrv.backend().oracle_score_logprobs(&prompt),
+                "{kind:?}: served score != one-shot oracle"
+            );
+            assert_eq!(
+                res[1].logprobs,
+                ssrv.backend().oracle_score_logprobs(&prompt[..7]),
+                "{kind:?}: interleaved score != one-shot oracle"
+            );
+            // tail positions (8, 9 → targets 9, 10) match decode rows
+            let pe = ssrv.backend().prefill_boundary(prompt.len());
+            assert_eq!(pe, 8);
+            for p in pe + 1..prompt.len() {
+                let row = &captured.iter().find(|(_, pos, _)| *pos == p - 1).unwrap().2;
+                let want = -ops::cross_entropy(row, tok_index(prompt[p], vocab));
+                assert_eq!(
+                    res[0].logprobs[p - 1],
+                    want,
+                    "{kind:?}: tail target {p} != decode replay"
+                );
+            }
+            assert!(ssrv.stats.score_chunks > 0);
+            assert_eq!(ssrv.stats.score_requests, 2);
+            assert_eq!(ssrv.backend().pool().in_use(), 0, "scoring must not hold pool blocks");
+        }
+    }
+
+    #[test]
+    fn scoring_interleaves_with_generation_traffic() {
+        // Score requests share the budgeted ingest pass with generation
+        // prompts; both kinds of work complete and the score result is
+        // scheduling-independent (equals the one-shot oracle).
+        let backend = PooledBackend::with_model_config(
+            64, 2, 2, TransitionKind::Mamba2, 8, 8, 4, 4096, 41,
+        );
+        let policy = BatchPolicy::new(vec![4], Duration::ZERO).with_prefill_budget(2);
+        let mut srv = DecodeServer::with_backend(backend, policy);
+        let long: Vec<i32> = (0..23).map(|i| (i * 5 + 2) % 64).collect();
+        for id in 0..4 {
+            srv.submit(req(id, 14, 6)).unwrap();
+        }
+        srv.submit_score(ScoreRequest { id: 100, tokens: long.clone() }).unwrap();
+        let results = srv.run_to_completion().unwrap();
+        assert_eq!(results.len(), 4);
+        let scores = srv.take_score_results();
+        assert_eq!(scores.len(), 1);
+        assert_eq!(scores[0].logprobs, srv.backend().oracle_score_logprobs(&long));
+        assert_eq!(srv.backend().pool().in_use(), 0);
+    }
+
+    #[test]
+    fn scoring_unsupported_backend_rejects_at_submit() {
+        // A backend without a scoring path refuses at submit time instead
+        // of erroring mid-loop.
+        struct NoScore;
+        impl DecodeBackend for NoScore {
+            fn admit(&mut self, _max_steps: usize) -> Result<SeqSlot, AdmitError> {
+                Ok(SeqSlot(0))
+            }
+            fn retire(&mut self, _slot: SeqSlot) {}
+            fn step(&mut self, _bucket: usize, rows: &[(SeqSlot, i32, i32)]) -> Result<Vec<f32>> {
+                Ok(vec![0.0; rows.len()])
+            }
+            fn state_bytes(&self) -> usize {
+                0
+            }
+        }
+        let mut srv = DecodeServer::with_backend(NoScore, BatchPolicy::new(vec![1], Duration::ZERO));
+        assert_eq!(
+            srv.submit_score(ScoreRequest { id: 0, tokens: vec![1, 2, 3] }),
+            Err(SubmitError::ScoringUnsupported)
+        );
     }
 }

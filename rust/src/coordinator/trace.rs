@@ -4,30 +4,39 @@
 //! [`DecodeServer`] + [`PooledBackend`] over **randomized traces** —
 //! mixed prompt lengths (sub-chunk through multi-chunk, so chunkwise
 //! prefill and token-by-token ingestion interleave), mixed `max_new`,
-//! Mamba-2 *and* GDN transition modes, 1–2 layers × 1–2 heads, shared /
-//! per-token / per-head gate tables, and pool sizes squeezed near
+//! Mamba-2 *and* GDN transition modes, **sequential stacks of 1–3
+//! layers** × 1–2 heads, shared / per-token / per-head gate tables,
+//! randomized prefill chunk budgets, **prompt-scoring requests riding
+//! along the generation traffic**, and pool sizes squeezed near
 //! exhaustion so admission backpressure fires mid-trace — capturing every
 //! decode row's logits, then asserting them **bit-exact** against
 //! [`PooledBackend::oracle_decode_logits`]: a per-sequence, Mat-backed
 //! [`FenwickState`](crate::state::FenwickState) oracle replay of the same
-//! request (chunkwise prefill span re-ingested through identical engines,
-//! then token-by-token decode).
+//! request (chunkwise prefill span re-ingested through an identical
+//! sequential [`crate::prefill::LayerStack`], then token-by-token,
+//! layer-by-layer decode). Served [`ScoreResult`]s are likewise asserted
+//! bit-exact against [`PooledBackend::oracle_score_logprobs`] — the
+//! one-shot replay of the same chunk/tail scoring split.
 //!
 //! Why bit-exactness is the right bar: every serving-side batching —
 //! the pool-wide [`crate::state::BatchedAdvance`], the block-sparse
-//! [`crate::state::BatchedDecoder`] read, the whole-batch logits GEMM —
-//! is built from the *same primitive ops in the same per-entry order* as
-//! the per-sequence path, so any scheduling, bucketing, interleaving, or
-//! batch-composition effect on a sequence's logits is a bug this harness
-//! catches with zero tolerance. Failures shrink (via [`crate::util::prop`])
-//! toward fewer requests and shorter prompts before reporting.
+//! [`crate::state::BatchedDecoder`] read, the per-layer projection GEMMs,
+//! the whole-batch logits GEMM — is built from the *same primitive ops in
+//! the same per-entry order* as the per-sequence path, so any scheduling,
+//! bucketing, interleaving, budget, or batch-composition effect on a
+//! sequence's logits or log-probs is a bug this harness catches with zero
+//! tolerance. (Note the per-token per-layer recurrent oracle also covers
+//! the acceptance criterion directly: prompts shorter than one chunk take
+//! the pure token-by-token path end to end.) Failures shrink (via
+//! [`crate::util::prop`]) toward fewer requests and shorter prompts
+//! before reporting.
 
 use std::time::Duration;
 
 use crate::coordinator::backend::{PooledBackend, TransitionKind};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::server::DecodeServer;
-use crate::coordinator::GenRequest;
+use crate::coordinator::{GenRequest, ScoreRequest, ScoreResult};
 use crate::state::pooled::blocks_for_steps;
 use crate::state::GateTable;
 use crate::tensor::Mat;
@@ -90,14 +99,61 @@ fn compare_to_oracle(
     Ok(())
 }
 
+/// Compare served scoring results against the one-shot scoring oracle,
+/// bit-for-bit.
+fn compare_scores_to_oracle(
+    backend: &PooledBackend,
+    score_reqs: &[ScoreRequest],
+    results: &[ScoreResult],
+) -> Result<(), String> {
+    if results.len() != score_reqs.len() {
+        return Err(format!(
+            "{} of {} score requests completed",
+            results.len(),
+            score_reqs.len()
+        ));
+    }
+    for req in score_reqs {
+        let Some(res) = results.iter().find(|r| r.id == req.id) else {
+            return Err(format!("score req {} has no result", req.id));
+        };
+        let want = backend.oracle_score_logprobs(&req.tokens);
+        if res.logprobs.len() != want.len() {
+            return Err(format!(
+                "score req {}: {} logprobs, oracle has {}",
+                req.id,
+                res.logprobs.len(),
+                want.len()
+            ));
+        }
+        if res.logprobs != want {
+            let j = res
+                .logprobs
+                .iter()
+                .zip(want.iter())
+                .position(|(a, b)| a != b)
+                .unwrap();
+            return Err(format!(
+                "score req {}: logprob not bit-exact at target {} ({} vs {})",
+                req.id,
+                j + 1,
+                res.logprobs[j],
+                want[j]
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// One randomized trace: build a backend + server from the case, run the
-/// traffic to completion, replay every request through the per-sequence
-/// oracle, and compare logits bit-for-bit. Returns an error description
-/// instead of panicking so the property harness can shrink the case.
+/// traffic (generation + scoring) to completion, replay every request
+/// through the per-sequence oracles, and compare bit-for-bit. Returns an
+/// error description instead of panicking so the property harness can
+/// shrink the case.
 fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
     let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0x7ACE);
     let kind = if rng.chance(0.5) { TransitionKind::Gdn } else { TransitionKind::Mamba2 };
-    let layers = 1 + rng.below(2);
+    let layers = 1 + rng.below(3);
     let heads = 1 + rng.below(2);
     let dk = if rng.chance(0.5) { 4 } else { 8 };
     let dv = dk;
@@ -111,6 +167,15 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
             id: i as u64,
             prompt: (0..1 + rng.below(max_prompt)).map(|_| rng.below(VOCAB) as i32).collect(),
             max_new: 1 + rng.below(5),
+        })
+        .collect();
+    // scoring traffic rides along (only meaningful when the backend has
+    // a scoring path — always true for PooledBackend)
+    let nscore = rng.below(3);
+    let score_reqs: Vec<ScoreRequest> = (0..nscore)
+        .map(|i| ScoreRequest {
+            id: 1000 + i as u64,
+            tokens: (0..1 + rng.below(max_prompt + 3)).map(|_| rng.below(VOCAB) as i32).collect(),
         })
         .collect();
     let need = |r: &GenRequest| {
@@ -145,14 +210,19 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
     }
 
     let buckets = if rng.chance(0.5) { vec![4] } else { vec![1, 4, 8] };
-    let mut srv = DecodeServer::with_backend(backend, BatchPolicy::new(buckets, Duration::ZERO));
+    let policy = BatchPolicy::new(buckets, Duration::ZERO).with_prefill_budget(1 + rng.below(4));
+    let mut srv = DecodeServer::with_backend(backend, policy);
     srv.enable_logit_capture();
     for r in &reqs {
         srv.submit(r.clone()).map_err(|e| format!("submit: {e}"))?;
     }
+    for r in &score_reqs {
+        srv.submit_score(r.clone()).map_err(|e| format!("submit_score: {e}"))?;
+    }
     let results =
         DecodeServer::<PooledBackend>::results_by_id(srv.run_to_completion().map_err(|e| format!("serve: {e}"))?);
     let captured = srv.take_captured_logits();
+    let score_results = srv.take_score_results();
 
     if results.len() != nreq {
         return Err(format!("{} of {nreq} requests completed", results.len()));
@@ -160,25 +230,28 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
     if srv.backend().pool().in_use() != 0 {
         return Err(format!("retirement leaked {} pool blocks", srv.backend().pool().in_use()));
     }
+    let ctx = |e: String| {
+        format!(
+            "{e} (kind {kind:?}, layers {layers}, heads {heads}, chunk {prefill_chunk}, \
+             pool {pool_blocks})"
+        )
+    };
     for r in &reqs {
         let res = &results[&r.id];
         if res.tokens.len() != r.max_new {
             return Err(format!("req {}: {} of {} tokens", r.id, res.tokens.len(), r.max_new));
         }
-        compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured).map_err(|e| {
-            format!(
-                "{e} (kind {kind:?}, layers {layers}, heads {heads}, chunk {prefill_chunk}, \
-                 pool {pool_blocks})"
-            )
-        })?;
+        compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured).map_err(&ctx)?;
     }
+    compare_scores_to_oracle(srv.backend(), &score_reqs, &score_results).map_err(&ctx)?;
     Ok(())
 }
 
-/// THE foregrounded differential property: serving-path logits are
-/// bit-exact with the per-sequence FenwickState oracle replay, over
-/// randomized traces. Honors `PROP_SEED` (CI runs extra seeds) and
-/// shrinks failing cases toward fewer requests / shorter prompts.
+/// THE foregrounded differential property: serving-path logits (and
+/// scoring log-probs) are bit-exact with the per-sequence oracle
+/// replays, over randomized traces. Honors `PROP_SEED` (CI runs extra
+/// seeds) and shrinks failing cases toward fewer requests / shorter
+/// prompts.
 #[test]
 fn serving_trace_logits_match_oracle_replay_property() {
     check(
@@ -197,13 +270,14 @@ fn serving_trace_logits_match_oracle_replay_property() {
 
 /// A pinned heavier trace per mode (belt to the property's braces): long
 /// prompts over many chunks, bucket-8 batches, both transition families,
-/// multi-layer multi-head, per-head gates — the configuration the
-/// acceptance criteria name explicitly.
+/// 3-layer sequential stacks × 2 heads, per-head gates, scoring traffic,
+/// and a tight prefill budget — the configuration the acceptance
+/// criteria name explicitly.
 #[test]
 fn serving_trace_differential_pinned_heavy_modes() {
-    for (seed, kind) in [(11u64, TransitionKind::Mamba2), (12u64, TransitionKind::Gdn)] {
+    for (seed, kind) in [(11u64, TransitionKind::Mamba2), (12, TransitionKind::Gdn)] {
         let mut rng = Rng::new(seed);
-        let (layers, heads, dk, dv, chunk) = (2usize, 2usize, 8usize, 8usize, 4usize);
+        let (layers, heads, dk, dv, chunk) = (3usize, 2usize, 8usize, 8usize, 4usize);
         let reqs: Vec<GenRequest> = (0..10)
             .map(|i| GenRequest {
                 id: i as u64,
@@ -214,6 +288,12 @@ fn serving_trace_differential_pinned_heavy_modes() {
                     .map(|_| rng.below(VOCAB) as i32)
                     .collect(),
                 max_new: 1 + rng.below(6),
+            })
+            .collect();
+        let score_reqs: Vec<ScoreRequest> = (0..3)
+            .map(|i| ScoreRequest {
+                id: 1000 + i as u64,
+                tokens: (0..5 + i * 7).map(|_| rng.below(VOCAB) as i32).collect(),
             })
             .collect();
         let total: usize = reqs
@@ -237,18 +317,26 @@ fn serving_trace_differential_pinned_heavy_modes() {
                 GateTable::per_head((0..heads).map(|_| random_head_table(&mut rng)).collect()),
             );
         }
-        let mut srv =
-            DecodeServer::with_backend(backend, BatchPolicy::new(vec![8], Duration::ZERO));
+        let policy = BatchPolicy::new(vec![8], Duration::ZERO).with_prefill_budget(3);
+        let mut srv = DecodeServer::with_backend(backend, policy);
         srv.enable_logit_capture();
         for r in &reqs {
             srv.submit(r.clone()).unwrap();
         }
+        for r in &score_reqs {
+            srv.submit_score(r.clone()).unwrap();
+        }
         let results =
             DecodeServer::<PooledBackend>::results_by_id(srv.run_to_completion().unwrap());
         let captured = srv.take_captured_logits();
+        let score_results = srv.take_score_results();
         assert!(
             srv.stats.prefill_chunks > 0,
             "heavy trace must exercise chunkwise prefill ({kind:?})"
+        );
+        assert!(
+            srv.stats.score_chunks > 0,
+            "heavy trace must exercise chunkwise scoring ({kind:?})"
         );
         assert_eq!(results.len(), reqs.len(), "{kind:?}");
         for r in &reqs {
@@ -257,6 +345,9 @@ fn serving_trace_differential_pinned_heavy_modes() {
             {
                 panic!("{e} ({kind:?})");
             }
+        }
+        if let Err(e) = compare_scores_to_oracle(srv.backend(), &score_reqs, &score_results) {
+            panic!("{e} ({kind:?})");
         }
         assert_eq!(srv.backend().pool().in_use(), 0, "leak ({kind:?})");
     }

@@ -12,8 +12,9 @@
 //!   performance substrate for the paper's benchmarks,
 //! - [`state`] — the `O(log T)` Fenwick state manager used at decode time,
 //! - [`prefill`] — the chunkwise prompt-ingestion subsystem: head-batched
-//!   `O(T log T)` prefill engines plus the state-export bridge into the
-//!   pooled decode path,
+//!   `O(T log T)` prefill engines with per-token chunk outputs, the
+//!   sequential L-layer stack (`prefill::stack`), the shared scratch
+//!   workspace, and the state-export bridge into the pooled decode path,
 //! - [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust,
 //! - [`coordinator`] — the serving coordinator (router, dynamic batcher,

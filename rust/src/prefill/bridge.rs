@@ -219,6 +219,7 @@ mod tests {
         let qs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dk, 1.0, &mut rng)).collect();
         let nchunks = prompt / c;
 
+        let mut ws = crate::prefill::Workspace::new();
         for gdn in [false, true] {
             // head-batched chunkwise ingestion of the full chunks
             let mut eng = PrefillEngine::new(heads, dk, dv, c);
@@ -231,9 +232,9 @@ mod tests {
                     vc.extend_from_slice(vs[h].rows_data(s, e));
                 }
                 if gdn {
-                    eng.ingest_chunk_gdn(&kc, &vc, &shared.alpha[s..e], &shared.beta[s..e]);
+                    eng.ingest_chunk_gdn(&mut ws, &kc, &vc, &shared.alpha[s..e], &shared.beta[s..e], None);
                 } else {
-                    eng.ingest_chunk_mamba2(&kc, &vc, &shared.alpha[s..e], None);
+                    eng.ingest_chunk_mamba2(&mut ws, &kc, &vc, &shared.alpha[s..e], None);
                 }
             }
             eng.finish();

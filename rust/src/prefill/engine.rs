@@ -1,4 +1,4 @@
-//! Head-batched chunkwise prefill engine (state-only Alg. 1).
+//! Head-batched chunkwise prefill engine (paper Alg. 1, full form).
 //!
 //! [`PrefillEngine`] ingests a prompt one chunk at a time for **H heads
 //! at once**. The level hierarchy itself *is* a
@@ -11,50 +11,149 @@
 //!
 //! - state write `S_new^h = K_c^{hT} diag(w) V_c^h` →
 //!   [`crate::tensor::gemm_tn_diag_batch_acc`],
-//! - GDN UT system `K_c^h K_c^{hT}` → [`crate::tensor::gemm_nt_batch_into`],
-//! - GDN carried-state transition `Φ^h S^h` and the optional level read
-//!   `Q_c^h S_cat^h` → [`crate::tensor::gemm_batch_into`].
+//! - GDN UT system `K_c^h K_c^{hT}` and the intra-chunk `Q_c^h K_c^{hT}`
+//!   → [`crate::tensor::gemm_nt_batch_into`],
+//! - GDN carried-state transition `Φ^h S^h` and the inter-chunk level
+//!   read `Q_c^h S_cat^h` → [`crate::tensor::gemm_batch_into`].
+//!
+//! **Two ingestion modes.** State-only (pass `None` for the chunk
+//! output): ingestion skips attention outputs entirely — one state write
+//! + one transition pass per chunk — which is all a *generation* prompt
+//! needs (the final prompt token's logits come from the decode step).
+//! **Per-token output** (pass [`ChunkOutput`]): the engine additionally
+//! computes the full chunk output
+//! `O_c = (intra-chunk masked attention) + (inter-chunk level read)`,
+//! i.e. both halves of the chunkwise algorithm — for Mamba-2 the masked
+//! local `P = tril(Q_c K_c^T) ⊙ decay-ratio ⊙ Λ` plus the λ·decay-folded
+//! `Q_c S_cat` read; for GDN the materialized local UT/Householder term
+//! `P = (tril(Q_c K_c^T) ⊙ Gratio)(I + StrictTril(M))^{-1} diag(β) ⊙ Λ`
+//! plus the effective-query read `Q̂_c S_cat` — written as a
+//! **`(C, H·d_v)` row-major block** (token-major, heads concatenated per
+//! row: the layout a sequential layer stack projects into the next
+//! layer's q/k/v, see [`crate::prefill::stack`]). This is the intra-chunk
+//! half the ROADMAP's prompt-scoring item called for.
 //!
 //! Per head and chunk, the op sequences mirror the single-head chunkwise
 //! reference paths (`loglinear_mamba2::chunkwise` /
-//! `loglinear_gdn::chunkwise` state halves), so exported per-head states
-//! match the per-head engines bit-for-bit on the Mamba-2 path and within
-//! solver tolerance on the GDN path (the UT solve here is an in-place
-//! forward substitution).
+//! `loglinear_gdn::chunkwise`): the Mamba-2 path is **bit-exact** with
+//! the per-head reference (states and outputs — asserted below), the GDN
+//! path agrees within solver tolerance (the UT solves here are in-place
+//! substitutions).
 //!
-//! The engine is **state-only**: serving prefill never needs prompt
-//! logits (the final prompt token is fed through the decode step, which
-//! samples the first generated token), so ingestion skips intra-chunk
-//! attention and level reads entirely. The head-batched `Q_c S_cat` read
-//! is still available via [`LevelRead`] on the Mamba-2 path — the seam
-//! for prompt scoring (per-token log-probs) — and covers the inter-chunk
-//! contribution only.
+//! **Shared workspace** (ROADMAP item): all per-chunk scratch — decay
+//! tables, UT systems, concat/read buffers, the transition swap buffer —
+//! lives in a [`Workspace`] passed into each ingest call instead of
+//! per-engine fields, so a server holding hundreds of mid-prefill
+//! sequences (L engines each) shares ONE scratch pool instead of
+//! allocating `sequences · L` copies. Engines keep only their level
+//! states. Results never depend on what a workspace previously held
+//! (every buffer is cleared or fully overwritten before use;
+//! regression-tested below by interleaving engines over one workspace).
 //!
-//! Gates (`α`, `β`) may be **shared or per-head** (the ROADMAP per-head
-//! gate-tables item): ingest accepts either `C` gates applied to every
-//! head or `H·C` head-major gates, matching the pooled backend's
-//! per-head [`crate::state::GateTable`]. The shared case is executed as
-//! the per-head case with the schedule replicated bit-identically, so
-//! one code path serves both and a shared schedule reproduces the
-//! pre-per-head results exactly (regression-tested below). As predicted,
-//! only the bookkeeping changes — every batched GEMM keeps its shape.
+//! Gates (`α`, `β`) may be **shared or per-head**: ingest accepts either
+//! `C` gates applied to every head or `H·C` head-major gates, matching
+//! the pooled backend's per-head [`crate::state::GateTable`]. The shared
+//! case is executed as the per-head case with the schedule replicated
+//! bit-identically, so one code path serves both.
 
-use crate::attention::deltanet::apply_householder_slice;
+use crate::attention::deltanet::{apply_householder_slice, apply_householder_vec};
 use crate::attention::loglinear::ChunkFenwick;
-use crate::tensor::{self, Mat};
+use crate::fenwick;
+use crate::tensor;
 
-/// Optional inter-chunk level read riding along a Mamba-2 ingest: one
-/// head-batched `Q_c S_cat` GEMM over the pre-transition level states,
-/// λ·decay-folded into `out`.
-pub struct LevelRead<'a> {
+/// Shared per-chunk scratch for any number of [`PrefillEngine`]s (and
+/// [`crate::prefill::stack::LayerStack`]s): one instance per server (or
+/// per thread), passed `&mut` into every ingest call. Holding it outside
+/// the engine is what makes prefill memory scale with *live state*, not
+/// with the number of concurrent prompts. Every buffer is cleared or
+/// fully overwritten before each use, so results are independent of what
+/// the workspace held before (asserted by tests).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// intra-chunk cumulative decays, head-major `(H, C)`
+    g: Vec<f32>,
+    /// per-token state-write weights, head-major `(H, C)`
+    wscale: Vec<f32>,
+    /// level-read concat `S_cat`, `(H·d_k, live·d_v)`
+    cat: Vec<f32>,
+    /// level-read GEMM output, `(H·C, live·d_v)`
+    read_buf: Vec<f32>,
+    /// live chunk levels at the last concat
+    active_ids: Vec<usize>,
+    /// GDN UT systems, `(H, C, C)`
+    sys: Vec<f32>,
+    /// GDN solved value rows `Ŵ`, `(H, C, d_v)`
+    what: Vec<f32>,
+    /// GDN materialized chunk transitions `Φ`, `(H, d_k, d_k)`
+    phi: Vec<f32>,
+    /// stacked transition swap buffer, `(H·d_k, d_v)`
+    scratch: Vec<f32>,
+    /// intra-chunk attention matrices `P`, `(H, C, C)`
+    qk: Vec<f32>,
+    /// GDN effective queries `Q̂`, `(H, C, d_k)`
+    qe: Vec<f32>,
+    /// per-token outputs in stacked `(H, C, d_v)` form, pre-scatter
+    o_stack: Vec<f32>,
+    // ---- buffers loaned to LayerStack (layer-input restacking) ----
+    pub(crate) stack_q: Vec<f32>,
+    pub(crate) stack_k: Vec<f32>,
+    pub(crate) stack_v: Vec<f32>,
+    pub(crate) stack_proj: Vec<f32>,
+    pub(crate) stack_alpha: Vec<f32>,
+    pub(crate) stack_beta: Vec<f32>,
+    pub(crate) stack_o_a: Vec<f32>,
+    pub(crate) stack_o_b: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Resident scratch bytes (capacity, not length): what ONE shared
+    /// workspace holds — and therefore what every additional concurrent
+    /// prefill sequence now *doesn't* allocate. Reported by the prefill
+    /// bench's shared-workspace section.
+    pub fn bytes(&self) -> usize {
+        4 * (self.g.capacity()
+            + self.wscale.capacity()
+            + self.cat.capacity()
+            + self.read_buf.capacity()
+            + self.sys.capacity()
+            + self.what.capacity()
+            + self.phi.capacity()
+            + self.scratch.capacity()
+            + self.qk.capacity()
+            + self.qe.capacity()
+            + self.o_stack.capacity()
+            + self.stack_q.capacity()
+            + self.stack_k.capacity()
+            + self.stack_v.capacity()
+            + self.stack_proj.capacity()
+            + self.stack_alpha.capacity()
+            + self.stack_beta.capacity()
+            + self.stack_o_a.capacity()
+            + self.stack_o_b.capacity())
+            + std::mem::size_of::<usize>() * self.active_ids.capacity()
+    }
+}
+
+/// Per-token chunk-output request riding along an ingest: the engine
+/// computes `O_c = (intra-chunk masked attention) + (inter-chunk level
+/// read over the pre-transition states)` for every head and writes it
+/// token-major.
+pub struct ChunkOutput<'a> {
     /// stacked queries `(H, C, d_k)`, head-major row-major
     pub qs: &'a [f32],
-    /// λ lookup `(head, chunk-local row, token level) → weight` (token
-    /// level = `log2(C) + chunk level`; the engine folds the intra-chunk
-    /// cumulative decay in itself; ignore the head argument for schedules
-    /// shared across heads)
+    /// λ lookup `(head, chunk-local row, token level) → weight`. Token
+    /// levels: intra-chunk pairs use their local Fenwick level
+    /// (`fenwick::level_of(i, j)`, which equals the absolute level for
+    /// intra-chunk pairs), inter-chunk buckets use `log2(C) + m`. The
+    /// engine folds all cumulative-decay factors itself; ignore the head
+    /// argument for schedules shared across heads.
     pub lambda: &'a dyn Fn(usize, usize, usize) -> f32,
-    /// stacked outputs `(H, C, d_v)`, accumulated into
+    /// chunk output `(C, H·d_v)` row-major — token-major, head outputs
+    /// concatenated along each row. Overwritten.
     pub out: &'a mut [f32],
 }
 
@@ -72,41 +171,13 @@ pub struct PrefillEngine {
     /// the shared chunk-granularity hierarchy, holding stacked
     /// `(H·d_k, d_v)` states (head `h` = rows `h·d_k..(h+1)·d_k`)
     fen: ChunkFenwick,
-    /// stacked scratch for the batched `Φ S` transition swap
-    scratch: Mat,
-    // ---- workspaces (reused across chunks; no steady-state allocation)
-    g: Vec<f32>,
-    wscale: Vec<f32>,
-    cat: Vec<f32>,
-    read_buf: Vec<f32>,
-    active_ids: Vec<usize>,
-    sys: Vec<f32>,
-    what: Vec<f32>,
-    phi: Vec<f32>,
 }
 
 impl PrefillEngine {
     pub fn new(heads: usize, dk: usize, dv: usize, chunk: usize) -> PrefillEngine {
         assert!(heads >= 1 && dk >= 1 && dv >= 1);
         assert!(chunk >= 1 && chunk.is_power_of_two(), "chunk size must be a power of two");
-        PrefillEngine {
-            heads,
-            dk,
-            dv,
-            chunk,
-            z: 0,
-            finished: false,
-            fen: ChunkFenwick::new(),
-            scratch: Mat::zeros(heads * dk, dv),
-            g: Vec::new(),
-            wscale: Vec::new(),
-            cat: Vec::new(),
-            read_buf: Vec::new(),
-            active_ids: Vec::new(),
-            sys: Vec::new(),
-            what: Vec::new(),
-            phi: Vec::new(),
-        }
+        PrefillEngine { heads, dk, dv, chunk, z: 0, finished: false, fen: ChunkFenwick::new() }
     }
 
     pub fn heads(&self) -> usize {
@@ -141,47 +212,61 @@ impl PrefillEngine {
         self.fen.live_states()
     }
 
-    /// Resident bytes: live stacked states plus the transition scratch.
+    /// Resident bytes of live stacked states (scratch lives in the shared
+    /// [`Workspace`], not here).
     pub fn state_bytes(&self) -> usize {
-        (self.fen.live_states() * self.heads * self.dk * self.dv + self.scratch.data.len()) * 4
+        self.fen.live_states() * self.heads * self.dk * self.dv * 4
     }
 
-    /// Intra-chunk cumulative decays, head-major `(H, C)`:
+    /// Intra-chunk cumulative decays into `ws.g`, head-major `(H, C)`:
     /// `g[h·C + i] = Π_{j≤i} α^h_j` (f64 accumulator per head, matching
     /// the chunkwise reference paths). `alpha` holds either `C` shared
     /// gates — replicated bit-identically per head — or `H·C` head-major
     /// per-head gates.
-    fn fill_decays(&mut self, alpha: &[f32]) {
+    fn fill_decays(&self, ws: &mut Workspace, alpha: &[f32]) {
         let (h, c) = (self.heads, self.chunk);
         assert!(
             alpha.len() == c || alpha.len() == h * c,
             "alpha must hold C (shared) or H*C (per-head) gates, got {}",
             alpha.len()
         );
-        self.g.clear();
+        ws.g.clear();
         for head in 0..alpha.len() / c {
             let mut acc = 1.0f64;
             for &a in &alpha[head * c..(head + 1) * c] {
                 acc *= a as f64;
-                self.g.push(acc as f32);
+                ws.g.push(acc as f32);
             }
         }
-        while self.g.len() < h * c {
-            self.g.extend_from_within(0..c);
+        while ws.g.len() < h * c {
+            ws.g.extend_from_within(0..c);
         }
     }
 
     /// `wscale[h·C + j] = g[h·C + C−1] / g[h·C + j]` — the per-token
-    /// write weights for the batched `K^T diag(w) V` kernel, head-major
-    /// (each head's chunk decay over its own cumulative decays).
-    fn fill_wscale(&mut self) {
+    /// write weights for the batched `K^T diag(w) V` kernel, head-major.
+    fn fill_wscale(&self, ws: &mut Workspace) {
         let (h, c) = (self.heads, self.chunk);
-        self.wscale.clear();
+        ws.wscale.clear();
         for head in 0..h {
-            let gh = &self.g[head * c..(head + 1) * c];
+            let gh = &ws.g[head * c..(head + 1) * c];
             let cd = gh[c - 1];
             for &gj in gh {
-                self.wscale.push(cd / gj);
+                ws.wscale.push(cd / gj);
+            }
+        }
+    }
+
+    /// Scatter the stacked `(H, C, d_v)` output into the caller's
+    /// token-major `(C, H·d_v)` block.
+    fn scatter_output(&self, o_stack: &[f32], out: &mut [f32]) {
+        let (h, c, dv) = (self.heads, self.chunk, self.dv);
+        debug_assert_eq!(o_stack.len(), h * c * dv);
+        assert_eq!(out.len(), c * h * dv, "chunk output shape");
+        for i in 0..c {
+            for head in 0..h {
+                out[(i * h + head) * dv..(i * h + head + 1) * dv]
+                    .copy_from_slice(&o_stack[(head * c + i) * dv..(head * c + i + 1) * dv]);
             }
         }
     }
@@ -190,41 +275,79 @@ impl PrefillEngine {
     /// decay) transition. `ks` is `(H, C, d_k)` and `vs` `(H, C, d_v)`,
     /// head-major row-major; `alpha` the chunk's decay gates — `C`
     /// shared across heads or `H·C` head-major per-head. Pass
-    /// [`LevelRead`] to also read the chunk's inter-chunk contribution
-    /// (one head-batched `Q_c S_cat` GEMM over the pre-transition
-    /// states).
+    /// [`ChunkOutput`] to also compute the chunk's full per-token outputs
+    /// (inter-chunk read over the pre-transition states + the masked
+    /// intra-chunk term, in the chunkwise reference's accumulation
+    /// order — bit-exact with `loglinear_mamba2::chunkwise` per head).
     pub fn ingest_chunk_mamba2(
         &mut self,
+        ws: &mut Workspace,
         ks: &[f32],
         vs: &[f32],
         alpha: &[f32],
-        read: Option<LevelRead<'_>>,
+        out: Option<ChunkOutput<'_>>,
     ) {
         assert!(!self.finished, "ingest after finish()");
         let (h, c, dk, dv) = (self.heads, self.chunk, self.dk, self.dv);
         assert_eq!(ks.len(), h * c * dk, "ks shape");
         assert_eq!(vs.len(), h * c * dv, "vs shape");
         self.fen.advance(self.z);
-        self.fill_decays(alpha);
-        if let Some(rd) = read {
-            let g = std::mem::take(&mut self.g);
-            let lam = rd.lambda;
+        self.fill_decays(ws, alpha);
+        if let Some(co) = out {
+            assert_eq!(co.qs.len(), h * c * dk, "qs shape");
+            let g = std::mem::take(&mut ws.g);
+            let mut o_stack = std::mem::take(&mut ws.o_stack);
+            o_stack.clear();
+            o_stack.resize(h * c * dv, 0.0);
+            // inter-chunk first (the reference accumulation order):
+            // one batched Q_c S_cat GEMM, λ·cumulative-decay folded
+            let lam = co.lambda;
             self.batched_level_read(
-                rd.qs,
+                ws,
+                co.qs,
                 &mut |head, i, lvl| lam(head, i, lvl) * g[head * c + i],
-                rd.out,
+                &mut o_stack,
             );
-            self.g = g;
+            // intra-chunk: P = tril(Q K^T) ⊙ decay-ratio ⊙ Λ, then P V
+            ws.qk.clear();
+            ws.qk.resize(h * c * c, 0.0);
+            tensor::gemm_nt_batch_into(h, c, dk, c, co.qs, ks, &mut ws.qk, false);
+            for head in 0..h {
+                let gh = &g[head * c..(head + 1) * c];
+                let p_h = &mut ws.qk[head * c * c..(head + 1) * c * c];
+                for i in 0..c {
+                    let row = &mut p_h[i * c..(i + 1) * c];
+                    for (j, pij) in row.iter_mut().enumerate() {
+                        if j > i {
+                            *pij = 0.0;
+                        } else {
+                            *pij *= (gh[i] / gh[j]) * lam(head, i, fenwick::level_of(i, j));
+                        }
+                    }
+                }
+                tensor::gemm_sparse_rows(
+                    c,
+                    c,
+                    dv,
+                    p_h,
+                    &vs[head * c * dv..(head + 1) * c * dv],
+                    &mut o_stack[head * c * dv..(head + 1) * c * dv],
+                    true,
+                );
+            }
+            self.scatter_output(&o_stack, co.out);
+            ws.o_stack = o_stack;
+            ws.g = g;
         }
-        self.fill_wscale();
+        self.fill_wscale(ws);
         // the new chunk state, all heads in one batched fused kernel
         let mut s_new = self.fen.take_buffer(h * dk, dv);
-        tensor::gemm_tn_diag_batch_acc(h, c, dk, dv, &self.wscale, ks, vs, &mut s_new.data);
+        tensor::gemm_tn_diag_batch_acc(h, c, dk, dv, &ws.wscale, ks, vs, &mut s_new.data);
         // transition carried states with each head's chunk decay (the
         // chunk sentinel was merged away by the advance above, so only
         // carried buckets remain); elementwise per head-row-range, so a
-        // shared schedule reproduces the old whole-state scale exactly
-        let g = &self.g;
+        // shared schedule reproduces the whole-state scale exactly
+        let g = &ws.g;
         self.fen.apply_transition(|s| {
             for head in 0..h {
                 let cd = g[head * c + c - 1];
@@ -241,10 +364,20 @@ impl PrefillEngine {
     /// (gated Householder chain) transition. Shapes as in
     /// [`PrefillEngine::ingest_chunk_mamba2`]; `alpha` and `beta` are the
     /// chunk's decay gates / delta strengths — each either `C` shared
-    /// across heads or `H·C` head-major per-head. State-only (no read
-    /// seam: GDN reads need the effective-query chain, which serving
-    /// prefill never exercises).
-    pub fn ingest_chunk_gdn(&mut self, ks: &[f32], vs: &[f32], alpha: &[f32], beta: &[f32]) {
+    /// across heads or `H·C` head-major per-head. Pass [`ChunkOutput`]
+    /// to also compute the full per-token outputs: the materialized local
+    /// UT term (intra-chunk) plus the effective-query level read
+    /// (inter-chunk), mirroring `loglinear_gdn::chunkwise` within solver
+    /// tolerance.
+    pub fn ingest_chunk_gdn(
+        &mut self,
+        ws: &mut Workspace,
+        ks: &[f32],
+        vs: &[f32],
+        alpha: &[f32],
+        beta: &[f32],
+        out: Option<ChunkOutput<'_>>,
+    ) {
         assert!(!self.finished, "ingest after finish()");
         let (h, c, dk, dv) = (self.heads, self.chunk, self.dk, self.dv);
         assert!(
@@ -255,19 +388,19 @@ impl PrefillEngine {
         assert_eq!(ks.len(), h * c * dk, "ks shape");
         assert_eq!(vs.len(), h * c * dv, "vs shape");
         self.fen.advance(self.z);
-        self.fill_decays(alpha);
+        self.fill_decays(ws, alpha);
         let per_head_beta = beta.len() == h * c;
         let b_at = |head: usize, j: usize| if per_head_beta { beta[head * c + j] } else { beta[j] };
 
         // UT systems for all heads in one batched K_c K_c^T, then the
         // O(C²) scaling pass per head (each head its own β/g schedules):
         // sys_h = I + StrictTril(diag(β^h) (K K^T) ⊙ (g^h_i/g^h_j))
-        self.sys.clear();
-        self.sys.resize(h * c * c, 0.0);
-        tensor::gemm_nt_batch_into(h, c, dk, c, ks, ks, &mut self.sys, false);
+        ws.sys.clear();
+        ws.sys.resize(h * c * c, 0.0);
+        tensor::gemm_nt_batch_into(h, c, dk, c, ks, ks, &mut ws.sys, false);
         for head in 0..h {
-            let gh = &self.g[head * c..(head + 1) * c];
-            let sys_h = &mut self.sys[head * c * c..(head + 1) * c * c];
+            let gh = &ws.g[head * c..(head + 1) * c];
+            let sys_h = &mut ws.sys[head * c * c..(head + 1) * c * c];
             for i in 0..c {
                 let (bi, gi) = (b_at(head, i), gh[i]);
                 let row = &mut sys_h[i * c..(i + 1) * c];
@@ -281,19 +414,109 @@ impl PrefillEngine {
             }
         }
 
+        if let Some(co) = out {
+            assert_eq!(co.qs.len(), h * c * dk, "qs shape");
+            let g = std::mem::take(&mut ws.g);
+            let mut o_stack = std::mem::take(&mut ws.o_stack);
+            o_stack.clear();
+            o_stack.resize(h * c * dv, 0.0);
+            let lam = co.lambda;
+            // ---- intra-chunk first (the reference accumulation order):
+            // P = (tril(Q K^T) ⊙ Gratio) sys^{-1} diag(β) ⊙ Λ, then P V
+            let mut qk = std::mem::take(&mut ws.qk);
+            qk.clear();
+            qk.resize(h * c * c, 0.0);
+            tensor::gemm_nt_batch_into(h, c, dk, c, co.qs, ks, &mut qk, false);
+            for head in 0..h {
+                let gh = &g[head * c..(head + 1) * c];
+                let sys_h = &ws.sys[head * c * c..(head + 1) * c * c];
+                let p_h = &mut qk[head * c * c..(head + 1) * c * c];
+                for i in 0..c {
+                    let row = &mut p_h[i * c..(i + 1) * c];
+                    for (j, pij) in row.iter_mut().enumerate() {
+                        if j > i {
+                            *pij = 0.0;
+                        } else {
+                            *pij *= gh[i] / gh[j];
+                        }
+                    }
+                }
+                // right-solve X · sys = P in place (sys unit lower
+                // triangular, so X = P sys^{-1}; columns descending keep
+                // X lower triangular)
+                for i in 0..c {
+                    let row = &mut p_h[i * c..(i + 1) * c];
+                    for j in (0..c).rev() {
+                        let mut acc = row[j];
+                        for l in j + 1..c {
+                            let slj = sys_h[l * c + j];
+                            if slj != 0.0 {
+                                acc -= row[l] * slj;
+                            }
+                        }
+                        row[j] = acc;
+                    }
+                }
+                // fold diag(β) (column scale) and the local Λ mask
+                for i in 0..c {
+                    let row = &mut p_h[i * c..(i + 1) * c];
+                    for j in 0..=i {
+                        row[j] *= b_at(head, j) * lam(head, i, fenwick::level_of(i, j));
+                    }
+                }
+                tensor::gemm_sparse_rows(
+                    c,
+                    c,
+                    dv,
+                    p_h,
+                    &vs[head * c * dv..(head + 1) * c * dv],
+                    &mut o_stack[head * c * dv..(head + 1) * c * dv],
+                    true,
+                );
+            }
+            ws.qk = qk;
+            // ---- inter-chunk: effective queries
+            // q̂_i = g_i · Φ_0 ··· Φ_i q_i, then one batched Q̂ S_cat read
+            let mut qe = std::mem::take(&mut ws.qe);
+            qe.clear();
+            qe.resize(h * c * dk, 0.0);
+            for head in 0..h {
+                for i in 0..c {
+                    let row = &mut qe[(head * c + i) * dk..(head * c + i + 1) * dk];
+                    row.copy_from_slice(&co.qs[(head * c + i) * dk..(head * c + i + 1) * dk]);
+                    for j in (0..=i).rev() {
+                        apply_householder_vec(
+                            row,
+                            &ks[(head * c + j) * dk..(head * c + j + 1) * dk],
+                            b_at(head, j),
+                        );
+                    }
+                    let gi = g[head * c + i];
+                    for x in row.iter_mut() {
+                        *x *= gi;
+                    }
+                }
+            }
+            self.batched_level_read(ws, &qe, &mut |head, i, lvl| lam(head, i, lvl), &mut o_stack);
+            ws.qe = qe;
+            self.scatter_output(&o_stack, co.out);
+            ws.o_stack = o_stack;
+            ws.g = g;
+        }
+
         // Ŵ_h = sys_h^{-1} diag(β^h) V_h by in-place forward substitution
-        self.what.clear();
-        self.what.reserve(h * c * dv);
+        ws.what.clear();
+        ws.what.reserve(h * c * dv);
         for head in 0..h {
             for i in 0..c {
                 let v_row = &vs[(head * c + i) * dv..(head * c + i + 1) * dv];
                 let bi = b_at(head, i);
-                self.what.extend(v_row.iter().map(|&x| bi * x));
+                ws.what.extend(v_row.iter().map(|&x| bi * x));
             }
         }
         for head in 0..h {
-            let sys_h = &self.sys[head * c * c..(head + 1) * c * c];
-            let wh = &mut self.what[head * c * dv..(head + 1) * c * dv];
+            let sys_h = &ws.sys[head * c * c..(head + 1) * c * c];
+            let wh = &mut ws.what[head * c * dv..(head + 1) * c * dv];
             for i in 1..c {
                 let (done, rest) = wh.split_at_mut(i * dv);
                 let row_i = &mut rest[..dv];
@@ -307,19 +530,19 @@ impl PrefillEngine {
         }
 
         // S_new_h = K_h^T diag(g^h_C/g^h_s) Ŵ_h, all heads batched
-        self.fill_wscale();
+        self.fill_wscale(ws);
         let mut s_new = self.fen.take_buffer(h * dk, dv);
-        tensor::gemm_tn_diag_batch_acc(h, c, dk, dv, &self.wscale, ks, &self.what, &mut s_new.data);
+        tensor::gemm_tn_diag_batch_acc(h, c, dk, dv, &ws.wscale, ks, &ws.what, &mut s_new.data);
 
         // materialize Φ_h = g^h_C · (I − β^h_{C-1} k k^T) ··· (I − β^h_0 k k^T)
         // per head, then advance every carried state with one batched
         // (d_k, d_k) GEMM per level (block-diagonal analogue of
         // ChunkFenwick::apply_matrix_transition, swapping through the
         // stacked scratch)
-        self.phi.clear();
-        self.phi.resize(h * dk * dk, 0.0);
+        ws.phi.clear();
+        ws.phi.resize(h * dk * dk, 0.0);
         for head in 0..h {
-            let phi_h = &mut self.phi[head * dk * dk..(head + 1) * dk * dk];
+            let phi_h = &mut ws.phi[head * dk * dk..(head + 1) * dk * dk];
             for i in 0..dk {
                 phi_h[i * dk + i] = 1.0;
             }
@@ -327,16 +550,17 @@ impl PrefillEngine {
                 let k_row = &ks[(head * c + j) * dk..(head * c + j + 1) * dk];
                 apply_householder_slice(phi_h, dk, k_row, b_at(head, j));
             }
-            let g_ch = self.g[head * c + c - 1];
+            let g_ch = ws.g[head * c + c - 1];
             for x in phi_h.iter_mut() {
                 *x *= g_ch;
             }
         }
-        let phi = &self.phi;
-        let scratch = &mut self.scratch;
+        let phi = &ws.phi;
+        ws.scratch.resize(h * dk * dv, 0.0);
+        let scratch = &mut ws.scratch;
         self.fen.apply_transition(|s| {
-            tensor::gemm_batch_into(h, dk, dk, dv, phi, &s.data, &mut scratch.data, false);
-            std::mem::swap(&mut s.data, &mut scratch.data);
+            tensor::gemm_batch_into(h, dk, dk, dv, phi, &s.data, scratch, false);
+            std::mem::swap(&mut s.data, scratch);
         });
 
         self.fen.set_level0(s_new);
@@ -345,11 +569,12 @@ impl PrefillEngine {
 
     /// Head-batched inter-chunk level read: concat each head's live level
     /// states into `S_cat^h (d_k, L·d_v)`, one batched `Q^h @ S_cat^h`
-    /// GEMM, then the weight fold. `weight(head, row, token_level)` must
-    /// already include any intra-chunk decay factor (per-head, for
-    /// per-head gate schedules).
+    /// GEMM, then the weight fold into the stacked `(H, C, d_v)` output.
+    /// `weight(head, row, token_level)` must already include any
+    /// intra-chunk decay factor (per-head, for per-head gate schedules).
     fn batched_level_read(
-        &mut self,
+        &self,
+        ws: &mut Workspace,
         qs: &[f32],
         weight: &mut dyn FnMut(usize, usize, usize) -> f32,
         out: &mut [f32],
@@ -357,32 +582,32 @@ impl PrefillEngine {
         let (h, c, dk, dv) = (self.heads, self.chunk, self.dk, self.dv);
         assert_eq!(qs.len(), h * c * dk, "qs shape");
         assert_eq!(out.len(), h * c * dv, "out shape");
-        self.active_ids.clear();
-        self.active_ids.extend(self.fen.active().map(|(m, _)| m));
-        let nl = self.active_ids.len();
+        ws.active_ids.clear();
+        ws.active_ids.extend(self.fen.active().map(|(m, _)| m));
+        let nl = ws.active_ids.len();
         if nl == 0 {
             return;
         }
         let ncat = nl * dv;
-        self.cat.clear();
-        self.cat.resize(h * dk * ncat, 0.0);
+        ws.cat.clear();
+        ws.cat.resize(h * dk * ncat, 0.0);
         for (li, (_, s)) in self.fen.active().enumerate() {
             for head in 0..h {
                 for r in 0..dk {
                     let dst = head * dk * ncat + r * ncat + li * dv;
-                    self.cat[dst..dst + dv].copy_from_slice(s.row(head * dk + r));
+                    ws.cat[dst..dst + dv].copy_from_slice(s.row(head * dk + r));
                 }
             }
         }
-        self.read_buf.clear();
-        self.read_buf.resize(h * c * ncat, 0.0);
-        tensor::gemm_batch_into(h, c, dk, ncat, qs, &self.cat, &mut self.read_buf, false);
+        ws.read_buf.clear();
+        ws.read_buf.resize(h * c * ncat, 0.0);
+        tensor::gemm_batch_into(h, c, dk, ncat, qs, &ws.cat, &mut ws.read_buf, false);
         let lc = self.chunk.trailing_zeros() as usize;
         for row in 0..h * c {
             let (head, i) = (row / c, row % c); // head + chunk-local position
-            let prow = &self.read_buf[row * ncat..(row + 1) * ncat];
+            let prow = &ws.read_buf[row * ncat..(row + 1) * ncat];
             let orow = &mut out[row * dv..(row + 1) * dv];
-            for (li, &lvl) in self.active_ids.iter().enumerate() {
+            for (li, &lvl) in ws.active_ids.iter().enumerate() {
                 let w = weight(head, i, lc + lvl);
                 if w == 0.0 {
                     continue;
@@ -423,6 +648,7 @@ impl PrefillEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Mat;
     use crate::util::Rng;
 
     /// Per-head single-head oracle: drive a ChunkFenwick with the same
@@ -481,11 +707,12 @@ mod tests {
         let vs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dv, 1.0, &mut rng)).collect();
         let alpha: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.8, 1.0)).collect();
 
+        let mut ws = Workspace::new();
         let mut eng = PrefillEngine::new(heads, dk, dv, c);
         for z in 0..t_len / c {
             let kc = stack_chunk(&ks, z, c);
             let vc = stack_chunk(&vs, z, c);
-            eng.ingest_chunk_mamba2(&kc, &vc, &alpha[z * c..(z + 1) * c], None);
+            eng.ingest_chunk_mamba2(&mut ws, &kc, &vc, &alpha[z * c..(z + 1) * c], None);
         }
         eng.finish();
         assert_eq!(eng.tokens(), t_len);
@@ -497,17 +724,20 @@ mod tests {
                 oracle.active().map(|(m, s)| (lc + m, &s.data[..])).collect();
             let got = eng.export_head(h);
             assert_eq!(got.len(), want.len(), "head {h}: live level count");
-            for ((gl, gs), (wl, ws)) in got.iter().zip(want.iter()) {
+            for ((gl, gs), (wl, ws_)) in got.iter().zip(want.iter()) {
                 assert_eq!(gl, wl, "head {h}: level mismatch");
-                assert_eq!(*gs, *ws, "head {h} level {gl}: state not bit-exact");
+                assert_eq!(*gs, *ws_, "head {h} level {gl}: state not bit-exact");
             }
         }
     }
 
+    /// The per-token output mode against the single-head chunkwise
+    /// reference: for shared gates, every chunk's `(C, H·d_v)` output
+    /// block must reproduce `loglinear_mamba2::chunkwise` per head —
+    /// BIT-EXACT, since both paths run the same GEMM kernels in the same
+    /// accumulation order (inter-chunk read, then masked intra-chunk).
     #[test]
-    fn level_read_matches_per_head_chunk_fenwick_read() {
-        // The head-batched Q_c S_cat read against the single-head
-        // ChunkFenwick read, same λ·decay weights: bit-exact.
+    fn mamba2_chunk_outputs_match_chunkwise_reference_bit_exact() {
         let mut rng = Rng::new(0x9E2);
         let (heads, dk, dv, c, t_len) = (2usize, 6usize, 5usize, 8usize, 56usize); // 7 chunks
         let ks: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dk, 1.0, &mut rng)).collect();
@@ -516,12 +746,11 @@ mod tests {
         let alpha: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.8, 1.0)).collect();
         let nl = crate::fenwick::num_levels(t_len);
         let lambda = Mat::rand_uniform(t_len, nl, 0.05, 1.0, &mut rng);
-        let lc = c.trailing_zeros() as usize;
         let nchunks = t_len / c;
 
-        // engine with reads on every chunk
+        let mut ws = Workspace::new();
         let mut eng = PrefillEngine::new(heads, dk, dv, c);
-        let mut got = vec![vec![0.0f32; heads * c * dv]; nchunks];
+        let mut got = vec![vec![0.0f32; c * heads * dv]; nchunks];
         for z in 0..nchunks {
             let kc = stack_chunk(&ks, z, c);
             let vc = stack_chunk(&vs, z, c);
@@ -529,57 +758,100 @@ mod tests {
             let start = z * c;
             let lam = |_h: usize, i: usize, lvl: usize| lambda.at(start + i, lvl);
             eng.ingest_chunk_mamba2(
+                &mut ws,
                 &kc,
                 &vc,
                 &alpha[start..start + c],
-                Some(LevelRead { qs: &qc, lambda: &lam, out: &mut got[z][..] }),
+                Some(ChunkOutput { qs: &qc, lambda: &lam, out: &mut got[z][..] }),
             );
         }
 
-        // per-head oracle: ChunkFenwick::read_levels_into per chunk
         for h in 0..heads {
-            let mut oracle = ChunkFenwick::new();
-            let mut wscale = vec![0.0f32; c];
+            let want = crate::attention::loglinear_mamba2::chunkwise(
+                &qs[h], &ks[h], &vs[h], &alpha, &lambda, c,
+            );
             for z in 0..nchunks {
-                let start = z * c;
-                oracle.advance(z);
-                let mut g = vec![0.0f32; c];
-                let mut acc = 1.0f64;
                 for i in 0..c {
-                    acc *= alpha[start + i] as f64;
-                    g[i] = acc as f32;
+                    let grow = &got[z][(i * heads + h) * dv..(i * heads + h + 1) * dv];
+                    assert_eq!(
+                        grow,
+                        want.row(z * c + i),
+                        "head {h} chunk {z} token {i}: output not bit-exact"
+                    );
                 }
-                let mut want = Mat::zeros(c, dv);
-                oracle.read_levels_into(qs[h].rows_data(start, start + c), c, &mut want, 0, |i, m| {
-                    lambda.at(start + i, lc + m) * g[i]
-                });
-                let got_h = &got[z][h * c * dv..(h + 1) * c * dv];
-                assert_eq!(got_h, &want.data[..], "head {h} chunk {z}: read not bit-exact");
-                // mirror the engine's write/transition to keep states in step
-                let chunk_decay = g[c - 1];
-                for j in 0..c {
-                    wscale[j] = chunk_decay / g[j];
-                }
-                let mut w = oracle.take_buffer(dk, dv);
-                crate::tensor::gemm_tn_diag_acc(
-                    c,
-                    dk,
-                    dv,
-                    &wscale,
-                    ks[h].rows_data(start, start + c),
-                    vs[h].rows_data(start, start + c),
-                    &mut w.data,
-                );
-                oracle.apply_transition(|s| s.scale_inplace(chunk_decay));
-                oracle.set_level0(w);
             }
         }
     }
 
-    /// Per-head gate schedules (ROADMAP per-head gate-tables item): an
-    /// H-head engine fed `H·C` head-major gates must match, per head, a
-    /// 1-head engine run with that head's schedule — bit-exact, for both
-    /// variants — and distinct schedules must actually change the states.
+    /// GDN per-token outputs against the single-head chunkwise reference:
+    /// same algorithm, different (in-place) solver — within tolerance.
+    #[test]
+    fn gdn_chunk_outputs_match_chunkwise_reference() {
+        let mut rng = Rng::new(0x9E5);
+        let (heads, dk, dv, c, t_len) = (2usize, 6usize, 5usize, 4usize, 24usize); // 6 chunks
+        let ks: Vec<Mat> = (0..heads)
+            .map(|_| {
+                let mut k = Mat::randn(t_len, dk, 1.0, &mut rng);
+                for i in 0..t_len {
+                    let n = crate::tensor::ops::l2_norm(k.row(i)).max(1e-6);
+                    for x in k.row_mut(i) {
+                        *x /= n;
+                    }
+                }
+                k
+            })
+            .collect();
+        let vs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dv, 1.0, &mut rng)).collect();
+        let qs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dk, 1.0, &mut rng)).collect();
+        let alpha: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.8, 1.0)).collect();
+        let beta: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.1, 0.9)).collect();
+        let nl = crate::fenwick::num_levels(t_len);
+        let lambda = Mat::rand_uniform(t_len, nl, 0.05, 1.0, &mut rng);
+        let nchunks = t_len / c;
+
+        let mut ws = Workspace::new();
+        let mut eng = PrefillEngine::new(heads, dk, dv, c);
+        let mut got = vec![vec![0.0f32; c * heads * dv]; nchunks];
+        for z in 0..nchunks {
+            let kc = stack_chunk(&ks, z, c);
+            let vc = stack_chunk(&vs, z, c);
+            let qc = stack_chunk(&qs, z, c);
+            let start = z * c;
+            let lam = |_h: usize, i: usize, lvl: usize| lambda.at(start + i, lvl);
+            eng.ingest_chunk_gdn(
+                &mut ws,
+                &kc,
+                &vc,
+                &alpha[start..start + c],
+                &beta[start..start + c],
+                Some(ChunkOutput { qs: &qc, lambda: &lam, out: &mut got[z][..] }),
+            );
+        }
+
+        for h in 0..heads {
+            let want = crate::attention::loglinear_gdn::chunkwise(
+                &qs[h], &ks[h], &vs[h], &alpha, &beta, &lambda, c,
+            );
+            for z in 0..nchunks {
+                for i in 0..c {
+                    let grow = &got[z][(i * heads + h) * dv..(i * heads + h + 1) * dv];
+                    for j in 0..dv {
+                        let w = want.at(z * c + i, j);
+                        assert!(
+                            (grow[j] - w).abs() < 2e-3 + 2e-3 * w.abs(),
+                            "head {h} chunk {z} token {i} j={j}: {} vs {w}",
+                            grow[j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-head gate schedules: an H-head engine fed `H·C` head-major
+    /// gates must match, per head, a 1-head engine run with that head's
+    /// schedule — bit-exact, for both variants — and distinct schedules
+    /// must actually change the states.
     #[test]
     fn per_head_gates_match_single_head_engines_and_differ_across_heads() {
         let mut rng = Rng::new(0x9E3);
@@ -605,6 +877,7 @@ mod tests {
             .map(|_| (0..t_len).map(|_| rng.range_f32(0.1, 1.0)).collect())
             .collect();
 
+        let mut ws = Workspace::new();
         for gdn in [false, true] {
             let mut eng = PrefillEngine::new(heads, dk, dv, c);
             for z in 0..t_len / c {
@@ -618,9 +891,9 @@ mod tests {
                     bc.extend_from_slice(&beta[h][s..e]);
                 }
                 if gdn {
-                    eng.ingest_chunk_gdn(&kc, &vc, &ac, &bc);
+                    eng.ingest_chunk_gdn(&mut ws, &kc, &vc, &ac, &bc, None);
                 } else {
-                    eng.ingest_chunk_mamba2(&kc, &vc, &ac, None);
+                    eng.ingest_chunk_mamba2(&mut ws, &kc, &vc, &ac, None);
                 }
             }
             eng.finish();
@@ -631,13 +904,16 @@ mod tests {
                     let (s, e) = (z * c, (z + 1) * c);
                     if gdn {
                         solo.ingest_chunk_gdn(
+                            &mut ws,
                             ks[h].rows_data(s, e),
                             vs[h].rows_data(s, e),
                             &alpha[h][s..e],
                             &beta[h][s..e],
+                            None,
                         );
                     } else {
                         solo.ingest_chunk_mamba2(
+                            &mut ws,
                             ks[h].rows_data(s, e),
                             vs[h].rows_data(s, e),
                             &alpha[h][s..e],
@@ -649,9 +925,9 @@ mod tests {
                 let got = eng.export_head(h);
                 let want = solo.export_head(0);
                 assert_eq!(got.len(), want.len(), "gdn={gdn} head {h}: live level count");
-                for ((gl, gs), (wl, ws)) in got.iter().zip(want.iter()) {
+                for ((gl, gs), (wl, ws_)) in got.iter().zip(want.iter()) {
                     assert_eq!(gl, wl, "gdn={gdn} head {h}: level mismatch");
-                    assert_eq!(*gs, *ws, "gdn={gdn} head {h} level {gl}: not bit-exact");
+                    assert_eq!(*gs, *ws_, "gdn={gdn} head {h} level {gl}: not bit-exact");
                 }
             }
             // distinct schedules must actually distinguish the heads: run
@@ -662,13 +938,16 @@ mod tests {
                 let (s, e) = (z * c, (z + 1) * c);
                 if gdn {
                     cross.ingest_chunk_gdn(
+                        &mut ws,
                         ks[1].rows_data(s, e),
                         vs[1].rows_data(s, e),
                         &alpha[0][s..e],
                         &beta[0][s..e],
+                        None,
                     );
                 } else {
                     cross.ingest_chunk_mamba2(
+                        &mut ws,
                         ks[1].rows_data(s, e),
                         vs[1].rows_data(s, e),
                         &alpha[0][s..e],
@@ -698,6 +977,7 @@ mod tests {
         let vs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dv, 1.0, &mut rng)).collect();
         let alpha: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.8, 1.0)).collect();
         let beta: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.1, 1.0)).collect();
+        let mut ws = Workspace::new();
         for gdn in [false, true] {
             let mut shared = PrefillEngine::new(heads, dk, dv, c);
             let mut repl = PrefillEngine::new(heads, dk, dv, c);
@@ -708,11 +988,11 @@ mod tests {
                 let ac: Vec<f32> = (0..heads).flat_map(|_| alpha[s..e].to_vec()).collect();
                 let bc: Vec<f32> = (0..heads).flat_map(|_| beta[s..e].to_vec()).collect();
                 if gdn {
-                    shared.ingest_chunk_gdn(&kc, &vc, &alpha[s..e], &beta[s..e]);
-                    repl.ingest_chunk_gdn(&kc, &vc, &ac, &bc);
+                    shared.ingest_chunk_gdn(&mut ws, &kc, &vc, &alpha[s..e], &beta[s..e], None);
+                    repl.ingest_chunk_gdn(&mut ws, &kc, &vc, &ac, &bc, None);
                 } else {
-                    shared.ingest_chunk_mamba2(&kc, &vc, &alpha[s..e], None);
-                    repl.ingest_chunk_mamba2(&kc, &vc, &ac, None);
+                    shared.ingest_chunk_mamba2(&mut ws, &kc, &vc, &alpha[s..e], None);
+                    repl.ingest_chunk_mamba2(&mut ws, &kc, &vc, &ac, None);
                 }
             }
             shared.finish();
@@ -722,6 +1002,98 @@ mod tests {
                     shared.export_head(h),
                     repl.export_head(h),
                     "gdn={gdn} head {h}: shared vs replicated gates diverged"
+                );
+            }
+        }
+    }
+
+    /// The shared-workspace contract: a workspace carried dirty across
+    /// engines and variants must produce bit-identical states and outputs
+    /// to fresh per-call workspaces. Two engines interleave chunks over
+    /// ONE workspace (the serving pattern: many sequences, one scratch
+    /// pool) against a run with a fresh workspace per ingest.
+    #[test]
+    fn shared_workspace_is_bit_identical_to_fresh_workspaces() {
+        let mut rng = Rng::new(0x9E6);
+        let (heads, dk, dv, c, t_len) = (2usize, 5usize, 4usize, 4usize, 16usize);
+        let mk = |rng: &mut Rng| {
+            let mut k = Mat::randn(t_len, dk, 1.0, rng);
+            for i in 0..t_len {
+                let n = crate::tensor::ops::l2_norm(k.row(i)).max(1e-6);
+                for x in k.row_mut(i) {
+                    *x /= n;
+                }
+            }
+            k
+        };
+        let ks: Vec<Mat> = (0..2 * heads).map(|_| mk(&mut rng)).collect();
+        let vs: Vec<Mat> = (0..2 * heads).map(|_| Mat::randn(t_len, dv, 1.0, &mut rng)).collect();
+        let qs: Vec<Mat> = (0..2 * heads).map(|_| Mat::randn(t_len, dk, 1.0, &mut rng)).collect();
+        let alpha: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.8, 1.0)).collect();
+        let beta: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.1, 0.9)).collect();
+        let nl = crate::fenwick::num_levels(t_len);
+        let lambda = Mat::rand_uniform(t_len, nl, 0.05, 1.0, &mut rng);
+
+        // run sequence `which` (0: mamba2 heads 0..H, 1: gdn heads H..2H)
+        // over `ws`, returning outputs; `engines` indexed by `which`
+        let run_chunk = |eng: &mut PrefillEngine,
+                         ws: &mut Workspace,
+                         which: usize,
+                         z: usize,
+                         out: &mut [f32]| {
+            let heads_mats = |ms: &[Mat]| {
+                let mut v = Vec::new();
+                for m in &ms[which * heads..(which + 1) * heads] {
+                    v.extend_from_slice(m.rows_data(z * c, (z + 1) * c));
+                }
+                v
+            };
+            let (kc, vc, qc) = (heads_mats(&ks), heads_mats(&vs), heads_mats(&qs));
+            let start = z * c;
+            let lam = |_h: usize, i: usize, lvl: usize| lambda.at(start + i, lvl);
+            let co = ChunkOutput { qs: &qc, lambda: &lam, out };
+            if which == 1 {
+                eng.ingest_chunk_gdn(
+                    ws,
+                    &kc,
+                    &vc,
+                    &alpha[start..start + c],
+                    &beta[start..start + c],
+                    Some(co),
+                );
+            } else {
+                eng.ingest_chunk_mamba2(ws, &kc, &vc, &alpha[start..start + c], Some(co));
+            }
+        };
+
+        // interleaved over one shared workspace
+        let mut shared_ws = Workspace::new();
+        let mut engs = [PrefillEngine::new(heads, dk, dv, c), PrefillEngine::new(heads, dk, dv, c)];
+        let mut got = vec![vec![vec![0.0f32; c * heads * dv]; t_len / c]; 2];
+        for z in 0..t_len / c {
+            for which in [0usize, 1] {
+                run_chunk(&mut engs[which], &mut shared_ws, which, z, &mut got[which][z]);
+            }
+        }
+        // fresh workspace per ingest
+        let mut engs2 =
+            [PrefillEngine::new(heads, dk, dv, c), PrefillEngine::new(heads, dk, dv, c)];
+        let mut want = vec![vec![vec![0.0f32; c * heads * dv]; t_len / c]; 2];
+        for z in 0..t_len / c {
+            for which in [0usize, 1] {
+                let mut fresh = Workspace::new();
+                run_chunk(&mut engs2[which], &mut fresh, which, z, &mut want[which][z]);
+            }
+        }
+        assert_eq!(got, want, "shared workspace changed results");
+        for which in [0usize, 1] {
+            engs[which].finish();
+            engs2[which].finish();
+            for h in 0..heads {
+                assert_eq!(
+                    engs[which].export_head(h),
+                    engs2[which].export_head(h),
+                    "which={which} head {h}: states diverged under shared workspace"
                 );
             }
         }

@@ -8,17 +8,25 @@
 //! [`crate::attention::loglinear_gdn`] already implement the O(T log T)
 //! matmul-rich form. The pieces here close that gap:
 //!
-//! - [`engine::PrefillEngine`] — a **head-batched, state-only** chunkwise
-//!   ingester: H heads' chunk-granularity Fenwick level states are stored
-//!   stacked, so every per-chunk product (`K_c^T diag(w) V_c` state
-//!   writes, `Φ_chunk S` carried-state transitions, the optional
-//!   `Q_c S_cat` level read) runs as **one batched GEMM dispatch over all
-//!   heads** ([`crate::tensor::batch`]) instead of H separate kernel
-//!   launches — the multi-head widening the ROADMAP asked for, applied
-//!   where chunks make the products wide. Serving prefill skips attention
-//!   outputs entirely (only the final prompt token's logits matter, and
-//!   the decode step produces those), so a chunk costs one state write +
-//!   one transition pass instead of C recurrent steps.
+//! - [`engine::PrefillEngine`] — a **head-batched** chunkwise ingester:
+//!   H heads' chunk-granularity Fenwick level states are stored stacked,
+//!   so every per-chunk product (`K_c^T diag(w) V_c` state writes,
+//!   `Φ_chunk S` carried-state transitions, the `Q_c S_cat` level read)
+//!   runs as **one batched GEMM dispatch over all heads**
+//!   ([`crate::tensor::batch`]). Two modes: *state-only* (a generation
+//!   prompt needs no logits until its final token — a chunk costs one
+//!   state write + one transition pass) and *per-token output*
+//!   ([`engine::ChunkOutput`]): the full chunkwise form — intra-chunk
+//!   masked attention **plus** the inter-chunk level read — emitting a
+//!   `(C, H·d_v)` output block per chunk. Per-chunk scratch lives in one
+//!   [`engine::Workspace`] **shared across all sequences** (ROADMAP
+//!   item) instead of per-engine buffers.
+//! - [`stack::LayerStack`] — the **sequential L-layer stack**: layer ℓ's
+//!   per-token chunk outputs are projected
+//!   ([`stack::LayerProjection`]) into layer ℓ+1's q/k/v (keys
+//!   re-normalized per token) before ℓ+1 ingests the same chunk — the
+//!   paper's actual model shape, and the producer of the last-layer
+//!   hidden outputs that prompt scoring turns into per-token log-probs.
 //! - [`bridge`] — the **state-export bridge**: converts a chunk-granularity
 //!   hierarchy ([`crate::attention::loglinear::ChunkFenwick`] or one
 //!   [`engine::PrefillEngine`] head) at an arbitrary chunk-aligned
@@ -29,19 +37,21 @@
 //!   `{lc + m : chunk-level m live}` — the same layout, one relabel.
 //!
 //! The serving integration lives in
-//! [`crate::coordinator::backend::PooledBackend`] (per-sequence,
-//! per-layer engines, lazy export on the first decode step) and the
-//! engine loop of [`crate::coordinator::server::DecodeServer`] (prompts
-//! advance one chunk per step, interleaved with running decode rows).
-//! Gates come from the per-layer [`crate::state::GateTable`]s — `C`
-//! shared or `H·C` head-major per-head schedules per chunk — so prefill
-//! and decode read the same position- (and head-)dependent α/β/λ
-//! schedules, and a chunkwise-prefilled sequence's decode trajectory is
-//! bit-identical to a token-stepped one (the serving-trace differential
-//! harness in `coordinator::trace` pins this).
+//! [`crate::coordinator::backend::PooledBackend`] (one `LayerStack` per
+//! prefilling sequence, lazy export on the first decode step, the
+//! `score_*` prompt-scoring path) and the engine loop of
+//! [`crate::coordinator::server::DecodeServer`] (prompts advance chunks
+//! under a per-step flop budget, interleaved with running decode rows).
+//! Gates come from the per-layer [`crate::state::GateTable`]s — shared or
+//! per-head schedules — so prefill and decode read the same
+//! position-dependent α/β/λ, and a chunkwise-prefilled sequence's decode
+//! trajectory is bit-identical to the per-sequence oracle replay (the
+//! serving-trace differential harness in `coordinator::trace` pins this).
 
 pub mod bridge;
 pub mod engine;
+pub mod stack;
 
 pub use bridge::{export_chunk_fenwick, export_prefill_head};
-pub use engine::{LevelRead, PrefillEngine};
+pub use engine::{ChunkOutput, PrefillEngine, Workspace};
+pub use stack::{normalize_keys, LayerProjection, LayerStack};

@@ -1,0 +1,552 @@
+//! Sequential L-layer chunkwise prefill: the paper's evaluated models
+//! (log-linear Mamba-2 / Gated DeltaNet LMs) are *stacks* — each layer's
+//! per-token outputs are the next layer's inputs — and this module is
+//! that stack for the serving prefill path.
+//!
+//! [`LayerStack`] threads one prompt chunk through `L`
+//! [`PrefillEngine`]s **layer by layer**: layer 0 ingests the chunk's
+//! token embeddings (q/k/v gathered by the caller), producing its
+//! per-token chunk output `O_c^{(0)}: (C, H·d_v)` via the engine's
+//! [`ChunkOutput`] mode (intra-chunk masked attention + inter-chunk level
+//! read — the full chunkwise form); layer `ℓ+1`'s q/k/v are then
+//! *projections* of `O_c^{(ℓ)}` ([`LayerProjection`]: one
+//! `(H·d, H·d_v)` matrix per input stream, applied as a single GEMM over
+//! the chunk, keys L2-normalized per (token, head) exactly like the
+//! decode path's [`normalize_keys`]), and layer `ℓ+1` ingests the same
+//! chunk positions. The last layer's `O_c` is the stack's hidden output —
+//! the logits operand for prompt scoring
+//! (`coordinator::backend::PooledBackend::score_chunk`).
+//!
+//! Both serving consumers and the differential oracle drive this *same*
+//! code with the *same* gathered inputs, so a chunkwise-prefilled
+//! sequence's decode trajectory is bit-identical between the pooled
+//! serving path and the per-sequence replay — the contract
+//! `coordinator::trace` enforces. Equivalence to a naive per-token,
+//! per-layer recurrent reference (each layer an independent
+//! `loglinear_{mamba2,gdn}::recurrent` sweep over the previous layer's
+//! outputs) holds within the usual chunkwise tolerance and is asserted
+//! below for L = 2, 3 and both transition families.
+//!
+//! Gate schedules come from one [`GateTable`] per layer — the same
+//! tables the decode step reads — and all scratch lives in the shared
+//! [`Workspace`] (one per server, not per sequence).
+
+use crate::state::{level_weight, GateTable, TransitionKind};
+use crate::tensor::{self, Mat};
+use crate::util::Rng;
+
+use super::engine::{ChunkOutput, PrefillEngine, Workspace};
+
+/// Input projections for one sequential layer `ℓ ≥ 1`: the previous
+/// layer's per-token output `o ∈ R^{H·d_v}` maps to this layer's stacked
+/// per-head queries/keys/values as `q = W_q o`, `k = W_k o` (then
+/// per-head L2 normalization), `v = W_v o`. Row block `h·d..(h+1)·d` of
+/// each matrix is head `h`'s projection, so one `(C, H·d_v) @ W^T` GEMM
+/// produces every head's inputs for a whole chunk (and one
+/// `(n, H·d_v) @ W^T` GEMM does the same for a decode batch).
+#[derive(Debug, Clone)]
+pub struct LayerProjection {
+    /// query projection, `(H·d_k, H·d_v)`
+    pub wq: Mat,
+    /// key projection, `(H·d_k, H·d_v)` (outputs are L2-normalized per
+    /// head before use — [`normalize_keys`])
+    pub wk: Mat,
+    /// value projection, `(H·d_v, H·d_v)`
+    pub wv: Mat,
+}
+
+impl LayerProjection {
+    /// Random projection with `1/sqrt(H·d_v)`-scaled entries (the same
+    /// convention as the backend's embedding draws).
+    pub fn random(heads: usize, dk: usize, dv: usize, rng: &mut Rng) -> LayerProjection {
+        let fan_in = heads * dv;
+        let s = 1.0 / (fan_in as f32).sqrt();
+        LayerProjection {
+            wq: Mat::randn(heads * dk, fan_in, s, rng),
+            wk: Mat::randn(heads * dk, fan_in, s, rng),
+            wv: Mat::randn(heads * dv, fan_in, s, rng),
+        }
+    }
+}
+
+/// L2-normalize every contiguous `d_k`-slice of a packed key buffer
+/// (`(rows, H·d_k)` token-major or `(H, C, d_k)` head-major — both are a
+/// sequence of per-(token, head) key vectors). THE one key-normalization
+/// op for sequential layers: prefill (chunk projections) and decode
+/// (batch projections) call it on the same per-key slices, so the two
+/// paths produce bit-identical keys.
+pub fn normalize_keys(buf: &mut [f32], dk: usize) {
+    debug_assert_eq!(buf.len() % dk, 0);
+    for k in buf.chunks_mut(dk) {
+        let n = crate::tensor::ops::l2_norm(k).max(1e-6);
+        for x in k.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+/// Restack a token-major `(C, H·d)` projection output into the engine's
+/// head-major `(H, C, d)` layout.
+fn restack_head_major(src: &[f32], heads: usize, c: usize, d: usize, dst: &mut Vec<f32>) {
+    debug_assert_eq!(src.len(), c * heads * d);
+    dst.clear();
+    dst.resize(heads * c * d, 0.0);
+    for head in 0..heads {
+        for i in 0..c {
+            dst[(head * c + i) * d..(head * c + i + 1) * d]
+                .copy_from_slice(&src[(i * heads + head) * d..(i * heads + head + 1) * d]);
+        }
+    }
+}
+
+/// Sequential stack of per-layer chunkwise prefill engines (see module
+/// docs). Holds only level states and the last chunk's final-layer
+/// output; all scratch is the caller's shared [`Workspace`].
+#[derive(Debug)]
+pub struct LayerStack {
+    heads: usize,
+    dk: usize,
+    dv: usize,
+    chunk: usize,
+    engines: Vec<PrefillEngine>,
+    /// the last ingested chunk's final-layer outputs, `(C, H·d_v)`
+    o_last: Vec<f32>,
+}
+
+impl LayerStack {
+    pub fn new(layers: usize, heads: usize, dk: usize, dv: usize, chunk: usize) -> LayerStack {
+        assert!(layers >= 1, "at least one layer");
+        LayerStack {
+            heads,
+            dk,
+            dv,
+            chunk,
+            engines: (0..layers).map(|_| PrefillEngine::new(heads, dk, dv, chunk)).collect(),
+            o_last: Vec::new(),
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.chunk
+    }
+
+    /// Tokens ingested so far (every layer is at the same position).
+    pub fn tokens(&self) -> usize {
+        self.engines[0].tokens()
+    }
+
+    /// Chunks ingested so far.
+    pub fn chunks(&self) -> usize {
+        self.engines[0].chunks()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.engines[0].is_finished()
+    }
+
+    /// One layer's engine (export plumbing:
+    /// [`crate::prefill::bridge::export_prefill_head`]).
+    pub fn engine(&self, layer: usize) -> &PrefillEngine {
+        &self.engines[layer]
+    }
+
+    /// The last ingested chunk's final-layer per-token outputs,
+    /// `(C, H·d_v)` row-major — empty before the first chunk, and empty
+    /// after a state-only ingest (`want_output = false`).
+    pub fn last_output(&self) -> &[f32] {
+        &self.o_last
+    }
+
+    /// Resident state bytes across all layers (scratch excluded — it
+    /// lives in the shared workspace).
+    pub fn state_bytes(&self) -> usize {
+        self.engines.iter().map(|e| e.state_bytes()).sum::<usize>() + self.o_last.len() * 4
+    }
+
+    /// Ingest one chunk through every layer sequentially. `qs0/ks0/vs0`
+    /// are layer 0's stacked `(H, C, d)` head-major inputs (token
+    /// embeddings; keys already normalized), `pos` the chunk's first
+    /// absolute position (must equal [`LayerStack::tokens`]), `projs` the
+    /// `L−1` inter-layer projections, `gates` one α/β/λ table per layer.
+    ///
+    /// Intermediate layers always compute per-token outputs (the next
+    /// layer's inputs). `want_output` controls the **last** layer:
+    /// scoring needs its `(C, H·d_v)` per-token outputs (returned), a
+    /// generation prompt does not — pass `false` and the last layer runs
+    /// state-only (for L = 1 that is exactly the cheap state-only ingest
+    /// of the pre-stack engine), returning an empty slice.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ingest_chunk(
+        &mut self,
+        ws: &mut Workspace,
+        kind: TransitionKind,
+        projs: &[LayerProjection],
+        gates: &[GateTable],
+        pos: usize,
+        qs0: &[f32],
+        ks0: &[f32],
+        vs0: &[f32],
+        want_output: bool,
+    ) -> &[f32] {
+        let (h, c, dk, dv) = (self.heads, self.chunk, self.dk, self.dv);
+        let layers = self.engines.len();
+        assert_eq!(projs.len(), layers - 1, "one projection per layer transition");
+        assert_eq!(gates.len(), layers, "one gate table per layer");
+        assert_eq!(qs0.len(), h * c * dk, "qs0 shape");
+        assert_eq!(ks0.len(), h * c * dk, "ks0 shape");
+        assert_eq!(vs0.len(), h * c * dv, "vs0 shape");
+        assert_eq!(pos, self.tokens(), "chunk position desync");
+
+        // loaner buffers from the shared workspace (taken out so the
+        // engine can borrow the workspace mutably during ingest)
+        let mut q_in = std::mem::take(&mut ws.stack_q);
+        let mut k_in = std::mem::take(&mut ws.stack_k);
+        let mut v_in = std::mem::take(&mut ws.stack_v);
+        let mut proj = std::mem::take(&mut ws.stack_proj);
+        let mut alpha = std::mem::take(&mut ws.stack_alpha);
+        let mut beta = std::mem::take(&mut ws.stack_beta);
+        let mut o_prev = std::mem::take(&mut ws.stack_o_a);
+        let mut o_cur = std::mem::take(&mut ws.stack_o_b);
+
+        for l in 0..layers {
+            if l == 0 {
+                q_in.clear();
+                q_in.extend_from_slice(qs0);
+                k_in.clear();
+                k_in.extend_from_slice(ks0);
+                v_in.clear();
+                v_in.extend_from_slice(vs0);
+            } else {
+                let p = &projs[l - 1];
+                // q = O_prev W_q^T, one GEMM for the whole chunk
+                proj.clear();
+                proj.resize(c * h * dk, 0.0);
+                tensor::gemm_nt_into(c, h * dv, h * dk, &o_prev, &p.wq.data, &mut proj, false);
+                restack_head_major(&proj, h, c, dk, &mut q_in);
+                // k = normalize(O_prev W_k^T) — normalized token-major,
+                // the same per-key slices the decode path normalizes
+                proj.clear();
+                proj.resize(c * h * dk, 0.0);
+                tensor::gemm_nt_into(c, h * dv, h * dk, &o_prev, &p.wk.data, &mut proj, false);
+                normalize_keys(&mut proj, dk);
+                restack_head_major(&proj, h, c, dk, &mut k_in);
+                // v = O_prev W_v^T
+                proj.clear();
+                proj.resize(c * h * dv, 0.0);
+                tensor::gemm_nt_into(c, h * dv, h * dv, &o_prev, &p.wv.data, &mut proj, false);
+                restack_head_major(&proj, h, c, dv, &mut v_in);
+            }
+            // per-(head, token) gates from this layer's table — the same
+            // source the decode step reads
+            alpha.clear();
+            beta.clear();
+            for head in 0..h {
+                for j in 0..c {
+                    alpha.push(gates[l].alpha_h(head, pos + j));
+                    beta.push(gates[l].beta_h(head, pos + j));
+                }
+            }
+            o_cur.clear();
+            let gt = &gates[l];
+            let lam =
+                move |head: usize, i: usize, lvl: usize| level_weight(gt.lambda_h(head, pos + i), lvl);
+            // the last layer's outputs are only needed for scoring;
+            // state-only ingest otherwise (no intra-chunk attention, no
+            // level read — the cheap generation-prefill path)
+            let co = if l + 1 < layers || want_output {
+                o_cur.resize(c * h * dv, 0.0);
+                Some(ChunkOutput { qs: &q_in, lambda: &lam, out: &mut o_cur })
+            } else {
+                None
+            };
+            match kind {
+                TransitionKind::Mamba2 => {
+                    self.engines[l].ingest_chunk_mamba2(ws, &k_in, &v_in, &alpha, co)
+                }
+                TransitionKind::Gdn => {
+                    self.engines[l].ingest_chunk_gdn(ws, &k_in, &v_in, &alpha, &beta, co)
+                }
+            }
+            std::mem::swap(&mut o_prev, &mut o_cur);
+        }
+        self.o_last.clear();
+        self.o_last.extend_from_slice(&o_prev);
+
+        ws.stack_q = q_in;
+        ws.stack_k = k_in;
+        ws.stack_v = v_in;
+        ws.stack_proj = proj;
+        ws.stack_alpha = alpha;
+        ws.stack_beta = beta;
+        ws.stack_o_a = o_prev;
+        ws.stack_o_b = o_cur;
+        &self.o_last
+    }
+
+    /// Seal every layer at the chunk boundary (the export precondition).
+    pub fn finish(&mut self) {
+        for eng in self.engines.iter_mut() {
+            eng.finish();
+        }
+    }
+
+    /// One (layer, head)'s live levels, ready for
+    /// `{Pooled,}FenwickState::import_levels`. Requires
+    /// [`LayerStack::finish`].
+    pub fn export_head(&self, layer: usize, head: usize) -> Vec<(usize, &[f32])> {
+        self.engines[layer].export_head(head)
+    }
+}
+
+/// Test-only support shared across the crate's test suites (the stack
+/// tests here and `coordinator::backend`'s): ONE naive per-token,
+/// per-layer recurrent reference implementation, so the reference the
+/// sequential stack is validated against cannot fork between modules.
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::attention::{loglinear_gdn, loglinear_mamba2};
+
+    /// Naive sequential-stack reference over explicit per-head layer-0
+    /// inputs: each layer is an independent
+    /// `loglinear_{mamba2,gdn}::recurrent` sweep per head over the
+    /// previous layer's per-token outputs (projected + key-normalized
+    /// exactly like the real stack), completely bypassing the chunkwise
+    /// engines, the workspace, and the batched passes. Returns the final
+    /// layer's `(T, H·d_v)` outputs; `gates.len()` is the layer count.
+    pub(crate) fn naive_sequential_outputs(
+        kind: TransitionKind,
+        qs0: &[Mat],
+        ks0: &[Mat],
+        vs0: &[Mat],
+        projs: &[LayerProjection],
+        gates: &[GateTable],
+    ) -> Mat {
+        let heads = qs0.len();
+        let t = qs0[0].rows;
+        let (dk, dv) = (qs0[0].cols, vs0[0].cols);
+        let layers = gates.len();
+        assert_eq!(projs.len(), layers - 1, "one projection per layer transition");
+        let nl = crate::fenwick::num_levels(t);
+        let mut o_prev = Mat::zeros(t, heads * dv);
+        for l in 0..layers {
+            let (qs, ks, vs): (Vec<Mat>, Vec<Mat>, Vec<Mat>) = if l == 0 {
+                (qs0.to_vec(), ks0.to_vec(), vs0.to_vec())
+            } else {
+                let p = &projs[l - 1];
+                let qall = o_prev.matmul_nt(&p.wq); // (T, H·dk)
+                let mut kall = o_prev.matmul_nt(&p.wk);
+                normalize_keys(&mut kall.data, dk);
+                let vall = o_prev.matmul_nt(&p.wv); // (T, H·dv)
+                let slice = |m: &Mat, d: usize, head: usize| {
+                    Mat::from_fn(t, d, |i, j| m.at(i, head * d + j))
+                };
+                (
+                    (0..heads).map(|head| slice(&qall, dk, head)).collect(),
+                    (0..heads).map(|head| slice(&kall, dk, head)).collect(),
+                    (0..heads).map(|head| slice(&vall, dv, head)).collect(),
+                )
+            };
+            let mut o_next = Mat::zeros(t, heads * dv);
+            for head in 0..heads {
+                let alpha: Vec<f32> = (0..t).map(|i| gates[l].alpha_h(head, i)).collect();
+                let beta: Vec<f32> = (0..t).map(|i| gates[l].beta_h(head, i)).collect();
+                let lam = Mat::from_fn(t, nl, |i, lvl| {
+                    level_weight(gates[l].lambda_h(head, i), lvl)
+                });
+                let o_h = match kind {
+                    TransitionKind::Mamba2 => {
+                        loglinear_mamba2::recurrent(&qs[head], &ks[head], &vs[head], &alpha, &lam)
+                    }
+                    TransitionKind::Gdn => loglinear_gdn::recurrent(
+                        &qs[head], &ks[head], &vs[head], &alpha, &beta, &lam,
+                    ),
+                };
+                for i in 0..t {
+                    o_next.row_mut(i)[head * dv..(head + 1) * dv].copy_from_slice(o_h.row(i));
+                }
+            }
+            o_prev = o_next;
+        }
+        o_prev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build layer-0 per-head inputs (keys normalized) and random
+    /// per-layer gate tables / projections.
+    struct Fixture {
+        heads: usize,
+        dk: usize,
+        dv: usize,
+        t_len: usize,
+        qs: Vec<Mat>,
+        ks: Vec<Mat>,
+        vs: Vec<Mat>,
+        gates: Vec<GateTable>,
+        projs: Vec<LayerProjection>,
+    }
+
+    fn fixture(layers: usize, heads: usize, dk: usize, dv: usize, t_len: usize, seed: u64) -> Fixture {
+        let mut rng = Rng::new(seed);
+        let mut ks = Vec::new();
+        let mut qs = Vec::new();
+        let mut vs = Vec::new();
+        for _ in 0..heads {
+            qs.push(Mat::randn(t_len, dk, 1.0 / (dk as f32).sqrt(), &mut rng));
+            let mut k = Mat::randn(t_len, dk, 1.0, &mut rng);
+            for i in 0..t_len {
+                normalize_keys(k.row_mut(i), dk);
+            }
+            ks.push(k);
+            vs.push(Mat::randn(t_len, dv, 1.0, &mut rng));
+        }
+        let gates = (0..layers)
+            .map(|_| {
+                let alpha: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.85, 1.0)).collect();
+                let beta: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.1, 0.9)).collect();
+                let lambda = Mat::rand_uniform(t_len, 6, 0.05, 1.0, &mut rng);
+                GateTable::per_token(alpha, lambda).with_beta(beta)
+            })
+            .collect();
+        let projs =
+            (1..layers).map(|_| LayerProjection::random(heads, dk, dv, &mut rng)).collect();
+        Fixture { heads, dk, dv, t_len, qs, ks, vs, gates, projs }
+    }
+
+    /// Naive per-token, per-layer recurrent reference over the fixture's
+    /// layer-0 inputs (the ONE shared implementation in
+    /// [`test_support::naive_sequential_outputs`]).
+    fn naive_stack_reference(fx: &Fixture, kind: TransitionKind, layers: usize) -> Mat {
+        test_support::naive_sequential_outputs(
+            kind,
+            &fx.qs,
+            &fx.ks,
+            &fx.vs,
+            &fx.projs,
+            &fx.gates[..layers],
+        )
+    }
+
+    /// Run the chunkwise stack over every full chunk, returning the
+    /// concatenated `(T, H·d_v)` outputs.
+    fn run_stack(fx: &Fixture, kind: TransitionKind, layers: usize, c: usize) -> Mat {
+        let (h, dk, dv, t) = (fx.heads, fx.dk, fx.dv, fx.t_len);
+        assert_eq!(t % c, 0);
+        let mut ws = Workspace::new();
+        let mut stack = LayerStack::new(layers, h, dk, dv, c);
+        let mut out = Mat::zeros(t, h * dv);
+        for z in 0..t / c {
+            let (s, e) = (z * c, (z + 1) * c);
+            let mut q0 = Vec::new();
+            let mut k0 = Vec::new();
+            let mut v0 = Vec::new();
+            for head in 0..h {
+                q0.extend_from_slice(fx.qs[head].rows_data(s, e));
+                k0.extend_from_slice(fx.ks[head].rows_data(s, e));
+                v0.extend_from_slice(fx.vs[head].rows_data(s, e));
+            }
+            let o = stack.ingest_chunk(&mut ws, kind, &fx.projs, &fx.gates, s, &q0, &k0, &v0, true);
+            out.rows_data_mut(s, e).copy_from_slice(o);
+        }
+        out
+    }
+
+    /// THE sequential-stack equivalence: L = 2, 3 chunkwise stacks match
+    /// the naive per-token per-layer recurrent reference within chunkwise
+    /// tolerance, for both transition families.
+    #[test]
+    fn sequential_stack_matches_naive_per_layer_recurrent_reference() {
+        for &(layers, c, seed) in &[(2usize, 4usize, 0x57Au64), (3, 8, 0x57B)] {
+            let fx = fixture(layers, 2, 6, 5, 24.max(c * 3), seed);
+            for kind in [TransitionKind::Mamba2, TransitionKind::Gdn] {
+                let want = naive_stack_reference(&fx, kind, layers);
+                let got = run_stack(&fx, kind, layers, c);
+                for i in 0..fx.t_len {
+                    for j in 0..fx.heads * fx.dv {
+                        let (g, w) = (got.at(i, j), want.at(i, j));
+                        assert!(
+                            (g - w).abs() < 5e-3 + 1e-2 * w.abs(),
+                            "L={layers} {kind:?} t={i} j={j}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// A 1-layer stack is exactly the bare engine's ChunkOutput mode
+    /// (bit-exact), and sharing one workspace across two stacks changes
+    /// nothing — the serving pattern (many sequences, one scratch pool).
+    #[test]
+    fn one_layer_stack_equals_bare_engine_and_workspace_sharing_is_inert() {
+        let fx = fixture(1, 2, 6, 5, 16, 0x57C);
+        let (h, dk, dv, c, t) = (fx.heads, fx.dk, fx.dv, 4usize, fx.t_len);
+        for kind in [TransitionKind::Mamba2, TransitionKind::Gdn] {
+            // two stacks interleaved over one shared workspace
+            let mut ws = Workspace::new();
+            let mut a = LayerStack::new(1, h, dk, dv, c);
+            let mut b = LayerStack::new(1, h, dk, dv, c);
+            let mut out_a = Mat::zeros(t, h * dv);
+            let mut eng = PrefillEngine::new(h, dk, dv, c);
+            let mut eng_ws = Workspace::new();
+            for z in 0..t / c {
+                let (s, e) = (z * c, (z + 1) * c);
+                let mut q0 = Vec::new();
+                let mut k0 = Vec::new();
+                let mut v0 = Vec::new();
+                for head in 0..h {
+                    q0.extend_from_slice(fx.qs[head].rows_data(s, e));
+                    k0.extend_from_slice(fx.ks[head].rows_data(s, e));
+                    v0.extend_from_slice(fx.vs[head].rows_data(s, e));
+                }
+                let o = a.ingest_chunk(&mut ws, kind, &[], &fx.gates, s, &q0, &k0, &v0, true);
+                out_a.rows_data_mut(s, e).copy_from_slice(o);
+                // the second stack sees the dirtied workspace
+                let _ = b.ingest_chunk(&mut ws, kind, &[], &fx.gates, s, &q0, &k0, &v0, true);
+
+                // bare engine with the same ChunkOutput request
+                let gt = &fx.gates[0];
+                let mut alpha = Vec::new();
+                let mut beta = Vec::new();
+                for head in 0..h {
+                    for j in 0..c {
+                        alpha.push(gt.alpha_h(head, s + j));
+                        beta.push(gt.beta_h(head, s + j));
+                    }
+                }
+                let lam = |head: usize, i: usize, lvl: usize| {
+                    level_weight(gt.lambda_h(head, s + i), lvl)
+                };
+                let mut out = vec![0.0f32; c * h * dv];
+                let co = ChunkOutput { qs: &q0, lambda: &lam, out: &mut out };
+                match kind {
+                    TransitionKind::Mamba2 => {
+                        eng.ingest_chunk_mamba2(&mut eng_ws, &k0, &v0, &alpha, Some(co))
+                    }
+                    TransitionKind::Gdn => {
+                        eng.ingest_chunk_gdn(&mut eng_ws, &k0, &v0, &alpha, &beta, Some(co))
+                    }
+                }
+                assert_eq!(out_a.rows_data(s, e), &out[..], "{kind:?} chunk {z}: stack != engine");
+            }
+            // interleaving over one workspace left both stacks identical
+            a.finish();
+            b.finish();
+            for head in 0..h {
+                assert_eq!(
+                    a.export_head(0, head),
+                    b.export_head(0, head),
+                    "{kind:?} head {head}: workspace sharing changed states"
+                );
+            }
+        }
+    }
+}

@@ -70,6 +70,21 @@ pub enum Transition<'a> {
     GatedHouseholder { alpha: f32, beta: f32, k: &'a [f32] },
 }
 
+/// Which per-token state-transition *family* a serving model applies —
+/// the model-level tag from which the per-step [`Transition`] values are
+/// built (α/β drawn from a [`GateTable`], `k` from the token's key).
+/// Shared by the chunkwise prefill stack ([`crate::prefill`]) and the
+/// pooled decode backend (`coordinator::backend` re-exports this type),
+/// so both serving paths dispatch on one tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransitionKind {
+    /// Mamba-2 scalar decay: `S ← α S`, sentinel write scale 1.
+    Mamba2,
+    /// Gated DeltaNet: `S ← α (I − β k k^T) S`, sentinel write scale β
+    /// (keys are L2-normalized so the Householder stays contractive).
+    Gdn,
+}
+
 /// O(log T) Fenwick decode state for one sequence (one head).
 #[derive(Debug, Clone)]
 pub struct FenwickState {

@@ -39,7 +39,12 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     cargo bench --bench fig4_throughput -- --quick
     cargo bench --bench table1_complexity -- --quick
     cargo bench --bench decode_batched -- --quick
+    # prefill_throughput carries the chunkwise-speedup AND the
+    # score_tokens_per_s headlines (equivalence asserted before timing)
     cargo bench --bench prefill_throughput -- --quick
+    # the serving-engine latency/coordinator benches (ported onto
+    # PooledBackend) at least build and run end to end
+    cargo bench --bench decode_latency -- --quick
 
     echo "== bench history: fold BENCH_*.json into BENCH_HISTORY.json =="
     if command -v python3 >/dev/null; then
