@@ -19,12 +19,21 @@
 //! - the shared-workspace accounting (`workspace_bytes_shared` /
 //!   `workspace_bytes_saved_per_extra_prompt`): scratch one extra
 //!   concurrent prompt no longer allocates now that all engines share
-//!   one `prefill::Workspace`.
+//!   one `prefill::Workspace`;
+//! - the shared-system-prompt serving section: a fleet of requests
+//!   repeating one long system prompt, served cold vs through the
+//!   copy-on-write prefix-state cache — **hit-vs-cold logits asserted
+//!   bit-equal before timing** — emitting
+//!   `prefill_tokens_saved_per_request` and `ttft_speedup_vs_cold`.
 
 use loglinear::bench::{bench, section};
 use loglinear::coordinator::backend::{
     fold_score_logprobs, DecodeBackend, PooledBackend, TransitionKind,
 };
+use loglinear::coordinator::batcher::BatchPolicy;
+use loglinear::coordinator::server::DecodeServer;
+use loglinear::coordinator::GenRequest;
+use std::time::Duration;
 use loglinear::prefill::bridge::export_prefill_head;
 use loglinear::prefill::{LayerProjection, LayerStack, PrefillEngine, Workspace};
 use loglinear::state::pool::StatePool;
@@ -378,6 +387,113 @@ fn main() {
     let score_tps = s_t as f64 / score_chunk_secs;
     let score_speedup = score_token_secs / score_chunk_secs;
 
+    // ---- shared-system-prompt serving: the CoW prefix-state cache ----
+    let (pc_layers, pc_heads, pc_dk, pc_vocab, pc_chunk) = (2usize, 2usize, 32usize, 256usize, 64usize);
+    let sys_len = 1024usize;
+    let n_req = 6usize;
+    let suffix_len = 8usize;
+    let pc_new = 4usize;
+    section(&format!(
+        "shared-system-prompt serving: CoW prefix cache (L={pc_layers}, H={pc_heads}, dk=dv={pc_dk}, C={pc_chunk}, system={sys_len} tokens, {n_req} requests)"
+    ));
+    let mut crng = Rng::new(0xCAC4E);
+    let system: Vec<i32> = (0..sys_len).map(|_| crng.below(pc_vocab) as i32).collect();
+    let prompts: Vec<Vec<i32>> = (0..n_req)
+        .map(|_| {
+            let mut p = system.clone();
+            p.extend((0..suffix_len).map(|_| crng.below(pc_vocab) as i32));
+            p
+        })
+        .collect();
+    let pc_backend = |cache: bool| {
+        let mut b = PooledBackend::with_model_config(
+            pc_vocab, pc_layers, pc_heads, TransitionKind::Mamba2, pc_dk, pc_dk, pc_chunk, 1024, 0xCAFE,
+        );
+        if cache {
+            b.enable_prefix_cache();
+        }
+        b
+    };
+    let pc_policy = || BatchPolicy::new(vec![1, 2, 4], Duration::ZERO);
+    // two waves: the first publishes the shared span's chunk boundaries
+    // into the cache, the second repeats every prompt verbatim (the
+    // serving pattern: many users, one system prompt). Returns the
+    // second wave's (hits, prefill tokens saved) deltas.
+    let serve_waves = |srv: &mut DecodeServer<PooledBackend>| -> (usize, usize) {
+        for (i, p) in prompts.iter().enumerate() {
+            srv.submit(GenRequest { id: i as u64, prompt: p.clone(), max_new: pc_new })
+                .expect("submit wave 1");
+        }
+        srv.run_to_completion().expect("serve wave 1");
+        let (h1, s1) = (srv.stats.prefix_cache_hits, srv.stats.prefill_tokens_saved);
+        for (i, p) in prompts.iter().enumerate() {
+            srv.submit(GenRequest { id: 100 + i as u64, prompt: p.clone(), max_new: pc_new })
+                .expect("submit wave 2");
+        }
+        srv.run_to_completion().expect("serve wave 2");
+        (srv.stats.prefix_cache_hits - h1, srv.stats.prefill_tokens_saved - s1)
+    };
+    // equivalence before timing: the cached serve must reproduce the cold
+    // serve's captured logits bit-for-bit, both waves, every row
+    let mut cold_srv = DecodeServer::with_backend(pc_backend(false), pc_policy());
+    cold_srv.enable_logit_capture();
+    let (cold_hits, _) = serve_waves(&mut cold_srv);
+    assert_eq!(cold_hits, 0, "cache disabled: no hits expected");
+    let mut hit_srv = DecodeServer::with_backend(pc_backend(true), pc_policy());
+    hit_srv.enable_logit_capture();
+    let (w2_hits, w2_saved) = serve_waves(&mut hit_srv);
+    assert!(w2_hits >= n_req, "verbatim repeat wave must hit the cache (got {w2_hits} hits)");
+    assert_eq!(w2_saved, n_req * sys_len, "each repeat must skip the whole shared span");
+    let mut want = cold_srv.take_captured_logits();
+    let mut got = hit_srv.take_captured_logits();
+    want.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    got.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    assert_eq!(want.len(), got.len(), "cached serve dropped or added logit rows");
+    for (w, g) in want.iter().zip(got.iter()) {
+        assert_eq!((w.0, w.1), (g.0, g.1));
+        assert!(w.2 == g.2, "id={} pos={}: cached serve logits diverged", w.0, w.1);
+    }
+    drop(want);
+    drop(got);
+    drop(cold_srv);
+    drop(hit_srv);
+    let saved_per_request = w2_saved as f64 / n_req as f64;
+
+    // TTFT: one system-prompt request at max_new = 1, cold prefill vs a
+    // warm full-prefix hit. The cache stays warm across iterations — a
+    // full hit adopts the cached boundary without re-inserting, so every
+    // timed pass skips the shared span's prefill entirely.
+    let mut next_id = 1000u64;
+    let mut cold_t = DecodeServer::with_backend(pc_backend(false), pc_policy());
+    let r = bench("ttft/cold prefill", 0.3, || {
+        next_id += 1;
+        cold_t
+            .submit(GenRequest { id: next_id, prompt: prompts[0].clone(), max_new: 1 })
+            .expect("submit cold ttft");
+        std::hint::black_box(cold_t.run_to_completion().expect("cold ttft serve"));
+    });
+    let ttft_cold = r.secs.mean;
+    let mut hit_t = DecodeServer::with_backend(pc_backend(true), pc_policy());
+    hit_t
+        .submit(GenRequest { id: 1, prompt: prompts[0].clone(), max_new: 1 })
+        .expect("submit warmup");
+    hit_t.run_to_completion().expect("cache warmup serve");
+    let r = bench("ttft/prefix-cache hit", 0.3, || {
+        next_id += 1;
+        hit_t
+            .submit(GenRequest { id: next_id, prompt: prompts[0].clone(), max_new: 1 })
+            .expect("submit hit ttft");
+        std::hint::black_box(hit_t.run_to_completion().expect("hit ttft serve"));
+    });
+    let ttft_hit = r.secs.mean;
+    assert!(hit_t.stats.prefix_cache_hits >= 1, "timed hit pass never hit the cache");
+    let ttft_speedup = ttft_cold / ttft_hit;
+    println!(
+        "  prefill_tokens_saved_per_request: {saved_per_request:.0}   ttft: {:.3} ms cold vs {:.3} ms hit ({ttft_speedup:.2}x)",
+        ttft_cold * 1e3,
+        ttft_hit * 1e3
+    );
+
     // ---- shared-workspace accounting ----
     let ws_bytes = ws.bytes();
     section("shared prefill workspace");
@@ -478,6 +594,19 @@ fn main() {
         .set("score_tokens_per_s", score_tps)
         .set("score_speedup_vs_token_by_token", score_speedup)
         .set("score_prompt_tokens", s_t)
+        .set("prefill_tokens_saved_per_request", saved_per_request)
+        .set("ttft_speedup_vs_cold", ttft_speedup)
+        .set(
+            "prefix_cache",
+            Json::obj()
+                .set("shared_prefix_tokens", sys_len)
+                .set("requests_per_wave", n_req)
+                .set("prefix_cache_hits", w2_hits)
+                .set("prefill_tokens_saved_per_request", saved_per_request)
+                .set("ttft_cold_secs", ttft_cold)
+                .set("ttft_hit_secs", ttft_hit)
+                .set("ttft_speedup_vs_cold", ttft_speedup),
+        )
         .set("workspace_bytes_shared", ws_bytes as f64)
         .set("workspace_bytes_saved_per_extra_prompt", ws_bytes as f64)
         .set("points", Json::Arr(points))

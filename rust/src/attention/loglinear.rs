@@ -195,6 +195,26 @@ impl ChunkFenwick {
         self.level0 = Some(s);
     }
 
+    /// Install a bucket state directly at chunk level `m >= 1` — the
+    /// boundary-seeding inverse of [`ChunkFenwick::active`], used to
+    /// resume a chunkwise sweep from states exported at an earlier
+    /// boundary (prefix-cache hits). The caller is responsible for
+    /// Fenwick alignment against the chunk index it will resume at (the
+    /// prefill engine's seeded constructor validates it).
+    pub fn install_level(&mut self, m: usize, s: Mat) {
+        assert!(m >= 1, "level 0 is the chunk sentinel; use set_level0");
+        if self.dk == 0 {
+            self.dk = s.rows;
+            self.dv = s.cols;
+        }
+        assert_eq!((s.rows, s.cols), (self.dk, self.dv), "state shape");
+        if self.levels.len() < m {
+            self.levels.resize(m, None);
+        }
+        assert!(self.levels[m - 1].is_none(), "level {m} already live");
+        self.levels[m - 1] = Some(s);
+    }
+
     /// Clear all states for a new sequence, keeping the recycled buffers
     /// and workspaces (zero-alloc reuse across sequences).
     pub fn reset(&mut self) {

@@ -11,7 +11,9 @@
 //! The chunkwise form drives the shared [`ChunkFenwick`] engine in its
 //! matmul-rich mode: the per-chunk UT system comes from one `K_c K_c^T`
 //! GEMM, all `O(log T/C)` level reads happen in a single
-//! `Q̂_c @ S_cat` GEMM over the effective queries, the chunk state write
+//! `Q̂_c @ S_cat` GEMM over the effective queries (themselves UT-derived
+//! from the intra-chunk solve — `q̂_i = G_i q_i − Σ_{j≤i} P_ij G_j k_j`,
+//! one GEMM per chunk instead of a per-row Householder sweep), the chunk state write
 //! is one fused `K_c^T diag(w) Ŵ` kernel, and the carried states are
 //! advanced with a *materialized* chunk transition
 //! `Φ_chunk = G_C · Φ_{C-1}···Φ_0` applied as one `(d_k,d_k)` GEMM per
@@ -22,7 +24,7 @@
 use crate::fenwick;
 use crate::tensor::{self, ops, outer_acc, Mat};
 
-use super::deltanet::{apply_householder, apply_householder_vec, attn_matrix};
+use super::deltanet::{apply_householder, attn_matrix};
 use super::loglinear::{local_lambda_mask, parallel_from_a, ChunkFenwick};
 
 /// Token-granularity Fenwick recurrence (decode form).
@@ -160,6 +162,52 @@ fn local_p_from_sys(
     Mat::from_fn(len, len, |i, j| beta[start + j] * y.at(j, i))
 }
 
+/// Effective queries for one chunk via the UT transform: the per-row
+/// gated Householder chain `q̂_i = G_i · Φ_start ⋯ Φ_i q_i` — an
+/// O(C²·d_k) *scalar* rank-1 sweep — collapses against the **unmasked**
+/// local `P = (tril(QK^T) ⊙ Gratio)(I + StrictTril(M))^{-1} diag(β)` to
+///
+/// `q̂_i = G_i q_i − Σ_{j≤i} P_ij G_j k_j`
+///
+/// (P's `diag(β)` column fold carries each reflection's `β_j`; the
+/// Gratio similarity turns the ungated UT coefficients into `P_ij G_j /
+/// G_i`, and the leading `G_i` cancels it). One `(len,len)·(len,d_k)`
+/// GEMM per chunk, sharing the triangular solve the intra-chunk term
+/// already pays for. `kb` and `qe` are caller workspaces with ≥ `len`
+/// rows of width `d_k`; rows `0..len` of `qe` receive `Q̂`.
+fn effective_queries_from_p(
+    q: &Mat,
+    k: &Mat,
+    g: &[f32],
+    p: &Mat,
+    start: usize,
+    len: usize,
+    kb: &mut Mat,
+    qe: &mut Mat,
+) {
+    let dk = k.cols;
+    debug_assert_eq!(p.rows * p.cols, len * len);
+    for i in 0..len {
+        let gi = g[i];
+        for (x, &qv) in qe.row_mut(i).iter_mut().zip(q.row(start + i)) {
+            *x = gi * qv;
+        }
+        let w = -g[i];
+        for (x, &kv) in kb.row_mut(i).iter_mut().zip(k.row(start + i)) {
+            *x = w * kv;
+        }
+    }
+    tensor::gemm_sparse_rows(
+        len,
+        len,
+        dk,
+        &p.data[..len * len],
+        &kb.data[..len * dk],
+        &mut qe.data[..len * dk],
+        true,
+    );
+}
+
 /// `P` and local decays for one chunk (the bespoke intra-chunk stage).
 fn local_p_matrix(
     q: &Mat,
@@ -193,6 +241,7 @@ pub fn chunkwise(
     // reusable per-chunk workspaces
     let cmax = c.min(t_len.max(1));
     let mut qe = Mat::zeros(cmax, dk); // effective queries Q̂_c
+    let mut kb = Mat::zeros(cmax, dk); // −G_j-scaled key rows for the Q̂ GEMM
     let mut phi = Mat::zeros(dk, dk); // materialized chunk transition
     let mut wscale = vec![0.0f32; cmax];
     let mut z = 0usize;
@@ -206,8 +255,11 @@ pub fn chunkwise(
         let sys = chunk_ut_system(k, beta, &g, start, len);
 
         // ---- intra-chunk: (P_local ⊙ Λ_local) V_local ----
-        // Λ-mask the materialized P in place, then one masked GEMM.
+        // Λ-mask the materialized P in place, then one masked GEMM. The
+        // inter-chunk effective queries ride on the SAME solve, read off
+        // the unmasked P before the Λ fold.
         let mut p = local_p_from_sys(q, k, beta, &g, &sys, start, len);
+        effective_queries_from_p(q, k, &g, &p, start, len, &mut kb, &mut qe);
         for i in 0..len {
             let row = p.row_mut(i);
             for (j, pij) in row.iter_mut().enumerate() {
@@ -229,18 +281,8 @@ pub fn chunkwise(
         );
 
         // ---- inter-chunk reads, batched ----
-        // Effective queries q̂_t = G_t · Φ_start ··· Φ_t q_t, then all
-        // levels in one Q̂_c @ S_cat GEMM.
-        for i in 0..len {
-            let row = qe.row_mut(i);
-            row.copy_from_slice(q.row(start + i));
-            for j in (0..=i).rev() {
-                apply_householder_vec(row, k.row(start + j), beta[start + j]);
-            }
-            for x in row.iter_mut() {
-                *x *= g[i];
-            }
-        }
+        // Effective queries q̂_t = G_t · Φ_start ··· Φ_t q_t
+        // (UT-transformed above), all levels in one Q̂_c @ S_cat GEMM.
         eng.read_levels_into(qe.rows_data(0, len), len, &mut out, start, |i, m| {
             lambda.at(start + i, lc + m)
         });
@@ -324,6 +366,39 @@ mod tests {
                 2e-3,
                 2e-3,
             );
+        }
+    }
+
+    #[test]
+    fn ut_effective_queries_match_householder_chain() {
+        // The UT-transformed effective queries must agree with the scalar
+        // gated-Householder chain they replaced, within solver tolerance
+        // — across chunk offsets, a non-power-of-two tail length, and the
+        // len == 1 degenerate chunk.
+        use crate::attention::deltanet::apply_householder_vec;
+        let mut rng = Rng::new(6);
+        for &(start, len) in &[(0usize, 8usize), (8, 8), (16, 5), (0, 1)] {
+            let t = 24;
+            let x = AttnInputs::random(t, 6, 6, &mut rng);
+            let g = local_decays(&x.alpha, start, len);
+            let sys = chunk_ut_system(&x.k, &x.beta, &g, start, len);
+            let p = local_p_from_sys(&x.q, &x.k, &x.beta, &g, &sys, start, len);
+            let mut qe = Mat::zeros(len, x.q.cols);
+            let mut kb = Mat::zeros(len, x.q.cols);
+            effective_queries_from_p(&x.q, &x.k, &g, &p, start, len, &mut kb, &mut qe);
+
+            let mut want = Mat::zeros(len, x.q.cols);
+            for i in 0..len {
+                let row = want.row_mut(i);
+                row.copy_from_slice(x.q.row(start + i));
+                for j in (0..=i).rev() {
+                    apply_householder_vec(row, x.k.row(start + j), x.beta[start + j]);
+                }
+                for v in row.iter_mut() {
+                    *v *= g[i];
+                }
+            }
+            assert_close(&qe, &want, 1e-4, 1e-4);
         }
     }
 

@@ -10,6 +10,16 @@
 //! | Gated DeltaNet              | ✓ | ✓ | ✓ | — | — |
 //! | Log-Linear Mamba-2          | ✓ `O(log T)` state | ✓ | ✓ `O(T log T)` (Alg. 1) | ✓ head-batched | ✓ per-token log-probs |
 //! | Log-Linear Gated DeltaNet   | ✓ `O(log T)` state | ✓ | ✓ | ✓ head-batched | ✓ per-token log-probs |
+//! | *serving features* (log-linear rows) | per-token streaming + mid-flight cancel | — | — | CoW prefix-state cache (shared prefixes admitted from cached boundaries) | ✓ rides the same chunk outputs |
+//!
+//! The serving-features row is the production surface over the two
+//! log-linear rows: chunk-boundary hierarchies are snapshotted into a
+//! copy-on-write [`crate::state::PrefixCache`] over the
+//! [`crate::state::pool::StatePool`] slab (repeat prompts skip the
+//! cached span's prefill entirely; LRU eviction returns blocks under
+//! pool pressure), and the decode server streams every sampled token as
+//! it lands and cancels mid-flight requests with immediate block release
+//! (`coordinator::server::DecodeServer::{take_stream_events, cancel}`).
 //!
 //! *Serving prefill* is the head-batched, sequential-L-layer chunkwise
 //! ingester of [`crate::prefill`] (state-only for generation prompts,

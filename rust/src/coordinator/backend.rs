@@ -32,7 +32,13 @@
 //!   consulted by every path. [`DecodeBackend::admit`] reserves
 //!   `layers · heads · blocks_for_steps(max_steps)` pool blocks per
 //!   sequence and returns [`AdmitError::Exhausted`] when the pool can't
-//!   hold another sequence.
+//!   hold another sequence. With
+//!   [`PooledBackend::enable_prefix_cache`], finished prefills publish
+//!   their chunk-boundary level states into a [`PrefixCache`] keyed on
+//!   token-id prefixes; [`DecodeBackend::admit_prompt`] adopts the
+//!   longest cached prefix (shared refcounted blocks, copy-on-write) so
+//!   the server skips re-prefilling those tokens, and LRU eviction hands
+//!   cached blocks back whenever live sequences need them.
 //!
 //! **The differential contract.** Every serving computation has a
 //! per-sequence oracle replay on this type —
@@ -50,8 +56,10 @@ use crate::prefill::bridge::export_prefill_head;
 use crate::prefill::stack::{normalize_keys, LayerProjection, LayerStack};
 use crate::prefill::Workspace;
 use crate::runtime::{ModelHandle, Runtime};
+use crate::state::batched_advance::bucket_feasible;
 use crate::state::pool::StatePool;
 use crate::state::pooled::{blocks_for_steps, BatchedDecoder, PooledFenwickState};
+use crate::state::prefix_cache::{BoundaryStates, PrefixCache};
 use crate::state::{AdvanceJob, BatchedAdvance, FenwickState, GateTable, Transition};
 use crate::tensor::{self, Mat};
 use crate::util::Rng;
@@ -79,8 +87,27 @@ pub trait DecodeBackend {
     /// decode steps; returns the slot to pass to [`DecodeBackend::step`].
     fn admit(&mut self, max_steps: usize) -> Result<SeqSlot, AdmitError>;
 
+    /// Admit a generation sequence with its prompt visible to the
+    /// backend, so backends with a prefix-state cache can reuse state
+    /// computed for earlier prompts sharing a leading token run. Returns
+    /// the slot plus the number of leading prompt tokens the backend's
+    /// cached state already covers — the server must NOT feed those
+    /// tokens again (neither as prefill chunks nor step rows). Default:
+    /// plain [`DecodeBackend::admit`], nothing cached.
+    fn admit_prompt(&mut self, max_steps: usize, prompt: &[i32]) -> Result<(SeqSlot, usize), AdmitError> {
+        let _ = prompt;
+        self.admit(max_steps).map(|slot| (slot, 0))
+    }
+
     /// Release a sequence's resources.
     fn retire(&mut self, slot: SeqSlot);
+
+    /// `(current, peak)` occupancy of the backend's admission-limited
+    /// state store — pool blocks for the pooled backend, `(0, 0)` for
+    /// backends without one. Sampled into `ServerStats` each step.
+    fn pool_occupancy(&self) -> (usize, usize) {
+        (0, 0)
+    }
 
     /// Execute one decode step for `rows` of (slot, token, position) in a
     /// `bucket`-sized batch (`rows.len() <= bucket`; padding, if the
@@ -296,8 +323,10 @@ impl TokenScratch {
 /// One admitted sequence's backend-side state. Decode states are
 /// layer-major, head-minor: index `l · heads + h`.
 enum SeqState {
-    /// generation prompt streaming chunks through the sequential stack
-    Prefilling(LayerStack),
+    /// generation prompt streaming chunks through the sequential stack;
+    /// `tokens` records the chunk-fed prefix so far — the key the
+    /// prefix cache stores the exported boundary under
+    Prefilling { stack: LayerStack, tokens: Vec<i32> },
     /// pool-backed decode states (flipped by the export bridge on the
     /// first decode row)
     Decoding(Vec<PooledFenwickState>),
@@ -358,6 +387,11 @@ pub struct PooledBackend {
     /// chunked-prefill chunk size (power of two; 0 disables)
     prefill_chunk: usize,
     pool: StatePool,
+    /// opt-in cross-request prefix-state cache
+    /// ([`PooledBackend::enable_prefix_cache`]): chunk-boundary level
+    /// states keyed on token-id prefixes, holding refcounts on pool
+    /// blocks so CoW admission can adopt them without copying
+    cache: Option<PrefixCache>,
     slots: Vec<Option<SeqState>>,
     free_slots: Vec<usize>,
     /// blocks reserved per live slot (admission accounting)
@@ -473,6 +507,7 @@ impl PooledBackend {
             gates: vec![gates; layers],
             prefill_chunk,
             pool: StatePool::new(dk * dv, pool_blocks),
+            cache: None,
             slots: Vec::new(),
             free_slots: Vec::new(),
             reserved: Vec::new(),
@@ -513,11 +548,46 @@ impl PooledBackend {
     /// they cannot drift. Only meaningful before traffic runs.
     pub fn set_gates(&mut self, gates: GateTable) {
         self.gates = vec![gates; self.layers];
+        self.invalidate_prefix_cache();
     }
 
     /// Install one layer's gate schedule (per-layer gate tables).
     pub fn set_layer_gates(&mut self, layer: usize, gates: GateTable) {
         self.gates[layer] = gates;
+        self.invalidate_prefix_cache();
+    }
+
+    /// Turn on the cross-request prefix-state cache: later admissions
+    /// whose prompt shares a chunk-aligned leading token run with an
+    /// earlier prompt adopt that prompt's exported boundary states
+    /// (refcounted pool blocks, copy-on-write) instead of recomputing
+    /// the prefill. Cache entries are evicted LRU whenever the pool
+    /// needs blocks for live sequences, so enabling it never shrinks
+    /// effective serving capacity. Requires chunked prefill.
+    pub fn enable_prefix_cache(&mut self) {
+        assert!(self.prefill_chunk > 0, "prefix cache requires chunked prefill");
+        if self.cache.is_none() {
+            self.cache = Some(PrefixCache::new(self.prefill_chunk));
+        }
+    }
+
+    /// Drop every cache entry, releasing its block refcounts back to the
+    /// pool. The cache stays enabled (future prompts repopulate it).
+    pub fn clear_prefix_cache(&mut self) {
+        self.invalidate_prefix_cache();
+    }
+
+    /// The prefix cache, if enabled (inspection: entries/blocks held).
+    pub fn prefix_cache(&self) -> Option<&PrefixCache> {
+        self.cache.as_ref()
+    }
+
+    /// Cached states are keyed purely on token ids — valid only while
+    /// the weights and gate tables are fixed. Gate swaps call this.
+    fn invalidate_prefix_cache(&mut self) {
+        if let Some(c) = self.cache.as_mut() {
+            c.clear(&mut self.pool);
+        }
     }
 
     /// The gate schedule currently in force (layer 0's; see
@@ -537,7 +607,7 @@ impl PooledBackend {
         self.slots
             .iter()
             .flatten()
-            .filter(|s| matches!(s, SeqState::Prefilling(_)))
+            .filter(|s| matches!(s, SeqState::Prefilling { .. }))
             .count()
     }
 
@@ -559,25 +629,51 @@ impl PooledBackend {
             Some(SeqState::Scoring(_)) => bail!("decode step for a scoring slot"),
             _ => {}
         }
-        let Some(SeqState::Prefilling(mut stack)) = self.slots[slot.0].take() else {
+        let Some(SeqState::Prefilling { mut stack, tokens }) = self.slots[slot.0].take() else {
             bail!("step row for a free slot");
         };
         stack.finish();
         let mut seqs = Vec::with_capacity(self.layers * self.heads);
-        for l in 0..self.layers {
+        'export: for l in 0..self.layers {
             for h in 0..self.heads {
-                match export_prefill_head(stack.engine(l), h, &mut self.pool) {
-                    Ok(s) => seqs.push(s),
-                    Err(_) => {
-                        // roll back the states already exported;
-                        // unreachable under admission reservation, so
-                        // surface loudly
-                        for mut s in seqs {
-                            s.release(&mut self.pool);
+                loop {
+                    match export_prefill_head(stack.engine(l), h, &mut self.pool) {
+                        Ok(s) => {
+                            seqs.push(s);
+                            break;
                         }
-                        bail!("state pool exhausted during prefill export (reservation bug?)");
+                        Err(_) => {
+                            // cache-held blocks are the only occupancy
+                            // beyond admission reservations — evict and
+                            // retry before declaring a reservation bug
+                            let evicted = match self.cache.as_mut() {
+                                Some(c) => c.evict_lru(&mut self.pool),
+                                None => false,
+                            };
+                            if !evicted {
+                                break 'export;
+                            }
+                        }
                     }
                 }
+            }
+        }
+        if seqs.len() != self.layers * self.heads {
+            // roll back the states already exported; unreachable under
+            // admission reservation once the cache is drained, so
+            // surface loudly
+            for mut s in seqs {
+                s.release(&mut self.pool);
+            }
+            bail!("state pool exhausted during prefill export (reservation bug?)");
+        }
+        // publish the chunk-boundary states under the fed-token key:
+        // insert only retains block handles (rc +1 each), so the blocks
+        // outlive this sequence's retire and seed later admissions
+        if !tokens.is_empty() {
+            if let Some(cache) = self.cache.as_mut() {
+                let states: BoundaryStates = seqs.iter().map(|s| s.level_blocks()).collect();
+                cache.insert(&tokens, &states, &mut self.pool);
             }
         }
         self.slots[slot.0] = Some(SeqState::Decoding(seqs));
@@ -838,6 +934,15 @@ pub fn fold_score_logprobs(
 
 impl DecodeBackend for PooledBackend {
     fn admit(&mut self, max_steps: usize) -> Result<SeqSlot, AdmitError> {
+        // the prompt-blind form: no prefix to match, nothing cached
+        self.admit_prompt(max_steps, &[]).map(|(slot, _)| slot)
+    }
+
+    fn admit_prompt(
+        &mut self,
+        max_steps: usize,
+        prompt: &[i32],
+    ) -> Result<(SeqSlot, usize), AdmitError> {
         let need = self.layers * self.heads * blocks_for_steps(max_steps.max(1));
         if need > self.pool.capacity() {
             return Err(AdmitError::TooLarge);
@@ -845,6 +950,76 @@ impl DecodeBackend for PooledBackend {
         if self.reserved_total + need > self.pool.capacity() {
             return Err(AdmitError::Exhausted);
         }
+        // consult the prefix cache over the prompt's chunkwise span
+        // [0, pe): the longest chunk-aligned cached prefix seeds this
+        // sequence's state without recomputing it. Adoption only retains
+        // shared blocks (no allocation — it cannot fail), so the
+        // reservation accounting above is untouched: the adopted blocks
+        // are the cache's, not this reservation's, until CoW clones them.
+        let pe = self.prefill_boundary(prompt.len());
+        let hit = match self.cache.as_mut() {
+            Some(cache) if pe > 0 => cache.lookup(&prompt[..pe]),
+            _ => None,
+        };
+        let (state, cached) = match hit {
+            // full-boundary hit: every chunk the server would prefill is
+            // cached — skip the stack entirely and decode off adopted
+            // (shared, CoW-protected) pool blocks
+            Some((m, states)) if m == pe => {
+                let seqs = states
+                    .iter()
+                    .map(|per| {
+                        PooledFenwickState::adopt_levels(&mut self.pool, self.dk, self.dv, pe, per)
+                    })
+                    .collect();
+                (SeqState::Decoding(seqs), m)
+            }
+            // partial hit: seed a prefill stack at the cached boundary
+            // (byte-faithful copies of the cached blocks, so resumed
+            // chunkwise prefill is bit-exact with a cold run) and let the
+            // server feed the remaining chunks
+            Some((m, states)) => {
+                let z = m / self.prefill_chunk;
+                let views: Vec<Vec<(usize, &[f32])>> = states
+                    .iter()
+                    .map(|per| per.iter().map(|&(lvl, id)| (lvl, self.pool.get(id))).collect())
+                    .collect();
+                let stack = LayerStack::from_boundary(
+                    self.layers,
+                    self.heads,
+                    self.dk,
+                    self.dv,
+                    self.prefill_chunk,
+                    z,
+                    &views,
+                );
+                (SeqState::Prefilling { stack, tokens: prompt[..m].to_vec() }, m)
+            }
+            // cold: a fresh sequence starts in prefill mode when the
+            // backend has a chunked-prefill path; with it disabled,
+            // decode states from step 0
+            None if self.prefill_chunk > 0 => (
+                SeqState::Prefilling {
+                    stack: LayerStack::new(
+                        self.layers,
+                        self.heads,
+                        self.dk,
+                        self.dv,
+                        self.prefill_chunk,
+                    ),
+                    tokens: Vec::new(),
+                },
+                0,
+            ),
+            None => (
+                SeqState::Decoding(
+                    (0..self.layers * self.heads)
+                        .map(|_| PooledFenwickState::new(self.dk, self.dv))
+                        .collect(),
+                ),
+                0,
+            ),
+        };
         self.reserved_total += need;
         let idx = match self.free_slots.pop() {
             Some(i) => i,
@@ -854,31 +1029,15 @@ impl DecodeBackend for PooledBackend {
                 self.slots.len() - 1
             }
         };
-        // a fresh sequence starts in prefill mode when the backend has a
-        // chunked-prefill path; with it disabled, decode states from step 0
-        self.slots[idx] = Some(if self.prefill_chunk > 0 {
-            SeqState::Prefilling(LayerStack::new(
-                self.layers,
-                self.heads,
-                self.dk,
-                self.dv,
-                self.prefill_chunk,
-            ))
-        } else {
-            SeqState::Decoding(
-                (0..self.layers * self.heads)
-                    .map(|_| PooledFenwickState::new(self.dk, self.dv))
-                    .collect(),
-            )
-        });
+        self.slots[idx] = Some(state);
         self.reserved[idx] = need;
-        Ok(SeqSlot(idx))
+        Ok((SeqSlot(idx), cached))
     }
 
     fn retire(&mut self, slot: SeqSlot) {
         match self.slots[slot.0].take().expect("retire of free slot") {
             // stack / scoring states live outside the pool
-            SeqState::Prefilling(_) | SeqState::Scoring(_) => {}
+            SeqState::Prefilling { .. } | SeqState::Scoring(_) => {}
             SeqState::Decoding(seqs) => {
                 for mut seq in seqs {
                     seq.release(&mut self.pool);
@@ -888,6 +1047,10 @@ impl DecodeBackend for PooledBackend {
         self.reserved_total -= self.reserved[slot.0];
         self.reserved[slot.0] = 0;
         self.free_slots.push(slot.0);
+    }
+
+    fn pool_occupancy(&self) -> (usize, usize) {
+        (self.pool.in_use(), self.pool.peak())
     }
 
     fn prefill_chunk_size(&self) -> usize {
@@ -904,7 +1067,7 @@ impl DecodeBackend for PooledBackend {
         }
         {
             let state = self.slots[slot.0].as_ref().expect("prefill of free slot");
-            let SeqState::Prefilling(stack) = state else {
+            let SeqState::Prefilling { stack, .. } = state else {
                 bail!("prefill_chunk after decode began");
             };
             if stack.tokens() != pos {
@@ -918,10 +1081,13 @@ impl DecodeBackend for PooledBackend {
         let mut kc = std::mem::take(&mut self.kc_buf);
         let mut vc = std::mem::take(&mut self.vc_buf);
         self.gather_chunk_inputs(tokens, &mut qc, &mut kc, &mut vc);
-        let Some(SeqState::Prefilling(stack)) = self.slots[slot.0].as_mut() else {
+        let Some(SeqState::Prefilling { stack, tokens: record }) = self.slots[slot.0].as_mut()
+        else {
             unreachable!("checked above")
         };
         stack.ingest_chunk(&mut self.ws, self.kind, &self.projs, &self.gates, pos, &qc, &kc, &vc, false);
+        record.extend_from_slice(tokens);
+        debug_assert_eq!(record.len(), stack.tokens(), "prefix record desync");
         self.qc_buf = qc;
         self.kc_buf = kc;
         self.vc_buf = vc;
@@ -1124,6 +1290,24 @@ impl DecodeBackend for PooledBackend {
                     .iter_mut()
                     .flat_map(|(_, seqs)| seqs[l * heads..(l + 1) * heads].iter_mut())
                     .collect();
+                // the pool may be over-reserved by cache-held blocks
+                // (inserts retain beyond admission reservations). Evict
+                // LRU entries until the whole bucket's advance plans fit
+                // — probed BEFORE advance_bucket, because a mid-bucket
+                // refusal would leave admitted sequences already stepped
+                // and a retry would double-advance them.
+                loop {
+                    if bucket_feasible(&self.pool, &refs) {
+                        break;
+                    }
+                    let evicted = match self.cache.as_mut() {
+                        Some(c) => c.evict_lru(&mut self.pool),
+                        None => false,
+                    };
+                    if !evicted {
+                        break;
+                    }
+                }
                 self.adv.advance_bucket(&mut self.pool, &mut refs, &jobs)
             };
             drop(jobs);
@@ -1164,7 +1348,7 @@ impl DecodeBackend for PooledBackend {
             .iter()
             .flatten()
             .map(|s| match s {
-                SeqState::Prefilling(stack) => stack.state_bytes(),
+                SeqState::Prefilling { stack, .. } => stack.state_bytes(),
                 SeqState::Scoring(sc) => {
                     sc.stack.as_ref().map(|st| st.state_bytes()).unwrap_or(0)
                         + sc.tail.iter().map(|f| f.state_bytes()).sum::<usize>()
@@ -1255,6 +1439,90 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// Serve one request end-to-end at the backend interface: admit with
+    /// the prompt visible, feed the uncached prefill chunks, then step
+    /// every remaining fed token one row at a time. Returns the logits
+    /// rows for positions `prefill_boundary(plen) .. fed.len()`.
+    fn serve(
+        b: &mut PooledBackend,
+        plen: usize,
+        fed: &[i32],
+        expect_cached: usize,
+    ) -> Vec<Vec<f32>> {
+        let (slot, cached) = b.admit_prompt(64, &fed[..plen]).unwrap();
+        assert_eq!(cached, expect_cached, "cached prompt tokens");
+        let c = b.prefill_chunk_size();
+        let pe = b.prefill_boundary(plen);
+        let mut pos = cached;
+        while pos + c <= pe {
+            b.prefill_chunk(slot, &fed[pos..pos + c], pos).unwrap();
+            pos += c;
+        }
+        let mut out = Vec::new();
+        for p in pe..fed.len() {
+            out.push(b.step(1, &[(slot, fed[p], p as i32)]).unwrap());
+        }
+        b.retire(slot);
+        out
+    }
+
+    fn assert_rows_bit_eq(got: &[Vec<f32>], want: &[(usize, Vec<f32>)], tag: &str) {
+        assert_eq!(got.len(), want.len(), "{tag}: row count");
+        for (row, (p, w)) in got.iter().zip(want) {
+            assert_eq!(row.len(), w.len(), "{tag}: pos {p} width");
+            for (j, (a, b)) in row.iter().zip(w).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: pos {p} logit {j}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// Tentpole lock at the backend interface: admissions served off the
+    /// prefix cache — a partial hit (resume chunkwise prefill from the
+    /// cached boundary) and a full-boundary hit (decode directly off
+    /// adopted CoW blocks) — produce logits **bit-identical** to the
+    /// cold oracle replay, for both transition families. Also pins the
+    /// cache-key growth: a resumed prefill publishes its *extended*
+    /// boundary, upgrading the next identical prompt to a full hit.
+    #[test]
+    fn prefix_cache_partial_and_full_hits_are_bit_exact_with_cold_serving() {
+        for kind in [TransitionKind::Mamba2, TransitionKind::Gdn] {
+            let mut b =
+                PooledBackend::with_model_config(32, 2, 2, kind, 6, 6, 4, 4096, 0xCA4E);
+            b.enable_prefix_cache();
+            let mut rng = Rng::new(0x5EED);
+            // 16-token fed stream; the long prompt is its first 13 tokens
+            // (boundary 12 = 3 chunks), the short one its first 9
+            // (boundary 8 = 2 chunks)
+            let fed: Vec<i32> = (0..16).map(|_| rng.below(32) as i32).collect();
+            let oracle_short = b.oracle_decode_logits(9, &fed);
+            let oracle_long = b.oracle_decode_logits(13, &fed);
+
+            // cold: populates the 8-token key
+            let cold = serve(&mut b, 9, &fed, 0);
+            assert_rows_bit_eq(&cold, &oracle_short, "cold");
+            let cache = b.prefix_cache().unwrap();
+            assert_eq!(cache.len(), 1);
+            // retiring the exporter left only the cache's refcounts live
+            assert_eq!(b.pool().in_use(), b.prefix_cache().unwrap().blocks_held());
+
+            // partial hit: 8 of 12 boundary tokens cached; prefill
+            // resumes at chunk 2 and publishes the 12-token boundary
+            let partial = serve(&mut b, 13, &fed, 8);
+            assert_rows_bit_eq(&partial, &oracle_long, "partial hit");
+            assert_eq!(b.prefix_cache().unwrap().len(), 2);
+
+            // full-boundary hit: no prefill at all, decode off adopted
+            // shared blocks (copy-on-write protects the cached bytes)
+            let full = serve(&mut b, 13, &fed, 12);
+            assert_rows_bit_eq(&full, &oracle_long, "full hit");
+
+            // and the cached bytes really were protected: a fourth
+            // admission still full-hits and still matches
+            let again = serve(&mut b, 13, &fed, 12);
+            assert_rows_bit_eq(&again, &oracle_long, "repeat full hit");
         }
     }
 

@@ -126,6 +126,14 @@ impl<T> RequestQueue<T> {
         let n = n.min(self.items.len());
         (0..n).map(|_| self.items.pop_front().unwrap().0).collect()
     }
+
+    /// Remove and return the oldest item matching `pred` (cancellation of
+    /// a not-yet-admitted request), leaving arrival order of the rest
+    /// intact.
+    pub fn remove_first<F: FnMut(&T) -> bool>(&mut self, mut pred: F) -> Option<T> {
+        let i = self.items.iter().position(|(item, _)| pred(item))?;
+        self.items.remove(i).map(|(item, _)| item)
+    }
 }
 
 #[cfg(test)]

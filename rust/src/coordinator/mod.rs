@@ -91,6 +91,22 @@ pub struct ScoreResult {
     pub chunks: usize,
 }
 
+/// One incremental serving event, emitted by the engine loop as it
+/// happens and drained by streaming consumers via
+/// [`server::DecodeServer::take_stream_events`] — per-token delivery
+/// without waiting for the request's [`GenResult`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// Request `id` sampled its `index`-th generated token (0-based).
+    Token { id: u64, index: usize, token: i32 },
+    /// Request `id` completed; its [`GenResult`] is available.
+    Finished { id: u64 },
+    /// Request `id` was cancelled (mid-flight or still queued); it
+    /// produces no [`GenResult`] and its backend resources are already
+    /// released.
+    Cancelled { id: u64 },
+}
+
 /// Why a request was refused at submit time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitError {

@@ -45,6 +45,19 @@
 //! - **Degenerate requests**: empty prompts are rejected at submit;
 //!   `max_new == 0` (and 1-token score prompts) complete immediately
 //!   without touching the engine.
+//! - **Streaming + cancellation**: every sampled token is emitted as a
+//!   [`StreamEvent::Token`] the moment its decode step lands (drained
+//!   via [`DecodeServer::take_stream_events`]), and
+//!   [`DecodeServer::cancel`] tears a request down mid-flight — its
+//!   backend slot retires immediately, so a cancelled sequence's private
+//!   state blocks return to the pool without waiting for `max_new`.
+//! - **Prefix-cache admission**: admission goes through
+//!   [`DecodeBackend::admit_prompt`]; when the backend reports `cached`
+//!   leading prompt tokens already covered by cached boundary states
+//!   (see `PooledBackend::enable_prefix_cache`), the sequence starts at
+//!   `pos = cached` — those tokens are never fed again, counted in
+//!   [`ServerStats::prefix_cache_hits`] /
+//!   [`ServerStats::prefill_tokens_saved`].
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -56,7 +69,7 @@ use crate::util::stats::Summary;
 
 use super::backend::{fold_score_logprobs, AdmitError, DecodeBackend, PjrtBackend, SeqSlot};
 use super::batcher::{BatchPolicy, RequestQueue};
-use super::{GenRequest, GenResult, ScoreRequest, ScoreResult, SubmitError};
+use super::{GenRequest, GenResult, ScoreRequest, ScoreResult, StreamEvent, SubmitError};
 
 struct Seq {
     id: u64,
@@ -127,6 +140,19 @@ pub struct ServerStats {
     pub score_chunks: usize,
     /// prompt tokens scored (across completed scoring requests)
     pub score_tokens: usize,
+    /// admissions that reused prefix-cached state (backend returned a
+    /// non-zero cached-token count from `admit_prompt`)
+    pub prefix_cache_hits: usize,
+    /// prompt tokens never prefilled because cached boundary states
+    /// covered them (summed over all hits)
+    pub prefill_tokens_saved: usize,
+    /// requests cancelled via [`DecodeServer::cancel`] (queued or
+    /// mid-flight)
+    pub cancelled: usize,
+    /// backend state-store occupancy (pool blocks) at the last sample
+    pub pool_in_use: usize,
+    /// peak backend state-store occupancy observed by the backend
+    pub pool_peak: usize,
 }
 
 impl ServerStats {
@@ -177,6 +203,8 @@ pub struct DecodeServer<B: DecodeBackend> {
     capture_logits: bool,
     /// captured (sequence id, position, logits) rows, in execution order
     logit_log: Vec<(u64, usize, Vec<f32>)>,
+    /// incremental events (token/finished/cancelled) awaiting drain
+    stream: Vec<StreamEvent>,
 }
 
 impl DecodeServer<PjrtBackend> {
@@ -208,6 +236,7 @@ impl<B: DecodeBackend> DecodeServer<B> {
             prefill_rr: 0,
             capture_logits: false,
             logit_log: Vec::new(),
+            stream: Vec::new(),
         }
     }
 
@@ -224,6 +253,42 @@ impl<B: DecodeBackend> DecodeServer<B> {
         std::mem::take(&mut self.logit_log)
     }
 
+    /// Drain the incremental serving events accumulated since the last
+    /// drain, in emission order: every sampled token the moment its
+    /// decode step lands ([`StreamEvent::Token`]), completions
+    /// ([`StreamEvent::Finished`]), and cancellations
+    /// ([`StreamEvent::Cancelled`]). Streaming consumers call this
+    /// between engine steps for per-token delivery.
+    pub fn take_stream_events(&mut self) -> Vec<StreamEvent> {
+        std::mem::take(&mut self.stream)
+    }
+
+    /// Cancel a generation request wherever it is: still queued (it is
+    /// dequeued and never admitted) or mid-flight (its backend slot is
+    /// retired **immediately**, handing the sequence's private state
+    /// blocks back to the pool — shared prefix-cache blocks just drop a
+    /// refcount). Emits [`StreamEvent::Cancelled`]; a cancelled request
+    /// produces no [`GenResult`]. Returns false if `id` is not a live
+    /// generation request (unknown, already finished, or a scoring id).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if self.queue.remove_first(|r| r.id == id).is_some() {
+            self.stats.cancelled += 1;
+            self.stream.push(StreamEvent::Cancelled { id });
+            return true;
+        }
+        let Some(i) = self.running.iter().position(|s| s.id == id) else {
+            return false;
+        };
+        let seq = self.running.remove(i);
+        self.backend.retire(seq.slot);
+        let (in_use, peak) = self.backend.pool_occupancy();
+        self.stats.pool_in_use = in_use;
+        self.stats.pool_peak = peak;
+        self.stats.cancelled += 1;
+        self.stream.push(StreamEvent::Cancelled { id });
+        true
+    }
+
     /// Enqueue a request. Empty prompts are rejected (there is no token
     /// to feed at position 0); `max_new == 0` completes immediately.
     pub fn submit(&mut self, req: GenRequest) -> Result<(), SubmitError> {
@@ -238,6 +303,7 @@ impl<B: DecodeBackend> DecodeServer<B> {
                 steps: 0,
             });
             self.stats.completed += 1;
+            self.stream.push(StreamEvent::Finished { id: req.id });
             return Ok(());
         }
         self.queue.push(req);
@@ -277,6 +343,12 @@ impl<B: DecodeBackend> DecodeServer<B> {
         &self.backend
     }
 
+    /// Mutable backend access (configuration between traffic runs —
+    /// e.g. dropping a pooled backend's prefix cache).
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
     /// (id, position, steps) of every running sequence, in scheduling
     /// order — monitoring + fairness regression tests.
     pub fn running_progress(&self) -> Vec<(u64, usize, usize)> {
@@ -294,8 +366,13 @@ impl<B: DecodeBackend> DecodeServer<B> {
         while self.running.len() < cap {
             let Some(req) = self.queue.peek() else { break };
             let max_steps = req.prompt.len() + req.max_new - 1;
-            let slot = match self.backend.admit(max_steps.max(1)) {
-                Ok(slot) => slot,
+            // prompt-aware admission: a backend with a prefix-state
+            // cache may hand back `cached` leading prompt tokens whose
+            // boundary state it already holds — the server skips feeding
+            // them (neither prefill chunks nor decode rows re-cover a
+            // cached position)
+            let (slot, cached) = match self.backend.admit_prompt(max_steps.max(1), &req.prompt) {
+                Ok(r) => r,
                 Err(AdmitError::Exhausted) => break,
                 Err(AdmitError::TooLarge) => {
                     // drop the impossible request before erroring so it
@@ -310,14 +387,19 @@ impl<B: DecodeBackend> DecodeServer<B> {
                     );
                 }
             };
+            if cached > 0 {
+                self.stats.prefix_cache_hits += 1;
+                self.stats.prefill_tokens_saved += cached;
+            }
             // keep the queue-entry timestamp: latency must include the
             // time a request waited under backpressure/holds
             let (req, submitted) = self.queue.pop_timed().expect("peeked above");
+            debug_assert!(cached < req.prompt.len(), "cache may not cover the final prompt token");
             self.running.push(Seq {
                 id: req.id,
                 prompt: req.prompt,
                 generated: Vec::new(),
-                pos: 0,
+                pos: cached,
                 slot,
                 max_new: req.max_new,
                 submitted,
@@ -560,6 +642,12 @@ impl<B: DecodeBackend> DecodeServer<B> {
                 let row = &logits[j * vocab..(j + 1) * vocab];
                 let tok = crate::tensor::ops::argmax(row) as i32;
                 seq.generated.push(tok);
+                // stream the token the moment its step lands
+                self.stream.push(StreamEvent::Token {
+                    id: seq.id,
+                    index: seq.generated.len() - 1,
+                    token: tok,
+                });
             }
         }
         // retire finished sequences and move processed survivors to the
@@ -576,6 +664,7 @@ impl<B: DecodeBackend> DecodeServer<B> {
                 self.running.push(seq);
             } else if seq.done() {
                 self.backend.retire(seq.slot);
+                self.stream.push(StreamEvent::Finished { id: seq.id });
                 self.finished.push(GenResult {
                     id: seq.id,
                     tokens: seq.generated,
@@ -594,6 +683,9 @@ impl<B: DecodeBackend> DecodeServer<B> {
         self.stats.step_seconds.push(dt);
         self.stats.batch_occupancy.push(n as f64 / bucket as f64);
         self.stats.peak_state_bytes = self.stats.peak_state_bytes.max(self.backend.state_bytes());
+        let (in_use, peak) = self.backend.pool_occupancy();
+        self.stats.pool_in_use = in_use;
+        self.stats.pool_peak = peak;
         Ok(n + ingest_units)
     }
 
@@ -1171,5 +1263,206 @@ mod tests {
             srv.submit_score(ScoreRequest { id: 0, tokens: vec![1, 2, 3] }),
             Err(SubmitError::ScoringUnsupported)
         );
+    }
+
+    fn event_id(e: &StreamEvent) -> u64 {
+        match *e {
+            StreamEvent::Token { id, .. }
+            | StreamEvent::Finished { id }
+            | StreamEvent::Cancelled { id } => id,
+        }
+    }
+
+    #[test]
+    fn stream_events_deliver_every_token_incrementally_then_finished() {
+        let mut srv = pooled_server(256, vec![4], Duration::ZERO);
+        for id in 0..3 {
+            srv.submit(req(id, 3, 5)).unwrap();
+        }
+        // drain between steps: tokens must arrive while requests are
+        // still in flight, not only at completion
+        let mut events = Vec::new();
+        let mut saw_token_mid_flight = false;
+        let mut guard = 0;
+        while srv.pending() > 0 {
+            srv.step().unwrap();
+            let drained = srv.take_stream_events();
+            if srv.pending() > 0
+                && drained.iter().any(|e| matches!(e, StreamEvent::Token { .. }))
+            {
+                saw_token_mid_flight = true;
+            }
+            events.extend(drained);
+            guard += 1;
+            assert!(guard < 1000, "no forward progress");
+        }
+        assert!(saw_token_mid_flight, "streaming must not buffer until completion");
+        assert!(srv.take_stream_events().is_empty(), "drain must consume the buffer");
+        let results = DecodeServer::<PooledBackend>::results_by_id(srv.take_finished());
+        for id in 0..3u64 {
+            let evs: Vec<&StreamEvent> =
+                events.iter().filter(|e| event_id(e) == id).collect();
+            // 5 tokens in index order, then exactly one Finished, last
+            assert_eq!(evs.len(), 6, "req {id}: events {evs:?}");
+            for (i, e) in evs[..5].iter().enumerate() {
+                let StreamEvent::Token { index, token, .. } = e else {
+                    panic!("req {id}: expected a token event, got {e:?}");
+                };
+                assert_eq!(*index, i, "req {id}: out-of-order stream");
+                assert_eq!(*token, results[&id].tokens[i], "req {id}: stream/result mismatch");
+            }
+            assert!(matches!(evs[5], StreamEvent::Finished { .. }), "req {id}: missing finish");
+        }
+    }
+
+    #[test]
+    fn prefix_cache_hits_save_prefill_and_preserve_outputs() {
+        let mk = |cache: bool| {
+            let mut backend = PooledBackend::with_config(64, 2, 8, 8, 4, 4096, 7);
+            if cache {
+                backend.enable_prefix_cache();
+            }
+            DecodeServer::with_backend(backend, BatchPolicy::new(vec![1], Duration::ZERO))
+        };
+        let prompt: Vec<i32> = (0..13).map(|i| (i * 7 + 3) % 64).collect(); // boundary 12
+        let mut srv = mk(true);
+        srv.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new: 4 }).unwrap();
+        let first = srv.run_to_completion().unwrap();
+        assert_eq!(srv.stats.prefix_cache_hits, 0, "first prompt is cold");
+        srv.submit(GenRequest { id: 1, prompt: prompt.clone(), max_new: 4 }).unwrap();
+        let second = srv.run_to_completion().unwrap();
+        assert_eq!(srv.stats.prefix_cache_hits, 1);
+        assert_eq!(srv.stats.prefill_tokens_saved, 12);
+        assert_eq!(first[0].tokens, second[0].tokens, "cache hit changed the decode");
+        // the hit skipped all 3 chunks: 4 decode rows only, vs 3 + 4 cold
+        assert_eq!(first[0].steps, 3 + 4);
+        assert_eq!(second[0].steps, 4);
+        assert!(srv.stats.pool_peak > 0, "occupancy counters must be sampled");
+        // a cache-disabled server serves the same tokens
+        let mut off = mk(false);
+        off.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new: 4 }).unwrap();
+        let base = off.run_to_completion().unwrap();
+        assert_eq!(base[0].tokens, first[0].tokens, "cache-off baseline diverged");
+        assert_eq!(off.stats.prefix_cache_hits, 0);
+        assert_eq!(off.stats.prefill_tokens_saved, 0);
+    }
+
+    #[test]
+    fn cancel_returns_exactly_the_private_blocks_and_emits_cancelled() {
+        let mut backend = PooledBackend::with_config(64, 2, 8, 8, 4, 4096, 7);
+        backend.enable_prefix_cache();
+        let mut srv =
+            DecodeServer::with_backend(backend, BatchPolicy::new(vec![1, 2], Duration::ZERO));
+        let prompt: Vec<i32> = (0..13).map(|i| (i * 7 + 3) % 64).collect();
+        // populate the cache, then verify only cache blocks stay resident
+        srv.submit(GenRequest { id: 0, prompt: prompt.clone(), max_new: 2 }).unwrap();
+        srv.run_to_completion().unwrap();
+        let cache_held = srv.backend().prefix_cache().unwrap().blocks_held();
+        assert!(cache_held > 0);
+        assert_eq!(srv.backend().pool().in_use(), cache_held);
+        // a long-running full hit: adopts shared blocks, CoW makes them
+        // private over the first steps
+        srv.submit(GenRequest { id: 1, prompt: prompt.clone(), max_new: 50 }).unwrap();
+        for _ in 0..6 {
+            srv.step().unwrap();
+        }
+        assert!(
+            srv.backend().pool().in_use() > cache_held,
+            "a decoding sequence must hold private blocks"
+        );
+        assert!(srv.cancel(1), "mid-flight cancel");
+        assert_eq!(
+            srv.backend().pool().in_use(),
+            cache_held,
+            "cancel must return exactly the cancelled sequence's private blocks"
+        );
+        assert_eq!(srv.stats.cancelled, 1);
+        assert_eq!(srv.pending(), 0, "cancelled sequence must leave the running set");
+        assert!(!srv.cancel(1), "a cancelled id is no longer live");
+        // queued requests cancel too (dequeued before admission)
+        srv.submit(GenRequest { id: 2, prompt: prompt.clone(), max_new: 4 }).unwrap();
+        assert!(srv.cancel(2));
+        assert_eq!(srv.pending(), 0);
+        assert_eq!(srv.stats.cancelled, 2);
+        let events = srv.take_stream_events();
+        let cancelled: Vec<u64> = events
+            .iter()
+            .filter(|e| matches!(e, StreamEvent::Cancelled { .. }))
+            .map(event_id)
+            .collect();
+        assert_eq!(cancelled, vec![1, 2]);
+        // no GenResult for either cancelled request
+        assert!(srv.take_finished().iter().all(|r| r.id == 0));
+    }
+
+    /// Serve `prompts` sequentially (29 tokens each, boundary 28,
+    /// max_new 2) through a 1-layer 1-head pooled server with
+    /// `pool_blocks` capacity; returns each request's tokens plus the
+    /// final stats and pool/cache accounting.
+    fn serve_under_pressure(
+        prompts: &[Vec<i32>],
+        pool_blocks: usize,
+        cache: bool,
+    ) -> (Vec<Vec<i32>>, ServerStats, usize, usize) {
+        let mut backend = PooledBackend::with_config(64, 1, 8, 8, 4, pool_blocks, 7);
+        if cache {
+            backend.enable_prefix_cache();
+        }
+        let mut srv =
+            DecodeServer::with_backend(backend, BatchPolicy::new(vec![1], Duration::ZERO));
+        let mut tokens = Vec::new();
+        for (id, prompt) in prompts.iter().enumerate() {
+            srv.submit(GenRequest { id: id as u64, prompt: prompt.clone(), max_new: 2 }).unwrap();
+            let mut res = srv.run_to_completion().unwrap();
+            assert_eq!(res.len(), 1, "request {id} must complete under pool pressure");
+            tokens.push(res.remove(0).tokens);
+        }
+        let held = srv.backend().prefix_cache().map(|c| c.blocks_held()).unwrap_or(0);
+        let in_use = srv.backend().pool().in_use();
+        (tokens, srv.stats.clone(), held, in_use)
+    }
+
+    #[test]
+    fn cache_eviction_under_pool_pressure_keeps_serving_exact() {
+        // Capacity 8 fits one 5-block reservation (blocks_for_steps(30))
+        // plus a 3-block cache entry, but NOT two entries plus a live
+        // sequence: the third request's first advance must LRU-evict the
+        // first prompt's entry mid-serving. The cache-hit request (same
+        // prompt as the first) and the evicting request must both decode
+        // exactly as a cache-disabled server does.
+        let p1: Vec<i32> = (0..29).map(|i| (i * 7 + 3) % 64).collect(); // boundary 28
+        let p2: Vec<i32> = (0..29).map(|i| (i * 11 + 5) % 64).collect();
+        let traffic = [p1.clone(), p1, p2];
+        let (with_cache, stats, held, in_use) = serve_under_pressure(&traffic, 8, true);
+        let (baseline, base_stats, _, _) = serve_under_pressure(&traffic, 8, false);
+        assert_eq!(with_cache, baseline, "eviction under pressure corrupted a served decode");
+        assert_eq!(stats.prefix_cache_hits, 1, "second P1 request must hit");
+        assert_eq!(stats.prefill_tokens_saved, 28);
+        assert_eq!(base_stats.prefix_cache_hits, 0);
+        // P1's entry was evicted for P2's sequence; P2's entry remains —
+        // and retirement left exactly those blocks resident
+        assert!(held > 0, "P2's boundary must have been cached");
+        assert_eq!(in_use, held, "pool must hold exactly the cache's blocks after retirement");
+    }
+
+    #[test]
+    fn cache_eviction_with_a_live_reader_preserves_adopted_state() {
+        // Capacity 5 is exactly one reservation: the cache entry itself
+        // is the excess, so the OWNER's first advance forces its own
+        // entry out while the owner still shares every block. Eviction
+        // only drops the cache's refcounts — the live sequence keeps the
+        // bytes and must decode exactly as the cache-disabled baseline.
+        // The follow-up identical prompt then finds an empty cache
+        // (entries cannot survive at this capacity), not stale handles.
+        let p1: Vec<i32> = (0..29).map(|i| (i * 7 + 3) % 64).collect();
+        let traffic = [p1.clone(), p1];
+        let (with_cache, stats, held, in_use) = serve_under_pressure(&traffic, 5, true);
+        let (baseline, base_stats, _, _) = serve_under_pressure(&traffic, 5, false);
+        assert_eq!(with_cache, baseline, "live-reader eviction corrupted a served decode");
+        assert_eq!(with_cache[0], with_cache[1], "identical prompts must decode identically");
+        assert_eq!(stats.prefix_cache_hits, 0, "no entry can survive at this capacity");
+        assert_eq!(base_stats.prefix_cache_hits, 0);
+        assert_eq!(held, 0);
+        assert_eq!(in_use, 0, "everything must return to the pool");
     }
 }

@@ -7,7 +7,10 @@
 //! Mamba-2 *and* GDN transition modes, **sequential stacks of 1–3
 //! layers** × 1–2 heads, shared / per-token / per-head gate tables,
 //! randomized prefill chunk budgets, **prompt-scoring requests riding
-//! along the generation traffic**, and pool sizes squeezed near
+//! along the generation traffic**, **shared prompt prefixes with the
+//! copy-on-write prefix cache randomly armed** (repeat admissions adopt
+//! cached chunk-boundary states; the squeezed pool LRU-evicts entries
+//! mid-trace), and pool sizes squeezed near
 //! exhaustion so admission backpressure fires mid-trace — capturing every
 //! decode row's logits, then asserting them **bit-exact** against
 //! [`PooledBackend::oracle_decode_logits`]: a per-sequence, Mat-backed
@@ -161,12 +164,19 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
 
     // requests first, so the pool can be sized *near exhaustion*:
     // large enough for the biggest single request (no TooLarge), small
-    // enough that the full offered load backpressures mid-trace.
+    // enough that the full offered load backpressures mid-trace. Some
+    // requests draw from a small set of shared prefixes (system-prompt
+    // style traffic), so the prefix-cache arm below gets genuine
+    // cross-request boundary reuse.
+    let shared: Vec<Vec<i32>> = (0..2)
+        .map(|_| (0..1 + rng.below(max_prompt)).map(|_| rng.below(VOCAB) as i32).collect())
+        .collect();
     let reqs: Vec<GenRequest> = (0..nreq)
-        .map(|i| GenRequest {
-            id: i as u64,
-            prompt: (0..1 + rng.below(max_prompt)).map(|_| rng.below(VOCAB) as i32).collect(),
-            max_new: 1 + rng.below(5),
+        .map(|i| {
+            let mut prompt: Vec<i32> =
+                if rng.chance(0.4) { shared[rng.below(2)].clone() } else { Vec::new() };
+            prompt.extend((0..1 + rng.below(max_prompt)).map(|_| rng.below(VOCAB) as i32));
+            GenRequest { id: i as u64, prompt, max_new: 1 + rng.below(5) }
         })
         .collect();
     // scoring traffic rides along (only meaningful when the backend has
@@ -209,6 +219,15 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
         }
     }
 
+    // the copy-on-write prefix cache rides along on some traces: repeat
+    // and shared-prefix prompts then admit straight from cached
+    // chunk-boundary states, and the squeezed pool forces LRU eviction
+    // mid-trace — all still held to the bit-exact bar below
+    let use_cache = prefill_chunk > 0 && rng.chance(0.5);
+    if use_cache {
+        backend.enable_prefix_cache();
+    }
+
     let buckets = if rng.chance(0.5) { vec![4] } else { vec![1, 4, 8] };
     let policy = BatchPolicy::new(buckets, Duration::ZERO).with_prefill_budget(1 + rng.below(4));
     let mut srv = DecodeServer::with_backend(backend, policy);
@@ -227,13 +246,27 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
     if results.len() != nreq {
         return Err(format!("{} of {nreq} requests completed", results.len()));
     }
+    // after retirement the only blocks still out are the prefix cache's
+    // refcounted boundary states; dropping the cache must drain the pool
+    // to zero (any other residue is a leak)
+    let held = srv.backend().prefix_cache().map_or(0, |c| c.blocks_held());
+    if srv.backend().pool().in_use() != held {
+        return Err(format!(
+            "retirement leaked {} pool blocks ({held} held by the prefix cache)",
+            srv.backend().pool().in_use()
+        ));
+    }
+    srv.backend_mut().clear_prefix_cache();
     if srv.backend().pool().in_use() != 0 {
-        return Err(format!("retirement leaked {} pool blocks", srv.backend().pool().in_use()));
+        return Err(format!(
+            "prefix cache leaked {} pool blocks on clear",
+            srv.backend().pool().in_use()
+        ));
     }
     let ctx = |e: String| {
         format!(
             "{e} (kind {kind:?}, layers {layers}, heads {heads}, chunk {prefill_chunk}, \
-             pool {pool_blocks})"
+             cache {use_cache}, pool {pool_blocks})"
         )
     };
     for r in &reqs {
@@ -350,5 +383,173 @@ fn serving_trace_differential_pinned_heavy_modes() {
             panic!("{e} ({kind:?})");
         }
         assert_eq!(srv.backend().pool().in_use(), 0, "leak ({kind:?})");
+    }
+}
+
+/// Prefix-cache operating modes for the pinned shared-prefix trace.
+#[derive(Debug, Clone, Copy)]
+enum CacheMode {
+    /// no prefix cache — baseline serving
+    Disabled,
+    /// cache on, pool sized for the full offered load: every repeat
+    /// prompt admits from cached chunk-boundary states
+    Enabled,
+    /// cache on, pool squeezed to exactly the largest single
+    /// reservation: any block the cache holds is excess that live
+    /// sequences' advances and exports must reclaim, so LRU eviction
+    /// fires throughout the trace. A broken eviction path cannot pass
+    /// silently here — it surfaces as a pool-exhaustion serve error.
+    ForcedEviction,
+}
+
+/// The prefix-cache lock: system-prompt-style traffic (requests drawn
+/// from a few shared prefixes, then the same prompts re-offered) served
+/// through the copy-on-write [`crate::state::PrefixCache`], held to the
+/// same bit-exact oracle bar as the cold path in every cache mode. The
+/// second wave's admissions adopt the chunk-boundary states the first
+/// wave published, so decode rows produced *from cached state* are
+/// compared against a full cold oracle replay of the same request.
+fn run_shared_prefix_trace(seed: u64, kind: TransitionKind, mode: CacheMode) -> Result<(), String> {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xCAC4E);
+    let (layers, heads, dk, dv, chunk) = (2usize, 2usize, 4usize, 4usize, 4usize);
+    // shared prefixes: one sub-chunk-offset, one chunk-straddling, one
+    // multi-chunk — all longer than a chunk, so every prompt has a
+    // non-trivial cacheable boundary
+    let prefixes: Vec<Vec<i32>> = [8usize, 13, 18]
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.below(VOCAB) as i32).collect())
+        .collect();
+    // wave 1: two requests per prefix with random suffixes (cold, they
+    // publish boundaries); wave 2 re-offers every wave-1 prompt verbatim
+    // under new ids (with the cache on, each admission is a full hit on
+    // its twin's boundary entry)
+    let wave1: Vec<GenRequest> = (0..6)
+        .map(|i| {
+            let mut prompt = prefixes[i % prefixes.len()].clone();
+            prompt.extend((0..rng.below(5)).map(|_| rng.below(VOCAB) as i32));
+            GenRequest { id: i as u64, prompt, max_new: 1 + rng.below(4) }
+        })
+        .collect();
+    let wave2: Vec<GenRequest> = wave1
+        .iter()
+        .enumerate()
+        .map(|(i, r)| GenRequest {
+            id: 100 + i as u64,
+            prompt: r.prompt.clone(),
+            max_new: 1 + rng.below(4),
+        })
+        .collect();
+    let need = |r: &GenRequest| {
+        layers * heads * blocks_for_steps((r.prompt.len() + r.max_new - 1).max(1))
+    };
+    let max_need = wave1.iter().chain(wave2.iter()).map(&need).max().unwrap();
+    let pool_blocks = match mode {
+        CacheMode::ForcedEviction => max_need,
+        _ => wave1.iter().chain(wave2.iter()).map(&need).sum::<usize>(),
+    };
+    let mut backend = PooledBackend::with_model_config(
+        VOCAB,
+        layers,
+        heads,
+        kind,
+        dk,
+        dv,
+        chunk,
+        pool_blocks,
+        seed ^ 0xF00D,
+    );
+    for l in 0..layers {
+        backend.set_layer_gates(
+            l,
+            GateTable::per_head((0..heads).map(|_| random_head_table(&mut rng)).collect()),
+        );
+    }
+    if !matches!(mode, CacheMode::Disabled) {
+        backend.enable_prefix_cache();
+    }
+    let policy = BatchPolicy::new(vec![1, 4], Duration::ZERO).with_prefill_budget(2);
+    let mut srv = DecodeServer::with_backend(backend, policy);
+    srv.enable_logit_capture();
+    let mut finished = Vec::new();
+    for wave in [&wave1, &wave2] {
+        for r in wave.iter() {
+            srv.submit(r.clone()).map_err(|e| format!("submit: {e}"))?;
+        }
+        finished.extend(srv.run_to_completion().map_err(|e| format!("serve: {e}"))?);
+    }
+    let results = DecodeServer::<PooledBackend>::results_by_id(finished);
+    let captured = srv.take_captured_logits();
+    if results.len() != wave1.len() + wave2.len() {
+        return Err(format!("{} of 12 requests completed", results.len()));
+    }
+    match mode {
+        CacheMode::Disabled => {
+            if srv.stats.prefix_cache_hits != 0 || srv.stats.prefill_tokens_saved != 0 {
+                return Err(format!(
+                    "cache disabled but {} hits / {} tokens saved reported",
+                    srv.stats.prefix_cache_hits, srv.stats.prefill_tokens_saved
+                ));
+            }
+        }
+        CacheMode::Enabled => {
+            // wave 1 is all-cold (admitted together against an empty
+            // cache); every wave-2 admission must hit
+            if srv.stats.prefix_cache_hits < wave2.len() {
+                return Err(format!(
+                    "only {} of {} repeat admissions hit the prefix cache",
+                    srv.stats.prefix_cache_hits,
+                    wave2.len()
+                ));
+            }
+            if srv.stats.prefill_tokens_saved == 0 {
+                return Err("cache hits saved no prefill tokens".to_string());
+            }
+        }
+        // hits are incidental under forced eviction (entries rarely
+        // survive to the repeat) — bit-exactness and clean completion
+        // are the bar
+        CacheMode::ForcedEviction => {}
+    }
+    for r in wave1.iter().chain(wave2.iter()) {
+        let res = results
+            .get(&r.id)
+            .ok_or_else(|| format!("req {} has no result", r.id))?;
+        if res.tokens.len() != r.max_new {
+            return Err(format!("req {}: {} of {} tokens", r.id, res.tokens.len(), r.max_new));
+        }
+        compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured)?;
+    }
+    // the cache's refcounted boundary states are the only blocks allowed
+    // to outlive retirement; clearing the cache must drain the pool
+    let held = srv.backend().prefix_cache().map_or(0, |c| c.blocks_held());
+    if srv.backend().pool().in_use() != held {
+        return Err(format!(
+            "retirement leaked {} pool blocks ({held} held by the prefix cache)",
+            srv.backend().pool().in_use()
+        ));
+    }
+    srv.backend_mut().clear_prefix_cache();
+    if srv.backend().pool().in_use() != 0 {
+        return Err(format!(
+            "prefix cache leaked {} pool blocks on clear",
+            srv.backend().pool().in_use()
+        ));
+    }
+    Ok(())
+}
+
+/// Pinned shared-prefix traces across every cache mode × transition
+/// family: serving from cached copy-on-write prefix states is bit-exact
+/// with the cold per-sequence oracle replay whether the cache is off, on
+/// with room to keep its entries, or thrashing under forced LRU
+/// eviction.
+#[test]
+fn shared_prefix_trace_bit_exact_across_cache_modes() {
+    for kind in [TransitionKind::Mamba2, TransitionKind::Gdn] {
+        for mode in [CacheMode::Disabled, CacheMode::Enabled, CacheMode::ForcedEviction] {
+            if let Err(e) = run_shared_prefix_trace(21, kind, mode) {
+                panic!("{e} ({kind:?}, {mode:?})");
+            }
+        }
     }
 }

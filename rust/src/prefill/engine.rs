@@ -56,7 +56,7 @@
 //! case is executed as the per-head case with the schedule replicated
 //! bit-identically, so one code path serves both.
 
-use crate::attention::deltanet::{apply_householder_slice, apply_householder_vec};
+use crate::attention::deltanet::apply_householder_slice;
 use crate::attention::loglinear::ChunkFenwick;
 use crate::fenwick;
 use crate::tensor;
@@ -92,6 +92,8 @@ pub struct Workspace {
     qk: Vec<f32>,
     /// GDN effective queries `Q̂`, `(H, C, d_k)`
     qe: Vec<f32>,
+    /// GDN `−g`-scaled key rows for the UT effective-query GEMM, `(C, d_k)`
+    kb: Vec<f32>,
     /// per-token outputs in stacked `(H, C, d_v)` form, pre-scatter
     o_stack: Vec<f32>,
     // ---- buffers loaned to LayerStack (layer-input restacking) ----
@@ -125,6 +127,7 @@ impl Workspace {
             + self.scratch.capacity()
             + self.qk.capacity()
             + self.qe.capacity()
+            + self.kb.capacity()
             + self.o_stack.capacity()
             + self.stack_q.capacity()
             + self.stack_k.capacity()
@@ -422,11 +425,22 @@ impl PrefillEngine {
             o_stack.resize(h * c * dv, 0.0);
             let lam = co.lambda;
             // ---- intra-chunk first (the reference accumulation order):
-            // P = (tril(Q K^T) ⊙ Gratio) sys^{-1} diag(β) ⊙ Λ, then P V
+            // P = (tril(Q K^T) ⊙ Gratio) sys^{-1} diag(β) ⊙ Λ, then P V.
+            // The inter-chunk effective queries ride on the SAME solve:
+            // with the unmasked P (β folded, Λ not yet),
+            // q̂_i = g_i q_i − Σ_{j≤i} P_ij g_j k_j — the UT transform of
+            // the gated Householder chain, one GEMM per head instead of
+            // an O(C²·d_k) scalar rank-1 sweep per chunk.
             let mut qk = std::mem::take(&mut ws.qk);
             qk.clear();
             qk.resize(h * c * c, 0.0);
             tensor::gemm_nt_batch_into(h, c, dk, c, co.qs, ks, &mut qk, false);
+            let mut qe = std::mem::take(&mut ws.qe);
+            qe.clear();
+            qe.resize(h * c * dk, 0.0);
+            let mut kb = std::mem::take(&mut ws.kb);
+            kb.clear();
+            kb.resize(c * dk, 0.0);
             for head in 0..h {
                 let gh = &g[head * c..(head + 1) * c];
                 let sys_h = &ws.sys[head * c * c..(head + 1) * c * c];
@@ -457,11 +471,35 @@ impl PrefillEngine {
                         row[j] = acc;
                     }
                 }
-                // fold diag(β) (column scale) and the local Λ mask
+                // fold diag(β) (column scale) → the unmasked local P
                 for i in 0..c {
                     let row = &mut p_h[i * c..(i + 1) * c];
                     for j in 0..=i {
-                        row[j] *= b_at(head, j) * lam(head, i, fenwick::level_of(i, j));
+                        row[j] *= b_at(head, j);
+                    }
+                }
+                // effective queries from the solve just paid for:
+                // q̂ = diag(g) Q + P · (−diag(g) K) as one zero-skipping
+                // GEMM over P's lower triangle
+                let qe_h = &mut qe[head * c * dk..(head + 1) * c * dk];
+                for i in 0..c {
+                    let gi = gh[i];
+                    let qrow = &co.qs[(head * c + i) * dk..(head * c + i + 1) * dk];
+                    for (x, &qv) in qe_h[i * dk..(i + 1) * dk].iter_mut().zip(qrow) {
+                        *x = gi * qv;
+                    }
+                    let w = -gi;
+                    let krow = &ks[(head * c + i) * dk..(head * c + i + 1) * dk];
+                    for (x, &kv) in kb[i * dk..(i + 1) * dk].iter_mut().zip(krow) {
+                        *x = w * kv;
+                    }
+                }
+                tensor::gemm_sparse_rows(c, c, dk, p_h, &kb, qe_h, true);
+                // the local Λ mask on top, then P V
+                for i in 0..c {
+                    let row = &mut p_h[i * c..(i + 1) * c];
+                    for j in 0..=i {
+                        row[j] *= lam(head, i, fenwick::level_of(i, j));
                     }
                 }
                 tensor::gemm_sparse_rows(
@@ -475,28 +513,9 @@ impl PrefillEngine {
                 );
             }
             ws.qk = qk;
-            // ---- inter-chunk: effective queries
-            // q̂_i = g_i · Φ_0 ··· Φ_i q_i, then one batched Q̂ S_cat read
-            let mut qe = std::mem::take(&mut ws.qe);
-            qe.clear();
-            qe.resize(h * c * dk, 0.0);
-            for head in 0..h {
-                for i in 0..c {
-                    let row = &mut qe[(head * c + i) * dk..(head * c + i + 1) * dk];
-                    row.copy_from_slice(&co.qs[(head * c + i) * dk..(head * c + i + 1) * dk]);
-                    for j in (0..=i).rev() {
-                        apply_householder_vec(
-                            row,
-                            &ks[(head * c + j) * dk..(head * c + j + 1) * dk],
-                            b_at(head, j),
-                        );
-                    }
-                    let gi = g[head * c + i];
-                    for x in row.iter_mut() {
-                        *x *= gi;
-                    }
-                }
-            }
+            ws.kb = kb;
+            // ---- inter-chunk: one batched Q̂ S_cat read over the
+            // UT-transformed effective queries
             self.batched_level_read(ws, &qe, &mut |head, i, lvl| lam(head, i, lvl), &mut o_stack);
             ws.qe = qe;
             self.scatter_output(&o_stack, co.out);
@@ -627,6 +646,64 @@ impl PrefillEngine {
         assert!(!self.finished, "finish() called twice");
         self.fen.advance(self.z);
         self.finished = true;
+    }
+
+    /// Seed an engine at the post-merge boundary of `z` already-ingested
+    /// chunks — the inverse of [`PrefillEngine::export_head`].
+    /// `states[h]` is head `h`'s live `(token_level, row-major (d_k, d_v)
+    /// state)` list exactly as `export_head` produced it (and as the
+    /// prefix cache stores it); the per-head states are restacked into
+    /// the shared `(H·d_k, d_v)` hierarchy and ingestion resumes at chunk
+    /// `z`: the next `ingest_chunk_*`'s merge is the same no-op a cold
+    /// engine performs right after the boundary merge, so a resumed
+    /// prefill is **bit-exact** with one that ingested all `z` chunks
+    /// itself (the seeded states are byte-faithful copies).
+    pub fn from_boundary(
+        heads: usize,
+        dk: usize,
+        dv: usize,
+        chunk: usize,
+        z: usize,
+        states: &[Vec<(usize, &[f32])>],
+    ) -> PrefillEngine {
+        assert!(heads >= 1 && dk >= 1 && dv >= 1);
+        assert!(chunk >= 1 && chunk.is_power_of_two(), "chunk size must be a power of two");
+        assert_eq!(states.len(), heads, "one level list per head");
+        let lc = chunk.trailing_zeros() as usize;
+        for (h, head) in states.iter().enumerate() {
+            assert_eq!(
+                head.len(),
+                z.count_ones() as usize,
+                "head {h}: live levels must cover every bucket of the partition of {z} chunks"
+            );
+        }
+        let mut fen = ChunkFenwick::new();
+        let (mut rem, mut m) = (z, 1usize);
+        while rem != 0 {
+            if rem & 1 == 1 {
+                let mut s = fen.take_buffer(heads * dk, dv);
+                for (h, head) in states.iter().enumerate() {
+                    let mut rows = head.iter().filter(|&&(lvl, _)| lvl == lc + m);
+                    let &(_, data) = rows.next().unwrap_or_else(|| {
+                        panic!(
+                            "head {h}: no state at token level {} (boundary of {z} chunks)",
+                            lc + m
+                        )
+                    });
+                    assert!(
+                        rows.next().is_none(),
+                        "head {h}: duplicate token level {}",
+                        lc + m
+                    );
+                    assert_eq!(data.len(), dk * dv, "state shape");
+                    s.rows_data_mut(h * dk, (h + 1) * dk).copy_from_slice(data);
+                }
+                fen.install_level(m, s);
+            }
+            rem >>= 1;
+            m += 1;
+        }
+        PrefillEngine { heads, dk, dv, chunk, z, finished: false, fen }
     }
 
     /// One head's live levels as `(token_level, row-major (d_k, d_v)
@@ -1094,6 +1171,93 @@ mod tests {
                     engs[which].export_head(h),
                     engs2[which].export_head(h),
                     "which={which} head {h}: states diverged under shared workspace"
+                );
+            }
+        }
+    }
+
+    /// Boundary seeding ([`PrefillEngine::from_boundary`]) resumes a
+    /// chunkwise prefill BIT-EXACTLY: states exported at an intermediate
+    /// boundary and re-imported produce the same final states and the
+    /// same per-token chunk outputs as the engine that ingested every
+    /// chunk itself — the prefix-cache-hit resume contract, both
+    /// variants.
+    #[test]
+    fn seeded_engine_resumes_prefill_bit_exact_with_cold_engine() {
+        let mut rng = Rng::new(0x9E7);
+        let (heads, dk, dv, c, t_len) = (2usize, 6usize, 5usize, 4usize, 40usize); // 10 chunks
+        let split = 6usize; // resume at chunk 6 (binary 110: two live levels)
+        let nchunks = t_len / c;
+        let ks: Vec<Mat> = (0..heads)
+            .map(|_| {
+                let mut k = Mat::randn(t_len, dk, 1.0, &mut rng);
+                for i in 0..t_len {
+                    let n = crate::tensor::ops::l2_norm(k.row(i)).max(1e-6);
+                    for x in k.row_mut(i) {
+                        *x /= n;
+                    }
+                }
+                k
+            })
+            .collect();
+        let vs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dv, 1.0, &mut rng)).collect();
+        let qs: Vec<Mat> = (0..heads).map(|_| Mat::randn(t_len, dk, 1.0, &mut rng)).collect();
+        let alpha: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.8, 1.0)).collect();
+        let beta: Vec<f32> = (0..t_len).map(|_| rng.range_f32(0.1, 0.9)).collect();
+        let nl = crate::fenwick::num_levels(t_len);
+        let lambda = Mat::rand_uniform(t_len, nl, 0.05, 1.0, &mut rng);
+
+        let mut ws = Workspace::new();
+        for gdn in [false, true] {
+            let ingest = |eng: &mut PrefillEngine,
+                          ws: &mut Workspace,
+                          z: usize,
+                          out: Option<&mut [f32]>| {
+                let kc = stack_chunk(&ks, z, c);
+                let vc = stack_chunk(&vs, z, c);
+                let qc = stack_chunk(&qs, z, c);
+                let start = z * c;
+                let lam = |_h: usize, i: usize, lvl: usize| lambda.at(start + i, lvl);
+                let co = out.map(|o| ChunkOutput { qs: &qc, lambda: &lam, out: o });
+                if gdn {
+                    eng.ingest_chunk_gdn(ws, &kc, &vc, &alpha[start..start + c], &beta[start..start + c], co);
+                } else {
+                    eng.ingest_chunk_mamba2(ws, &kc, &vc, &alpha[start..start + c], co);
+                }
+            };
+
+            // cold: every chunk, outputs captured past the split
+            let mut cold = PrefillEngine::new(heads, dk, dv, c);
+            let mut cold_out = vec![vec![0.0f32; c * heads * dv]; nchunks - split];
+            for z in 0..nchunks {
+                let o = if z >= split { Some(&mut cold_out[z - split][..]) } else { None };
+                ingest(&mut cold, &mut ws, z, o);
+            }
+            cold.finish();
+
+            // prefix: chunks 0..split, export at the boundary, reseed
+            let mut pre = PrefillEngine::new(heads, dk, dv, c);
+            for z in 0..split {
+                ingest(&mut pre, &mut ws, z, None);
+            }
+            pre.finish();
+            let exported: Vec<Vec<(usize, &[f32])>> =
+                (0..heads).map(|h| pre.export_head(h)).collect();
+            let mut resumed = PrefillEngine::from_boundary(heads, dk, dv, c, split, &exported);
+            assert_eq!(resumed.tokens(), split * c);
+            assert_eq!(resumed.live_states(), split.count_ones() as usize);
+            let mut res_out = vec![vec![0.0f32; c * heads * dv]; nchunks - split];
+            for z in split..nchunks {
+                ingest(&mut resumed, &mut ws, z, Some(&mut res_out[z - split][..]));
+            }
+            resumed.finish();
+
+            assert_eq!(res_out, cold_out, "gdn={gdn}: resumed chunk outputs not bit-exact");
+            for h in 0..heads {
+                assert_eq!(
+                    resumed.export_head(h),
+                    cold.export_head(h),
+                    "gdn={gdn} head {h}: resumed states not bit-exact"
                 );
             }
         }

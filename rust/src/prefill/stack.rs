@@ -126,6 +126,46 @@ impl LayerStack {
         }
     }
 
+    /// Seed a stack at the post-merge boundary of `z` already-ingested
+    /// chunks from cached per-(layer, head) exports:
+    /// `states[l·heads + h]` is the `(token_level, state)` list
+    /// [`LayerStack::export_head`]`(l, h)` produced — the prefix cache's
+    /// entry layout. Chunkwise ingestion resumes at chunk `z` **bit-
+    /// exactly** (see [`PrefillEngine::from_boundary`]): a cache hit's
+    /// continuation is indistinguishable from a cold prefill of the whole
+    /// prompt.
+    pub fn from_boundary(
+        layers: usize,
+        heads: usize,
+        dk: usize,
+        dv: usize,
+        chunk: usize,
+        z: usize,
+        states: &[Vec<(usize, &[f32])>],
+    ) -> LayerStack {
+        assert!(layers >= 1, "at least one layer");
+        assert_eq!(states.len(), layers * heads, "one level list per (layer, head)");
+        LayerStack {
+            heads,
+            dk,
+            dv,
+            chunk,
+            engines: (0..layers)
+                .map(|l| {
+                    PrefillEngine::from_boundary(
+                        heads,
+                        dk,
+                        dv,
+                        chunk,
+                        z,
+                        &states[l * heads..(l + 1) * heads],
+                    )
+                })
+                .collect(),
+            o_last: Vec::new(),
+        }
+    }
+
     pub fn layers(&self) -> usize {
         self.engines.len()
     }

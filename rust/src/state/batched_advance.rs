@@ -17,28 +17,36 @@
 //! storage-generic per-sequence skeleton
 //! ([`crate::state::update::advance_levels`]) exactly:
 //!
-//! 1. *Admission* — the pre-mutation `can_write` contract, batch-wide: a
-//!    sequential simulation of per-sequence admission (each admitted
-//!    sequence frees its merged-out blocks and consumes one sentinel
-//!    block) decides, **before any mutation**, which sequences step.
-//!    Refused sequences are skipped cleanly — levels, position, and pool
-//!    occupancy untouched — exactly as if the per-sequence loop had
-//!    skipped them in order.
-//! 2. *Merge*, level-major — for level `s = 0, 1, …`, every admitted
-//!    sequence with live level `s ≤ lssb(t)` folds it into its bucket
-//!    accumulator via the same [`StatePool::axpy`] + release the
-//!    per-sequence path uses. Iterating levels outermost preserves each
-//!    sequence's ascending-level merge order (the accumulator is its
-//!    lowest live level), and different sequences touch disjoint blocks,
-//!    so every block sees the identical op sequence. Merges stay on the
-//!    caller thread: amortized one block-axpy per sequence per step, and
-//!    the accumulate reads sources scattered anywhere in the slab.
-//! 3. *Transition + write*, one dispatch — every carried (sequence,
-//!    level) block's per-token transition
+//! 1. *Admission* — the pre-mutation `can_advance` contract, batch-wide:
+//!    a sequential simulation of per-sequence admission (each admitted
+//!    sequence frees its privately-owned merged-out blocks, pays for any
+//!    copy-on-write clones of shared — prefix-cached — blocks, and
+//!    consumes one sentinel block; the shared
+//!    [`crate::state::update::pool_advance_plan`] formula) decides,
+//!    **before any mutation**, which sequences step. Refused sequences
+//!    are skipped cleanly — levels, position, and pool occupancy
+//!    untouched — exactly as if the per-sequence loop had skipped them in
+//!    order.
+//! 2. *Merge*, sequence-major — each admitted sequence folds its live
+//!    levels `0..=lssb(t)` into its lowest live level (the accumulator)
+//!    in ascending-level order via the same [`StatePool::axpy`] + release
+//!    the per-sequence path uses, cloning a *shared* accumulator into a
+//!    private block first (copy-on-write; releasing a shared source just
+//!    drops a refcount). Sequence-major execution makes the admission
+//!    plan's block accounting hold instant-by-instant: a sequence's CoW
+//!    clone lands before its own frees, exactly as the sequential
+//!    simulation assumed. Merges stay on the caller thread: amortized one
+//!    block-axpy per sequence per step, and the accumulate reads sources
+//!    scattered anywhere in the slab.
+//! 3. *Transition + write*, one dispatch — after a copy-on-write pre-pass
+//!    clones any still-shared carried level into a private block (the
+//!    dispatch mutates blocks in place, and shared state is immutable),
+//!    every carried (sequence, level) block's per-token transition
 //!    ([`crate::state::update::transition_block`]: Mamba-2 decay or GDN
 //!    gated Householder) and every admitted sequence's fresh sentinel
 //!    write ([`crate::state::update::write_block`]) are independent
-//!    per-block ops on disjoint blocks, so they run as **one**
+//!    per-block ops on disjoint blocks (post-CoW, every block has exactly
+//!    one owner), so they run as **one**
 //!    [`crate::tensor::slab_block_dispatch`] pass — the dominant
 //!    `Σ_i popcount(t_i)` cost of the advance, now threaded with a single
 //!    queue handoff. Each block is owned by exactly one worker running
@@ -46,14 +54,17 @@
 //!    bit-exact for any thread count (asserted by the tests below and the
 //!    `decode_batched` bench's pre-timing check).
 //!
-//! All merge releases happen before any sentinel alloc, so an admission
-//! plan that succeeds sequentially always succeeds batched (the pool's
-//! low-water mark under batching is no lower than under the loop).
+//! All of a sequence's merge releases happen before any later sequence's
+//! net consumption, and every carried-clone/sentinel alloc comes after
+//! all merges, so an admission plan that succeeds sequentially always
+//! succeeds batched (the pool's low-water mark under batching is no lower
+//! than under the loop). Sharing only *decreases* during the pass, so the
+//! plan's shared/private split is a conservative bound.
 
 use crate::fenwick;
 use crate::state::pool::{BlockId, StatePool};
 use crate::state::pooled::PooledFenwickState;
-use crate::state::update::{merge_freed, transition_block, write_block};
+use crate::state::update::{pool_advance_plan, transition_block, write_block};
 use crate::state::Transition;
 use crate::tensor;
 
@@ -78,16 +89,6 @@ enum BlockOp {
     Write(usize),
 }
 
-/// Per-admitted-sequence merge bookkeeping.
-struct MergePlan {
-    /// index into the bucket's `seqs`/`jobs`
-    seq: usize,
-    /// merge range top: levels `0..=l` fold one level up
-    l: usize,
-    /// running accumulator (the sequence's lowest live merged level)
-    acc: Option<BlockId>,
-}
-
 /// Below this many block-elements of transition+write work the fused
 /// dispatch stays on the caller thread (same rationale as the batched
 /// read's threshold: the resident pool makes a dispatch a queue handoff,
@@ -99,13 +100,31 @@ const ADVANCE_FLOP_THRESHOLD: usize = 1 << 16;
 #[derive(Default)]
 pub struct BatchedAdvance {
     admitted: Vec<usize>,
-    plans: Vec<MergePlan>,
     /// fused dispatch plan: (slab block row, op), sorted by row
     ops: Vec<(usize, BlockOp)>,
     rows: Vec<usize>,
     tags: Vec<BlockOp>,
     /// sentinel block per admitted sequence (same order as `admitted`)
     sentinels: Vec<BlockId>,
+}
+
+/// Would [`BatchedAdvance::advance_bucket`] admit every sequence right
+/// now? The same sequential admission simulation as its phase 1, without
+/// mutating anything. The pooled backend polls this before stepping a
+/// bucket so prefix-cache LRU eviction can relieve pool pressure
+/// *before* the advance runs — a mid-bucket refusal would leave admitted
+/// sequences stepped and refused ones behind, which eviction cannot
+/// repair after the fact.
+pub fn bucket_feasible(pool: &StatePool, seqs: &[&mut PooledFenwickState]) -> bool {
+    let mut avail = pool.available();
+    for seq in seqs {
+        let plan = pool_advance_plan(pool, seq.levels(), seq.t);
+        if !plan.feasible(avail) {
+            return false;
+        }
+        avail = (avail as isize + plan.net()) as usize;
+    }
+    true
 }
 
 impl BatchedAdvance {
@@ -138,10 +157,12 @@ impl BatchedAdvance {
         assert_eq!(pool.block_elems(), dk * dv, "pool sized for these states");
 
         // ---- 1) admission: sequential simulation of the per-sequence
-        // pre-mutation `can_write` check (the same `merge_freed` formula
-        // `advance_levels` uses, so the two paths agree by construction).
-        // Nothing is mutated yet, so a refusal here leaves the sequence
-        // exactly as it was.
+        // pre-mutation `can_advance` check (the same refcount-aware
+        // `pool_advance_plan` formula `advance_levels` uses via
+        // `PoolStore`, so the two paths agree by construction). Nothing
+        // is mutated yet, so a refusal here leaves the sequence exactly
+        // as it was. Plans are conservative: sharing can only decrease
+        // between here and execution.
         let mut refused = Vec::new();
         self.admitted.clear();
         let mut avail = pool.available();
@@ -149,9 +170,9 @@ impl BatchedAdvance {
             assert_eq!((seq.dk, seq.dv), (dk, dv), "mixed state shapes in bucket");
             assert_eq!(jobs[i].k.len(), dk, "k shape (seq {i})");
             assert_eq!(jobs[i].v.len(), dv, "v shape (seq {i})");
-            let freed = merge_freed(seq.levels(), seq.t);
-            if avail + freed >= 1 {
-                avail = avail + freed - 1;
+            let plan = pool_advance_plan(pool, seq.levels(), seq.t);
+            if plan.feasible(avail) {
+                avail = (avail as isize + plan.net()) as usize;
                 self.admitted.push(i);
             } else {
                 refused.push(i);
@@ -161,53 +182,67 @@ impl BatchedAdvance {
             return refused;
         }
 
-        // ---- 2) merge, level-major: fold levels 0..=lssb(t) one level
-        // up for every admitted sequence, preserving each sequence's
-        // ascending-level accumulate order.
-        self.plans.clear();
-        let mut max_l = 0usize;
+        // ---- 2) merge, sequence-major: each admitted sequence folds its
+        // live levels 0..=lssb(t) into its lowest live level in ascending
+        // order — the exact per-sequence accumulate order — cloning a
+        // shared accumulator first (copy-on-write; the clone is charged
+        // to this sequence's admission plan, before its own frees).
         for &i in &self.admitted {
             if seqs[i].t == 0 {
                 continue;
             }
             let l = fenwick::lssb(seqs[i].t) as usize;
-            max_l = max_l.max(l);
-            let acc = seqs[i].levels_mut().first_mut().and_then(Option::take);
-            self.plans.push(MergePlan { seq: i, l, acc });
-        }
-        for s in 1..=max_l {
-            for plan in self.plans.iter_mut() {
-                if s > plan.l {
-                    continue;
-                }
-                let Some(src) = seqs[plan.seq].levels_mut().get_mut(s).and_then(Option::take)
-                else {
+            let mut acc: Option<BlockId> = None;
+            for s in 0..=l {
+                let Some(src) = seqs[i].levels_mut().get_mut(s).and_then(Option::take) else {
                     continue;
                 };
-                match plan.acc {
-                    None => plan.acc = Some(src),
-                    Some(acc) => {
-                        pool.axpy(acc, src, 1.0);
+                match acc {
+                    None => acc = Some(src),
+                    Some(ref mut a) => {
+                        if pool.is_shared(*a) {
+                            let clone = pool
+                                .clone_block(*a)
+                                .expect("admission plan reserved the CoW clone");
+                            pool.release(*a);
+                            *a = clone;
+                        }
+                        pool.axpy(*a, src, 1.0);
                         pool.release(src);
                     }
                 }
             }
-        }
-        for plan in self.plans.iter() {
-            if let Some(acc) = plan.acc {
-                let levels = seqs[plan.seq].levels_mut();
-                if levels.len() <= plan.l + 1 {
-                    levels.resize_with(plan.l + 2, || None);
+            if let Some(acc) = acc {
+                let levels = seqs[i].levels_mut();
+                if levels.len() <= l + 1 {
+                    levels.resize_with(l + 2, || None);
                 }
-                debug_assert!(levels[plan.l + 1].is_none(), "Fenwick invariant");
-                levels[plan.l + 1] = Some(acc);
+                debug_assert!(levels[l + 1].is_none(), "Fenwick invariant");
+                levels[l + 1] = Some(acc);
             }
         }
 
         // ---- 3) transition + write, one fused scattered-block dispatch.
-        // Sentinel allocs come after every merge release, so the plan's
-        // guarantee holds (see module docs); alloc() zeroes each block,
-        // exactly like the per-sequence store's write.
+        // First the copy-on-write pre-pass: the dispatch mutates blocks
+        // in place, so any carried level still shared with the prefix
+        // cache (or another sequence) is cloned into a private block now.
+        // All merge releases already happened, so the plan's reserve
+        // covers these clones plus the sentinels (see module docs);
+        // alloc() zeroes each sentinel block, exactly like the
+        // per-sequence store's write.
+        for &i in &self.admitted {
+            for slot in seqs[i].levels_mut().iter_mut() {
+                if let Some(id) = slot {
+                    if pool.is_shared(*id) {
+                        let clone = pool
+                            .clone_block(*id)
+                            .expect("admission plan reserved the CoW clone");
+                        pool.release(*id);
+                        *slot = Some(clone);
+                    }
+                }
+            }
+        }
         self.sentinels.clear();
         for _ in &self.admitted {
             let id = pool.alloc().expect("admission plan reserved this block");
@@ -217,6 +252,7 @@ impl BatchedAdvance {
         for (slot, &i) in self.admitted.iter().enumerate() {
             for id in seqs[i].levels().iter().flatten() {
                 debug_assert!(pool.is_allocated(*id));
+                debug_assert!(!pool.is_shared(*id), "CoW pre-pass left a shared block");
                 self.ops.push((id.0, BlockOp::Transition(i)));
             }
             self.ops.push((self.sentinels[slot].0, BlockOp::Write(i)));
@@ -448,6 +484,66 @@ mod tests {
             oracle[i].read_into(&ref_pool, &q, &lam, &mut want);
             assert_eq!(got, want, "seq {i} diverged from the never-refused oracle");
         }
+    }
+
+    /// Copy-on-write under the batched pass: blocks retained by an
+    /// external owner (the prefix cache) keep their exact bytes across
+    /// advances, the advancing sequence's trajectory stays bit-exact with
+    /// a never-shared oracle, and all refcounts drain to zero.
+    #[test]
+    fn shared_blocks_are_cloned_not_mutated_by_the_batched_advance() {
+        let (dk, dv) = (4usize, 4usize);
+        let mut pool = StatePool::new(dk * dv, 32);
+        let mut ref_pool = StatePool::new(dk * dv, 32);
+        let mut rng = Rng::new(0xADB4);
+        let mut seq = PooledFenwickState::new(dk, dv);
+        let mut oracle = PooledFenwickState::new(dk, dv);
+        for _ in 0..6 {
+            let k = unit(randv(&mut rng, dk));
+            let v = randv(&mut rng, dv);
+            seq.advance(&mut pool, &k, &v, 1.0, Transition::Decay(0.9)).unwrap();
+            oracle.advance(&mut ref_pool, &k, &v, 1.0, Transition::Decay(0.9)).unwrap();
+        }
+        // a "cache" retains every live block and remembers the bytes
+        let cached: Vec<(BlockId, Vec<f32>)> = seq
+            .level_blocks()
+            .into_iter()
+            .map(|(_, id)| {
+                pool.retain(id);
+                (id, pool.get(id).to_vec())
+            })
+            .collect();
+        let mut adv = BatchedAdvance::new();
+        for step in 0..5 {
+            let k = unit(randv(&mut rng, dk));
+            let v = randv(&mut rng, dv);
+            let tr = if step % 2 == 0 {
+                Transition::Decay(0.95)
+            } else {
+                Transition::GatedHouseholder { alpha: 0.97, beta: 0.4, k: &k }
+            };
+            let jobs = vec![AdvanceJob { k: &k, v: &v, write_scale: 1.0, transition: tr }];
+            let refused = {
+                let mut refs: Vec<&mut PooledFenwickState> = vec![&mut seq];
+                adv.advance_bucket(&mut pool, &mut refs, &jobs)
+            };
+            assert!(refused.is_empty(), "pool sized for the trace (step {step})");
+            oracle.advance(&mut ref_pool, &k, &v, 1.0, tr).unwrap();
+        }
+        for (id, bytes) in &cached {
+            assert_eq!(pool.get(*id), &bytes[..], "shared (cached) block was mutated");
+        }
+        let q = randv(&mut rng, dk);
+        let lam = [1.0f32, 0.5, 0.25];
+        let (mut got, mut want) = (vec![0.0f32; dv], vec![0.0f32; dv]);
+        seq.read_into(&pool, &q, &lam, &mut got);
+        oracle.read_into(&ref_pool, &q, &lam, &mut want);
+        assert_eq!(got, want, "CoW trajectory diverged from the never-shared oracle");
+        for (id, _) in cached {
+            pool.release(id);
+        }
+        seq.release(&mut pool);
+        assert_eq!(pool.in_use(), 0, "cache refs + sequence release must drain the pool");
     }
 
     /// Degenerate buckets: empty input, and an all-refused bucket on an

@@ -26,7 +26,9 @@
 //! ([`BatchedAdvance`]), bit-exact with the per-sequence
 //! [`update::advance_levels`] skeleton by sharing its per-block
 //! primitives. Position/head-dependent gate schedules live in [`gates`]
-//! ([`GateTable`]).
+//! ([`GateTable`]). Cross-request sharing of chunk-boundary states —
+//! refcounted pool blocks + copy-on-write advances + a radix tree over
+//! token-id prefixes — lives in [`prefix_cache`] ([`PrefixCache`]).
 //!
 //! The same machinery measured against a softmax KV cache is experiment
 //! E11 (decode time/memory vs. T — Table 1's right columns).
@@ -35,11 +37,13 @@ pub mod batched_advance;
 pub mod gates;
 pub mod pool;
 pub mod pooled;
+pub mod prefix_cache;
 pub(crate) mod update;
 
 pub use batched_advance::{AdvanceJob, BatchedAdvance};
 pub use gates::GateTable;
 pub use pooled::{BatchedDecoder, PooledFenwickState};
+pub use prefix_cache::PrefixCache;
 
 use crate::tensor::Mat;
 

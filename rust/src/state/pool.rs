@@ -19,6 +19,30 @@
 //! `coordinator::backend::PooledBackend`) rather than growing
 //! unboundedly; capacity planning can use [`StatePool::grow`] and the
 //! [`StatePool::peak`] accounting.
+//!
+//! ## Refcounts and copy-on-write
+//!
+//! Blocks carry a reference count so the prefix-state cache
+//! ([`crate::state::prefix_cache`]) can hand the *same* chunk-boundary
+//! level states to many sequences without copying:
+//!
+//! - [`StatePool::alloc`] returns a block with refcount 1 (sole owner) —
+//!   existing callers see no change.
+//! - [`StatePool::retain`] adds an owner; [`StatePool::release`] drops
+//!   one, and the block only returns to the free list when the last
+//!   owner releases (so "release" is always safe to call, shared or
+//!   not).
+//! - A block with refcount > 1 ([`StatePool::is_shared`]) is
+//!   **immutable**: [`StatePool::get_mut`] and the [`StatePool::axpy`]
+//!   destination assert sole ownership, so any write to shared state is
+//!   a loud bug, not silent corruption. Writers clone first
+//!   ([`StatePool::clone_block`] — a bitwise copy into a fresh block)
+//!   and release their shared handle: copy-on-write. The batched advance
+//!   (`state::batched_advance`) and the per-sequence
+//!   [`crate::state::pooled::PooledFenwickState::advance`] both perform
+//!   this clone-before-mutate step, which is what lets a sequence
+//!   admitted from cached blocks decode without ever touching shared
+//!   state.
 
 /// Handle to one pooled block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -31,6 +55,9 @@ pub struct StatePool {
     storage: Vec<f32>,
     free: Vec<usize>,
     allocated: Vec<bool>,
+    /// Owners per block (0 when free; `alloc` starts at 1). A count > 1
+    /// marks the block shared and therefore immutable (see module docs).
+    refcount: Vec<u32>,
     peak_blocks: usize,
 }
 
@@ -42,6 +69,7 @@ impl StatePool {
             storage: vec![0.0; block_elems * capacity],
             free: (0..capacity).rev().collect(),
             allocated: vec![false; capacity],
+            refcount: vec![0; capacity],
             peak_blocks: 0,
         }
     }
@@ -76,28 +104,68 @@ impl StatePool {
         let old = self.capacity();
         self.storage.resize((old + extra) * self.block_elems, 0.0);
         self.allocated.resize(old + extra, false);
+        self.refcount.resize(old + extra, 0);
         for idx in (old..old + extra).rev() {
             self.free.push(idx);
         }
     }
 
     /// Allocate a zeroed block; None if the pool is exhausted
-    /// (backpressure signal for the batcher).
+    /// (backpressure signal for the batcher). The caller is the sole
+    /// owner (refcount 1).
     pub fn alloc(&mut self) -> Option<BlockId> {
         let idx = self.free.pop()?;
         debug_assert!(!self.allocated[idx]);
         self.allocated[idx] = true;
+        self.refcount[idx] = 1;
         let s = idx * self.block_elems;
         self.storage[s..s + self.block_elems].fill(0.0);
         self.peak_blocks = self.peak_blocks.max(self.in_use());
         Some(BlockId(idx))
     }
 
-    /// Release a block back to the free list. Panics on double-free.
+    /// Add an owner to a live block (prefix-cache insertion, shared
+    /// admission). Every `retain` must be paired with a later
+    /// [`StatePool::release`].
+    pub fn retain(&mut self, id: BlockId) {
+        assert!(self.allocated[id.0], "retain of freed block {}", id.0);
+        self.refcount[id.0] += 1;
+    }
+
+    /// Drop one ownership of a block; the block returns to the free list
+    /// only when the last owner releases. Panics on double-free (more
+    /// releases than `alloc` + `retain`s).
     pub fn release(&mut self, id: BlockId) {
         assert!(self.allocated[id.0], "double free of block {}", id.0);
-        self.allocated[id.0] = false;
-        self.free.push(id.0);
+        self.refcount[id.0] -= 1;
+        if self.refcount[id.0] == 0 {
+            self.allocated[id.0] = false;
+            self.free.push(id.0);
+        }
+    }
+
+    /// Current owner count of a live block.
+    pub fn ref_count(&self, id: BlockId) -> u32 {
+        assert!(self.allocated[id.0], "use after free");
+        self.refcount[id.0]
+    }
+
+    /// More than one owner ⇒ the block is immutable and writers must
+    /// copy first (see module docs).
+    pub fn is_shared(&self, id: BlockId) -> bool {
+        self.ref_count(id) > 1
+    }
+
+    /// Bitwise copy of `src` into a freshly allocated block — THE
+    /// copy-on-write step. `None` on exhaustion (clean backpressure, no
+    /// mutation). `src` keeps its owners; the caller owns the clone.
+    pub fn clone_block(&mut self, src: BlockId) -> Option<BlockId> {
+        assert!(self.allocated[src.0], "clone of freed block {}", src.0);
+        let dst = self.alloc()?;
+        debug_assert_ne!(dst.0, src.0);
+        let (d, s) = (dst.0 * self.block_elems, src.0 * self.block_elems);
+        self.storage.copy_within(s..s + self.block_elems, d);
+        Some(dst)
     }
 
     pub fn get(&self, id: BlockId) -> &[f32] {
@@ -108,6 +176,11 @@ impl StatePool {
 
     pub fn get_mut(&mut self, id: BlockId) -> &mut [f32] {
         assert!(self.allocated[id.0], "use after free");
+        assert!(
+            self.refcount[id.0] == 1,
+            "write to shared block {} (copy-on-write violation)",
+            id.0
+        );
         let s = id.0 * self.block_elems;
         &mut self.storage[s..s + self.block_elems]
     }
@@ -127,9 +200,15 @@ impl StatePool {
         self.allocated[id.0]
     }
 
-    /// `dst += scale * src` across two blocks (bucket merge).
+    /// `dst += scale * src` across two blocks (bucket merge). `dst` must
+    /// be solely owned (copy-on-write contract); `src` may be shared.
     pub fn axpy(&mut self, dst: BlockId, src: BlockId, scale: f32) {
         assert!(self.allocated[dst.0] && self.allocated[src.0]);
+        assert!(
+            self.refcount[dst.0] == 1,
+            "axpy into shared block {} (copy-on-write violation)",
+            dst.0
+        );
         assert_ne!(dst.0, src.0);
         let (d, s) = (dst.0 * self.block_elems, src.0 * self.block_elems);
         // disjoint ranges: split_at_mut
@@ -211,6 +290,146 @@ mod tests {
         let a = pool.alloc().unwrap();
         pool.release(a);
         pool.release(a);
+    }
+
+    #[test]
+    fn retain_defers_free_until_last_release() {
+        let mut pool = StatePool::new(4, 2);
+        let a = pool.alloc().unwrap();
+        pool.get_mut(a)[0] = 3.0;
+        pool.retain(a);
+        assert_eq!(pool.ref_count(a), 2);
+        assert!(pool.is_shared(a));
+        pool.release(a); // one owner left; block stays live
+        assert_eq!(pool.in_use(), 1);
+        assert_eq!(pool.get(a)[0], 3.0);
+        assert!(!pool.is_shared(a));
+        pool.release(a);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn clone_block_is_a_bitwise_copy_with_private_ownership() {
+        let mut pool = StatePool::new(4, 3);
+        let a = pool.alloc().unwrap();
+        pool.get_mut(a).copy_from_slice(&[1.5, -0.0, 2.5e-40, f32::MIN_POSITIVE]);
+        pool.retain(a); // a is now shared (cache + sequence)
+        let b = pool.clone_block(a).unwrap();
+        assert_eq!(
+            pool.get(a)
+                .iter()
+                .map(|x| x.to_bits())
+                .collect::<Vec<_>>(),
+            pool.get(b).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "clone must be bit-identical"
+        );
+        assert_eq!(pool.ref_count(b), 1, "clone is privately owned");
+        pool.get_mut(b)[0] = 9.0; // writable: sole owner
+        assert_eq!(pool.get(a)[0], 1.5, "source untouched by writes to the clone");
+        pool.release(a);
+        pool.release(a);
+        pool.release(b);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "copy-on-write violation")]
+    fn writing_a_shared_block_panics() {
+        let mut pool = StatePool::new(4, 2);
+        let a = pool.alloc().unwrap();
+        pool.retain(a);
+        pool.get_mut(a)[0] = 1.0;
+    }
+
+    #[test]
+    #[should_panic(expected = "copy-on-write violation")]
+    fn axpy_into_a_shared_block_panics() {
+        let mut pool = StatePool::new(4, 3);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        pool.retain(a);
+        pool.axpy(a, b, 1.0);
+    }
+
+    #[test]
+    fn random_retain_release_cow_traces_never_leak_property() {
+        // The refcounted mirror of `random_workload_never_leaks_property`:
+        // random alloc / retain / release / clone-on-write traces, with a
+        // shadow refcount model. Invariants: in_use equals the number of
+        // blocks with a live shadow count, no block is reused while any
+        // owner remains (contents survive until the last release), and
+        // everything drains to zero.
+        check("pool refcount no-leak", 50, &UsizeIn(1, 500), |&seed| {
+            let mut rng = Rng::new(seed as u64 ^ 0xC0DE);
+            let mut pool = StatePool::new(4, 24);
+            // (id, shadow_refcount, tag) — tag written at alloc, must
+            // survive while any owner remains
+            let mut live: Vec<(BlockId, u32, f32)> = Vec::new();
+            let mut next_tag = 1.0f32;
+            for _ in 0..300 {
+                match rng.below(4) {
+                    0 => {
+                        if let Some(id) = pool.alloc() {
+                            let tag = next_tag;
+                            next_tag += 1.0;
+                            pool.get_mut(id)[0] = tag;
+                            live.push((id, 1, tag));
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        let i = rng.below(live.len());
+                        pool.retain(live[i].0);
+                        live[i].1 += 1;
+                    }
+                    2 if !live.is_empty() => {
+                        let i = rng.below(live.len());
+                        pool.release(live[i].0);
+                        live[i].1 -= 1;
+                        if live[i].1 == 0 {
+                            live.swap_remove(i);
+                        }
+                    }
+                    _ if !live.is_empty() => {
+                        // copy-on-write: writers of shared blocks clone
+                        // first; sole owners may write in place
+                        let i = rng.below(live.len());
+                        let (id, rc, tag) = live[i];
+                        if rc > 1 {
+                            if let Some(c) = pool.clone_block(id) {
+                                if pool.get(c)[0] != tag {
+                                    return false;
+                                }
+                                let tag2 = next_tag;
+                                next_tag += 1.0;
+                                pool.get_mut(c)[0] = tag2;
+                                pool.release(id);
+                                live[i].1 -= 1;
+                                live.push((c, 1, tag2));
+                            }
+                        } else {
+                            let tag2 = next_tag;
+                            next_tag += 1.0;
+                            pool.get_mut(id)[0] = tag2;
+                            live[i].2 = tag2;
+                        }
+                    }
+                    _ => {}
+                }
+                if pool.in_use() != live.len() {
+                    return false;
+                }
+                // no premature reuse: every owned block still holds its tag
+                if live.iter().any(|&(id, _, tag)| pool.get(id)[0] != tag) {
+                    return false;
+                }
+            }
+            for (id, rc, _) in live.drain(..) {
+                for _ in 0..rc {
+                    pool.release(id);
+                }
+            }
+            pool.in_use() == 0 && pool.peak() <= 24
+        });
     }
 
     #[test]

@@ -178,6 +178,53 @@ impl PooledFenwickState {
         Ok(seq)
     }
 
+    /// Live `(level, block)` handles in ascending level order —
+    /// prefix-cache plumbing (insertion retains these very blocks).
+    pub(crate) fn level_blocks(&self) -> Vec<(usize, BlockId)> {
+        self.levels
+            .iter()
+            .enumerate()
+            .filter_map(|(l, s)| s.map(|id| (l, id)))
+            .collect()
+    }
+
+    /// Build a sequence at position `t` directly from **shared** block
+    /// handles — the prefix-cache hit path. Where
+    /// [`PooledFenwickState::import_levels`] copies external bytes into
+    /// fresh blocks, this retains the given blocks in place (zero copies,
+    /// zero new allocations — it cannot exhaust the pool). The adopted
+    /// blocks are shared with their other owners (the cache, possibly
+    /// other sequences), so the first advance's copy-on-write step clones
+    /// before mutating; see [`crate::state::pool`]'s module docs.
+    ///
+    /// Same boundary contract as `import_levels`: `t` is a post-merge
+    /// chunk boundary, level 0 empty, each `level ≥ 1` live in the
+    /// Fenwick partition implied by `t`.
+    pub(crate) fn adopt_levels(
+        pool: &mut StatePool,
+        dk: usize,
+        dv: usize,
+        t: usize,
+        states: &[(usize, BlockId)],
+    ) -> PooledFenwickState {
+        let mut seq = PooledFenwickState::new(dk, dv);
+        for &(level, id) in states {
+            assert!(level >= 1, "level 0 is the sentinel; it is written by advance");
+            assert!(
+                level <= usize::BITS as usize && (t >> (level - 1)) & 1 == 1,
+                "level {level} is not live at position {t} (Fenwick misalignment)"
+            );
+            if seq.levels.len() <= level {
+                seq.levels.resize(level + 1, None);
+            }
+            assert!(seq.levels[level].is_none(), "duplicate level {level} in adopt");
+            pool.retain(id);
+            seq.levels[level] = Some(id);
+        }
+        seq.t = t;
+        seq
+    }
+
     /// Per-sequence λ-weighted read `o = Σ_l λ^(l) S^(l)T q` (overwrites
     /// `out`) — the matvec-loop baseline that [`BatchedDecoder`] batches.
     pub fn read_into(&self, pool: &StatePool, q: &[f32], lambda: &[f32], out: &mut [f32]) {

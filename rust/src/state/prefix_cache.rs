@@ -1,0 +1,313 @@
+//! Radix-tree prefix-state cache over the [`StatePool`] — vLLM-style
+//! prefix caching transposed onto log-linear attention's Fenwick level
+//! states.
+//!
+//! A softmax server's prefix cache shares O(T) KV pages; here the entire
+//! context of a prefix lives in the O(log T) chunk-boundary level states
+//! the chunkwise prefill engine exports (`prefill::bridge`), which makes
+//! those boundaries *cheap snapshot points*: one retained `(d_k × d_v)`
+//! block per live level per (layer, head). [`PrefixCache`] keys those
+//! snapshots by token-id prefix at **chunk granularity** — a radix tree
+//! whose edges are whole `chunk`-token runs — so a request whose prompt
+//! shares `m` leading chunks with any previously served prompt can adopt
+//! the cached boundary state (via
+//! [`PooledFenwickState::adopt_levels`](crate::state::pooled::PooledFenwickState::adopt_levels))
+//! and resume chunkwise prefill at the match point instead of re-ingesting
+//! those `m·C` tokens: the paper's O(T log T) prefill cost for a shared
+//! system prompt is paid once, then amortized across every later request.
+//!
+//! **Why token-id keys suffice.** A serving backend's embeddings,
+//! projections, and gate schedules are fixed per model instance and a
+//! boundary state is a deterministic function of (weights, gates, token
+//! ids), so an identical token prefix implies a *bit-identical* boundary
+//! hierarchy — cache validity needs no epoch or weight-hash, only that
+//! the owning backend invalidates on gate swaps (it does).
+//!
+//! **Ownership.** The cache owns one refcount on every block of every
+//! entry ([`StatePool::retain`] at insertion — entries share the blocks
+//! the exporting sequence already holds, so insertion allocates nothing
+//! and cannot fail). Sequences admitted from a hit share the same blocks;
+//! the copy-on-write step in the advance paths (see
+//! [`crate::state::pool`]'s module docs) guarantees cached bytes are
+//! never mutated. [`PrefixCache::evict_lru`] releases one entry's
+//! refcounts under pool pressure — blocks still adopted by live readers
+//! survive until those sequences retire (refcounted release), so eviction
+//! is always safe, merely un-sharing future admissions.
+
+use crate::state::pool::{BlockId, StatePool};
+
+/// Exported boundary states of one cached prefix: indexed
+/// `layer * heads + head`, each a list of live `(token_level, block)`
+/// pairs at the boundary position.
+pub type BoundaryStates = Vec<Vec<(usize, BlockId)>>;
+
+struct Entry {
+    states: BoundaryStates,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Node {
+    /// child edges, each labeled by the next `chunk` token ids
+    children: Vec<(Vec<i32>, usize)>,
+    entry: Option<Entry>,
+}
+
+/// Chunk-granular radix tree of boundary snapshots (see module docs).
+pub struct PrefixCache {
+    chunk: usize,
+    /// node 0 is the root (empty prefix; never holds an entry)
+    nodes: Vec<Node>,
+    entries: usize,
+    blocks_held: usize,
+    /// LRU clock: bumped on every lookup/insert touch
+    tick: u64,
+}
+
+impl PrefixCache {
+    /// `chunk` = the backend's prefill chunk size (boundary granularity).
+    pub fn new(chunk: usize) -> PrefixCache {
+        assert!(chunk >= 1, "chunk granularity");
+        PrefixCache { chunk, nodes: vec![Node::default()], entries: 0, blocks_held: 0, tick: 0 }
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Number of cached boundary snapshots.
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    /// Total pool blocks this cache holds a refcount on.
+    pub fn blocks_held(&self) -> usize {
+        self.blocks_held
+    }
+
+    /// Longest cached prefix of `tokens`, matching whole chunks only.
+    /// Returns `(matched_tokens, states)` for the deepest boundary with a
+    /// snapshot (and marks it most-recently used); `None` when no
+    /// boundary prefix is cached. The returned handles are still owned by
+    /// the cache — callers adopt them with a `retain` per block
+    /// (`PooledFenwickState::adopt_levels`), never take them.
+    pub fn lookup(&mut self, tokens: &[i32]) -> Option<(usize, BoundaryStates)> {
+        let mut node = 0usize;
+        let mut best: Option<(usize, usize)> = None; // (node, matched tokens)
+        let mut depth = 0usize;
+        while (depth + 1) * self.chunk <= tokens.len() {
+            let run = &tokens[depth * self.chunk..(depth + 1) * self.chunk];
+            let Some(&(_, next)) =
+                self.nodes[node].children.iter().find(|(edge, _)| edge == run)
+            else {
+                break;
+            };
+            node = next;
+            depth += 1;
+            if self.nodes[node].entry.is_some() {
+                best = Some((node, depth * self.chunk));
+            }
+        }
+        let (node, matched) = best?;
+        self.tick += 1;
+        let entry = self.nodes[node].entry.as_mut().expect("picked above");
+        entry.last_used = self.tick;
+        Some((matched, entry.states.clone()))
+    }
+
+    /// Cache the boundary snapshot of `tokens` (length must be a positive
+    /// multiple of the chunk size). Retains every block — the entry
+    /// *shares* the exporting sequence's blocks, so insertion allocates
+    /// nothing and cannot fail. A boundary that is already cached is left
+    /// as-is (determinism makes the existing snapshot bit-identical) and
+    /// merely touched. Returns whether a new entry was created.
+    pub fn insert(
+        &mut self,
+        tokens: &[i32],
+        states: &BoundaryStates,
+        pool: &mut StatePool,
+    ) -> bool {
+        assert!(
+            !tokens.is_empty() && tokens.len() % self.chunk == 0,
+            "prefix length {} is not a positive multiple of the chunk size {}",
+            tokens.len(),
+            self.chunk
+        );
+        let mut node = 0usize;
+        for run in tokens.chunks(self.chunk) {
+            node = match self.nodes[node].children.iter().find(|(edge, _)| edge == run) {
+                Some(&(_, next)) => next,
+                None => {
+                    let next = self.nodes.len();
+                    self.nodes.push(Node::default());
+                    self.nodes[node].children.push((run.to_vec(), next));
+                    next
+                }
+            };
+        }
+        self.tick += 1;
+        if let Some(entry) = self.nodes[node].entry.as_mut() {
+            entry.last_used = self.tick;
+            return false;
+        }
+        let mut held = 0usize;
+        for per_head in states {
+            for &(_, id) in per_head {
+                pool.retain(id);
+                held += 1;
+            }
+        }
+        self.nodes[node].entry = Some(Entry { states: states.clone(), last_used: self.tick });
+        self.entries += 1;
+        self.blocks_held += held;
+        true
+    }
+
+    /// Release the least-recently-used snapshot's refcounts back to the
+    /// pool (the pool-pressure valve). Blocks still adopted by live
+    /// sequences stay allocated until those sequences retire. Returns
+    /// false when the cache is already empty.
+    pub fn evict_lru(&mut self, pool: &mut StatePool) -> bool {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| n.entry.as_ref().map(|e| (e.last_used, i)))
+            .min()
+            .map(|(_, i)| i);
+        let Some(i) = victim else {
+            return false;
+        };
+        let entry = self.nodes[i].entry.take().expect("picked above");
+        self.release_entry(&entry, pool);
+        true
+    }
+
+    /// Drop every snapshot, releasing all refcounts (gate-swap
+    /// invalidation, end-of-trace leak accounting).
+    pub fn clear(&mut self, pool: &mut StatePool) {
+        for i in 0..self.nodes.len() {
+            if let Some(entry) = self.nodes[i].entry.take() {
+                self.release_entry(&entry, pool);
+            }
+        }
+        self.nodes = vec![Node::default()];
+    }
+
+    fn release_entry(&mut self, entry: &Entry, pool: &mut StatePool) {
+        for per_head in &entry.states {
+            for &(_, id) in per_head {
+                pool.release(id);
+                self.blocks_held -= 1;
+            }
+        }
+        self.entries -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a fake boundary snapshot: `n` freshly allocated blocks
+    /// tagged with `tag`, presented as one (layer, head) state list.
+    fn snapshot(pool: &mut StatePool, n: usize, tag: f32) -> BoundaryStates {
+        let mut per_head = Vec::new();
+        for j in 0..n {
+            let id = pool.alloc().unwrap();
+            pool.get_mut(id)[0] = tag + j as f32;
+            per_head.push((j + 1, id));
+        }
+        vec![per_head]
+    }
+
+    fn drop_snapshot(pool: &mut StatePool, s: &BoundaryStates) {
+        for per_head in s {
+            for &(_, id) in per_head {
+                pool.release(id);
+            }
+        }
+    }
+
+    #[test]
+    fn longest_chunk_prefix_wins_and_partial_chunks_never_match() {
+        let mut pool = StatePool::new(4, 16);
+        let mut cache = PrefixCache::new(4);
+        let s8 = snapshot(&mut pool, 2, 10.0);
+        let s4 = snapshot(&mut pool, 1, 20.0);
+        let p: Vec<i32> = (0..12).collect();
+        cache.insert(&p[..8], &s8, &mut pool);
+        cache.insert(&p[..4], &s4, &mut pool);
+        assert_eq!(cache.len(), 2);
+
+        // full 8-token prefix match beats the 4-token one
+        let (m, states) = cache.lookup(&p).unwrap();
+        assert_eq!(m, 8);
+        assert_eq!(states, s8);
+        // diverging second chunk falls back to the 4-token boundary
+        let mut q = p.clone();
+        q[5] = 99;
+        let (m, states) = cache.lookup(&q).unwrap();
+        assert_eq!(m, 4);
+        assert_eq!(states, s4);
+        // a prompt shorter than one chunk can never match
+        assert!(cache.lookup(&p[..3]).is_none());
+        // diverging first chunk: no match at all
+        let mut r = p.clone();
+        r[0] = 99;
+        assert!(cache.lookup(&r).is_none());
+
+        cache.clear(&mut pool);
+        drop_snapshot(&mut pool, &s8);
+        drop_snapshot(&mut pool, &s4);
+        assert_eq!(pool.in_use(), 0, "cache refcounts must drain");
+    }
+
+    #[test]
+    fn insert_retains_and_duplicate_insert_is_a_touch() {
+        let mut pool = StatePool::new(4, 8);
+        let mut cache = PrefixCache::new(2);
+        let s = snapshot(&mut pool, 2, 1.0);
+        let p = [1, 2, 3, 4];
+        assert!(cache.insert(&p, &s, &mut pool));
+        assert_eq!(pool.ref_count(s[0][0].1), 2, "cache holds its own ref");
+        assert!(!cache.insert(&p, &s, &mut pool), "re-insert is a touch, not a new entry");
+        assert_eq!(pool.ref_count(s[0][0].1), 2, "no double retain");
+        assert_eq!(cache.blocks_held(), 2);
+        // the exporting sequence retires; cached blocks stay live
+        drop_snapshot(&mut pool, &s);
+        assert_eq!(pool.in_use(), 2);
+        cache.clear(&mut pool);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_releases_refcounts_but_spares_live_readers() {
+        let mut pool = StatePool::new(4, 16);
+        let mut cache = PrefixCache::new(2);
+        let sa = snapshot(&mut pool, 1, 1.0);
+        let sb = snapshot(&mut pool, 1, 2.0);
+        cache.insert(&[1, 1], &sa, &mut pool);
+        cache.insert(&[2, 2], &sb, &mut pool);
+        drop_snapshot(&mut pool, &sa);
+        drop_snapshot(&mut pool, &sb);
+        // a reader adopts `a`'s block (retain), then `a` becomes LRU prey
+        let (_, a_states) = cache.lookup(&[1, 1]).unwrap();
+        let a_block = a_states[0][0].1;
+        pool.retain(a_block); // the live reader's ref
+        let _ = cache.lookup(&[2, 2]).unwrap(); // b is now more recent
+        assert!(cache.evict_lru(&mut pool), "evicts a (LRU)");
+        assert_eq!(cache.len(), 1);
+        // the reader keeps the block alive despite eviction
+        assert_eq!(pool.get(a_block)[0], 1.0, "live reader unaffected by eviction");
+        assert!(cache.lookup(&[1, 1]).is_none(), "evicted prefix no longer matches");
+        assert!(cache.evict_lru(&mut pool), "evicts b");
+        assert!(!cache.evict_lru(&mut pool), "empty cache has nothing to evict");
+        pool.release(a_block);
+        assert_eq!(pool.in_use(), 0);
+    }
+}

@@ -14,9 +14,12 @@
 //! transition loops) against either backing.
 //!
 //! The pooled path's backpressure semantics survive the unification:
-//! [`FenwickStore::can_write`] is checked **before any mutation**, so a
+//! [`FenwickStore::can_advance`] is checked **before any mutation**, so a
 //! refused step leaves the sequence untouched (the admission-control
-//! contract), and the Mat-backed store simply never refuses.
+//! contract), and the Mat-backed store simply never refuses. The pooled
+//! store additionally owns the **copy-on-write** step for prefix-cached
+//! (shared) blocks — see [`AdvancePlan`] and
+//! [`crate::state::pool`]'s module docs.
 
 use crate::attention::deltanet::{apply_householder, apply_householder_slice};
 use crate::fenwick;
@@ -55,29 +58,83 @@ pub(crate) fn write_block(s0: &mut [f32], dv: usize, k: &[f32], v: &[f32], write
     }
 }
 
-/// How many storage slots the merge of step `t` frees: the live levels in
-/// the merge range `0..=lssb(t)` collapse into one accumulator, so
-/// `live − 1` slots come back (none at `t = 0`, where nothing merges).
-/// THE capacity-check formula — shared by [`advance_levels`]'s
-/// pre-mutation `can_write` check and the batch-wide admission simulation
-/// in [`crate::state::batched_advance`], so the "an admission plan that
-/// succeeds sequentially succeeds batched" guarantee holds by
-/// construction, not by two hand-synced copies.
-pub(crate) fn merge_freed<T>(levels: &[Option<T>], t: usize) -> usize {
-    if t == 0 {
-        return 0;
+/// Refcount-aware block budget for one pooled sequence's advance at time
+/// `t` — THE capacity-check formula, shared by [`advance_levels`]'s
+/// pre-mutation check (via [`PoolStore::can_advance`]) and the batch-wide
+/// admission simulation in [`crate::state::batched_advance`], so the "an
+/// admission plan that succeeds sequentially succeeds batched" guarantee
+/// holds by construction, not by two hand-synced copies.
+///
+/// The advance costs, in execution order:
+/// 1. if the merge accumulator (lowest live level in `0..=lssb(t)`) is
+///    shared, it is cloned **before** any merge source is released, so
+///    one block must be available up front ([`AdvancePlan::clone_acc`]);
+/// 2. each *privately owned* merge source returns a block when folded in
+///    ([`AdvancePlan::freed_priv`]); shared sources merely drop a
+///    refcount and free nothing;
+/// 3. each shared level carried past the merge needs a private clone
+///    before the in-place transition ([`AdvancePlan::carried_clones`]);
+/// 4. the level-0 sentinel write takes one block.
+///
+/// Sharing can only *decrease* between planning and execution (nothing
+/// retains mid-advance), so the plan is a conservative bound: a step it
+/// admits always completes.
+pub(crate) struct AdvancePlan {
+    pub clone_acc: bool,
+    pub freed_priv: usize,
+    pub carried_clones: usize,
+}
+
+impl AdvancePlan {
+    /// Can the advance run to completion with `available` free blocks?
+    /// Two-phase check matching the execution order above: the acc clone
+    /// precedes the merge frees; everything else follows them.
+    pub fn feasible(&self, available: usize) -> bool {
+        available >= self.clone_acc as usize
+            && available + self.freed_priv - self.clone_acc as usize >= self.carried_clones + 1
     }
-    let l = fenwick::lssb(t) as usize;
-    levels.iter().take(l + 1).flatten().count().saturating_sub(1)
+
+    /// Free-block delta once the advance completes (negative = consumed).
+    pub fn net(&self) -> isize {
+        self.freed_priv as isize - self.clone_acc as isize - self.carried_clones as isize - 1
+    }
+}
+
+/// Compute the [`AdvancePlan`] for one pooled sequence (see there).
+pub(crate) fn pool_advance_plan(
+    pool: &StatePool,
+    levels: &[Option<BlockId>],
+    t: usize,
+) -> AdvancePlan {
+    let mut plan = AdvancePlan { clone_acc: false, freed_priv: 0, carried_clones: 0 };
+    // merge range 0..=lssb(t), empty at t = 0
+    let merge_hi = if t == 0 { 0 } else { fenwick::lssb(t) as usize + 1 };
+    let mut acc_seen = false;
+    for (lvl, slot) in levels.iter().enumerate() {
+        let Some(id) = slot else { continue };
+        let shared = pool.is_shared(*id);
+        if lvl < merge_hi {
+            if !acc_seen {
+                acc_seen = true;
+                plan.clone_acc = shared;
+            } else if !shared {
+                plan.freed_priv += 1;
+            }
+        } else if shared {
+            plan.carried_clones += 1;
+        }
+    }
+    plan
 }
 
 /// Storage backing for one sequence's Fenwick level states.
 pub(crate) trait FenwickStore {
     type Slot;
 
-    /// Can a sentinel write succeed after a merge that frees `freed`
-    /// slots? Checked before any mutation so a refusal is clean.
-    fn can_write(&self, freed: usize) -> bool;
+    /// Can the full advance at time `t` (merge + copy-on-write clones +
+    /// sentinel write) succeed against these levels? Checked before any
+    /// mutation so a refusal is clean.
+    fn can_advance(&self, levels: &[Option<Self::Slot>], t: usize) -> bool;
 
     /// Bucket merge: `acc += src`, then recycle `src`'s storage.
     fn merge(&mut self, acc: &mut Self::Slot, src: Self::Slot);
@@ -103,10 +160,10 @@ pub(crate) fn advance_levels<S: FenwickStore>(
     write_scale: f32,
     transition: Transition<'_>,
 ) -> Result<(), PoolExhausted> {
-    // 0) capacity check first: the merge below frees `live-1` slots and
-    //    the write takes one, so a refusal must come before any mutation.
-    let freed = merge_freed(levels, t);
-    if !store.can_write(freed) {
+    // 0) capacity check first: merges free slots, copy-on-write clones
+    //    and the sentinel write take them, so a refusal must come before
+    //    any mutation.
+    if !store.can_advance(levels, t) {
         return Err(PoolExhausted);
     }
     // 1) merge levels 0..=lssb(t) into lssb(t)+1; merged-out storage is
@@ -135,7 +192,7 @@ pub(crate) fn advance_levels<S: FenwickStore>(
         store.transition(s, &transition);
     }
     // 3) sentinel write
-    let s0 = store.write(k, v, write_scale).expect("can_write checked above");
+    let s0 = store.write(k, v, write_scale).expect("can_advance checked above");
     if levels.is_empty() {
         levels.resize_with(1, || None);
     }
@@ -155,7 +212,7 @@ pub(crate) struct MatStore<'a> {
 impl FenwickStore for MatStore<'_> {
     type Slot = Mat;
 
-    fn can_write(&self, _freed: usize) -> bool {
+    fn can_advance(&self, _levels: &[Option<Mat>], _t: usize) -> bool {
         true
     }
 
@@ -189,25 +246,45 @@ impl FenwickStore for MatStore<'_> {
 
 /// [`StatePool`]-block backing — the storage of
 /// [`super::pooled::PooledFenwickState`]. Refuses cleanly on exhaustion
-/// (the admission-backpressure signal).
+/// (the admission-backpressure signal), and performs the copy-on-write
+/// clone for shared (prefix-cached) blocks: a merge accumulator or
+/// transition target with other owners is bitwise-cloned into a private
+/// block first, so cached state is never mutated.
 pub(crate) struct PoolStore<'a> {
     pub pool: &'a mut StatePool,
     pub dv: usize,
 }
 
+impl PoolStore<'_> {
+    /// Ensure `slot` is privately owned before an in-place write: clone
+    /// shared blocks and swap the handle (dropping our shared ref). The
+    /// clone never fails after [`AdvancePlan::feasible`] admitted the
+    /// step.
+    fn make_private(&mut self, slot: &mut BlockId) {
+        if self.pool.is_shared(*slot) {
+            let clone =
+                self.pool.clone_block(*slot).expect("can_advance reserved the CoW clone");
+            self.pool.release(*slot);
+            *slot = clone;
+        }
+    }
+}
+
 impl FenwickStore for PoolStore<'_> {
     type Slot = BlockId;
 
-    fn can_write(&self, freed: usize) -> bool {
-        self.pool.available() + freed >= 1
+    fn can_advance(&self, levels: &[Option<BlockId>], t: usize) -> bool {
+        pool_advance_plan(self.pool, levels, t).feasible(self.pool.available())
     }
 
     fn merge(&mut self, acc: &mut BlockId, src: BlockId) {
+        self.make_private(acc);
         self.pool.axpy(*acc, src, 1.0);
         self.pool.release(src);
     }
 
     fn transition(&mut self, slot: &mut BlockId, tr: &Transition<'_>) {
+        self.make_private(slot);
         transition_block(self.pool.get_mut(*slot), self.dv, tr);
     }
 

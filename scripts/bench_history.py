@@ -10,10 +10,16 @@ BENCH_HISTORY.json, keyed by timestamp and (when available) the git
 revision, so per-PR perf movement can be plotted without re-running old
 checkouts (the ROADMAP's perf-trajectory-tracking item).
 
-Usage: scripts/bench_history.py [--check | --self-test] [bench_dir]
+Usage: scripts/bench_history.py [--check | --self-test | --dashboard] [bench_dir]
   bench_dir defaults to the rust/ package root (where `cargo bench` runs
   and drops its BENCH_*.json files). The history file lives next to them.
 
+  --dashboard  render BENCH_HISTORY.json as a markdown table instead of
+               folding: one row per snapshot, one column per headline
+               metric (top-level numeric bench fields whose key mentions
+               'speedup', 'tokens_per_s', or 'per_request'). Columns
+               appear in first-snapshot order; metrics a snapshot lacks
+               render as '-'.
   --check      validate BENCH_HISTORY.json instead of folding: exit
                non-zero on malformed records (missing/ill-typed
                timestamp, git_rev, or benches) or duplicates (two
@@ -105,6 +111,73 @@ def fold(bench_dir):
     os.replace(tmp, history_path)
     print(f"bench_history: appended snapshot #{len(history['runs'])} "
           f"({', '.join(sorted(records))}) -> {history_path}")
+    return 0
+
+
+HEADLINE_MARKERS = ("speedup", "tokens_per_s", "per_request")
+
+
+def headline_metrics(bench_doc):
+    """Top-level numeric fields of one bench record worth a dashboard column."""
+    if not isinstance(bench_doc, dict):
+        return {}
+    return {
+        k: v
+        for k, v in bench_doc.items()
+        if isinstance(v, (int, float)) and not isinstance(v, bool)
+        and any(m in k for m in HEADLINE_MARKERS)
+    }
+
+
+def fmt_metric(v):
+    return f"{v:,.0f}" if abs(v) >= 100 else f"{v:.3g}"
+
+
+def render_dashboard(history):
+    """BENCH_HISTORY.json contents -> a markdown table, one row per snapshot."""
+    runs = [r for r in history.get("runs", []) if isinstance(r, dict)]
+    cols = []  # (bench, key) in discovery order, stable across snapshots
+    for run in runs:
+        benches = run.get("benches")
+        if not isinstance(benches, dict):
+            continue
+        for bench in sorted(benches):
+            for key in sorted(headline_metrics(benches[bench])):
+                if (bench, key) not in cols:
+                    cols.append((bench, key))
+    lines = ["# Bench trajectory", ""]
+    if not runs or not cols:
+        lines.append("_no snapshots with headline metrics yet_")
+        return "\n".join(lines) + "\n"
+    header = ["timestamp", "git_rev"] + [f"{b}: {k}" for b, k in cols]
+    lines.append("| " + " | ".join(header) + " |")
+    lines.append("|" + "|".join(["---"] * len(header)) + "|")
+    for run in runs:
+        benches = run.get("benches") if isinstance(run.get("benches"), dict) else {}
+        cells = [str(run.get("timestamp", "?")), str(run.get("git_rev") or "-")]
+        for bench, key in cols:
+            metrics = headline_metrics(benches.get(bench, {}))
+            cells.append(fmt_metric(metrics[key]) if key in metrics else "-")
+        lines.append("| " + " | ".join(cells) + " |")
+    return "\n".join(lines) + "\n"
+
+
+def dashboard(bench_dir):
+    """Render the trajectory as markdown on stdout; return 0 if rendered."""
+    history_path = os.path.join(bench_dir, HISTORY_NAME)
+    if not os.path.exists(history_path):
+        print(f"bench_history --dashboard: no {HISTORY_NAME} in {bench_dir}; nothing to render")
+        return 0
+    try:
+        with open(history_path) as f:
+            history = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_history --dashboard: unreadable {history_path}: {e}", file=sys.stderr)
+        return 1
+    if not isinstance(history, dict):
+        print(f"bench_history --dashboard: {history_path} is not an object", file=sys.stderr)
+        return 1
+    sys.stdout.write(render_dashboard(history))
     return 0
 
 
@@ -229,6 +302,32 @@ def self_test():
             failures.append(f"idempotent fold: {len(runs)} snapshots, wanted 1")
         expect("fold output passes --check", check(d), 0)
 
+    # dashboard rendering: column discovery, late-appearing metrics,
+    # headline filtering, missing-cell placeholders
+    md = render_dashboard({"runs": [
+        dict(run_a, benches={"prefill": {"speedup_vs_token_by_token": 3.5,
+                                         "prompt_tokens": 4096}}),
+        dict(run_b, benches={"prefill": {"speedup_vs_token_by_token": 4.0,
+                                         "ttft_speedup_vs_cold": 12.5}}),
+    ]})
+    for needle, name in [
+        ("| timestamp | git_rev | prefill: speedup_vs_token_by_token |",
+         "column header"),
+        ("prefill: ttft_speedup_vs_cold", "late-appearing column"),
+        ("| 3.5 |", "metric cell"),
+        ("| - |", "missing-cell placeholder"),
+    ]:
+        if needle not in md:
+            failures.append(f"dashboard {name}: {needle!r} missing from:\n{md}")
+    if "prompt_tokens" in md:
+        failures.append("dashboard: non-headline key prompt_tokens leaked into the table")
+    with tempfile.TemporaryDirectory() as d:
+        expect("dashboard without history", dashboard(d), 0)
+        write_history(d, {"runs": [run_a, run_b]})
+        expect("dashboard on well-formed history", dashboard(d), 0)
+        write_history(d, "{not json")
+        expect("dashboard on unparsable history", dashboard(d), 1)
+
     if failures:
         for f_ in failures:
             print(f"bench_history --self-test: FAIL {f_}", file=sys.stderr)
@@ -246,11 +345,16 @@ def main():
     if "--self-test" in args:
         mode = "self-test"
         args.remove("--self-test")
+    if "--dashboard" in args:
+        mode = "dashboard"
+        args.remove("--dashboard")
     bench_dir = args[0] if args else default_bench_dir()
     if mode == "check":
         return check(bench_dir)
     if mode == "self-test":
         return self_test()
+    if mode == "dashboard":
+        return dashboard(bench_dir)
     return fold(bench_dir)
 
 
