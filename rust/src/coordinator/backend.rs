@@ -588,7 +588,43 @@ impl PooledBackend {
         if let Some(c) = self.cache.as_mut() {
             c.clear(&mut self.pool);
         }
+        self.debug_assert_no_block_leaks();
     }
+
+    /// Debug-build leak canary: every allocated pool block must be
+    /// reachable from an owner the backend knows about — a live decoding
+    /// sequence's level slots or a prefix-cache entry. Shared blocks
+    /// (cache + adopters) collapse in the set union, so the reachable set's
+    /// size must equal `pool.in_use()` exactly; a mismatch means a retain
+    /// without a release (leak) or a release the accounting missed. Runs
+    /// at the two points ownership is surrendered wholesale — sequence
+    /// retirement and cache invalidation — where a drifted refcount would
+    /// otherwise fossilize into permanently-lost capacity.
+    #[cfg(debug_assertions)]
+    fn debug_assert_no_block_leaks(&self) {
+        let mut owned = std::collections::BTreeSet::new();
+        for state in self.slots.iter().flatten() {
+            if let SeqState::Decoding(seqs) = state {
+                for seq in seqs {
+                    owned.extend(seq.level_blocks().into_iter().map(|(_, id)| id.0));
+                }
+            }
+        }
+        if let Some(cache) = self.cache.as_ref() {
+            owned.extend(cache.held_block_ids().into_iter().map(|id| id.0));
+        }
+        debug_assert_eq!(
+            owned.len(),
+            self.pool.in_use(),
+            "pool leak canary: {} blocks allocated but only {} reachable from live \
+             sequences + prefix cache",
+            self.pool.in_use(),
+            owned.len()
+        );
+    }
+
+    #[cfg(not(debug_assertions))]
+    fn debug_assert_no_block_leaks(&self) {}
 
     /// The gate schedule currently in force (layer 0's; see
     /// [`PooledBackend::layer_gates`] for the rest).
@@ -1047,6 +1083,7 @@ impl DecodeBackend for PooledBackend {
         self.reserved_total -= self.reserved[slot.0];
         self.reserved[slot.0] = 0;
         self.free_slots.push(slot.0);
+        self.debug_assert_no_block_leaks();
     }
 
     fn pool_occupancy(&self) -> (usize, usize) {

@@ -209,7 +209,10 @@ mod tests {
         let c = Corpus::new(CorpusConfig::default(), 9);
         let mut rng = Rng::new(3);
         let toks = c.train_batch(64, &mut rng);
-        let mut bigram = std::collections::HashMap::new();
+        // BTreeMap keeps even this count deterministic-by-iteration-order
+        // (the tree-wide no-HashMap convention the xtask determinism lint
+        // enforces on serving paths)
+        let mut bigram = std::collections::BTreeMap::new();
         for w in toks.chunks(64) {
             for pair in w.windows(2) {
                 *bigram.entry((pair[0], pair[1])).or_insert(0usize) += 1;

@@ -113,6 +113,7 @@ impl StatePool {
     /// Allocate a zeroed block; None if the pool is exhausted
     /// (backpressure signal for the batcher). The caller is the sole
     /// owner (refcount 1).
+    // xtask: deny_alloc
     pub fn alloc(&mut self) -> Option<BlockId> {
         let idx = self.free.pop()?;
         debug_assert!(!self.allocated[idx]);
@@ -127,6 +128,7 @@ impl StatePool {
     /// Add an owner to a live block (prefix-cache insertion, shared
     /// admission). Every `retain` must be paired with a later
     /// [`StatePool::release`].
+    // xtask: deny_alloc
     pub fn retain(&mut self, id: BlockId) {
         assert!(self.allocated[id.0], "retain of freed block {}", id.0);
         self.refcount[id.0] += 1;
@@ -135,6 +137,7 @@ impl StatePool {
     /// Drop one ownership of a block; the block returns to the free list
     /// only when the last owner releases. Panics on double-free (more
     /// releases than `alloc` + `retain`s).
+    // xtask: deny_alloc
     pub fn release(&mut self, id: BlockId) {
         assert!(self.allocated[id.0], "double free of block {}", id.0);
         self.refcount[id.0] -= 1;
@@ -168,12 +171,19 @@ impl StatePool {
         Some(dst)
     }
 
+    // xtask: deny_alloc
     pub fn get(&self, id: BlockId) -> &[f32] {
         assert!(self.allocated[id.0], "use after free");
+        debug_assert!(
+            self.refcount[id.0] > 0,
+            "read of live block {} with zero refcount (accounting drift)",
+            id.0
+        );
         let s = id.0 * self.block_elems;
         &self.storage[s..s + self.block_elems]
     }
 
+    // xtask: deny_alloc
     pub fn get_mut(&mut self, id: BlockId) -> &mut [f32] {
         assert!(self.allocated[id.0], "use after free");
         assert!(
@@ -202,6 +212,7 @@ impl StatePool {
 
     /// `dst += scale * src` across two blocks (bucket merge). `dst` must
     /// be solely owned (copy-on-write contract); `src` may be shared.
+    // xtask: deny_alloc
     pub fn axpy(&mut self, dst: BlockId, src: BlockId, scale: f32) {
         assert!(self.allocated[dst.0] && self.allocated[src.0]);
         assert!(

@@ -114,6 +114,7 @@ impl PooledFenwickState {
     ///
     /// Fails (before mutating anything) if the pool cannot supply the one
     /// fresh block the sentinel write needs after the merge's releases.
+    // xtask: deny_alloc
     pub fn advance(
         &mut self,
         pool: &mut StatePool,
@@ -218,6 +219,8 @@ impl PooledFenwickState {
                 seq.levels.resize(level + 1, None);
             }
             assert!(seq.levels[level].is_none(), "duplicate level {level} in adopt");
+            // xtask: allow(refcount): ownership transfers to the sequence's
+            // level slots; PooledFenwickState::release drops it at retirement
             pool.retain(id);
             seq.levels[level] = Some(id);
         }
@@ -227,6 +230,7 @@ impl PooledFenwickState {
 
     /// Per-sequence λ-weighted read `o = Σ_l λ^(l) S^(l)T q` (overwrites
     /// `out`) — the matvec-loop baseline that [`BatchedDecoder`] batches.
+    // xtask: deny_alloc
     pub fn read_into(&self, pool: &StatePool, q: &[f32], lambda: &[f32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.dv);
         out.fill(0.0);
@@ -310,6 +314,7 @@ impl BatchedDecoder {
     /// order equals [`PooledFenwickState::read_into`], so results are
     /// bit-exact with the per-sequence path for any thread count (each
     /// output row is owned by exactly one worker).
+    // xtask: deny_alloc
     pub fn read_batch(
         &mut self,
         pool: &StatePool,

@@ -89,6 +89,23 @@ impl PrefixCache {
         self.blocks_held
     }
 
+    /// Every [`BlockId`] the cache currently holds a refcount on, entry by
+    /// entry (duplicates possible: two snapshots may share a block). Feeds
+    /// the debug-build leak canary in `coordinator::backend` — the union of
+    /// these and the live sequences' blocks must account for every
+    /// allocated pool block.
+    pub(crate) fn held_block_ids(&self) -> Vec<BlockId> {
+        let mut ids = Vec::with_capacity(self.blocks_held);
+        for node in &self.nodes {
+            if let Some(entry) = &node.entry {
+                for per_head in &entry.states {
+                    ids.extend(per_head.iter().map(|&(_, id)| id));
+                }
+            }
+        }
+        ids
+    }
+
     /// Longest cached prefix of `tokens`, matching whole chunks only.
     /// Returns `(matched_tokens, states)` for the deepest boundary with a
     /// snapshot (and marks it most-recently used); `None` when no
@@ -157,6 +174,8 @@ impl PrefixCache {
         let mut held = 0usize;
         for per_head in states {
             for &(_, id) in per_head {
+                // xtask: allow(refcount): the cache entry owns this ref;
+                // evict_lru / clear release it via release_entry
                 pool.retain(id);
                 held += 1;
             }

@@ -33,6 +33,7 @@ use crate::tensor::{self, Mat};
 /// per-sequence [`PoolStore`] and the pool-wide batched pass
 /// ([`crate::state::batched_advance`]) so the two advance paths are
 /// bit-exact by construction.
+// xtask: deny_alloc
 pub(crate) fn transition_block(s: &mut [f32], dv: usize, tr: &Transition<'_>) {
     match tr {
         Transition::Decay(a) => {
@@ -52,6 +53,7 @@ pub(crate) fn transition_block(s: &mut [f32], dv: usize, tr: &Transition<'_>) {
 /// Accumulate `write_scale · k v^T` into a (zeroed) row-major `(d_k, d_v)`
 /// state slice — THE sentinel-write primitive, shared like
 /// [`transition_block`].
+// xtask: deny_alloc
 pub(crate) fn write_block(s0: &mut [f32], dv: usize, k: &[f32], v: &[f32], write_scale: f32) {
     for (i, &ki) in k.iter().enumerate() {
         tensor::axpy8(&mut s0[i * dv..(i + 1) * dv], v, ki * write_scale);
@@ -101,6 +103,7 @@ impl AdvancePlan {
 }
 
 /// Compute the [`AdvancePlan`] for one pooled sequence (see there).
+// xtask: deny_alloc
 pub(crate) fn pool_advance_plan(
     pool: &StatePool,
     levels: &[Option<BlockId>],
@@ -151,6 +154,7 @@ pub(crate) trait FenwickStore {
 /// transition every carried state, write the fresh `(k, v)` sentinel at
 /// level 0. `t` is the number of tokens processed so far. Fails (before
 /// mutating anything) only if the store cannot supply the sentinel block.
+// xtask: deny_alloc
 pub(crate) fn advance_levels<S: FenwickStore>(
     store: &mut S,
     levels: &mut Vec<Option<S::Slot>>,

@@ -23,7 +23,9 @@
 //! counterpart, for any thread count (asserted by the tests below).
 
 use super::{block_nn, block_nt, block_tn_diag, plan_threads};
-use crate::util::threadpool::{par_row_chunks_pooled, resident_pool};
+use crate::util::threadpool::par_row_chunks_pooled;
+#[cfg(not(loom))]
+use crate::util::threadpool::resident_pool;
 
 /// Dispatch a batch of same-shape row-major problems as one pooled
 /// row-block parallel-for over the stacked `(batch·m, n)` output.
@@ -214,7 +216,14 @@ pub fn slab_block_dispatch<F>(
             }
         }));
     }
+    #[cfg(not(loom))]
     resident_pool().scope(jobs);
+    // loom has no process-wide resident pool (no OnceLock double); the
+    // dispatch itself is what the models exercise, so run jobs inline.
+    #[cfg(loom)]
+    for job in jobs {
+        job();
+    }
 }
 
 #[cfg(test)]

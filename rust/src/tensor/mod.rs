@@ -94,8 +94,69 @@ fn plan_threads(m: usize, k: usize, n: usize) -> usize {
     current_gemm_threads().min(by_work).clamp(1, m.max(1))
 }
 
+// ---------------------------------------------------------------------------
+// Determinism sentinel. Every thread-count-invariance promise in this
+// module reduces to one fact: a (rows, rows_per_block) dispatch is ALWAYS
+// the same contiguous in-order tiling [0,b), [b,2b), …, [.., rows), so
+// each output row is written by exactly one worker with a fixed k-order.
+// `partition_signature` pins that contract as an FNV-1a hash of the
+// block boundaries; the row-block dispatcher
+// (`crate::util::threadpool::par_row_chunks_pooled`) hashes the
+// partition it actually realizes and debug-asserts equality. A refactor
+// that reorders or resizes blocks (work stealing, dynamic splits) trips
+// the sentinel instead of silently changing summation order.
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a over realized `(r0, r1)` row-block boundaries.
+pub struct PartitionSig(u64);
+
+impl PartitionSig {
+    pub fn new() -> PartitionSig {
+        PartitionSig(FNV_OFFSET)
+    }
+
+    /// Fold one block's global row range, in dispatch order.
+    pub fn fold(&mut self, r0: usize, r1: usize) {
+        for v in [r0 as u64, r1 as u64] {
+            // Hash whole u64s (not bytes): boundaries are row indices
+            // and the sentinel only needs order/coverage sensitivity.
+            self.0 ^= v;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for PartitionSig {
+    fn default() -> Self {
+        PartitionSig::new()
+    }
+}
+
+/// The pinned row partition for a `rows`-row output tiled in
+/// `rows_per_block`-row blocks: contiguous, in order, last block ragged.
+/// This is the *contract*; the dispatcher must realize exactly this.
+pub fn partition_signature(rows: usize, rows_per_block: usize) -> u64 {
+    assert!(rows_per_block > 0);
+    let mut sig = PartitionSig::new();
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let r1 = rows.min(r0 + rows_per_block);
+        sig.fold(r0, r1);
+        r0 = r1;
+    }
+    sig.finish()
+}
+
 /// The GEMM microkernel: `out_row += a * b_row`, 8-wide unrolled via
 /// `chunks_exact` so the eight FMAs vectorize.
+// xtask: deny_alloc
 #[inline(always)]
 pub fn axpy8(out_row: &mut [f32], b_row: &[f32], a: f32) {
     debug_assert_eq!(out_row.len(), b_row.len());
@@ -123,6 +184,7 @@ pub fn axpy8(out_row: &mut [f32], b_row: &[f32], a: f32) {
 // out[0..n]) so a parallel row block can pass its own sub-slice.
 // ---------------------------------------------------------------------------
 
+// xtask: deny_alloc
 fn block_nn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize, r0: usize, r1: usize) {
     for p0 in (0..k).step_by(KC) {
         let p1 = (p0 + KC).min(k);
@@ -137,6 +199,7 @@ fn block_nn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize, r0: usize
     }
 }
 
+// xtask: deny_alloc
 #[allow(clippy::too_many_arguments)]
 fn block_nn_diag(
     a: &[f32],
@@ -162,6 +225,7 @@ fn block_nn_diag(
     }
 }
 
+// xtask: deny_alloc
 fn block_nt(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize, r0: usize, r1: usize) {
     for i in r0..r1 {
         let a_row = &a[i * k..(i + 1) * k];
@@ -172,6 +236,7 @@ fn block_nt(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize, r0: usize
     }
 }
 
+// xtask: deny_alloc
 #[allow(clippy::too_many_arguments)]
 fn block_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize, r0: usize, r1: usize) {
     for p in 0..k {
@@ -183,6 +248,7 @@ fn block_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize,
     }
 }
 
+// xtask: deny_alloc
 #[allow(clippy::too_many_arguments)]
 fn block_tn_diag(
     a: &[f32],
@@ -205,6 +271,7 @@ fn block_tn_diag(
     }
 }
 
+// xtask: deny_alloc
 fn block_sparse(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize, r0: usize, r1: usize) {
     for i in r0..r1 {
         let a_row = &a[i * k..(i + 1) * k];
@@ -221,6 +288,7 @@ fn block_sparse(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize, r0: u
 /// `out (+)= A @ B` on raw row-major slices: `a` is (m,k), `b` (k,n),
 /// `out` (m,n). With `accumulate = false` the output is overwritten.
 /// Blocked + threaded per the module docs.
+// xtask: deny_alloc
 pub fn gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32], accumulate: bool) {
     assert_eq!(a.len(), m * k, "gemm a shape");
     assert_eq!(b.len(), k * n, "gemm b shape");
@@ -243,6 +311,7 @@ pub fn gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [
 
 /// `out (+)= A @ B^T`: `a` is (m,k), `b` (n,k), `out` (m,n). The `QK^T`
 /// kernel: both operands traversed row-wise.
+// xtask: deny_alloc
 pub fn gemm_nt_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32], accumulate: bool) {
     assert_eq!(a.len(), m * k, "gemm_nt a shape");
     assert_eq!(b.len(), n * k, "gemm_nt b shape");
@@ -265,6 +334,7 @@ pub fn gemm_nt_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mu
 
 /// `out (+)= A^T @ B`: `a` is (k,m), `b` (k,n), `out` (m,n). The `K^T V`
 /// state-write kernel.
+// xtask: deny_alloc
 pub fn gemm_tn_into(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32], accumulate: bool) {
     assert_eq!(a.len(), k * m, "gemm_tn a shape");
     assert_eq!(b.len(), k * n, "gemm_tn b shape");
@@ -288,6 +358,7 @@ pub fn gemm_tn_into(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], out: &mu
 /// Fused `out += diag(w) · (A @ B)`: row `i` of the product is scaled by
 /// `w[i]` as it accumulates (the decay-weighted inter-chunk read, done
 /// without materializing the product).
+// xtask: deny_alloc
 pub fn gemm_diag_acc(m: usize, k: usize, n: usize, w: &[f32], a: &[f32], b: &[f32], out: &mut [f32]) {
     assert_eq!(w.len(), m, "gemm_diag_acc w shape");
     assert_eq!(a.len(), m * k, "gemm_diag_acc a shape");
@@ -309,6 +380,7 @@ pub fn gemm_diag_acc(m: usize, k: usize, n: usize, w: &[f32], a: &[f32], b: &[f3
 /// Fused `out += A^T diag(w) B`: `a` is (k,m), `b` (k,n), `w` length k.
 /// Batched outer-product accumulate — the decay-weighted chunk state
 /// write `Σ_p w[p] · a_p b_p^T` as one kernel.
+// xtask: deny_alloc
 pub fn gemm_tn_diag_acc(k: usize, m: usize, n: usize, w: &[f32], a: &[f32], b: &[f32], out: &mut [f32]) {
     assert_eq!(w.len(), k, "gemm_tn_diag_acc w shape");
     assert_eq!(a.len(), k * m, "gemm_tn_diag_acc a shape");
@@ -331,6 +403,7 @@ pub fn gemm_tn_diag_acc(k: usize, m: usize, n: usize, w: &[f32], a: &[f32], b: &
 /// for *masked* operands (lower-triangular attention weights, λ-masked
 /// local attention) where ~half the entries are structural zeros. Dense
 /// operands should use [`gemm_into`]: the branch defeats vectorization.
+// xtask: deny_alloc
 pub fn gemm_sparse_rows(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32], accumulate: bool) {
     assert_eq!(a.len(), m * k, "gemm_sparse_rows a shape");
     assert_eq!(b.len(), k * n, "gemm_sparse_rows b shape");
@@ -671,6 +744,38 @@ pub fn assert_close(a: &Mat, b: &Mat, atol: f32, rtol: f32) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn partition_signature_pins_order_and_coverage() {
+        // Folding the realized chunks of a ragged tiling reproduces the
+        // contract signature…
+        let mut sig = PartitionSig::new();
+        for (r0, r1) in [(0usize, 4usize), (4, 8), (8, 13)] {
+            sig.fold(r0, r1);
+        }
+        assert_eq!(sig.finish(), partition_signature(13, 4));
+        // …and any deviation — reordered blocks, a gap, a different
+        // block size, a different row count — hashes differently.
+        let mut swapped = PartitionSig::new();
+        for (r0, r1) in [(4usize, 8usize), (0, 4), (8, 13)] {
+            swapped.fold(r0, r1);
+        }
+        assert_ne!(swapped.finish(), partition_signature(13, 4));
+        assert_ne!(partition_signature(13, 4), partition_signature(13, 5));
+        assert_ne!(partition_signature(13, 4), partition_signature(12, 4));
+        // Exact tilings and single-block tilings are well-defined too.
+        assert_eq!(partition_signature(8, 4), {
+            let mut s = PartitionSig::new();
+            s.fold(0, 4);
+            s.fold(4, 8);
+            s.finish()
+        });
+        assert_eq!(partition_signature(3, 64), {
+            let mut s = PartitionSig::new();
+            s.fold(0, 3);
+            s.finish()
+        });
+    }
 
     /// Unblocked, untiled, single-threaded triple loop — the reference the
     /// blocked/threaded kernels are checked against.

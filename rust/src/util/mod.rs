@@ -9,6 +9,7 @@ pub mod json;
 pub mod cli;
 pub mod logger;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;
 pub mod prop;
 

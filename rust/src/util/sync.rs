@@ -1,0 +1,29 @@
+//! Sync-primitive shim: `std::sync` in real builds, `loom::sync` under
+//! `RUSTFLAGS="--cfg loom"` model-checking builds.
+//!
+//! The thread pool (and anything else that wants its interleavings
+//! model-checked) imports `Arc`/`Mutex`/`Condvar`/`mpsc`/`thread`/
+//! `atomic` from here instead of `std::sync`. A plain build re-exports
+//! std, so this module is zero-cost and tier-1 tests never see loom; a
+//! `--cfg loom` build swaps in loom's instrumented doubles, under which
+//! `loom::model` exhaustively explores thread interleavings and memory
+//! orderings (see `tests/loom_threadpool.rs` and docs/ANALYSIS.md).
+//!
+//! Two deliberate non-exports:
+//!
+//! * `OnceLock` — loom has no double for it; the process-wide
+//!   [`crate::util::threadpool::resident_pool`] static is `#[cfg(not(loom))]`
+//!   and loom models construct (and drop) their own pools instead.
+//! * statics — loom atomics are not const-constructible, so anything
+//!   that must live in a `static` (e.g. the pool-id counter) uses
+//!   `std::sync::atomic` explicitly and stays outside the model.
+
+#[cfg(not(loom))]
+pub use std::sync::{atomic, mpsc, Arc, Condvar, Mutex};
+#[cfg(not(loom))]
+pub use std::thread;
+
+#[cfg(loom)]
+pub use loom::sync::{atomic, mpsc, Arc, Condvar, Mutex};
+#[cfg(loom)]
+pub use loom::thread;

@@ -7,12 +7,20 @@
 //! parallel map, and a rayon-style blocking [`ThreadPool::scope`] that
 //! lets non-`'static` work run on resident workers (no per-kernel thread
 //! spawns — the "pooled GEMM workers" item of the roadmap).
+//!
+//! Sync primitives come from [`crate::util::sync`], so a
+//! `RUSTFLAGS="--cfg loom"` build swaps in loom's instrumented doubles
+//! and `tests/loom_threadpool.rs` can model-check `scope` completion,
+//! panic-in-job, and shutdown ordering. The process-wide [`resident_pool`]
+//! and its `par_*` dispatchers are `#[cfg(not(loom))]` (loom has no
+//! `OnceLock` double); loom builds get a sequential
+//! [`par_row_chunks_pooled`] stand-in so the rest of the crate still
+//! compiles unchanged.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::thread;
+
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{mpsc, thread, Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -23,7 +31,41 @@ enum Msg {
 
 /// Process-unique id per pool so worker threads can be attributed to
 /// *their* pool (scope's reentrancy check must not confuse two pools).
-static POOL_IDS: AtomicUsize = AtomicUsize::new(0);
+/// Deliberately `std::sync::atomic` even under loom: loom atomics are
+/// not const-constructible in statics, and a monotonically increasing id
+/// source has no interleaving behavior worth modeling.
+static POOL_IDS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Id of the pool the current thread works for (`usize::MAX` = not a
+/// worker). Replaces the old thread-*name* prefix check: a thread-local
+/// needs no string match, works for unnamed threads, and has a loom
+/// double, so the reentrancy decision itself is part of the model.
+#[cfg(not(loom))]
+std::thread_local! {
+    static CURRENT_POOL: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+}
+#[cfg(loom)]
+loom::thread_local! {
+    static CURRENT_POOL: std::cell::Cell<usize> = std::cell::Cell::new(usize::MAX);
+}
+
+#[cfg(not(loom))]
+fn spawn_worker(
+    name: String,
+    body: impl FnOnce() + Send + 'static,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new().name(name).spawn(body).expect("spawn worker")
+}
+
+/// loom's `thread` double has plain `spawn` only; model threads don't
+/// need names (worker identity rides on `CURRENT_POOL`).
+#[cfg(loom)]
+fn spawn_worker(
+    _name: String,
+    body: impl FnOnce() + Send + 'static,
+) -> thread::JoinHandle<()> {
+    thread::spawn(body)
+}
 
 /// Fixed-size pool of worker threads consuming from a shared queue.
 pub struct ThreadPool {
@@ -31,35 +73,31 @@ pub struct ThreadPool {
     /// Mutex-wrapped so a `&ThreadPool` can be shared across threads
     /// (the resident pool is a process-wide static).
     tx: Mutex<mpsc::Sender<Msg>>,
-    /// worker thread-name prefix, unique to this pool instance
-    /// (trailing '-' makes prefix matching unambiguous: "pool1-" never
-    /// prefixes a "pool10-" worker name)
-    name_prefix: String,
+    /// Process-unique pool id; workers stamp it into `CURRENT_POOL`.
+    id: usize,
 }
 
 impl ThreadPool {
     pub fn new(n: usize) -> ThreadPool {
         assert!(n > 0);
-        let name_prefix = format!("pool{}-", POOL_IDS.fetch_add(1, Ordering::Relaxed));
+        let id = POOL_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (tx, rx) = mpsc::channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
             let rx = Arc::clone(&rx);
-            workers.push(
-                thread::Builder::new()
-                    .name(format!("{name_prefix}{i}"))
-                    .spawn(move || loop {
-                        let msg = { rx.lock().unwrap().recv() };
-                        match msg {
-                            Ok(Msg::Run(job)) => job(),
-                            Ok(Msg::Shutdown) | Err(_) => break,
-                        }
-                    })
-                    .expect("spawn worker"),
-            );
+            workers.push(spawn_worker(format!("pool{id}-{i}"), move || {
+                CURRENT_POOL.with(|c| c.set(id));
+                loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Msg::Run(job)) => job(),
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                }
+            }));
         }
-        ThreadPool { workers, tx: Mutex::new(tx), name_prefix }
+        ThreadPool { workers, tx: Mutex::new(tx), id }
     }
 
     /// Submit a job for asynchronous execution.
@@ -71,33 +109,93 @@ impl ThreadPool {
             .expect("pool closed");
     }
 
+    /// Is the calling thread one of this pool's own workers?
+    fn on_own_worker(&self) -> bool {
+        CURRENT_POOL.with(|c| c.get() == self.id)
+    }
+
     /// Run a batch of non-`'static` jobs on the pool, blocking until all
     /// of them complete (scoped-threads semantics on resident workers).
     ///
     /// Worker panics are caught so the completion counter always drains,
-    /// then re-raised here. Called from one of *this pool's own* worker
-    /// threads the jobs run inline instead (a blocked worker waiting on
-    /// its own pool would deadlock a single-worker pool); workers of
-    /// other pools dispatch normally.
+    /// then re-raised here once every job has finished. Called from one
+    /// of *this pool's own* worker threads the jobs run inline instead
+    /// (a blocked worker waiting on its own pool would deadlock a
+    /// single-worker pool); workers of other pools dispatch normally.
+    ///
+    /// Soundness hinges on one guarantee — **`scope` never returns, by
+    /// any path, while a dispatched job can still be running** — which
+    /// the completion barrier below enforces even if dispatch itself
+    /// panics. The loom model in `tests/loom_threadpool.rs` checks the
+    /// completion/panic/shutdown interleavings; the miri test in
+    /// `tests/miri_invariants.rs` checks the borrow erasure.
     pub fn scope<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
         if jobs.is_empty() {
             return;
         }
-        let on_own_worker = thread::current()
-            .name()
-            .is_some_and(|n| n.starts_with(self.name_prefix.as_str()));
-        if on_own_worker || self.size() == 1 {
+        if self.on_own_worker() || self.size() == 1 {
             for job in jobs {
                 job();
             }
             return;
         }
-        let sync = Arc::new((Mutex::new(jobs.len()), Condvar::new()));
+        let total = jobs.len();
+        // (jobs still running or not yet accounted, completion signal)
+        let sync = Arc::new((Mutex::new(total), Condvar::new()));
         let panicked = Arc::new(AtomicBool::new(false));
+
+        /// Drop guard that re-establishes the completion barrier on
+        /// *every* exit path out of `scope`'s dispatch loop: on the
+        /// normal path it waits for all dispatched jobs; if dispatch
+        /// panics partway (queue closed), it first subtracts the jobs
+        /// that were never handed to a worker (they were dropped, not
+        /// run) and then waits for the ones that were. Unwinding past
+        /// live borrowed-lifetime jobs is thereby impossible.
+        struct CompletionBarrier<'a> {
+            sync: &'a (Mutex<usize>, Condvar),
+            undispatched: usize,
+        }
+        impl Drop for CompletionBarrier<'_> {
+            fn drop(&mut self) {
+                let (left, cv) = self.sync;
+                // A poisoned counter would mean a worker panicked while
+                // holding it — impossible (only arithmetic runs under
+                // the lock) — but if it ever happens the barrier cannot
+                // be trusted, and returning would let 'env borrows
+                // escape into running jobs: abort instead of UB.
+                let mut n = match left.lock() {
+                    Ok(g) => g,
+                    Err(_) => std::process::abort(),
+                };
+                *n -= self.undispatched;
+                while *n > 0 {
+                    n = match cv.wait(n) {
+                        Ok(g) => g,
+                        Err(_) => std::process::abort(),
+                    };
+                }
+            }
+        }
+
+        let mut barrier = CompletionBarrier { sync: &*sync, undispatched: total };
         for job in jobs {
-            // SAFETY: this function blocks below until every job has
-            // signalled completion, so everything borrowed by `job`
-            // (lifetime 'env) strictly outlives its execution.
+            // SAFETY: erasing 'env to 'static is sound because `scope`
+            // never returns or unwinds while an erased job can still
+            // run:
+            //  * every job handed to a worker decrements the completion
+            //    counter exactly once — a panicking job is caught
+            //    (`catch_unwind` below) and still decrements, and panic
+            //    payloads are `'static` by construction, so no 'env
+            //    borrow can escape through one;
+            //  * `barrier` waits on that counter on both the normal and
+            //    the unwind path (see `CompletionBarrier`); a job that
+            //    was never dispatched because `execute` panicked is
+            //    dropped without running (its captures are plain
+            //    borrows) and subtracted via `undispatched`;
+            //  * if the barrier is unrecoverable (poisoned counter) the
+            //    guard aborts rather than return early.
+            // Every borrow captured by `job` (lifetime 'env) therefore
+            // strictly outlives its execution.
             let job: Job = unsafe {
                 std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
             };
@@ -114,12 +212,10 @@ impl ThreadPool {
                     cv.notify_all();
                 }
             });
+            barrier.undispatched -= 1;
         }
-        let (left, cv) = &*sync;
-        let mut left = left.lock().unwrap();
-        while *left > 0 {
-            left = cv.wait(left).unwrap();
-        }
+        // Blocks until every dispatched job has completed.
+        drop(barrier);
         if panicked.load(Ordering::SeqCst) {
             panic!("job panicked in ThreadPool::scope");
         }
@@ -151,8 +247,9 @@ impl Drop for ThreadPool {
 /// queue handoff instead of a thread spawn, which is what makes
 /// many-small-GEMM regimes (decode batching, short chunks) worth
 /// threading at all.
+#[cfg(not(loom))]
 pub fn resident_pool() -> &'static ThreadPool {
-    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    static POOL: std::sync::OnceLock<ThreadPool> = std::sync::OnceLock::new();
     POOL.get_or_init(|| {
         let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         ThreadPool::new(n.max(1))
@@ -162,6 +259,7 @@ pub fn resident_pool() -> &'static ThreadPool {
 /// Parallel map over items using transient scoped threads; preserves order.
 /// For CPU-bound work on this single-core testbed it degrades gracefully
 /// to near-sequential execution.
+#[cfg(not(loom))]
 pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -205,6 +303,7 @@ where
 /// scheduler under the tensor GEMM kernels is [`par_row_chunks_pooled`]
 /// (same contract, resident workers); this version is kept as the
 /// spawn-per-call baseline and the equivalence oracle in the tests.
+#[cfg(not(loom))]
 pub fn par_row_chunks<F>(out: &mut [f32], row_len: usize, rows_per_block: usize, f: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
@@ -235,6 +334,14 @@ where
 /// [`resident_pool`] workers instead of transient scoped threads. This is
 /// the scheduler under the tensor GEMM kernels ([`crate::tensor::gemm_into`]
 /// and friends) and the batched Fenwick decode read.
+///
+/// Debug builds carry the determinism sentinel: the realized dispatch
+/// partition is hashed and checked against
+/// [`crate::tensor::partition_signature`], the pinned row-tiling
+/// contract every thread-count-invariance promise rests on. A refactor
+/// that changes how blocks are carved (work stealing, dynamic splits)
+/// trips the sentinel instead of silently changing summation order.
+#[cfg(not(loom))]
 pub fn par_row_chunks_pooled<F>(out: &mut [f32], row_len: usize, rows_per_block: usize, f: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
@@ -247,6 +354,23 @@ where
         let rows = out.len() / row_len;
         f(0, rows, out);
         return;
+    }
+    #[cfg(debug_assertions)]
+    {
+        let rows = out.len() / row_len;
+        let mut sig = crate::tensor::PartitionSig::new();
+        let mut r0 = 0usize;
+        for chunk in out.chunks(block_elems) {
+            let r1 = r0 + chunk.len() / row_len;
+            sig.fold(r0, r1);
+            r0 = r1;
+        }
+        debug_assert_eq!(
+            sig.finish(),
+            crate::tensor::partition_signature(rows, rows_per_block),
+            "determinism sentinel: realized row-block partition deviates from the pinned \
+             arithmetic tiling ({rows} rows, {rows_per_block} rows/block)"
+        );
     }
     let f = &f;
     let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
@@ -263,7 +387,27 @@ where
     resident_pool().scope(jobs);
 }
 
-#[cfg(test)]
+/// Sequential stand-in so the rest of the crate compiles under loom
+/// model-checking builds (the resident pool static has no loom double;
+/// GEMM internals are not what loom is modeling).
+#[cfg(loom)]
+pub fn par_row_chunks_pooled<F>(out: &mut [f32], row_len: usize, rows_per_block: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && rows_per_block > 0);
+    let block_elems = rows_per_block * row_len;
+    for (bi, chunk) in out.chunks_mut(block_elems).enumerate() {
+        let r0 = bi * rows_per_block;
+        let r1 = r0 + chunk.len() / row_len;
+        f(r0, r1, chunk);
+    }
+}
+
+// Not compiled under loom: these tests use std-only pieces (recv_timeout,
+// par_map, scoped threads); the loom interleaving models live in
+// tests/loom_threadpool.rs.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
@@ -339,6 +483,34 @@ mod tests {
         pool.scope(jobs);
         // scope returned => every job has finished (borrow of counter ends here)
         assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn scope_panicking_job_reraises_after_all_jobs_complete() {
+        // The regression test for the lifetime-erasure contract: one job
+        // panics, yet scope (a) still waits for every other job, (b)
+        // only then re-raises. If the barrier broke, the borrow of
+        // `done` below would be dangling inside still-running jobs.
+        let pool = ThreadPool::new(2);
+        let done = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|i| {
+                let done = &done;
+                Box::new(move || {
+                    if i == 3 {
+                        panic!("deliberate test panic in scope job");
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| pool.scope(jobs)));
+        assert!(result.is_err(), "scope must re-raise the job panic");
+        assert_eq!(
+            done.load(Ordering::SeqCst),
+            7,
+            "every non-panicking job must have completed before scope unwound"
+        );
     }
 
     #[test]

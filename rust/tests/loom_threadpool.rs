@@ -1,0 +1,111 @@
+//! loom model-checking of the thread-pool concurrency substrate.
+//!
+//! Compiled (and meaningful) only under `RUSTFLAGS="--cfg loom"`, which
+//! swaps every sync primitive the pool uses for loom's instrumented
+//! doubles via `util/sync.rs`. Each `loom::model` closure below is then
+//! executed under **every** feasible thread interleaving and memory
+//! ordering, so a passing model is a proof over the explored state space
+//! rather than a lucky schedule:
+//!
+//! ```sh
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_threadpool
+//! ```
+//!
+//! Under a plain build this file is empty (`#![cfg(loom)]`), so tier-1
+//! `cargo test` neither compiles nor needs the loom crate. The models
+//! are deliberately tiny — loom's state space is exponential in
+//! threads × synchronization operations — but each one pins exactly one
+//! contract of [`loglinear::util::threadpool::ThreadPool`] that the
+//! serving stack's soundness argument leans on (see the SAFETY comment
+//! in `ThreadPool::scope` and docs/ANALYSIS.md):
+//!
+//! 1. `scope` never returns while a dispatched job is still running
+//!    (the lifetime-erasure barrier),
+//! 2. a panicking job still drains the barrier, and `scope` re-raises
+//!    only after every sibling job finished,
+//! 3. pool shutdown runs every already-queued job before workers exit.
+
+#![cfg(loom)]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use loglinear::util::threadpool::ThreadPool;
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::Arc;
+
+/// Contract 1 — completion barrier. Two workers, two borrowed-lifetime
+/// jobs: when `scope` returns, both jobs must have fully executed, under
+/// every interleaving of dispatch, execution, and the condvar handshake.
+/// The counter lives on the model's stack, so any schedule in which
+/// `scope` returned early would be a genuine use-after-free of `'env`
+/// borrows — exactly what the `CompletionBarrier` forbids.
+#[test]
+fn scope_completion_barrier_holds_under_all_interleavings() {
+    loom::model(|| {
+        let pool = ThreadPool::new(2);
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+            .map(|_| {
+                let counter = &counter;
+                Box::new(move || {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(jobs);
+        // scope returned => every job ran and its borrow of `counter` ended
+        assert_eq!(counter.load(Ordering::SeqCst), 2);
+    });
+}
+
+/// Contract 2 — panic-during-job. One of two jobs panics; the worker
+/// catches it, still decrements the barrier, and `scope` re-raises only
+/// after the sibling job has completed. In every interleaving the
+/// observable outcome must be the same: `scope` unwinds *and* the
+/// surviving job's side effect is visible.
+#[test]
+fn scope_reraises_job_panic_after_sibling_jobs_complete() {
+    loom::model(|| {
+        let pool = ThreadPool::new(2);
+        let done = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+            .map(|i| {
+                let done = &done;
+                Box::new(move || {
+                    if i == 0 {
+                        panic!("deliberate model panic");
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        let result = catch_unwind(AssertUnwindSafe(|| pool.scope(jobs)));
+        assert!(result.is_err(), "scope must re-raise the job panic");
+        assert_eq!(
+            done.load(Ordering::SeqCst),
+            1,
+            "the non-panicking job must have finished before scope unwound"
+        );
+    });
+}
+
+/// Contract 3 — shutdown ordering. Jobs queued with `execute` before the
+/// pool is dropped must all run: `Drop` enqueues one `Shutdown` message
+/// per worker *behind* the queued jobs on the FIFO channel and then
+/// joins, so no interleaving may discard queued work or let a worker
+/// exit past an unprocessed job.
+#[test]
+fn shutdown_runs_every_queued_job_before_workers_exit() {
+    loom::model(|| {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..2 {
+            let counter = Arc::clone(&counter);
+            pool.execute(move || {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // sends Shutdown x2, joins both workers
+        assert_eq!(counter.load(Ordering::SeqCst), 2);
+    });
+}

@@ -1,0 +1,11 @@
+//! Known-bad fixture: a waiver with no justification (linted under
+//! `src/state/`). Reasonless waivers must (a) be flagged by the `waiver`
+//! lint and (b) fail to suppress the underlying finding — otherwise
+//! `xtask: allow(...)` becomes a magic incantation instead of a
+//! documented exemption.
+
+use std::collections::HashMap; // xtask: allow(determinism)
+
+pub fn count(m: &HashMap<u64, f32>) -> usize {
+    m.len()
+}

@@ -1,0 +1,21 @@
+//! Known-bad fixture: an `unsafe` block with no `// SAFETY:` contract
+//! (linted under `src/util/`). This is the exact shape of the thread
+//! pool's lifetime erasure — a transmute whose soundness rests on a
+//! completion barrier the code itself cannot express — which is why a
+//! bare one is never acceptable: the contract lives only in the comment.
+
+/// Erases the job's borrow lifetime with no stated justification.
+pub fn erase<'env>(
+    job: Box<dyn FnOnce() + Send + 'env>,
+) -> Box<dyn FnOnce() + Send + 'static> {
+    unsafe { std::mem::transmute(job) }
+}
+
+/// With the contract spelled out — must NOT fire.
+pub fn erase_documented<'env>(
+    job: Box<dyn FnOnce() + Send + 'env>,
+) -> Box<dyn FnOnce() + Send + 'static> {
+    // SAFETY: the caller guarantees the erased job is joined before
+    // anything it borrows can be dropped (completion barrier).
+    unsafe { std::mem::transmute(job) }
+}

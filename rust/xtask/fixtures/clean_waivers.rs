@@ -1,0 +1,48 @@
+//! Clean fixture: every lint's trigger present, every one covered by a
+//! well-formed waiver or `SAFETY:` contract (linted under `src/state/`).
+//! The self-test asserts zero findings here — proof that the documented
+//! escape hatches actually work, so a waiver is never worked around by
+//! restructuring code to dodge the scanner.
+
+use std::collections::HashMap; // xtask: allow(determinism): size bookkeeping only, never iterated
+
+pub struct Pool {
+    refs: Vec<u32>,
+}
+
+pub struct BlockId(pub usize);
+
+impl Pool {
+    pub fn retain(&mut self, id: &BlockId) {
+        self.refs[id.0] += 1;
+    }
+}
+
+pub fn count(sizes: &HashMap<u64, usize>) -> usize { // xtask: allow(determinism): .len() only
+    sizes.len()
+}
+
+/// Ownership transfer: the cache entry owns the new reference and the
+/// eviction path releases it.
+pub fn adopt_into_cache(pool: &mut Pool, id: &BlockId) {
+    // xtask: allow(refcount): reference owned by the cache entry; evict_lru releases it
+    pool.retain(id);
+}
+
+pub fn read_first(xs: &[f32]) -> f32 {
+    debug_assert!(!xs.is_empty());
+    // SAFETY: callers uphold `!xs.is_empty()` (asserted above in debug
+    // builds), so index 0 is in bounds.
+    unsafe { *xs.get_unchecked(0) }
+}
+
+// xtask: deny_alloc
+pub fn decode_step(out: &mut [f32], xs: &[f32], scratch: &mut Vec<f32>) {
+    if scratch.is_empty() {
+        // xtask: allow(hot_alloc): one-time warm-up snapshot, amortized to zero per token
+        *scratch = xs.to_vec();
+    }
+    for (o, x) in out.iter_mut().zip(xs.iter()) {
+        *o = *x;
+    }
+}

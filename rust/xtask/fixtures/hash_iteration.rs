@@ -1,0 +1,23 @@
+//! Known-bad fixture: `HashMap` iteration order reaching dispatch order
+//! in a serving-path module (linted under `src/coordinator/`). The lint
+//! must fire on every `HashMap`/`HashSet` mention in code — the `use`
+//! line and both signatures below.
+//!
+//! This is the bug class the determinism lint exists for: the batch here
+//! would be dispatched in randomized hash order, so two identical runs
+//! produce different GEMM accumulation orders and the differential trace
+//! harness can no longer promise bit-exact replays.
+
+use std::collections::{HashMap, HashSet};
+
+pub fn dispatch_order(pending: &HashMap<u64, f32>) -> Vec<u64> {
+    let mut order = Vec::new();
+    for (&seq_id, _) in pending.iter() {
+        order.push(seq_id);
+    }
+    order
+}
+
+pub fn active_set(order: &[u64]) -> HashSet<u64> {
+    order.iter().copied().collect()
+}

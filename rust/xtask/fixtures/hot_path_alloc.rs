@@ -1,0 +1,19 @@
+//! Known-bad fixture: allocations inside a function marked
+//! `xtask: deny_alloc` (linted under `src/tensor/`). The decode hot path
+//! runs once per generated token per sequence; a `Vec::new`/`to_vec`
+//! there turns the steady-state loop into an allocator benchmark and
+//! wrecks the latency tail the workspace-reuse design exists to protect.
+
+// xtask: deny_alloc
+pub fn decode_step(xs: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    let snapshot = xs.to_vec();
+    out.extend_from_slice(&snapshot);
+    out.clone()
+}
+
+/// Unmarked sibling doing the same thing — must NOT fire (the lint is
+/// opt-in by marker; cold paths may allocate freely).
+pub fn cold_setup(xs: &[f32]) -> Vec<f32> {
+    xs.to_vec()
+}

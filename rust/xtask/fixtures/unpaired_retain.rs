@@ -1,0 +1,37 @@
+//! Known-bad fixture: a pool reference taken via `retain()` with no
+//! `release()` in the same function and no ownership-transfer waiver
+//! (linted under `src/state/`). Leaked refcounts are exactly how the
+//! copy-on-write pool quietly fills up: the block is never freed, the
+//! admission control back-pressures, and nothing points at the culprit.
+
+pub struct Pool {
+    refs: Vec<u32>,
+}
+
+pub struct BlockId(pub usize);
+
+impl Pool {
+    pub fn retain(&mut self, id: &BlockId) {
+        self.refs[id.0] += 1;
+    }
+
+    pub fn release(&mut self, id: &BlockId) {
+        self.refs[id.0] -= 1;
+    }
+}
+
+/// Takes a second owner on `id` and drops it on the floor.
+pub fn leak_a_ref(pool: &mut Pool, id: &BlockId) {
+    pool.retain(id);
+}
+
+/// Properly paired — must NOT fire.
+pub fn borrow_briefly(pool: &mut Pool, id: &BlockId) {
+    pool.retain(id);
+    pool.release(id);
+}
+
+/// `Vec::retain` with a predicate — must NOT fire either.
+pub fn prune(live: &mut Vec<u32>) {
+    live.retain(|&x| x != 0);
+}

@@ -1,0 +1,385 @@
+//! The four repo-specific invariant lints, plus the waiver checker.
+//!
+//! Catalogue (see docs/ANALYSIS.md for the full contracts):
+//!
+//! * `determinism` — no `HashMap`/`HashSet` in the serving-path modules
+//!   (`src/coordinator/`, `src/state/`, `src/prefill/`, `src/tensor/`).
+//!   Iteration order there can reach logits or dispatch order, and the
+//!   whole stack's safety lock is the bit-exact differential trace
+//!   harness; use `BTreeMap`/`BTreeSet` or sorted vecs.
+//! * `refcount` — a function that calls `StatePool::retain` (any
+//!   `.retain(` whose argument is not a `|…|` predicate, to exclude
+//!   `Vec::retain`) must also call `.release(` somewhere in its body, or
+//!   carry an ownership-transfer waiver documenting where the reference
+//!   goes.
+//! * `unsafe` — every `unsafe` token carries a `// SAFETY:` comment on
+//!   the same line or in the contiguous comment block directly above.
+//! * `hot_alloc` — functions marked `// xtask: deny_alloc` (decode /
+//!   advance hot paths) must not contain allocation tokens
+//!   (`Vec::new`, `vec!`, `.clone(`, `.to_vec(`, `Box::new`, …).
+//!
+//! Waiver syntax, uniform across lints: a comment on the offending line
+//! or within the two lines above reading
+//! `xtask: allow(<lint>): <non-empty reason>`. A waiver without the
+//! reason (or naming an unknown lint) is itself reported, as lint
+//! `waiver` — an undocumented exemption is exactly the convention-rot
+//! this pass exists to prevent.
+
+use crate::scan::{next_nonspace, token_positions, SourceFile};
+
+/// Lint names accepted by `xtask: allow(<lint>)`.
+pub const LINT_NAMES: &[&str] = &["determinism", "refcount", "unsafe", "hot_alloc"];
+
+/// Serving-path directories covered by the determinism lint.
+const DET_DIRS: &[&str] = &["src/coordinator/", "src/state/", "src/prefill/", "src/tensor/"];
+
+/// Allocation tokens denied inside `// xtask: deny_alloc` functions.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "Vec::with_capacity",
+    "vec!",
+    ".to_vec(",
+    ".clone(",
+    ".to_owned(",
+    // no trailing `(` — must also catch turbofish `.collect::<T>()`
+    ".collect",
+    "Box::new",
+    "String::new",
+    "format!",
+];
+
+pub struct Finding {
+    pub lint: &'static str,
+    pub rel: String,
+    /// 1-based, ready for `path:line` display.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.rel, self.line, self.lint, self.msg)
+    }
+}
+
+/// Run every lint over one file; findings sorted by (line, lint).
+pub fn lint_file(f: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    determinism(f, &mut out);
+    refcount(f, &mut out);
+    unsafe_hygiene(f, &mut out);
+    hot_alloc(f, &mut out);
+    waiver_syntax(f, &mut out);
+    out.sort_by(|a, b| (a.line, a.lint).cmp(&(b.line, b.lint)));
+    out
+}
+
+struct Waiver {
+    lint: String,
+    has_reason: bool,
+}
+
+/// Parse `xtask: allow(<lint>): <reason>` out of one comment line.
+fn parse_waiver(comment: &str) -> Option<Waiver> {
+    let idx = comment.find("xtask: allow(")?;
+    let rest = &comment[idx + "xtask: allow(".len()..];
+    let close = rest.find(')')?;
+    let lint = rest[..close].trim().to_string();
+    let after = rest[close + 1..].trim_start();
+    let has_reason = after.strip_prefix(':').is_some_and(|r| !r.trim().is_empty());
+    Some(Waiver { lint, has_reason })
+}
+
+/// Is a finding of `lint` at (0-based) `line` covered by a *valid*
+/// waiver on that line or within the two lines above?
+fn waived(f: &SourceFile, line: usize, lint: &str) -> bool {
+    (line.saturating_sub(2)..=line).any(|l| {
+        parse_waiver(&f.comments[l]).is_some_and(|w| w.lint == lint && w.has_reason)
+    })
+}
+
+fn determinism(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !DET_DIRS.iter().any(|d| f.rel.starts_with(d)) {
+        return;
+    }
+    for (ln, code) in f.code.iter().enumerate() {
+        for tok in ["HashMap", "HashSet"] {
+            if token_positions(code, tok).is_empty() || waived(f, ln, "determinism") {
+                continue;
+            }
+            out.push(Finding {
+                lint: "determinism",
+                rel: f.rel.clone(),
+                line: ln + 1,
+                msg: format!(
+                    "{tok} in a serving-path module: iteration order is nondeterministic and \
+                     must never reach numeric computation or dispatch order — use \
+                     BTreeMap/BTreeSet or a sorted Vec"
+                ),
+            });
+        }
+    }
+}
+
+fn refcount(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (ln, code) in f.code.iter().enumerate() {
+        for col in token_positions(code, ".retain(") {
+            // `Vec::retain(|x| …)` takes a predicate; pool retains take
+            // a block id. Distinguish on the first argument character.
+            if next_nonspace(&f.code, ln, col + ".retain(".len()) == Some('|') {
+                continue;
+            }
+            if f.in_test_span(ln) {
+                continue;
+            }
+            let Some(func) = f.enclosing_fn(ln) else { continue };
+            let (a, b) = func.body.expect("enclosing_fn only returns bodied fns");
+            let released =
+                f.code[a..=b].iter().any(|l| !token_positions(l, ".release(").is_empty());
+            if released || waived(f, ln, "refcount") {
+                continue;
+            }
+            out.push(Finding {
+                lint: "refcount",
+                rel: f.rel.clone(),
+                line: ln + 1,
+                msg: format!(
+                    "`{}` takes a pool reference via retain() but never calls release(); \
+                     pair it or document the ownership transfer with \
+                     `xtask: allow(refcount): <where the ref goes>`",
+                    func.name
+                ),
+            });
+        }
+    }
+}
+
+fn unsafe_hygiene(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (ln, code) in f.code.iter().enumerate() {
+        for _ in token_positions(code, "unsafe") {
+            if has_safety_comment(f, ln) || waived(f, ln, "unsafe") {
+                continue;
+            }
+            out.push(Finding {
+                lint: "unsafe",
+                rel: f.rel.clone(),
+                line: ln + 1,
+                msg: "unsafe without a `// SAFETY:` contract on the same line or in the \
+                      comment block directly above"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// `// SAFETY:` on the finding line, or anywhere in the contiguous run
+/// of comment-only / attribute lines directly above it.
+fn has_safety_comment(f: &SourceFile, line: usize) -> bool {
+    if f.comments[line].contains("SAFETY:") {
+        return true;
+    }
+    let mut l = line;
+    while l > 0 {
+        l -= 1;
+        let code_blank = f.code[l].trim().is_empty();
+        let attr = f.code[l].trim_start().starts_with("#[");
+        if !(code_blank && !f.comments[l].is_empty()) && !attr {
+            return false;
+        }
+        if f.comments[l].contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+fn hot_alloc(f: &SourceFile, out: &mut Vec<Finding>) {
+    for func in &f.fns {
+        let Some((a, b)) = func.body else { continue };
+        if !deny_alloc_marked(f, func.line) {
+            continue;
+        }
+        for ln in a..=b {
+            for tok in ALLOC_TOKENS {
+                if token_positions(&f.code[ln], tok).is_empty() || waived(f, ln, "hot_alloc") {
+                    continue;
+                }
+                out.push(Finding {
+                    lint: "hot_alloc",
+                    rel: f.rel.clone(),
+                    line: ln + 1,
+                    msg: format!(
+                        "`{tok}` inside `{}`, which is marked `xtask: deny_alloc` (decode/advance \
+                         hot path): allocations here turn the steady-state token loop O(alloc)",
+                        func.name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Does the contiguous comment/attribute block above the `fn` line (or a
+/// trailing comment on it) carry the `xtask: deny_alloc` marker?
+fn deny_alloc_marked(f: &SourceFile, fn_line: usize) -> bool {
+    if f.comments[fn_line].contains("xtask: deny_alloc") {
+        return true;
+    }
+    let mut l = fn_line;
+    let mut steps = 0;
+    while l > 0 && steps < 12 {
+        l -= 1;
+        steps += 1;
+        let code_blank = f.code[l].trim().is_empty();
+        let comment_only = code_blank && !f.comments[l].is_empty();
+        let attr = f.code[l].trim_start().starts_with("#[");
+        if !comment_only && !attr {
+            return false;
+        }
+        if f.comments[l].contains("xtask: deny_alloc") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Malformed waivers are findings too: an exemption without a reason (or
+/// for an unknown lint) silently rots into folklore.
+fn waiver_syntax(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (ln, comment) in f.comments.iter().enumerate() {
+        let Some(w) = parse_waiver(comment) else { continue };
+        if !LINT_NAMES.contains(&w.lint.as_str()) {
+            out.push(Finding {
+                lint: "waiver",
+                rel: f.rel.clone(),
+                line: ln + 1,
+                msg: format!(
+                    "waiver names unknown lint `{}` (known: {})",
+                    w.lint,
+                    LINT_NAMES.join(", ")
+                ),
+            });
+        } else if !w.has_reason {
+            out.push(Finding {
+                lint: "waiver",
+                rel: f.rel.clone(),
+                line: ln + 1,
+                msg: format!(
+                    "waiver for `{}` has no justification — write \
+                     `xtask: allow({}): <why this is sound>` (reasonless waivers do not \
+                     suppress the finding)",
+                    w.lint, w.lint
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::SourceFile;
+
+    fn lints_on(rel: &str, src: &str) -> Vec<Finding> {
+        lint_file(&SourceFile::parse(rel, src))
+    }
+
+    #[test]
+    fn determinism_is_dir_scoped() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(lints_on("src/state/x.rs", src).len(), 1);
+        assert_eq!(lints_on("src/data/x.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn determinism_waiver_with_reason_suppresses() {
+        let ok = "use std::collections::HashMap; // xtask: allow(determinism): counts only\n";
+        assert!(lints_on("src/state/x.rs", ok).is_empty());
+        let bad = "use std::collections::HashMap; // xtask: allow(determinism)\n";
+        let got = lints_on("src/state/x.rs", bad);
+        // Reasonless waiver: the original finding stands AND the waiver
+        // itself is flagged.
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().any(|f| f.lint == "determinism"));
+        assert!(got.iter().any(|f| f.lint == "waiver"));
+    }
+
+    #[test]
+    fn refcount_requires_release_or_waiver() {
+        let bad = "fn leak(p: &mut Pool, id: BlockId) {\n    p.retain(id);\n}\n";
+        let got = lints_on("src/state/x.rs", bad);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].lint, "refcount");
+        assert_eq!(got[0].line, 2);
+
+        let paired = "fn ok(p: &mut Pool, a: BlockId, b: BlockId) {\n    p.retain(a);\n    p.release(b);\n}\n";
+        assert!(lints_on("src/state/x.rs", paired).is_empty());
+
+        let waived = "fn adopt(p: &mut Pool, id: BlockId) {\n    // xtask: allow(refcount): ref transferred to cache entry\n    p.retain(id);\n}\n";
+        assert!(lints_on("src/state/x.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn vec_retain_predicates_are_not_pool_retains() {
+        let src = "fn prune(v: &mut Vec<u32>) {\n    v.retain(|x| *x > 0);\n}\n";
+        assert!(lints_on("src/state/x.rs", src).is_empty());
+        // …including when the closure starts on the next line.
+        let src2 = "fn prune(v: &mut Vec<u32>) {\n    v.retain(\n        |x| *x > 0,\n    );\n}\n";
+        assert!(lints_on("src/state/x.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn retain_inside_test_modules_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        pool.retain(id);\n    }\n}\n";
+        assert!(lints_on("src/state/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = "fn f() {\n    unsafe { danger() }\n}\n";
+        let got = lints_on("src/util/x.rs", bad);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].lint, "unsafe");
+
+        let same_line = "fn f() {\n    unsafe { danger() } // SAFETY: checked above\n}\n";
+        assert!(lints_on("src/util/x.rs", same_line).is_empty());
+
+        let block_above = "fn f() {\n    // SAFETY: `danger` only reads, and the buffer\n    // outlives this call (see the scope barrier).\n    unsafe { danger() }\n}\n";
+        assert!(lints_on("src/util/x.rs", block_above).is_empty());
+
+        let gap = "fn f() {\n    // SAFETY: stale, detached contract\n    let x = 1;\n    unsafe { danger() }\n}\n";
+        assert_eq!(lints_on("src/util/x.rs", gap).len(), 1);
+    }
+
+    #[test]
+    fn hot_alloc_fires_only_in_marked_fns() {
+        let unmarked = "fn cold() -> Vec<f32> {\n    Vec::new()\n}\n";
+        assert!(lints_on("src/tensor/x.rs", unmarked).is_empty());
+
+        let marked = "// xtask: deny_alloc\nfn hot(xs: &[f32]) -> Vec<f32> {\n    xs.to_vec()\n}\n";
+        let got = lints_on("src/tensor/x.rs", marked);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].lint, "hot_alloc");
+        assert_eq!(got[0].line, 3);
+
+        let clean = "// xtask: deny_alloc\n#[inline]\nfn hot(xs: &mut [f32]) {\n    for x in xs.iter_mut() { *x *= 2.0; }\n}\n";
+        assert!(lints_on("src/tensor/x.rs", clean).is_empty());
+
+        let waived = "// xtask: deny_alloc\nfn hot(xs: &[f32]) -> Vec<f32> {\n    // xtask: allow(hot_alloc): cold-start snapshot, not per-token\n    xs.to_vec()\n}\n";
+        assert!(lints_on("src/tensor/x.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn unknown_lint_waivers_are_flagged() {
+        let src = "// xtask: allow(speed): because\nfn f() {}\n";
+        let got = lints_on("src/util/x.rs", src);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].lint, "waiver");
+    }
+
+    #[test]
+    fn tokens_in_comments_and_strings_do_not_fire() {
+        let src = "// HashMap would be wrong here\nfn f() -> &'static str {\n    \"HashMap\"\n}\n";
+        assert!(lints_on("src/state/x.rs", src).is_empty());
+    }
+}

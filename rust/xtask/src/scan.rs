@@ -1,0 +1,528 @@
+//! Comment/string-aware source model for the lint passes.
+//!
+//! The lints in [`crate::lints`] are token scans, so the first job is to
+//! make token scanning *sound*: a `HashMap` in a doc comment or a string
+//! literal must never fire the determinism lint, and a waiver written in
+//! code (inside a string) must never silence one. [`scrub`] runs a small
+//! lexer state machine over the file and splits every line into a *code*
+//! projection (comments and string contents blanked to spaces, columns
+//! preserved) and a *comment* projection (the comment text on that line).
+//! Lints search the code projection; waiver/`SAFETY:` checks search the
+//! comment projection. On top of that, [`find_fns`] brace-matches `fn`
+//! bodies (for the function-scoped lints) and [`find_test_spans`] locates
+//! `#[cfg(test)] mod` regions so test-only code can be exempted where a
+//! lint's contract is about serving paths.
+//!
+//! The lexer understands line/nested-block comments, string literals with
+//! escapes (incl. multi-line), `r"…"`/`r#"…"#` raw strings, char literals
+//! vs lifetime ticks, and byte literals. It is deliberately *not* a full
+//! Rust lexer — it only needs to be exact about where comments and
+//! strings begin and end, which the above covers for this codebase and
+//! the fixture corpus (asserted by the unit tests below).
+
+use std::fs;
+use std::path::Path;
+
+/// One scanned `.rs` file.
+pub struct SourceFile {
+    /// Path relative to the scan root, `/`-separated (e.g.
+    /// `src/state/pool.rs`). Dir-scoped lints match on this.
+    pub rel: String,
+    /// Code projection, one entry per source line: comments and string
+    /// *contents* replaced by spaces (quotes kept), columns preserved.
+    pub code: Vec<String>,
+    /// Comment projection: the comment text found on each line
+    /// (including the `//` / `/*` markers), empty if none.
+    pub comments: Vec<String>,
+    /// Every `fn` item found, in source order (nested fns included).
+    pub fns: Vec<FnSpan>,
+    /// Inclusive 0-based line ranges of `#[cfg(test)] mod … { … }`.
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+/// A `fn` item: where its `fn` keyword sits and the inclusive line range
+/// of its `{ … }` body (`None` for bodyless trait-method declarations).
+pub struct FnSpan {
+    pub name: String,
+    pub line: usize,
+    pub body: Option<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, src: &str) -> SourceFile {
+        let (code, comments) = scrub(src);
+        let fns = find_fns(&code);
+        let test_spans = find_test_spans(&code);
+        SourceFile { rel: rel.to_string(), code, comments, fns, test_spans }
+    }
+
+    pub fn load(root: &Path, rel: &str) -> std::io::Result<SourceFile> {
+        let src = fs::read_to_string(root.join(rel))?;
+        Ok(SourceFile::parse(rel, &src))
+    }
+
+    /// Is this (0-based) line inside a `#[cfg(test)] mod` block?
+    pub fn in_test_span(&self, line: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// The innermost `fn` whose body contains `line`.
+    pub fn enclosing_fn(&self, line: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.body.is_some_and(|(a, b)| a <= line && line <= b))
+            .min_by_key(|f| {
+                let (a, b) = f.body.unwrap();
+                b - a
+            })
+    }
+}
+
+pub fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte positions of `tok` in `line` occurring at identifier boundaries:
+/// if `tok` starts (ends) with an identifier char, the preceding
+/// (following) byte must not be one. `vec!` therefore matches in
+/// `vec![0.0; n]` but `Hash` does not match inside `HashMap`.
+pub fn token_positions(line: &str, tok: &str) -> Vec<usize> {
+    let bytes = line.as_bytes();
+    let first_ident = tok.chars().next().is_some_and(is_ident);
+    let last_ident = tok.chars().next_back().is_some_and(is_ident);
+    let mut out = Vec::new();
+    for (pos, _) in line.match_indices(tok) {
+        if first_ident && pos > 0 && is_ident(bytes[pos - 1] as char) {
+            continue;
+        }
+        let end = pos + tok.len();
+        if last_ident && end < bytes.len() && is_ident(bytes[end] as char) {
+            continue;
+        }
+        out.push(pos);
+    }
+    out
+}
+
+/// First non-whitespace char at or after byte `col` of line `line`,
+/// scanning across subsequent lines.
+pub fn next_nonspace(code: &[String], line: usize, col: usize) -> Option<char> {
+    let mut ln = line;
+    let mut start = col;
+    while ln < code.len() {
+        if let Some(c) = code[ln][start.min(code[ln].len())..].chars().find(|c| !c.is_whitespace())
+        {
+            return Some(c);
+        }
+        ln += 1;
+        start = 0;
+    }
+    None
+}
+
+/// The lexer: split `src` into per-line (code, comment) projections.
+fn scrub(src: &str) -> (Vec<String>, Vec<String>) {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Normal,
+        Line,
+        Block(u32),
+        Str,
+        RawStr(u32),
+        Chr,
+    }
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut code_lines: Vec<String> = Vec::new();
+    let mut com_lines: Vec<String> = Vec::new();
+    let mut code = String::new();
+    let mut com = String::new();
+    let mut st = St::Normal;
+    // Last non-whitespace code char, for `r"…"`-vs-identifier decisions.
+    let mut prev_code = ' ';
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            code_lines.push(std::mem::take(&mut code));
+            com_lines.push(std::mem::take(&mut com));
+            if st == St::Line {
+                st = St::Normal;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Normal => {
+                let next = cs.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::Line;
+                    code.push_str("  ");
+                    com.push_str("//");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(1);
+                    code.push_str("  ");
+                    com.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    code.push('"');
+                    com.push(' ');
+                    prev_code = '"';
+                    i += 1;
+                } else if c == 'r' && !is_ident(prev_code) && raw_str_hashes(&cs, i + 1).is_some() {
+                    let h = raw_str_hashes(&cs, i + 1).unwrap();
+                    st = St::RawStr(h);
+                    code.push('r');
+                    for _ in 0..h {
+                        code.push('#');
+                    }
+                    code.push('"');
+                    for _ in 0..h as usize + 2 {
+                        com.push(' ');
+                    }
+                    prev_code = '"';
+                    i += h as usize + 2;
+                } else if c == '\'' {
+                    // Char literal or lifetime tick. `'\…'` and `'x'`
+                    // are literals; anything else (`'env`, `'_`) is a
+                    // lifetime and only the tick is consumed.
+                    if next == Some('\\') {
+                        st = St::Chr;
+                        code.push('\'');
+                        com.push(' ');
+                        i += 1;
+                    } else if cs.get(i + 2) == Some(&'\'') && next.is_some_and(|ch| ch != '\'') {
+                        code.push_str("' '");
+                        com.push_str("   ");
+                        prev_code = '\'';
+                        i += 3;
+                    } else {
+                        code.push('\'');
+                        com.push(' ');
+                        prev_code = '\'';
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    com.push(' ');
+                    if !c.is_whitespace() {
+                        prev_code = c;
+                    }
+                    i += 1;
+                }
+            }
+            St::Line => {
+                com.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    st = St::Block(d + 1);
+                    com.push_str("/*");
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '*' && cs.get(i + 1) == Some(&'/') {
+                    st = if d == 1 { St::Normal } else { St::Block(d - 1) };
+                    com.push_str("*/");
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    com.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' && i + 1 < n && cs[i + 1] != '\n' {
+                    code.push_str("  ");
+                    com.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Normal;
+                    code.push('"');
+                    com.push(' ');
+                    prev_code = '"';
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    com.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' {
+                    let mut k = 0u32;
+                    while k < h && cs.get(i + 1 + k as usize) == Some(&'#') {
+                        k += 1;
+                    }
+                    if k == h {
+                        st = St::Normal;
+                        code.push('"');
+                        for _ in 0..h {
+                            code.push('#');
+                        }
+                        for _ in 0..h as usize + 1 {
+                            com.push(' ');
+                        }
+                        prev_code = '"';
+                        i += h as usize + 1;
+                    } else {
+                        code.push(' ');
+                        com.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code.push(' ');
+                    com.push(' ');
+                    i += 1;
+                }
+            }
+            St::Chr => {
+                if c == '\\' && i + 1 < n {
+                    code.push_str("  ");
+                    com.push_str("  ");
+                    i += 2;
+                } else if c == '\'' {
+                    st = St::Normal;
+                    code.push('\'');
+                    com.push(' ');
+                    prev_code = '\'';
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    com.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !com.is_empty() {
+        code_lines.push(code);
+        com_lines.push(com);
+    }
+    (code_lines, com_lines)
+}
+
+/// If `cs[from..]` is `#*"` (a raw-string opener after an `r`), the
+/// number of `#`s; else `None`.
+fn raw_str_hashes(cs: &[char], from: usize) -> Option<u32> {
+    let mut j = from;
+    let mut h = 0u32;
+    while cs.get(j) == Some(&'#') {
+        h += 1;
+        j += 1;
+    }
+    if cs.get(j) == Some(&'"') {
+        Some(h)
+    } else {
+        None
+    }
+}
+
+/// Find every `fn` item in the code projection and brace-match its body.
+fn find_fns(code: &[String]) -> Vec<FnSpan> {
+    // Flatten to a (char, line) stream so signatures and bodies can span
+    // lines without special cases.
+    let mut chars: Vec<(char, usize)> = Vec::new();
+    for (ln, l) in code.iter().enumerate() {
+        for ch in l.chars() {
+            chars.push((ch, ln));
+        }
+        chars.push(('\n', ln));
+    }
+    let n = chars.len();
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let (c, ln) = chars[i];
+        let kw = c == 'f'
+            && i + 1 < n
+            && chars[i + 1].0 == 'n'
+            && (i == 0 || !is_ident(chars[i - 1].0))
+            && (i + 2 >= n || !is_ident(chars[i + 2].0));
+        if !kw {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        while j < n && chars[j].0.is_whitespace() {
+            j += 1;
+        }
+        let mut name = String::new();
+        while j < n && is_ident(chars[j].0) {
+            name.push(chars[j].0);
+            j += 1;
+        }
+        if name.is_empty() {
+            // `fn(...)` pointer type, not an item.
+            i += 2;
+            continue;
+        }
+        // Scan the signature for the body `{` at bracket depth 0; a `;`
+        // first means a bodyless declaration.
+        let mut depth = 0i32;
+        let mut body = None;
+        while j < n {
+            match chars[j].0 {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                ';' if depth == 0 => break,
+                '{' if depth == 0 => {
+                    let start_ln = chars[j].1;
+                    let mut braces = 1i32;
+                    let mut k = j + 1;
+                    while k < n && braces > 0 {
+                        match chars[k].0 {
+                            '{' => braces += 1,
+                            '}' => braces -= 1,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    let end_ln = chars[k.saturating_sub(1)].1;
+                    body = Some((start_ln, end_ln));
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        fns.push(FnSpan { name, line: ln, body });
+        // Continue from the signature end; nested fns inside the body
+        // are still discovered because the scan walks *into* it.
+        i = j;
+    }
+    fns
+}
+
+/// Inclusive line spans of `#[cfg(test)] mod … { … }` blocks.
+fn find_test_spans(code: &[String]) -> Vec<(usize, usize)> {
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    for ln in 0..code.len() {
+        if code[ln].contains("#[cfg(test)]") || code[ln].contains("#[cfg(all(test") {
+            // The `mod` keyword is on this line or shortly after
+            // (other attributes may intervene).
+            for ml in ln..code.len().min(ln + 4) {
+                if spans.iter().any(|&(a, b)| a <= ml && ml <= b) {
+                    break;
+                }
+                if !token_positions(&code[ml], "mod").is_empty() {
+                    if let Some(end) = brace_match_from(code, ml) {
+                        spans.push((ml, end));
+                    }
+                    break;
+                }
+            }
+        }
+    }
+    spans
+}
+
+/// Line of the `}` matching the first `{` at or after line `from`.
+fn brace_match_from(code: &[String], from: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (ln, l) in code.iter().enumerate().skip(from) {
+        for c in l.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        return Some(ln);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_scrubbed_from_code() {
+        let sf = SourceFile::parse(
+            "src/x.rs",
+            "let a = \"HashMap in a string\"; // HashMap in a comment\nlet b = 1;\n",
+        );
+        assert!(!sf.code[0].contains("HashMap"));
+        assert!(sf.comments[0].contains("HashMap in a comment"));
+        assert_eq!(sf.code[1].trim(), "let b = 1;");
+    }
+
+    #[test]
+    fn lifetimes_do_not_open_char_literals() {
+        let src = "fn f<'env>(x: &'env str) -> char { 'x' }\nlet y = HashMap::new();\n";
+        let sf = SourceFile::parse("src/x.rs", src);
+        // The char literal payload is blanked but the second line is
+        // still live code — i.e. the tick did not swallow the rest of
+        // the file.
+        assert!(sf.code[1].contains("HashMap"));
+        assert!(!sf.code[0].contains("'x'"));
+    }
+
+    #[test]
+    fn escaped_quotes_and_raw_strings() {
+        let src = "let a = \"q\\\"HashMap\\\"\"; let b = r#\"HashMap\"#; let c = 'c';\nHashSet\n";
+        let sf = SourceFile::parse("src/x.rs", src);
+        assert!(!sf.code[0].contains("HashMap"));
+        assert!(sf.code[1].contains("HashSet"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ code_here\n";
+        let sf = SourceFile::parse("src/x.rs", src);
+        assert!(sf.code[0].contains("code_here"));
+        assert!(!sf.code[0].contains("still"));
+        assert!(sf.comments[0].contains("inner"));
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies_and_skip_declarations() {
+        let src = "trait T {\n    fn decl(&self) -> usize;\n}\nfn outer() {\n    let c = |x: usize| x + 1;\n    fn inner() { body(); }\n    c(2);\n}\n";
+        let sf = SourceFile::parse("src/x.rs", src);
+        let names: Vec<&str> = sf.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["decl", "outer", "inner"]);
+        assert!(sf.fns[0].body.is_none());
+        assert_eq!(sf.fns[1].body, Some((3, 7)));
+        assert_eq!(sf.fns[2].body, Some((5, 5)));
+        // Innermost attribution: line 5 belongs to `inner`.
+        assert_eq!(sf.enclosing_fn(5).unwrap().name, "inner");
+        assert_eq!(sf.enclosing_fn(6).unwrap().name, "outer");
+    }
+
+    #[test]
+    fn test_spans_are_detected() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    use super::*;\n    #[test]\n    fn t() { helper(); }\n}\nfn also_live() {}\n";
+        let sf = SourceFile::parse("src/x.rs", src);
+        assert_eq!(sf.test_spans, vec![(2, 6)]);
+        assert!(sf.in_test_span(5));
+        assert!(!sf.in_test_span(0));
+        assert!(!sf.in_test_span(7));
+    }
+
+    #[test]
+    fn token_positions_respect_ident_boundaries() {
+        assert!(token_positions("let m: HashMap<u64, f32>;", "HashMap").len() == 1);
+        assert!(token_positions("let m = NotAHashMapType;", "HashMap").is_empty());
+        assert_eq!(token_positions("vec![0.0; n]", "vec!").len(), 1);
+        assert_eq!(token_positions("s.retain(x); q.retain(y)", ".retain(").len(), 2);
+    }
+
+    #[test]
+    fn next_nonspace_crosses_lines() {
+        let code = vec!["a.retain(".to_string(), "    |x| x".to_string()];
+        assert_eq!(next_nonspace(&code, 0, 9), Some('|'));
+    }
+}

@@ -28,11 +28,42 @@ for seed in 20260730 987654321; do
     PROP_SEED=$seed cargo test -q --lib -- property
 done
 
-echo "== lint: clippy -D warnings =="
+echo "== lint: clippy -D warnings (config pinned in rust/clippy.toml) =="
 cargo clippy -- -D warnings
 
 echo "== lint: fmt --check =="
 cargo fmt --check
+
+# Invariant lints (docs/ANALYSIS.md): determinism (no HashMap/HashSet in
+# serving paths), refcount pairing, unsafe hygiene, hot-path allocation.
+# The self-test proves each lint still fires on its known-bad fixture
+# before the clean pass over the real tree is trusted.
+echo "== lint: xtask invariant lints (self-test, then tree) =="
+cargo run -q -p xtask -- lint --self-test
+cargo run -q -p xtask -- lint
+cargo test -q -p xtask
+
+# Memory-model pass: the tests also run natively in tier-1; under miri
+# every load/store is checked against the aliasing and initialization
+# rules. -Zmiri-ignore-leaks: the resident worker pool is intentionally
+# process-lived and never joined.
+echo "== miri: pool/dispatch/scope memory-model invariants =="
+if cargo miri --version >/dev/null 2>&1; then
+    MIRIFLAGS="-Zmiri-ignore-leaks" cargo miri test --test miri_invariants
+else
+    echo "cargo-miri not installed — skipping (rustup component add miri)" >&2
+fi
+
+# Interleaving pass: loom model-checks scope completion / panic-in-job /
+# shutdown ordering across all feasible schedules. Gated on the loom
+# crate actually resolving (it is an optional, cfg(loom)-only dep that
+# an offline cargo cache may not carry).
+echo "== loom: threadpool interleaving models =="
+if RUSTFLAGS="--cfg loom" cargo build -q --release --test loom_threadpool 2>/dev/null; then
+    RUSTFLAGS="--cfg loom" cargo test -q --release --test loom_threadpool
+else
+    echo "loom unavailable in the cargo cache — skipping model checking" >&2
+fi
 
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== bench smoke (--quick): fig4 + table1 + decode + prefill, emits BENCH_*.json =="
