@@ -61,11 +61,10 @@ fn main() -> anyhow::Result<()> {
             s.p99 * 1e3
         );
     }
-    let occ: f64 =
-        stats.batch_occupancy.iter().sum::<f64>() / stats.batch_occupancy.len().max(1) as f64;
     println!(
         "mean batch occupancy {:.2}  peak dense state bytes {}",
-        occ, stats.peak_state_bytes
+        stats.mean_occupancy(),
+        stats.peak_state_bytes
     );
     println!("\nfirst completions:");
     for r in results.iter().take(4) {

@@ -8,11 +8,29 @@
 //!
 //! Run: `cargo bench --bench decode_latency [-- --quick]`
 
+use std::time::{Duration, Instant};
+
 use loglinear::attention::softmax::KvCacheDecoder;
 use loglinear::bench::section;
 use loglinear::coordinator::backend::{DecodeBackend, PooledBackend, SeqSlot, TransitionKind};
+use loglinear::coordinator::batcher::BatchPolicy;
+use loglinear::coordinator::server::DecodeServer;
+use loglinear::coordinator::GenRequest;
+use loglinear::obs;
+use loglinear::util::json::Json;
 use loglinear::util::stats::Summary;
 use loglinear::util::Rng;
+
+/// Where the decode bench family records machine-readable headlines.
+/// `decode_batched` owns the file (and runs first in `scripts/ci.sh`);
+/// this bench merges its tracing/TTFT headlines into the same record.
+const OUT_PATH: &str = "BENCH_decode.json";
+
+/// Bound on obs hook sites crossed by one L2xH2 pooled decode step:
+/// ~6 span guards (per-layer advance/read + projection + logits) plus
+/// ~6 flop-accounting calls (projection/logits GEMMs, batched reads),
+/// doubled for margin.
+const HOOK_SITES_PER_STEP: f64 = 24.0;
 
 fn window_p50_us(samples: &[f64]) -> f64 {
     Summary::of(samples).p50 * 1e6
@@ -139,4 +157,107 @@ fn main() {
         "  pooled L2xH2 blocks in use: {} (4 entries x live levels)",
         l2.backend.pool().in_use()
     );
+
+    // ---- tracing on/off overhead (the obs recorder A/B) --------------
+    section("tracing overhead: obs recorder off vs on (pooled L2xH2 decode)");
+    let warm = 1024usize;
+    let steps = if quick { 1024 } else { 4096 };
+    let mut run = PooledRun::new(2, 2, dk, warm + 2 * steps + 16);
+    for t in 0..warm {
+        run.step((t % 128) as i32, t);
+    }
+    run.times.clear();
+    obs::disable();
+    for t in warm..warm + steps {
+        run.step((t % 128) as i32, t);
+    }
+    let off = Summary::of(&run.times);
+    run.times.clear();
+    obs::enable_with_capacity(1 << 15);
+    for t in warm + steps..warm + 2 * steps {
+        run.step((t % 128) as i32, t);
+    }
+    let drained = obs::drain();
+    obs::disable();
+    let on = Summary::of(&run.times);
+    let spans_per_step = (drained.events.len() as u64 + drained.dropped) as f64 / steps as f64;
+    let tracing_overhead_pct = (on.p50 / off.p50 - 1.0) * 100.0;
+    println!(
+        "  p50 us/step: off {:.2}  on {:.2}  ({:+.2}% traced, {:.1} spans/step)",
+        off.p50 * 1e6,
+        on.p50 * 1e6,
+        tracing_overhead_pct,
+        spans_per_step
+    );
+
+    // Disabled-mode regression: the hooks are compiled in, so their cost
+    // with the recorder OFF is what every untraced serving step pays.
+    // Measure one disabled span-guard + flop-account pair directly and
+    // scale by a conservative per-step hook-site bound.
+    let m = 1_000_000u64;
+    let t0 = Instant::now();
+    for i in 0..m {
+        let g = obs::span(obs::SpanCat::DecodeStep, i);
+        obs::account_flops(2, 4);
+        std::hint::black_box(&g);
+    }
+    let pair_ns = t0.elapsed().as_secs_f64() * 1e9 / m as f64;
+    let tracing_disabled_overhead_pct =
+        HOOK_SITES_PER_STEP * pair_ns / (off.p50 * 1e9) * 100.0;
+    println!(
+        "  disabled hook pair {pair_ns:.2} ns; {HOOK_SITES_PER_STEP:.0} sites/step \
+         => {tracing_disabled_overhead_pct:.3}% of a decode step"
+    );
+    assert!(
+        tracing_disabled_overhead_pct < 2.0,
+        "tracing-disabled decode-step regression must stay under 2%: \
+         {tracing_disabled_overhead_pct:.3}%"
+    );
+
+    // ---- served TTFT / inter-token latency (ServerStats histograms) --
+    section("served latency: TTFT and inter-token gaps through DecodeServer");
+    let backend = PooledBackend::with_model_config(
+        128, 2, 2, TransitionKind::Mamba2, dk, dk, 16, 8192, 0xE11,
+    );
+    let mut srv = DecodeServer::with_backend(backend, BatchPolicy::new(vec![1, 4], Duration::ZERO));
+    for id in 0..8u64 {
+        let prompt: Vec<i32> = (0..33).map(|i| ((id as i64 * 11 + i * 3) % 128) as i32).collect();
+        srv.submit(GenRequest { id, prompt, max_new: 16 }).expect("submit");
+    }
+    let mut guard_steps = 0;
+    while srv.pending() > 0 {
+        srv.step().expect("serve step");
+        guard_steps += 1;
+        assert!(guard_steps < 100_000, "served run made no progress");
+    }
+    let stats = srv.stats.clone();
+    let ttft = stats.ttft_seconds.summary().expect("8 requests streamed");
+    let gap = stats.inter_token_seconds.summary().expect("gaps recorded");
+    println!(
+        "  ttft us: mean {:.1}  p50 {:.1}  p99 {:.1}   inter-token us: p50 {:.1}  p99 {:.1}",
+        ttft.mean * 1e6,
+        ttft.p50 * 1e6,
+        ttft.p99 * 1e6,
+        gap.p50 * 1e6,
+        gap.p99 * 1e6
+    );
+
+    // ---- merge headlines into BENCH_decode.json ----------------------
+    let doc = std::fs::read_to_string(OUT_PATH)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .filter(|j| matches!(j, Json::Obj(_)))
+        .unwrap_or_else(Json::obj)
+        .set("tracing_overhead_pct", tracing_overhead_pct)
+        .set("tracing_disabled_overhead_pct", tracing_disabled_overhead_pct)
+        .set("decode_p50_us_tracing_off", off.p50 * 1e6)
+        .set("decode_p50_us_tracing_on", on.p50 * 1e6)
+        .set("spans_per_step", spans_per_step)
+        .set("ttft_p50_us", ttft.p50 * 1e6)
+        .set("ttft_p99_us", ttft.p99 * 1e6)
+        .set("inter_token_p99_us", gap.p99 * 1e6);
+    match std::fs::write(OUT_PATH, doc.pretty()) {
+        Ok(()) => println!("\nmerged tracing/TTFT headlines into {OUT_PATH}"),
+        Err(e) => eprintln!("\nfailed to write {OUT_PATH}: {e}"),
+    }
 }

@@ -40,7 +40,9 @@ use loglinear::state::pool::StatePool;
 use loglinear::state::pooled::PooledFenwickState;
 use loglinear::state::{GateTable, Transition};
 use loglinear::tensor::{self, Mat};
+use loglinear::obs;
 use loglinear::util::json::Json;
+use loglinear::util::stats::ols;
 use loglinear::util::Rng;
 
 const OUT_PATH: &str = "BENCH_prefill.json";
@@ -523,6 +525,42 @@ fn main() {
         "\n  score_tokens_per_s: {score_tps:.0} ({score_speedup:.2}x vs token-by-token replay)"
     );
 
+    // ---- kernel flop accounting: flops/token vs prompt length --------
+    // The obs GEMM hooks attribute every dense and batched matmul; over
+    // chunkwise scoring the per-token flop cost must grow like
+    // a + b·log2 T (level reads touch O(log T) Fenwick levels) — the
+    // paper's O(T log T) prefill claim measured from the kernels, not
+    // from wall clock.
+    section("kernel flop accounting: flops/token vs prompt length (chunkwise scoring)");
+    let fl_lengths: &[usize] =
+        if quick { &[128, 256, 512] } else { &[128, 256, 512, 1024, 2048] };
+    let mut fl_per_token: Vec<f64> = Vec::new();
+    let mut flrng = Rng::new(0xF10);
+    for &ft in fl_lengths {
+        obs::enable_with_capacity(1 << 10); // resets the flop counters
+        let mut b = PooledBackend::with_model_config(
+            64, 1, 1, TransitionKind::Mamba2, 8, 8, 16, 4096, 0xF10,
+        );
+        let toks: Vec<i32> = (0..ft).map(|_| flrng.below(64) as i32).collect();
+        std::hint::black_box(score_prompt(&mut b, &toks));
+        let flops = obs::total_flops();
+        obs::drain();
+        obs::disable();
+        assert!(flops > 0, "T={ft}: GEMM hooks must attribute flops");
+        fl_per_token.push(flops as f64 / ft as f64);
+    }
+    let fl_log_t: Vec<f64> = fl_lengths.iter().map(|&v| (v as f64).log2()).collect();
+    let (_fl_a, fl_b, fl_r2) = ols(&fl_log_t, &fl_per_token);
+    println!("{:>8} {:>16}", "T", "flops/token");
+    for (i, &ft) in fl_lengths.iter().enumerate() {
+        println!("{ft:>8} {:>16.0}", fl_per_token[i]);
+    }
+    println!("  semilog fit: flops/token = a + {fl_b:.1}*log2(T), r2 = {fl_r2:.4}");
+    assert!(
+        fl_b > 0.0 && fl_r2 > 0.9,
+        "flops/token must fit a + b*log2 T (b={fl_b}, r2={fl_r2}): {fl_per_token:?}"
+    );
+
     // ---- machine-readable record (BENCH_prefill.json) ----
     let previous = std::fs::read_to_string(OUT_PATH)
         .ok()
@@ -606,6 +644,24 @@ fn main() {
                 .set("ttft_cold_secs", ttft_cold)
                 .set("ttft_hit_secs", ttft_hit)
                 .set("ttft_speedup_vs_cold", ttft_speedup),
+        )
+        .set(
+            "flop_accounting",
+            Json::obj()
+                .set(
+                    "per_token",
+                    Json::Arr(
+                        fl_lengths
+                            .iter()
+                            .zip(&fl_per_token)
+                            .map(|(&tt, &f)| {
+                                Json::obj().set("prompt_tokens", tt).set("flops_per_token", f)
+                            })
+                            .collect(),
+                    ),
+                )
+                .set("log2_slope", fl_b)
+                .set("fit_r2", fl_r2),
         )
         .set("workspace_bytes_shared", ws_bytes as f64)
         .set("workspace_bytes_saved_per_extra_prompt", ws_bytes as f64)

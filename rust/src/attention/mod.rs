@@ -10,7 +10,8 @@
 //! | Gated DeltaNet              | ✓ | ✓ | ✓ | — | — |
 //! | Log-Linear Mamba-2          | ✓ `O(log T)` state | ✓ | ✓ `O(T log T)` (Alg. 1) | ✓ head-batched | ✓ per-token log-probs |
 //! | Log-Linear Gated DeltaNet   | ✓ `O(log T)` state | ✓ | ✓ | ✓ head-batched | ✓ per-token log-probs |
-//! | *serving features* (log-linear rows) | per-token streaming + mid-flight cancel | — | — | CoW prefix-state cache (shared prefixes admitted from cached boundaries) | ✓ rides the same chunk outputs |
+//! | *serving features* (log-linear rows) | per-token streaming + mid-flight cancel | — | — | CoW prefix-state cache (shared prefixes admitted from cached boundaries) | ✓ rides the same chunk outputs, rows streamed as chunks land |
+//! | *observability* (whole serving stack) | zero-alloc span recorder ([`crate::obs`]) | — | — | per-chunk spans + GEMM flop accounting (O(log T) flops/token observable) | per-request timelines, TTFT/inter-token histograms, Chrome-trace export |
 //!
 //! The serving-features row is the production surface over the two
 //! log-linear rows: chunk-boundary hierarchies are snapshotted into a
@@ -20,6 +21,12 @@
 //! pool pressure), and the decode server streams every sampled token as
 //! it lands and cancels mid-flight requests with immediate block release
 //! (`coordinator::server::DecodeServer::{take_stream_events, cancel}`).
+//! The observability row is [`crate::obs`]: thread-affine ring-buffer
+//! span recording over every serving stage (submit → admit → prefill
+//! chunks → per-layer decode GEMMs → stream/cancel), kernel flop/byte
+//! accounting hooked into the tensor GEMM dispatch, latency histograms
+//! in `ServerStats`, and Chrome trace-event / per-request timeline
+//! exporters — see **docs/OBSERVABILITY.md**.
 //!
 //! *Serving prefill* is the head-batched, sequential-L-layer chunkwise
 //! ingester of [`crate::prefill`] (state-only for generation prompts,

@@ -1288,6 +1288,7 @@ impl DecodeBackend for PooledBackend {
                     }
                 }
             } else {
+                let _proj = crate::obs::span(crate::obs::SpanCat::Project, l as u64);
                 let p = &self.projs[l - 1];
                 self.q_rows.clear();
                 self.q_rows.resize(n * heads * dk, 0.0);
@@ -1374,6 +1375,7 @@ impl DecodeBackend for PooledBackend {
             bail!(msg);
         }
         // final) whole-batch logits in one GEMM: (n, H·dv) @ (vocab, H·dv)^T
+        let _lg = crate::obs::span(crate::obs::SpanCat::Logits, n as u64);
         let mut logits = vec![0.0f32; n * vocab];
         tensor::gemm_nt_into(n, heads * dv, vocab, &self.o_buf, &self.wo.data, &mut logits, false);
         Ok(logits)

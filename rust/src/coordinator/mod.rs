@@ -95,10 +95,15 @@ pub struct ScoreResult {
 /// happens and drained by streaming consumers via
 /// [`server::DecodeServer::take_stream_events`] — per-token delivery
 /// without waiting for the request's [`GenResult`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum StreamEvent {
     /// Request `id` sampled its `index`-th generated token (0-based).
     Token { id: u64, index: usize, token: i32 },
+    /// Scoring request `id` produced `logprob` for target position
+    /// `index + 1` (i.e. `ScoreResult::logprobs[index]`), emitted the
+    /// moment its scoring chunk (or tail) lands — row-by-row score
+    /// streaming, without waiting for the full [`ScoreResult`].
+    Score { id: u64, index: usize, logprob: f32 },
     /// Request `id` completed; its [`GenResult`] is available.
     Finished { id: u64 },
     /// Request `id` was cancelled (mid-flight or still queued); it

@@ -64,6 +64,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::obs::{self, LogHistogram, Metric, Registry, SpanCat};
 use crate::runtime::{ModelHandle, Runtime};
 use crate::util::stats::Summary;
 
@@ -81,6 +82,9 @@ struct Seq {
     slot: SeqSlot,
     max_new: usize,
     submitted: Instant,
+    /// when the most recent generated token streamed (None until the
+    /// first) — drives the TTFT / inter-token latency histograms
+    last_token_at: Option<Instant>,
     /// engine advances: prefill chunks + decode rows (reported in results)
     steps: usize,
     /// decode rows only — the "is a batch mid-generation" signal the
@@ -121,12 +125,30 @@ struct ScoreSeq {
 }
 
 /// Serving metrics.
+///
+/// Latency-shaped series are streaming [`LogHistogram`] accumulators —
+/// fixed memory on a long-lived server (they used to be unbounded
+/// `Vec<f64>` sample logs), with exact n/mean/min/max and log-bucketed
+/// p50/p90/p99 still available to benches via
+/// [`ServerStats::latency_summary`] / [`LogHistogram::summary`].
 #[derive(Debug, Default, Clone)]
 pub struct ServerStats {
     pub steps: usize,
     pub tokens_processed: usize,
-    pub step_seconds: Vec<f64>,
-    pub batch_occupancy: Vec<f64>,
+    /// decode-step wall time (seconds per executed engine step)
+    pub step_seconds: LogHistogram,
+    /// decode bucket occupancy (`rows / bucket`) per executed step
+    pub batch_occupancy: LogHistogram,
+    /// time-to-first-token: submit → first streamed token, per request
+    pub ttft_seconds: LogHistogram,
+    /// gap between consecutive streamed tokens of the same request
+    pub inter_token_seconds: LogHistogram,
+    /// submit → admission wait, per admitted request (queue time under
+    /// holds and backpressure)
+    pub queue_wait_seconds: LogHistogram,
+    /// admission attempts refused by backend backpressure
+    /// ([`AdmitError::Exhausted`]) — the queue head stayed queued
+    pub admission_refusals: usize,
     pub completed: usize,
     pub peak_state_bytes: usize,
     /// prompt chunks ingested through the chunkwise prefill path
@@ -157,7 +179,7 @@ pub struct ServerStats {
 
 impl ServerStats {
     pub fn tokens_per_second(&self) -> f64 {
-        let total: f64 = self.step_seconds.iter().sum();
+        let total = self.step_seconds.sum();
         if total == 0.0 {
             0.0
         } else {
@@ -165,20 +187,67 @@ impl ServerStats {
         }
     }
 
+    /// Decode-step latency summary (`None` before the first step).
+    /// Moments and extrema are exact; p50/p90/p99 are log-bucketed
+    /// (≤ ~9% relative error).
     pub fn latency_summary(&self) -> Option<Summary> {
-        if self.step_seconds.is_empty() {
-            None
-        } else {
-            Some(Summary::of(&self.step_seconds))
-        }
+        self.step_seconds.summary()
     }
 
     pub fn mean_occupancy(&self) -> f64 {
-        if self.batch_occupancy.is_empty() {
-            0.0
-        } else {
-            self.batch_occupancy.iter().sum::<f64>() / self.batch_occupancy.len() as f64
+        self.batch_occupancy.mean()
+    }
+
+    /// Time-to-first-token summary (`None` until a token streamed).
+    pub fn ttft_summary(&self) -> Option<Summary> {
+        self.ttft_seconds.summary()
+    }
+
+    /// Snapshot every serving metric into an [`obs::Registry`] — one
+    /// enumerable document for export
+    /// ([`Registry::to_json`] / [`Registry::render_table`]) instead of
+    /// a bag of struct fields.
+    pub fn registry(&self) -> Registry {
+        let mut reg = Registry::new();
+        for (name, v) in [
+            ("steps", self.steps),
+            ("tokens_processed", self.tokens_processed),
+            ("completed", self.completed),
+            ("prefill_chunks", self.prefill_chunks),
+            ("prefill_tokens", self.prefill_tokens),
+            ("score_requests", self.score_requests),
+            ("score_chunks", self.score_chunks),
+            ("score_tokens", self.score_tokens),
+            ("prefix_cache_hits", self.prefix_cache_hits),
+            ("prefill_tokens_saved", self.prefill_tokens_saved),
+            ("admission_refusals", self.admission_refusals),
+            ("cancelled", self.cancelled),
+        ] {
+            let id = reg.counter(name);
+            reg.inc(id, v as u64);
         }
+        for (name, v) in [
+            ("tokens_per_second", self.tokens_per_second()),
+            ("peak_state_bytes", self.peak_state_bytes as f64),
+            ("pool_in_use", self.pool_in_use as f64),
+            ("pool_peak", self.pool_peak as f64),
+        ] {
+            let id = reg.gauge(name);
+            reg.set(id, v);
+        }
+        for (name, h) in [
+            ("step_seconds", &self.step_seconds),
+            ("batch_occupancy", &self.batch_occupancy),
+            ("ttft_seconds", &self.ttft_seconds),
+            ("inter_token_seconds", &self.inter_token_seconds),
+            ("queue_wait_seconds", &self.queue_wait_seconds),
+        ] {
+            let id = reg.histogram(name);
+            if let Some(Metric::Histogram(slot)) = reg.get_mut(id) {
+                *slot = h.clone();
+            }
+        }
+        reg
     }
 }
 
@@ -272,6 +341,7 @@ impl<B: DecodeBackend> DecodeServer<B> {
     /// generation request (unknown, already finished, or a scoring id).
     pub fn cancel(&mut self, id: u64) -> bool {
         if self.queue.remove_first(|r| r.id == id).is_some() {
+            obs::instant(SpanCat::Cancel, id);
             self.stats.cancelled += 1;
             self.stream.push(StreamEvent::Cancelled { id });
             return true;
@@ -279,6 +349,7 @@ impl<B: DecodeBackend> DecodeServer<B> {
         let Some(i) = self.running.iter().position(|s| s.id == id) else {
             return false;
         };
+        obs::instant(SpanCat::Cancel, id);
         let seq = self.running.remove(i);
         self.backend.retire(seq.slot);
         let (in_use, peak) = self.backend.pool_occupancy();
@@ -295,6 +366,7 @@ impl<B: DecodeBackend> DecodeServer<B> {
         if req.prompt.is_empty() {
             return Err(SubmitError::EmptyPrompt);
         }
+        obs::instant(SpanCat::Submit, req.id);
         if req.max_new == 0 {
             self.finished.push(GenResult {
                 id: req.id,
@@ -320,6 +392,7 @@ impl<B: DecodeBackend> DecodeServer<B> {
         if req.tokens.is_empty() {
             return Err(SubmitError::EmptyPrompt);
         }
+        obs::instant(SpanCat::Submit, req.id);
         if req.tokens.len() == 1 {
             self.finished_scores.push(ScoreResult {
                 id: req.id,
@@ -373,7 +446,10 @@ impl<B: DecodeBackend> DecodeServer<B> {
             // cached position)
             let (slot, cached) = match self.backend.admit_prompt(max_steps.max(1), &req.prompt) {
                 Ok(r) => r,
-                Err(AdmitError::Exhausted) => break,
+                Err(AdmitError::Exhausted) => {
+                    self.stats.admission_refusals += 1;
+                    break;
+                }
                 Err(AdmitError::TooLarge) => {
                     // drop the impossible request before erroring so it
                     // can't wedge the queue head: the caller sees the
@@ -394,6 +470,16 @@ impl<B: DecodeBackend> DecodeServer<B> {
             // keep the queue-entry timestamp: latency must include the
             // time a request waited under backpressure/holds
             let (req, submitted) = self.queue.pop_timed().expect("peeked above");
+            let waited = submitted.elapsed();
+            self.stats.queue_wait_seconds.record(waited.as_secs_f64());
+            let now_ns = obs::now_ns();
+            obs::record_closed(
+                SpanCat::QueueWait,
+                now_ns.saturating_sub(waited.as_nanos() as u64),
+                now_ns,
+                req.id,
+            );
+            obs::instant(SpanCat::Admit, req.id);
             debug_assert!(cached < req.prompt.len(), "cache may not cover the final prompt token");
             self.running.push(Seq {
                 id: req.id,
@@ -403,6 +489,7 @@ impl<B: DecodeBackend> DecodeServer<B> {
                 slot,
                 max_new: req.max_new,
                 submitted,
+                last_token_at: None,
                 steps: 0,
                 decode_steps: 0,
             });
@@ -422,6 +509,16 @@ impl<B: DecodeBackend> DecodeServer<B> {
             match self.backend.score_admit() {
                 Ok(slot) => {
                     let (req, submitted) = self.score_queue.pop_timed().expect("peeked above");
+                    let waited = submitted.elapsed();
+                    self.stats.queue_wait_seconds.record(waited.as_secs_f64());
+                    let now_ns = obs::now_ns();
+                    obs::record_closed(
+                        SpanCat::QueueWait,
+                        now_ns.saturating_sub(waited.as_nanos() as u64),
+                        now_ns,
+                        req.id,
+                    );
+                    obs::instant(SpanCat::Admit, req.id);
                     self.scoring.push(ScoreSeq {
                         id: req.id,
                         tokens: req.tokens,
@@ -433,7 +530,10 @@ impl<B: DecodeBackend> DecodeServer<B> {
                         done: false,
                     });
                 }
-                Err(AdmitError::Exhausted) => break,
+                Err(AdmitError::Exhausted) => {
+                    self.stats.admission_refusals += 1;
+                    break;
+                }
                 Err(AdmitError::TooLarge) => {
                     let req = self.score_queue.pop().expect("peeked above");
                     bail!("score request {} rejected by the backend; request dropped", req.id);
@@ -453,13 +553,17 @@ impl<B: DecodeBackend> DecodeServer<B> {
     /// chunk through `score_chunk` (logits folded into log-probs), or the
     /// sub-chunk tail through `score_tail` — which completes the request.
     fn advance_score(&mut self, i: usize, chunk: usize) -> Result<()> {
-        let (slot, pos, len) = {
+        let (id, slot, pos, len) = {
             let sc = &self.scoring[i];
-            (sc.slot, sc.pos, sc.tokens.len())
+            (sc.id, sc.slot, sc.pos, sc.tokens.len())
         };
+        let streamed = self.scoring[i].logprobs.len();
         if chunk > 0 && pos % chunk == 0 && pos + chunk < len {
             let toks: Vec<i32> = self.scoring[i].tokens[pos..pos + chunk].to_vec();
-            let logits = self.backend.score_chunk(slot, &toks, pos)?;
+            let logits = {
+                let _sp = obs::span(SpanCat::ScoreChunk, id);
+                self.backend.score_chunk(slot, &toks, pos)?
+            };
             let sc = &mut self.scoring[i];
             // row r predicts the token at position pos + r + 1; the one
             // shared fold (the scoring oracle runs the same helper)
@@ -471,11 +575,21 @@ impl<B: DecodeBackend> DecodeServer<B> {
             // tail: token-step positions pos..len−1 (the final token is
             // never fed — nothing reads after it), then finish
             let toks: Vec<i32> = self.scoring[i].tokens[pos..len - 1].to_vec();
-            let logits = self.backend.score_tail(slot, &toks, pos)?;
+            let logits = {
+                let _sp = obs::span(SpanCat::ScoreChunk, id);
+                self.backend.score_tail(slot, &toks, pos)?
+            };
             let sc = &mut self.scoring[i];
             fold_score_logprobs(&logits, toks.len(), &sc.tokens, pos, &mut sc.logprobs);
             sc.pos = len;
             sc.done = true;
+        }
+        // row-by-row score streaming: every log-prob this work unit
+        // produced goes out the moment it lands, not only on completion
+        let sc = &self.scoring[i];
+        for (index, &logprob) in sc.logprobs.iter().enumerate().skip(streamed) {
+            obs::instant(SpanCat::StreamEmit, id);
+            self.stream.push(StreamEvent::Score { id, index, logprob });
         }
         Ok(())
     }
@@ -521,11 +635,14 @@ impl<B: DecodeBackend> DecodeServer<B> {
                 for &it in items.iter().take(self.policy.prefill_budget) {
                     match it {
                         Item::Gen(i) => {
-                            let (slot, pos, tokens) = {
+                            let (id, slot, pos, tokens) = {
                                 let s = &self.running[i];
-                                (s.slot, s.pos, s.prompt[s.pos..s.pos + chunk].to_vec())
+                                (s.id, s.slot, s.pos, s.prompt[s.pos..s.pos + chunk].to_vec())
                             };
-                            self.backend.prefill_chunk(slot, &tokens, pos)?;
+                            {
+                                let _sp = obs::span(SpanCat::PrefillChunk, id);
+                                self.backend.prefill_chunk(slot, &tokens, pos)?;
+                            }
                             let seq = &mut self.running[i];
                             seq.pos += chunk;
                             seq.steps += 1;
@@ -624,7 +741,10 @@ impl<B: DecodeBackend> DecodeServer<B> {
 
         // execute
         let t0 = Instant::now();
-        let logits = self.backend.step(bucket, &rows)?;
+        let logits = {
+            let _sp = obs::span(SpanCat::DecodeStep, n as u64);
+            self.backend.step(bucket, &rows)?
+        };
         let dt = t0.elapsed().as_secs_f64();
 
         // sample + advance
@@ -642,7 +762,20 @@ impl<B: DecodeBackend> DecodeServer<B> {
                 let row = &logits[j * vocab..(j + 1) * vocab];
                 let tok = crate::tensor::ops::argmax(row) as i32;
                 seq.generated.push(tok);
+                let now = Instant::now();
+                match seq.last_token_at {
+                    None => self
+                        .stats
+                        .ttft_seconds
+                        .record(now.duration_since(seq.submitted).as_secs_f64()),
+                    Some(prev) => self
+                        .stats
+                        .inter_token_seconds
+                        .record(now.duration_since(prev).as_secs_f64()),
+                }
+                seq.last_token_at = Some(now);
                 // stream the token the moment its step lands
+                obs::instant(SpanCat::StreamEmit, seq.id);
                 self.stream.push(StreamEvent::Token {
                     id: seq.id,
                     index: seq.generated.len() - 1,
@@ -680,8 +813,8 @@ impl<B: DecodeBackend> DecodeServer<B> {
 
         self.stats.steps += 1;
         self.stats.tokens_processed += n;
-        self.stats.step_seconds.push(dt);
-        self.stats.batch_occupancy.push(n as f64 / bucket as f64);
+        self.stats.step_seconds.record(dt);
+        self.stats.batch_occupancy.record(n as f64 / bucket as f64);
         self.stats.peak_state_bytes = self.stats.peak_state_bytes.max(self.backend.state_bytes());
         let (in_use, peak) = self.backend.pool_occupancy();
         self.stats.pool_in_use = in_use;
@@ -780,9 +913,9 @@ mod tests {
         let results = held.run_to_completion().unwrap();
         assert_eq!(results.len(), 8);
         assert!(
-            held.stats.batch_occupancy.iter().all(|&o| o == 1.0),
+            held.stats.batch_occupancy.min() == 1.0 && held.stats.batch_occupancy.max() == 1.0,
             "held server should only run full buckets: {:?}",
-            held.stats.batch_occupancy
+            held.stats.batch_occupancy.summary()
         );
 
         // same traffic with max_wait = 0 (the old always-run-now
@@ -860,9 +993,9 @@ mod tests {
         let results = srv.run_to_completion().unwrap();
         assert_eq!(results.len(), 8);
         assert!(
-            srv.stats.batch_occupancy.iter().all(|&o| o == 1.0),
+            srv.stats.batch_occupancy.min() == 1.0 && srv.stats.batch_occupancy.max() == 1.0,
             "held server should only run full decode buckets: {:?}",
-            srv.stats.batch_occupancy
+            srv.stats.batch_occupancy.summary()
         );
         for r in &results {
             assert_eq!(r.tokens.len(), 2, "req {}", r.id);
@@ -931,6 +1064,7 @@ mod tests {
         }
         assert!(max_running <= 2, "admission over-committed: {max_running} concurrent");
         assert!(max_in_use <= 7, "pool over-committed: {max_in_use} blocks");
+        assert!(srv.stats.admission_refusals > 0, "backpressure must be counted");
         let results = srv.take_finished();
         assert_eq!(results.len(), 6);
         assert_eq!(srv.backend().pool().in_use(), 0, "retirement leaked pool blocks");
@@ -1268,6 +1402,7 @@ mod tests {
     fn event_id(e: &StreamEvent) -> u64 {
         match *e {
             StreamEvent::Token { id, .. }
+            | StreamEvent::Score { id, .. }
             | StreamEvent::Finished { id }
             | StreamEvent::Cancelled { id } => id,
         }
@@ -1313,6 +1448,88 @@ mod tests {
             }
             assert!(matches!(evs[5], StreamEvent::Finished { .. }), "req {id}: missing finish");
         }
+    }
+
+    #[test]
+    fn score_rows_stream_incrementally_as_chunks_land() {
+        // Row-by-row score streaming: each budgeted scoring work unit
+        // (chunk or tail) emits its newly-landed log-prob rows as
+        // StreamEvent::Score the moment it completes — in index order,
+        // mid-flight, and bit-identical to the final ScoreResult.
+        let backend = PooledBackend::with_model_config(
+            64, 2, 2, TransitionKind::Mamba2, 8, 8, 4, 4096, 51,
+        );
+        let mut srv =
+            DecodeServer::with_backend(backend, BatchPolicy::new(vec![1], Duration::ZERO));
+        let prompt: Vec<i32> = (0..11).map(|i| (i * 7 + 5) % 64).collect(); // 2 chunks + tail
+        srv.submit_score(ScoreRequest { id: 9, tokens: prompt.clone() }).unwrap();
+        let mut streamed = Vec::new();
+        let mut saw_rows_mid_flight = false;
+        let mut guard = 0;
+        while srv.pending() > 0 {
+            srv.step().unwrap();
+            let drained = srv.take_stream_events();
+            if srv.pending() > 0
+                && drained.iter().any(|e| matches!(e, StreamEvent::Score { .. }))
+            {
+                saw_rows_mid_flight = true;
+            }
+            for e in drained {
+                let StreamEvent::Score { id, index, logprob } = e else {
+                    panic!("unexpected event {e:?} in a scoring-only run");
+                };
+                assert_eq!(id, 9);
+                assert_eq!(index, streamed.len(), "rows must stream in index order");
+                streamed.push(logprob);
+            }
+            guard += 1;
+            assert!(guard < 100, "scoring made no progress");
+        }
+        assert!(saw_rows_mid_flight, "rows must stream before completion, not only at the end");
+        let res = srv.take_score_results();
+        assert_eq!(res.len(), 1);
+        assert_eq!(streamed, res[0].logprobs, "streamed rows must equal the final result");
+    }
+
+    #[test]
+    fn stats_accumulators_and_registry_snapshot() {
+        // The latency series are streaming histograms now (fixed memory
+        // on a long-lived server): counts must match the event totals,
+        // and the registry snapshot must carry every metric as one
+        // parseable JSON document.
+        let mut srv = pooled_server(256, vec![4], Duration::ZERO);
+        for id in 0..4 {
+            srv.submit(req(id, 3, 5)).unwrap();
+        }
+        let results = srv.run_to_completion().unwrap();
+        assert_eq!(results.len(), 4);
+        let stats = &srv.stats;
+        assert_eq!(stats.step_seconds.count(), stats.steps);
+        assert_eq!(stats.batch_occupancy.count(), stats.steps);
+        assert_eq!(stats.ttft_seconds.count(), 4, "one TTFT per request");
+        assert_eq!(
+            stats.inter_token_seconds.count(),
+            4 * (5 - 1),
+            "one gap per consecutive token pair"
+        );
+        assert_eq!(stats.queue_wait_seconds.count(), 4, "one wait per admission");
+        let lat = stats.latency_summary().expect("steps ran");
+        assert!(lat.p99 >= lat.p50 && lat.p50 > 0.0);
+        assert!(stats.mean_occupancy() > 0.0 && stats.mean_occupancy() <= 1.0);
+        assert!(stats.ttft_summary().is_some());
+        let reg = stats.registry();
+        assert_eq!(reg.counter_value("completed"), Some(4));
+        assert_eq!(
+            reg.counter_value("tokens_processed"),
+            Some(stats.tokens_processed as u64)
+        );
+        assert_eq!(reg.histogram_ref("ttft_seconds").unwrap().count(), 4);
+        let j = crate::util::json::Json::parse(&reg.to_json().to_string()).unwrap();
+        assert_eq!(j.get("completed").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(
+            j.get("step_seconds").and_then(|v| v.get("n")).and_then(|v| v.as_f64()),
+            Some(stats.steps as f64)
+        );
     }
 
     #[test]

@@ -21,6 +21,10 @@
 //!   decode scheduler) and training orchestrator,
 //! - [`train`], [`eval`], [`data`] — training driver, evaluation harness,
 //!   and synthetic workload generators for every table/figure in the paper,
+//! - [`obs`] — serving-stack observability: the zero-alloc span recorder,
+//!   kernel flop accounting, the metrics registry (log-bucketed latency
+//!   histograms), and Chrome-trace / timeline / text exporters
+//!   (docs/OBSERVABILITY.md),
 //! - [`tensor`], [`util`], [`bench`] — from-scratch substrates (tensor math,
 //!   RNG, JSON, CLI, stats, thread pool, property testing, bench harness);
 //!   the build is fully offline so no external crates beyond `xla` are used.
@@ -29,6 +33,7 @@
 //! paper-vs-measured record.
 
 pub mod util;
+pub mod obs;
 pub mod tensor;
 pub mod fenwick;
 pub mod hmatrix;

@@ -579,7 +579,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     }
     println!(
         "mean batch occupancy: {:.2}  peak state bytes: {}",
-        stats.batch_occupancy.iter().sum::<f64>() / stats.batch_occupancy.len().max(1) as f64,
+        stats.mean_occupancy(),
         stats.peak_state_bytes
     );
     for r in results.iter().take(3) {

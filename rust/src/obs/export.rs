@@ -1,0 +1,303 @@
+//! Trace exporters: Chrome trace-event JSON, per-request timelines, and
+//! a plain-text category summary.
+//!
+//! Everything here consumes the fixed-size [`SpanEvent`]s drained from
+//! the recorder ([`crate::obs::drain`]) — export is an offline path and
+//! allocates freely; only emission is alloc-constrained.
+//!
+//! The Chrome export writes the [trace-event format] (`ph: "X"` complete
+//! events, `ph: "i"` instants) through the dependency-free
+//! [`crate::util::json`] writer, so `chrome://tracing` / Perfetto load
+//! it directly: one row per recorder lane (`tid`), microsecond
+//! timestamps from the process tracing epoch, and per-span `args`
+//! carrying the category payload and attributed kernel flops.
+//!
+//! [trace-event format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use std::collections::BTreeMap;
+
+use crate::obs::span::{SpanCat, SpanEvent, ALL_CATS, NUM_CATS};
+use crate::util::json::Json;
+
+/// Build a Chrome trace-event JSON document from drained events.
+/// `dropped` (the recorder's overflow count) is recorded under
+/// `otherData` so a truncated trace is self-describing.
+pub fn chrome_trace(events: &[SpanEvent], dropped: u64) -> Json {
+    let mut arr: Vec<Json> = Vec::with_capacity(events.len());
+    for e in events {
+        let ts_us = e.start_ns as f64 / 1e3;
+        let mut ev = Json::obj()
+            .set("name", e.category().name())
+            .set("cat", "serving")
+            .set("pid", 1.0)
+            .set("tid", e.tid as f64)
+            .set("ts", ts_us)
+            .set(
+                "args",
+                Json::obj().set("payload", e.payload as f64).set("flops", e.flops as f64),
+            );
+        if e.end_ns > e.start_ns {
+            ev = ev.set("ph", "X").set("dur", (e.end_ns - e.start_ns) as f64 / 1e3);
+        } else {
+            ev = ev.set("ph", "i").set("s", "t");
+        }
+        arr.push(ev);
+    }
+    Json::obj()
+        .set("traceEvents", Json::Arr(arr))
+        .set("displayTimeUnit", "ms")
+        .set("otherData", Json::obj().set("dropped_events", dropped as f64))
+}
+
+/// One request's reconstructed lifecycle, assembled from the spans that
+/// carry its request id as payload (`Submit`/`QueueWait`/`Admit`/
+/// `PrefillChunk`/`ScoreChunk`/`StreamEmit`/`Cancel`).
+#[derive(Debug, Clone, Default)]
+pub struct RequestTimeline {
+    pub id: u64,
+    /// `Submit` span start tick.
+    pub submit_ns: Option<u64>,
+    /// Queue residency (submit → leaving the FIFO), from the
+    /// `QueueWait` closed span.
+    pub queue_wait_ns: Option<u64>,
+    /// `Admit` span end tick.
+    pub admit_ns: Option<u64>,
+    /// Prefill chunk spans consumed (count, summed duration, flops).
+    pub prefill_chunks: usize,
+    pub prefill_ns: u64,
+    pub prefill_flops: u64,
+    /// Scoring chunk spans consumed.
+    pub score_chunks: usize,
+    pub score_ns: u64,
+    /// `StreamEmit` instants in order — one per streamed event (sampled
+    /// token or score row).
+    pub stream_ns: Vec<u64>,
+    pub cancelled: bool,
+}
+
+impl RequestTimeline {
+    /// Time to first streamed token/row, from submit. `None` until both
+    /// endpoints were captured.
+    pub fn ttft_seconds(&self) -> Option<f64> {
+        let first = *self.stream_ns.first()?;
+        let submit = self.submit_ns?;
+        Some(first.saturating_sub(submit) as f64 * 1e-9)
+    }
+
+    /// Gaps between consecutive streamed events, in seconds.
+    pub fn inter_token_seconds(&self) -> Vec<f64> {
+        self.stream_ns.windows(2).map(|w| w[1].saturating_sub(w[0]) as f64 * 1e-9).collect()
+    }
+
+    /// Queue wait in seconds, if captured.
+    pub fn queue_wait_seconds(&self) -> Option<f64> {
+        self.queue_wait_ns.map(|ns| ns as f64 * 1e-9)
+    }
+}
+
+/// Group request-scoped spans by their payload request id. Events whose
+/// category is not request-scoped (decode steps, per-layer kernels) are
+/// ignored here — they describe the batch, not one request. Output is
+/// sorted by request id.
+pub fn timelines(events: &[SpanEvent]) -> Vec<RequestTimeline> {
+    let mut by_id: BTreeMap<u64, RequestTimeline> = BTreeMap::new();
+    for e in events {
+        let cat = e.category();
+        let scoped = matches!(
+            cat,
+            SpanCat::Submit
+                | SpanCat::QueueWait
+                | SpanCat::Admit
+                | SpanCat::PrefillChunk
+                | SpanCat::ScoreChunk
+                | SpanCat::StreamEmit
+                | SpanCat::Cancel
+        );
+        if !scoped {
+            continue;
+        }
+        let tl = by_id.entry(e.payload).or_insert_with(|| RequestTimeline {
+            id: e.payload,
+            ..RequestTimeline::default()
+        });
+        match cat {
+            SpanCat::Submit => tl.submit_ns = Some(e.start_ns),
+            SpanCat::QueueWait => tl.queue_wait_ns = Some(e.end_ns.saturating_sub(e.start_ns)),
+            SpanCat::Admit => tl.admit_ns = Some(e.end_ns),
+            SpanCat::PrefillChunk => {
+                tl.prefill_chunks += 1;
+                tl.prefill_ns += e.end_ns.saturating_sub(e.start_ns);
+                tl.prefill_flops += e.flops;
+            }
+            SpanCat::ScoreChunk => {
+                tl.score_chunks += 1;
+                tl.score_ns += e.end_ns.saturating_sub(e.start_ns);
+            }
+            SpanCat::StreamEmit => tl.stream_ns.push(e.start_ns),
+            SpanCat::Cancel => tl.cancelled = true,
+            _ => {}
+        }
+    }
+    by_id.into_values().collect()
+}
+
+/// Per-category aggregate over a drained trace: event count, total
+/// duration, attributed flops.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CatAgg {
+    pub count: usize,
+    pub total_ns: u64,
+    pub flops: u64,
+}
+
+/// Aggregate events by category (indexed by `SpanCat as usize`).
+///
+/// Note a span's `flops` field includes work rolled up from enclosed
+/// child spans, so summing the `flops` column *across categories*
+/// double-counts nested work; per-category *self* attribution (each
+/// flop counted exactly once) is what [`crate::obs::flop_totals`]
+/// reports.
+pub fn by_category(events: &[SpanEvent]) -> [CatAgg; NUM_CATS] {
+    let mut agg = [CatAgg::default(); NUM_CATS];
+    for e in events {
+        let a = &mut agg[(e.cat as usize).min(NUM_CATS - 1)];
+        a.count += 1;
+        a.total_ns += e.end_ns.saturating_sub(e.start_ns);
+        a.flops += e.flops;
+    }
+    agg
+}
+
+/// Render a plain-text summary table: one row per category with events,
+/// total/mean duration, and attributed flop throughput.
+pub fn summary_table(events: &[SpanEvent], dropped: u64) -> String {
+    let agg = by_category(events);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>8} {:>12} {:>12} {:>14} {:>10}\n",
+        "category", "events", "total ms", "mean us", "flops", "GFLOP/s"
+    ));
+    for cat in ALL_CATS {
+        let a = agg[cat as usize];
+        if a.count == 0 {
+            continue;
+        }
+        let total_ms = a.total_ns as f64 / 1e6;
+        let mean_us = a.total_ns as f64 / 1e3 / a.count as f64;
+        let gflops = if a.total_ns > 0 { a.flops as f64 / a.total_ns as f64 } else { 0.0 };
+        out.push_str(&format!(
+            "{:<16} {:>8} {:>12.3} {:>12.2} {:>14} {:>10.2}\n",
+            cat.name(),
+            a.count,
+            total_ms,
+            mean_us,
+            a.flops,
+            gflops
+        ));
+    }
+    if dropped > 0 {
+        out.push_str(&format!("(+{dropped} events dropped by ring overflow)\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cat: SpanCat, start: u64, end: u64, payload: u64, flops: u64) -> SpanEvent {
+        SpanEvent { start_ns: start, end_ns: end, payload, flops, cat: cat as u8, tid: 0, depth: 0 }
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_and_parses_back() {
+        let events = vec![
+            ev(SpanCat::Submit, 100, 200, 1, 0),
+            ev(SpanCat::DecodeStep, 300, 900, 2, 512),
+            ev(SpanCat::StreamEmit, 900, 900, 1, 0), // instant
+        ];
+        let doc = chrome_trace(&events, 3);
+        let parsed = Json::parse(&doc.to_string()).expect("chrome trace must be valid JSON");
+        let arr = parsed.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
+        assert_eq!(arr.len(), 3);
+        // complete event: ph X with dur in microseconds
+        let step = &arr[1];
+        assert_eq!(step.get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(step.get("name").and_then(|v| v.as_str()), Some("decode_step"));
+        assert_eq!(step.get("ts").and_then(|v| v.as_f64()), Some(0.3));
+        assert_eq!(step.get("dur").and_then(|v| v.as_f64()), Some(0.6));
+        assert_eq!(
+            step.get("args").and_then(|a| a.get("flops")).and_then(|v| v.as_f64()),
+            Some(512.0)
+        );
+        // zero-duration event: instant phase
+        assert_eq!(arr[2].get("ph").and_then(|v| v.as_str()), Some("i"));
+        assert_eq!(
+            parsed
+                .get("otherData")
+                .and_then(|o| o.get("dropped_events"))
+                .and_then(|v| v.as_f64()),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn timelines_reconstruct_request_lifecycle() {
+        let events = vec![
+            ev(SpanCat::Submit, 1_000, 1_010, 7, 0),
+            ev(SpanCat::QueueWait, 1_000, 51_000, 7, 0),
+            ev(SpanCat::Admit, 51_000, 52_000, 7, 0),
+            ev(SpanCat::PrefillChunk, 60_000, 90_000, 7, 1000),
+            ev(SpanCat::PrefillChunk, 90_000, 120_000, 7, 1200),
+            ev(SpanCat::StreamEmit, 130_000, 130_000, 7, 0),
+            ev(SpanCat::StreamEmit, 150_000, 150_000, 7, 0),
+            ev(SpanCat::StreamEmit, 180_000, 180_000, 7, 0),
+            // a different, cancelled request
+            ev(SpanCat::Submit, 2_000, 2_010, 9, 0),
+            ev(SpanCat::Cancel, 70_000, 71_000, 9, 0),
+            // batch-scoped events must not produce timelines
+            ev(SpanCat::DecodeStep, 125_000, 131_000, 2, 999),
+        ];
+        let tls = timelines(&events);
+        assert_eq!(tls.len(), 2);
+        let t7 = &tls[0];
+        assert_eq!(t7.id, 7);
+        assert_eq!(t7.submit_ns, Some(1_000));
+        assert_eq!(t7.queue_wait_ns, Some(50_000));
+        assert_eq!(t7.admit_ns, Some(52_000));
+        assert_eq!(t7.prefill_chunks, 2);
+        assert_eq!(t7.prefill_ns, 60_000);
+        assert_eq!(t7.prefill_flops, 2200);
+        assert_eq!(t7.stream_ns.len(), 3);
+        assert!((t7.ttft_seconds().unwrap() - 129e-6).abs() < 1e-12);
+        let gaps = t7.inter_token_seconds();
+        assert_eq!(gaps.len(), 2);
+        assert!((gaps[0] - 20e-6).abs() < 1e-12);
+        assert!((gaps[1] - 30e-6).abs() < 1e-12);
+        assert!((t7.queue_wait_seconds().unwrap() - 50e-6).abs() < 1e-12);
+        let t9 = &tls[1];
+        assert_eq!(t9.id, 9);
+        assert!(t9.cancelled);
+        assert!(t9.ttft_seconds().is_none());
+    }
+
+    #[test]
+    fn summary_table_aggregates_categories() {
+        let events = vec![
+            ev(SpanCat::DecodeStep, 0, 1_000_000, 0, 2_000_000),
+            ev(SpanCat::DecodeStep, 1_000_000, 3_000_000, 0, 4_000_000),
+            ev(SpanCat::Advance, 10, 20, 0, 100),
+        ];
+        let agg = by_category(&events);
+        let d = agg[SpanCat::DecodeStep as usize];
+        assert_eq!(d.count, 2);
+        assert_eq!(d.total_ns, 3_000_000);
+        assert_eq!(d.flops, 6_000_000);
+        let table = summary_table(&events, 5);
+        assert!(table.contains("decode_step"));
+        assert!(table.contains("advance_bucket"));
+        assert!(table.contains("dropped by ring overflow"));
+        // untouched categories are omitted
+        assert!(!table.contains("prefix_evict"));
+    }
+}

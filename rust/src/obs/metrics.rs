@@ -1,0 +1,449 @@
+//! Metrics registry: counters, gauges, and log-bucketed histograms.
+//!
+//! [`LogHistogram`] answers the long-lived-server problem that
+//! `ServerStats` used to have: percentile latency without an unbounded
+//! sample vector. Observations land in fixed log-spaced buckets
+//! ([`SUB_BUCKETS`] per octave → ≤ ~9% relative error on any quantile),
+//! with exact running `n`/`mean`/`min`/`max`, in O(1) memory forever.
+//!
+//! [`Registry`] is a deliberately boring, deterministic container: a
+//! registration-ordered `Vec` of named metrics with index handles
+//! ([`MetricId`]) — no `HashMap` (determinism lint: `src/obs/` is a
+//! serving path), no atomics (the server owns its stats mutably; the
+//! span recorder's lane counters cover the cross-thread cases). It
+//! exists so every serving metric can be enumerated, printed, and
+//! exported as one JSON document ([`Registry::to_json`]) instead of
+//! being a bag of ad-hoc struct fields.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Log-bucket resolution: buckets per octave (power of two). 8 gives a
+/// worst-case relative quantile error of 2^(1/8) − 1 ≈ 9%.
+pub const SUB_BUCKETS: i32 = 8;
+/// Smallest resolvable magnitude: 2^[`MIN_EXP`] (≈ 1ns when observing
+/// seconds). Anything smaller (or ≤ 0) lands in the first bucket.
+pub const MIN_EXP: i32 = -30;
+/// Largest resolvable magnitude: 2^[`MAX_EXP`] (≈ 64s as seconds).
+/// Anything larger lands in the last bucket.
+pub const MAX_EXP: i32 = 6;
+/// Total bucket count.
+pub const NUM_BUCKETS: usize = ((MAX_EXP - MIN_EXP) * SUB_BUCKETS) as usize;
+
+/// Streaming histogram over log-spaced buckets, with exact running
+/// moments and extrema. Fixed memory: `NUM_BUCKETS` u64 counts.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    n: usize,
+    sum: f64,
+    sumsq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+/// Bucket index for a value (clamped into range; non-positive → 0).
+fn bucket_of(v: f64) -> usize {
+    if v.is_nan() || v <= 0.0 {
+        return 0;
+    }
+    let idx = (v.log2() * SUB_BUCKETS as f64).floor() as i64 - (MIN_EXP * SUB_BUCKETS) as i64;
+    idx.clamp(0, NUM_BUCKETS as i64 - 1) as usize
+}
+
+/// Geometric midpoint of bucket `i` — the quantile representative.
+fn bucket_mid(i: usize) -> f64 {
+    let exp = (MIN_EXP * SUB_BUCKETS) as f64 + i as f64 + 0.5;
+    (exp / SUB_BUCKETS as f64).exp2()
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            counts: vec![0; NUM_BUCKETS],
+            n: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one observation. O(1), allocation-free.
+    // xtask: deny_alloc
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        self.counts[bucket_of(v)] += 1;
+        self.n += 1;
+        self.sum += v;
+        self.sumsq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact running mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Exact running sample standard deviation (n−1 denominator, like
+    /// `Summary::of`; 0 for fewer than two observations).
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let n = self.n as f64;
+        let m = self.mean();
+        ((self.sumsq - n * m * m).max(0.0) / (n - 1.0)).sqrt()
+    }
+
+    /// Exact running minimum (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact running maximum (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate `p`-th percentile (`p` in [0, 100]): the geometric
+    /// midpoint of the bucket holding the rank-⌈p·n/100⌉ observation,
+    /// clamped to the exact observed [min, max]. Within one bucket width
+    /// (≈ 9% relative) of the exact order statistic.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// A [`Summary`] view: exact n/mean/std/min/max, histogram-derived
+    /// p50/p90/p99. `None` when empty (matching
+    /// `ServerStats::latency_summary`'s old contract).
+    pub fn summary(&self) -> Option<Summary> {
+        if self.n == 0 {
+            return None;
+        }
+        Some(Summary {
+            n: self.n,
+            mean: self.mean(),
+            std: self.std(),
+            min: self.min,
+            max: self.max,
+            p50: self.percentile(50.0),
+            p90: self.percentile(90.0),
+            p99: self.percentile(99.0),
+        })
+    }
+
+    /// Summary-level JSON (no raw buckets).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("n", self.n)
+            .set("mean", self.mean())
+            .set("std", self.std())
+            .set("min", self.min())
+            .set("max", self.max())
+            .set("p50", self.percentile(50.0))
+            .set("p90", self.percentile(90.0))
+            .set("p99", self.percentile(99.0))
+    }
+}
+
+/// Handle into a [`Registry`] — stable for the registry's lifetime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricId(usize);
+
+/// One registered metric.
+#[derive(Debug, Clone)]
+pub enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(LogHistogram),
+}
+
+/// Named metrics in registration order. Lookup by name is a linear scan
+/// (registration-time only); hot-path updates go through [`MetricId`]
+/// handles (O(1) indexed access, no hashing, no allocation).
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    items: Vec<(&'static str, Metric)>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn register(&mut self, name: &'static str, m: Metric) -> MetricId {
+        if let Some(i) = self.items.iter().position(|(n, _)| *n == name) {
+            return MetricId(i);
+        }
+        self.items.push((name, m));
+        MetricId(self.items.len() - 1)
+    }
+
+    /// Register (or find) a counter.
+    pub fn counter(&mut self, name: &'static str) -> MetricId {
+        self.register(name, Metric::Counter(0))
+    }
+
+    /// Register (or find) a gauge.
+    pub fn gauge(&mut self, name: &'static str) -> MetricId {
+        self.register(name, Metric::Gauge(0.0))
+    }
+
+    /// Register (or find) a log-bucketed histogram.
+    pub fn histogram(&mut self, name: &'static str) -> MetricId {
+        self.register(name, Metric::Histogram(LogHistogram::new()))
+    }
+
+    /// Increment a counter. No-op on a non-counter id.
+    // xtask: deny_alloc
+    #[inline]
+    pub fn inc(&mut self, id: MetricId, by: u64) {
+        if let Metric::Counter(c) = &mut self.items[id.0].1 {
+            *c += by;
+        }
+    }
+
+    /// Set a gauge. No-op on a non-gauge id.
+    // xtask: deny_alloc
+    #[inline]
+    pub fn set(&mut self, id: MetricId, v: f64) {
+        if let Metric::Gauge(g) = &mut self.items[id.0].1 {
+            *g = v;
+        }
+    }
+
+    /// Record a histogram observation. No-op on a non-histogram id.
+    // xtask: deny_alloc
+    #[inline]
+    pub fn observe(&mut self, id: MetricId, v: f64) {
+        if let Metric::Histogram(h) = &mut self.items[id.0].1 {
+            h.record(v);
+        }
+    }
+
+    /// Metric by name.
+    pub fn get(&self, name: &str) -> Option<&Metric> {
+        self.items.iter().find(|(n, _)| *n == name).map(|(_, m)| m)
+    }
+
+    /// Mutable metric by id — snapshot assembly (e.g. installing an
+    /// externally-accumulated histogram into an export registry).
+    pub fn get_mut(&mut self, id: MetricId) -> Option<&mut Metric> {
+        self.items.get_mut(id.0).map(|(_, m)| m)
+    }
+
+    /// Counter value by name (`None` if absent or not a counter).
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        match self.get(name)? {
+            Metric::Counter(c) => Some(*c),
+            _ => None,
+        }
+    }
+
+    /// Gauge value by name.
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        match self.get(name)? {
+            Metric::Gauge(g) => Some(*g),
+            _ => None,
+        }
+    }
+
+    /// Histogram by name.
+    pub fn histogram_ref(&self, name: &str) -> Option<&LogHistogram> {
+        match self.get(name)? {
+            Metric::Histogram(h) => Some(h),
+            _ => None,
+        }
+    }
+
+    /// All metrics, registration order.
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, &Metric)> {
+        self.items.iter().map(|(n, m)| (*n, m))
+    }
+
+    /// One JSON object: counters/gauges as numbers, histograms as
+    /// summary objects (keys sorted by the `util::json` writer).
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for (name, m) in &self.items {
+            obj = match m {
+                Metric::Counter(c) => obj.set(*name, *c as f64),
+                Metric::Gauge(g) => obj.set(*name, *g),
+                Metric::Histogram(h) => obj.set(*name, h.to_json()),
+            };
+        }
+        obj
+    }
+
+    /// Plain-text table (name, value / histogram percentiles).
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        for (name, m) in &self.items {
+            match m {
+                Metric::Counter(c) => out.push_str(&format!("{name:<34} {c}\n")),
+                Metric::Gauge(g) => out.push_str(&format!("{name:<34} {g:.6}\n")),
+                Metric::Histogram(h) => out.push_str(&format!(
+                    "{name:<34} n={} mean={:.3e} p50={:.3e} p90={:.3e} p99={:.3e} max={:.3e}\n",
+                    h.count(),
+                    h.mean(),
+                    h.percentile(50.0),
+                    h.percentile(90.0),
+                    h.percentile(99.0),
+                    h.max(),
+                )),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn histogram_percentiles_track_exact_summary() {
+        // log-normal-ish latencies spanning several octaves
+        let mut rng = Rng::new(0x0B5);
+        let samples: Vec<f64> = (0..4000)
+            .map(|_| (rng.normal_f32(0.0, 1.0) as f64 * 1.2 - 7.0).exp2())
+            .collect();
+        let mut h = LogHistogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        let exact = Summary::of(&samples);
+        let approx = h.summary().unwrap();
+        // exact moments and extrema
+        assert_eq!(approx.n, exact.n);
+        assert!((approx.mean - exact.mean).abs() <= 1e-9 * exact.mean.abs().max(1.0));
+        assert_eq!(approx.min, exact.min);
+        assert_eq!(approx.max, exact.max);
+        // quantiles within one log-bucket width (2^(1/8) ≈ 1.091) of exact
+        let tol = 2f64.powf(1.0 / SUB_BUCKETS as f64) * 1.0001;
+        for (got, want) in [
+            (approx.p50, exact.p50),
+            (approx.p90, exact.p90),
+            (approx.p99, exact.p99),
+        ] {
+            assert!(
+                got / want <= tol && want / got <= tol,
+                "histogram quantile {got} vs exact {want} outside {tol}x"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // values on exact powers of two land in their own bucket; the
+        // representative midpoint stays within the bucket's bounds
+        let mut h = LogHistogram::new();
+        for &v in &[0.5, 1.0, 2.0] {
+            h.record(v);
+        }
+        assert_ne!(bucket_of(0.5), bucket_of(1.0));
+        assert_ne!(bucket_of(1.0), bucket_of(2.0));
+        let i = bucket_of(1.0);
+        let mid = bucket_mid(i);
+        assert!((1.0..2f64.powf(1.0 / SUB_BUCKETS as f64)).contains(&mid));
+        // out-of-range and non-positive values clamp, never panic
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-3.0), 0);
+        assert_eq!(bucket_of(1e-300), 0);
+        assert_eq!(bucket_of(1e300), NUM_BUCKETS - 1);
+        h.record(0.0);
+        h.record(1e300);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1e300);
+    }
+
+    #[test]
+    fn empty_histogram_is_defined() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert!(h.summary().is_none());
+    }
+
+    #[test]
+    fn single_sample_percentiles_are_exact() {
+        let mut h = LogHistogram::new();
+        h.record(0.25);
+        let s = h.summary().unwrap();
+        // clamping to [min, max] makes a single observation exact
+        assert_eq!(s.p50, 0.25);
+        assert_eq!(s.p99, 0.25);
+        assert_eq!(s.min, 0.25);
+        assert_eq!(s.max, 0.25);
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let mut reg = Registry::new();
+        let c = reg.counter("requests_total");
+        let g = reg.gauge("pool_occupancy");
+        let h = reg.histogram("step_seconds");
+        reg.inc(c, 3);
+        reg.set(g, 0.75);
+        reg.observe(h, 0.001);
+        reg.observe(h, 0.002);
+        // idempotent registration returns the same handle
+        assert_eq!(reg.counter("requests_total"), c);
+        assert_eq!(reg.counter_value("requests_total"), Some(3));
+        assert_eq!(reg.gauge_value("pool_occupancy"), Some(0.75));
+        assert_eq!(reg.histogram_ref("step_seconds").unwrap().count(), 2);
+        assert!(reg.counter_value("missing").is_none());
+        // JSON export parses back and carries every metric
+        let j = crate::util::json::Json::parse(&reg.to_json().to_string()).unwrap();
+        assert_eq!(j.get("requests_total").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(
+            j.get("step_seconds").and_then(|v| v.get("n")).and_then(|v| v.as_f64()),
+            Some(2.0)
+        );
+        let table = reg.render_table();
+        assert!(table.contains("requests_total"));
+        assert!(table.contains("step_seconds"));
+    }
+}

@@ -1,0 +1,57 @@
+//! Serving-stack observability: spans, metrics, flop accounting, export.
+//!
+//! The paper's headline claim is *compute log-linear in sequence
+//! length*; this module is how the repo shows where a request's time and
+//! flops actually go. Three layers:
+//!
+//! 1. **Span recorder** ([`span`]) — zero-alloc-on-hot-path, per-thread
+//!    preallocated ring buffers of fixed-size [`SpanEvent`]s with
+//!    monotonic start/end ticks, a category enum ([`SpanCat`]: the
+//!    submit→admit→prefill→decode→stream taxonomy, down to the per-layer
+//!    `advance_bucket`/`read_batch`/projection/logits kernels), and a
+//!    u64 payload. Runtime-toggleable ([`enable`]/[`disable`]; disabled
+//!    cost is one relaxed atomic load per site) and compile-out-able
+//!    (`--features obs_off`).
+//! 2. **Kernel flop/byte accounting** — the `tensor` GEMM dispatch entry
+//!    points call [`account_flops`] with their dims-derived flop count;
+//!    the recorder attributes it to the innermost open span and to
+//!    per-category totals ([`flop_totals`]/[`thread_flop_totals`]), which
+//!    is how the prefill bench plots flops-per-token vs prompt length
+//!    and checks the O(T log T) growth curve empirically.
+//! 3. **Metrics registry** ([`metrics`]) — counters, gauges, and
+//!    log-bucketed [`LogHistogram`]s (p50/p90/p99 in fixed memory; the
+//!    fix for `ServerStats`' formerly unbounded sample vectors), plus
+//!    **exporters** ([`export`]): per-request timeline assembly
+//!    ([`RequestTimeline`]: TTFT, queue wait, inter-token gaps), Chrome
+//!    trace-event JSON loadable in Perfetto ([`chrome_trace`]), and a
+//!    plain-text category summary ([`summary_table`]).
+//!
+//! Capture workflow (see docs/OBSERVABILITY.md):
+//!
+//! ```no_run
+//! use loglinear::obs;
+//! obs::enable();
+//! // ... drive the server / backend ...
+//! let drained = obs::drain();
+//! let doc = obs::chrome_trace(&drained.events, drained.dropped);
+//! std::fs::write("trace.json", doc.pretty()).unwrap();
+//! println!("{}", obs::summary_table(&drained.events, drained.dropped));
+//! obs::disable();
+//! ```
+//!
+//! Instrumentation must never perturb serving numerics — spans only
+//! observe timestamps and counters, and the serving-trace differential
+//! suite (`coordinator::trace`) continues to pin every instrumented path
+//! bit-exactly against the per-sequence oracle replay.
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use export::{by_category, chrome_trace, summary_table, timelines, CatAgg, RequestTimeline};
+pub use metrics::{LogHistogram, Metric, MetricId, Registry};
+pub use span::{
+    account_flops, current_lane, disable, drain, enable, enable_with_capacity, enabled,
+    flop_totals, instant, now_ns, record_closed, reset_flops, span, thread_flop_totals,
+    total_flops, Drained, SpanCat, SpanEvent, SpanGuard, COMPILED, NUM_CATS,
+};

@@ -1,0 +1,657 @@
+//! Zero-alloc-on-hot-path span recorder.
+//!
+//! Emission sites (`span` / `instant` / `record_closed` / `account_flops`)
+//! are called from the serving engine's hot loops — the decode step, the
+//! per-layer batched advance/read, the GEMM dispatch entry points — so
+//! after the one-time [`enable`] they never allocate: every thread writes
+//! fixed-size [`SpanEvent`]s into a preallocated ring buffer lane, and a
+//! full ring overwrites its oldest event (counting the drop) instead of
+//! growing. With tracing disabled (the default) every entry point is a
+//! single relaxed atomic load and a branch; with the `obs_off` cargo
+//! feature the recorder is compiled out entirely and the emission calls
+//! constant-fold to no-ops.
+//!
+//! Concurrency model: lanes are `Mutex`-guarded but effectively
+//! thread-private (each thread is assigned a lane on first emission), so
+//! the lock is uncontended on the hot path and only ever contended by
+//! [`drain`]. The GEMM *worker* threads never emit spans — flop
+//! accounting happens on the dispatching thread at the `tensor` entry
+//! points, before row-block parallelization — so in practice one lane
+//! per engine loop is active. Statics use `std::sync` directly (not the
+//! `util::sync` loom shim): loom atomics are not const-constructible,
+//! and the recorder is deliberately outside the loom model, like
+//! `tensor::GEMM_THREADS` (see `util/sync.rs` docs).
+//!
+//! Span *nesting* is tracked per lane with a fixed-depth category stack;
+//! [`account_flops`] attributes kernel flops to the innermost open span
+//! (and, transitively on close, to its ancestors), which is how a
+//! `DecodeStep` span ends up carrying the flops of the per-layer
+//! `Advance`/`Read`/`Project`/`Logits` GEMMs it encloses.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// `false` when the `obs_off` cargo feature compiled the recorder out:
+/// every emission entry point short-circuits on this constant and the
+/// optimizer removes the call entirely.
+pub const COMPILED: bool = cfg!(not(feature = "obs_off"));
+
+/// Span/event categories — the serving-path taxonomy (docs/OBSERVABILITY.md).
+///
+/// The discriminant is the wire value stored in [`SpanEvent::cat`] and
+/// the index into the per-category flop/byte counters, so the order is
+/// part of the (in-process) format; append, don't reorder.
+#[repr(u8)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanCat {
+    /// `DecodeServer::submit` / `submit_score` (payload: request id).
+    Submit = 0,
+    /// Queue residency, submit → leaving the FIFO (payload: request id).
+    /// Recorded as a closed span at admission time.
+    QueueWait = 1,
+    /// Backend admission of one sequence (payload: request id).
+    Admit = 2,
+    /// Prefix-cache longest-prefix probe (payload: prompt tokens).
+    PrefixProbe = 3,
+    /// Prefix-cache hit adoption (payload: tokens served from cache).
+    PrefixHit = 4,
+    /// Prefix-cache LRU eviction under pool pressure (payload: blocks freed).
+    PrefixEvict = 5,
+    /// One chunkwise prefill ingest for one sequence (payload: request id).
+    PrefillChunk = 6,
+    /// One scoring chunk (prefill-side log-prob rows; payload: request id).
+    ScoreChunk = 7,
+    /// One batched decode step over the bucket (payload: occupied rows).
+    DecodeStep = 8,
+    /// Pool-wide batched Fenwick advance for one layer (payload: bucket rows).
+    Advance = 9,
+    /// Batched level read for one layer (payload: bucket rows).
+    Read = 10,
+    /// Layer-to-layer q/k/v projection GEMMs (payload: layer index).
+    Project = 11,
+    /// Last-layer logits GEMM (payload: bucket rows).
+    Logits = 12,
+    /// One `StreamEvent` pushed to the stream queue (payload: request id).
+    /// Instant event: `start_ns == end_ns`.
+    StreamEmit = 13,
+    /// `DecodeServer::cancel` (payload: request id).
+    Cancel = 14,
+    /// Kernel work outside any open span (flop attribution fallback).
+    Untracked = 15,
+}
+
+/// Number of categories (flop/byte counter array length).
+pub const NUM_CATS: usize = 16;
+
+impl SpanCat {
+    /// Stable display name (Chrome-trace `name` field, summary tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanCat::Submit => "submit",
+            SpanCat::QueueWait => "queue_wait",
+            SpanCat::Admit => "admit",
+            SpanCat::PrefixProbe => "prefix_probe",
+            SpanCat::PrefixHit => "prefix_hit",
+            SpanCat::PrefixEvict => "prefix_evict",
+            SpanCat::PrefillChunk => "prefill_chunk",
+            SpanCat::ScoreChunk => "score_chunk",
+            SpanCat::DecodeStep => "decode_step",
+            SpanCat::Advance => "advance_bucket",
+            SpanCat::Read => "read_batch",
+            SpanCat::Project => "project",
+            SpanCat::Logits => "logits_gemm",
+            SpanCat::StreamEmit => "stream_emit",
+            SpanCat::Cancel => "cancel",
+            SpanCat::Untracked => "untracked",
+        }
+    }
+
+    /// Inverse of the wire discriminant.
+    pub fn from_u8(b: u8) -> Option<SpanCat> {
+        ALL_CATS.get(b as usize).copied()
+    }
+}
+
+/// Every category, indexed by discriminant.
+pub const ALL_CATS: [SpanCat; NUM_CATS] = [
+    SpanCat::Submit,
+    SpanCat::QueueWait,
+    SpanCat::Admit,
+    SpanCat::PrefixProbe,
+    SpanCat::PrefixHit,
+    SpanCat::PrefixEvict,
+    SpanCat::PrefillChunk,
+    SpanCat::ScoreChunk,
+    SpanCat::DecodeStep,
+    SpanCat::Advance,
+    SpanCat::Read,
+    SpanCat::Project,
+    SpanCat::Logits,
+    SpanCat::StreamEmit,
+    SpanCat::Cancel,
+    SpanCat::Untracked,
+];
+
+/// One fixed-size recorded span. `start_ns`/`end_ns` are monotonic ticks
+/// from the process-wide epoch ([`now_ns`]); `payload` is
+/// category-specific (usually the request id); `flops` is the kernel
+/// work attributed to this span *including* enclosed child spans;
+/// `depth` is the nesting depth at emission (0 = top level).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SpanEvent {
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub payload: u64,
+    pub flops: u64,
+    pub cat: u8,
+    pub tid: u16,
+    pub depth: u8,
+}
+
+impl SpanEvent {
+    /// Decoded category (`Untracked` if the wire value is unknown).
+    pub fn category(&self) -> SpanCat {
+        SpanCat::from_u8(self.cat).unwrap_or(SpanCat::Untracked)
+    }
+
+    /// Span duration in seconds.
+    pub fn seconds(&self) -> f64 {
+        self.end_ns.saturating_sub(self.start_ns) as f64 * 1e-9
+    }
+}
+
+/// Max simultaneously-tracked emitting threads; a process with more
+/// wraps onto shared lanes (events stay valid, per-lane nesting depths
+/// may interleave). The serving engine uses one lane per engine loop.
+pub const MAX_LANES: usize = 64;
+
+/// Default per-lane ring capacity (events); rings for all [`MAX_LANES`]
+/// lanes are allocated up front at [`enable`] time (≈ 40B per event).
+pub const DEFAULT_CAPACITY: usize = 1 << 14;
+
+/// Max span nesting depth tracked for flop attribution; deeper spans
+/// still record but attribute their flops to [`SpanCat::Untracked`].
+pub const MAX_STACK: usize = 32;
+
+struct Lane {
+    /// Preallocated ring storage; `len()` is the capacity (0 until `enable`).
+    events: Vec<SpanEvent>,
+    /// Next write index.
+    head: usize,
+    /// Valid events in the ring (≤ capacity).
+    filled: usize,
+    /// Events overwritten before being drained.
+    dropped: u64,
+    /// Open-span stack: (category, flops accumulated while innermost).
+    stack: [(u8, u64); MAX_STACK],
+    depth: usize,
+    /// Per-category kernel flop/byte totals for work dispatched from
+    /// this lane's thread (lane-local, so concurrent threads never
+    /// interleave counts — see [`thread_flop_totals`]).
+    flops: [u64; NUM_CATS],
+    bytes: [u64; NUM_CATS],
+}
+
+impl Lane {
+    const fn empty() -> Lane {
+        Lane {
+            events: Vec::new(),
+            head: 0,
+            filled: 0,
+            dropped: 0,
+            stack: [(0u8, 0u64); MAX_STACK],
+            depth: 0,
+            flops: [0u64; NUM_CATS],
+            bytes: [0u64; NUM_CATS],
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static LANES: OnceLock<Vec<Mutex<Lane>>> = OnceLock::new();
+static NEXT_LANE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static LANE_ID: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// Monotonic nanoseconds since the process-wide tracing epoch (first
+/// call wins). Cheap enough for per-span use; all exported timestamps
+/// share this origin.
+// xtask: deny_alloc
+#[inline]
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Is span recording currently on? One relaxed load — this is the whole
+/// disabled-mode cost of an emission site (plus the compiled-out `false`
+/// under the `obs_off` feature).
+// xtask: deny_alloc
+#[inline]
+pub fn enabled() -> bool {
+    COMPILED && ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on with the default per-lane ring capacity.
+pub fn enable() {
+    enable_with_capacity(DEFAULT_CAPACITY);
+}
+
+/// Turn span recording on, (re)sizing every lane's ring to `capacity`
+/// events and clearing previously recorded events, drop counts, and
+/// flop/byte counters. Call from a quiescent point (no spans open).
+pub fn enable_with_capacity(capacity: usize) {
+    let capacity = capacity.max(1);
+    let lanes = LANES.get_or_init(|| (0..MAX_LANES).map(|_| Mutex::new(Lane::empty())).collect());
+    for lane in lanes {
+        let mut l = lane.lock().unwrap_or_else(|p| p.into_inner());
+        if l.events.len() != capacity {
+            l.events.clear();
+            l.events.resize(capacity, SpanEvent::default());
+        }
+        l.head = 0;
+        l.filled = 0;
+        l.dropped = 0;
+        l.depth = 0;
+    }
+    reset_flops();
+    // tick the epoch so the first enable doesn't pay lazy-init mid-span
+    now_ns();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn span recording off. Already-open [`SpanGuard`]s still record on
+/// drop (their lane state stays consistent); new spans are no-ops.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Zero every lane's per-category flop/byte counters.
+pub fn reset_flops() {
+    let Some(lanes) = LANES.get() else { return };
+    for lane in lanes {
+        let mut l = lane.lock().unwrap_or_else(|p| p.into_inner());
+        l.flops = [0u64; NUM_CATS];
+        l.bytes = [0u64; NUM_CATS];
+    }
+}
+
+/// Per-category (flops, bytes) totals accumulated since the last
+/// [`reset_flops`] / [`enable_with_capacity`], summed over every
+/// thread's lane. Index with `SpanCat as usize`.
+pub fn flop_totals() -> ([u64; NUM_CATS], [u64; NUM_CATS]) {
+    let mut f = [0u64; NUM_CATS];
+    let mut b = [0u64; NUM_CATS];
+    let Some(lanes) = LANES.get() else { return (f, b) };
+    for lane in lanes {
+        let l = lane.lock().unwrap_or_else(|p| p.into_inner());
+        for i in 0..NUM_CATS {
+            f[i] += l.flops[i];
+            b[i] += l.bytes[i];
+        }
+    }
+    (f, b)
+}
+
+/// Per-category (flops, bytes) totals for kernel work dispatched from
+/// *this thread* only. GEMM flops are accounted on the dispatching
+/// thread, so a single-threaded driver (a bench, an engine loop) sees
+/// all of its kernel work here, unpolluted by other threads.
+pub fn thread_flop_totals() -> ([u64; NUM_CATS], [u64; NUM_CATS]) {
+    with_lane(|lane, _| (lane.flops, lane.bytes)).unwrap_or(([0; NUM_CATS], [0; NUM_CATS]))
+}
+
+/// Total flops across all categories and lanes since the last reset.
+pub fn total_flops() -> u64 {
+    flop_totals().0.iter().sum()
+}
+
+/// Run `f` on this thread's lane. Returns `None` only before the first
+/// `enable` (no lanes exist yet). Lock is uncontended on the hot path
+/// (lanes are thread-affine); no allocation.
+// xtask: deny_alloc
+#[inline]
+fn with_lane<R>(f: impl FnOnce(&mut Lane, u16) -> R) -> Option<R> {
+    let lanes = LANES.get()?;
+    let id = LANE_ID.with(|c| {
+        let mut id = c.get();
+        if id == usize::MAX {
+            id = NEXT_LANE.fetch_add(1, Ordering::Relaxed) % MAX_LANES;
+            c.set(id);
+        }
+        id
+    });
+    let mut lane = lanes[id].lock().unwrap_or_else(|p| p.into_inner());
+    Some(f(&mut lane, id as u16))
+}
+
+/// Ring write: overwrite-oldest on a full ring, counting the drop, so a
+/// drained trace always holds the *most recent* window.
+// xtask: deny_alloc
+#[inline]
+fn push_event(lane: &mut Lane, ev: SpanEvent) {
+    let cap = lane.events.len();
+    if cap == 0 {
+        return;
+    }
+    if lane.filled == cap {
+        lane.dropped += 1;
+    } else {
+        lane.filled += 1;
+    }
+    lane.events[lane.head] = ev;
+    lane.head = (lane.head + 1) % cap;
+}
+
+/// RAII span handle from [`span`]; records the event when dropped.
+#[must_use = "a span records on drop — bind it for the region's lifetime"]
+pub struct SpanGuard {
+    armed: bool,
+    cat: SpanCat,
+    payload: u64,
+    start_ns: u64,
+}
+
+impl SpanGuard {
+    /// A guard that records nothing (disabled-mode fast path).
+    #[inline]
+    fn disarmed(cat: SpanCat) -> SpanGuard {
+        SpanGuard { armed: false, cat, payload: 0, start_ns: 0 }
+    }
+}
+
+/// Open a span of category `cat`. The span closes (and its event is
+/// recorded) when the returned guard drops. Alloc-free; when tracing is
+/// disabled this is one atomic load.
+// xtask: deny_alloc
+#[inline]
+pub fn span(cat: SpanCat, payload: u64) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::disarmed(cat);
+    }
+    let start_ns = now_ns();
+    with_lane(|lane, _| {
+        if lane.depth < MAX_STACK {
+            lane.stack[lane.depth] = (cat as u8, 0);
+        }
+        lane.depth += 1;
+    });
+    SpanGuard { armed: true, cat, payload, start_ns }
+}
+
+impl Drop for SpanGuard {
+    // xtask: deny_alloc
+    #[inline]
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let end_ns = now_ns();
+        let (cat, payload, start_ns) = (self.cat, self.payload, self.start_ns);
+        with_lane(|lane, tid| {
+            lane.depth = lane.depth.saturating_sub(1);
+            let flops = if lane.depth < MAX_STACK { lane.stack[lane.depth].1 } else { 0 };
+            // roll this span's kernel work up into the enclosing span
+            if lane.depth > 0 && lane.depth - 1 < MAX_STACK {
+                lane.stack[lane.depth - 1].1 += flops;
+            }
+            push_event(
+                lane,
+                SpanEvent {
+                    start_ns,
+                    end_ns,
+                    payload,
+                    flops,
+                    cat: cat as u8,
+                    tid,
+                    depth: lane.depth as u8,
+                },
+            );
+        });
+    }
+}
+
+/// Record an instantaneous event (`start == end`), e.g. a stream-queue
+/// push. Alloc-free.
+// xtask: deny_alloc
+#[inline]
+pub fn instant(cat: SpanCat, payload: u64) {
+    if !enabled() {
+        return;
+    }
+    let t = now_ns();
+    record_closed(cat, t, t, payload);
+}
+
+/// Record an already-closed span with explicit endpoints — for regions
+/// whose start predates the emission site (e.g. queue wait, measured
+/// submit → admit). Alloc-free.
+// xtask: deny_alloc
+#[inline]
+pub fn record_closed(cat: SpanCat, start_ns: u64, end_ns: u64, payload: u64) {
+    if !enabled() {
+        return;
+    }
+    with_lane(|lane, tid| {
+        let depth = lane.depth.min(u8::MAX as usize) as u8;
+        push_event(
+            lane,
+            SpanEvent { start_ns, end_ns, payload, flops: 0, cat: cat as u8, tid, depth },
+        );
+    });
+}
+
+/// Attribute `flops` floating-point operations and `bytes` of kernel
+/// traffic to the innermost open span on this thread (falling back to
+/// [`SpanCat::Untracked`]). Called by the `tensor` GEMM dispatch entry
+/// points on the dispatching thread; alloc-free.
+// xtask: deny_alloc
+#[inline]
+pub fn account_flops(flops: u64, bytes: u64) {
+    if !enabled() {
+        return;
+    }
+    with_lane(|lane, _| {
+        let cat = if lane.depth > 0 && lane.depth <= MAX_STACK {
+            let top = lane.depth - 1;
+            lane.stack[top].1 += flops;
+            lane.stack[top].0
+        } else {
+            SpanCat::Untracked as u8
+        };
+        lane.flops[cat as usize] += flops;
+        lane.bytes[cat as usize] += bytes;
+    });
+}
+
+/// The lane id (== [`SpanEvent::tid`]) this thread records into,
+/// assigning one if needed; `None` before the first [`enable`]. Lets a
+/// single-threaded driver filter a drained trace down to its own events
+/// when other threads may also be emitting.
+pub fn current_lane() -> Option<u16> {
+    with_lane(|_, tid| tid)
+}
+
+/// Everything [`drain`] hands back: the recorded events (chronological)
+/// plus the overflow-drop count since the last drain/enable.
+#[derive(Debug, Clone, Default)]
+pub struct Drained {
+    pub events: Vec<SpanEvent>,
+    /// Total overflow drops across all lanes.
+    pub dropped: u64,
+    /// Per-lane overflow drops (lanes with a non-zero count only).
+    pub dropped_by_lane: Vec<(u16, u64)>,
+}
+
+/// Collect and clear every lane's recorded events, sorted by start tick
+/// (ties: outermost span first). Not a hot path — allocates the result.
+pub fn drain() -> Drained {
+    let mut out = Drained::default();
+    let Some(lanes) = LANES.get() else { return out };
+    for (id, lane) in lanes.iter().enumerate() {
+        let mut l = lane.lock().unwrap_or_else(|p| p.into_inner());
+        let cap = l.events.len();
+        if cap > 0 {
+            // chronological unroll: oldest event sits at head - filled
+            let start = (l.head + cap - l.filled) % cap;
+            for i in 0..l.filled {
+                out.events.push(l.events[(start + i) % cap]);
+            }
+        }
+        if l.dropped > 0 {
+            out.dropped += l.dropped;
+            out.dropped_by_lane.push((id as u16, l.dropped));
+        }
+        l.head = 0;
+        l.filled = 0;
+        l.dropped = 0;
+    }
+    out.events.sort_by_key(|e| (e.start_ns, std::cmp::Reverse(e.end_ns), e.depth));
+    out
+}
+
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    // the recorder is process-global; tests that toggle it serialize here
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain, keeping only this thread's events — other test threads may
+    /// emit while tracing is enabled here, but they land in other lanes.
+    fn drain_mine() -> Drained {
+        let tid = current_lane().expect("recorder enabled");
+        let mut d = drain();
+        d.events.retain(|e| e.tid == tid);
+        d.dropped = d
+            .dropped_by_lane
+            .iter()
+            .find(|(l, _)| *l == tid)
+            .map(|(_, n)| *n)
+            .unwrap_or(0);
+        d
+    }
+
+    #[test]
+    fn disabled_mode_is_a_no_op() {
+        let _g = test_lock();
+        // reset recorder state left over from earlier tests, then disable
+        enable_with_capacity(4);
+        disable();
+        let guard = span(SpanCat::DecodeStep, 7);
+        instant(SpanCat::StreamEmit, 7);
+        account_flops(1000, 4000);
+        drop(guard);
+        // nothing recorded, nothing counted
+        let d = drain_mine();
+        assert!(d.events.is_empty(), "disabled mode recorded {} events", d.events.len());
+        assert_eq!(d.dropped, 0);
+        assert_eq!(thread_flop_totals().0, [0u64; NUM_CATS]);
+    }
+
+    #[test]
+    fn records_nested_spans_with_flop_attribution() {
+        let _g = test_lock();
+        enable_with_capacity(64);
+        {
+            let _outer = span(SpanCat::DecodeStep, 42);
+            account_flops(100, 400);
+            {
+                let _inner = span(SpanCat::Advance, 1);
+                account_flops(250, 1000);
+            }
+            {
+                let _inner = span(SpanCat::Read, 1);
+                account_flops(50, 200);
+            }
+        }
+        disable();
+        let d = drain_mine();
+        assert_eq!(d.events.len(), 3);
+        assert_eq!(d.dropped, 0);
+        // sorted by start: outer first (ties broken outermost-first)
+        assert_eq!(d.events[0].category(), SpanCat::DecodeStep);
+        assert_eq!(d.events[0].depth, 0);
+        assert_eq!(d.events[0].payload, 42);
+        let adv = d.events.iter().find(|e| e.category() == SpanCat::Advance).unwrap();
+        let rd = d.events.iter().find(|e| e.category() == SpanCat::Read).unwrap();
+        assert_eq!(adv.depth, 1);
+        assert_eq!(adv.flops, 250);
+        assert_eq!(rd.flops, 50);
+        // outer span carries its own + children's flops
+        assert_eq!(d.events[0].flops, 400);
+        // children nest inside the outer interval
+        assert!(adv.start_ns >= d.events[0].start_ns && adv.end_ns <= d.events[0].end_ns);
+        assert!(rd.start_ns >= adv.end_ns);
+        // per-category lane counters saw the same attribution
+        let (f, b) = thread_flop_totals();
+        assert_eq!(f[SpanCat::DecodeStep as usize], 100);
+        assert_eq!(f[SpanCat::Advance as usize], 250);
+        assert_eq!(f[SpanCat::Read as usize], 50);
+        assert_eq!(b[SpanCat::Advance as usize], 1000);
+        assert_eq!(total_flops(), 400);
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_newest_and_counts_drops() {
+        let _g = test_lock();
+        enable_with_capacity(8);
+        for i in 0..20u64 {
+            instant(SpanCat::StreamEmit, i);
+        }
+        disable();
+        let d = drain_mine();
+        assert_eq!(d.events.len(), 8, "full ring holds exactly its capacity");
+        assert_eq!(d.dropped, 12, "overwrites are counted as drops");
+        // the survivors are the *last* 8 events, in order
+        let payloads: Vec<u64> = d.events.iter().map(|e| e.payload).collect();
+        assert_eq!(payloads, (12..20).collect::<Vec<u64>>());
+        // drain cleared the ring and the drop counter
+        let d2 = drain_mine();
+        assert!(d2.events.is_empty());
+        assert_eq!(d2.dropped, 0);
+    }
+
+    #[test]
+    fn untracked_flops_fall_through_to_their_own_category() {
+        let _g = test_lock();
+        enable_with_capacity(8);
+        account_flops(77, 308);
+        disable();
+        let (f, _) = thread_flop_totals();
+        assert_eq!(f[SpanCat::Untracked as usize], 77);
+        drain();
+    }
+
+    #[test]
+    fn record_closed_preserves_explicit_endpoints() {
+        let _g = test_lock();
+        enable_with_capacity(8);
+        record_closed(SpanCat::QueueWait, 1_000, 5_000, 9);
+        disable();
+        let d = drain_mine();
+        assert_eq!(d.events.len(), 1);
+        assert_eq!(d.events[0].start_ns, 1_000);
+        assert_eq!(d.events[0].end_ns, 5_000);
+        assert_eq!(d.events[0].category(), SpanCat::QueueWait);
+        assert!((d.events[0].seconds() - 4e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn category_roundtrip() {
+        for (i, c) in ALL_CATS.iter().enumerate() {
+            assert_eq!(*c as usize, i);
+            assert_eq!(SpanCat::from_u8(i as u8), Some(*c));
+            assert!(!c.name().is_empty());
+        }
+        assert_eq!(SpanCat::from_u8(NUM_CATS as u8), None);
+    }
+}

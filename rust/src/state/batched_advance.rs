@@ -150,6 +150,7 @@ impl BatchedAdvance {
         if n == 0 {
             return Vec::new();
         }
+        let _span = crate::obs::span(crate::obs::SpanCat::Advance, n as u64);
         let (dk, dv) = (seqs[0].dk, seqs[0].dv);
         // hard assert: the fused dispatch below slices the slab at dk·dv
         // strides, so a mismatched pool would silently corrupt unrelated

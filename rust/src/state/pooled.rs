@@ -327,6 +327,7 @@ impl BatchedDecoder {
         if n == 0 {
             return;
         }
+        let _span = crate::obs::span(crate::obs::SpanCat::Read, n as u64);
         let (dk, dv) = (seqs[0].dk, seqs[0].dv);
         assert_eq!(qs.len(), n * dk, "qs shape");
         assert_eq!(lambdas.len(), n, "lambdas shape");
@@ -363,6 +364,12 @@ impl BatchedDecoder {
         //    contiguous output row-blocks per worker, blocks streamed
         //    straight from the pool slab (zero-copy).
         let flops = 2 * self.blocks.len() * dk * dv;
+        // custom block-sparse path: attribute flops here, since it never
+        // crosses the hooked dense/batched GEMM entry points
+        crate::obs::account_flops(
+            flops as u64,
+            4 * (self.blocks.len() * dk * (dv + 1) + n * dv) as u64,
+        );
         let threads = if flops < BATCH_READ_FLOP_THRESHOLD {
             1
         } else {

@@ -113,6 +113,7 @@ impl PrefixCache {
     /// the cache — callers adopt them with a `retain` per block
     /// (`PooledFenwickState::adopt_levels`), never take them.
     pub fn lookup(&mut self, tokens: &[i32]) -> Option<(usize, BoundaryStates)> {
+        let _probe = crate::obs::span(crate::obs::SpanCat::PrefixProbe, tokens.len() as u64);
         let mut node = 0usize;
         let mut best: Option<(usize, usize)> = None; // (node, matched tokens)
         let mut depth = 0usize;
@@ -130,6 +131,7 @@ impl PrefixCache {
             }
         }
         let (node, matched) = best?;
+        crate::obs::instant(crate::obs::SpanCat::PrefixHit, matched as u64);
         self.tick += 1;
         let entry = self.nodes[node].entry.as_mut().expect("picked above");
         entry.last_used = self.tick;
@@ -202,7 +204,12 @@ impl PrefixCache {
             return false;
         };
         let entry = self.nodes[i].entry.take().expect("picked above");
+        let held_before = self.blocks_held;
         self.release_entry(&entry, pool);
+        crate::obs::instant(
+            crate::obs::SpanCat::PrefixEvict,
+            (held_before - self.blocks_held) as u64,
+        );
         true
     }
 

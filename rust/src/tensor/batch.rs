@@ -27,6 +27,18 @@ use crate::util::threadpool::par_row_chunks_pooled;
 #[cfg(not(loom))]
 use crate::util::threadpool::resident_pool;
 
+/// Flop/byte accounting for `batch` independent `(m, k, n)` products —
+/// the batched analogue of the dense entry points' hook (attributed to
+/// the caller's innermost open span; see `crate::obs`).
+// xtask: deny_alloc
+#[inline]
+fn account_batch(batch: usize, m: usize, k: usize, n: usize) {
+    crate::obs::account_flops(
+        2 * (batch as u64) * (m as u64) * (k as u64) * (n as u64),
+        4 * (batch as u64) * ((m * k) as u64 + (k * n) as u64 + (m * n) as u64),
+    );
+}
+
 /// Dispatch a batch of same-shape row-major problems as one pooled
 /// row-block parallel-for over the stacked `(batch·m, n)` output.
 /// `kernel(h, lr0, lr1, chunk)` computes rows `[lr0, lr1)` of problem
@@ -78,6 +90,7 @@ pub fn gemm_batch_into(
     if batch == 0 || m == 0 || n == 0 || k == 0 {
         return;
     }
+    account_batch(batch, m, k, n);
     let threads = plan_threads(batch * m, k, n);
     batch_dispatch(batch, m, n, threads, out, |h, lr0, lr1, sub| {
         block_nn(&a[h * m * k..(h + 1) * m * k], &b[h * k * n..(h + 1) * k * n], sub, k, n, lr0, lr1)
@@ -108,6 +121,7 @@ pub fn gemm_nt_batch_into(
     if batch == 0 || m == 0 || n == 0 || k == 0 {
         return;
     }
+    account_batch(batch, m, k, n);
     let threads = plan_threads(batch * m, k, n);
     batch_dispatch(batch, m, n, threads, out, |h, lr0, lr1, sub| {
         block_nt(&a[h * m * k..(h + 1) * m * k], &b[h * n * k..(h + 1) * n * k], sub, k, n, lr0, lr1)
@@ -137,6 +151,7 @@ pub fn gemm_tn_diag_batch_acc(
     if batch == 0 || m == 0 || n == 0 || k == 0 {
         return;
     }
+    account_batch(batch, m, k, n);
     let threads = plan_threads(batch * m, k, n);
     batch_dispatch(batch, m, n, threads, out, |h, lr0, lr1, sub| {
         block_tn_diag(

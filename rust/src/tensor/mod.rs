@@ -285,6 +285,19 @@ fn block_sparse(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize, r0: u
     }
 }
 
+/// Kernel flop/byte attribution for one `(m,k)·(k,n)` GEMM dispatch —
+/// the obs hook every entry point below reports through (2·m·k·n flops,
+/// operand + output traffic in bytes; `gemm_sparse_rows` reports its
+/// dense upper bound). One relaxed atomic load when tracing is off.
+// xtask: deny_alloc
+#[inline]
+fn account_gemm(m: usize, k: usize, n: usize) {
+    crate::obs::account_flops(
+        2 * (m as u64) * (k as u64) * (n as u64),
+        4 * ((m * k) as u64 + (k * n) as u64 + (m * n) as u64),
+    );
+}
+
 /// `out (+)= A @ B` on raw row-major slices: `a` is (m,k), `b` (k,n),
 /// `out` (m,n). With `accumulate = false` the output is overwritten.
 /// Blocked + threaded per the module docs.
@@ -299,6 +312,7 @@ pub fn gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    account_gemm(m, k, n);
     let threads = plan_threads(m, k, n);
     if threads <= 1 {
         block_nn(a, b, out, k, n, 0, m);
@@ -322,6 +336,7 @@ pub fn gemm_nt_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mu
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    account_gemm(m, k, n);
     let threads = plan_threads(m, k, n);
     if threads <= 1 {
         block_nt(a, b, out, k, n, 0, m);
@@ -345,6 +360,7 @@ pub fn gemm_tn_into(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], out: &mu
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    account_gemm(m, k, n);
     let threads = plan_threads(m, k, n);
     if threads <= 1 {
         block_tn(a, b, out, k, m, n, 0, m);
@@ -367,6 +383,7 @@ pub fn gemm_diag_acc(m: usize, k: usize, n: usize, w: &[f32], a: &[f32], b: &[f3
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    account_gemm(m, k, n);
     let threads = plan_threads(m, k, n);
     if threads <= 1 {
         block_nn_diag(a, b, w, out, k, n, 0, m);
@@ -389,6 +406,7 @@ pub fn gemm_tn_diag_acc(k: usize, m: usize, n: usize, w: &[f32], a: &[f32], b: &
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    account_gemm(m, k, n);
     let threads = plan_threads(m, k, n);
     if threads <= 1 {
         block_tn_diag(a, b, w, out, k, m, n, 0, m);
@@ -414,6 +432,7 @@ pub fn gemm_sparse_rows(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out:
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    account_gemm(m, k, n);
     let threads = plan_threads(m, k, n);
     if threads <= 1 {
         block_sparse(a, b, out, k, n, 0, m);

@@ -1,0 +1,206 @@
+//! End-to-end observability acceptance test (the PR's trace-export
+//! self-test, run explicitly by `scripts/ci.sh`).
+//!
+//! One process-wide test (the recorder is a global; in-crate obs unit
+//! tests serialize on a lock, this file simply owns its own binary):
+//!
+//! 1. a traced mixed prefill/decode/score/cancel run exports Chrome
+//!    trace-event JSON that parses back through `util::json` with the
+//!    right phases and categories,
+//! 2. per-request timelines reconstructed from the trace reconcile with
+//!    the TTFT / inter-token / queue-wait latencies `ServerStats`
+//!    measured independently,
+//! 3. kernel flop accounting over chunkwise prompt scoring shows
+//!    O(log T) flops-per-token growth (semilog fit checked — the
+//!    paper's O(T log T) prefill claim, observed from the GEMM hooks).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use loglinear::coordinator::backend::{PooledBackend, TransitionKind};
+use loglinear::coordinator::batcher::BatchPolicy;
+use loglinear::coordinator::server::DecodeServer;
+use loglinear::coordinator::{GenRequest, ScoreRequest, StreamEvent};
+use loglinear::obs;
+use loglinear::util::json::Json;
+use loglinear::util::stats::{ols, scaling_exponent};
+
+/// Clock-skew allowance between the recorder's epoch ticks and the
+/// server's `Instant` reads (taken within a few statements of each
+/// other, but a preempt between them is possible on a loaded machine).
+const SKEW: f64 = 10e-3;
+
+#[test]
+fn traced_mixed_run_exports_chrome_trace_and_flops_grow_logarithmically() {
+    // ---- part 1: mixed traffic under tracing -------------------------
+    obs::enable_with_capacity(1 << 16);
+    let backend = PooledBackend::with_model_config(
+        64, 2, 2, TransitionKind::Mamba2, 8, 8, 4, 8192, 77,
+    );
+    let mut srv =
+        DecodeServer::with_backend(backend, BatchPolicy::new(vec![1, 4], Duration::ZERO));
+    // four generations whose 11-token prompts take 2 prefill chunks each
+    for id in 0..4u64 {
+        let prompt: Vec<i32> =
+            (0..11).map(|i| ((id as i64 * 13 + i * 7) % 64) as i32).collect();
+        srv.submit(GenRequest { id, prompt, max_new: 6 }).unwrap();
+    }
+    // a scoring request rides along (2 chunks + tail, 10 score rows)
+    let score_tokens: Vec<i32> = (0..11).map(|i| ((i * 5 + 3) % 64) as i32).collect();
+    srv.submit_score(ScoreRequest { id: 100, tokens: score_tokens }).unwrap();
+    // and a long-running generation that gets cancelled mid-flight
+    srv.submit(GenRequest { id: 50, prompt: vec![1, 2, 3], max_new: 50 }).unwrap();
+    for _ in 0..8 {
+        srv.step().unwrap();
+    }
+    let mut stream = srv.take_stream_events();
+    assert!(srv.cancel(50), "id 50 must be live to cancel");
+    let mut guard = 0;
+    while srv.pending() > 0 {
+        srv.step().unwrap();
+        stream.extend(srv.take_stream_events());
+        guard += 1;
+        assert!(guard < 10_000, "no forward progress");
+    }
+    stream.extend(srv.take_stream_events());
+    let stats = srv.stats.clone();
+    let drained = obs::drain();
+    obs::disable();
+    assert_eq!(drained.dropped, 0, "2^16 capacity must hold this run");
+    assert!(!drained.events.is_empty());
+
+    // ---- Chrome trace export is valid, Perfetto-shaped JSON ----------
+    let doc = obs::chrome_trace(&drained.events, drained.dropped);
+    let parsed = Json::parse(&doc.to_string()).expect("chrome trace must parse back");
+    let arr = parsed.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
+    assert_eq!(arr.len(), drained.events.len());
+    for ev in arr {
+        let ph = ev.get("ph").and_then(|v| v.as_str()).expect("every event has a phase");
+        assert!(ph == "X" || ph == "i", "unexpected phase {ph}");
+        assert!(ev.get("ts").and_then(|v| v.as_f64()).is_some());
+        assert!(ev.get("name").and_then(|v| v.as_str()).is_some());
+        assert!(ev.get("args").and_then(|a| a.get("flops")).is_some());
+    }
+    let table = obs::summary_table(&drained.events, drained.dropped);
+    for needle in [
+        "submit", "queue_wait", "admit", "prefill_chunk", "score_chunk", "decode_step",
+        "advance_bucket", "read_batch", "project", "logits_gemm", "stream_emit", "cancel",
+    ] {
+        assert!(table.contains(needle), "summary table missing {needle}:\n{table}");
+    }
+
+    // ---- timelines reconstruct every request's lifecycle -------------
+    let tls = obs::timelines(&drained.events);
+    assert_eq!(
+        tls.iter().map(|t| t.id).collect::<Vec<_>>(),
+        vec![0, 1, 2, 3, 50, 100],
+        "one timeline per submitted request"
+    );
+    // per-request streamed-token counts, from the server's own stream
+    let mut token_counts: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut score_rows = 0usize;
+    for e in &stream {
+        match *e {
+            StreamEvent::Token { id, .. } => *token_counts.entry(id).or_default() += 1,
+            StreamEvent::Score { id, .. } => {
+                assert_eq!(id, 100);
+                score_rows += 1;
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(score_rows, 10, "11 score tokens stream 10 rows");
+    for id in 0..4u64 {
+        let tl = tls.iter().find(|t| t.id == id).unwrap();
+        assert!(tl.submit_ns.is_some() && tl.queue_wait_ns.is_some() && tl.admit_ns.is_some());
+        assert_eq!(tl.prefill_chunks, 2, "11-token prompt at C=4 ingests 2 chunks");
+        assert!(tl.prefill_flops > 0, "prefill chunks must attribute kernel flops");
+        assert_eq!(tl.stream_ns.len(), 6, "one StreamEmit per generated token");
+        assert!(!tl.cancelled);
+    }
+    let t50 = tls.iter().find(|t| t.id == 50).unwrap();
+    assert!(t50.cancelled, "cancel must land in the timeline");
+    assert_eq!(t50.stream_ns.len(), token_counts[&50], "tokens streamed before cancel");
+    let t100 = tls.iter().find(|t| t.id == 100).unwrap();
+    assert_eq!(t100.score_chunks, 3, "2 score chunks + the tail");
+    assert_eq!(t100.stream_ns.len(), 10, "one StreamEmit per score row");
+
+    // ---- trace-derived latencies reconcile with ServerStats ----------
+    assert_eq!(stats.ttft_seconds.count(), token_counts.len(), "one TTFT per streaming request");
+    let total_tokens: usize = token_counts.values().sum();
+    assert_eq!(
+        stats.inter_token_seconds.count(),
+        total_tokens - token_counts.len(),
+        "one gap per consecutive token pair"
+    );
+    assert_eq!(stats.queue_wait_seconds.count(), 6, "6 admissions (5 gen + 1 score)");
+    let gen_tls: Vec<_> =
+        tls.iter().filter(|t| token_counts.contains_key(&t.id)).collect();
+    let trace_ttfts: Vec<f64> =
+        gen_tls.iter().map(|t| t.ttft_seconds().expect("both endpoints captured")).collect();
+    for &ttft in &trace_ttfts {
+        assert!(
+            ttft >= stats.ttft_seconds.min() - SKEW && ttft <= stats.ttft_seconds.max() + SKEW,
+            "trace TTFT {ttft} outside stats extrema [{}, {}]",
+            stats.ttft_seconds.min(),
+            stats.ttft_seconds.max()
+        );
+    }
+    let trace_mean_ttft = trace_ttfts.iter().sum::<f64>() / trace_ttfts.len() as f64;
+    assert!(
+        (trace_mean_ttft - stats.ttft_seconds.mean()).abs() < SKEW,
+        "mean TTFT: trace {trace_mean_ttft} vs stats {}",
+        stats.ttft_seconds.mean()
+    );
+    let gaps: Vec<f64> = gen_tls.iter().flat_map(|t| t.inter_token_seconds()).collect();
+    assert_eq!(gaps.len(), stats.inter_token_seconds.count());
+    let trace_mean_gap = gaps.iter().sum::<f64>() / gaps.len() as f64;
+    assert!(
+        (trace_mean_gap - stats.inter_token_seconds.mean()).abs() < SKEW,
+        "mean inter-token gap: trace {trace_mean_gap} vs stats {}",
+        stats.inter_token_seconds.mean()
+    );
+
+    // ---- part 2: flop accounting shows O(log T) flops-per-token ------
+    // Score one prompt per length through a fresh traced server: the
+    // chunkwise path's per-token flops must grow like a + b·log2 T
+    // (level reads touch O(log T) Fenwick levels), NOT polynomially.
+    let lengths = [64usize, 128, 256, 512, 1024];
+    let mut per_token: Vec<f64> = Vec::new();
+    for &t in &lengths {
+        obs::enable_with_capacity(1 << 12); // resets flop counters
+        let backend = PooledBackend::with_model_config(
+            64, 1, 1, TransitionKind::Mamba2, 8, 8, 16, 4096, 5,
+        );
+        let mut srv =
+            DecodeServer::with_backend(backend, BatchPolicy::new(vec![1], Duration::ZERO));
+        let tokens: Vec<i32> = (0..t).map(|i| ((i * 7 + 5) % 64) as i32).collect();
+        srv.submit_score(ScoreRequest { id: 0, tokens }).unwrap();
+        let mut guard = 0;
+        while srv.pending() > 0 {
+            srv.step().unwrap();
+            guard += 1;
+            assert!(guard < 10 * t, "scoring made no progress");
+        }
+        let flops = obs::total_flops();
+        obs::drain();
+        obs::disable();
+        assert!(flops > 0, "T={t}: GEMM hooks must attribute flops");
+        per_token.push(flops as f64 / t as f64);
+    }
+    // strictly increasing (longer prompts touch more Fenwick levels)...
+    for w in per_token.windows(2) {
+        assert!(w[1] > w[0], "flops/token must grow with T: {per_token:?}");
+    }
+    // ...fitting a + b·log2 T almost perfectly...
+    let log_t: Vec<f64> = lengths.iter().map(|&t| (t as f64).log2()).collect();
+    let (_a, b, r2) = ols(&log_t, &per_token);
+    assert!(b > 0.0, "semilog slope must be positive: {per_token:?}");
+    assert!(r2 > 0.9, "flops/token vs log2 T fit r2={r2}: {per_token:?}");
+    // ...and strongly sublinear in T (log-log slope far below linear)
+    let expo = scaling_exponent(&lengths, &per_token);
+    assert!(
+        expo < 0.5,
+        "flops/token scaling exponent {expo} — not O(log T): {per_token:?}"
+    );
+}

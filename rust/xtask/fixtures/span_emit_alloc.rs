@@ -1,0 +1,19 @@
+//! Known-bad fixture: allocation inside a span-emission path marked
+//! `xtask: deny_alloc` (linted under `src/obs/`). Span emission runs on
+//! every traced GEMM and token step; a `format!`/`Vec::new` there makes
+//! the recorder's overhead scale with the workload it is measuring —
+//! the zero-alloc ring design exists precisely to prevent that.
+
+// xtask: deny_alloc
+pub fn emit_span(cat: u8, payload: u64, sink: &mut Vec<(u8, String)>) {
+    let label = format!("span cat={cat} payload={payload}");
+    let mut batch = Vec::new();
+    batch.push((cat, label.clone()));
+    sink.extend(batch);
+}
+
+/// Unmarked sibling — must NOT fire (export/drain paths run once per
+/// trace dump and may allocate freely).
+pub fn export_span(cat: u8, payload: u64) -> String {
+    format!("cat={cat} payload={payload}")
+}

@@ -31,7 +31,8 @@ use crate::scan::{next_nonspace, token_positions, SourceFile};
 pub const LINT_NAMES: &[&str] = &["determinism", "refcount", "unsafe", "hot_alloc"];
 
 /// Serving-path directories covered by the determinism lint.
-const DET_DIRS: &[&str] = &["src/coordinator/", "src/state/", "src/prefill/", "src/tensor/"];
+const DET_DIRS: &[&str] =
+    &["src/coordinator/", "src/state/", "src/prefill/", "src/tensor/", "src/obs/"];
 
 /// Allocation tokens denied inside `// xtask: deny_alloc` functions.
 const ALLOC_TOKENS: &[&str] = &[

@@ -57,6 +57,12 @@ const FIXTURES: &[(&str, &str, &[&str], &str)] = &[
         &["hot_alloc"],
         include_str!("../fixtures/hot_path_alloc.rs"),
     ),
+    (
+        "span_emit_alloc.rs",
+        "src/obs/span_emit_alloc.rs",
+        &["hot_alloc"],
+        include_str!("../fixtures/span_emit_alloc.rs"),
+    ),
     // A reasonless waiver is flagged itself AND fails to suppress.
     (
         "bad_waiver.rs",

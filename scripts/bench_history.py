@@ -17,7 +17,8 @@ Usage: scripts/bench_history.py [--check | --self-test | --dashboard] [bench_dir
   --dashboard  render BENCH_HISTORY.json as a markdown table instead of
                folding: one row per snapshot, one column per headline
                metric (top-level numeric bench fields whose key mentions
-               'speedup', 'tokens_per_s', or 'per_request'). Columns
+               'speedup', 'tokens_per_s', 'per_request', 'ttft', 'p99',
+               or 'overhead'). Columns
                appear in first-snapshot order; metrics a snapshot lacks
                render as '-'.
   --check      validate BENCH_HISTORY.json instead of folding: exit
@@ -114,7 +115,7 @@ def fold(bench_dir):
     return 0
 
 
-HEADLINE_MARKERS = ("speedup", "tokens_per_s", "per_request")
+HEADLINE_MARKERS = ("speedup", "tokens_per_s", "per_request", "ttft", "p99", "overhead")
 
 
 def headline_metrics(bench_doc):
@@ -308,12 +309,17 @@ def self_test():
         dict(run_a, benches={"prefill": {"speedup_vs_token_by_token": 3.5,
                                          "prompt_tokens": 4096}}),
         dict(run_b, benches={"prefill": {"speedup_vs_token_by_token": 4.0,
-                                         "ttft_speedup_vs_cold": 12.5}}),
+                                         "ttft_speedup_vs_cold": 12.5},
+                             "decode": {"ttft_p99_us": 850.0,
+                                        "tracing_overhead_pct": 1.2,
+                                        "spans_per_step": 2.0}}),
     ]})
     for needle, name in [
         ("| timestamp | git_rev | prefill: speedup_vs_token_by_token |",
          "column header"),
         ("prefill: ttft_speedup_vs_cold", "late-appearing column"),
+        ("decode: ttft_p99_us", "ttft/p99 marker column"),
+        ("decode: tracing_overhead_pct", "overhead marker column"),
         ("| 3.5 |", "metric cell"),
         ("| - |", "missing-cell placeholder"),
     ]:
@@ -321,6 +327,8 @@ def self_test():
             failures.append(f"dashboard {name}: {needle!r} missing from:\n{md}")
     if "prompt_tokens" in md:
         failures.append("dashboard: non-headline key prompt_tokens leaked into the table")
+    if "spans_per_step" in md:
+        failures.append("dashboard: non-headline key spans_per_step leaked into the table")
     with tempfile.TemporaryDirectory() as d:
         expect("dashboard without history", dashboard(d), 0)
         write_history(d, {"runs": [run_a, run_b]})

@@ -19,6 +19,13 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+# Observability acceptance: a traced mixed prefill/decode/score run must
+# export valid Chrome-trace JSON whose timelines reconcile with the
+# ServerStats latency histograms, and the GEMM flop hooks must show the
+# O(log T) flops/token growth (docs/OBSERVABILITY.md).
+echo "== obs: trace-export self-test =="
+cargo test -q --release --test obs_trace
+
 # The property suites (util::prop: pool no-leak, pooled no-leak, the
 # serving-trace differential harness, ...) run under the fixed default
 # seed above; re-run them under two extra seeds so CI explores fresh
@@ -73,8 +80,9 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # prefill_throughput carries the chunkwise-speedup AND the
     # score_tokens_per_s headlines (equivalence asserted before timing)
     cargo bench --bench prefill_throughput -- --quick
-    # the serving-engine latency/coordinator benches (ported onto
-    # PooledBackend) at least build and run end to end
+    # the serving-engine latency bench also A/Bs the obs recorder on/off,
+    # asserts the tracing-disabled regression stays <2%, and merges the
+    # tracing/TTFT headlines into BENCH_decode.json
     cargo bench --bench decode_latency -- --quick
 
     echo "== bench history: fold BENCH_*.json into BENCH_HISTORY.json =="
