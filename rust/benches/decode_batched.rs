@@ -11,7 +11,11 @@
 //!   [`BatchedAdvance`](loglinear::state::BatchedAdvance) pass that
 //!   groups every sequence's merge/transition/sentinel-write by Fenwick
 //!   level and runs the per-block work as one scattered-slab dispatch
-//!   (mixed Mamba-2 + GDN transitions across the bucket).
+//!   (mixed Mamba-2 + GDN transitions across the bucket);
+//! - **sharded step**: one full `PooledBackend::step` bucket over the
+//!   shard count × layer-pipelining grid (docs/SHARDING.md) — every
+//!   cell asserted bit-identical to the single-shard baseline before
+//!   timing, `shard_speedup_vs_single` recorded per cell.
 //!
 //! Run: `cargo bench --bench decode_batched [-- --quick] [--threads N]`
 //!
@@ -25,6 +29,7 @@
 //! counterpart before timing.
 
 use loglinear::bench::{bench, section};
+use loglinear::coordinator::backend::{DecodeBackend, PooledBackend, SeqSlot, TransitionKind};
 use loglinear::state::pool::StatePool;
 use loglinear::state::pooled::{BatchedDecoder, PooledFenwickState};
 use loglinear::state::{AdvanceJob, BatchedAdvance, FenwickState, Transition};
@@ -217,6 +222,81 @@ fn main() {
         rows.push(("advance_batched".into(), b, r.secs.mean, sum_live));
     }
 
+    // ---- sharded serving step: shard count × pipelining grid ----------
+    // Serving-shaped workload: a 3-layer × 2-head PooledBackend stepped
+    // as one decode bucket, over every shard count × pipelining cell.
+    // Each cell feeds the same deterministic token stream, so the first
+    // CHECK steps' logits must be bit-identical to the single-shard
+    // non-pipelined baseline *before* anything is timed — the same bar
+    // the trace harness holds (docs/SHARDING.md).
+    const SHARD_VOCAB: usize = 64;
+    let (sl, sh, sdk) = (3usize, 2usize, 32usize);
+    let shard_b = if quick { 4 } else { 8 };
+    const CHECK: usize = 4;
+    section(&format!(
+        "sharded decode step: shards x pipelining (L={sl}, H={sh}, dk=dv={sdk}, B={shard_b}, gemm_threads={})",
+        tensor::current_gemm_threads()
+    ));
+    let tok = |i: usize, t: usize| ((i * 7 + t * 13 + 5) % SHARD_VOCAB) as i32;
+    let grid: [(usize, bool); 6] =
+        [(1, false), (1, true), (2, false), (2, true), (4, false), (4, true)];
+    let mut baseline: Vec<Vec<f32>> = Vec::new();
+    let mut shard_rows: Vec<(usize, bool, f64)> = Vec::new();
+    for &(shards, pipelined) in &grid {
+        // pools sized for any step count a timed run can reach
+        // (t < 2^33 => 34 blocks per head per layer), split evenly so
+        // every grid cell has the same aggregate capacity
+        let per_seq = sl * sh * 34;
+        let per_shard = (shard_b / shards) * per_seq;
+        let mut backend = PooledBackend::with_model_config(
+            SHARD_VOCAB,
+            sl,
+            sh,
+            TransitionKind::Mamba2,
+            sdk,
+            sdk,
+            0,
+            per_shard * shards,
+            0x5AADED,
+        );
+        backend.set_shards(shards);
+        backend.set_pipelined(pipelined);
+        let slots: Vec<SeqSlot> = (0..shard_b)
+            .map(|_| backend.admit_prompt(1usize << 33, &[]).expect("pool sized for the grid").0)
+            .collect();
+        let step_rows = |backend: &mut PooledBackend, pos: usize| {
+            let batch: Vec<(SeqSlot, i32, i32)> = slots
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| (s, tok(i, pos), pos as i32))
+                .collect();
+            backend.step(shard_b, &batch).expect("pool sized for the grid")
+        };
+        let mut pos = 0usize;
+        for _ in 0..CHECK {
+            let logits = step_rows(&mut backend, pos);
+            if shards == 1 && !pipelined {
+                baseline.push(logits);
+            } else {
+                assert_eq!(
+                    logits, baseline[pos],
+                    "sharded step diverged from the single-shard baseline \
+                     (shards={shards}, pipelined={pipelined}, step {pos})"
+                );
+            }
+            pos += 1;
+        }
+        let r = bench(
+            &format!("pooled step/shards={shards} pipelined={pipelined} B={shard_b}"),
+            0.25,
+            || {
+                std::hint::black_box(step_rows(&mut backend, pos));
+                pos += 1;
+            },
+        );
+        shard_rows.push((shards, pipelined, r.secs.mean));
+    }
+
     section("ns per sequence-token (read path) and batched speedup");
     println!("{:>6} {:>16} {:>16} {:>10}", "B", "per-seq ns/tok", "batched ns/tok", "speedup");
     let mut speedup_rows: Vec<(usize, f64, f64, f64)> = Vec::new();
@@ -249,6 +329,33 @@ fn main() {
         let speedup = per_seq / batched;
         println!("{b:>6} {per_seq:>16.1} {batched:>16.1} {speedup:>9.2}x");
         adv_speedup_rows.push((b, per_seq, batched, speedup));
+    }
+
+    section("sharded decode step: ns/step per grid cell and speedup vs single shard");
+    let single_shard_secs = shard_rows
+        .iter()
+        .find(|&&(s, p, _)| s == 1 && !p)
+        .map(|&(_, _, t)| t)
+        .unwrap();
+    println!("{:>7} {:>10} {:>14} {:>10}", "shards", "pipelined", "ns/step", "speedup");
+    let mut shard_points: Vec<Json> = Vec::new();
+    let mut shard_speedups: Vec<Json> = Vec::new();
+    for &(shards, pipelined, secs) in &shard_rows {
+        let speedup = single_shard_secs / secs;
+        println!("{shards:>7} {pipelined:>10} {:>14.0} {speedup:>9.2}x", secs * 1e9);
+        shard_points.push(
+            Json::obj()
+                .set("shards", shards)
+                .set("pipelined", pipelined)
+                .set("ns_per_step", secs * 1e9)
+                .set("ns_per_row", secs * 1e9 / shard_b as f64),
+        );
+        shard_speedups.push(
+            Json::obj()
+                .set("shards", shards)
+                .set("pipelined", pipelined)
+                .set("shard_speedup_vs_single", speedup),
+        );
     }
 
     // ---- machine-readable record (BENCH_decode.json) ----
@@ -307,7 +414,9 @@ fn main() {
         .set("base_pos", base_pos)
         .set("points", Json::Arr(points))
         .set("batched_speedup", Json::Arr(batched_speedup))
-        .set("advance_speedup_vs_per_seq", Json::Arr(advance_speedup));
+        .set("advance_speedup_vs_per_seq", Json::Arr(advance_speedup))
+        .set("sharded_step", Json::Arr(shard_points))
+        .set("shard_speedup_vs_single", Json::Arr(shard_speedups));
     if !prev_speedups.is_empty() {
         doc = doc.set("speedup_vs_previous", Json::Arr(prev_speedups));
     }

@@ -11,6 +11,7 @@
 //! | Log-Linear Mamba-2          | ✓ `O(log T)` state | ✓ | ✓ `O(T log T)` (Alg. 1) | ✓ head-batched | ✓ per-token log-probs |
 //! | Log-Linear Gated DeltaNet   | ✓ `O(log T)` state | ✓ | ✓ | ✓ head-batched | ✓ per-token log-probs |
 //! | *serving features* (log-linear rows) | per-token streaming + mid-flight cancel | — | — | CoW prefix-state cache (shared prefixes admitted from cached boundaries) | ✓ rides the same chunk outputs, rows streamed as chunks land |
+//! | *sharded serving* (log-linear rows) | sharded state pool, sequences pinned at admission (**docs/SHARDING.md**) | — | — | per-shard prefix caches, cross-shard probe | pipelined L-layer decode, bit-exact at shards {1, 2, 4} × pipelining on/off |
 //! | *observability* (whole serving stack) | zero-alloc span recorder ([`crate::obs`]) | — | — | per-chunk spans + GEMM flop accounting (O(log T) flops/token observable) | per-request timelines, TTFT/inter-token histograms, Chrome-trace export |
 //!
 //! The serving-features row is the production surface over the two
@@ -26,7 +27,12 @@
 //! chunks → per-layer decode GEMMs → stream/cancel), kernel flop/byte
 //! accounting hooked into the tensor GEMM dispatch, latency histograms
 //! in `ServerStats`, and Chrome trace-event / per-request timeline
-//! exporters — see **docs/OBSERVABILITY.md**.
+//! exporters — see **docs/OBSERVABILITY.md**. The sharded-serving row
+//! is the scale-out substrate under both: the pool splits into
+//! per-worker shards ([`crate::state::ShardedStatePool`]) that advance
+//! concurrently on the resident thread pool, with the sequential layer
+//! stack optionally pipelined per shard — bit-exact with the unsharded
+//! engine by construction — see **docs/SHARDING.md**.
 //!
 //! *Serving prefill* is the head-batched, sequential-L-layer chunkwise
 //! ingester of [`crate::prefill`] (state-only for generation prompts,

@@ -60,8 +60,10 @@ use crate::state::batched_advance::bucket_feasible;
 use crate::state::pool::StatePool;
 use crate::state::pooled::{blocks_for_steps, BatchedDecoder, PooledFenwickState};
 use crate::state::prefix_cache::{BoundaryStates, PrefixCache};
+use crate::state::sharded::ShardedStatePool;
 use crate::state::{AdvanceJob, BatchedAdvance, FenwickState, GateTable, Transition};
 use crate::tensor::{self, Mat};
+use crate::util::threadpool::resident_pool;
 use crate::util::Rng;
 
 pub use crate::state::TransitionKind;
@@ -108,6 +110,16 @@ pub trait DecodeBackend {
     fn pool_occupancy(&self) -> (usize, usize) {
         (0, 0)
     }
+
+    /// The model's vocabulary size — the width of every logits row
+    /// [`DecodeBackend::step`], [`DecodeBackend::score_chunk`], and
+    /// [`DecodeBackend::score_tail`] return. The server validates step
+    /// output against `rows.len() * vocab()` instead of *deriving* the
+    /// width from `logits.len() / rows` — the derived form silently
+    /// mis-splits rows whenever a backend returns a padded (or
+    /// truncated) buffer, which is exactly the case a partially-filled
+    /// bucket produces.
+    fn vocab(&self) -> usize;
 
     /// Execute one decode step for `rows` of (slot, token, position) in a
     /// `bucket`-sized batch (`rows.len() <= bucket`; padding, if the
@@ -212,6 +224,10 @@ impl PjrtBackend {
 }
 
 impl DecodeBackend for PjrtBackend {
+    fn vocab(&self) -> usize {
+        self.model.manifest.cfg("vocab")
+    }
+
     fn admit(&mut self, _max_steps: usize) -> Result<SeqSlot, AdmitError> {
         let states: Vec<Vec<f32>> = self.state_numels.iter().map(|&n| vec![0.0f32; n]).collect();
         let idx = match self.free_slots.pop() {
@@ -264,8 +280,13 @@ impl DecodeBackend for PjrtBackend {
                 st[l].copy_from_slice(&batched[l][i * numel..(i + 1) * numel]);
             }
         }
-        // drop padding rows in place — no copy in the full-bucket case
-        let vocab = logits.len() / bucket;
+        // drop padding rows in place — no copy in the full-bucket case.
+        // The row width is the manifest's, never derived from the buffer:
+        // a ragged artifact output must fail loudly here, not mis-split.
+        let vocab = self.vocab();
+        if logits.len() != bucket * vocab {
+            bail!("decode_step returned {} floats for bucket {bucket} × vocab {vocab}", logits.len());
+        }
         logits.truncate(n * vocab);
         Ok(logits)
     }
@@ -318,6 +339,26 @@ impl TokenScratch {
             buf.resize(n, 0.0);
         }
     }
+}
+
+/// One shard's private execution engine: its own batched advance/read
+/// planners (their scratch is not shareable across concurrent jobs) plus
+/// the per-shard row index list and input/output buffers a shard job
+/// works in. `o` is the **pipeline register**: in pipelined mode it
+/// carries layer ℓ's per-token outputs across the
+/// [`LayerProjection`] boundary into layer ℓ+1's projections without
+/// ever leaving the shard's job.
+#[derive(Default)]
+struct ShardEngine {
+    adv: BatchedAdvance,
+    dec: BatchedDecoder,
+    /// bucket row indices pinned to this shard (rebuilt every step,
+    /// bucket order — so per-shard outputs scatter back positionally)
+    rows: Vec<usize>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    o: Vec<f32>,
 }
 
 /// One admitted sequence's backend-side state. Decode states are
@@ -386,19 +427,24 @@ pub struct PooledBackend {
     gates: Vec<GateTable>,
     /// chunked-prefill chunk size (power of two; 0 disables)
     prefill_chunk: usize,
-    pool: StatePool,
-    /// opt-in cross-request prefix-state cache
-    /// ([`PooledBackend::enable_prefix_cache`]): chunk-boundary level
-    /// states keyed on token-id prefixes, holding refcounts on pool
-    /// blocks so CoW admission can adopt them without copying
-    cache: Option<PrefixCache>,
+    /// the serving substrate: per-worker [`StatePool`] shards (one by
+    /// default — the unsharded path, bit-for-bit), each optionally
+    /// carrying its own prefix-state cache
+    /// ([`PooledBackend::enable_prefix_cache`]). Sequences pin to one
+    /// shard at admission; see docs/SHARDING.md.
+    pool: ShardedStatePool,
     slots: Vec<Option<SeqState>>,
     free_slots: Vec<usize>,
     /// blocks reserved per live slot (admission accounting)
     reserved: Vec<usize>,
-    reserved_total: usize,
-    dec: BatchedDecoder,
-    adv: BatchedAdvance,
+    /// which shard each slot's states live in (scoring slots: 0, unused)
+    shard_of: Vec<usize>,
+    /// run the decode step as one full-stack job per shard (the pipeline
+    /// register mode) instead of the per-layer barrier
+    pipelined: bool,
+    /// one execution engine per shard (index-aligned with the pool's
+    /// shards)
+    engines: Vec<ShardEngine>,
     /// ONE prefill scratch workspace shared by every sequence's stack
     /// (the ROADMAP shared-workspace item): resident prefill scratch no
     /// longer scales with concurrent prompts
@@ -506,14 +552,13 @@ impl PooledBackend {
             wo,
             gates: vec![gates; layers],
             prefill_chunk,
-            pool: StatePool::new(dk * dv, pool_blocks),
-            cache: None,
+            pool: ShardedStatePool::new(dk * dv, pool_blocks, 1),
             slots: Vec::new(),
             free_slots: Vec::new(),
             reserved: Vec::new(),
-            reserved_total: 0,
-            dec: BatchedDecoder::new(),
-            adv: BatchedAdvance::new(),
+            shard_of: Vec::new(),
+            pipelined: false,
+            engines: vec![ShardEngine::default()],
             ws: Workspace::new(),
             q_rows: Vec::new(),
             k_rows: Vec::new(),
@@ -525,9 +570,49 @@ impl PooledBackend {
         }
     }
 
-    /// The shared state pool (inspection: in_use/peak/capacity).
-    pub fn pool(&self) -> &StatePool {
+    /// The sharded state pool (inspection: aggregate in_use/peak/capacity
+    /// plus per-shard views).
+    pub fn pool(&self) -> &ShardedStatePool {
         &self.pool
+    }
+
+    /// Re-shard the serving substrate into `n` independent pools of
+    /// `capacity() / n` blocks each, with per-shard engines (and, when
+    /// prefix caching was enabled, per-shard caches — cache *contents*
+    /// do not survive, block ids are shard-local). Only legal while no
+    /// sequence is resident and no pool block is live: re-sharding moves
+    /// the ownership boundary every existing handle was pinned under.
+    pub fn set_shards(&mut self, n: usize) {
+        assert!(n >= 1, "at least one shard");
+        assert!(
+            self.slots.iter().all(|s| s.is_none()),
+            "set_shards with live sequences resident"
+        );
+        let cache_enabled = self.pool.cache_enabled();
+        self.pool.clear_caches();
+        assert_eq!(self.pool.in_use(), 0, "set_shards with pool blocks live");
+        let per = self.pool.capacity() / n;
+        assert!(per >= 1, "pool capacity {} cannot split into {n} shards", self.pool.capacity());
+        self.pool = ShardedStatePool::new(self.dk * self.dv, per, n);
+        if cache_enabled {
+            self.pool.enable_prefix_cache(self.prefill_chunk);
+        }
+        self.engines = (0..n).map(|_| ShardEngine::default()).collect();
+    }
+
+    /// Switch the decode step between the per-layer barrier (off, the
+    /// default) and the per-shard full-stack pipeline (on): each shard's
+    /// job runs all L layers over its rows, carrying the layer-boundary
+    /// output buffer through the [`LayerProjection`] registers without
+    /// re-synchronizing with other shards between layers. Bit-exact
+    /// either way (see docs/SHARDING.md for the argument).
+    pub fn set_pipelined(&mut self, on: bool) {
+        self.pipelined = on;
+    }
+
+    /// Is the per-shard full-stack pipeline mode on?
+    pub fn pipelined(&self) -> bool {
+        self.pipelined
     }
 
     /// The state-transition family this backend's layers run.
@@ -566,28 +651,28 @@ impl PooledBackend {
     /// effective serving capacity. Requires chunked prefill.
     pub fn enable_prefix_cache(&mut self) {
         assert!(self.prefill_chunk > 0, "prefix cache requires chunked prefill");
-        if self.cache.is_none() {
-            self.cache = Some(PrefixCache::new(self.prefill_chunk));
-        }
+        self.pool.enable_prefix_cache(self.prefill_chunk);
     }
 
-    /// Drop every cache entry, releasing its block refcounts back to the
-    /// pool. The cache stays enabled (future prompts repopulate it).
+    /// Drop every cache entry (all shards), releasing block refcounts
+    /// back to the pools. Caches stay enabled (future prompts repopulate
+    /// them).
     pub fn clear_prefix_cache(&mut self) {
         self.invalidate_prefix_cache();
     }
 
-    /// The prefix cache, if enabled (inspection: entries/blocks held).
+    /// Shard 0's prefix cache, if caching is enabled (inspection:
+    /// entries/blocks held — exact on the default single-shard config;
+    /// use [`ShardedStatePool::cache_blocks_held`] via
+    /// [`PooledBackend::pool`] for multi-shard aggregates).
     pub fn prefix_cache(&self) -> Option<&PrefixCache> {
-        self.cache.as_ref()
+        self.pool.cache(0)
     }
 
     /// Cached states are keyed purely on token ids — valid only while
     /// the weights and gate tables are fixed. Gate swaps call this.
     fn invalidate_prefix_cache(&mut self) {
-        if let Some(c) = self.cache.as_mut() {
-            c.clear(&mut self.pool);
-        }
+        self.pool.clear_caches();
         self.debug_assert_no_block_leaks();
     }
 
@@ -602,25 +687,32 @@ impl PooledBackend {
     /// otherwise fossilize into permanently-lost capacity.
     #[cfg(debug_assertions)]
     fn debug_assert_no_block_leaks(&self) {
-        let mut owned = std::collections::BTreeSet::new();
-        for state in self.slots.iter().flatten() {
-            if let SeqState::Decoding(seqs) = state {
+        // per shard, not pooled: BlockIds are shard-local (each shard
+        // numbers from zero), so a global set union would alias blocks
+        // across shards and hide leaks
+        for s in 0..self.pool.n_shards() {
+            let mut owned = std::collections::BTreeSet::new();
+            for (idx, state) in self.slots.iter().enumerate() {
+                let Some(SeqState::Decoding(seqs)) = state else { continue };
+                if self.shard_of[idx] != s {
+                    continue;
+                }
                 for seq in seqs {
                     owned.extend(seq.level_blocks().into_iter().map(|(_, id)| id.0));
                 }
             }
+            if let Some(cache) = self.pool.cache(s) {
+                owned.extend(cache.held_block_ids().into_iter().map(|id| id.0));
+            }
+            debug_assert_eq!(
+                owned.len(),
+                self.pool.shard(s).in_use(),
+                "shard {s} leak canary: {} blocks allocated but only {} reachable from \
+                 live sequences + prefix cache",
+                self.pool.shard(s).in_use(),
+                owned.len()
+            );
         }
-        if let Some(cache) = self.cache.as_ref() {
-            owned.extend(cache.held_block_ids().into_iter().map(|id| id.0));
-        }
-        debug_assert_eq!(
-            owned.len(),
-            self.pool.in_use(),
-            "pool leak canary: {} blocks allocated but only {} reachable from live \
-             sequences + prefix cache",
-            self.pool.in_use(),
-            owned.len()
-        );
     }
 
     #[cfg(not(debug_assertions))]
@@ -669,11 +761,14 @@ impl PooledBackend {
             bail!("step row for a free slot");
         };
         stack.finish();
+        // everything this sequence exports (and publishes) lives in the
+        // shard it was pinned to at admission
+        let (pool, mut cache) = self.pool.pair_mut(self.shard_of[slot.0]);
         let mut seqs = Vec::with_capacity(self.layers * self.heads);
         'export: for l in 0..self.layers {
             for h in 0..self.heads {
                 loop {
-                    match export_prefill_head(stack.engine(l), h, &mut self.pool) {
+                    match export_prefill_head(stack.engine(l), h, pool) {
                         Ok(s) => {
                             seqs.push(s);
                             break;
@@ -682,8 +777,8 @@ impl PooledBackend {
                             // cache-held blocks are the only occupancy
                             // beyond admission reservations — evict and
                             // retry before declaring a reservation bug
-                            let evicted = match self.cache.as_mut() {
-                                Some(c) => c.evict_lru(&mut self.pool),
+                            let evicted = match cache.as_deref_mut() {
+                                Some(c) => c.evict_lru(pool),
                                 None => false,
                             };
                             if !evicted {
@@ -699,7 +794,7 @@ impl PooledBackend {
             // admission reservation once the cache is drained, so
             // surface loudly
             for mut s in seqs {
-                s.release(&mut self.pool);
+                s.release(pool);
             }
             bail!("state pool exhausted during prefill export (reservation bug?)");
         }
@@ -707,9 +802,9 @@ impl PooledBackend {
         // insert only retains block handles (rc +1 each), so the blocks
         // outlive this sequence's retire and seed later admissions
         if !tokens.is_empty() {
-            if let Some(cache) = self.cache.as_mut() {
+            if let Some(cache) = cache {
                 let states: BoundaryStates = seqs.iter().map(|s| s.level_blocks()).collect();
-                cache.insert(&tokens, &states, &mut self.pool);
+                cache.insert(&tokens, &states, pool);
             }
         }
         self.slots[slot.0] = Some(SeqState::Decoding(seqs));
@@ -930,6 +1025,225 @@ impl PooledBackend {
         }
         lps
     }
+
+    /// The per-layer-barrier decode step body (pipelining off): per
+    /// layer, build the whole bucket's inputs exactly as the unsharded
+    /// path did, then run each shard's advance+read as one job —
+    /// concurrently on the resident pool when sharded, inline on the
+    /// caller thread with one shard (which keeps the nested row-parallel
+    /// read fanning out across the pool's workers, the pre-sharding
+    /// behavior). Leaves the final layer's `(n, H·d_v)` outputs in
+    /// `self.o_buf` in bucket order; returns the first failure message.
+    fn step_layerwise(
+        &mut self,
+        rows: &[(SeqSlot, i32, i32)],
+        taken: &mut [(usize, Vec<PooledFenwickState>)],
+    ) -> Option<String> {
+        let (layers, heads, dk, dv, vocab) =
+            (self.layers, self.heads, self.dk, self.dv, self.vocab);
+        let n = rows.len();
+        let nshards = self.pool.n_shards();
+        for l in 0..layers {
+            // whole-bucket layer inputs — identical to the unsharded path
+            if l == 0 {
+                self.q_rows.clear();
+                self.k_rows.clear();
+                self.v_rows.clear();
+                for &(_, tok, _) in rows {
+                    let ti = tok_index(tok, vocab);
+                    for h in 0..heads {
+                        self.q_rows.extend_from_slice(self.eq[h].row(ti));
+                        self.k_rows.extend_from_slice(self.ek[h].row(ti));
+                        self.v_rows.extend_from_slice(self.ev[h].row(ti));
+                    }
+                }
+            } else {
+                let _proj = crate::obs::span(crate::obs::SpanCat::Project, l as u64);
+                let p = &self.projs[l - 1];
+                self.q_rows.clear();
+                self.q_rows.resize(n * heads * dk, 0.0);
+                tensor::gemm_nt_into(n, heads * dv, heads * dk, &self.o_buf, &p.wq.data, &mut self.q_rows, false);
+                self.k_rows.clear();
+                self.k_rows.resize(n * heads * dk, 0.0);
+                tensor::gemm_nt_into(n, heads * dv, heads * dk, &self.o_buf, &p.wk.data, &mut self.k_rows, false);
+                normalize_keys(&mut self.k_rows, dk);
+                self.v_rows.clear();
+                self.v_rows.resize(n * heads * dv, 0.0);
+                tensor::gemm_nt_into(n, heads * dv, heads * dv, &self.o_buf, &p.wv.data, &mut self.v_rows, false);
+            }
+            for (i, &(_, _, pos)) in rows.iter().enumerate() {
+                for h in 0..heads {
+                    debug_assert_eq!(taken[i].1[l * heads + h].t as i32, pos, "layer {l} desync");
+                }
+            }
+            // this layer's &mut state slices, partitioned by shard (one
+            // pass over `taken`, so within each shard the order is
+            // bucket order — index-aligned with engine.rows)
+            let mut shard_refs: Vec<Vec<&mut PooledFenwickState>> =
+                (0..nshards).map(|_| Vec::new()).collect();
+            for (slot_idx, seqs) in taken.iter_mut() {
+                shard_refs[self.shard_of[*slot_idx]]
+                    .extend(seqs[l * heads..(l + 1) * heads].iter_mut());
+            }
+            let mut parts = self.pool.parts_mut();
+            // feasibility + cache eviction mutate the pool AND cache, so
+            // they run sequentially before the concurrent jobs. The pool
+            // may be over-reserved by cache-held blocks (inserts retain
+            // beyond admission reservations): evict LRU entries until the
+            // whole shard's advance plans fit — probed BEFORE
+            // advance_bucket, because a mid-bucket refusal would leave
+            // admitted sequences already stepped and a retry would
+            // double-advance them.
+            for (s, (pool_s, cache_s)) in parts.iter_mut().enumerate() {
+                if shard_refs[s].is_empty() {
+                    continue;
+                }
+                loop {
+                    if bucket_feasible(pool_s, &shard_refs[s]) {
+                        break;
+                    }
+                    let evicted = match cache_s.as_deref_mut() {
+                        Some(c) => c.evict_lru(pool_s),
+                        None => false,
+                    };
+                    if !evicted {
+                        break;
+                    }
+                }
+            }
+            let mut fails: Vec<Option<String>> = (0..nshards).map(|_| None).collect();
+            {
+                let q_rows: &[f32] = &self.q_rows;
+                let k_rows: &[f32] = &self.k_rows;
+                let v_rows: &[f32] = &self.v_rows;
+                let gates_l = &self.gates[l];
+                let kind = self.kind;
+                if nshards == 1 {
+                    let (pool0, _) = parts.pop().expect("one shard");
+                    run_shard_layer(
+                        0, l, heads, dk, dv, kind, gates_l, rows, q_rows, k_rows, v_rows,
+                        pool0, &mut self.engines[0], &mut shard_refs[0], &mut fails[0], false,
+                    );
+                } else {
+                    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                        Vec::with_capacity(nshards);
+                    for ((s, ((part, engine), refs)), fail) in parts
+                        .into_iter()
+                        .zip(self.engines.iter_mut())
+                        .zip(shard_refs.iter_mut())
+                        .enumerate()
+                        .zip(fails.iter_mut())
+                    {
+                        if refs.is_empty() {
+                            continue;
+                        }
+                        let (pool_s, _) = part;
+                        jobs.push(Box::new(move || {
+                            run_shard_layer(
+                                s, l, heads, dk, dv, kind, gates_l, rows, q_rows, k_rows,
+                                v_rows, pool_s, engine, refs, fail, true,
+                            )
+                        }));
+                    }
+                    resident_pool().scope(jobs);
+                }
+            }
+            if let Some(msg) = fails.into_iter().flatten().next() {
+                return Some(msg);
+            }
+            // scatter each shard's read outputs back into bucket order —
+            // the next layer's projection operand and the logits operand
+            self.o_buf.clear();
+            self.o_buf.resize(n * heads * dv, 0.0);
+            for engine in &self.engines {
+                for (j, &i) in engine.rows.iter().enumerate() {
+                    self.o_buf[i * heads * dv..(i + 1) * heads * dv]
+                        .copy_from_slice(&engine.o[j * heads * dv..(j + 1) * heads * dv]);
+                }
+            }
+        }
+        None
+    }
+
+    /// The pipelined decode step body: ONE job per shard runs the FULL
+    /// sequential layer stack over its rows — gather, advance, read,
+    /// project — carrying the layer-boundary output buffer (`engine.o`,
+    /// the pipeline register) across each [`LayerProjection`] boundary
+    /// without re-synchronizing with the other shards between layers.
+    /// Bit-exact with the layerwise body: every per-row computation is
+    /// independent of batchmates, each sequence's states live wholly in
+    /// its shard, and each sequence's per-layer op order is unchanged
+    /// (docs/SHARDING.md has the full argument).
+    fn step_pipelined(
+        &mut self,
+        rows: &[(SeqSlot, i32, i32)],
+        taken: &mut [(usize, Vec<PooledFenwickState>)],
+    ) -> Option<String> {
+        let (layers, heads, dk, dv, vocab) =
+            (self.layers, self.heads, self.dk, self.dv, self.vocab);
+        let n = rows.len();
+        let nshards = self.pool.n_shards();
+        // each shard's sequences' full state vectors (bucket order,
+        // index-aligned with engine.rows) — jobs re-slice per layer
+        let mut shard_seqs: Vec<Vec<&mut Vec<PooledFenwickState>>> =
+            (0..nshards).map(|_| Vec::new()).collect();
+        for (slot_idx, seqs) in taken.iter_mut() {
+            shard_seqs[self.shard_of[*slot_idx]].push(seqs);
+        }
+        let mut fails: Vec<Option<String>> = (0..nshards).map(|_| None).collect();
+        {
+            let mut parts = self.pool.parts_mut();
+            let eq: &[Mat] = &self.eq;
+            let ek: &[Mat] = &self.ek;
+            let ev: &[Mat] = &self.ev;
+            let projs: &[LayerProjection] = &self.projs;
+            let gates: &[GateTable] = &self.gates;
+            let kind = self.kind;
+            if nshards == 1 {
+                let (pool0, cache0) = parts.pop().expect("one shard");
+                run_shard_stack(
+                    0, layers, heads, dk, dv, vocab, kind, eq, ek, ev, projs, gates, rows,
+                    pool0, cache0, &mut self.engines[0], &mut shard_seqs[0], &mut fails[0],
+                    false,
+                );
+            } else {
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(nshards);
+                for ((s, ((part, engine), seqs)), fail) in parts
+                    .into_iter()
+                    .zip(self.engines.iter_mut())
+                    .zip(shard_seqs.iter_mut())
+                    .enumerate()
+                    .zip(fails.iter_mut())
+                {
+                    if seqs.is_empty() {
+                        continue;
+                    }
+                    let (pool_s, cache_s) = part;
+                    jobs.push(Box::new(move || {
+                        run_shard_stack(
+                            s, layers, heads, dk, dv, vocab, kind, eq, ek, ev, projs, gates,
+                            rows, pool_s, cache_s, engine, seqs, fail, true,
+                        )
+                    }));
+                }
+                resident_pool().scope(jobs);
+            }
+        }
+        if let Some(msg) = fails.into_iter().flatten().next() {
+            return Some(msg);
+        }
+        // scatter the final layer's outputs back into bucket order for
+        // the shared logits GEMM
+        self.o_buf.clear();
+        self.o_buf.resize(n * heads * dv, 0.0);
+        for engine in &self.engines {
+            for (j, &i) in engine.rows.iter().enumerate() {
+                self.o_buf[i * heads * dv..(i + 1) * heads * dv]
+                    .copy_from_slice(&engine.o[j * heads * dv..(j + 1) * heads * dv]);
+            }
+        }
+        None
+    }
 }
 
 /// Clamp a sampled/user token into embedding range — the one token-id
@@ -968,7 +1282,220 @@ pub fn fold_score_logprobs(
     }
 }
 
+/// One shard's slice of a single layer's decode work (layerwise mode):
+/// build the shard's advance jobs against the whole-bucket k/v rows,
+/// advance its own pool, then read back into the shard engine's output
+/// buffer. `traced` adds the shard-step span — only the multi-shard path
+/// passes true, so the single-shard hot path keeps its exact
+/// pre-sharding hook-site count (decode_latency pins it).
+#[allow(clippy::too_many_arguments)]
+fn run_shard_layer(
+    shard: usize,
+    layer: usize,
+    heads: usize,
+    dk: usize,
+    dv: usize,
+    kind: TransitionKind,
+    gates_l: &GateTable,
+    rows: &[(SeqSlot, i32, i32)],
+    q_rows: &[f32],
+    k_rows: &[f32],
+    v_rows: &[f32],
+    pool: &mut StatePool,
+    engine: &mut ShardEngine,
+    refs: &mut Vec<&mut PooledFenwickState>,
+    fail: &mut Option<String>,
+    traced: bool,
+) {
+    let ns = engine.rows.len();
+    debug_assert_eq!(refs.len(), ns * heads, "shard refs desync");
+    let _st = traced.then(|| {
+        crate::obs::span(crate::obs::SpanCat::ShardStep, ((shard as u64) << 32) | ns as u64)
+    });
+    let mut jobs: Vec<AdvanceJob<'_>> = Vec::with_capacity(ns * heads);
+    for &i in &engine.rows {
+        let pos = rows[i].2 as usize;
+        for h in 0..heads {
+            let e = i * heads + h;
+            let k = &k_rows[e * dk..(e + 1) * dk];
+            let v = &v_rows[e * dv..(e + 1) * dv];
+            let alpha = gates_l.alpha_h(h, pos);
+            let (write_scale, transition) = match kind {
+                TransitionKind::Mamba2 => (1.0, Transition::Decay(alpha)),
+                TransitionKind::Gdn => {
+                    let beta = gates_l.beta_h(h, pos);
+                    (beta, Transition::GatedHouseholder { alpha, beta, k })
+                }
+            };
+            jobs.push(AdvanceJob { k, v, write_scale, transition });
+        }
+    }
+    let refused = engine.adv.advance_bucket(pool, refs, &jobs);
+    if !refused.is_empty() {
+        // unreachable under admission reservation; surface loudly
+        *fail = Some(format!("state pool exhausted mid-step at layer {layer} (reservation bug?)"));
+        return;
+    }
+    // the shard's q rows, contiguous (engine.rows is bucket order, so
+    // this is a gather of whole (H·d_k) row groups — bits unchanged)
+    engine.q.clear();
+    for &i in &engine.rows {
+        engine.q.extend_from_slice(&q_rows[i * heads * dk..(i + 1) * heads * dk]);
+    }
+    engine.o.clear();
+    engine.o.resize(ns * heads * dv, 0.0);
+    let seq_refs: Vec<&PooledFenwickState> = refs.iter().map(|r| &**r).collect();
+    let mut lambdas: Vec<&[f32]> = Vec::with_capacity(ns * heads);
+    for &i in &engine.rows {
+        let pos = rows[i].2 as usize;
+        for h in 0..heads {
+            lambdas.push(gates_l.lambda_h(h, pos));
+        }
+    }
+    engine.dec.read_batch(pool, &seq_refs, &engine.q, &lambdas, &mut engine.o);
+}
+
+/// One shard's full-stack decode job (pipelined mode): all L layers over
+/// the shard's rows, with per-layer feasibility probing and LRU eviction
+/// against the shard's OWN pool and cache, and the engine's `o` buffer
+/// as the pipeline register carried across [`LayerProjection`]
+/// boundaries. Per-shard projections are row-slices of the whole-bucket
+/// GEMMs (bit-exact per row), so this reorganization cannot change any
+/// sequence's logits. `traced` gates the shard-step span as in
+/// [`run_shard_layer`]; the per-layer pipeline-stage spans always emit —
+/// pipelined mode is opt-in, never the measured default hot path.
+#[allow(clippy::too_many_arguments)]
+fn run_shard_stack(
+    shard: usize,
+    layers: usize,
+    heads: usize,
+    dk: usize,
+    dv: usize,
+    vocab: usize,
+    kind: TransitionKind,
+    eq: &[Mat],
+    ek: &[Mat],
+    ev: &[Mat],
+    projs: &[LayerProjection],
+    gates: &[GateTable],
+    rows: &[(SeqSlot, i32, i32)],
+    pool: &mut StatePool,
+    mut cache: Option<&mut PrefixCache>,
+    engine: &mut ShardEngine,
+    owned: &mut [&mut Vec<PooledFenwickState>],
+    fail: &mut Option<String>,
+    traced: bool,
+) {
+    let ns = engine.rows.len();
+    debug_assert_eq!(owned.len(), ns, "shard sequence list desync");
+    let _st = traced.then(|| {
+        crate::obs::span(crate::obs::SpanCat::ShardStep, ((shard as u64) << 32) | ns as u64)
+    });
+    for l in 0..layers {
+        let _stage = crate::obs::span(
+            crate::obs::SpanCat::PipelineStage,
+            ((shard as u64) << 32) | l as u64,
+        );
+        if l == 0 {
+            engine.q.clear();
+            engine.k.clear();
+            engine.v.clear();
+            for &i in &engine.rows {
+                let ti = tok_index(rows[i].1, vocab);
+                for h in 0..heads {
+                    engine.q.extend_from_slice(eq[h].row(ti));
+                    engine.k.extend_from_slice(ek[h].row(ti));
+                    engine.v.extend_from_slice(ev[h].row(ti));
+                }
+            }
+        } else {
+            // the pipeline register: layer l−1's outputs (engine.o) feed
+            // this layer's projections without ever leaving the shard job
+            let p = &projs[l - 1];
+            engine.q.clear();
+            engine.q.resize(ns * heads * dk, 0.0);
+            tensor::gemm_nt_into(ns, heads * dv, heads * dk, &engine.o, &p.wq.data, &mut engine.q, false);
+            engine.k.clear();
+            engine.k.resize(ns * heads * dk, 0.0);
+            tensor::gemm_nt_into(ns, heads * dv, heads * dk, &engine.o, &p.wk.data, &mut engine.k, false);
+            normalize_keys(&mut engine.k, dk);
+            engine.v.clear();
+            engine.v.resize(ns * heads * dv, 0.0);
+            tensor::gemm_nt_into(ns, heads * dv, heads * dv, &engine.o, &p.wv.data, &mut engine.v, false);
+        }
+        #[cfg(debug_assertions)]
+        for (j, &i) in engine.rows.iter().enumerate() {
+            let pos = rows[i].2;
+            for h in 0..heads {
+                debug_assert_eq!(owned[j][l * heads + h].t as i32, pos, "layer {l} desync");
+            }
+        }
+        let gates_l = &gates[l];
+        let mut jobs: Vec<AdvanceJob<'_>> = Vec::with_capacity(ns * heads);
+        for (j, &i) in engine.rows.iter().enumerate() {
+            let pos = rows[i].2 as usize;
+            for h in 0..heads {
+                let e = j * heads + h;
+                let k = &engine.k[e * dk..(e + 1) * dk];
+                let v = &engine.v[e * dv..(e + 1) * dv];
+                let alpha = gates_l.alpha_h(h, pos);
+                let (write_scale, transition) = match kind {
+                    TransitionKind::Mamba2 => (1.0, Transition::Decay(alpha)),
+                    TransitionKind::Gdn => {
+                        let beta = gates_l.beta_h(h, pos);
+                        (beta, Transition::GatedHouseholder { alpha, beta, k })
+                    }
+                };
+                jobs.push(AdvanceJob { k, v, write_scale, transition });
+            }
+        }
+        let mut refs: Vec<&mut PooledFenwickState> = owned
+            .iter_mut()
+            .flat_map(|seqs| seqs[l * heads..(l + 1) * heads].iter_mut())
+            .collect();
+        // per-shard feasibility + eviction: this shard's cache is the
+        // only holder of unreserved blocks in this shard's pool, and no
+        // other job touches either — same probe-before-advance argument
+        // as the layerwise body
+        loop {
+            if bucket_feasible(pool, &refs) {
+                break;
+            }
+            let evicted = match cache.as_deref_mut() {
+                Some(c) => c.evict_lru(pool),
+                None => false,
+            };
+            if !evicted {
+                break;
+            }
+        }
+        let refused = engine.adv.advance_bucket(pool, &mut refs, &jobs);
+        if !refused.is_empty() {
+            // unreachable under admission reservation; surface loudly
+            *fail = Some(format!("state pool exhausted mid-step at layer {l} (reservation bug?)"));
+            return;
+        }
+        engine.o.clear();
+        engine.o.resize(ns * heads * dv, 0.0);
+        let seq_refs: Vec<&PooledFenwickState> = refs.iter().map(|r| &**r).collect();
+        let mut lambdas: Vec<&[f32]> = Vec::with_capacity(ns * heads);
+        for &i in &engine.rows {
+            let pos = rows[i].2 as usize;
+            for h in 0..heads {
+                lambdas.push(gates_l.lambda_h(h, pos));
+            }
+        }
+        engine.dec.read_batch(pool, &seq_refs, &engine.q, &lambdas, &mut engine.o);
+    }
+}
+
 impl DecodeBackend for PooledBackend {
+    fn vocab(&self) -> usize {
+        // the struct field, not recursion: field and method namespaces
+        // are separate in Rust
+        self.vocab
+    }
+
     fn admit(&mut self, max_steps: usize) -> Result<SeqSlot, AdmitError> {
         // the prompt-blind form: no prefix to match, nothing cached
         self.admit_prompt(max_steps, &[]).map(|(slot, _)| slot)
@@ -980,22 +1507,34 @@ impl DecodeBackend for PooledBackend {
         prompt: &[i32],
     ) -> Result<(SeqSlot, usize), AdmitError> {
         let need = self.layers * self.heads * blocks_for_steps(max_steps.max(1));
-        if need > self.pool.capacity() {
+        // per-shard bounds: a sequence's blocks live wholly in one shard,
+        // so both "can never fit" and "cannot fit right now" are judged
+        // against shard capacity, not the aggregate
+        if need > self.pool.shard_capacity() {
             return Err(AdmitError::TooLarge);
         }
-        if self.reserved_total + need > self.pool.capacity() {
+        // pin BEFORE the cache probe: a refused admission must not touch
+        // any cache's LRU state (the single-shard path behaved that way,
+        // and eviction order is part of the reproducibility story)
+        let Some(default_shard) = self.pool.pin(need) else {
             return Err(AdmitError::Exhausted);
-        }
-        // consult the prefix cache over the prompt's chunkwise span
-        // [0, pe): the longest chunk-aligned cached prefix seeds this
-        // sequence's state without recomputing it. Adoption only retains
-        // shared blocks (no allocation — it cannot fail), so the
-        // reservation accounting above is untouched: the adopted blocks
-        // are the cache's, not this reservation's, until CoW clones them.
+        };
+        // consult the prefix caches over the prompt's chunkwise span
+        // [0, pe): the longest chunk-aligned cached prefix (across all
+        // shards) seeds this sequence's state without recomputing it.
+        // Adoption only retains shared blocks (no allocation — it cannot
+        // fail), so the reservation accounting is untouched: the adopted
+        // blocks are the cache's, not this reservation's, until CoW
+        // clones them.
         let pe = self.prefill_boundary(prompt.len());
-        let hit = match self.cache.as_mut() {
-            Some(cache) if pe > 0 => cache.lookup(&prompt[..pe]),
-            _ => None,
+        let hit = if pe > 0 { self.pool.lookup_prefix(&prompt[..pe]) } else { None };
+        // a hit is only adoptable by a sequence pinned to the shard that
+        // owns it (block ids are shard-local); when that shard has no
+        // reservation headroom, fall back to the default pin and prefill
+        // cold — correctness never depends on a hit, only speed
+        let (shard, hit) = match hit {
+            Some((s, m, states)) if self.pool.can_reserve(s, need) => (s, Some((m, states))),
+            _ => (default_shard, None),
         };
         let (state, cached) = match hit {
             // full-boundary hit: every chunk the server would prefill is
@@ -1005,7 +1544,13 @@ impl DecodeBackend for PooledBackend {
                 let seqs = states
                     .iter()
                     .map(|per| {
-                        PooledFenwickState::adopt_levels(&mut self.pool, self.dk, self.dv, pe, per)
+                        PooledFenwickState::adopt_levels(
+                            self.pool.shard_mut(shard),
+                            self.dk,
+                            self.dv,
+                            pe,
+                            per,
+                        )
                     })
                     .collect();
                 (SeqState::Decoding(seqs), m)
@@ -1018,7 +1563,9 @@ impl DecodeBackend for PooledBackend {
                 let z = m / self.prefill_chunk;
                 let views: Vec<Vec<(usize, &[f32])>> = states
                     .iter()
-                    .map(|per| per.iter().map(|&(lvl, id)| (lvl, self.pool.get(id))).collect())
+                    .map(|per| {
+                        per.iter().map(|&(lvl, id)| (lvl, self.pool.shard(shard).get(id))).collect()
+                    })
                     .collect();
                 let stack = LayerStack::from_boundary(
                     self.layers,
@@ -1056,31 +1603,35 @@ impl DecodeBackend for PooledBackend {
                 0,
             ),
         };
-        self.reserved_total += need;
+        self.pool.reserve(shard, need);
         let idx = match self.free_slots.pop() {
             Some(i) => i,
             None => {
                 self.slots.push(None);
                 self.reserved.push(0);
+                self.shard_of.push(0);
                 self.slots.len() - 1
             }
         };
         self.slots[idx] = Some(state);
         self.reserved[idx] = need;
+        self.shard_of[idx] = shard;
         Ok((SeqSlot(idx), cached))
     }
 
     fn retire(&mut self, slot: SeqSlot) {
+        let shard = self.shard_of[slot.0];
         match self.slots[slot.0].take().expect("retire of free slot") {
             // stack / scoring states live outside the pool
             SeqState::Prefilling { .. } | SeqState::Scoring(_) => {}
             SeqState::Decoding(seqs) => {
+                let pool = self.pool.shard_mut(shard);
                 for mut seq in seqs {
-                    seq.release(&mut self.pool);
+                    seq.release(pool);
                 }
             }
         }
-        self.reserved_total -= self.reserved[slot.0];
+        self.pool.unreserve(shard, self.reserved[slot.0]);
         self.reserved[slot.0] = 0;
         self.free_slots.push(slot.0);
         self.debug_assert_no_block_leaks();
@@ -1144,6 +1695,7 @@ impl DecodeBackend for PooledBackend {
             None => {
                 self.slots.push(None);
                 self.reserved.push(0);
+                self.shard_of.push(0);
                 self.slots.len() - 1
             }
         };
@@ -1152,6 +1704,7 @@ impl DecodeBackend for PooledBackend {
         });
         self.slots[idx] = Some(SeqState::Scoring(ScoreSeq { stack, tail: Vec::new() }));
         self.reserved[idx] = 0;
+        self.shard_of[idx] = 0;
         Ok(SeqSlot(idx))
     }
 
@@ -1251,8 +1804,7 @@ impl DecodeBackend for PooledBackend {
         if n == 0 {
             return Ok(Vec::new());
         }
-        let (layers, heads, dk, dv, vocab) =
-            (self.layers, self.heads, self.dk, self.dv, self.vocab);
+        let (heads, dv, vocab) = (self.heads, self.dv, self.vocab);
         // 0) rows arriving from chunked prefill flip to pooled decode
         //    states via the export bridge
         for &(slot, _, _) in rows {
@@ -1267,112 +1819,39 @@ impl DecodeBackend for PooledBackend {
             };
             taken.push((slot.0, seqs));
         }
-        // 1..L) the sequential layer loop: per layer, one pool-wide
-        //    batched advance + one batched read over the bucket's n·H
-        //    (sequence, head) entries, then the projection GEMMs that
-        //    carry o into the next layer's q/k/v. Entry order (seq-major,
-        //    head) keeps o_buf row-major (n, H·dv) — the next layer's
-        //    projection operand and the logits GEMM's left operand.
-        let mut failed: Option<String> = None;
-        for l in 0..layers {
-            if l == 0 {
-                self.q_rows.clear();
-                self.k_rows.clear();
-                self.v_rows.clear();
-                for &(_, tok, _) in rows {
-                    let ti = tok_index(tok, vocab);
-                    for h in 0..heads {
-                        self.q_rows.extend_from_slice(self.eq[h].row(ti));
-                        self.k_rows.extend_from_slice(self.ek[h].row(ti));
-                        self.v_rows.extend_from_slice(self.ev[h].row(ti));
-                    }
-                }
-            } else {
-                let _proj = crate::obs::span(crate::obs::SpanCat::Project, l as u64);
-                let p = &self.projs[l - 1];
-                self.q_rows.clear();
-                self.q_rows.resize(n * heads * dk, 0.0);
-                tensor::gemm_nt_into(n, heads * dv, heads * dk, &self.o_buf, &p.wq.data, &mut self.q_rows, false);
-                self.k_rows.clear();
-                self.k_rows.resize(n * heads * dk, 0.0);
-                tensor::gemm_nt_into(n, heads * dv, heads * dk, &self.o_buf, &p.wk.data, &mut self.k_rows, false);
-                normalize_keys(&mut self.k_rows, dk);
-                self.v_rows.clear();
-                self.v_rows.resize(n * heads * dv, 0.0);
-                tensor::gemm_nt_into(n, heads * dv, heads * dv, &self.o_buf, &p.wv.data, &mut self.v_rows, false);
-            }
-            let mut jobs: Vec<AdvanceJob<'_>> = Vec::with_capacity(n * heads);
-            for (i, &(_, _, pos)) in rows.iter().enumerate() {
-                for h in 0..heads {
-                    let e = i * heads + h;
-                    let k = &self.k_rows[e * dk..(e + 1) * dk];
-                    let v = &self.v_rows[e * dv..(e + 1) * dv];
-                    let alpha = self.gates[l].alpha_h(h, pos as usize);
-                    let (write_scale, transition) = match self.kind {
-                        TransitionKind::Mamba2 => (1.0, Transition::Decay(alpha)),
-                        TransitionKind::Gdn => {
-                            let beta = self.gates[l].beta_h(h, pos as usize);
-                            (beta, Transition::GatedHouseholder { alpha, beta, k })
-                        }
-                    };
-                    jobs.push(AdvanceJob { k, v, write_scale, transition });
-                }
-            }
-            for (i, &(_, _, pos)) in rows.iter().enumerate() {
-                for h in 0..heads {
-                    debug_assert_eq!(taken[i].1[l * heads + h].t as i32, pos, "layer {l} desync");
-                }
-            }
-            let refused = {
-                let mut refs: Vec<&mut PooledFenwickState> = taken
-                    .iter_mut()
-                    .flat_map(|(_, seqs)| seqs[l * heads..(l + 1) * heads].iter_mut())
-                    .collect();
-                // the pool may be over-reserved by cache-held blocks
-                // (inserts retain beyond admission reservations). Evict
-                // LRU entries until the whole bucket's advance plans fit
-                // — probed BEFORE advance_bucket, because a mid-bucket
-                // refusal would leave admitted sequences already stepped
-                // and a retry would double-advance them.
-                loop {
-                    if bucket_feasible(&self.pool, &refs) {
-                        break;
-                    }
-                    let evicted = match self.cache.as_mut() {
-                        Some(c) => c.evict_lru(&mut self.pool),
-                        None => false,
-                    };
-                    if !evicted {
-                        break;
-                    }
-                }
-                self.adv.advance_bucket(&mut self.pool, &mut refs, &jobs)
-            };
-            drop(jobs);
-            if !refused.is_empty() {
-                // unreachable under admission reservation; surface loudly
-                failed = Some(format!("state pool exhausted mid-step at layer {l} (reservation bug?)"));
-                break;
-            }
-            self.o_buf.clear();
-            self.o_buf.resize(n * heads * dv, 0.0);
-            {
-                let mut seq_refs: Vec<&PooledFenwickState> = Vec::with_capacity(n * heads);
-                let mut lambdas: Vec<&[f32]> = Vec::with_capacity(n * heads);
-                for (i, &(_, _, pos)) in rows.iter().enumerate() {
-                    for h in 0..heads {
-                        seq_refs.push(&taken[i].1[l * heads + h]);
-                        lambdas.push(self.gates[l].lambda_h(h, pos as usize));
-                    }
-                }
-                self.dec.read_batch(&self.pool, &seq_refs, &self.q_rows, &lambdas, &mut self.o_buf);
-            }
+        // partition the bucket by pinned shard (bucket order within each
+        // shard, so per-shard outputs scatter back positionally)
+        for e in self.engines.iter_mut() {
+            e.rows.clear();
         }
+        for (i, (slot_idx, _)) in taken.iter().enumerate() {
+            self.engines[self.shard_of[*slot_idx]].rows.push(i);
+        }
+        // 1..L) the sequential layer stack, in one of two shapes: the
+        //    per-layer barrier (every shard synchronizes between layers —
+        //    with one shard this IS the pre-sharding path, bit-for-bit
+        //    and span-for-span) or the per-shard full-stack pipeline.
+        //    Both leave the last layer's (n, H·dv) outputs in o_buf.
+        let failed = if self.pipelined {
+            self.step_pipelined(rows, &mut taken)
+        } else {
+            self.step_layerwise(rows, &mut taken)
+        };
         for (slot_idx, seqs) in taken {
             self.slots[slot_idx] = Some(SeqState::Decoding(seqs));
         }
         if let Some(msg) = failed {
             bail!(msg);
+        }
+        // per-shard occupancy instants, only when actually sharded — the
+        // single-shard hot path keeps its exact pre-sharding hook count
+        if self.pool.n_shards() > 1 {
+            for s in 0..self.pool.n_shards() {
+                crate::obs::instant(
+                    crate::obs::SpanCat::ShardOccupancy,
+                    ((s as u64) << 32) | self.pool.shard(s).in_use() as u64,
+                );
+            }
         }
         // final) whole-batch logits in one GEMM: (n, H·dv) @ (vocab, H·dv)^T
         let _lg = crate::obs::span(crate::obs::SpanCat::Logits, n as u64);

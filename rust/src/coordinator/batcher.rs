@@ -134,6 +134,12 @@ impl<T> RequestQueue<T> {
         let i = self.items.iter().position(|(item, _)| pred(item))?;
         self.items.remove(i).map(|(item, _)| item)
     }
+
+    /// Whether any queued item matches `pred` (duplicate-id screening at
+    /// submit time — the queue is part of the live-id set).
+    pub fn any<F: FnMut(&T) -> bool>(&self, mut pred: F) -> bool {
+        self.items.iter().any(|(item, _)| pred(item))
+    }
 }
 
 #[cfg(test)]

@@ -122,6 +122,12 @@ pub enum SubmitError {
     /// The backend has no prompt-scoring path
     /// ([`backend::DecodeBackend::supports_scoring`] is false).
     ScoringUnsupported,
+    /// The id is already live (queued, running, or scoring). Stream
+    /// events, timelines, and [`server::DecodeServer::cancel`] all key on
+    /// the id, so a duplicate would make cancellation remove an arbitrary
+    /// first match and per-request timeline reconstruction ambiguous.
+    /// Finished ids may be reused — only *live* ids collide.
+    DuplicateId,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -130,6 +136,9 @@ impl std::fmt::Display for SubmitError {
             SubmitError::EmptyPrompt => write!(f, "empty prompt: nothing to decode from"),
             SubmitError::ScoringUnsupported => {
                 write!(f, "this backend does not support prompt scoring")
+            }
+            SubmitError::DuplicateId => {
+                write!(f, "request id is already live (queued, running, or scoring)")
             }
         }
     }

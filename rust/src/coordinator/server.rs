@@ -51,6 +51,17 @@
 //!   [`DecodeServer::cancel`] tears a request down mid-flight — its
 //!   backend slot retires immediately, so a cancelled sequence's private
 //!   state blocks return to the pool without waiting for `max_new`.
+//!   Cancellation reaches **scoring** traffic too: a queued or
+//!   mid-flight [`ScoreRequest`] cancels the same way (immediate slot
+//!   retirement, [`StreamEvent::Cancelled`], no [`ScoreResult`]) —
+//!   scoring requests used to be un-cancellable and held their backend
+//!   slot until completion.
+//! - **Live ids are unique**: `submit`/`submit_score` reject an id that
+//!   is still queued, running, or scoring
+//!   ([`SubmitError::DuplicateId`]) — stream events, per-request
+//!   timelines, and `cancel` all key on the id, so a duplicate would
+//!   make cancellation remove an arbitrary first match. Finished ids
+//!   may be reused.
 //! - **Prefix-cache admission**: admission goes through
 //!   [`DecodeBackend::admit_prompt`]; when the backend reports `cached`
 //!   leading prompt tokens already covered by cached boundary states
@@ -62,7 +73,7 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::obs::{self, LogHistogram, Metric, Registry, SpanCat};
 use crate::runtime::{ModelHandle, Runtime};
@@ -332,26 +343,35 @@ impl<B: DecodeBackend> DecodeServer<B> {
         std::mem::take(&mut self.stream)
     }
 
-    /// Cancel a generation request wherever it is: still queued (it is
-    /// dequeued and never admitted) or mid-flight (its backend slot is
-    /// retired **immediately**, handing the sequence's private state
-    /// blocks back to the pool — shared prefix-cache blocks just drop a
-    /// refcount). Emits [`StreamEvent::Cancelled`]; a cancelled request
-    /// produces no [`GenResult`]. Returns false if `id` is not a live
-    /// generation request (unknown, already finished, or a scoring id).
+    /// Cancel a request wherever it is: still queued (it is dequeued and
+    /// never admitted) or mid-flight (its backend slot is retired
+    /// **immediately**, handing the sequence's private state blocks back
+    /// to the pool — shared prefix-cache blocks just drop a refcount).
+    /// Generation *and* scoring requests cancel the same way: a queued
+    /// [`ScoreRequest`] is dequeued, a mid-flight one retires its slot
+    /// and produces no [`ScoreResult`] (already-streamed
+    /// [`StreamEvent::Score`] rows stay delivered). Emits
+    /// [`StreamEvent::Cancelled`]; a cancelled generation produces no
+    /// [`GenResult`]. Returns false only if `id` is not live anywhere
+    /// (unknown or already finished).
     pub fn cancel(&mut self, id: u64) -> bool {
-        if self.queue.remove_first(|r| r.id == id).is_some() {
+        if self.queue.remove_first(|r| r.id == id).is_some()
+            || self.score_queue.remove_first(|r| r.id == id).is_some()
+        {
             obs::instant(SpanCat::Cancel, id);
             self.stats.cancelled += 1;
             self.stream.push(StreamEvent::Cancelled { id });
             return true;
         }
-        let Some(i) = self.running.iter().position(|s| s.id == id) else {
+        let slot = if let Some(i) = self.running.iter().position(|s| s.id == id) {
+            self.running.remove(i).slot
+        } else if let Some(i) = self.scoring.iter().position(|s| s.id == id) {
+            self.scoring.remove(i).slot
+        } else {
             return false;
         };
         obs::instant(SpanCat::Cancel, id);
-        let seq = self.running.remove(i);
-        self.backend.retire(seq.slot);
+        self.backend.retire(slot);
         let (in_use, peak) = self.backend.pool_occupancy();
         self.stats.pool_in_use = in_use;
         self.stats.pool_peak = peak;
@@ -360,11 +380,26 @@ impl<B: DecodeBackend> DecodeServer<B> {
         true
     }
 
+    /// Is `id` live anywhere in the server (queued, running, or
+    /// scoring)? Finished/cancelled ids are not live — they may be
+    /// reused by a later submit.
+    fn id_is_live(&self, id: u64) -> bool {
+        self.queue.any(|r| r.id == id)
+            || self.running.iter().any(|s| s.id == id)
+            || self.score_queue.any(|r| r.id == id)
+            || self.scoring.iter().any(|s| s.id == id)
+    }
+
     /// Enqueue a request. Empty prompts are rejected (there is no token
-    /// to feed at position 0); `max_new == 0` completes immediately.
+    /// to feed at position 0); an id that is already live anywhere in
+    /// the server is rejected ([`SubmitError::DuplicateId`]);
+    /// `max_new == 0` completes immediately.
     pub fn submit(&mut self, req: GenRequest) -> Result<(), SubmitError> {
         if req.prompt.is_empty() {
             return Err(SubmitError::EmptyPrompt);
+        }
+        if self.id_is_live(req.id) {
+            return Err(SubmitError::DuplicateId);
         }
         obs::instant(SpanCat::Submit, req.id);
         if req.max_new == 0 {
@@ -383,14 +418,19 @@ impl<B: DecodeBackend> DecodeServer<B> {
     }
 
     /// Enqueue a prompt-scoring request (per-token log-probs, no decode).
-    /// Empty prompts are rejected; a 1-token prompt has nothing to score
-    /// and completes immediately with empty log-probs.
+    /// Empty prompts are rejected; an id that is already live anywhere
+    /// in the server is rejected ([`SubmitError::DuplicateId`]); a
+    /// 1-token prompt has nothing to score and completes immediately
+    /// with empty log-probs.
     pub fn submit_score(&mut self, req: ScoreRequest) -> Result<(), SubmitError> {
         if !self.backend.supports_scoring() {
             return Err(SubmitError::ScoringUnsupported);
         }
         if req.tokens.is_empty() {
             return Err(SubmitError::EmptyPrompt);
+        }
+        if self.id_is_live(req.id) {
+            return Err(SubmitError::DuplicateId);
         }
         obs::instant(SpanCat::Submit, req.id);
         if req.tokens.len() == 1 {
@@ -747,8 +787,22 @@ impl<B: DecodeBackend> DecodeServer<B> {
         };
         let dt = t0.elapsed().as_secs_f64();
 
-        // sample + advance
-        let vocab = logits.len() / n;
+        // sample + advance. The backend contract is pinned, not
+        // inferred: it reports its vocab and must return exactly one
+        // vocab-sized row per SCHEDULED sequence (n rows), even when the
+        // planned bucket is larger (padded rows never come back). The
+        // old `vocab = logits.len() / n` derivation silently mis-split
+        // rows when a backend returned `bucket * vocab` entries.
+        let vocab = self.backend.vocab();
+        ensure!(
+            logits.len() == n * vocab,
+            "backend decode contract violated: {} logits for {} scheduled rows x vocab {} \
+             (planned bucket {}; padded rows must not be returned)",
+            logits.len(),
+            n,
+            vocab,
+            bucket
+        );
         for (j, &i) in sched.iter().enumerate() {
             let seq = &mut self.running[i];
             if self.capture_logits {
@@ -1385,6 +1439,9 @@ mod tests {
                 Ok(SeqSlot(0))
             }
             fn retire(&mut self, _slot: SeqSlot) {}
+            fn vocab(&self) -> usize {
+                1
+            }
             fn step(&mut self, _bucket: usize, rows: &[(SeqSlot, i32, i32)]) -> Result<Vec<f32>> {
                 Ok(vec![0.0; rows.len()])
             }
@@ -1610,6 +1667,127 @@ mod tests {
         assert_eq!(cancelled, vec![1, 2]);
         // no GenResult for either cancelled request
         assert!(srv.take_finished().iter().all(|r| r.id == 0));
+    }
+
+    #[test]
+    fn cancel_reaches_queued_and_mid_flight_scoring_requests() {
+        // THE cancel-scoring regression: before the fix, cancel only
+        // searched the generation queue and running set, so a scoring id
+        // returned false and its backend slot stayed held to completion.
+        let backend = PooledBackend::with_model_config(
+            64, 2, 2, TransitionKind::Mamba2, 8, 8, 4, 4096, 61,
+        );
+        let mut srv =
+            DecodeServer::with_backend(backend, BatchPolicy::new(vec![1], Duration::ZERO));
+        let long: Vec<i32> = (0..23).map(|i| (i * 5 + 2) % 64).collect();
+        // queued (never admitted): submit and cancel before any step
+        srv.submit_score(ScoreRequest { id: 7, tokens: long.clone() }).unwrap();
+        assert!(srv.cancel(7), "a queued scoring request must be cancellable");
+        assert_eq!(srv.pending(), 0);
+        // mid-flight: admit + a couple of budgeted chunks, then cancel
+        srv.submit_score(ScoreRequest { id: 8, tokens: long.clone() }).unwrap();
+        srv.step().unwrap();
+        srv.step().unwrap();
+        assert_eq!(srv.pending(), 1, "id 8 is mid-scoring");
+        let held_mid_flight = srv.backend().state_bytes();
+        assert!(held_mid_flight > 0, "a mid-flight scoring stack holds state");
+        assert!(srv.cancel(8), "a mid-flight scoring request must be cancellable");
+        assert_eq!(srv.pending(), 0, "cancelled scoring must leave the scoring set");
+        assert!(
+            srv.backend().state_bytes() < held_mid_flight,
+            "cancel must retire the scoring slot immediately, not at completion"
+        );
+        assert!(!srv.cancel(8), "a cancelled scoring id is no longer live");
+        assert_eq!(srv.stats.cancelled, 2);
+        // no ScoreResult for either; the Cancelled events streamed
+        assert!(srv.take_score_results().is_empty());
+        let cancelled: Vec<u64> = srv
+            .take_stream_events()
+            .iter()
+            .filter(|e| matches!(e, StreamEvent::Cancelled { .. }))
+            .map(event_id)
+            .collect();
+        assert_eq!(cancelled, vec![7, 8]);
+        // the retired slot is reusable: the same prompt still scores
+        // correctly on the same server
+        srv.submit_score(ScoreRequest { id: 9, tokens: long.clone() }).unwrap();
+        let res = run_scores(&mut srv);
+        assert_eq!(res.len(), 1);
+        assert_eq!(res[0].logprobs, srv.backend().oracle_score_logprobs(&long));
+    }
+
+    #[test]
+    fn duplicate_live_ids_are_rejected_at_submit() {
+        // THE duplicate-id regression: before the fix a live id could be
+        // resubmitted, after which cancel(id) removed an arbitrary first
+        // match and stream-event attribution by id was ambiguous.
+        let backend = PooledBackend::with_model_config(
+            64, 2, 2, TransitionKind::Mamba2, 8, 8, 4, 4096, 62,
+        );
+        let mut srv =
+            DecodeServer::with_backend(backend, BatchPolicy::new(vec![4], Duration::ZERO));
+        srv.submit(req(1, 3, 4)).unwrap();
+        // duplicate while queued — and across kinds (gen id blocks score)
+        assert_eq!(srv.submit(req(1, 2, 2)), Err(SubmitError::DuplicateId));
+        assert_eq!(
+            srv.submit_score(ScoreRequest { id: 1, tokens: vec![1, 2, 3] }),
+            Err(SubmitError::DuplicateId)
+        );
+        srv.step().unwrap();
+        // duplicate while running
+        assert_eq!(srv.submit(req(1, 2, 2)), Err(SubmitError::DuplicateId));
+        // scoring ids are part of the live set too
+        let long: Vec<i32> = (0..23).map(|i| (i * 5 + 2) % 64).collect();
+        srv.submit_score(ScoreRequest { id: 2, tokens: long.clone() }).unwrap();
+        srv.step().unwrap(); // admit id 2 into the scoring set
+        assert_eq!(
+            srv.submit_score(ScoreRequest { id: 2, tokens: long }),
+            Err(SubmitError::DuplicateId)
+        );
+        assert_eq!(srv.submit(req(2, 2, 2)), Err(SubmitError::DuplicateId));
+        // a cancelled or finished id is reusable
+        assert!(srv.cancel(2));
+        srv.submit(req(2, 2, 2)).unwrap();
+        let results = srv.run_to_completion().unwrap();
+        assert_eq!(results.len(), 2);
+        srv.submit(req(1, 2, 2)).unwrap();
+        assert_eq!(srv.run_to_completion().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn step_rejects_backends_returning_padded_logit_rows() {
+        // THE logits-contract regression: `step` used to derive
+        // `vocab = logits.len() / n`, so a backend returning
+        // `bucket * vocab` entries (padded rows) for n < bucket silently
+        // mis-split every row. The contract is now pinned: the backend
+        // reports vocab and must return exactly n rows.
+        struct PaddedRows;
+        impl DecodeBackend for PaddedRows {
+            fn admit(&mut self, _max_steps: usize) -> Result<SeqSlot, AdmitError> {
+                Ok(SeqSlot(0))
+            }
+            fn retire(&mut self, _slot: SeqSlot) {}
+            fn vocab(&self) -> usize {
+                3
+            }
+            fn step(&mut self, bucket: usize, _rows: &[(SeqSlot, i32, i32)]) -> Result<Vec<f32>> {
+                // the buggy shape: one row per PLANNED bucket slot
+                Ok(vec![0.0; bucket * 3])
+            }
+            fn state_bytes(&self) -> usize {
+                0
+            }
+        }
+        let mut srv =
+            DecodeServer::with_backend(PaddedRows, BatchPolicy::new(vec![4], Duration::ZERO));
+        // 2 ready rows in a planned bucket of 4: n = 2 < bucket
+        srv.submit(req(0, 2, 2)).unwrap();
+        srv.submit(req(1, 2, 2)).unwrap();
+        let err = srv.step().expect_err("padded logit rows must be rejected");
+        assert!(
+            err.to_string().contains("decode contract"),
+            "unexpected error: {err}"
+        );
     }
 
     /// Serve `prompts` sequentially (29 tokens each, boundary 28,

@@ -10,7 +10,10 @@
 //! along the generation traffic**, **shared prompt prefixes with the
 //! copy-on-write prefix cache randomly armed** (repeat admissions adopt
 //! cached chunk-boundary states; the squeezed pool LRU-evicts entries
-//! mid-trace), and pool sizes squeezed near
+//! mid-trace), **the state pool split into 1, 2, or 4 shards with the
+//! layer-stack pipelining randomly armed** (sequences pin to one shard
+//! at admission; shards advance concurrently on the resident thread
+//! pool), and pool sizes squeezed near
 //! exhaustion so admission backpressure fires mid-trace — capturing every
 //! decode row's logits, then asserting them **bit-exact** against
 //! [`PooledBackend::oracle_decode_logits`]: a per-sequence, Mat-backed
@@ -161,6 +164,13 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
     let dk = if rng.chance(0.5) { 4 } else { 8 };
     let dv = dk;
     let prefill_chunk = if rng.chance(0.7) { 4 } else { 0 };
+    // the sharded substrate rides along on every trace: shard count and
+    // layer-stack pipelining are drawn per case, and the differential bar
+    // below is unchanged — sharding must be invisible in the bits (each
+    // sequence's states live wholly in one shard and its per-layer op
+    // order is the same as the unsharded path)
+    let shards = [1usize, 2, 4][rng.below(3)];
+    let pipelined = rng.chance(0.5);
 
     // requests first, so the pool can be sized *near exhaustion*:
     // large enough for the biggest single request (no TooLarge), small
@@ -193,7 +203,11 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
     };
     let max_need = reqs.iter().map(&need).max().unwrap();
     let total_need: usize = reqs.iter().map(&need).sum();
-    let pool_blocks = max_need.max(total_need * 3 / 5);
+    // every shard must fit the largest single reservation (sequences pin
+    // to exactly one shard, so TooLarge is judged per shard) while the
+    // aggregate still backpressures mid-trace
+    let per_shard = max_need.max((total_need * 3 / 5).div_ceil(shards));
+    let pool_blocks = per_shard * shards;
 
     let mut backend = PooledBackend::with_model_config(
         VOCAB,
@@ -206,6 +220,8 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
         pool_blocks,
         seed ^ 0xBACC,
     );
+    backend.set_shards(shards);
+    backend.set_pipelined(pipelined);
     // gate schedules: default fixed, shared per-token, or per-head
     // per-token — per layer
     for l in 0..layers {
@@ -246,27 +262,29 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
     if results.len() != nreq {
         return Err(format!("{} of {nreq} requests completed", results.len()));
     }
-    // after retirement the only blocks still out are the prefix cache's
-    // refcounted boundary states; dropping the cache must drain the pool
-    // to zero (any other residue is a leak)
-    let held = srv.backend().prefix_cache().map_or(0, |c| c.blocks_held());
+    // after retirement the only blocks still out are the shard-local
+    // prefix caches' refcounted boundary states; dropping the caches must
+    // drain every shard to zero (any other residue is a leak)
+    let held = srv.backend().pool().cache_blocks_held();
     if srv.backend().pool().in_use() != held {
         return Err(format!(
-            "retirement leaked {} pool blocks ({held} held by the prefix cache)",
+            "retirement leaked {} pool blocks ({held} held by the prefix caches)",
             srv.backend().pool().in_use()
         ));
     }
     srv.backend_mut().clear_prefix_cache();
-    if srv.backend().pool().in_use() != 0 {
-        return Err(format!(
-            "prefix cache leaked {} pool blocks on clear",
-            srv.backend().pool().in_use()
-        ));
+    for s in 0..srv.backend().pool().n_shards() {
+        if srv.backend().pool().shard(s).in_use() != 0 {
+            return Err(format!(
+                "shard {s} leaked {} pool blocks after cache clear",
+                srv.backend().pool().shard(s).in_use()
+            ));
+        }
     }
     let ctx = |e: String| {
         format!(
             "{e} (kind {kind:?}, layers {layers}, heads {heads}, chunk {prefill_chunk}, \
-             cache {use_cache}, pool {pool_blocks})"
+             cache {use_cache}, pool {pool_blocks}, shards {shards}, pipelined {pipelined})"
         )
     };
     for r in &reqs {
@@ -305,84 +323,114 @@ fn serving_trace_logits_match_oracle_replay_property() {
 /// prompts over many chunks, bucket-8 batches, both transition families,
 /// 3-layer sequential stacks × 2 heads, per-head gates, scoring traffic,
 /// and a tight prefill budget — the configuration the acceptance
-/// criteria name explicitly.
+/// criteria name explicitly. Each mode runs over the full shard ×
+/// pipelining grid ({1, 2, 4} shards × layer-wise / pipelined stack):
+/// the rng is re-seeded per grid cell so every cell serves the *same*
+/// requests against the *same* weights, and every cell is compared to
+/// the same unsharded per-sequence oracle — so all six cells are
+/// transitively bit-identical to each other, not merely each
+/// self-consistent.
 #[test]
 fn serving_trace_differential_pinned_heavy_modes() {
     for (seed, kind) in [(11u64, TransitionKind::Mamba2), (12, TransitionKind::Gdn)] {
-        let mut rng = Rng::new(seed);
-        let (layers, heads, dk, dv, chunk) = (3usize, 2usize, 8usize, 8usize, 4usize);
-        let reqs: Vec<GenRequest> = (0..10)
-            .map(|i| GenRequest {
-                id: i as u64,
-                // request 0 is pinned multi-chunk (the prefill-chunks
-                // assert below must not depend on the draw); the rest mix
-                // sub-chunk, exact-chunk, and multi-chunk lengths
-                prompt: (0..if i == 0 { 17 } else { 1 + rng.below(19) })
-                    .map(|_| rng.below(VOCAB) as i32)
-                    .collect(),
-                max_new: 1 + rng.below(6),
-            })
-            .collect();
-        let score_reqs: Vec<ScoreRequest> = (0..3)
-            .map(|i| ScoreRequest {
-                id: 1000 + i as u64,
-                tokens: (0..5 + i * 7).map(|_| rng.below(VOCAB) as i32).collect(),
-            })
-            .collect();
-        let total: usize = reqs
-            .iter()
-            .map(|r| layers * heads * blocks_for_steps(r.prompt.len() + r.max_new - 1))
-            .sum();
-        let mut backend = PooledBackend::with_model_config(
-            VOCAB,
-            layers,
-            heads,
-            kind,
-            dk,
-            dv,
-            chunk,
-            (total * 2) / 3, // backpressure mid-trace
-            seed,
-        );
-        for l in 0..layers {
-            backend.set_layer_gates(
-                l,
-                GateTable::per_head((0..heads).map(|_| random_head_table(&mut rng)).collect()),
-            );
-        }
-        let policy = BatchPolicy::new(vec![8], Duration::ZERO).with_prefill_budget(3);
-        let mut srv = DecodeServer::with_backend(backend, policy);
-        srv.enable_logit_capture();
-        for r in &reqs {
-            srv.submit(r.clone()).unwrap();
-        }
-        for r in &score_reqs {
-            srv.submit_score(r.clone()).unwrap();
-        }
-        let results =
-            DecodeServer::<PooledBackend>::results_by_id(srv.run_to_completion().unwrap());
-        let captured = srv.take_captured_logits();
-        let score_results = srv.take_score_results();
-        assert!(
-            srv.stats.prefill_chunks > 0,
-            "heavy trace must exercise chunkwise prefill ({kind:?})"
-        );
-        assert!(
-            srv.stats.score_chunks > 0,
-            "heavy trace must exercise chunkwise scoring ({kind:?})"
-        );
-        assert_eq!(results.len(), reqs.len(), "{kind:?}");
-        for r in &reqs {
-            let res = &results[&r.id];
-            if let Err(e) = compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured)
-            {
-                panic!("{e} ({kind:?})");
+        for shards in [1usize, 2, 4] {
+            for pipelined in [false, true] {
+                let grid = format!("{kind:?}, shards {shards}, pipelined {pipelined}");
+                let mut rng = Rng::new(seed);
+                let (layers, heads, dk, dv, chunk) = (3usize, 2usize, 8usize, 8usize, 4usize);
+                let reqs: Vec<GenRequest> = (0..10)
+                    .map(|i| GenRequest {
+                        id: i as u64,
+                        // request 0 is pinned multi-chunk (the
+                        // prefill-chunks assert below must not depend on
+                        // the draw); the rest mix sub-chunk, exact-chunk,
+                        // and multi-chunk lengths
+                        prompt: (0..if i == 0 { 17 } else { 1 + rng.below(19) })
+                            .map(|_| rng.below(VOCAB) as i32)
+                            .collect(),
+                        max_new: 1 + rng.below(6),
+                    })
+                    .collect();
+                let score_reqs: Vec<ScoreRequest> = (0..3)
+                    .map(|i| ScoreRequest {
+                        id: 1000 + i as u64,
+                        tokens: (0..5 + i * 7).map(|_| rng.below(VOCAB) as i32).collect(),
+                    })
+                    .collect();
+                let need = |r: &GenRequest| {
+                    layers * heads * blocks_for_steps(r.prompt.len() + r.max_new - 1)
+                };
+                let total: usize = reqs.iter().map(&need).sum();
+                let max_need = reqs.iter().map(&need).max().unwrap();
+                // per shard: still squeezed (aggregate ~2/3 of offered
+                // load, so backpressure fires mid-trace) but never below
+                // the largest single reservation
+                let per_shard = max_need.max(((total * 2) / 3).div_ceil(shards));
+                let mut backend = PooledBackend::with_model_config(
+                    VOCAB,
+                    layers,
+                    heads,
+                    kind,
+                    dk,
+                    dv,
+                    chunk,
+                    per_shard * shards,
+                    seed,
+                );
+                backend.set_shards(shards);
+                backend.set_pipelined(pipelined);
+                for l in 0..layers {
+                    backend.set_layer_gates(
+                        l,
+                        GateTable::per_head(
+                            (0..heads).map(|_| random_head_table(&mut rng)).collect(),
+                        ),
+                    );
+                }
+                let policy = BatchPolicy::new(vec![8], Duration::ZERO).with_prefill_budget(3);
+                let mut srv = DecodeServer::with_backend(backend, policy);
+                srv.enable_logit_capture();
+                for r in &reqs {
+                    srv.submit(r.clone()).unwrap();
+                }
+                for r in &score_reqs {
+                    srv.submit_score(r.clone()).unwrap();
+                }
+                let results =
+                    DecodeServer::<PooledBackend>::results_by_id(srv.run_to_completion().unwrap());
+                let captured = srv.take_captured_logits();
+                let score_results = srv.take_score_results();
+                assert!(
+                    srv.stats.prefill_chunks > 0,
+                    "heavy trace must exercise chunkwise prefill ({grid})"
+                );
+                assert!(
+                    srv.stats.score_chunks > 0,
+                    "heavy trace must exercise chunkwise scoring ({grid})"
+                );
+                assert_eq!(results.len(), reqs.len(), "{grid}");
+                for r in &reqs {
+                    let res = &results[&r.id];
+                    if let Err(e) =
+                        compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured)
+                    {
+                        panic!("{e} ({grid})");
+                    }
+                }
+                if let Err(e) = compare_scores_to_oracle(srv.backend(), &score_reqs, &score_results)
+                {
+                    panic!("{e} ({grid})");
+                }
+                // zero leaked blocks per shard after the trace drains
+                for s in 0..srv.backend().pool().n_shards() {
+                    assert_eq!(
+                        srv.backend().pool().shard(s).in_use(),
+                        0,
+                        "leak on shard {s} ({grid})"
+                    );
+                }
             }
         }
-        if let Err(e) = compare_scores_to_oracle(srv.backend(), &score_reqs, &score_results) {
-            panic!("{e} ({kind:?})");
-        }
-        assert_eq!(srv.backend().pool().in_use(), 0, "leak ({kind:?})");
     }
 }
 
@@ -552,4 +600,63 @@ fn shared_prefix_trace_bit_exact_across_cache_modes() {
             }
         }
     }
+}
+
+/// Regression lock for the padded-bucket vocab contract: five ready rows
+/// fall *strictly between* the configured bucket sizes {2, 8}, so (with
+/// a zero batching wait) every decode step runs in an 8-wide bucket with
+/// three rows of padding. The server must slice the returned logits with
+/// the backend-reported width
+/// ([`crate::coordinator::backend::DecodeBackend::vocab`]) rather than
+/// deriving it as `logits.len() / ready` — with padded buckets those
+/// differ whenever a backend returns bucket-shaped output, and the old
+/// derivation sliced every row after the first from the wrong offsets.
+/// All five prompts are sub-chunk and the prefill budget covers them in
+/// one cycle, so the cohort enters decode together and stays in lockstep
+/// (equal `max_new`): `ready` is exactly 5 on every decode step.
+/// Bit-exactness against the per-sequence oracle is the assertion.
+#[test]
+fn trace_ready_rows_strictly_between_bucket_sizes() {
+    let mut rng = Rng::new(31);
+    let (layers, heads, dk, dv, chunk) = (2usize, 2usize, 4usize, 4usize, 4usize);
+    let reqs: Vec<GenRequest> = (0..5)
+        .map(|i| GenRequest {
+            id: i as u64,
+            prompt: (0..3).map(|_| rng.below(VOCAB) as i32).collect(),
+            max_new: 4,
+        })
+        .collect();
+    let need = |r: &GenRequest| layers * heads * blocks_for_steps(r.prompt.len() + r.max_new - 1);
+    let pool_blocks: usize = reqs.iter().map(&need).sum();
+    let mut backend = PooledBackend::with_model_config(
+        VOCAB,
+        layers,
+        heads,
+        TransitionKind::Mamba2,
+        dk,
+        dv,
+        chunk,
+        pool_blocks,
+        31,
+    );
+    for l in 0..layers {
+        backend.set_layer_gates(l, random_head_table(&mut rng));
+    }
+    let policy = BatchPolicy::new(vec![2, 8], Duration::ZERO).with_prefill_budget(32);
+    let mut srv = DecodeServer::with_backend(backend, policy);
+    srv.enable_logit_capture();
+    for r in &reqs {
+        srv.submit(r.clone()).unwrap();
+    }
+    let results = DecodeServer::<PooledBackend>::results_by_id(srv.run_to_completion().unwrap());
+    let captured = srv.take_captured_logits();
+    assert_eq!(results.len(), reqs.len());
+    for r in &reqs {
+        let res = &results[&r.id];
+        assert_eq!(res.tokens.len(), r.max_new, "req {}", r.id);
+        if let Err(e) = compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured) {
+            panic!("{e}");
+        }
+    }
+    assert_eq!(srv.backend().pool().in_use(), 0, "leak");
 }

@@ -17,7 +17,10 @@
 //! [`drain`]. The GEMM *worker* threads never emit spans — flop
 //! accounting happens on the dispatching thread at the `tensor` entry
 //! points, before row-block parallelization — so in practice one lane
-//! per engine loop is active. Statics use `std::sync` directly (not the
+//! per engine loop is active. Sharded decode adds one emitting thread
+//! per concurrent shard job ([`SpanCat::ShardStep`] /
+//! [`SpanCat::PipelineStage`]); each lands in its own lane, which is
+//! exactly the model the lanes exist for. Statics use `std::sync` directly (not the
 //! `util::sync` loom shim): loom atomics are not const-constructible,
 //! and the recorder is deliberately outside the loom model, like
 //! `tensor::GEMM_THREADS` (see `util/sync.rs` docs).
@@ -80,10 +83,20 @@ pub enum SpanCat {
     Cancel = 14,
     /// Kernel work outside any open span (flop attribution fallback).
     Untracked = 15,
+    /// One shard's advance+read job inside a sharded decode step
+    /// (payload: shard index).
+    ShardStep = 16,
+    /// Shard occupancy sample at decode time
+    /// (payload: `shard << 32 | blocks_in_use`).
+    ShardOccupancy = 17,
+    /// One layer's stage inside a shard's pipelined decode job
+    /// (payload: layer index). The per-shard layer-boundary buffer
+    /// carried through the `LayerProjection` is the pipeline register.
+    PipelineStage = 18,
 }
 
 /// Number of categories (flop/byte counter array length).
-pub const NUM_CATS: usize = 16;
+pub const NUM_CATS: usize = 19;
 
 impl SpanCat {
     /// Stable display name (Chrome-trace `name` field, summary tables).
@@ -105,6 +118,9 @@ impl SpanCat {
             SpanCat::StreamEmit => "stream_emit",
             SpanCat::Cancel => "cancel",
             SpanCat::Untracked => "untracked",
+            SpanCat::ShardStep => "shard_step",
+            SpanCat::ShardOccupancy => "shard_occupancy",
+            SpanCat::PipelineStage => "pipeline_stage",
         }
     }
 
@@ -132,6 +148,9 @@ pub const ALL_CATS: [SpanCat; NUM_CATS] = [
     SpanCat::StreamEmit,
     SpanCat::Cancel,
     SpanCat::Untracked,
+    SpanCat::ShardStep,
+    SpanCat::ShardOccupancy,
+    SpanCat::PipelineStage,
 ];
 
 /// One fixed-size recorded span. `start_ns`/`end_ns` are monotonic ticks

@@ -44,6 +44,13 @@ use super::engine::{ChunkOutput, PrefillEngine, Workspace};
 /// each matrix is head `h`'s projection, so one `(C, H·d_v) @ W^T` GEMM
 /// produces every head's inputs for a whole chunk (and one
 /// `(n, H·d_v) @ W^T` GEMM does the same for a decode batch).
+///
+/// In the sharded serving path this boundary doubles as the **pipeline
+/// register**: the pipelined decode step carries each shard's per-row
+/// output `o` across layers in a shard-local buffer and applies these
+/// projections per shard, so the only data crossing a layer boundary is
+/// exactly what crosses it in the layer-wise path — which is why
+/// pipelining cannot change a sequence's bits (see docs/SHARDING.md).
 #[derive(Debug, Clone)]
 pub struct LayerProjection {
     /// query projection, `(H·d_k, H·d_v)`

@@ -28,7 +28,11 @@
 //! primitives. Position/head-dependent gate schedules live in [`gates`]
 //! ([`GateTable`]). Cross-request sharing of chunk-boundary states —
 //! refcounted pool blocks + copy-on-write advances + a radix tree over
-//! token-id prefixes — lives in [`prefix_cache`] ([`PrefixCache`]).
+//! token-id prefixes — lives in [`prefix_cache`] ([`PrefixCache`]). The
+//! pool split into per-worker shards — sequences pinned to one shard at
+//! admission so disjoint shards advance and read concurrently without
+//! synchronizing on state — is [`sharded`] ([`ShardedStatePool`]; see
+//! docs/SHARDING.md for the pinning rules and determinism argument).
 //!
 //! The same machinery measured against a softmax KV cache is experiment
 //! E11 (decode time/memory vs. T — Table 1's right columns).
@@ -38,12 +42,14 @@ pub mod gates;
 pub mod pool;
 pub mod pooled;
 pub mod prefix_cache;
+pub mod sharded;
 pub(crate) mod update;
 
 pub use batched_advance::{AdvanceJob, BatchedAdvance};
 pub use gates::GateTable;
 pub use pooled::{BatchedDecoder, PooledFenwickState};
 pub use prefix_cache::PrefixCache;
+pub use sharded::ShardedStatePool;
 
 use crate::tensor::Mat;
 

@@ -106,6 +106,31 @@ impl PrefixCache {
         ids
     }
 
+    /// Length of the longest cached prefix of `tokens`, without touching
+    /// LRU state or emitting trace events — a side-effect-free probe. The
+    /// sharded façade peeks every shard with this and then `lookup`s only
+    /// the winning shard, so losing shards' entries never get spuriously
+    /// marked recently-used by a probe they lost.
+    pub(crate) fn peek_match(&self, tokens: &[i32]) -> Option<usize> {
+        let mut node = 0usize;
+        let mut best = None;
+        let mut depth = 0usize;
+        while (depth + 1) * self.chunk <= tokens.len() {
+            let run = &tokens[depth * self.chunk..(depth + 1) * self.chunk];
+            let Some(&(_, next)) =
+                self.nodes[node].children.iter().find(|(edge, _)| edge == run)
+            else {
+                break;
+            };
+            node = next;
+            depth += 1;
+            if self.nodes[node].entry.is_some() {
+                best = Some(depth * self.chunk);
+            }
+        }
+        best
+    }
+
     /// Longest cached prefix of `tokens`, matching whole chunks only.
     /// Returns `(matched_tokens, states)` for the deepest boundary with a
     /// snapshot (and marks it most-recently used); `None` when no

@@ -1,0 +1,372 @@
+//! Sharded façade over [`StatePool`] — the serving substrate split into
+//! per-worker shards so decode buckets can advance and read concurrently.
+//!
+//! A single [`StatePool`] serializes every advance/read behind one
+//! `&mut`: with the batched engines already saturating one core per
+//! bucket, the pool itself is the scaling wall. [`ShardedStatePool`]
+//! splits the block budget into `n` independent pools ("shards"), each
+//! with its own free list, refcounts, and (when enabled) its own
+//! [`PrefixCache`]. Sequences are **pinned to one shard at admission**
+//! ([`ShardedStatePool::pin`]) and every block they ever hold lives in
+//! that shard's pool, which is what makes per-shard jobs on the resident
+//! thread pool sound: disjoint shards are disjoint `&mut`s
+//! ([`ShardedStatePool::parts_mut`]), so shard jobs never synchronize on
+//! state.
+//!
+//! ## Why sharding preserves bit-exactness
+//!
+//! Serving logits are bit-exact with the per-sequence oracle replay
+//! because (a) every per-sequence computation — advance, batched read,
+//! row-batched projection GEMMs — is independent of batchmates (the
+//! established per-row invariant the trace harness pins), (b) a
+//! sequence's states live wholly in one shard's pool, so its merge /
+//! transition / sentinel op order never changes with the shard count,
+//! and (c) the step loop never reorders one sequence's steps across
+//! shards. [`BlockId`]s are **shard-local** (each shard numbers its
+//! blocks from zero); a cached boundary snapshot is therefore only
+//! adoptable by sequences pinned to the shard that owns it —
+//! [`ShardedStatePool::lookup_prefix`] returns the owning shard for the
+//! caller to pin against. Deterministic pinning (max headroom, lowest
+//! index on ties) is for *reproducibility of occupancy traces*, not for
+//! bits: any pinning yields the same per-sequence logits.
+//!
+//! Reservation accounting (admission backpressure) is per shard:
+//! [`ShardedStatePool::reserve`] / [`ShardedStatePool::unreserve`] track
+//! committed blocks against each shard's capacity, exactly the
+//! `reserved_total` bookkeeping the unsharded backend kept globally.
+
+use crate::state::pool::StatePool;
+use crate::state::prefix_cache::{BoundaryStates, PrefixCache};
+
+/// A fixed set of independent [`StatePool`] shards with per-shard
+/// reservation accounting and optional per-shard [`PrefixCache`]s (see
+/// module docs). With one shard this is a thin pass-through — the
+/// unsharded serving path, bit-for-bit.
+pub struct ShardedStatePool {
+    shards: Vec<StatePool>,
+    /// one cache per shard when prefix caching is enabled (entries hold
+    /// shard-local block ids, so caches can never be shared or merged)
+    caches: Option<Vec<PrefixCache>>,
+    /// admission-reserved blocks per shard
+    reserved: Vec<usize>,
+    block_elems: usize,
+    shard_capacity: usize,
+}
+
+impl ShardedStatePool {
+    /// `n_shards` pools of `shard_capacity` blocks of `block_elems`
+    /// (d_k · d_v) floats each.
+    pub fn new(block_elems: usize, shard_capacity: usize, n_shards: usize) -> ShardedStatePool {
+        assert!(n_shards >= 1, "at least one shard");
+        assert!(shard_capacity >= 1, "each shard needs capacity");
+        ShardedStatePool {
+            shards: (0..n_shards).map(|_| StatePool::new(block_elems, shard_capacity)).collect(),
+            caches: None,
+            reserved: vec![0; n_shards],
+            block_elems,
+            shard_capacity,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard block capacity (uniform across shards). A request whose
+    /// reservation exceeds this can never be admitted, no matter how
+    /// empty the pools are — the sharded analogue of `TooLarge`.
+    pub fn shard_capacity(&self) -> usize {
+        self.shard_capacity
+    }
+
+    /// Elements per block (d_k · d_v), uniform across shards.
+    pub fn block_elems(&self) -> usize {
+        self.block_elems
+    }
+
+    /// One shard's pool.
+    pub fn shard(&self, s: usize) -> &StatePool {
+        &self.shards[s]
+    }
+
+    pub fn shard_mut(&mut self, s: usize) -> &mut StatePool {
+        &mut self.shards[s]
+    }
+
+    /// Total capacity across shards — keeps `pool().capacity()`-style
+    /// inspection working unchanged on the façade.
+    pub fn capacity(&self) -> usize {
+        self.shards.iter().map(|p| p.capacity()).sum()
+    }
+
+    /// Blocks in use across every shard.
+    pub fn in_use(&self) -> usize {
+        self.shards.iter().map(|p| p.in_use()).sum()
+    }
+
+    /// Sum of per-shard peaks (an upper bound on the true simultaneous
+    /// peak, exact when shards peak together — occupancy accounting, not
+    /// a timing claim).
+    pub fn peak(&self) -> usize {
+        self.shards.iter().map(|p| p.peak()).sum()
+    }
+
+    /// Blocks still allocatable across every shard.
+    pub fn available(&self) -> usize {
+        self.shards.iter().map(|p| p.available()).sum()
+    }
+
+    /// Can shard `s` take another `need`-block reservation?
+    pub fn can_reserve(&self, s: usize, need: usize) -> bool {
+        self.reserved[s] + need <= self.shard_capacity
+    }
+
+    /// Commit `need` blocks of shard `s`'s capacity to a sequence.
+    pub fn reserve(&mut self, s: usize, need: usize) {
+        debug_assert!(self.can_reserve(s, need), "over-reservation on shard {s}");
+        self.reserved[s] += need;
+    }
+
+    /// Return a retired sequence's reservation to shard `s`.
+    pub fn unreserve(&mut self, s: usize, need: usize) {
+        debug_assert!(self.reserved[s] >= need, "unreserve underflow on shard {s}");
+        self.reserved[s] -= need;
+    }
+
+    /// Blocks currently reserved against shard `s`.
+    pub fn reserved(&self, s: usize) -> usize {
+        self.reserved[s]
+    }
+
+    /// Pick the shard for a new `need`-block sequence: among shards with
+    /// room (`reserved + need ≤ capacity`), the one with the most
+    /// reservation headroom, lowest index on ties — deterministic, so
+    /// identical traffic reproduces identical shard occupancy traces.
+    /// `None` means every shard is committed (admission backpressure).
+    pub fn pin(&self, need: usize) -> Option<usize> {
+        self.reserved
+            .iter()
+            .enumerate()
+            .filter(|&(_, &r)| r + need <= self.shard_capacity)
+            .max_by_key(|&(s, &r)| (self.shard_capacity - r, std::cmp::Reverse(s)))
+            .map(|(s, _)| s)
+    }
+
+    /// Turn on prefix caching: one [`PrefixCache`] per shard at `chunk`
+    /// granularity. Idempotent.
+    pub fn enable_prefix_cache(&mut self, chunk: usize) {
+        if self.caches.is_none() {
+            self.caches = Some(self.shards.iter().map(|_| PrefixCache::new(chunk)).collect());
+        }
+    }
+
+    pub fn cache_enabled(&self) -> bool {
+        self.caches.is_some()
+    }
+
+    /// One shard's cache, if caching is enabled.
+    pub fn cache(&self, s: usize) -> Option<&PrefixCache> {
+        self.caches.as_ref().map(|c| &c[s])
+    }
+
+    /// Total blocks held by every shard's cache.
+    pub fn cache_blocks_held(&self) -> usize {
+        self.caches.as_ref().map_or(0, |cs| cs.iter().map(|c| c.blocks_held()).sum())
+    }
+
+    /// Probe every shard's cache for the longest cached chunk-aligned
+    /// prefix of `tokens`. Returns `(shard, matched_tokens, states)` for
+    /// the deepest hit — longest match wins, lowest shard on ties (the
+    /// winner is LRU-touched; losing shards' probes touch nothing, since
+    /// only a *returned* lookup marks an entry used). The block handles
+    /// are shard-local: the caller may only adopt them into a sequence
+    /// pinned to that shard.
+    pub fn lookup_prefix(&mut self, tokens: &[i32]) -> Option<(usize, usize, BoundaryStates)> {
+        let caches = self.caches.as_mut()?;
+        // two passes so losing shards are never LRU-touched: peek depths
+        // first, then look up (and touch) only the winner
+        let mut best: Option<(usize, usize)> = None; // (matched, shard)
+        for (s, cache) in caches.iter().enumerate() {
+            if let Some(m) = cache.peek_match(tokens) {
+                if best.map_or(true, |(bm, _)| m > bm) {
+                    best = Some((m, s));
+                }
+            }
+        }
+        let (_, s) = best?;
+        let (m, states) = caches[s].lookup(tokens).expect("peeked above");
+        Some((s, m, states))
+    }
+
+    /// Disjoint `(pool, cache)` mutable pair for shard `s` — what export
+    /// bridges and eviction loops need simultaneously.
+    pub fn pair_mut(&mut self, s: usize) -> (&mut StatePool, Option<&mut PrefixCache>) {
+        (&mut self.shards[s], self.caches.as_mut().map(|c| &mut c[s]))
+    }
+
+    /// Every shard's disjoint `(pool, cache)` mutable pair at once — the
+    /// borrow split that lets one thread-pool job per shard run
+    /// concurrently without any synchronization on state.
+    pub fn parts_mut(&mut self) -> Vec<(&mut StatePool, Option<&mut PrefixCache>)> {
+        match self.caches.as_mut() {
+            Some(caches) => self
+                .shards
+                .iter_mut()
+                .zip(caches.iter_mut())
+                .map(|(p, c)| (p, Some(c)))
+                .collect(),
+            None => self.shards.iter_mut().map(|p| (p, None)).collect(),
+        }
+    }
+
+    /// Drop every shard's cache entries, releasing their refcounts
+    /// (gate-swap invalidation, end-of-trace leak accounting). Caches
+    /// stay enabled.
+    pub fn clear_caches(&mut self) {
+        if let Some(caches) = self.caches.as_mut() {
+            for (cache, pool) in caches.iter_mut().zip(self.shards.iter_mut()) {
+                cache.clear(pool);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_sum_across_shards() {
+        let mut sp = ShardedStatePool::new(4, 3, 2);
+        assert_eq!(sp.capacity(), 6);
+        assert_eq!(sp.block_elems(), 4);
+        let a = sp.shard_mut(0).alloc().unwrap();
+        let b = sp.shard_mut(1).alloc().unwrap();
+        let _c = sp.shard_mut(1).alloc().unwrap();
+        assert_eq!(sp.in_use(), 3);
+        assert_eq!(sp.available(), 3);
+        sp.shard_mut(0).release(a);
+        sp.shard_mut(1).release(b);
+        assert_eq!(sp.in_use(), 1);
+        assert_eq!(sp.peak(), 3, "per-shard peaks: 1 + 2");
+    }
+
+    #[test]
+    fn pin_prefers_headroom_then_lowest_index() {
+        let mut sp = ShardedStatePool::new(4, 10, 3);
+        // empty: tie on headroom -> lowest index
+        assert_eq!(sp.pin(4), Some(0));
+        sp.reserve(0, 6);
+        // shard 0 has 4 headroom, 1 and 2 have 10: tie between 1, 2 -> 1
+        assert_eq!(sp.pin(4), Some(1));
+        sp.reserve(1, 3);
+        // headroom: 4, 7, 10 -> shard 2
+        assert_eq!(sp.pin(4), Some(2));
+        sp.reserve(2, 9);
+        // headroom: 4, 7, 1 -> shard 1; a 5-block need skips shard 2
+        assert_eq!(sp.pin(5), Some(1));
+        // an 8-block need fits nowhere
+        assert_eq!(sp.pin(8), None);
+        sp.unreserve(0, 6);
+        assert_eq!(sp.pin(8), Some(0));
+        // per-shard capacity bounds a single reservation even on empty
+        // shards
+        assert_eq!(sp.pin(11), None);
+    }
+
+    #[test]
+    fn reservation_accounting_is_per_shard() {
+        let mut sp = ShardedStatePool::new(4, 5, 2);
+        assert!(sp.can_reserve(0, 5));
+        sp.reserve(0, 5);
+        assert!(!sp.can_reserve(0, 1));
+        assert!(sp.can_reserve(1, 5), "shard 1 unaffected by shard 0's commitments");
+        assert_eq!(sp.reserved(0), 5);
+        assert_eq!(sp.reserved(1), 0);
+        sp.unreserve(0, 2);
+        assert!(sp.can_reserve(0, 2));
+        assert!(!sp.can_reserve(0, 3));
+    }
+
+    #[test]
+    fn lookup_prefix_longest_match_wins_across_shards() {
+        let mut sp = ShardedStatePool::new(4, 8, 2);
+        sp.enable_prefix_cache(2);
+        let p: Vec<i32> = (0..8).collect();
+        // shard 0 caches the 2-token boundary, shard 1 the 4-token one
+        let (s0_states, s1_states);
+        {
+            let (pool, cache) = sp.pair_mut(0);
+            let id = pool.alloc().unwrap();
+            s0_states = vec![vec![(1usize, id)]];
+            cache.unwrap().insert(&p[..2], &s0_states, pool);
+        }
+        {
+            let (pool, cache) = sp.pair_mut(1);
+            let id = pool.alloc().unwrap();
+            s1_states = vec![vec![(2usize, id)]];
+            cache.unwrap().insert(&p[..4], &s1_states, pool);
+        }
+        let (shard, matched, states) = sp.lookup_prefix(&p).unwrap();
+        assert_eq!((shard, matched), (1, 4), "longest match wins");
+        assert_eq!(states, s1_states);
+        // only the 2-token prefix in common -> shard 0's entry
+        let (shard, matched, _) = sp.lookup_prefix(&[0, 1, 99, 99]).unwrap();
+        assert_eq!((shard, matched), (0, 2));
+        assert!(sp.lookup_prefix(&[7, 7]).is_none());
+        assert_eq!(sp.cache_blocks_held(), 2);
+        // drain: clear caches, then the exporters' own refs
+        sp.clear_caches();
+        {
+            let (pool, _) = sp.pair_mut(0);
+            pool.release(s0_states[0][0].1);
+        }
+        {
+            let (pool, _) = sp.pair_mut(1);
+            pool.release(s1_states[0][0].1);
+        }
+        assert_eq!(sp.in_use(), 0);
+        assert_eq!(sp.cache_blocks_held(), 0);
+    }
+
+    #[test]
+    fn losing_shards_are_not_lru_touched_by_a_probe() {
+        // shard 0 holds two entries; a deeper hit on shard 1 must not
+        // touch shard 0's shallower entry, so shard 0's own LRU order is
+        // unchanged by cross-shard probes.
+        let mut sp = ShardedStatePool::new(4, 8, 2);
+        sp.enable_prefix_cache(2);
+        let p: Vec<i32> = (0..8).collect();
+        let (a, b);
+        {
+            let (pool, cache) = sp.pair_mut(0);
+            let cache = cache.unwrap();
+            a = pool.alloc().unwrap();
+            cache.insert(&p[..2], &vec![vec![(1usize, a)]], pool);
+            b = pool.alloc().unwrap();
+            cache.insert(&[9, 9], &vec![vec![(1usize, b)]], pool);
+        }
+        {
+            let (pool, cache) = sp.pair_mut(1);
+            let id = pool.alloc().unwrap();
+            cache.unwrap().insert(&p[..4], &vec![vec![(2usize, id)]], pool);
+        }
+        // deep probe: shard 1 wins; shard 0's [0,1] entry must NOT be
+        // touched, so it is still LRU (older than [9,9])
+        let (shard, _, _) = sp.lookup_prefix(&p).unwrap();
+        assert_eq!(shard, 1);
+        {
+            let (pool, cache) = sp.pair_mut(0);
+            assert!(cache.unwrap().evict_lru(pool));
+        }
+        // the evicted entry is the untouched [0,1] one
+        assert!(sp.lookup_prefix(&[0, 1]).is_none(), "untouched entry was LRU");
+        assert!(sp.lookup_prefix(&[9, 9]).is_some());
+        sp.clear_caches();
+        {
+            let (pool, _) = sp.pair_mut(0);
+            pool.release(a);
+            pool.release(b);
+        }
+    }
+}

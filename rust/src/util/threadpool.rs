@@ -2,11 +2,15 @@
 //!
 //! Used by the serving coordinator for worker threads, by data
 //! generation, and — via [`resident_pool`] + [`par_row_chunks_pooled`] —
-//! as the resident scheduler under the tensor GEMM kernels and the
-//! batched Fenwick decoder. Supports fire-and-forget jobs, a scoped
-//! parallel map, and a rayon-style blocking [`ThreadPool::scope`] that
-//! lets non-`'static` work run on resident workers (no per-kernel thread
-//! spawns — the "pooled GEMM workers" item of the roadmap).
+//! as the resident scheduler under the tensor GEMM kernels, the batched
+//! Fenwick decoder, and the sharded decode step's per-shard jobs.
+//! Supports fire-and-forget jobs, a scoped parallel map, and a
+//! rayon-style blocking [`ThreadPool::scope`] that lets non-`'static`
+//! work run on resident workers (no per-kernel thread spawns — the
+//! "pooled GEMM workers" item of the roadmap). Scheduling is
+//! **per-worker run queues with work stealing** ([`Queues`]): `execute`
+//! spreads jobs round-robin, idle workers steal, and shutdown drains
+//! every queue before any worker exits.
 //!
 //! Sync primitives come from [`crate::util::sync`], so a
 //! `RUSTFLAGS="--cfg loom"` build swaps in loom's instrumented doubles
@@ -17,16 +21,57 @@
 //! [`par_row_chunks_pooled`] stand-in so the rest of the crate still
 //! compiles unchanged.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use crate::util::sync::atomic::{AtomicBool, Ordering};
-use crate::util::sync::{mpsc, thread, Arc, Condvar, Mutex};
+use crate::util::sync::{thread, Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-enum Msg {
-    Run(Job),
-    Shutdown,
+/// Scheduler state shared by every worker: **per-worker run queues with
+/// work stealing** behind one mutex (the sharded-serving follow-on to
+/// the old single shared `mpsc` channel). `execute` places jobs
+/// round-robin across the queues; each worker drains its own queue
+/// oldest-first and, when empty, steals the oldest job from its
+/// neighbors' queues (scanning round-robin from its own index). The
+/// single lock keeps the model loom-checkable and no more contended
+/// than the old `Mutex<Receiver>` — the queues buy *placement*
+/// (round-robin spread, stealing keeps stragglers busy), not
+/// lock-freedom. Stealing also closes the lost-wakeup window a
+/// `notify_one` per push would otherwise have: any awake worker can run
+/// any queued job, so a missed notify only ever costs affinity, never
+/// liveness.
+struct Queues {
+    queues: Vec<VecDeque<Job>>,
+    /// Set once by `Drop`; workers exit only when this is set AND every
+    /// queue is empty, so all queued jobs run before shutdown.
+    shutdown: bool,
+}
+
+impl Queues {
+    /// Next job for worker `me`: own queue first (oldest-first), then
+    /// steal the oldest job from the other queues, scanning `me+1..`
+    /// round-robin.
+    fn pop_for(&mut self, me: usize) -> Option<Job> {
+        if let Some(job) = self.queues[me].pop_front() {
+            return Some(job);
+        }
+        let n = self.queues.len();
+        for k in 1..n {
+            if let Some(job) = self.queues[(me + k) % n].pop_front() {
+                return Some(job);
+            }
+        }
+        None
+    }
+}
+
+struct Sched {
+    state: Mutex<Queues>,
+    /// Signalled on every push (`notify_one`) and at shutdown
+    /// (`notify_all`).
+    work: Condvar,
 }
 
 /// Process-unique id per pool so worker threads can be attributed to
@@ -67,46 +112,82 @@ fn spawn_worker(
     thread::spawn(body)
 }
 
-/// Fixed-size pool of worker threads consuming from a shared queue.
+/// Fixed-size pool of worker threads with per-worker run queues and
+/// work stealing (see [`Queues`]).
 pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
-    /// Mutex-wrapped so a `&ThreadPool` can be shared across threads
-    /// (the resident pool is a process-wide static).
-    tx: Mutex<mpsc::Sender<Msg>>,
+    sched: Arc<Sched>,
+    /// Round-robin placement cursor for `execute`. `std::sync::atomic`
+    /// even under loom, like [`POOL_IDS`]: a monotonically increasing
+    /// counter used only to spread placement has no interleaving
+    /// behavior worth modeling (any value is correct — stealing
+    /// rebalances).
+    next: std::sync::atomic::AtomicUsize,
     /// Process-unique pool id; workers stamp it into `CURRENT_POOL`.
     id: usize,
+}
+
+/// One worker's life: pop (own queue, else steal), run, repeat; park on
+/// the condvar when every queue is empty; exit only once shutdown is
+/// flagged AND no queued job remains.
+fn worker_loop(sched: &Sched, me: usize) {
+    loop {
+        let job = {
+            let mut q = sched.state.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_for(me) {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = sched.work.wait(q).unwrap();
+            }
+        };
+        job();
+    }
 }
 
 impl ThreadPool {
     pub fn new(n: usize) -> ThreadPool {
         assert!(n > 0);
         let id = POOL_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let rx = Arc::new(Mutex::new(rx));
+        let sched = Arc::new(Sched {
+            state: Mutex::new(Queues {
+                queues: (0..n).map(|_| VecDeque::new()).collect(),
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+        });
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
-            let rx = Arc::clone(&rx);
+            let sched = Arc::clone(&sched);
             workers.push(spawn_worker(format!("pool{id}-{i}"), move || {
                 CURRENT_POOL.with(|c| c.set(id));
-                loop {
-                    let msg = { rx.lock().unwrap().recv() };
-                    match msg {
-                        Ok(Msg::Run(job)) => job(),
-                        Ok(Msg::Shutdown) | Err(_) => break,
-                    }
-                }
+                worker_loop(&sched, i);
             }));
         }
-        ThreadPool { workers, tx: Mutex::new(tx), id }
+        ThreadPool {
+            workers,
+            sched,
+            next: std::sync::atomic::AtomicUsize::new(0),
+            id,
+        }
     }
 
-    /// Submit a job for asynchronous execution.
+    /// Submit a job for asynchronous execution. Placement is round-robin
+    /// across the per-worker queues; an idle worker whose own queue is
+    /// empty steals it anyway, so placement affects affinity, not
+    /// completion.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx
-            .lock()
-            .unwrap()
-            .send(Msg::Run(Box::new(job)))
-            .expect("pool closed");
+        let slot = self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+            % self.workers.len();
+        {
+            let mut q = self.sched.state.lock().unwrap();
+            assert!(!q.shutdown, "pool closed");
+            q.queues[slot].push_back(Box::new(job));
+        }
+        self.sched.work.notify_one();
     }
 
     /// Is the calling thread one of this pool's own workers?
@@ -228,13 +309,16 @@ impl ThreadPool {
 }
 
 impl Drop for ThreadPool {
+    /// Graceful shutdown: flag, wake everyone, join. Workers exit only
+    /// when the shutdown flag is set AND every run queue has drained
+    /// ([`worker_loop`]), so every job queued before `drop` still runs —
+    /// the ordering contract `tests/loom_threadpool.rs` model-checks.
     fn drop(&mut self) {
         {
-            let tx = self.tx.lock().unwrap();
-            for _ in &self.workers {
-                let _ = tx.send(Msg::Shutdown);
-            }
+            let mut q = self.sched.state.lock().unwrap();
+            q.shutdown = true;
         }
+        self.sched.work.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -410,6 +494,7 @@ where
 #[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
+    use crate::util::sync::mpsc;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
@@ -424,6 +509,33 @@ mod tests {
         }
         drop(pool); // joins workers
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn idle_workers_steal_jobs_queued_behind_a_blocked_worker() {
+        // Round-robin placement parks half the jobs on the queue of a
+        // worker that is busy for the whole test; the idle worker must
+        // steal and run them — placement is affinity, never liveness.
+        let pool = ThreadPool::new(2);
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let (done_tx, done_rx) = mpsc::channel::<usize>();
+        pool.execute(move || {
+            release_rx.recv().unwrap();
+        });
+        for i in 0..8 {
+            let tx = done_tx.clone();
+            pool.execute(move || tx.send(i).unwrap());
+        }
+        let mut got: Vec<usize> = (0..8)
+            .map(|_| {
+                done_rx
+                    .recv_timeout(std::time::Duration::from_secs(10))
+                    .expect("jobs behind the blocked worker were never stolen")
+            })
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<usize>>());
+        release_tx.send(()).unwrap();
     }
 
     #[test]

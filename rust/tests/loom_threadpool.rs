@@ -90,10 +90,12 @@ fn scope_reraises_job_panic_after_sibling_jobs_complete() {
 }
 
 /// Contract 3 — shutdown ordering. Jobs queued with `execute` before the
-/// pool is dropped must all run: `Drop` enqueues one `Shutdown` message
-/// per worker *behind* the queued jobs on the FIFO channel and then
-/// joins, so no interleaving may discard queued work or let a worker
-/// exit past an unprocessed job.
+/// pool is dropped must all run: `Drop` raises the shutdown flag under
+/// the scheduler lock and a worker only exits once the flag is set *and*
+/// every per-worker run queue (its own and every steal target) is empty,
+/// so no interleaving may discard queued work or let a worker exit past
+/// an unprocessed job — including jobs parked on a sibling's queue that
+/// must be stolen on the way out.
 #[test]
 fn shutdown_runs_every_queued_job_before_workers_exit() {
     loom::model(|| {
@@ -105,7 +107,7 @@ fn shutdown_runs_every_queued_job_before_workers_exit() {
                 counter.fetch_add(1, Ordering::SeqCst);
             });
         }
-        drop(pool); // sends Shutdown x2, joins both workers
+        drop(pool); // raises shutdown, wakes all workers, joins both
         assert_eq!(counter.load(Ordering::SeqCst), 2);
     });
 }

@@ -20,7 +20,7 @@ use std::time::Duration;
 use loglinear::coordinator::backend::{PooledBackend, TransitionKind};
 use loglinear::coordinator::batcher::BatchPolicy;
 use loglinear::coordinator::server::DecodeServer;
-use loglinear::coordinator::{GenRequest, ScoreRequest, StreamEvent};
+use loglinear::coordinator::{GenRequest, ScoreRequest, StreamEvent, SubmitError};
 use loglinear::obs;
 use loglinear::util::json::Json;
 use loglinear::util::stats::{ols, scaling_exponent};
@@ -50,9 +50,42 @@ fn traced_mixed_run_exports_chrome_trace_and_flops_grow_logarithmically() {
     srv.submit_score(ScoreRequest { id: 100, tokens: score_tokens }).unwrap();
     // and a long-running generation that gets cancelled mid-flight
     srv.submit(GenRequest { id: 50, prompt: vec![1, 2, 3], max_new: 50 }).unwrap();
+    // duplicate ids are rejected wherever the original is live — the
+    // generation queue, the score queue, and across request kinds
+    // (stream events, timelines, and cancel all key on the id, so a
+    // duplicate would make them ambiguous). Rejection happens before
+    // the Submit hook fires, so these leave no trace events and the
+    // timeline / queue-wait assertions below stay exact.
+    assert_eq!(
+        srv.submit(GenRequest { id: 2, prompt: vec![4, 5], max_new: 1 }),
+        Err(SubmitError::DuplicateId),
+        "id 2 is queued for generation"
+    );
+    assert_eq!(
+        srv.submit_score(ScoreRequest { id: 100, tokens: vec![1, 2, 3] }),
+        Err(SubmitError::DuplicateId),
+        "id 100 is queued for scoring"
+    );
+    assert_eq!(
+        srv.submit(GenRequest { id: 100, prompt: vec![9], max_new: 1 }),
+        Err(SubmitError::DuplicateId),
+        "liveness is checked across kinds: a queued score id blocks a gen"
+    );
+    assert_eq!(
+        srv.submit_score(ScoreRequest { id: 50, tokens: vec![7, 8] }),
+        Err(SubmitError::DuplicateId),
+        "liveness is checked across kinds: a queued gen id blocks a score"
+    );
     for _ in 0..8 {
         srv.step().unwrap();
     }
+    // ...and ids stay reserved once admitted and mid-decode, not just
+    // while queued
+    assert_eq!(
+        srv.submit(GenRequest { id: 50, prompt: vec![1], max_new: 1 }),
+        Err(SubmitError::DuplicateId),
+        "id 50 is mid-generation"
+    );
     let mut stream = srv.take_stream_events();
     assert!(srv.cancel(50), "id 50 must be live to cancel");
     let mut guard = 0;

@@ -1,0 +1,33 @@
+//! Known-bad fixture: a `HashMap` tracking shard-local blocks in a
+//! state-path module (linted under `src/state/`). The lint must fire on
+//! every `HashMap` mention in code — the `use` line, the field, and the
+//! iteration below — and on nothing else.
+//!
+//! This is the sharding-specific shape of the determinism bug class:
+//! `BlockId`s are shard-local (the same id names different blocks in
+//! different shards), so per-shard accounting is tempting to hash — but
+//! draining shards in hash-iteration order would reorder block release
+//! and job dispatch between two identical runs, and the differential
+//! trace harness could no longer promise bit-exact replays at every
+//! shard count. Per-shard `Vec`s indexed by shard id (what
+//! `ShardedStatePool` actually does) or a `BTreeMap` keep the order
+//! deterministic.
+
+use std::collections::HashMap;
+
+pub struct ShardBlockIndex {
+    /// blocks currently charged to each shard — nondeterministic to walk
+    pub per_shard: HashMap<usize, Vec<usize>>,
+}
+
+impl ShardBlockIndex {
+    pub fn drain_order(&self) -> Vec<(usize, usize)> {
+        let mut order = Vec::new();
+        for (&shard, blocks) in self.per_shard.iter() {
+            for &b in blocks {
+                order.push((shard, b));
+            }
+        }
+        order
+    }
+}

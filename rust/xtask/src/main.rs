@@ -40,6 +40,12 @@ const FIXTURES: &[(&str, &str, &[&str], &str)] = &[
         include_str!("../fixtures/hash_iteration.rs"),
     ),
     (
+        "shard_local_hashmap.rs",
+        "src/state/shard_local_hashmap.rs",
+        &["determinism"],
+        include_str!("../fixtures/shard_local_hashmap.rs"),
+    ),
+    (
         "unpaired_retain.rs",
         "src/state/unpaired_retain.rs",
         &["refcount"],
