@@ -30,7 +30,7 @@
 
 use loglinear::bench::{bench, section};
 use loglinear::coordinator::backend::{DecodeBackend, PooledBackend, SeqSlot, TransitionKind};
-use loglinear::state::pool::StatePool;
+use loglinear::state::pool::{Precision, StatePool};
 use loglinear::state::pooled::{BatchedDecoder, PooledFenwickState};
 use loglinear::state::{AdvanceJob, BatchedAdvance, FenwickState, Transition};
 use loglinear::tensor;
@@ -38,6 +38,50 @@ use loglinear::util::json::Json;
 use loglinear::util::Rng;
 
 const OUT_PATH: &str = "BENCH_decode.json";
+
+/// A/B the batched read path with the SIMD microkernels forced off vs the
+/// runtime-dispatched kernels (docs/PRECISION.md). The two modes must be
+/// bit-identical *before* anything is timed — the SIMD kernels are drop-in
+/// replacements, not approximations — so the speedup is pure substrate.
+/// Returns `(simd_speedup_vs_scalar, dispatch_mode)`.
+#[cfg(feature = "simd")]
+fn simd_read_ab(b: usize, dk: usize, dv: usize, base_pos: usize) -> (f64, &'static str) {
+    use loglinear::tensor::simd;
+    let mode = if simd::runtime_available() { "avx2" } else { "portable" };
+    let fx = build(b, dk, dv, base_pos);
+    let mut dec = BatchedDecoder::new();
+    let refs: Vec<&PooledFenwickState> = fx.pooled.iter().collect();
+    let lambdas: Vec<&[f32]> = vec![&fx.lambda[..]; b];
+    let (mut got_scalar, mut got_simd) = (vec![0.0f32; b * dv], vec![0.0f32; b * dv]);
+    simd::set_forced_scalar(true);
+    dec.read_batch(&fx.pool, &refs, &fx.qs, &lambdas, &mut got_scalar);
+    simd::set_forced_scalar(false);
+    dec.read_batch(&fx.pool, &refs, &fx.qs, &lambdas, &mut got_simd);
+    for (i, (a, c)) in got_scalar.iter().zip(&got_simd).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            c.to_bits(),
+            "SIMD read diverged from the scalar oracle (B={b}, elem {i})"
+        );
+    }
+    simd::set_forced_scalar(true);
+    let r_scalar = bench(&format!("forced-scalar batched read/B={b}"), 0.25, || {
+        dec.read_batch(&fx.pool, &refs, &fx.qs, &lambdas, &mut got_scalar);
+        std::hint::black_box(&got_scalar);
+    });
+    simd::set_forced_scalar(false);
+    let r_simd = bench(&format!("dispatched batched read/B={b} ({mode})"), 0.25, || {
+        dec.read_batch(&fx.pool, &refs, &fx.qs, &lambdas, &mut got_simd);
+        std::hint::black_box(&got_simd);
+    });
+    (r_scalar.secs.mean / r_simd.secs.mean, mode)
+}
+
+#[cfg(not(feature = "simd"))]
+fn simd_read_ab(_b: usize, _dk: usize, _dv: usize, _base_pos: usize) -> (f64, &'static str) {
+    println!("  simd feature disabled: the scalar kernels are the only path; speedup is 1.0");
+    (1.0, "off")
+}
 
 /// One batch's fixture: the same sequences held twice — as Mat-backed
 /// `FenwickState`s (the per-sequence matvec-loop baseline) and as
@@ -297,6 +341,79 @@ fn main() {
         shard_rows.push((shards, pipelined, r.secs.mean));
     }
 
+    // ---- SIMD microkernels: forced-scalar vs dispatched A/B -----------
+    section("SIMD microkernels: forced-scalar vs dispatched batched read — simd_speedup_vs_scalar");
+    let simd_b = *batches.last().unwrap();
+    let (simd_speedup_vs_scalar, simd_mode) = simd_read_ab(simd_b, dk, dv, base_pos);
+    println!("  dispatch mode: {simd_mode}  simd_speedup_vs_scalar: {simd_speedup_vs_scalar:.2}x");
+
+    // ---- bf16 state slab: bytes/seq and pooled-read tolerance ---------
+    // Twin fixtures advanced through the identical mixed Mamba-2/GDN
+    // trace, one pool per precision. The bf16 slab halves the resident
+    // bytes per sequence (asserted >= 1.9x below; the pool stores blocks
+    // at 2 bytes/elem) while reads stay within the documented tolerance
+    // of the f32 oracle (docs/PRECISION.md).
+    section("bf16 state slab: state_bytes_per_seq and read tolerance vs f32");
+    let bf16_b = if quick { 4 } else { 8 };
+    let (f32_bytes_per_seq, bf16_bytes_per_seq, bf16_reduction, bf16_worst_rel) = {
+        let mut rng = Rng::new(0xB16B00);
+        let lambda: Vec<f32> = (0..24).map(|l| 1.0 / (l as f32 + 1.0)).collect();
+        let cap = bf16_b * 16;
+        let mut pool_f = StatePool::new(dk * dv, cap);
+        let mut pool_h = StatePool::with_precision(dk * dv, cap, Precision::Bf16);
+        let mut seqs_f: Vec<PooledFenwickState> = Vec::new();
+        let mut seqs_h: Vec<PooledFenwickState> = Vec::new();
+        for i in 0..bf16_b {
+            let mut k: Vec<f32> = (0..dk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let n = loglinear::tensor::ops::l2_norm(&k).max(1e-6);
+            k.iter_mut().for_each(|x| *x /= n);
+            let v: Vec<f32> = (0..dv).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut sf = PooledFenwickState::new(dk, dv);
+            let mut sh = PooledFenwickState::new(dk, dv);
+            for t in 0..base_pos + 137 * i {
+                let (ws, tr) = if t % 2 == 0 {
+                    (1.0, Transition::Decay(0.999))
+                } else {
+                    (0.5, Transition::GatedHouseholder { alpha: 0.999, beta: 0.5, k: &k })
+                };
+                sf.advance(&mut pool_f, &k, &v, ws, tr).expect("pool sized for the trace");
+                sh.advance(&mut pool_h, &k, &v, ws, tr).expect("pool sized for the trace");
+            }
+            seqs_f.push(sf);
+            seqs_h.push(sh);
+        }
+        let q: Vec<f32> = (0..dk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (mut of, mut oh) = (vec![0.0f32; dv], vec![0.0f32; dv]);
+        let mut worst_rel = 0.0f32;
+        for i in 0..bf16_b {
+            seqs_f[i].read_into(&pool_f, &q, &lambda, &mut of);
+            seqs_h[i].read_into(&pool_h, &q, &lambda, &mut oh);
+            for (a, c) in of.iter().zip(&oh) {
+                let rel = (a - c).abs() / (1.0 + a.abs());
+                assert!(
+                    rel <= 0.05,
+                    "bf16 pooled read outside tolerance (seq {i}: rel {rel:.4})"
+                );
+                worst_rel = worst_rel.max(rel);
+            }
+        }
+        let bytes_f = pool_f.in_use() * pool_f.bytes_per_block();
+        let bytes_h = pool_h.in_use() * pool_h.bytes_per_block();
+        assert_eq!(pool_f.in_use(), pool_h.in_use(), "precision changed pool occupancy");
+        let per_f = bytes_f as f64 / bf16_b as f64;
+        let per_h = bytes_h as f64 / bf16_b as f64;
+        let reduction = per_f / per_h;
+        assert!(
+            reduction >= 1.9,
+            "bf16 slab must cut state bytes/seq by >= 1.9x (got {reduction:.2}x)"
+        );
+        println!(
+            "  state_bytes_per_seq: f32 {per_f:.0} B  bf16 {per_h:.0} B  \
+             reduction {reduction:.2}x  worst read rel err {worst_rel:.2e}"
+        );
+        (per_f, per_h, reduction, worst_rel)
+    };
+
     section("ns per sequence-token (read path) and batched speedup");
     println!("{:>6} {:>16} {:>16} {:>10}", "B", "per-seq ns/tok", "batched ns/tok", "speedup");
     let mut speedup_rows: Vec<(usize, f64, f64, f64)> = Vec::new();
@@ -416,7 +533,17 @@ fn main() {
         .set("batched_speedup", Json::Arr(batched_speedup))
         .set("advance_speedup_vs_per_seq", Json::Arr(advance_speedup))
         .set("sharded_step", Json::Arr(shard_points))
-        .set("shard_speedup_vs_single", Json::Arr(shard_speedups));
+        .set("shard_speedup_vs_single", Json::Arr(shard_speedups))
+        .set("simd_dispatch", simd_mode)
+        .set("simd_speedup_vs_scalar", simd_speedup_vs_scalar)
+        .set(
+            "state_bytes_per_seq",
+            Json::obj()
+                .set("f32", f32_bytes_per_seq)
+                .set("bf16", bf16_bytes_per_seq)
+                .set("reduction_vs_f32", bf16_reduction)
+                .set("bf16_worst_read_rel_err", bf16_worst_rel as f64),
+        );
     if !prev_speedups.is_empty() {
         doc = doc.set("speedup_vs_previous", Json::Arr(prev_speedups));
     }

@@ -265,6 +265,62 @@ fn score_prompt(b: &mut PooledBackend, tokens: &[i32]) -> Vec<f32> {
     lps
 }
 
+/// A/B the chunkwise ingest with the SIMD microkernels forced off vs the
+/// runtime-dispatched kernels (docs/PRECISION.md). Boundary states are
+/// asserted bit-identical across the two modes *before* anything is
+/// timed. Returns `(simd_speedup_vs_scalar, dispatch_mode)`.
+#[cfg(feature = "simd")]
+fn simd_ingest_ab(fx: &Fixture, ws: &mut Workspace) -> (f64, &'static str) {
+    use loglinear::tensor::simd;
+    let mode = if simd::runtime_available() { "avx2" } else { "portable" };
+    let (dk, dv) = (fx.dk, fx.dv);
+    let mut pool_s = StatePool::new(dk * dv, fx.heads * 16);
+    let mut pool_d = StatePool::new(dk * dv, fx.heads * 16);
+    simd::set_forced_scalar(true);
+    let a = fx.ingest_chunkwise(false, ws, &mut pool_s);
+    simd::set_forced_scalar(false);
+    let b = fx.ingest_chunkwise(false, ws, &mut pool_d);
+    let (mut oa, mut ob) = (vec![0.0f32; dv], vec![0.0f32; dv]);
+    for h in 0..fx.heads {
+        a[h].read_into(&pool_s, fx.qs[h].row(0), &fx.lambda, &mut oa);
+        b[h].read_into(&pool_d, fx.qs[h].row(0), &fx.lambda, &mut ob);
+        for (x, y) in oa.iter().zip(&ob) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "SIMD chunkwise ingest diverged from the scalar oracle (head {h})"
+            );
+        }
+    }
+    for mut s in a {
+        s.release(&mut pool_s);
+    }
+    for mut s in b {
+        s.release(&mut pool_d);
+    }
+    simd::set_forced_scalar(true);
+    let r_s = bench("forced-scalar chunkwise ingest/loglinear_mamba2", 0.3, || {
+        let seqs = fx.ingest_chunkwise(false, ws, &mut pool_s);
+        for mut s in seqs {
+            s.release(&mut pool_s);
+        }
+    });
+    simd::set_forced_scalar(false);
+    let r_d = bench(&format!("dispatched chunkwise ingest/loglinear_mamba2 ({mode})"), 0.3, || {
+        let seqs = fx.ingest_chunkwise(false, ws, &mut pool_d);
+        for mut s in seqs {
+            s.release(&mut pool_d);
+        }
+    });
+    (r_s.secs.mean / r_d.secs.mean, mode)
+}
+
+#[cfg(not(feature = "simd"))]
+fn simd_ingest_ab(_fx: &Fixture, _ws: &mut Workspace) -> (f64, &'static str) {
+    println!("  simd feature disabled: the scalar kernels are the only path; speedup is 1.0");
+    (1.0, "off")
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -307,6 +363,11 @@ fn main() {
         });
         rows.push((variant.into(), "chunkwise".into(), r.secs.mean));
     }
+
+    // ---- SIMD microkernels: forced-scalar vs dispatched ingest --------
+    section("SIMD microkernels: forced-scalar vs dispatched chunkwise ingest — simd_speedup_vs_scalar");
+    let (simd_speedup_vs_scalar, simd_mode) = simd_ingest_ab(&fx, &mut ws);
+    println!("  dispatch mode: {simd_mode}  simd_speedup_vs_scalar: {simd_speedup_vs_scalar:.2}x");
 
     // ---- sequential L-layer stack mode ----
     let stack_layers = 2usize;
@@ -629,6 +690,8 @@ fn main() {
         .set("chunk", c)
         .set("prompt_tokens", t)
         .set("speedup_vs_token_by_token", headline)
+        .set("simd_dispatch", simd_mode)
+        .set("simd_speedup_vs_scalar", simd_speedup_vs_scalar)
         .set("score_tokens_per_s", score_tps)
         .set("score_speedup_vs_token_by_token", score_speedup)
         .set("score_prompt_tokens", s_t)

@@ -13,6 +13,7 @@
 //! | *serving features* (log-linear rows) | per-token streaming + mid-flight cancel | — | — | CoW prefix-state cache (shared prefixes admitted from cached boundaries) | ✓ rides the same chunk outputs, rows streamed as chunks land |
 //! | *sharded serving* (log-linear rows) | sharded state pool, sequences pinned at admission (**docs/SHARDING.md**) | — | — | per-shard prefix caches, cross-shard probe | pipelined L-layer decode, bit-exact at shards {1, 2, 4} × pipelining on/off |
 //! | *observability* (whole serving stack) | zero-alloc span recorder ([`crate::obs`]) | — | — | per-chunk spans + GEMM flop accounting (O(log T) flops/token observable) | per-request timelines, TTFT/inter-token histograms, Chrome-trace export |
+//! | *substrate precision* (whole serving stack) | bf16 state slab: 2 bytes/elem storage, f32 accumulate, reads within the **docs/PRECISION.md** tolerance (2× sequences per pool) | — | — | AVX2 SIMD microkernels (`--features simd`, runtime-detected), bit-exact vs the scalar oracle at f32 | log-probs bit-exact at any pool precision (scoring never touches the pool) |
 //!
 //! The serving-features row is the production surface over the two
 //! log-linear rows: chunk-boundary hierarchies are snapshotted into a

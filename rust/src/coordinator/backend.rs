@@ -57,7 +57,7 @@ use crate::prefill::stack::{normalize_keys, LayerProjection, LayerStack};
 use crate::prefill::Workspace;
 use crate::runtime::{ModelHandle, Runtime};
 use crate::state::batched_advance::bucket_feasible;
-use crate::state::pool::StatePool;
+use crate::state::pool::{Precision, StatePool};
 use crate::state::pooled::{blocks_for_steps, BatchedDecoder, PooledFenwickState};
 use crate::state::prefix_cache::{BoundaryStates, PrefixCache};
 use crate::state::sharded::ShardedStatePool;
@@ -598,6 +598,36 @@ impl PooledBackend {
             self.pool.enable_prefix_cache(self.prefill_chunk);
         }
         self.engines = (0..n).map(|_| ShardEngine::default()).collect();
+    }
+
+    /// Switch the serving substrate's storage precision (docs/PRECISION.md):
+    /// [`Precision::F32`] (the default, bit-exact with the oracle replay)
+    /// or [`Precision::Bf16`] (state-pool bytes per sequence halved;
+    /// logits match the f32 oracle within the documented relative-error
+    /// bound, not bitwise). Rebuilds every shard's pool at the same
+    /// geometry, so — like [`PooledBackend::set_shards`] — it is only
+    /// legal while no sequence is resident and no pool block is live;
+    /// cache *contents* do not survive (cached block payloads are stored
+    /// at pool precision, so entries from one mode must not seed the
+    /// other).
+    pub fn set_precision(&mut self, precision: Precision) {
+        assert!(
+            self.slots.iter().all(|s| s.is_none()),
+            "set_precision with live sequences resident"
+        );
+        let cache_enabled = self.pool.cache_enabled();
+        self.pool.clear_caches();
+        assert_eq!(self.pool.in_use(), 0, "set_precision with pool blocks live");
+        let (n, per) = (self.pool.n_shards(), self.pool.shard_capacity());
+        self.pool = ShardedStatePool::with_precision(self.dk * self.dv, per, n, precision);
+        if cache_enabled {
+            self.pool.enable_prefix_cache(self.prefill_chunk);
+        }
+    }
+
+    /// The serving substrate's storage precision.
+    pub fn precision(&self) -> Precision {
+        self.pool.precision()
     }
 
     /// Switch the decode step between the per-layer barrier (off, the
@@ -1561,11 +1591,26 @@ impl DecodeBackend for PooledBackend {
             // server feed the remaining chunks
             Some((m, states)) => {
                 let z = m / self.prefill_chunk;
-                let views: Vec<Vec<(usize, &[f32])>> = states
+                // boundary reads go through the widening accessor so a
+                // bf16 pool seeds the (always-f32) stack correctly; on an
+                // f32 pool the copy is bitwise, so resumed prefill stays
+                // bit-exact with a cold run
+                let elems = self.dk * self.dv;
+                let owned: Vec<Vec<(usize, Vec<f32>)>> = states
                     .iter()
                     .map(|per| {
-                        per.iter().map(|&(lvl, id)| (lvl, self.pool.shard(shard).get(id))).collect()
+                        per.iter()
+                            .map(|&(lvl, id)| {
+                                let mut buf = vec![0.0f32; elems];
+                                self.pool.shard(shard).read_block_into(id, &mut buf);
+                                (lvl, buf)
+                            })
+                            .collect()
                     })
+                    .collect();
+                let views: Vec<Vec<(usize, &[f32])>> = owned
+                    .iter()
+                    .map(|per| per.iter().map(|(lvl, buf)| (*lvl, buf.as_slice())).collect())
                     .collect();
                 let stack = LayerStack::from_boundary(
                     self.layers,
@@ -1874,7 +1919,10 @@ impl DecodeBackend for PooledBackend {
                 SeqState::Decoding(_) => 0,
             })
             .sum();
-        self.pool.in_use() * self.pool.block_elems() * 4 + off_pool
+        // pool bytes follow the storage precision: 4 bytes/elem at f32,
+        // 2 at bf16 — the `state_bytes_per_seq` headline's denominator
+        self.pool.in_use() * self.pool.block_elems() * self.pool.precision().bytes_per_elem()
+            + off_pool
     }
 }
 
@@ -2042,6 +2090,61 @@ mod tests {
             let again = serve(&mut b, 13, &fed, 12);
             assert_rows_bit_eq(&again, &oracle_long, "repeat full hit");
         }
+    }
+
+    /// bf16 serving lock at the backend interface: the same request
+    /// served off an f32 pool and a bf16 pool ([`PooledBackend::set_precision`])
+    /// produces logits within the documented relative-error bound of each
+    /// other (docs/PRECISION.md), pool bytes per block halve, and
+    /// retirement drains both pools to zero. Also pins that prefix-cache
+    /// hits keep working across the precision boundary: cached bf16
+    /// boundary blocks widen on adoption.
+    #[test]
+    fn bf16_precision_serves_within_tolerance_and_halves_pool_bytes() {
+        for kind in [TransitionKind::Mamba2, TransitionKind::Gdn] {
+            let mut rng = Rng::new(0xBF16);
+            let fed: Vec<i32> = (0..16).map(|_| rng.below(32) as i32).collect();
+            let mut b32 =
+                PooledBackend::with_model_config(32, 2, 2, kind, 6, 6, 4, 4096, 0xCAFE);
+            let mut b16 =
+                PooledBackend::with_model_config(32, 2, 2, kind, 6, 6, 4, 4096, 0xCAFE);
+            b16.set_precision(Precision::Bf16);
+            assert_eq!(b16.precision(), Precision::Bf16);
+            assert_eq!(b32.precision(), Precision::F32);
+            assert_eq!(
+                b16.pool().shard(0).bytes_per_block() * 2,
+                b32.pool().shard(0).bytes_per_block(),
+                "bf16 halves pool bytes per block"
+            );
+            let want = serve(&mut b32, 13, &fed, 0);
+            let got = serve(&mut b16, 13, &fed, 0);
+            assert_eq!(got.len(), want.len());
+            for (row_g, row_w) in got.iter().zip(&want) {
+                for (g, w) in row_g.iter().zip(row_w) {
+                    let rel = (g - w).abs() / (1.0 + w.abs());
+                    assert!(rel <= 0.05, "{kind:?}: bf16 logit {g} vs f32 {w} (rel {rel})");
+                }
+            }
+            assert_eq!(b16.pool().in_use(), 0, "bf16 pool drained after retire");
+
+            // prefix-cache round trip at bf16: publish, then full-hit
+            b16.enable_prefix_cache();
+            let cold = serve(&mut b16, 13, &fed, 0);
+            let hit = serve(&mut b16, 13, &fed, 12);
+            assert_rows_bit_eq(
+                &hit,
+                &cold.iter().enumerate().map(|(i, r)| (i, r.clone())).collect::<Vec<_>>(),
+                "bf16 full cache hit replays the published boundary bitwise",
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "set_precision with live sequences resident")]
+    fn set_precision_refuses_resident_sequences() {
+        let mut b = PooledBackend::with_config(32, 1, 4, 4, 0, 64, 7);
+        let _slot = b.admit(4).unwrap();
+        b.set_precision(Precision::Bf16);
     }
 
     /// A single-layer sequential model must reproduce the pre-sequential

@@ -24,6 +24,13 @@
 //! bit-exact against [`PooledBackend::oracle_score_logprobs`] — the
 //! one-shot replay of the same chunk/tail scoring split.
 //!
+//! Traces also randomly arm the **bf16 state slab**
+//! ([`crate::state::pool::Precision::Bf16`]): decode rows are then held
+//! to the [`BF16_TRACE_TOL`] relative-error bar instead of bit-exactness
+//! (storage narrowing is the one sanctioned divergence — docs/PRECISION.md
+//! derives the bound), while scoring, which never touches the pool, stays
+//! bit-exact. The pinned heavy grid runs in both precisions.
+//!
 //! Why bit-exactness is the right bar: every serving-side batching —
 //! the pool-wide [`crate::state::BatchedAdvance`], the block-sparse
 //! [`crate::state::BatchedDecoder`] read, the per-layer projection GEMMs,
@@ -43,6 +50,7 @@ use crate::coordinator::backend::{PooledBackend, TransitionKind};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::server::DecodeServer;
 use crate::coordinator::{GenRequest, ScoreRequest, ScoreResult};
+use crate::state::pool::Precision;
 use crate::state::pooled::blocks_for_steps;
 use crate::state::GateTable;
 use crate::tensor::Mat;
@@ -50,6 +58,18 @@ use crate::util::prop::{check, Pair, UsizeIn};
 use crate::util::Rng;
 
 const VOCAB: usize = 24;
+
+/// Relative-error bound for bf16-pool traces, against the f32 oracle
+/// replay: `|got − want| / (1 + |want|) ≤ 0.05`. docs/PRECISION.md
+/// derives the bound — per-step narrowing injects at most one unit
+/// roundoff `u = 2⁻⁹` per stored element, the Fenwick merge tree
+/// compounds ~`log₂ T + 2` narrowings per contribution, and the
+/// projection/logits GEMMs amplify by the layer stack's modest condition
+/// number; 0.05 covers the harness's deepest configuration (3 layers ×
+/// 2 heads, multi-chunk prompts) with an order-of-magnitude margin.
+/// F32-pool traces keep the zero-tolerance bar: `tol = None` below means
+/// bit-exact.
+const BF16_TRACE_TOL: f32 = 0.05;
 
 /// Build a randomized single-head gate table (per-token α/λ, per-token β)
 /// from `rng`.
@@ -65,14 +85,20 @@ fn random_head_table(rng: &mut Rng) -> GateTable {
 /// per-sequence oracle replay — THE differential assertion, shared by the
 /// randomized property and the pinned heavy traces so both enforce the
 /// identical contract. `tokens` are the request's sampled completions
-/// (`fed` = prompt + all but the last, which is never fed back). `Err`
-/// describes the first divergence.
+/// (`fed` = prompt + all but the last, which is never fed back). `tol`
+/// selects the comparison mode: `None` is the bit-exact bar (f32 pools —
+/// every serving batching is the same primitive ops in the same order as
+/// the oracle), `Some(bound)` the relative-error bar
+/// `|got − want| / (1 + |want|) ≤ bound` (bf16 pools, where storage
+/// narrowing is the one sanctioned divergence; see [`BF16_TRACE_TOL`]).
+/// `Err` describes the first divergence.
 fn compare_to_oracle(
     backend: &PooledBackend,
     prompt: &[i32],
     id: u64,
     tokens: &[i32],
     captured: &[(u64, usize, Vec<f32>)],
+    tol: Option<f32>,
 ) -> Result<(), String> {
     let mut fed = prompt.to_vec();
     fed.extend_from_slice(&tokens[..tokens.len() - 1]);
@@ -94,12 +120,27 @@ fn compare_to_oracle(
         if got_pos != want_pos {
             return Err(format!("req {id}: row at pos {got_pos}, oracle at {want_pos}"));
         }
-        if *got != &want[..] {
-            let j = got.iter().zip(want.iter()).position(|(a, b)| a != b).unwrap();
-            return Err(format!(
-                "req {id}: logits not bit-exact at pos {got_pos} (vocab {j}: {} vs {})",
-                got[j], want[j]
-            ));
+        match tol {
+            None => {
+                if *got != &want[..] {
+                    let j = got.iter().zip(want.iter()).position(|(a, b)| a != b).unwrap();
+                    return Err(format!(
+                        "req {id}: logits not bit-exact at pos {got_pos} (vocab {j}: {} vs {})",
+                        got[j], want[j]
+                    ));
+                }
+            }
+            Some(bound) => {
+                for (j, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                    let rel = (g - w).abs() / (1.0 + w.abs());
+                    if !(rel <= bound) {
+                        return Err(format!(
+                            "req {id}: logits out of tolerance at pos {got_pos} \
+                             (vocab {j}: {g} vs {w}, rel {rel} > {bound})"
+                        ));
+                    }
+                }
+            }
         }
     }
     Ok(())
@@ -171,6 +212,12 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
     // order is the same as the unsharded path)
     let shards = [1usize, 2, 4][rng.below(3)];
     let pipelined = rng.chance(0.5);
+    // the bf16 state slab rides along on some traces: decode rows are
+    // then held to the relative-error bar instead of bit-exactness
+    // (storage narrowing is the one sanctioned divergence); scoring never
+    // touches the pool, so served log-probs stay bit-exact either way
+    let bf16 = rng.chance(0.25);
+    let tol = if bf16 { Some(BF16_TRACE_TOL) } else { None };
 
     // requests first, so the pool can be sized *near exhaustion*:
     // large enough for the biggest single request (no TooLarge), small
@@ -222,6 +269,9 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
     );
     backend.set_shards(shards);
     backend.set_pipelined(pipelined);
+    if bf16 {
+        backend.set_precision(Precision::Bf16);
+    }
     // gate schedules: default fixed, shared per-token, or per-head
     // per-token — per layer
     for l in 0..layers {
@@ -284,7 +334,8 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
     let ctx = |e: String| {
         format!(
             "{e} (kind {kind:?}, layers {layers}, heads {heads}, chunk {prefill_chunk}, \
-             cache {use_cache}, pool {pool_blocks}, shards {shards}, pipelined {pipelined})"
+             cache {use_cache}, pool {pool_blocks}, shards {shards}, pipelined {pipelined}, \
+             bf16 {bf16})"
         )
     };
     for r in &reqs {
@@ -292,7 +343,8 @@ fn run_trace(seed: u64, nreq: usize, max_prompt: usize) -> Result<(), String> {
         if res.tokens.len() != r.max_new {
             return Err(format!("req {}: {} of {} tokens", r.id, res.tokens.len(), r.max_new));
         }
-        compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured).map_err(&ctx)?;
+        compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured, tol)
+            .map_err(&ctx)?;
     }
     compare_scores_to_oracle(srv.backend(), &score_reqs, &score_results).map_err(&ctx)?;
     Ok(())
@@ -332,10 +384,30 @@ fn serving_trace_logits_match_oracle_replay_property() {
 /// self-consistent.
 #[test]
 fn serving_trace_differential_pinned_heavy_modes() {
+    serving_trace_heavy_grid(Precision::F32);
+}
+
+/// The same pinned heavy traces on the bf16 state slab: every cell of the
+/// shard × pipelining grid, both transition families (the pinned seeds 11
+/// and 12 are the Mamba-2 and GDN bf16 tolerance anchors the PRECISION
+/// docs cite), held to the [`BF16_TRACE_TOL`] relative-error bar against
+/// the same f32 per-sequence oracle — with the same zero-leaked-blocks
+/// drain at the end of every cell.
+#[test]
+fn serving_trace_differential_pinned_heavy_modes_bf16() {
+    serving_trace_heavy_grid(Precision::Bf16);
+}
+
+fn serving_trace_heavy_grid(precision: Precision) {
+    let tol = match precision {
+        Precision::F32 => None,
+        Precision::Bf16 => Some(BF16_TRACE_TOL),
+    };
     for (seed, kind) in [(11u64, TransitionKind::Mamba2), (12, TransitionKind::Gdn)] {
         for shards in [1usize, 2, 4] {
             for pipelined in [false, true] {
-                let grid = format!("{kind:?}, shards {shards}, pipelined {pipelined}");
+                let grid =
+                    format!("{kind:?}, shards {shards}, pipelined {pipelined}, {precision:?}");
                 let mut rng = Rng::new(seed);
                 let (layers, heads, dk, dv, chunk) = (3usize, 2usize, 8usize, 8usize, 4usize);
                 let reqs: Vec<GenRequest> = (0..10)
@@ -379,6 +451,7 @@ fn serving_trace_differential_pinned_heavy_modes() {
                 );
                 backend.set_shards(shards);
                 backend.set_pipelined(pipelined);
+                backend.set_precision(precision);
                 for l in 0..layers {
                     backend.set_layer_gates(
                         l,
@@ -411,9 +484,14 @@ fn serving_trace_differential_pinned_heavy_modes() {
                 assert_eq!(results.len(), reqs.len(), "{grid}");
                 for r in &reqs {
                     let res = &results[&r.id];
-                    if let Err(e) =
-                        compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured)
-                    {
+                    if let Err(e) = compare_to_oracle(
+                        srv.backend(),
+                        &r.prompt,
+                        r.id,
+                        &res.tokens,
+                        &captured,
+                        tol,
+                    ) {
                         panic!("{e} ({grid})");
                     }
                 }
@@ -565,7 +643,7 @@ fn run_shared_prefix_trace(seed: u64, kind: TransitionKind, mode: CacheMode) -> 
         if res.tokens.len() != r.max_new {
             return Err(format!("req {}: {} of {} tokens", r.id, res.tokens.len(), r.max_new));
         }
-        compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured)?;
+        compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured, None)?;
     }
     // the cache's refcounted boundary states are the only blocks allowed
     // to outlive retirement; clearing the cache must drain the pool
@@ -654,7 +732,9 @@ fn trace_ready_rows_strictly_between_bucket_sizes() {
     for r in &reqs {
         let res = &results[&r.id];
         assert_eq!(res.tokens.len(), r.max_new, "req {}", r.id);
-        if let Err(e) = compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured) {
+        if let Err(e) =
+            compare_to_oracle(srv.backend(), &r.prompt, r.id, &res.tokens, &captured, None)
+        {
             panic!("{e}");
         }
     }

@@ -299,6 +299,53 @@ mod tests {
         }
     }
 
+    /// The bridge is precision-agnostic: `import_levels` narrows the
+    /// exported chunk states when the destination pool stores bf16, and
+    /// the resulting decode stays within the documented tolerance of the
+    /// f32-pool export (docs/PRECISION.md) at half the resident bytes.
+    #[test]
+    fn export_into_bf16_pool_decodes_within_tolerance() {
+        use crate::state::pool::Precision;
+        let mut rng = Rng::new(0xB44D);
+        let (dk, dv, c, chunks) = (8usize, 6usize, 8usize, 5usize);
+        let t0 = chunks * c;
+        let t_len = t0 + 7;
+        let x = AttnInputs::random(t_len, dk, dv, &mut rng);
+        let eng = ingest_chunks_mamba2(&x.k, &x.v, &x.alpha, c, chunks);
+
+        let mut pool_f = StatePool::new(dk * dv, 32);
+        let mut pool_h = StatePool::with_precision(dk * dv, 32, Precision::Bf16);
+        assert_eq!(pool_f.bytes_per_block(), 2 * pool_h.bytes_per_block());
+        let mut seq_f = export_chunk_fenwick(&eng, chunks, c, dk, dv, &mut pool_f).unwrap();
+        let mut seq_h = export_chunk_fenwick(&eng, chunks, c, dk, dv, &mut pool_h).unwrap();
+        assert_eq!(seq_h.t, t0);
+        assert_eq!(seq_h.live_states(), chunks.count_ones() as usize);
+
+        for t in t0..t_len {
+            let step = |seq: &mut PooledFenwickState, pool: &mut StatePool| {
+                seq.step(
+                    pool,
+                    x.q.row(t),
+                    x.k.row(t),
+                    x.v.row(t),
+                    1.0,
+                    Transition::Decay(x.alpha[t]),
+                    x.lambda.row(t),
+                )
+                .unwrap()
+            };
+            let o_f = step(&mut seq_f, &mut pool_f);
+            let o_h = step(&mut seq_h, &mut pool_h);
+            for j in 0..dv {
+                let rel = (o_f[j] - o_h[j]).abs() / (1.0 + o_f[j].abs());
+                assert!(rel <= 0.05, "t={t} j={j}: bf16 export drifted ({} vs {})", o_h[j], o_f[j]);
+            }
+        }
+        seq_f.release(&mut pool_f);
+        seq_h.release(&mut pool_h);
+        assert_eq!((pool_f.in_use(), pool_h.in_use()), (0, 0));
+    }
+
     #[test]
     fn export_fails_cleanly_on_pool_exhaustion() {
         let mut rng = Rng::new(0xB43D);

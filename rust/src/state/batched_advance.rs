@@ -62,9 +62,11 @@
 //! plan's shared/private split is a conservative bound.
 
 use crate::fenwick;
-use crate::state::pool::{BlockId, StatePool};
+use crate::state::pool::{BlockId, Precision, StatePool};
 use crate::state::pooled::PooledFenwickState;
-use crate::state::update::{pool_advance_plan, transition_block, write_block};
+use crate::state::update::{
+    pool_advance_plan, transition_block, transition_block_bf16, write_block, write_block_bf16,
+};
 use crate::state::Transition;
 use crate::tensor;
 
@@ -271,14 +273,36 @@ impl BatchedAdvance {
             tensor::current_gemm_threads().clamp(1, self.rows.len())
         };
         let tags = &self.tags;
-        tensor::slab_block_dispatch(pool.slab_mut(), dk * dv, &self.rows, threads, |j, block| {
-            match tags[j] {
-                BlockOp::Transition(i) => transition_block(block, dv, &jobs[i].transition),
-                BlockOp::Write(i) => {
-                    write_block(block, dv, jobs[i].k, jobs[i].v, jobs[i].write_scale)
-                }
-            }
-        });
+        // Same dispatch either way — only the slab element type and the
+        // per-block primitive change. The bf16 primitives are the exact
+        // ones PoolStore uses, so batched and per-sequence bf16 advances
+        // stay bit-exact with each other (docs/PRECISION.md).
+        match pool.precision() {
+            Precision::F32 => tensor::slab_block_dispatch(
+                pool.slab_mut(),
+                dk * dv,
+                &self.rows,
+                threads,
+                |j, block| match tags[j] {
+                    BlockOp::Transition(i) => transition_block(block, dv, &jobs[i].transition),
+                    BlockOp::Write(i) => {
+                        write_block(block, dv, jobs[i].k, jobs[i].v, jobs[i].write_scale)
+                    }
+                },
+            ),
+            Precision::Bf16 => tensor::slab_block_dispatch(
+                pool.slab_bf16_mut(),
+                dk * dv,
+                &self.rows,
+                threads,
+                |j, block| match tags[j] {
+                    BlockOp::Transition(i) => transition_block_bf16(block, dv, &jobs[i].transition),
+                    BlockOp::Write(i) => {
+                        write_block_bf16(block, dv, jobs[i].k, jobs[i].v, jobs[i].write_scale)
+                    }
+                },
+            ),
+        }
 
         // ---- 4) install sentinels and bump positions.
         for (slot, &i) in self.admitted.iter().enumerate() {
@@ -397,6 +421,84 @@ mod tests {
                 s.release(&mut pool_b);
             }
             assert_eq!((pool_a.in_use(), pool_b.in_use()), (0, 0));
+        }
+        crate::tensor::gemm_threads(0);
+    }
+
+    /// bf16 twin of the tentpole property: on a reduced-precision slab
+    /// the batched pass and the per-sequence loop still agree *bit-exactly
+    /// with each other* (they share the bf16 primitives and therefore the
+    /// narrowing sequence), even though both diverge from the f32 oracle
+    /// within the documented tolerance.
+    #[test]
+    fn batched_advance_matches_per_sequence_loop_on_bf16_slab() {
+        use crate::state::pool::Precision;
+        let (dk, dv, n, steps) = (8usize, 6usize, 5usize, 48usize);
+        for threads in [1usize, 4] {
+            crate::tensor::gemm_threads(threads);
+            let mut rng = Rng::new(0xBFAD + threads as u64);
+            let cap = n * blocks_for_steps(steps + 16);
+            let mut pool_a = StatePool::with_precision(dk * dv, cap, Precision::Bf16);
+            let mut pool_b = StatePool::with_precision(dk * dv, cap, Precision::Bf16);
+            let mut per_seq: Vec<PooledFenwickState> =
+                (0..n).map(|_| PooledFenwickState::new(dk, dv)).collect();
+            let mut batched: Vec<PooledFenwickState> =
+                (0..n).map(|_| PooledFenwickState::new(dk, dv)).collect();
+            let mut adv = BatchedAdvance::new();
+            let lambda: Vec<f32> = (0..10).map(|l| 0.8f32.powi(l)).collect();
+            for step in 0..steps {
+                let ks: Vec<Vec<f32>> = (0..n).map(|_| unit(randv(&mut rng, dk))).collect();
+                let vs: Vec<Vec<f32>> = (0..n).map(|_| randv(&mut rng, dv)).collect();
+                let alphas: Vec<f32> = (0..n).map(|_| rng.range_f32(0.8, 1.0)).collect();
+                let betas: Vec<f32> = (0..n).map(|_| rng.range_f32(0.1, 1.0)).collect();
+                let job = |i: usize| {
+                    if (i + step) % 2 == 0 {
+                        (1.0, Transition::Decay(alphas[i]))
+                    } else {
+                        (
+                            betas[i],
+                            Transition::GatedHouseholder {
+                                alpha: alphas[i],
+                                beta: betas[i],
+                                k: &ks[i],
+                            },
+                        )
+                    }
+                };
+                for i in 0..n {
+                    let (ws, tr) = job(i);
+                    per_seq[i].advance(&mut pool_a, &ks[i], &vs[i], ws, tr).unwrap();
+                }
+                let jobs: Vec<AdvanceJob<'_>> = (0..n)
+                    .map(|i| {
+                        let (ws, tr) = job(i);
+                        AdvanceJob { k: &ks[i], v: &vs[i], write_scale: ws, transition: tr }
+                    })
+                    .collect();
+                let mut refs: Vec<&mut PooledFenwickState> = batched.iter_mut().collect();
+                let refused = adv.advance_bucket(&mut pool_b, &mut refs, &jobs);
+                assert!(refused.is_empty(), "pool sized for the trace (step {step})");
+                let q = randv(&mut rng, dk);
+                let (mut oa, mut ob) = (vec![0.0f32; dv], vec![0.0f32; dv]);
+                for i in 0..n {
+                    per_seq[i].read_into(&pool_a, &q, &lambda, &mut oa);
+                    batched[i].read_into(&pool_b, &q, &lambda, &mut ob);
+                    for (a, b) in oa.iter().zip(ob.iter()) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "bf16 batched/per-seq divergence at step {step} seq {i} (threads {threads})"
+                        );
+                    }
+                }
+            }
+            for mut s in per_seq {
+                s.release(&mut pool_a);
+            }
+            for mut s in batched {
+                s.release(&mut pool_b);
+            }
+            assert_eq!((pool_a.in_use(), pool_b.in_use()), (0, 0), "bf16 leak (threads {threads})");
         }
         crate::tensor::gemm_threads(0);
     }

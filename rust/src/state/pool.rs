@@ -20,6 +20,34 @@
 //! unboundedly; capacity planning can use [`StatePool::grow`] and the
 //! [`StatePool::peak`] accounting.
 //!
+//! ## Precision modes
+//!
+//! The slab stores blocks either at f32 ([`Precision::F32`], the
+//! default, bit-exact with the per-sequence `FenwickState` oracle) or at
+//! bf16 ([`Precision::Bf16`]): each element is the top 16 bits of its
+//! f32 value, narrowed round-to-nearest-even by
+//! [`crate::tensor::half::f32_to_bf16`]. Every *read* widens to f32
+//! (exactly), and every *accumulate* — [`StatePool::axpy`], the
+//! transition/write primitives in [`crate::state::update`], the batched
+//! slab dispatch, the batched decode read — runs its arithmetic at f32
+//! and narrows only the stored result, halving state bytes per sequence
+//! at a bounded relative error (derivation in docs/PRECISION.md). The
+//! f32 accessors ([`StatePool::get`]/[`StatePool::get_mut`]) panic in
+//! bf16 mode so a precision-oblivious caller fails loudly instead of
+//! reinterpreting bits.
+//!
+//! ## Freed-block contents
+//!
+//! The contract, pinned by `freed_blocks_never_leak_stale_bits` below:
+//! a freed block's storage MAY keep its stale bytes until reallocation
+//! (nothing scrubs on `release`), and [`StatePool::alloc`] therefore
+//! ALWAYS zero-fills before handing a block out. No reader may touch a
+//! block it doesn't own, so stale bytes are unobservable; the zero-fill
+//! is what makes that true across realloc — including in bf16 mode,
+//! where a narrowing write that skips zero-fill could otherwise leave
+//! stale low bits visible next to freshly narrowed values (e.g. a
+//! subnormal or `-0.0` resurrected into a new sequence's state).
+//!
 //! ## Refcounts and copy-on-write
 //!
 //! Blocks carry a reference count so the prefix-state cache
@@ -44,15 +72,44 @@
 //!   admitted from cached blocks decode without ever touching shared
 //!   state.
 
+use crate::tensor::half::{bf16_to_f32, f32_to_bf16};
+
 /// Handle to one pooled block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct BlockId(pub usize);
+
+/// Storage precision of a [`StatePool`] slab (module docs above).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// 4 bytes/element, bit-exact with the per-sequence oracle.
+    F32,
+    /// 2 bytes/element (bf16, RNE narrowing), f32 arithmetic on every
+    /// read/accumulate; tolerance-bounded vs the f32 oracle.
+    Bf16,
+}
+
+impl Precision {
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 => 2,
+        }
+    }
+}
+
+/// The backing storage — one contiguous slab per pool, element type
+/// chosen at construction.
+#[derive(Debug)]
+enum Slab {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+}
 
 /// Fixed-block-size pool with a free list.
 #[derive(Debug)]
 pub struct StatePool {
     block_elems: usize,
-    storage: Vec<f32>,
+    storage: Slab,
     free: Vec<usize>,
     allocated: Vec<bool>,
     /// Owners per block (0 when free; `alloc` starts at 1). A count > 1
@@ -63,15 +120,38 @@ pub struct StatePool {
 
 impl StatePool {
     /// `block_elems` = d_k * d_v; `capacity` = max simultaneous blocks.
+    /// Stores at f32 — see [`StatePool::with_precision`] for bf16.
     pub fn new(block_elems: usize, capacity: usize) -> StatePool {
+        StatePool::with_precision(block_elems, capacity, Precision::F32)
+    }
+
+    /// A pool whose slab stores blocks at `precision`.
+    pub fn with_precision(block_elems: usize, capacity: usize, precision: Precision) -> StatePool {
         StatePool {
             block_elems,
-            storage: vec![0.0; block_elems * capacity],
+            storage: match precision {
+                Precision::F32 => Slab::F32(vec![0.0; block_elems * capacity]),
+                Precision::Bf16 => Slab::Bf16(vec![0u16; block_elems * capacity]),
+            },
             free: (0..capacity).rev().collect(),
             allocated: vec![false; capacity],
             refcount: vec![0; capacity],
             peak_blocks: 0,
         }
+    }
+
+    /// The slab's storage precision.
+    pub fn precision(&self) -> Precision {
+        match self.storage {
+            Slab::F32(_) => Precision::F32,
+            Slab::Bf16(_) => Precision::Bf16,
+        }
+    }
+
+    /// Resident bytes one block occupies in the slab (the
+    /// `state_bytes_per_seq` bench headline sums this over live blocks).
+    pub fn bytes_per_block(&self) -> usize {
+        self.block_elems * self.precision().bytes_per_elem()
     }
 
     pub fn capacity(&self) -> usize {
@@ -102,7 +182,10 @@ impl StatePool {
     /// Existing [`BlockId`]s remain valid.
     pub fn grow(&mut self, extra: usize) {
         let old = self.capacity();
-        self.storage.resize((old + extra) * self.block_elems, 0.0);
+        match &mut self.storage {
+            Slab::F32(s) => s.resize((old + extra) * self.block_elems, 0.0),
+            Slab::Bf16(s) => s.resize((old + extra) * self.block_elems, 0u16),
+        }
         self.allocated.resize(old + extra, false);
         self.refcount.resize(old + extra, 0);
         for idx in (old..old + extra).rev() {
@@ -112,7 +195,8 @@ impl StatePool {
 
     /// Allocate a zeroed block; None if the pool is exhausted
     /// (backpressure signal for the batcher). The caller is the sole
-    /// owner (refcount 1).
+    /// owner (refcount 1). The zero-fill here is the only scrub a block
+    /// ever gets — see the freed-block contract in the module docs.
     // xtask: deny_alloc
     pub fn alloc(&mut self) -> Option<BlockId> {
         let idx = self.free.pop()?;
@@ -120,7 +204,10 @@ impl StatePool {
         self.allocated[idx] = true;
         self.refcount[idx] = 1;
         let s = idx * self.block_elems;
-        self.storage[s..s + self.block_elems].fill(0.0);
+        match &mut self.storage {
+            Slab::F32(slab) => slab[s..s + self.block_elems].fill(0.0),
+            Slab::Bf16(slab) => slab[s..s + self.block_elems].fill(0u16),
+        }
         self.peak_blocks = self.peak_blocks.max(self.in_use());
         Some(BlockId(idx))
     }
@@ -167,41 +254,132 @@ impl StatePool {
         let dst = self.alloc()?;
         debug_assert_ne!(dst.0, src.0);
         let (d, s) = (dst.0 * self.block_elems, src.0 * self.block_elems);
-        self.storage.copy_within(s..s + self.block_elems, d);
+        match &mut self.storage {
+            Slab::F32(slab) => slab.copy_within(s..s + self.block_elems, d),
+            Slab::Bf16(slab) => slab.copy_within(s..s + self.block_elems, d),
+        }
         Some(dst)
     }
 
-    // xtask: deny_alloc
-    pub fn get(&self, id: BlockId) -> &[f32] {
+    #[inline]
+    fn check_live(&self, id: BlockId) {
         assert!(self.allocated[id.0], "use after free");
         debug_assert!(
             self.refcount[id.0] > 0,
             "read of live block {} with zero refcount (accounting drift)",
             id.0
         );
+    }
+
+    // xtask: deny_alloc
+    pub fn get(&self, id: BlockId) -> &[f32] {
+        self.check_live(id);
         let s = id.0 * self.block_elems;
-        &self.storage[s..s + self.block_elems]
+        match &self.storage {
+            Slab::F32(slab) => &slab[s..s + self.block_elems],
+            Slab::Bf16(_) => panic!("StatePool::get on a bf16 pool — use get_bf16/read_block_into"),
+        }
     }
 
     // xtask: deny_alloc
     pub fn get_mut(&mut self, id: BlockId) -> &mut [f32] {
-        assert!(self.allocated[id.0], "use after free");
+        self.check_live(id);
         assert!(
             self.refcount[id.0] == 1,
             "write to shared block {} (copy-on-write violation)",
             id.0
         );
         let s = id.0 * self.block_elems;
-        &mut self.storage[s..s + self.block_elems]
+        match &mut self.storage {
+            Slab::F32(slab) => &mut slab[s..s + self.block_elems],
+            Slab::Bf16(_) => {
+                panic!("StatePool::get_mut on a bf16 pool — use get_bf16_mut/write_block_from")
+            }
+        }
     }
 
-    /// The raw slab, for batched passes that partition work across many
-    /// *allocated* blocks in one dispatch
+    /// bf16-mode read access to a block's raw bf16 bits (widen with
+    /// [`crate::tensor::half`]; the fused read path feeds them to
+    /// `tensor::matvec_t_acc_slice_bf16` directly).
+    // xtask: deny_alloc
+    pub fn get_bf16(&self, id: BlockId) -> &[u16] {
+        self.check_live(id);
+        let s = id.0 * self.block_elems;
+        match &self.storage {
+            Slab::Bf16(slab) => &slab[s..s + self.block_elems],
+            Slab::F32(_) => panic!("StatePool::get_bf16 on an f32 pool — use get"),
+        }
+    }
+
+    /// bf16-mode write access; same copy-on-write contract as
+    /// [`StatePool::get_mut`].
+    // xtask: deny_alloc
+    pub fn get_bf16_mut(&mut self, id: BlockId) -> &mut [u16] {
+        self.check_live(id);
+        assert!(
+            self.refcount[id.0] == 1,
+            "write to shared block {} (copy-on-write violation)",
+            id.0
+        );
+        let s = id.0 * self.block_elems;
+        match &mut self.storage {
+            Slab::Bf16(slab) => &mut slab[s..s + self.block_elems],
+            Slab::F32(_) => panic!("StatePool::get_bf16_mut on an f32 pool — use get_mut"),
+        }
+    }
+
+    /// Precision-transparent block read: widen (bf16, exact) or copy
+    /// (f32) the block into `out`. The seam the boundary-import and
+    /// oracle-export paths use so they never match on precision.
+    // xtask: deny_alloc
+    pub fn read_block_into(&self, id: BlockId, out: &mut [f32]) {
+        self.check_live(id);
+        assert_eq!(out.len(), self.block_elems);
+        let s = id.0 * self.block_elems;
+        match &self.storage {
+            Slab::F32(slab) => out.copy_from_slice(&slab[s..s + self.block_elems]),
+            Slab::Bf16(slab) => crate::tensor::half::widen_into(&slab[s..s + self.block_elems], out),
+        }
+    }
+
+    /// Precision-transparent block write: copy (f32) or narrow (bf16,
+    /// RNE) `src` into the block. Copy-on-write contract as
+    /// [`StatePool::get_mut`].
+    // xtask: deny_alloc
+    pub fn write_block_from(&mut self, id: BlockId, src: &[f32]) {
+        self.check_live(id);
+        assert!(
+            self.refcount[id.0] == 1,
+            "write to shared block {} (copy-on-write violation)",
+            id.0
+        );
+        assert_eq!(src.len(), self.block_elems);
+        let s = id.0 * self.block_elems;
+        match &mut self.storage {
+            Slab::F32(slab) => slab[s..s + self.block_elems].copy_from_slice(src),
+            Slab::Bf16(slab) => crate::tensor::half::narrow_into(src, &mut slab[s..s + self.block_elems]),
+        }
+    }
+
+    /// The raw f32 slab, for batched passes that partition work across
+    /// many *allocated* blocks in one dispatch
     /// ([`crate::tensor::slab_block_dispatch`], driven by
     /// `state::batched_advance`). Callers must touch only ranges of
-    /// blocks they hold live [`BlockId`]s for.
+    /// blocks they hold live [`BlockId`]s for. Panics on a bf16 pool
+    /// (use [`StatePool::slab_bf16_mut`]).
     pub(crate) fn slab_mut(&mut self) -> &mut [f32] {
-        &mut self.storage
+        match &mut self.storage {
+            Slab::F32(slab) => slab,
+            Slab::Bf16(_) => panic!("StatePool::slab_mut on a bf16 pool — use slab_bf16_mut"),
+        }
+    }
+
+    /// bf16 twin of [`StatePool::slab_mut`].
+    pub(crate) fn slab_bf16_mut(&mut self) -> &mut [u16] {
+        match &mut self.storage {
+            Slab::Bf16(slab) => slab,
+            Slab::F32(_) => panic!("StatePool::slab_bf16_mut on an f32 pool — use slab_mut"),
+        }
     }
 
     /// Is this block currently allocated? (validation hook for the
@@ -212,6 +390,8 @@ impl StatePool {
 
     /// `dst += scale * src` across two blocks (bucket merge). `dst` must
     /// be solely owned (copy-on-write contract); `src` may be shared.
+    /// In bf16 mode both operands widen, the multiply-add runs at f32,
+    /// and only the stored result narrows (one rounding per element).
     // xtask: deny_alloc
     pub fn axpy(&mut self, dst: BlockId, src: BlockId, scale: f32) {
         assert!(self.allocated[dst.0] && self.allocated[src.0]);
@@ -221,21 +401,43 @@ impl StatePool {
             dst.0
         );
         assert_ne!(dst.0, src.0);
-        let (d, s) = (dst.0 * self.block_elems, src.0 * self.block_elems);
-        // disjoint ranges: split_at_mut
-        if d < s {
-            let (a, b) = self.storage.split_at_mut(s);
-            let dsl = &mut a[d..d + self.block_elems];
-            let ssl = &b[..self.block_elems];
-            for (x, &y) in dsl.iter_mut().zip(ssl) {
-                *x += scale * y;
+        let be = self.block_elems;
+        let (d, s) = (dst.0 * be, src.0 * be);
+        match &mut self.storage {
+            Slab::F32(slab) => {
+                // disjoint ranges: split_at_mut
+                if d < s {
+                    let (a, b) = slab.split_at_mut(s);
+                    let dsl = &mut a[d..d + be];
+                    let ssl = &b[..be];
+                    for (x, &y) in dsl.iter_mut().zip(ssl) {
+                        *x += scale * y;
+                    }
+                } else {
+                    let (a, b) = slab.split_at_mut(d);
+                    let ssl = &a[s..s + be];
+                    let dsl = &mut b[..be];
+                    for (x, &y) in dsl.iter_mut().zip(ssl) {
+                        *x += scale * y;
+                    }
+                }
             }
-        } else {
-            let (a, b) = self.storage.split_at_mut(d);
-            let ssl = &a[s..s + self.block_elems];
-            let dsl = &mut b[..self.block_elems];
-            for (x, &y) in dsl.iter_mut().zip(ssl) {
-                *x += scale * y;
+            Slab::Bf16(slab) => {
+                if d < s {
+                    let (a, b) = slab.split_at_mut(s);
+                    let dsl = &mut a[d..d + be];
+                    let ssl = &b[..be];
+                    for (x, &y) in dsl.iter_mut().zip(ssl) {
+                        *x = f32_to_bf16(bf16_to_f32(*x) + scale * bf16_to_f32(y));
+                    }
+                } else {
+                    let (a, b) = slab.split_at_mut(d);
+                    let ssl = &a[s..s + be];
+                    let dsl = &mut b[..be];
+                    for (x, &y) in dsl.iter_mut().zip(ssl) {
+                        *x = f32_to_bf16(bf16_to_f32(*x) + scale * bf16_to_f32(y));
+                    }
+                }
             }
         }
     }
@@ -278,6 +480,82 @@ mod tests {
         pool.release(a);
         let b = pool.alloc().unwrap();
         assert!(pool.get(b).iter().all(|&x| x == 0.0));
+    }
+
+    /// The freed-block-content contract (module docs): nothing scrubs on
+    /// release, so `alloc`'s zero-fill is the only thing standing between
+    /// a new owner and the previous owner's bits. Poison blocks with
+    /// payloads whose *bit patterns* would survive a sloppy "write only
+    /// what you need" reuse — subnormals, `-0.0` (all-zero except the
+    /// sign bit) — then check every realloc, in both precisions and
+    /// across `grow`, comes back all-bits-zero.
+    #[test]
+    fn freed_blocks_never_leak_stale_bits() {
+        for precision in [Precision::F32, Precision::Bf16] {
+            let mut pool = StatePool::with_precision(4, 2, precision);
+            let poison = [2.5e-40f32, -0.0, f32::MIN_POSITIVE, -1.0e-39];
+            let a = pool.alloc().unwrap();
+            pool.write_block_from(a, &poison);
+            let b = pool.alloc().unwrap();
+            pool.write_block_from(b, &poison);
+            pool.release(a);
+            pool.release(b);
+            // realloc from the free list: must observe pure zeros (bitwise
+            // — a resurrected -0.0 sign bit is a failure even though
+            // -0.0 == 0.0 numerically)
+            let c = pool.alloc().unwrap();
+            let mut out = [1.0f32; 4];
+            pool.read_block_into(c, &mut out);
+            assert!(out.iter().all(|x| x.to_bits() == 0), "stale bits after realloc ({precision:?})");
+            // and across grow: old freed blocks keep the same contract
+            pool.grow(2);
+            let ids: Vec<_> = (0..3).map(|_| pool.alloc().unwrap()).collect();
+            for id in &ids {
+                pool.read_block_into(*id, &mut out);
+                assert!(
+                    out.iter().all(|x| x.to_bits() == 0),
+                    "stale bits after grow ({precision:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_pool_round_trips_through_narrowing() {
+        let mut pool = StatePool::with_precision(4, 2, Precision::Bf16);
+        assert_eq!(pool.precision(), Precision::Bf16);
+        assert_eq!(pool.bytes_per_block(), 8); // 4 elems × 2 bytes
+        let a = pool.alloc().unwrap();
+        // exactly-representable values round-trip bit-exact
+        let exact = [1.5f32, -0.0, 2.0, -0.625];
+        pool.write_block_from(a, &exact);
+        let mut out = [0f32; 4];
+        pool.read_block_into(a, &mut out);
+        for (o, w) in out.iter().zip(exact.iter()) {
+            assert_eq!(o.to_bits(), w.to_bits());
+        }
+        // a non-representable value lands within one unit roundoff
+        pool.write_block_from(a, &[1.001, 0.0, 0.0, 0.0]);
+        pool.read_block_into(a, &mut out);
+        assert!((out[0] - 1.001).abs() / 1.001 <= crate::tensor::half::BF16_UNIT_ROUNDOFF);
+        // axpy widens, accumulates at f32, narrows once
+        let b = pool.alloc().unwrap();
+        pool.write_block_from(b, &[2.0, 4.0, -8.0, 0.5]);
+        pool.write_block_from(a, &[1.0, 1.0, 1.0, 1.0]);
+        pool.axpy(a, b, 0.5);
+        pool.read_block_into(a, &mut out);
+        assert_eq!(out, [2.0, 3.0, -3.0, 1.25]);
+        pool.release(a);
+        pool.release(b);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bf16 pool")]
+    fn f32_accessor_on_bf16_pool_panics() {
+        let mut pool = StatePool::with_precision(4, 1, Precision::Bf16);
+        let a = pool.alloc().unwrap();
+        let _ = pool.get(a);
     }
 
     #[test]
@@ -344,6 +622,20 @@ mod tests {
     }
 
     #[test]
+    fn clone_block_is_bitwise_in_bf16_mode_too() {
+        let mut pool = StatePool::with_precision(4, 3, Precision::Bf16);
+        let a = pool.alloc().unwrap();
+        pool.get_bf16_mut(a).copy_from_slice(&[0x3FC0, 0x8000, 0x0001, 0x7F7F]);
+        let b = pool.clone_block(a).unwrap();
+        assert_eq!(pool.get_bf16(a), pool.get_bf16(b), "bf16 clone must be bit-identical");
+        pool.get_bf16_mut(b)[0] = 0x4000;
+        assert_eq!(pool.get_bf16(a)[0], 0x3FC0, "source untouched by writes to the clone");
+        pool.release(a);
+        pool.release(b);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
     #[should_panic(expected = "copy-on-write violation")]
     fn writing_a_shared_block_panics() {
         let mut pool = StatePool::new(4, 2);
@@ -360,6 +652,15 @@ mod tests {
         let b = pool.alloc().unwrap();
         pool.retain(a);
         pool.axpy(a, b, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "copy-on-write violation")]
+    fn write_block_from_into_a_shared_block_panics() {
+        let mut pool = StatePool::with_precision(4, 2, Precision::Bf16);
+        let a = pool.alloc().unwrap();
+        pool.retain(a);
+        pool.write_block_from(a, &[1.0; 4]);
     }
 
     #[test]

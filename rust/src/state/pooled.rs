@@ -29,7 +29,7 @@
 //! the tests below and re-checked by the `decode_batched` bench.
 
 use crate::attention::loglinear::level_read_acc;
-use crate::state::pool::{BlockId, StatePool};
+use crate::state::pool::{BlockId, Precision, StatePool};
 use crate::state::{level_weight, Transition};
 use crate::tensor;
 use crate::util::threadpool::par_row_chunks_pooled;
@@ -172,7 +172,9 @@ impl PooledFenwickState {
             }
             assert!(seq.levels[level].is_none(), "duplicate level {level} in import");
             let id = pool.alloc().expect("availability checked above");
-            pool.get_mut(id).copy_from_slice(data);
+            // precision-transparent: copies at f32, narrows (RNE) on a
+            // bf16 pool — the one rounding the import path introduces
+            pool.write_block_from(id, data);
             seq.levels[level] = Some(id);
         }
         seq.t = t;
@@ -240,7 +242,14 @@ impl PooledFenwickState {
                 if lam == 0.0 {
                     continue;
                 }
-                level_read_acc(pool.get(*id), self.dv, q, lam, out);
+                match pool.precision() {
+                    Precision::F32 => level_read_acc(pool.get(*id), self.dv, q, lam, out),
+                    // widen-on-the-fly read, f32 accumulation — the same
+                    // row loop/op order as the f32 path (docs/PRECISION.md)
+                    Precision::Bf16 => {
+                        tensor::matvec_t_acc_slice_bf16(pool.get_bf16(*id), self.dv, q, lam, out)
+                    }
+                }
             }
         }
     }
@@ -376,6 +385,7 @@ impl BatchedDecoder {
             tensor::current_gemm_threads().clamp(1, n)
         };
         let (wq, blocks, row_ptr) = (&self.wq, &self.blocks, &self.row_ptr);
+        let bf16 = pool.precision() == Precision::Bf16;
         par_row_chunks_pooled(out, dv, n.div_ceil(threads), |r0, r1, chunk| {
             for i in r0..r1 {
                 let orow = &mut chunk[(i - r0) * dv..(i - r0 + 1) * dv];
@@ -384,7 +394,14 @@ impl BatchedDecoder {
                     // scale = 1.0 reproduces the per-sequence op sequence
                     // exactly (1.0 * (λ·q_k) is bitwise λ·q_k)
                     let a = &wq[j * dk..(j + 1) * dk];
-                    tensor::matvec_t_acc_slice(pool.get(blocks[j]), dv, a, 1.0, orow);
+                    if bf16 {
+                        // widen + f32-accumulate — same loop structure, so
+                        // batched stays bit-exact with the per-sequence
+                        // bf16 read (both read the same stored bits)
+                        tensor::matvec_t_acc_slice_bf16(pool.get_bf16(blocks[j]), dv, a, 1.0, orow);
+                    } else {
+                        tensor::matvec_t_acc_slice(pool.get(blocks[j]), dv, a, 1.0, orow);
+                    }
                 }
             }
         });
@@ -474,6 +491,82 @@ mod tests {
             dec.last_planned_blocks(),
             seqs.iter().map(|s| s.live_states()).sum::<usize>()
         );
+    }
+
+    #[test]
+    fn bf16_pooled_path_is_self_consistent_and_tolerance_bounded() {
+        // Two properties of the reduced-precision slab: (1) the batched
+        // read over a bf16 pool is bit-exact with the per-sequence bf16
+        // read (both widen the same stored bits through the same op
+        // order); (2) the bf16 trajectory tracks the f32 trajectory
+        // within the docs/PRECISION.md relative-error bound.
+        let (dk, dv) = (8, 8);
+        let mut rng = Rng::new(0xBF16);
+        let mut pool_f32 = StatePool::new(dk * dv, 32);
+        let mut pool_bf16 = StatePool::with_precision(dk * dv, 32, Precision::Bf16);
+        let steps = [1usize, 5, 12, 33];
+        let n = steps.len();
+        let (mut seqs_f32, mut seqs_bf16) = (Vec::new(), Vec::new());
+        for (i, &st) in steps.iter().enumerate() {
+            let mut a = PooledFenwickState::new(dk, dv);
+            let mut b = PooledFenwickState::new(dk, dv);
+            let mut srng = Rng::new(400 + i as u64);
+            for t in 0..st {
+                let k: Vec<f32> = (0..dk).map(|_| srng.normal_f32(0.0, 1.0)).collect();
+                let v: Vec<f32> = (0..dv).map(|_| srng.normal_f32(0.0, 1.0)).collect();
+                let (ws, tr) = if t % 3 == 0 {
+                    (srng.range_f32(0.2, 1.0), Transition::Decay(0.95))
+                } else {
+                    (1.0, Transition::Decay(0.9))
+                };
+                a.advance(&mut pool_f32, &k, &v, ws, tr).unwrap();
+                b.advance(&mut pool_bf16, &k, &v, ws, tr).unwrap();
+            }
+            seqs_f32.push(a);
+            seqs_bf16.push(b);
+        }
+        let qs: Vec<f32> = (0..n * dk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let table: Vec<f32> = (0..8).map(|_| rng.range_f32(0.1, 1.0)).collect();
+        let lambdas: Vec<&[f32]> = (0..n).map(|_| &table[..6]).collect();
+
+        let mut per_seq = vec![0.0f32; n * dv];
+        for i in 0..n {
+            seqs_bf16[i].read_into(
+                &pool_bf16,
+                &qs[i * dk..(i + 1) * dk],
+                lambdas[i],
+                &mut per_seq[i * dv..(i + 1) * dv],
+            );
+        }
+        let refs: Vec<&PooledFenwickState> = seqs_bf16.iter().collect();
+        let mut dec = BatchedDecoder::new();
+        let mut batched = vec![1.0f32; n * dv];
+        dec.read_batch(&pool_bf16, &refs, &qs, &lambdas, &mut batched);
+        for (g, w) in batched.iter().zip(per_seq.iter()) {
+            assert_eq!(g.to_bits(), w.to_bits(), "bf16 batched read diverged from per-sequence");
+        }
+
+        let mut oracle = vec![0.0f32; n * dv];
+        for i in 0..n {
+            seqs_f32[i].read_into(
+                &pool_f32,
+                &qs[i * dk..(i + 1) * dk],
+                lambdas[i],
+                &mut oracle[i * dv..(i + 1) * dv],
+            );
+        }
+        for (i, (g, w)) in per_seq.iter().zip(oracle.iter()).enumerate() {
+            let rel = (g - w).abs() / (1.0 + w.abs());
+            assert!(rel <= 0.05, "bf16 read outside tolerance at {i}: got {g}, oracle {w}");
+        }
+
+        for s in seqs_f32.iter_mut() {
+            s.release(&mut pool_f32);
+        }
+        for s in seqs_bf16.iter_mut() {
+            s.release(&mut pool_bf16);
+        }
+        assert_eq!((pool_f32.in_use(), pool_bf16.in_use()), (0, 0));
     }
 
     #[test]

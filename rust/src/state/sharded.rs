@@ -35,7 +35,7 @@
 //! committed blocks against each shard's capacity, exactly the
 //! `reserved_total` bookkeeping the unsharded backend kept globally.
 
-use crate::state::pool::StatePool;
+use crate::state::pool::{Precision, StatePool};
 use crate::state::prefix_cache::{BoundaryStates, PrefixCache};
 
 /// A fixed set of independent [`StatePool`] shards with per-shard
@@ -57,10 +57,25 @@ impl ShardedStatePool {
     /// `n_shards` pools of `shard_capacity` blocks of `block_elems`
     /// (d_k · d_v) floats each.
     pub fn new(block_elems: usize, shard_capacity: usize, n_shards: usize) -> ShardedStatePool {
+        Self::with_precision(block_elems, shard_capacity, n_shards, Precision::F32)
+    }
+
+    /// Like [`ShardedStatePool::new`] but with an explicit storage
+    /// precision, applied uniformly across every shard (mixed-precision
+    /// shards would break the "any pinning yields the same logits"
+    /// invariant in the module docs).
+    pub fn with_precision(
+        block_elems: usize,
+        shard_capacity: usize,
+        n_shards: usize,
+        precision: Precision,
+    ) -> ShardedStatePool {
         assert!(n_shards >= 1, "at least one shard");
         assert!(shard_capacity >= 1, "each shard needs capacity");
         ShardedStatePool {
-            shards: (0..n_shards).map(|_| StatePool::new(block_elems, shard_capacity)).collect(),
+            shards: (0..n_shards)
+                .map(|_| StatePool::with_precision(block_elems, shard_capacity, precision))
+                .collect(),
             caches: None,
             reserved: vec![0; n_shards],
             block_elems,
@@ -70,6 +85,11 @@ impl ShardedStatePool {
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Storage precision, uniform across shards.
+    pub fn precision(&self) -> Precision {
+        self.shards[0].precision()
     }
 
     /// Per-shard block capacity (uniform across shards). A request whose
@@ -249,6 +269,25 @@ mod tests {
         sp.shard_mut(1).release(b);
         assert_eq!(sp.in_use(), 1);
         assert_eq!(sp.peak(), 3, "per-shard peaks: 1 + 2");
+    }
+
+    #[test]
+    fn precision_is_uniform_across_shards() {
+        let sp = ShardedStatePool::new(4, 3, 2);
+        assert_eq!(sp.precision(), Precision::F32);
+        let mut sp = ShardedStatePool::with_precision(4, 3, 3, Precision::Bf16);
+        assert_eq!(sp.precision(), Precision::Bf16);
+        for s in 0..sp.n_shards() {
+            assert_eq!(sp.shard(s).precision(), Precision::Bf16);
+            assert_eq!(sp.shard(s).bytes_per_block(), 4 * 2);
+        }
+        // shard pools really store bf16: a widened read round-trips
+        let id = sp.shard_mut(1).alloc().unwrap();
+        sp.shard_mut(1).write_block_from(id, &[1.0, -2.5, 0.0, 0.5]);
+        let mut out = [0.0f32; 4];
+        sp.shard_mut(1).read_block_into(id, &mut out);
+        assert_eq!(out, [1.0, -2.5, 0.0, 0.5]);
+        sp.shard_mut(1).release(id);
     }
 
     #[test]

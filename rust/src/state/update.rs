@@ -23,9 +23,10 @@
 
 use crate::attention::deltanet::{apply_householder, apply_householder_slice};
 use crate::fenwick;
-use crate::state::pool::{BlockId, StatePool};
+use crate::state::pool::{BlockId, Precision, StatePool};
 use crate::state::pooled::PoolExhausted;
 use crate::state::Transition;
+use crate::tensor::half::{bf16_to_f32, f32_to_bf16};
 use crate::tensor::{self, Mat};
 
 /// Apply `tr` to one row-major `(d_k, d_v)` state slice — THE per-token
@@ -57,6 +58,67 @@ pub(crate) fn transition_block(s: &mut [f32], dv: usize, tr: &Transition<'_>) {
 pub(crate) fn write_block(s0: &mut [f32], dv: usize, k: &[f32], v: &[f32], write_scale: f32) {
     for (i, &ki) in k.iter().enumerate() {
         tensor::axpy8(&mut s0[i * dv..(i + 1) * dv], v, ki * write_scale);
+    }
+}
+
+/// bf16-slab twin of [`transition_block`]: widen each stored element to
+/// f32, run the transition arithmetic at f32, narrow the result once
+/// (RNE). Shared by [`PoolStore`] and the batched slab pass exactly like
+/// the f32 primitive, so the pooled and batched bf16 paths stay
+/// bit-exact *with each other* (their divergence from the f32 oracle is
+/// the tolerance-bounded narrowing only; docs/PRECISION.md).
+// xtask: deny_alloc
+pub(crate) fn transition_block_bf16(s: &mut [u16], dv: usize, tr: &Transition<'_>) {
+    match tr {
+        Transition::Decay(a) => {
+            for x in s.iter_mut() {
+                *x = f32_to_bf16(bf16_to_f32(*x) * *a);
+            }
+        }
+        Transition::GatedHouseholder { alpha, beta, k } => {
+            apply_householder_slice_bf16(s, dv, k, *beta);
+            for x in s.iter_mut() {
+                *x = f32_to_bf16(bf16_to_f32(*x) * *alpha);
+            }
+        }
+    }
+}
+
+/// bf16 form of `attention::deltanet::apply_householder_slice`:
+/// `S ← (I − β k k^T) S` with `k^T S` accumulated entirely at f32 (the
+/// stored rows widen on the fly) and one narrowing per updated element.
+/// Mirrors the f32 slice form's structure (scratch `k^T S` pass, then
+/// per-row update with the same `β·k_i` zero-skip).
+fn apply_householder_slice_bf16(s: &mut [u16], dv: usize, k: &[f32], beta: f32) {
+    if beta == 0.0 {
+        return;
+    }
+    debug_assert_eq!(s.len(), k.len() * dv);
+    let mut kt_s = vec![0.0f32; dv];
+    tensor::matvec_t_acc_slice_bf16(s, dv, k, 1.0, &mut kt_s);
+    for (i, &ki) in k.iter().enumerate() {
+        let scale = beta * ki;
+        if scale == 0.0 {
+            continue;
+        }
+        let row = &mut s[i * dv..(i + 1) * dv];
+        for (r, &x) in row.iter_mut().zip(kt_s.iter()) {
+            *r = f32_to_bf16(bf16_to_f32(*r) - scale * x);
+        }
+    }
+}
+
+/// bf16-slab twin of [`write_block`]: the outer product runs at f32 and
+/// each freshly written element narrows once. `s0` must be zeroed (the
+/// pool's alloc contract), so the accumulate degenerates to a store.
+// xtask: deny_alloc
+pub(crate) fn write_block_bf16(s0: &mut [u16], dv: usize, k: &[f32], v: &[f32], write_scale: f32) {
+    for (i, &ki) in k.iter().enumerate() {
+        let a = ki * write_scale;
+        let row = &mut s0[i * dv..(i + 1) * dv];
+        for (x, &vj) in row.iter_mut().zip(v.iter()) {
+            *x = f32_to_bf16(bf16_to_f32(*x) + a * vj);
+        }
     }
 }
 
@@ -289,12 +351,18 @@ impl FenwickStore for PoolStore<'_> {
 
     fn transition(&mut self, slot: &mut BlockId, tr: &Transition<'_>) {
         self.make_private(slot);
-        transition_block(self.pool.get_mut(*slot), self.dv, tr);
+        match self.pool.precision() {
+            Precision::F32 => transition_block(self.pool.get_mut(*slot), self.dv, tr),
+            Precision::Bf16 => transition_block_bf16(self.pool.get_bf16_mut(*slot), self.dv, tr),
+        }
     }
 
     fn write(&mut self, k: &[f32], v: &[f32], write_scale: f32) -> Option<BlockId> {
         let id = self.pool.alloc()?;
-        write_block(self.pool.get_mut(id), self.dv, k, v, write_scale);
+        match self.pool.precision() {
+            Precision::F32 => write_block(self.pool.get_mut(id), self.dv, k, v, write_scale),
+            Precision::Bf16 => write_block_bf16(self.pool.get_bf16_mut(id), self.dv, k, v, write_scale),
+        }
         Some(id)
     }
 }

@@ -184,14 +184,20 @@ pub fn gemm_tn_diag_batch_acc(
 /// scattered. Each block is touched by exactly one worker running the
 /// same per-block primitive as the per-sequence path, so results are
 /// bit-exact for any thread count.
-pub fn slab_block_dispatch<F>(
-    slab: &mut [f32],
+///
+/// Generic over the slab element type so the same scheduling serves the
+/// f32 slab and the bf16 (`u16`-bit) slab of a reduced-precision
+/// [`crate::state::pool::StatePool`] — the kernel, not the dispatcher,
+/// decides how to widen/narrow (see docs/PRECISION.md).
+pub fn slab_block_dispatch<T, F>(
+    slab: &mut [T],
     block_elems: usize,
     blocks: &[usize],
     threads: usize,
     kernel: F,
 ) where
-    F: Fn(usize, &mut [f32]) + Sync,
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
 {
     let n = blocks.len();
     if n == 0 {
@@ -212,7 +218,7 @@ pub fn slab_block_dispatch<F>(
     }
     let per = n.div_ceil(threads);
     let kernel = &kernel;
-    let mut rest: &mut [f32] = slab;
+    let mut rest: &mut [T] = slab;
     let mut consumed_rows = 0usize;
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
     for (run_idx, run) in blocks.chunks(per).enumerate() {

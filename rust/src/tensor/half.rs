@@ -1,0 +1,195 @@
+//! Dependency-free bf16 (bfloat16) conversion primitives for the
+//! reduced-precision state slab ([`crate::state::pool::StatePool`] in
+//! `Precision::Bf16` mode — see docs/PRECISION.md).
+//!
+//! bf16 is the top 16 bits of an IEEE-754 binary32: 1 sign bit, the same
+//! 8-bit exponent, and a 7-bit mantissa. Widening (`bf16 → f32`) is
+//! therefore exact (a shift), and narrowing (`f32 → bf16`) is a single
+//! rounding step. We round to nearest, ties to even (RNE), matching the
+//! hardware convert instructions (`VCVTNEPS2BF16`, TPU native bf16) so a
+//! future accelerated slab is bit-compatible with this software path.
+//!
+//! Policy decisions (pinned by tests below):
+//! - **NaN**: narrowing any NaN quiets it (`| 0x0040`) so a signalling
+//!   NaN can never be fabricated by truncation of a payload whose low
+//!   bits carried all the set mantissa bits. Payload top bits and sign
+//!   are preserved. Consequence: bf16 *signalling*-NaN bit patterns are
+//!   not round-trip fixed points (they widen to an sNaN f32 which
+//!   re-narrows to the quieted pattern); quiet NaNs round-trip exactly.
+//! - **Overflow**: finite f32 values above the bf16-representable range
+//!   (only possible via rounding at the very top, e.g. `f32::MAX`)
+//!   narrow to ±inf, exactly as RNE on the shortened mantissa dictates.
+//! - **Subnormals / ±0**: handled by the same integer-rounding path, no
+//!   flush-to-zero. `-0.0` narrows to `0x8000` and survives round-trips.
+
+/// Narrow an `f32` to bf16 bits, round-to-nearest-even.
+#[inline(always)]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Truncate, then force the quiet bit so the result is a NaN even
+        // when every set mantissa bit lived in the discarded low half.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE on the low 16 bits: add 0x7FFF plus the round-to-even tiebreak
+    // (bit 16 of the input), then truncate. Carries propagate into the
+    // exponent, which is exactly what rounding up at a binade boundary
+    // (or at f32::MAX → +inf) requires.
+    ((bits.wrapping_add(((bits >> 16) & 1) + 0x7FFF)) >> 16) as u16
+}
+
+/// Widen bf16 bits to `f32`. Exact — bf16 is a prefix of binary32.
+#[inline(always)]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Widen a bf16 slice into an f32 slice of the same length.
+// xtask: deny_alloc
+#[inline]
+pub fn widen_into(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d = bf16_to_f32(s);
+    }
+}
+
+/// Narrow an f32 slice into a bf16 slice of the same length (RNE).
+// xtask: deny_alloc
+#[inline]
+pub fn narrow_into(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d = f32_to_bf16(s);
+    }
+}
+
+/// bf16 unit roundoff: the worst-case relative error of one RNE
+/// narrowing of a normal value is `2^-9` (7 mantissa bits + hidden bit).
+/// Used by the tolerance-bound derivation in docs/PRECISION.md and the
+/// trace harness.
+pub const BF16_UNIT_ROUNDOFF: f32 = 1.0 / 512.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widen_is_exact_prefix() {
+        for h in [0u16, 1, 0x0080, 0x3F80, 0x8000, 0x7F80, 0xFF80, 0x7FC0] {
+            assert_eq!(bf16_to_f32(h).to_bits(), (h as u32) << 16);
+        }
+    }
+
+    /// Exhaustive over all 65536 bf16 patterns: widen→narrow is the
+    /// identity for every pattern except signalling NaNs, which map to
+    /// their quieted counterpart (policy above).
+    #[test]
+    fn round_trip_is_identity_for_all_non_snan_patterns() {
+        for h in 0..=u16::MAX {
+            let back = f32_to_bf16(bf16_to_f32(h));
+            let exp = (h >> 7) & 0xFF;
+            let mantissa = h & 0x7F;
+            let is_snan = exp == 0xFF && mantissa != 0 && (h & 0x0040) == 0;
+            if is_snan {
+                assert_eq!(back, h | 0x0040, "sNaN {h:#06x} must quiet, got {back:#06x}");
+            } else {
+                assert_eq!(back, h, "pattern {h:#06x} not a round-trip fixed point");
+            }
+        }
+    }
+
+    #[test]
+    fn rne_tie_vectors() {
+        // 1.0 + 2^-8 exactly between 1.0 (0x3F80) and nextafter: tie,
+        // low kept bit even → rounds down.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // next representable up: tie with odd kept bit → rounds up to even.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // just above a tie → always up.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+        // just below a tie → always down.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_7FFF)), 0x3F80);
+    }
+
+    #[test]
+    fn signed_zero_and_infinities() {
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        assert!(bf16_to_f32(0x8000).is_sign_negative());
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xFF80);
+        // f32::MAX rounds up past the largest finite bf16 → +inf.
+        assert_eq!(f32_to_bf16(f32::MAX), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::MIN), 0xFF80);
+        // Largest f32 that still narrows to the top finite bf16.
+        let top_finite = bf16_to_f32(0x7F7F);
+        assert_eq!(f32_to_bf16(top_finite), 0x7F7F);
+    }
+
+    #[test]
+    fn subnormals_round_not_flush() {
+        // Smallest positive f32 subnormal is far below half the smallest
+        // bf16 subnormal → rounds to +0, sign preserved for the negative.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x0000_0001)), 0x0000);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x8000_0001)), 0x8000);
+        // Exactly half the smallest bf16 subnormal: tie to even → 0.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x0000_8000)), 0x0000);
+        // Just above the tie → smallest bf16 subnormal.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x0000_8001)), 0x0001);
+        // bf16 subnormals are representable f32 values → exact round-trip
+        // (covered exhaustively above, spot-check semantics here).
+        let sub = bf16_to_f32(0x0001);
+        assert!(sub > 0.0 && !sub.is_normal());
+    }
+
+    #[test]
+    fn nan_payloads_quiet_and_preserve_sign() {
+        let q = f32_to_bf16(f32::NAN);
+        assert_eq!(q & 0x7FC0 & 0x0040, 0x0040);
+        assert!(bf16_to_f32(q).is_nan());
+        // An f32 sNaN whose payload lives only in the low 16 bits would
+        // truncate to an infinity without the quiet-bit force.
+        let snan_low = f32::from_bits(0x7F80_0001);
+        let h = f32_to_bf16(snan_low);
+        assert!(bf16_to_f32(h).is_nan(), "low-payload sNaN must stay NaN");
+        // Negative NaN keeps its sign bit.
+        let neg = f32_to_bf16(f32::from_bits(0xFFC0_1234));
+        assert_eq!(neg & 0x8000, 0x8000);
+        assert!(bf16_to_f32(neg).is_nan());
+    }
+
+    /// Property: narrowing error of a random normal f32 is bounded by
+    /// the unit roundoff, and narrowing is idempotent (a second
+    /// narrow of the widened value is a no-op).
+    #[test]
+    fn narrow_error_bounded_and_idempotent_property() {
+        let mut rng = crate::util::rng::Rng::new(0x51D0_BF16);
+        for _ in 0..20_000 {
+            let x = (rng.f32() - 0.5) * f32::exp2(rng.range(0, 120) as f32 - 60.0);
+            if !x.is_finite() || x == 0.0 {
+                continue;
+            }
+            let h = f32_to_bf16(x);
+            let w = bf16_to_f32(h);
+            if w.is_finite() && x.abs() >= f32::MIN_POSITIVE {
+                let rel = ((w - x) / x).abs();
+                assert!(rel <= BF16_UNIT_ROUNDOFF, "x={x:e} w={w:e} rel={rel:e}");
+            }
+            assert_eq!(f32_to_bf16(w), h, "narrow not idempotent at x={x:e}");
+        }
+    }
+
+    #[test]
+    fn slice_helpers_match_scalar() {
+        let xs = [1.5f32, -0.0, 2.5e-40, f32::MIN_POSITIVE, 3.14159, -1e30];
+        let mut hs = [0u16; 6];
+        narrow_into(&xs, &mut hs);
+        let mut back = [0f32; 6];
+        widen_into(&hs, &mut back);
+        for i in 0..xs.len() {
+            assert_eq!(hs[i], f32_to_bf16(xs[i]));
+            assert_eq!(back[i].to_bits(), bf16_to_f32(hs[i]).to_bits());
+        }
+    }
+}

@@ -1,0 +1,398 @@
+//! Explicit AVX2 microkernels for the tensor substrate's inner loops
+//! (`--features simd`; see docs/PRECISION.md for the feature matrix).
+//!
+//! Every kernel here is **bit-exact at f32** with its scalar oracle in
+//! [`crate::tensor`] (`axpy8_scalar`, `dot_scalar`,
+//! `matvec_t_acc_slice_scalar`). That is a hard invariant — the trace
+//! harness, the partition-signature determinism sentinel, and the
+//! pre-bench assertions all rely on it — and it constrains the
+//! implementation in two ways:
+//!
+//! 1. **No FMA.** The scalar loops round the multiply and the add
+//!    separately (`c += a * b` without FP contraction — rustc does not
+//!    contract by default), so the vector kernels use
+//!    `_mm256_add_ps(acc, _mm256_mul_ps(..))`, never `_mm256_fmadd_ps`,
+//!    even though the fused form would be faster and *more* accurate.
+//!    The win here is instruction-level parallelism and halved
+//!    load/store traffic, not rounding shortcuts.
+//! 2. **Same per-element accumulation order.** Each output element must
+//!    see the identical sequence of rounded operations as the scalar
+//!    path: `dot` keeps the scalar's 8-lane accumulator layout and
+//!    reduction tree, and the strip-major kernels walk rows in the same
+//!    ascending order the scalar row loop does.
+//!
+//! Dispatch is runtime-gated: [`active`] caches
+//! `is_x86_feature_detected!("avx2")` and honours the
+//! [`set_forced_scalar`] override (used by benches to time the scalar
+//! path on SIMD-capable hardware, and by tests to exercise both sides
+//! of the dispatcher). On non-x86_64 targets `active()` is always
+//! `false` and the portable scalar path runs unconditionally.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// When set, [`active`] reports `false` even on AVX2 hardware, forcing
+/// every dispatcher in [`crate::tensor`] down the scalar path. Both
+/// paths are bit-exact, so flipping this mid-run never changes results —
+/// only which instructions produce them.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Force (or un-force) scalar dispatch. Used by the benches for the
+/// `simd_speedup_vs_scalar` headline and by dual-path tests.
+pub fn set_forced_scalar(force: bool) {
+    FORCE_SCALAR.store(force, Ordering::Relaxed);
+}
+
+/// Raw runtime capability: does this machine support the AVX2 kernels?
+/// Ignores the forced-scalar override (benches use this to decide
+/// whether a speedup headline is meaningful).
+#[inline]
+pub fn runtime_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // 0 = unprobed, 1 = unavailable, 2 = available. Probing twice is
+        // harmless (same answer), so Relaxed is enough.
+        static DETECTED: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
+        match DETECTED.load(Ordering::Relaxed) {
+            2 => true,
+            1 => false,
+            _ => {
+                let yes = std::is_x86_feature_detected!("avx2");
+                DETECTED.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+                yes
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Should the dispatchers take the AVX2 path right now?
+// xtask: deny_alloc
+#[inline]
+pub fn active() -> bool {
+    runtime_available() && !FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Maximum panel depth accepted by [`nn_panel`] — matches the GEMM
+/// cache-blocking depth `KC` in [`crate::tensor`], so a stack-allocated
+/// coefficient buffer of this size always suffices.
+pub const PANEL_MAX: usize = 256;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::{
+        __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps,
+        _mm256_storeu_ps,
+    };
+
+    /// `out[j] += a * b[j]` over the full slice. Bit-exact with
+    /// `axpy8_scalar`: one rounded mul then one rounded add per element,
+    /// vector head in 8-wide chunks and a scalar tail, exactly like the
+    /// scalar split at `len - len % 8`.
+    ///
+    /// SAFETY: caller must guarantee AVX2 is available on this CPU and
+    /// `out.len() == b.len()`. All memory access is `loadu`/`storeu` on
+    /// in-bounds slice elements.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy8(out: &mut [f32], b: &[f32], a: f32) {
+        debug_assert_eq!(out.len(), b.len());
+        let n = out.len();
+        let n8 = n - n % 8;
+        // SAFETY: `_mm256_set1_ps` touches no memory.
+        let va = unsafe { _mm256_set1_ps(a) };
+        let mut j = 0;
+        while j < n8 {
+            // SAFETY: j + 8 <= n8 <= out.len() == b.len(), so both
+            // 8-element loads and the store stay inside the slices.
+            unsafe {
+                let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+                let vo = _mm256_loadu_ps(out.as_ptr().add(j));
+                _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_add_ps(vo, _mm256_mul_ps(va, vb)));
+            }
+            j += 8;
+        }
+        for (c, &bv) in out[n8..].iter_mut().zip(b[n8..].iter()) {
+            *c += a * bv;
+        }
+    }
+
+    /// Dot product, bit-exact with `dot_scalar`: lane `l` of the vector
+    /// accumulator sees elements `l, l+8, l+16, …` — the same partial
+    /// sums as the scalar path's 8 named accumulators — and the final
+    /// reduction replays the scalar tree
+    /// `((a0+a4)+(a1+a5))+((a2+a6)+(a3+a7))` before the scalar tail.
+    ///
+    /// SAFETY: caller must guarantee AVX2 is available and
+    /// `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let n8 = n - n % 8;
+        // SAFETY: `_mm256_set1_ps` touches no memory.
+        let mut acc: __m256 = unsafe { _mm256_set1_ps(0.0) };
+        let mut j = 0;
+        while j < n8 {
+            // SAFETY: j + 8 <= n8 <= x.len() == y.len().
+            unsafe {
+                let vx = _mm256_loadu_ps(x.as_ptr().add(j));
+                let vy = _mm256_loadu_ps(y.as_ptr().add(j));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(vx, vy));
+            }
+            j += 8;
+        }
+        let mut lanes = [0f32; 8];
+        // SAFETY: `lanes` is exactly 8 f32s, the store is in-bounds.
+        unsafe { _mm256_storeu_ps(lanes.as_mut_ptr(), acc) };
+        let mut s = ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+            + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]));
+        for (xv, yv) in x[n8..].iter().zip(y[n8..].iter()) {
+            s += xv * yv;
+        }
+        s
+    }
+
+    /// Strip-major row-panel accumulate:
+    /// `out[j] += Σ_p coeffs[p] * b[p*n + j]`, `p` ascending — the same
+    /// per-element op sequence as `coeffs.len()` successive scalar axpys,
+    /// but each 8-wide output strip stays in a register across the whole
+    /// panel, cutting output traffic by the panel depth.
+    ///
+    /// SAFETY: caller must guarantee AVX2 is available,
+    /// `out.len() == n`, and `b.len() >= coeffs.len() * n`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn nn_panel(out: &mut [f32], b: &[f32], n: usize, coeffs: &[f32]) {
+        debug_assert_eq!(out.len(), n);
+        debug_assert!(b.len() >= coeffs.len() * n);
+        let n8 = n - n % 8;
+        let mut j = 0;
+        while j < n8 {
+            // SAFETY: j + 8 <= n8 <= out.len(); for every p the load at
+            // p*n + j + 8 <= coeffs.len()*n <= b.len() stays in-bounds.
+            unsafe {
+                let mut vo = _mm256_loadu_ps(out.as_ptr().add(j));
+                for (p, &c) in coeffs.iter().enumerate() {
+                    let vb = _mm256_loadu_ps(b.as_ptr().add(p * n + j));
+                    vo = _mm256_add_ps(vo, _mm256_mul_ps(_mm256_set1_ps(c), vb));
+                }
+                _mm256_storeu_ps(out.as_mut_ptr().add(j), vo);
+            }
+            j += 8;
+        }
+        for j in n8..n {
+            let mut s = out[j];
+            for (p, &c) in coeffs.iter().enumerate() {
+                s += c * b[p * n + j];
+            }
+            out[j] = s;
+        }
+    }
+
+    /// Strip-major `out[j] += Σ_i (scale * x[i]) * s[i*cols + j]`, `i`
+    /// ascending — bit-exact with the scalar row loop of
+    /// `matvec_t_acc_slice_scalar` (which computes the per-row
+    /// coefficient as the single product `scale * x[i]` and then does
+    /// mul-then-add per element, exactly as here).
+    ///
+    /// SAFETY: caller must guarantee AVX2 is available,
+    /// `out.len() == cols`, and `s.len() == x.len() * cols`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matvec_t_acc(s: &[f32], cols: usize, x: &[f32], scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), cols);
+        debug_assert_eq!(s.len(), x.len() * cols);
+        let n8 = cols - cols % 8;
+        let mut j = 0;
+        while j < n8 {
+            // SAFETY: j + 8 <= n8 <= out.len(); for every row i the load
+            // at i*cols + j + 8 <= x.len()*cols == s.len() is in-bounds.
+            unsafe {
+                let mut vo = _mm256_loadu_ps(out.as_ptr().add(j));
+                for (i, &xi) in x.iter().enumerate() {
+                    let vs = _mm256_loadu_ps(s.as_ptr().add(i * cols + j));
+                    vo = _mm256_add_ps(vo, _mm256_mul_ps(_mm256_set1_ps(scale * xi), vs));
+                }
+                _mm256_storeu_ps(out.as_mut_ptr().add(j), vo);
+            }
+            j += 8;
+        }
+        for j in n8..cols {
+            let mut acc = out[j];
+            for (i, &xi) in x.iter().enumerate() {
+                acc += (scale * xi) * s[i * cols + j];
+            }
+            out[j] = acc;
+        }
+    }
+}
+
+/// `out[j] += a * b[j]`. Caller must have checked [`active`].
+// xtask: deny_alloc
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub fn axpy8(out: &mut [f32], b: &[f32], a: f32) {
+    debug_assert!(active());
+    debug_assert_eq!(out.len(), b.len());
+    // SAFETY: `active()` verified AVX2 is available at runtime; slice
+    // lengths are equal per the assert above.
+    unsafe { avx2::axpy8(out, b, a) }
+}
+
+/// Dot product. Caller must have checked [`active`].
+// xtask: deny_alloc
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert!(active());
+    debug_assert_eq!(x.len(), y.len());
+    // SAFETY: `active()` verified AVX2 is available at runtime; slice
+    // lengths are equal per the assert above.
+    unsafe { avx2::dot(x, y) }
+}
+
+/// Row-panel accumulate for the packed GEMM kernels. Caller must have
+/// checked [`active`] and pass `coeffs.len() <= PANEL_MAX`.
+// xtask: deny_alloc
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub fn nn_panel(out: &mut [f32], b: &[f32], n: usize, coeffs: &[f32]) {
+    debug_assert!(active());
+    assert!(coeffs.len() <= PANEL_MAX);
+    assert_eq!(out.len(), n);
+    assert!(b.len() >= coeffs.len() * n);
+    // SAFETY: `active()` verified AVX2 is available at runtime; the
+    // shape contract (out.len() == n, b holds coeffs.len() rows of n)
+    // is asserted above.
+    unsafe { avx2::nn_panel(out, b, n, coeffs) }
+}
+
+/// Transposed matrix-vector accumulate. Caller must have checked
+/// [`active`].
+// xtask: deny_alloc
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub fn matvec_t_acc(s: &[f32], cols: usize, x: &[f32], scale: f32, out: &mut [f32]) {
+    debug_assert!(active());
+    assert_eq!(out.len(), cols);
+    assert_eq!(s.len(), x.len() * cols);
+    // SAFETY: `active()` verified AVX2 is available at runtime; the
+    // shape contract is asserted above.
+    unsafe { avx2::matvec_t_acc(s, cols, x, scale, out) }
+}
+
+#[cfg(all(test, target_arch = "x86_64"))]
+mod tests {
+    use super::*;
+    use crate::tensor::{axpy8_scalar, dot_scalar, matvec_t_acc_slice_scalar};
+    use crate::util::rng::Rng;
+
+    fn ragged_lens() -> impl Iterator<Item = usize> {
+        // Every tail class: empty, sub-vector, exact multiples, and
+        // multiples plus each possible remainder.
+        (0..=9).chain([15, 16, 17, 23, 24, 25, 31, 32, 33, 40, 63, 64, 65])
+    }
+
+    #[test]
+    fn axpy8_bit_exact_with_scalar_on_all_tail_classes() {
+        if !runtime_available() {
+            return;
+        }
+        let mut rng = Rng::new(0xA2B2);
+        for n in ragged_lens() {
+            let mut b = vec![0f32; n];
+            rng.fill_uniform(&mut b, -2.0, 2.0);
+            let mut base = vec![0f32; n];
+            rng.fill_uniform(&mut base, -2.0, 2.0);
+            for a in [0.0f32, -0.0, 1.0, -1.75, 3.0e-39, 7.25e8] {
+                let mut want = base.clone();
+                let mut got = base.clone();
+                axpy8_scalar(&mut want, &b, a);
+                axpy8(&mut got, &b, a);
+                for j in 0..n {
+                    assert_eq!(got[j].to_bits(), want[j].to_bits(), "n={n} a={a} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_bit_exact_with_scalar_on_all_tail_classes() {
+        if !runtime_available() {
+            return;
+        }
+        let mut rng = Rng::new(0xD07);
+        for n in ragged_lens() {
+            let mut x = vec![0f32; n];
+            let mut y = vec![0f32; n];
+            rng.fill_uniform(&mut x, -3.0, 3.0);
+            rng.fill_uniform(&mut y, -3.0, 3.0);
+            assert_eq!(dot(&x, &y).to_bits(), dot_scalar(&x, &y).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn nn_panel_bit_exact_with_sequential_axpys() {
+        if !runtime_available() {
+            return;
+        }
+        let mut rng = Rng::new(0x9A9E1);
+        for n in ragged_lens() {
+            for depth in [0usize, 1, 2, 3, 7, 8, 13] {
+                let mut b = vec![0f32; depth * n];
+                rng.fill_uniform(&mut b, -1.5, 1.5);
+                let mut coeffs = vec![0f32; depth];
+                rng.fill_uniform(&mut coeffs, -2.0, 2.0);
+                if depth > 2 {
+                    coeffs[1] = 0.0; // zero coefficients must still round-trip
+                }
+                let mut base = vec![0f32; n];
+                rng.fill_uniform(&mut base, -1.0, 1.0);
+                let mut want = base.clone();
+                for (p, &c) in coeffs.iter().enumerate() {
+                    axpy8_scalar(&mut want, &b[p * n..(p + 1) * n], c);
+                }
+                let mut got = base.clone();
+                nn_panel(&mut got, &b, n, &coeffs);
+                for j in 0..n {
+                    assert_eq!(got[j].to_bits(), want[j].to_bits(), "n={n} depth={depth} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_t_acc_bit_exact_with_scalar() {
+        if !runtime_available() {
+            return;
+        }
+        let mut rng = Rng::new(0x3A7);
+        for cols in ragged_lens() {
+            for rows in [0usize, 1, 2, 5, 16, 33] {
+                let mut s = vec![0f32; rows * cols];
+                rng.fill_uniform(&mut s, -2.0, 2.0);
+                let mut x = vec![0f32; rows];
+                rng.fill_uniform(&mut x, -2.0, 2.0);
+                let mut want = vec![0f32; cols];
+                rng.fill_uniform(&mut want, -1.0, 1.0);
+                let mut got = want.clone();
+                let scale = 0.37f32;
+                matvec_t_acc_slice_scalar(&s, cols, &x, scale, &mut want);
+                matvec_t_acc(&s, cols, &x, scale, &mut got);
+                for j in 0..cols {
+                    assert_eq!(got[j].to_bits(), want[j].to_bits(), "rows={rows} cols={cols} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forced_scalar_disables_active_but_not_availability() {
+        let avail = runtime_available();
+        set_forced_scalar(true);
+        assert!(!active());
+        assert_eq!(runtime_available(), avail);
+        set_forced_scalar(false);
+        assert_eq!(active(), avail);
+    }
+}

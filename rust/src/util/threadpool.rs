@@ -94,6 +94,27 @@ loom::thread_local! {
     static CURRENT_POOL: std::cell::Cell<usize> = std::cell::Cell::new(usize::MAX);
 }
 
+/// Per-thread count of [`ThreadPool::scope`] calls that took the
+/// **dispatch** path (handed jobs to pool workers) rather than running
+/// inline. Plain `std` thread-local even under loom, like [`POOL_IDS`]:
+/// a monotone counter observed only by the owning thread has no
+/// interleaving behavior worth modeling.
+std::thread_local! {
+    static SCOPE_DISPATCHES: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// How many [`ThreadPool::scope`] calls *from the calling thread* have
+/// dispatched jobs to pool workers (the non-inline path). This is the
+/// observable behind the single-threaded inline guarantee: a
+/// `gemm_threads(1)` configuration must never enter the resident pool,
+/// whichever kernel dispatch layer (scalar or SIMD) sits underneath —
+/// the tensor tests assert a zero delta across whole GEMM/slab sweeps.
+/// Thread-local, so concurrently running tests cannot perturb each
+/// other's deltas.
+pub fn scope_dispatch_count() -> u64 {
+    SCOPE_DISPATCHES.with(|c| c.get())
+}
+
 #[cfg(not(loom))]
 fn spawn_worker(
     name: String,
@@ -220,6 +241,7 @@ impl ThreadPool {
             }
             return;
         }
+        SCOPE_DISPATCHES.with(|c| c.set(c.get() + 1));
         let total = jobs.len();
         // (jobs still running or not yet accounted, completion signal)
         let sync = Arc::new((Mutex::new(total), Condvar::new()));
@@ -674,6 +696,32 @@ mod tests {
             .recv_timeout(std::time::Duration::from_secs(10))
             .expect("cross-pool scope deadlocked");
         assert_eq!(n, 8);
+    }
+
+    #[test]
+    fn scope_dispatch_count_tracks_only_the_dispatch_path() {
+        // empty job lists and inline paths (single-worker pool, own
+        // worker) must not count; a real dispatch from this thread must
+        let c0 = scope_dispatch_count();
+        let pool1 = ThreadPool::new(1);
+        pool1.scope(Vec::new());
+        let jobs = |n: usize, hits: &AtomicUsize| -> Vec<Box<dyn FnOnce() + Send + '_>> {
+            (0..n)
+                .map(|_| {
+                    Box::new(|| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect()
+        };
+        let hits = AtomicUsize::new(0);
+        pool1.scope(jobs(3, &hits)); // size-1 pool: inline
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        assert_eq!(scope_dispatch_count(), c0, "inline paths must not count as dispatches");
+        let pool2 = ThreadPool::new(2);
+        pool2.scope(jobs(3, &hits));
+        assert_eq!(hits.load(Ordering::SeqCst), 6);
+        assert_eq!(scope_dispatch_count(), c0 + 1, "a worker dispatch counts exactly once");
     }
 
     #[test]

@@ -1,0 +1,32 @@
+//! Known-bad fixture: SIMD intrinsic calls inside `unsafe` with no
+//! `// SAFETY:` contract (linted under `src/tensor/`). This is the
+//! exact shape of the AVX2 microkernels in `tensor/simd.rs` — every
+//! `target_feature(enable = ...)` call site's soundness rests on the
+//! runtime `is_x86_feature_detected!` gate, which only a comment can
+//! tie to the call — so a bare intrinsic block is never acceptable.
+
+/// Loads eight lanes with no stated detection contract.
+#[cfg(target_arch = "x86_64")]
+pub fn sum8_undocumented(x: &[f32; 8]) -> f32 {
+    unsafe {
+        use std::arch::x86_64::*;
+        let v = _mm256_loadu_ps(x.as_ptr());
+        let mut out = [0.0f32; 8];
+        _mm256_storeu_ps(out.as_mut_ptr(), v);
+        out.iter().sum()
+    }
+}
+
+/// With the detection contract spelled out — must NOT fire.
+#[cfg(target_arch = "x86_64")]
+pub fn sum8_documented(x: &[f32; 8]) -> f32 {
+    // SAFETY: only reached behind `is_x86_feature_detected!("avx2")`;
+    // the loads/stores cover exactly the 8-float arrays passed in.
+    unsafe {
+        use std::arch::x86_64::*;
+        let v = _mm256_loadu_ps(x.as_ptr());
+        let mut out = [0.0f32; 8];
+        _mm256_storeu_ps(out.as_mut_ptr(), v);
+        out.iter().sum()
+    }
+}

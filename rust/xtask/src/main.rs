@@ -58,6 +58,12 @@ const FIXTURES: &[(&str, &str, &[&str], &str)] = &[
         include_str!("../fixtures/bare_unsafe.rs"),
     ),
     (
+        "simd_no_safety.rs",
+        "src/tensor/simd_no_safety.rs",
+        &["unsafe"],
+        include_str!("../fixtures/simd_no_safety.rs"),
+    ),
+    (
         "hot_path_alloc.rs",
         "src/tensor/hot_path_alloc.rs",
         &["hot_alloc"],

@@ -19,6 +19,17 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+# Feature matrix (docs/PRECISION.md): the SIMD microkernels are an
+# opt-in feature that must be a bit-exact drop-in at f32, and the bf16
+# state slab is a runtime precision choice exercised by the same suite
+# (precision-forked pool/advance/trace tests run in every build). Build
+# both feature sets and re-run the precision-sensitive suites under
+# --features simd so the dispatched kernels face the same oracles —
+# {default, simd} x {f32, bf16} in one pass each.
+echo "== feature matrix: --features simd (build + precision/kernel suites) =="
+cargo build --release --features simd
+cargo test -q --features simd
+
 # Observability acceptance: a traced mixed prefill/decode/score run must
 # export valid Chrome-trace JSON whose timelines reconcile with the
 # ServerStats latency histograms, and the GEMM flop hooks must show the
@@ -76,10 +87,14 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== bench smoke (--quick): fig4 + table1 + decode + prefill, emits BENCH_*.json =="
     cargo bench --bench fig4_throughput -- --quick
     cargo bench --bench table1_complexity -- --quick
-    cargo bench --bench decode_batched -- --quick
+    # decode_batched/prefill_throughput run with --features simd so the
+    # simd_speedup_vs_scalar headline reflects the dispatched kernels
+    # (scalar-vs-SIMD bit-exactness is asserted in-bench before timing;
+    # without the feature the headline degrades to 1.0)
+    cargo bench --features simd --bench decode_batched -- --quick
     # prefill_throughput carries the chunkwise-speedup AND the
     # score_tokens_per_s headlines (equivalence asserted before timing)
-    cargo bench --bench prefill_throughput -- --quick
+    cargo bench --features simd --bench prefill_throughput -- --quick
     # the serving-engine latency bench also A/Bs the obs recorder on/off,
     # asserts the tracing-disabled regression stays <2%, and merges the
     # tracing/TTFT headlines into BENCH_decode.json
